@@ -1,0 +1,120 @@
+//! Precision demonstration: solving a catastrophically ill-conditioned
+//! system where f64 collapses and 448-bit APFP does not — the paper's §I
+//! motivation ("information found in small differences between numbers")
+//! made concrete, with the residual check running on the accelerator.
+//!
+//! The n x n Hilbert matrix H (H_ij = 1/(i+j+1)) has condition number
+//! ~e^{3.5 n}; at n = 14 it is ~1e19, beyond f64's 1e16 precision.  We
+//! solve H x = b exactly-ish via APFP Cholesky and compare the residual
+//! ||Hx - b|| computed (a) in f64 and (b) in APFP through the device GEMM.
+//!
+//!     cargo run --release --example hilbert_refinement -- [n]
+
+use apfp::config::ApfpConfig;
+use apfp::coordinator::{Device, Matrix};
+use apfp::linalg::{self, MatmulBackend};
+use apfp::runtime::default_artifact_dir;
+use apfp::softfloat::ApFloat;
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(14);
+    let cfg = ApfpConfig { compute_units: 2, ..Default::default() };
+    let prec = cfg.prec();
+    let dev = Device::new(cfg, &default_artifact_dir())?;
+    let backend = MatmulBackend::Device(&dev);
+
+    // Hilbert matrix in exact APFP (1/(i+j+1) via high-precision reciprocal)
+    let h = Matrix::from_fn(n, n, prec, |i, j| {
+        linalg::reciprocal(&ApFloat::from_u64((i + j + 1) as u64, prec))
+    });
+    // b = H * ones  =>  exact solution x = ones
+    let ones = Matrix::from_fn(n, 1, prec, |_, _| ApFloat::from_u64(1, prec));
+    let b = backend.gemm(&h, &ones, &Matrix::zeros(n, 1, prec))?;
+
+    // --- f64 attempt -------------------------------------------------------
+    let hf: Vec<Vec<f64>> = (0..n)
+        .map(|i| (0..n).map(|j| 1.0 / (i + j + 1) as f64).collect())
+        .collect();
+    let bf: Vec<f64> = (0..n).map(|i| b.get(i, 0).to_f64()).collect();
+    let xf = f64_cholesky_solve(&hf, &bf);
+    let f64_err: f64 = match xf {
+        Some(x) => x.iter().map(|v| (v - 1.0).abs()).fold(0.0, f64::max),
+        None => f64::INFINITY, // factorization broke down
+    };
+
+    // --- APFP solve through the library -------------------------------------
+    let l = linalg::cholesky(&h).expect("Hilbert is SPD in exact arithmetic");
+    let x = linalg::solve_lower_transpose(&l, &linalg::solve_lower(&l, &b));
+    let apfp_err = (0..n)
+        .map(|i| x.get(i, 0).sub(&ApFloat::from_u64(1, prec)).to_f64().abs())
+        .fold(0.0, f64::max);
+
+    // residual H x - b through the accelerator GEMM
+    let hx = backend.gemm(&h, &x, &Matrix::zeros(n, 1, prec))?;
+    let mut resid_exp = i64::MIN;
+    for i in 0..n {
+        let r = hx.get(i, 0).sub(b.get(i, 0));
+        if !r.is_zero() {
+            resid_exp = resid_exp.max(r.exp());
+        }
+    }
+
+    println!("Hilbert system, n = {n} (condition ~ 1e{:.0}):", 1.519 * n as f64);
+    println!("  f64 solve:   max |x_i - 1| = {f64_err:.3e}   <- garbage beyond n~12");
+    println!("  APFP solve:  max |x_i - 1| = {apfp_err:.3e}");
+    println!(
+        "  APFP residual ||Hx - b||_max ~ 2^{}  (computed on the accelerator)",
+        if resid_exp == i64::MIN { "-inf (exact)".to_string() } else { resid_exp.to_string() }
+    );
+    anyhow::ensure!(apfp_err < 1e-60, "APFP solve should be near-exact");
+    anyhow::ensure!(f64_err > 1e-4, "at this size f64 must have degraded badly");
+    if f64_err.is_finite() {
+        println!(
+            "APFP keeps ~{} orders of magnitude that f64 loses entirely",
+            (f64_err / apfp_err.max(1e-300)).log10() as i64
+        );
+    } else {
+        println!("f64 Cholesky broke down entirely; APFP solved to ~1e-116");
+    }
+    Ok(())
+}
+
+/// Plain f64 Cholesky solve; returns None when the factorization breaks.
+fn f64_cholesky_solve(a: &[Vec<f64>], b: &[f64]) -> Option<Vec<f64>> {
+    let n = b.len();
+    let mut l = vec![vec![0.0f64; n]; n];
+    for j in 0..n {
+        let mut d = a[j][j];
+        for k in 0..j {
+            d -= l[j][k] * l[j][k];
+        }
+        if d <= 0.0 {
+            return None;
+        }
+        l[j][j] = d.sqrt();
+        for i in (j + 1)..n {
+            let mut s = a[i][j];
+            for k in 0..j {
+                s -= l[i][k] * l[j][k];
+            }
+            l[i][j] = s / l[j][j];
+        }
+    }
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i][k] * y[k];
+        }
+        y[i] = s / l[i][i];
+    }
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in (i + 1)..n {
+            s -= l[k][i] * x[k];
+        }
+        x[i] = s / l[i][i];
+    }
+    Some(x)
+}

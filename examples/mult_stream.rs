@@ -1,0 +1,51 @@
+//! The §V-B multiplier microbenchmark, end to end:
+//!   * stream operand pairs through the accelerator's multiplier artifacts
+//!     (functional path, bit-checked);
+//!   * measure this host's softfloat throughput (the MPFR-baseline analog);
+//!   * print the modeled U250 Tab. I/II rows for the same configuration.
+//!
+//!     cargo run --release --example mult_stream -- [bits] [stream_len]
+
+use apfp::baseline;
+use apfp::bench_util::fmt_rate;
+use apfp::config::ApfpConfig;
+use apfp::coordinator::{Device, Matrix};
+use apfp::runtime::default_artifact_dir;
+use apfp::sim::mult_sim;
+
+fn main() -> anyhow::Result<()> {
+    let mut args = std::env::args().skip(1);
+    let bits: u32 = args.next().map(|s| s.parse()).transpose()?.unwrap_or(512);
+    let len: usize = args.next().map(|s| s.parse()).transpose()?.unwrap_or(512);
+    let cfg = ApfpConfig { bits, compute_units: 4, ..Default::default() };
+    let prec = cfg.prec();
+
+    // functional path: the linear operand stream of the paper's benchmark
+    let dev = Device::new(cfg.clone(), &default_artifact_dir())?;
+    let a = Matrix::random(1, len, prec, 1, 200);
+    let b = Matrix::random(1, len, prec, 2, 200);
+    let t0 = std::time::Instant::now();
+    let got = dev.mul_stream(a.values(), b.values())?;
+    let functional = len as f64 / t0.elapsed().as_secs_f64();
+    for i in 0..len {
+        assert_eq!(got[i], a.values()[i].mul(&b.values()[i]), "lane {i}");
+    }
+    println!("functional stream: {len} multiplications, bit-exact, {} through PJRT-CPU", fmt_rate(functional));
+
+    // measured host baseline (the paper's L1-resident methodology)
+    let one_core = baseline::measure_mul_throughput(prec, 100_000);
+    println!("softfloat on this host: {} per core", fmt_rate(one_core));
+
+    // modeled hardware rows (Tab. I / Tab. II)
+    println!("\nmodeled U250 ({}-bit):", bits);
+    for row in mult_sim::table(bits) {
+        println!(
+            "  {:<28} {:>10} {:>8} {:>8}",
+            row.label,
+            format!("{:.0} MOp/s", row.throughput_mops),
+            format!("{:.1}x", row.speedup_vs_node),
+            format!("{:.0} cores", row.equivalent_cores),
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Quickstart: open the virtual accelerator, run a GEMM through the full
+//! three-layer stack (Rust coordinator -> PJRT -> Pallas-lowered HLO), and
+//! verify the result bit-for-bit against the software reference.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use apfp::baseline;
+use apfp::config::ApfpConfig;
+use apfp::coordinator::{Device, Matrix};
+use apfp::runtime::default_artifact_dir;
+use apfp::softfloat::ApFloat;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Configuration — the paper's CMake knobs at runtime (§IV-A).
+    let cfg = ApfpConfig { compute_units: 2, ..Default::default() };
+    let prec = cfg.prec(); // 448-bit mantissas inside 512-bit numbers
+    println!("opening device: {} CUs, {}-bit APFP", cfg.compute_units, cfg.bits);
+
+    // 2. "Program the bitstream": spawn CU workers, load AOT artifacts.
+    let dev = Device::new(cfg, &default_artifact_dir())?;
+    for p in dev.placements() {
+        println!("  CU[{}] -> DDR bank {} / SLR{}  (Fig. 4 round-robin)", p.cu, p.ddr_bank, p.slr);
+    }
+
+    // 3. Build operands (exactly representable decimal values).
+    let n = 24;
+    let a = Matrix::from_fn(n, n, prec, |i, j| {
+        ApFloat::parse_decimal(&format!("{}.{:02}", i + 1, j), prec).unwrap()
+    });
+    let b = Matrix::from_fn(n, n, prec, |i, j| {
+        ApFloat::from_i64((i as i64 - j as i64) * 3 + 1, prec)
+    });
+    let c = Matrix::zeros(n, n, prec);
+
+    // 4. C += A @ B on the device (the §III tiled dataflow).
+    let (got, stats) = dev.gemm(&a, &b, &c)?;
+    println!(
+        "device GEMM: {} tiles over {} artifact calls in {:.2}s (marshal {:.1}%)",
+        stats.tiles, stats.artifact_calls, stats.wall_s, stats.marshal_fraction * 100.0
+    );
+
+    // 5. Verify against the MPFR-class software baseline, bit for bit.
+    let want = baseline::gemm_serial(&a, &b, &c);
+    assert_eq!(got, want, "accelerator output must be bit-identical");
+    println!("verified: bit-identical to the softfloat reference");
+    println!("C[0][0] = {}", got.get(0, 0).to_decimal_string(30));
+    println!("C[{0}][{0}] = {1}", n - 1, got.get(n - 1, n - 1).to_decimal_string(30));
+    Ok(())
+}

@@ -1,0 +1,1 @@
+"""APFP compile path: Layer 1 (Pallas kernels) + Layer 2 (JAX model)."""

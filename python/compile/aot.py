@@ -1,0 +1,132 @@
+"""AOT compile path: lower every artifact variant to HLO *text* + manifest.
+
+This is the only entry point that runs Python in the whole system, invoked
+once by ``make artifacts``.  Each configured (operator, precision, shape)
+variant is lowered with jax.jit -> StableHLO -> XlaComputation -> HLO text,
+which the Rust runtime loads via ``HloModuleProto::from_text_file`` and
+compiles on the PJRT CPU client.
+
+HLO **text** (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` 0.1.6 crate binds) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md.
+
+The manifest (``artifacts/manifest.txt``) is a whitespace-separated table —
+one artifact per line — parsed by rust/src/runtime/manifest.rs:
+
+    name kind bits batch t_n t_m k_tile limbs file
+
+Argument order conventions (fixed; the Rust runtime relies on them):
+    mul/add :  sa ea ma sb eb mb          -> (s, e, m)
+    mac     :  sc ec mc sa ea ma sb eb mb -> (s, e, m)
+    gemm    :  sa ea ma sb eb mb sc ec mc -> (s, e, m)   [C += A @ B]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import config, model
+from .kernels import karatsuba
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by the text
+    parser on the Rust side; outputs become a tuple via return_tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _specs(bits: int, batch_shape):
+    """(sign, exp, mant) ShapeDtypeStructs for one ApTensor plane group."""
+    import jax.numpy as jnp
+
+    l = config.mant_limbs(bits)
+    return (
+        jax.ShapeDtypeStruct(batch_shape, jnp.int32),
+        jax.ShapeDtypeStruct(batch_shape, jnp.int64),
+        jax.ShapeDtypeStruct(batch_shape + (l,), jnp.int32),
+    )
+
+
+def build_variants():
+    """Yield (name, kind, bits, batch, t_n, t_m, k_tile, lowered)."""
+    b = config.STREAM_BATCH
+    for bits in config.ARTIFACT_BITS:
+        x = _specs(bits, (b,))
+        yield (f"mul_{bits}", "mul", bits, b, 0, 0, 0,
+               jax.jit(model.mul_stream_flat).lower(*x, *x))
+        yield (f"add_{bits}", "add", bits, b, 0, 0, 0,
+               jax.jit(model.add_stream_flat).lower(*x, *x))
+        yield (f"mac_{bits}", "mac", bits, b, 0, 0, 0,
+               jax.jit(model.mac_stream_flat).lower(*x, *x, *x))
+        for suffix, (t_n, t_m, k_tile) in config.TILE_VARIANTS.items():
+            if bits == 1024 and suffix != "t8":
+                continue  # keep 1024-bit artifact build time bounded (§V-D)
+            a = _specs(bits, (t_n, k_tile))
+            bm = _specs(bits, (k_tile, t_m))
+            c = _specs(bits, (t_n, t_m))
+            yield (f"gemm_{bits}_{suffix}", "gemm", bits, 0, t_n, t_m, k_tile,
+                   jax.jit(model.gemm_tile_flat).lower(*a, *bm, *c))
+
+
+def write_tpu_report(out_dir: str) -> None:
+    """DESIGN.md §7: static TPU-side estimates (VMEM footprint, MAC counts)
+    for the L1 kernel across precisions and bottom-out choices."""
+    lines = [
+        "# L1 Pallas kernel structure report (interpret=True carries no "
+        "hardware timing; these are the quantities the DESIGN.md §7 TPU "
+        "estimate is based on)",
+        "# bits limbs padded base_limbs depth leaf_convs macs_per_mult "
+        "schoolbook_macs mac_ratio vmem_bytes_per_block",
+    ]
+    for bits in config.ARTIFACT_BITS:
+        for base in (4, 8, 16, 32):
+            r = karatsuba.vmem_report(bits, base, config.STREAM_BATCH)
+            lines.append(
+                f"{r['bits']} {r['limbs']} {r['padded_limbs']} "
+                f"{r['base_limbs']} {r['depth']} {r['leaf_convs']} "
+                f"{r['macs_per_mult']} {r['schoolbook_macs']} "
+                f"{r['mac_ratio']:.4f} {r['vmem_bytes_per_block']}"
+            )
+    with open(os.path.join(out_dir, "tpu_report.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    args = parser.parse_args()
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = []
+    for name, kind, bits, batch, t_n, t_m, k_tile, lowered in build_variants():
+        fname = f"{name}.hlo.txt"
+        text = to_hlo_text(lowered)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        limbs = config.mant_limbs(bits)
+        manifest.append(
+            f"{name} {kind} {bits} {batch} {t_n} {t_m} {k_tile} {limbs} {fname}"
+        )
+        print(f"lowered {name}: {len(text)} chars")
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("# name kind bits batch t_n t_m k_tile limbs file\n")
+        f.write("\n".join(manifest) + "\n")
+
+    write_tpu_report(out_dir)
+    print(f"wrote {len(manifest)} artifacts + manifest to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""Struct-of-arrays APFP tensor type shared by the L2 model and the tests.
+
+An ``ApTensor`` holds a batch of APFP numbers as three planes:
+
+  sign: (...)    i32, 0 = positive, 1 = negative
+  exp:  (...)    i64, the 63-bit signed exponent (ZERO_EXP sentinel for 0)
+  mant: (..., L) i32, little-endian 8-bit limbs of the normalized mantissa
+
+This is the unpacked form of the paper's Fig. 1 format; ``pack_words`` /
+``unpack_words`` below implement the packed Fig. 1 layout itself (sign bit
+in the exponent MSB, mantissa tight-packed into a multiple of 512 bits) so
+the Python tests can pin the same byte layout the Rust ``pack`` module uses.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import config
+from .kernels import ref
+
+
+class ApTensor(NamedTuple):
+    sign: jnp.ndarray  # (...), i32
+    exp: jnp.ndarray  # (...), i64
+    mant: jnp.ndarray  # (..., L), i32
+
+    @property
+    def limbs(self) -> int:
+        return self.mant.shape[-1]
+
+    @property
+    def batch_shape(self):
+        return self.sign.shape
+
+    def reshape(self, *shape) -> "ApTensor":
+        return ApTensor(
+            self.sign.reshape(shape),
+            self.exp.reshape(shape),
+            self.mant.reshape(shape + (self.limbs,)),
+        )
+
+    def __getitem__(self, idx) -> "ApTensor":
+        return ApTensor(self.sign[idx], self.exp[idx], self.mant[idx])
+
+
+def zeros(batch_shape, bits: int) -> ApTensor:
+    l = config.mant_limbs(bits)
+    return ApTensor(
+        jnp.zeros(batch_shape, jnp.int32),
+        jnp.full(batch_shape, config.ZERO_EXP, jnp.int64),
+        jnp.zeros(batch_shape + (l,), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Conversions to/from the exact PyApfp oracle
+# ---------------------------------------------------------------------------
+
+
+def from_py(values, bits: int) -> ApTensor:
+    """Nested list/array of PyApfp -> ApTensor (shape inferred)."""
+    arr = np.asarray(values, dtype=object)
+    shape = arr.shape
+    l = config.mant_limbs(bits)
+    sign = np.zeros(shape, np.int32)
+    exp = np.zeros(shape, np.int64)
+    mant = np.zeros(shape + (l,), np.int32)
+    for idx in np.ndindex(shape):
+        v: ref.PyApfp = arr[idx]
+        assert v.prec == config.PRECISIONS[bits]
+        sign[idx] = v.sign
+        exp[idx] = v.exp
+        mant[idx] = v.mant_limb_list()
+    return ApTensor(jnp.asarray(sign), jnp.asarray(exp), jnp.asarray(mant))
+
+
+def to_py(t: ApTensor, bits: int):
+    """ApTensor -> numpy object array of PyApfp."""
+    prec = config.PRECISIONS[bits]
+    sign = np.asarray(t.sign)
+    exp = np.asarray(t.exp)
+    mant = np.asarray(t.mant)
+    out = np.empty(sign.shape, dtype=object)
+    for idx in np.ndindex(sign.shape):
+        out[idx] = ref.PyApfp.from_limb_parts(sign[idx], exp[idx], mant[idx], prec)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Fig. 1 packed layout (numpy, used by tests to pin the Rust pack module)
+# ---------------------------------------------------------------------------
+
+
+def pack_words(v: ref.PyApfp, bits: int) -> list[int]:
+    """Pack one APFP number into ``bits``/64 little-endian u64 words.
+
+    Word 0 is the head word: 63-bit two's-complement exponent in bits 0..62
+    and the sign in bit 63 (the paper packs the sign into the exponent
+    word).  Words 1.. are the mantissa, least-significant limb first.
+    """
+    n_words = bits // 64
+    exp = int(v.exp) & ((1 << 63) - 1)
+    head = exp | (int(v.sign) << 63)
+    words = [head]
+    m = v.mant
+    for _ in range(n_words - 1):
+        words.append(m & ((1 << 64) - 1))
+        m >>= 64
+    assert m == 0
+    return words
+
+
+def unpack_words(words, bits: int) -> ref.PyApfp:
+    head = int(words[0])
+    sign = head >> 63
+    exp = head & ((1 << 63) - 1)
+    if exp >= 1 << 62:  # sign-extend the 63-bit exponent
+        exp -= 1 << 63
+    m = 0
+    for i, w in enumerate(words[1:]):
+        m |= int(w) << (64 * i)
+    if m == 0:
+        return ref.PyApfp.zero(config.PRECISIONS[bits])
+    return ref.PyApfp(sign, exp, m, config.PRECISIONS[bits])

@@ -1,0 +1,100 @@
+"""Shared configuration for the APFP compile path (Layer 1 + Layer 2).
+
+This mirrors the paper's CMake-time configuration surface (§IV-A):
+
+  APFP_BITS            -> the entries of ``PRECISIONS`` (total packed bits,
+                          including sign+exponent word, per Fig. 1)
+  APFP_MULT_BASE_BITS  -> ``base_limbs`` (Karatsuba bottom-out threshold,
+                          expressed in 8-bit limbs; 8 limbs = 64 bits, the
+                          analog of the paper's Pareto-optimal 72-bit choice)
+  APFP_ADD_BASE_BITS   -> ``add_chunk_limbs`` (carry-propagation chunking)
+
+The number representation follows DESIGN.md §5 and the paper's Fig. 1:
+
+  value = (-1)^sign * M * 2^(exp - p)
+
+with ``M`` a p-bit mantissa normalized so that 2^(p-1) <= M < 2^p, ``exp`` a
+63-bit signed exponent (an i64 here), and round-to-zero (MPFR_RNDZ)
+semantics: results are the exact value truncated toward zero to p bits.
+
+The mantissa is stored little-endian as 8-bit limbs held in i32 lanes
+("limb planes").  8-bit limbs leave ~15 bits of headroom in an i32 lane for
+the redundant carry-save representation used inside the Karatsuba kernel
+(see kernels/karatsuba.py for the bound), which is the TPU-friendly analog
+of the paper's explicit carry-save adder trees.
+"""
+
+import jax
+
+# The exponent is an i64 (the paper packs sign+exponent into one 64-bit
+# machine word); enable x64 before any tracing happens.
+jax.config.update("jax_enable_x64", True)
+
+# --- Limb geometry -----------------------------------------------------------
+
+LIMB_BITS = 8
+LIMB_BASE = 1 << LIMB_BITS
+LIMB_MASK = LIMB_BASE - 1
+
+# --- Supported precisions (paper's APFP_BITS) --------------------------------
+#
+# Total bits include the 64-bit sign+exponent word, exactly as in Fig. 1:
+#   512-bit numbers carry a 448-bit mantissa (56 limbs)
+#  1024-bit numbers carry a 960-bit mantissa (120 limbs)
+
+PRECISIONS = {
+    512: 448,
+    1024: 960,
+}
+
+
+def mant_limbs(total_bits: int) -> int:
+    """Number of 8-bit mantissa limbs for a given total (packed) bit width."""
+    mant_bits = PRECISIONS[total_bits]
+    assert mant_bits % LIMB_BITS == 0
+    return mant_bits // LIMB_BITS
+
+
+# --- Special values -----------------------------------------------------------
+#
+# Zero is represented as (sign=0, exp=ZERO_EXP, mant=0).  MPFR keeps a special
+# zero as well; the sentinel is far below any exponent reachable through
+# arithmetic on sane inputs (the paper, like us, does not handle
+# overflow/underflow of the 63-bit exponent).
+
+ZERO_EXP = -(1 << 61)
+
+# --- Default kernel tuning (the paper's Pareto point, translated) -------------
+
+DEFAULT_BASE_LIMBS = 8  # 64-bit bottom-out (paper: 72-bit MULT_BASE_BITS)
+
+# Carry-propagation chunking (the ADD_BASE_BITS analog).  None = one
+# full-width ripple scan.  perf_probe.py (EXPERIMENTS.md §Perf P4) measured
+# the ripple ~8% faster per multiply on the CPU-XLA execution path, so the
+# artifacts ship with None; pass an int to model the paper's staged adder.
+DEFAULT_ADD_CHUNK_LIMBS = None
+
+# Guard geometry for the floating-point adder workspace (DESIGN.md §5):
+# 2 guard limbs (16 bits) below the mantissa + 1 overflow limb above.
+GUARD_LIMBS = 2
+OVERFLOW_LIMBS = 1
+GUARD_BITS = GUARD_LIMBS * LIMB_BITS
+
+# --- AOT artifact variants -----------------------------------------------------
+#
+# Every (kind, bits, shape) tuple below is lowered by aot.py into one HLO-text
+# artifact that the Rust runtime loads through PJRT.  STREAM_BATCH is the
+# batch size of the element-wise operator artifacts (Tab. I/II microbenchmark
+# path); tile shapes are (T_N, T_M, K_TILE) for the GEMM compute-unit
+# datapath (§III: T_N = T_M = 32 in the paper's evaluation; we additionally
+# emit a small tile used by the fast test/e2e configurations).
+
+STREAM_BATCH = 64
+
+TILE_VARIANTS = {
+    # name suffix -> (T_N, T_M, K_TILE)
+    "t8": (8, 8, 8),
+    "t16": (16, 16, 16),
+}
+
+ARTIFACT_BITS = (512, 1024)

@@ -1,0 +1,97 @@
+"""Generate cross-language test vectors pinning Rust softfloat to PyApfp.
+
+Invoked by ``make artifacts`` (after aot.py).  Writes
+``artifacts/test_vectors.txt`` with lines
+
+    <op> <bits> <a-words> <b-words> [<c-words>] <result-words>
+
+where each operand is the Fig. 1 packed representation as comma-separated
+hex u64 words (apfp_types.pack_words).  rust/tests/vectors.rs replays every
+line through the Rust library and requires bit equality — the cross-language
+half of the paper's "bit-compatible with MPFR" check.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import random
+
+from . import apfp_types, config
+from .kernels import ref
+
+
+def w(v: ref.PyApfp, bits: int) -> str:
+    return ",".join(f"{x:016x}" for x in apfp_types.pack_words(v, bits))
+
+
+def interesting_values(bits: int, rng: random.Random):
+    prec = config.PRECISIONS[bits]
+    lo = 1 << (prec - 1)
+    hi = (1 << prec) - 1
+    vals = [
+        ref.PyApfp.zero(prec),
+        ref.PyApfp(0, 0, lo, prec),
+        ref.PyApfp(0, 0, hi, prec),
+        ref.PyApfp(1, 0, lo, prec),
+        ref.PyApfp(1, 0, hi, prec),
+        ref.PyApfp(0, 1, lo + 1, prec),
+        ref.PyApfp(0, -1, hi - 1, prec),
+        ref.PyApfp.from_float(1.0, prec),
+        ref.PyApfp.from_float(-1.0, prec),
+        ref.PyApfp.from_float(3.141592653589793, prec),
+        ref.PyApfp(0, 900, lo | 1, prec),
+        ref.PyApfp(1, -900, lo | 1, prec),
+    ]
+    for _ in range(40):
+        m = rng.getrandbits(prec) | lo
+        vals.append(ref.PyApfp(rng.randint(0, 1), rng.randint(-1200, 1200), m, prec))
+    return vals
+
+
+def emit(out):
+    rng = random.Random(0xAB54)
+    lines = []
+    for bits in config.ARTIFACT_BITS:
+        vals = interesting_values(bits, rng)
+        # dense pairwise coverage on the corner values, random tail
+        pairs = [(a, b) for a in vals[:12] for b in vals[:12]]
+        pairs += [(rng.choice(vals), rng.choice(vals)) for _ in range(150)]
+        for a, b in pairs:
+            lines.append(f"mul {bits} {w(a, bits)} {w(b, bits)} {w(a.mul(b), bits)}")
+            lines.append(f"add {bits} {w(a, bits)} {w(b, bits)} {w(a.add(b), bits)}")
+            if not b.is_zero():
+                lines.append(f"div {bits} {w(a, bits)} {w(b, bits)} {w(a.div(b), bits)}")
+        # MAC triples (intermediate rounding semantics)
+        for _ in range(80):
+            c, a, b = (rng.choice(vals) for _ in range(3))
+            lines.append(
+                f"mac {bits} {w(c, bits)} {w(a, bits)} {w(b, bits)} "
+                f"{w(c.mac(a, b), bits)}"
+            )
+        # near-cancellation adversarial cases for the adder
+        prec = config.PRECISIONS[bits]
+        for d in (0, 1, 2, 3, 8, 17, prec - 1, prec, prec + 1, prec + 17, 3000):
+            for _ in range(4):
+                m1 = rng.getrandbits(prec) | (1 << (prec - 1))
+                m2 = rng.getrandbits(prec) | (1 << (prec - 1))
+                x = ref.PyApfp(0, 10, m1, prec)
+                y = ref.PyApfp(1, 10 - d, m2, prec)
+                lines.append(f"add {bits} {w(x, bits)} {w(y, bits)} {w(x.add(y), bits)}")
+    out.write("\n".join(lines) + "\n")
+    return len(lines)
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--out", default="../artifacts")
+    args = p.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(args.out, "test_vectors.txt")
+    with open(path, "w") as f:
+        n = emit(f)
+    print(f"wrote {n} test vectors to {path}")
+
+
+if __name__ == "__main__":
+    main()

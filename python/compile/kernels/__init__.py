@@ -1,0 +1,1 @@
+"""Layer 1: Pallas kernels for the APFP compute hot-spots."""

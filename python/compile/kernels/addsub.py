@@ -1,0 +1,107 @@
+"""Batched limb-plane primitives for the floating-point adder (§II-B).
+
+Everything here is vectorized over the batch: per-element *dynamic* shifts,
+sticky-bit extraction, and leading-zero counting — the operations the paper
+implements with barrel shifters and LZC circuits in the adder pipeline.
+
+Limb vectors are little-endian 8-bit limbs in i32 lanes.  Shifts are in
+*bits* and may be negative (negative = left shift); out-of-range source
+positions read as zero, matching a hardware shifter that fills with zeros.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import config
+
+LB = config.LIMB_BITS
+LM = config.LIMB_MASK
+
+
+def _gather_limb(x, idx):
+    """x: (..., N) limbs, idx: (..., N) source limb indices (may be out of
+    range).  Returns x[..., idx] with zero fill outside [0, N)."""
+    n = x.shape[-1]
+    valid = (idx >= 0) & (idx < n)
+    safe = jnp.clip(idx, 0, n - 1)
+    g = jnp.take_along_axis(x, safe, axis=-1)
+    return jnp.where(valid, g, 0)
+
+
+def shift_right_bits(x, s):
+    """Per-element dynamic funnel shift: result bit k = x bit (k + s).
+
+    x: (..., N) canonical limbs; s: (...,) signed bit shift (s < 0 shifts
+    left).  Returns (..., N) canonical limbs.  Bits shifted out are dropped;
+    bits shifted in are zero.
+    """
+    x = jnp.asarray(x, jnp.int32)
+    s = jnp.asarray(s, jnp.int64)
+    n = x.shape[-1]
+    q = s >> jnp.int64(3)  # floor division: works for negative shifts
+    r = (s & 7).astype(jnp.int32)  # limb-internal shift in [0, 8)
+    k = jnp.arange(n, dtype=jnp.int64)
+    idx = k + q[..., None]
+    lo = _gather_limb(x, idx)
+    hi = _gather_limb(x, idx + 1)
+    r_ = r[..., None]
+    out = (lo >> r_) | jnp.where(r_ == 0, 0, hi << (LB - r_))
+    return (out & LM).astype(jnp.int32)
+
+
+def sticky_below(x, s):
+    """True iff any bit of x strictly below bit position s is set.
+
+    This is the sticky signal the RNDZ subtraction correction needs
+    (DESIGN.md §5): when the aligned smaller operand loses nonzero bits, the
+    computed difference must be decremented by one workspace ulp.
+    """
+    x = jnp.asarray(x, jnp.int32)
+    s = jnp.asarray(s, jnp.int64)
+    n = x.shape[-1]
+    q = jnp.clip(s >> jnp.int64(3), 0, n)
+    r = (jnp.maximum(s, 0) & 7).astype(jnp.int32)
+    k = jnp.arange(n, dtype=jnp.int64)
+    full = (k < q[..., None]) & (x != 0)
+    any_full = jnp.any(full, axis=-1)
+    part_idx = jnp.minimum(q, n - 1)
+    part = jnp.take_along_axis(x, part_idx[..., None], axis=-1)[..., 0]
+    mask = (1 << r) - 1
+    part_set = jnp.where(q < n, (part & mask) != 0, False)
+    return any_full | part_set
+
+
+def bit_length(x):
+    """Per-element bit length of a canonical limb vector (0 for zero).
+
+    The vectorized leading-zero counter of the adder's renormalization stage.
+    x: (..., N) -> (...,) int64 giving the position of the MSB + 1.
+    """
+    x = jnp.asarray(x, jnp.int32)
+    n = x.shape[-1]
+    nz = x != 0
+    k = jnp.arange(1, n + 1, dtype=jnp.int64)  # 1-based so zero -> 0
+    top1 = jnp.max(jnp.where(nz, k, 0), axis=-1)  # 1-based index of top limb
+    top_limb = jnp.take_along_axis(
+        x, jnp.maximum(top1 - 1, 0)[..., None].astype(jnp.int64), axis=-1
+    )[..., 0]
+    # bit length of an 8-bit value via comparison ladder
+    bl = jnp.zeros(top_limb.shape, jnp.int64)
+    for t in range(LB):
+        bl = jnp.where(top_limb >= (1 << t), t + 1, bl)
+    return jnp.where(top1 == 0, 0, (top1 - 1) * LB + bl)
+
+
+def compare_mag(ma, mb):
+    """Lexicographic magnitude comparison of equal-length canonical limb
+    vectors: returns (...,) int32 in {-1, 0, +1} for a<b / a==b / a>b."""
+    ma = jnp.asarray(ma, jnp.int32)
+    mb = jnp.asarray(mb, jnp.int32)
+    n = ma.shape[-1]
+    d = jnp.sign(ma - mb)  # per-limb comparison
+    k = jnp.arange(1, n + 1, dtype=jnp.int64)
+    top = jnp.max(jnp.where(d != 0, k, 0), axis=-1)
+    safe = jnp.maximum(top - 1, 0)
+    winner = jnp.take_along_axis(d, safe[..., None].astype(jnp.int64), axis=-1)[..., 0]
+    return jnp.where(top == 0, 0, winner).astype(jnp.int32)

@@ -1,0 +1,116 @@
+"""Carry/borrow propagation over limb planes.
+
+The paper pipelines wide integer additions by splitting them into
+``APFP_ADD_BASE_BITS``-bit chunks per pipeline stage (§II-A, Fig. 3's x-axis).
+The vectorized analog here is a two-level scheme:
+
+  * within a chunk of ``chunk_limbs`` limbs, carries ripple sequentially
+    (combinatorial logic inside one stage);
+  * between chunks, a second scan propagates the chunk carry-outs
+    (the stage-to-stage pipeline registers).
+
+Because a carry into an all-0xFF chunk can ripple through the whole chunk,
+the inter-chunk scan re-ripples inside the chunk; both levels are exact.
+``propagate_carries(x, None)`` collapses to a single full-width scan, the
+analog of an unpipelined combinatorial adder.
+
+All scans carry int64 accumulators: redundant limbs out of the Karatsuba
+kernel are < 2^31 and the running carry is bounded by (2^31 + carry)/256,
+so the int64 intermediate never overflows.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .. import config
+
+
+def _scan_carries(x):
+    """Full-width exact carry propagation (little-endian, batched).
+
+    x: (..., N) int64 possibly-redundant nonnegative limbs.
+    Returns (..., N) canonical 8-bit limbs; any final carry-out is dropped
+    (callers size the workspace so it cannot occur).
+    """
+    x = jnp.asarray(x, jnp.int64)
+    xt = jnp.moveaxis(x, -1, 0)  # scan over the limb axis
+
+    def step(carry, v):
+        t = v + carry
+        return t >> config.LIMB_BITS, t & config.LIMB_MASK
+
+    _, out = jax.lax.scan(step, jnp.zeros(x.shape[:-1], jnp.int64), xt)
+    return jnp.moveaxis(out, 0, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_limbs",))
+def propagate_carries(x, chunk_limbs: int | None = config.DEFAULT_ADD_CHUNK_LIMBS):
+    """Canonicalize a redundant limb vector to base-256 limbs.
+
+    ``chunk_limbs`` is the ADD_BASE_BITS analog (limbs per pipeline stage);
+    None means one full-width ripple.
+    """
+    x = jnp.asarray(x, jnp.int64)
+    n = x.shape[-1]
+    if chunk_limbs is None or chunk_limbs >= n:
+        return _scan_carries(x).astype(jnp.int32)
+
+    pad = (-n) % chunk_limbs
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    chunks = xp.reshape(xp.shape[:-1] + (-1, chunk_limbs))
+
+    # Level 1: in-chunk ripple; record each chunk's carry-out.
+    chunks_t = jnp.moveaxis(chunks, -1, 0)
+
+    def in_chunk(carry, v):
+        t = v + carry
+        return t >> config.LIMB_BITS, t & config.LIMB_MASK
+
+    carry_out, canon = jax.lax.scan(
+        in_chunk, jnp.zeros(chunks.shape[:-1], jnp.int64), chunks_t
+    )
+    canon = jnp.moveaxis(canon, 0, -1)  # (..., n_chunks, chunk_limbs)
+
+    # Level 2: propagate chunk carry-outs across chunks.  Adding a carry to a
+    # canonical chunk can ripple through it, so the scan re-ripples in-chunk.
+    canon_t = jnp.moveaxis(canon, -2, 0)  # (n_chunks, ..., chunk_limbs)
+    couts_t = jnp.moveaxis(carry_out, -1, 0)  # (n_chunks, ...)
+
+    def across(carry_in, args):
+        chunk, cout = args
+        c = carry_in
+        outs = []
+        for k in range(chunk_limbs):
+            t = chunk[..., k] + c
+            outs.append(t & config.LIMB_MASK)
+            c = t >> config.LIMB_BITS
+        return cout + c, jnp.stack(outs, axis=-1)
+
+    _, fixed = jax.lax.scan(
+        across, jnp.zeros(carry_out.shape[:-1], jnp.int64), (canon_t, couts_t)
+    )
+    fixed = jnp.moveaxis(fixed, 0, -2)
+    out = fixed.reshape(x.shape[:-1] + (n + pad,))[..., :n]
+    return out.astype(jnp.int32)
+
+
+def propagate_borrows(x):
+    """Exact borrow propagation of a signed limb-wise difference.
+
+    x: (..., N) int64 limb-wise differences (each in roughly [-2^31, 2^31)).
+    The represented integer must be nonnegative; returns canonical limbs.
+    """
+    x = jnp.asarray(x, jnp.int64)
+    xt = jnp.moveaxis(x, -1, 0)
+
+    def step(borrow, v):
+        t = v + borrow  # borrow is <= 0
+        limb = t & config.LIMB_MASK  # arithmetic-shift floor keeps this exact
+        return (t - limb) >> config.LIMB_BITS, limb
+
+    _, out = jax.lax.scan(step, jnp.zeros(x.shape[:-1], jnp.int64), xt)
+    return jnp.moveaxis(out, 0, -1).astype(jnp.int32)

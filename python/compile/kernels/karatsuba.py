@@ -1,0 +1,182 @@
+"""Layer 1: the Karatsuba mantissa multiplier as a Pallas kernel.
+
+This is the TPU re-think of the paper's §II-A multiplier (see DESIGN.md
+§Hardware-Adaptation):
+
+* The paper implements the Karatsuba decomposition as a *static C++ template
+  recursion* (Lst. 1) that HLS unrolls into one flat, deeply pipelined
+  circuit, bottoming out at MULT_BASE_BITS where operands are dispatched to
+  hardened DSP48E2 18x18-bit multipliers.
+
+* Here the decomposition is a *static Python recursion* that tracing unrolls
+  into one flat HLO pipeline, bottoming out at ``base_limbs`` 8-bit limbs
+  where operands are dispatched to a vectorized shift-and-accumulate limb
+  convolution (the partial-product array a DSP/naive multiplier computes),
+  mapped by XLA onto the VPU lanes.
+
+* The paper keeps all sub-multiplications at n bits by explicitly tracking
+  the sign of (a1 - a0)(b1 - b0).  A SIMD lane has no cost for a temporarily
+  wide limb, so we use the (a0 + a1)(b0 + b1) Karatsuba variant in a
+  *redundant carry-save representation*: limbs are allowed to exceed 8 bits
+  during the computation and a single carry-propagation pass (kernels/carry)
+  canonicalizes the final product.  This is the vector analog of the
+  carry-save adder trees synthesis infers for the FPGA design.
+
+Headroom analysis (int32 lanes, 8-bit canonical input limbs):
+  at recursion depth d the inputs to a node are sums of at most 2^d original
+  limbs, so every limb is < 256 * 2^d.  A base convolution of length B_L
+  therefore produces partial sums < B_L * (256 * 2^D)^2 for maximum depth D,
+  and the combination step c1 = m - c0 - c2 at most triples the magnitude.
+  With B_L = 8 and D = 5 (i.e. 256 limbs = 2048-bit mantissas):
+      3 * 8 * (256 * 32)^2 = 1.6e9 < 2^31.
+  ``plan_depth`` asserts this bound for the configuration being built.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import config
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def plan_depth(limbs: int, base_limbs: int) -> int:
+    """Recursion depth for a given (padded) limb count, with the int32
+    headroom bound of the module docstring asserted."""
+    padded = _next_pow2(limbs)
+    depth = 0
+    size = padded
+    while size > base_limbs:
+        size //= 2
+        depth += 1
+    bound = 3 * size * (256 << depth) ** 2
+    assert bound < 2**31, (
+        f"karatsuba(int32) headroom exceeded: limbs={limbs} base={base_limbs} "
+        f"depth={depth} bound={bound}"
+    )
+    return depth
+
+
+def base_conv(a, b):
+    """Bottom-out primitive: shift-and-accumulate limb convolution.
+
+    The analog of the paper's DSP-based naive multiplication: a full
+    partial-product array, accumulated in redundant form.  a, b: (..., L);
+    returns (..., 2L - 1).
+    """
+    l = a.shape[-1]
+    out = jnp.zeros(a.shape[:-1] + (2 * l - 1,), a.dtype)
+    for i in range(l):
+        out = out.at[..., i : i + l].add(a[..., i : i + 1] * b)
+    return out
+
+
+def karatsuba(a, b, base_limbs: int):
+    """Static-recursive Karatsuba over little-endian limb vectors.
+
+    a, b: (..., L) with L a power of two.  Returns the redundant convolution
+    (..., 2L - 1).  Mirrors the paper's Lst. 1: the recursion is resolved at
+    trace time (their SFINAE bottom-out is our ``if`` on a static shape).
+    """
+    l = a.shape[-1]
+    assert l == b.shape[-1] and (l & (l - 1)) == 0, "limb count must be 2^k"
+    if l <= base_limbs:
+        return base_conv(a, b)  # bottom out on the naive partial-product array
+    h = l // 2
+    a0, a1 = a[..., :h], a[..., h:]
+    b0, b1 = b[..., :h], b[..., h:]
+    c0 = karatsuba(a0, b0, base_limbs)  # recurse: low half
+    c2 = karatsuba(a1, b1, base_limbs)  # recurse: high half
+    m = karatsuba(a0 + a1, b0 + b1, base_limbs)  # recurse: cross (carry-save)
+    c1 = m - c0 - c2
+    # Recombine with shifts (multiplication by B = 2^(8h) is limb offset h).
+    out = jnp.zeros(a.shape[:-1] + (2 * l - 1,), a.dtype)
+    out = out.at[..., : 2 * h - 1].add(c0)
+    out = out.at[..., h : 3 * h - 1].add(c1)
+    out = out.at[..., 2 * h : 4 * h - 1].add(c2)
+    return out
+
+
+def _mult_kernel(a_ref, b_ref, o_ref, *, base_limbs: int, out_limbs: int):
+    """Pallas kernel body: one batch-block of mantissa multiplications."""
+    a = a_ref[...]
+    b = b_ref[...]
+    conv = karatsuba(a, b, base_limbs)
+    pad = out_limbs - conv.shape[-1]
+    o_ref[...] = jnp.pad(conv, ((0, 0), (0, pad)))
+
+
+@functools.partial(jax.jit, static_argnames=("base_limbs",))
+def mult_mantissa(a, b, base_limbs: int = config.DEFAULT_BASE_LIMBS):
+    """Multiply batches of mantissas: (B, L) x (B, L) -> redundant (B, 2L).
+
+    Pads L up to a power of two for the recursion (e.g. the 56-limb 448-bit
+    mantissa computes in 64 limbs, like the paper's power-of-two-friendly
+    decomposition of padded operands), then runs the Pallas kernel.  Output
+    is the *redundant* product; canonicalize with kernels.carry.
+
+    ``interpret=True`` everywhere: real-TPU lowering emits Mosaic
+    custom-calls the CPU PJRT plugin cannot execute (see DESIGN.md).
+    """
+    batch, l = a.shape
+    assert b.shape == (batch, l)
+    padded = _next_pow2(l)
+    plan_depth(l, base_limbs)
+    a_p = jnp.pad(a.astype(jnp.int32), ((0, 0), (0, padded - l)))
+    b_p = jnp.pad(b.astype(jnp.int32), ((0, 0), (0, padded - l)))
+    out_limbs = 2 * l
+    kernel = functools.partial(
+        _mult_kernel, base_limbs=base_limbs, out_limbs=2 * padded
+    )
+    # One block spans the whole batch: the mantissa planes stream through
+    # VMEM exactly once, the BlockSpec analog of the paper's operand streams
+    # from DDR into the multiplier pipeline.
+    res = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((batch, 2 * padded), jnp.int32),
+        in_specs=[
+            pl.BlockSpec((batch, padded), lambda: (0, 0)),
+            pl.BlockSpec((batch, padded), lambda: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((batch, 2 * padded), lambda: (0, 0)),
+        interpret=True,
+    )(a_p, b_p)
+    return res[:, :out_limbs]
+
+
+def vmem_report(bits: int, base_limbs: int, batch: int) -> dict:
+    """Static TPU-side resource estimate for this kernel configuration.
+
+    interpret=True gives no hardware timing, so the DESIGN.md §7 TPU
+    estimate is derived from structure: VMEM footprint of the blocks and
+    MAC counts of the unrolled recursion tree.
+    """
+    l = config.mant_limbs(bits)
+    padded = _next_pow2(l)
+    depth = plan_depth(l, base_limbs)
+    leaves = 3**depth
+    base = padded >> depth
+    macs_per_mult = leaves * base * base
+    vmem_bytes = batch * (2 * padded + 2 * padded) * 4  # in + out blocks, i32
+    return {
+        "bits": bits,
+        "limbs": l,
+        "padded_limbs": padded,
+        "base_limbs": base,
+        "depth": depth,
+        "leaf_convs": leaves,
+        "macs_per_mult": macs_per_mult,
+        "schoolbook_macs": padded * padded,
+        "mac_ratio": macs_per_mult / (padded * padded),
+        "vmem_bytes_per_block": vmem_bytes,
+    }

@@ -1,0 +1,259 @@
+"""Correctness oracles for the APFP kernels.
+
+Two oracles live here:
+
+1. ``conv_ref`` / ``carry_ref`` — pure-jnp/numpy schoolbook references for the
+   limb-convolution (the quantity the Pallas Karatsuba kernel must match
+   *after* carry canonicalization).
+
+2. ``PyApfp`` — an *exact* arbitrary-precision reference implemented with
+   Python integers.  This is the semantic gold standard for the whole
+   reproduction: both the JAX model (python/tests) and the Rust softfloat
+   library (rust/tests via generated vectors) are pinned bit-for-bit against
+   it.  It plays the role MPFR plays in the paper ("our operators maintain
+   full bit-compatibility in the mantissa with MPFR"), with round-to-zero
+   (MPFR_RNDZ) semantics on normalized numbers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from .. import config
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp limb convolution reference (schoolbook partial-product array)
+# ---------------------------------------------------------------------------
+
+
+def conv_ref(a, b):
+    """Schoolbook limb convolution: out[..., k] = sum_i a[..., i] * b[..., k-i].
+
+    a, b: (..., L) integer arrays (little-endian limbs, possibly redundant).
+    Returns (..., 2L - 1) in the same redundant representation, computed in
+    int64 so that any configuration the int32 kernel supports is covered.
+    """
+    a = jnp.asarray(a, jnp.int64)
+    b = jnp.asarray(b, jnp.int64)
+    la = a.shape[-1]
+    lb = b.shape[-1]
+    out = jnp.zeros(a.shape[:-1] + (la + lb - 1,), jnp.int64)
+    for i in range(la):
+        out = out.at[..., i : i + lb].add(a[..., i : i + 1] * b)
+    return out
+
+
+def carry_ref(x, out_limbs):
+    """Exact carry propagation of a redundant limb vector to canonical base-256.
+
+    x: (..., N) nonnegative redundant limbs. Returns (..., out_limbs) int64.
+    """
+    x = np.asarray(x)
+    batch_shape = x.shape[:-1]
+    flat = x.reshape(-1, x.shape[-1])
+    out = np.zeros((flat.shape[0], out_limbs), dtype=np.int64)
+    for r in range(flat.shape[0]):
+        v = limbs_to_int(flat[r])
+        out[r] = int_to_limbs(v, out_limbs)
+    return jnp.asarray(out.reshape(batch_shape + (out_limbs,)))
+
+
+# ---------------------------------------------------------------------------
+# Limb <-> Python int helpers
+# ---------------------------------------------------------------------------
+
+
+def limbs_to_int(limbs) -> int:
+    """Little-endian (possibly redundant) limbs -> exact Python integer."""
+    v = 0
+    for k, limb in enumerate(list(limbs)):
+        v += int(limb) << (config.LIMB_BITS * k)
+    return v
+
+
+def int_to_limbs(v: int, n: int):
+    """Exact Python integer -> n little-endian canonical 8-bit limbs."""
+    assert v >= 0
+    out = [(v >> (config.LIMB_BITS * k)) & config.LIMB_MASK for k in range(n)]
+    assert v >> (config.LIMB_BITS * n) == 0, "value does not fit in limbs"
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Exact APFP reference (Python integers, RNDZ)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PyApfp:
+    """Exact-semantics APFP scalar: value = (-1)^sign * mant * 2^(exp - prec).
+
+    ``mant`` is either 0 (the zero value, with exp == config.ZERO_EXP) or a
+    normalized ``prec``-bit integer in [2^(prec-1), 2^prec).
+    """
+
+    sign: int  # 0 or 1
+    exp: int
+    mant: int
+    prec: int
+
+    def __post_init__(self):
+        if self.mant == 0:
+            assert self.exp == config.ZERO_EXP and self.sign == 0
+        else:
+            assert (1 << (self.prec - 1)) <= self.mant < (1 << self.prec)
+
+    # -- constructors -----------------------------------------------------
+
+    @staticmethod
+    def zero(prec: int) -> "PyApfp":
+        return PyApfp(0, config.ZERO_EXP, 0, prec)
+
+    @staticmethod
+    def from_parts(sign: int, exp: int, mant: int, prec: int) -> "PyApfp":
+        if mant == 0:
+            return PyApfp.zero(prec)
+        return PyApfp(sign, exp, mant, prec)
+
+    @staticmethod
+    def from_int_scaled(signed_scaled: int, scale_exp: int, prec: int) -> "PyApfp":
+        """Exact value = signed_scaled * 2^scale_exp, truncated (RNDZ) to prec."""
+        if signed_scaled == 0:
+            return PyApfp.zero(prec)
+        sign = 1 if signed_scaled < 0 else 0
+        m = abs(signed_scaled)
+        nbits = m.bit_length()
+        # Normalize to exactly prec bits, truncating toward zero.
+        if nbits >= prec:
+            mant = m >> (nbits - prec)
+        else:
+            mant = m << (prec - nbits)
+        exp = scale_exp + nbits
+        return PyApfp(sign, exp, mant, prec)
+
+    @staticmethod
+    def from_float(x: float, prec: int) -> "PyApfp":
+        if x == 0.0:
+            return PyApfp.zero(prec)
+        m, e = np.frexp(x)  # x = m * 2^e, 0.5 <= |m| < 1
+        scaled = int(m * (1 << 53))  # exact: doubles have 53-bit significands
+        return PyApfp.from_int_scaled(scaled, int(e) - 53, prec)
+
+    # -- accessors ----------------------------------------------------------
+
+    def is_zero(self) -> bool:
+        return self.mant == 0
+
+    def to_float(self) -> float:
+        if self.is_zero():
+            return 0.0
+        m = self.mant >> (self.prec - 64)  # top 64 bits are plenty for f64
+        v = float(m) * 2.0 ** (self.exp - 64)
+        return -v if self.sign else v
+
+    def to_exact(self):
+        """Signed scaled pair: value = signed_mant * 2^(exp - prec)."""
+        s = -self.mant if self.sign else self.mant
+        return s, self.exp - self.prec
+
+    # -- arithmetic (RNDZ) --------------------------------------------------
+
+    def mul(self, other: "PyApfp") -> "PyApfp":
+        assert self.prec == other.prec
+        if self.is_zero() or other.is_zero():
+            return PyApfp.zero(self.prec)
+        sign = self.sign ^ other.sign
+        prod = self.mant * other.mant  # exact, 2*prec (or 2*prec-1) bits
+        exp = self.exp + other.exp
+        nbits = prod.bit_length()  # 2*prec or 2*prec - 1
+        mant = prod >> (nbits - self.prec)  # truncate = RNDZ
+        exp = exp + nbits - 2 * self.prec
+        return PyApfp(sign, exp, mant, self.prec)
+
+    def add(self, other: "PyApfp") -> "PyApfp":
+        """Exact sum, truncated toward zero to prec bits.
+
+        This is computed through exact integers, so it serves as the
+        specification that both the guard-limb JAX adder and the Rust
+        softfloat adder must reproduce bit-for-bit.
+        """
+        assert self.prec == other.prec
+        if self.is_zero():
+            return other
+        if other.is_zero():
+            return self
+        sa, ea = self.to_exact()
+        sb, eb = other.to_exact()
+        e = min(ea, eb)
+        total = (sa << (ea - e)) + (sb << (eb - e))
+        if total == 0:
+            return PyApfp.zero(self.prec)  # MPFR_RNDZ: exact cancellation -> +0
+        return PyApfp.from_int_scaled(total, e, self.prec)
+
+    def sub(self, other: "PyApfp") -> "PyApfp":
+        return self.add(other.neg())
+
+    def div(self, other: "PyApfp") -> "PyApfp":
+        """RNDZ division (the paper's §I "dependent operation"): the exact
+        quotient floor'd at p bits.  q = floor(Ma * 2^(p+1) / Mb) keeps one
+        guard bit + one headroom bit, and truncating q to p bits equals
+        truncating the exact quotient (floor of floor on a coarser grid)."""
+        assert self.prec == other.prec
+        assert not other.is_zero(), "division by zero"
+        if self.is_zero():
+            return self
+        sign = self.sign ^ other.sign
+        q = (self.mant << (self.prec + 1)) // other.mant
+        return PyApfp.from_int_scaled(
+            -q if sign else q, self.exp - other.exp - (self.prec + 1), self.prec
+        )
+
+    def neg(self) -> "PyApfp":
+        if self.is_zero():
+            return self
+        return PyApfp(1 - self.sign, self.exp, self.mant, self.prec)
+
+    def mac(self, a: "PyApfp", b: "PyApfp") -> "PyApfp":
+        """self + a*b with intermediate rounding, matching the hardware
+        multiply-add pipeline (the product is truncated to prec before the
+        addition, exactly as the paper's fused pipeline normalizes the
+        multiplier output before feeding the adder)."""
+        return self.add(a.mul(b))
+
+    # -- limb-plane conversion -------------------------------------------
+
+    def mant_limb_list(self):
+        return int_to_limbs(self.mant, self.prec // config.LIMB_BITS)
+
+    @staticmethod
+    def from_limb_parts(sign, exp, limbs, prec) -> "PyApfp":
+        m = limbs_to_int(limbs)
+        if m == 0:
+            return PyApfp.zero(prec)
+        return PyApfp(int(sign), int(exp), m, prec)
+
+
+def gemm_ref(a, b, c):
+    """Reference GEMM over PyApfp matrices (lists of lists): C = A*B + C.
+
+    Accumulation order matches the hardware dataflow (§III): the K loop is
+    innermost and sequential, accumulating into the output element with
+    intermediate rounding at every multiply-add — the same order the
+    gemm_tile artifact and the Rust coordinator use, so results are
+    bit-comparable.
+    """
+    n = len(a)
+    k_dim = len(b)
+    m = len(b[0])
+    out = [[c[i][j] for j in range(m)] for i in range(n)]
+    for i in range(n):
+        for j in range(m):
+            acc = out[i][j]
+            for k in range(k_dim):
+                acc = acc.mac(a[i][k], b[k][j])
+            out[i][j] = acc
+    return out

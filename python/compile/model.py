@@ -1,0 +1,252 @@
+"""Layer 2: the APFP operators and the GEMM compute-unit datapath in JAX.
+
+The functions here are the JAX expression of the paper's hardware pipelines:
+
+  ``apfp_mul``   — §II-A: Karatsuba mantissa multiply (the Pallas kernel),
+                   carry canonicalization, renormalization, RNDZ truncation.
+  ``apfp_add``   — §II-B: exponent alignment, guard-limb add/sub with sticky
+                   correction, leading-zero renormalization, RNDZ truncation.
+  ``apfp_mac``   — the combined multiply-addition pipeline the paper feeds
+                   its GEMM with (§II-B last paragraph).
+  ``gemm_tile``  — §III: one compute unit's inner dataflow — a T_N x T_M
+                   output tile accumulated by a sequential K-scan of outer
+                   products, exactly the paper's 2D tiling scheme.
+  ``mul_stream`` / ``add_stream`` / ``mac_stream`` — the Tab. I/II
+                   microbenchmark operators (linear operand streams).
+
+Everything lowers to one HLO module per artifact via aot.py; the Rust
+coordinator executes those artifacts through PJRT and never calls Python.
+
+Semantics are pinned bit-for-bit against kernels.ref.PyApfp (exact Python
+integers) by python/tests, and transitively against the Rust softfloat
+library — the reproduction's analog of the paper's MPFR bit-compatibility.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import config
+from .apfp_types import ApTensor
+from .kernels import addsub, carry, karatsuba
+
+LB = config.LIMB_BITS
+
+
+def _is_zero(t: ApTensor):
+    return t.exp == config.ZERO_EXP
+
+
+def _select(pred, a: ApTensor, b: ApTensor) -> ApTensor:
+    """Element-wise ApTensor select: pred ? a : b."""
+    return ApTensor(
+        jnp.where(pred, a.sign, b.sign),
+        jnp.where(pred, a.exp, b.exp),
+        jnp.where(pred[..., None], a.mant, b.mant),
+    )
+
+
+def _zero_like(t: ApTensor) -> ApTensor:
+    return ApTensor(
+        jnp.zeros_like(t.sign),
+        jnp.full_like(t.exp, config.ZERO_EXP),
+        jnp.zeros_like(t.mant),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Multiplication (§II-A)
+# ---------------------------------------------------------------------------
+
+
+def apfp_mul(
+    a: ApTensor,
+    b: ApTensor,
+    *,
+    base_limbs: int = config.DEFAULT_BASE_LIMBS,
+    add_chunk_limbs: int = config.DEFAULT_ADD_CHUNK_LIMBS,
+) -> ApTensor:
+    """Batched APFP multiply, RNDZ.  a, b: ApTensor with equal batch shape."""
+    l = a.limbs
+    p = l * LB
+    batch_shape = a.batch_shape
+    flat = 1
+    for dim in batch_shape:
+        flat *= dim
+
+    ma = a.mant.reshape(flat, l)
+    mb = b.mant.reshape(flat, l)
+
+    # L1 Pallas kernel: redundant Karatsuba product, then the staged
+    # carry-propagation (the ADD_BASE_BITS-chunked adder analog).
+    red = karatsuba.mult_mantissa(ma, mb, base_limbs=base_limbs)
+    prod = carry.propagate_carries(red, chunk_limbs=add_chunk_limbs)  # (flat, 2L)
+    prod = prod.reshape(batch_shape + (2 * l,))
+
+    # Renormalize: the exact product has 2p or 2p-1 bits.  Truncating the
+    # low (n - p) bits is exactly MPFR_RNDZ on the magnitude.
+    n = addsub.bit_length(prod)  # (...,) 2p or 2p-1 (0 only if an input is 0)
+    mant = addsub.shift_right_bits(prod, n - p)[..., :l]
+    exp = a.exp + b.exp + (n - 2 * p)
+    sign = a.sign ^ b.sign
+
+    out = ApTensor(sign, exp.astype(jnp.int64), mant)
+    zero = _is_zero(a) | _is_zero(b)
+    return _select(zero, _zero_like(out), out)
+
+
+# ---------------------------------------------------------------------------
+# Addition (§II-B)
+# ---------------------------------------------------------------------------
+
+
+def apfp_add(a: ApTensor, b: ApTensor) -> ApTensor:
+    """Batched APFP add/subtract, RNDZ, bit-exact vs the integer oracle.
+
+    Pipeline stages (each maps to a stage of the paper's adder):
+      1. magnitude compare + operand swap (big/small)
+      2. barrel shift of the small operand by the exponent difference,
+         with sticky extraction for the RNDZ subtraction correction
+      3. guard-limb wide add or subtract (carry-save then canonicalize)
+      4. leading-zero count + renormalization shift
+      5. truncation to p bits (RNDZ)
+    """
+    l = a.limbs
+    p = l * LB
+
+    # -- stage 1: ordering by magnitude --------------------------------------
+    mant_cmp = addsub.compare_mag(a.mant, b.mant)
+    a_bigger = (a.exp > b.exp) | ((a.exp == b.exp) & (mant_cmp >= 0))
+    big = _select(a_bigger, a, b)
+    small = _select(a_bigger, b, a)
+    equal_mag = (a.exp == b.exp) & (mant_cmp == 0)
+
+    # -- stage 2: alignment ---------------------------------------------------
+    # Workspace: [2 guard limbs | L mantissa limbs | 1 overflow limb], i.e.
+    # the big operand's MSB sits at bit GUARD_BITS + p - 1.
+    g, o = config.GUARD_LIMBS, config.OVERFLOW_LIMBS
+    pad_cfg = [(0, 0)] * (big.mant.ndim - 1) + [(g, o)]
+    ws_big = jnp.pad(big.mant, pad_cfg)
+    ws_small_base = jnp.pad(small.mant, pad_cfg)
+    d = (big.exp - small.exp).astype(jnp.int64)
+    ws_small = addsub.shift_right_bits(ws_small_base, d)
+    sticky = addsub.sticky_below(ws_small_base, d)
+
+    # -- stage 3: wide add / subtract ----------------------------------------
+    same_sign = big.sign == small.sign
+    v_add = carry.propagate_carries(
+        ws_big.astype(jnp.int64) + ws_small.astype(jnp.int64),
+        chunk_limbs=config.DEFAULT_ADD_CHUNK_LIMBS,
+    )
+    diff = ws_big.astype(jnp.int64) - ws_small.astype(jnp.int64)
+    # RNDZ correction: the truncated small operand under-shoots, so the raw
+    # difference over-shoots; when sticky bits were lost, subtract one
+    # workspace ulp (DESIGN.md §5 derivation).
+    correction = jnp.where(~same_sign & sticky, 1, 0).astype(jnp.int64)
+    diff = diff.at[..., 0].add(-correction)
+    v_sub = carry.propagate_borrows(diff)
+    v = jnp.where(same_sign[..., None], v_add, v_sub)
+
+    # -- stages 4+5: renormalize and truncate ---------------------------------
+    n = addsub.bit_length(v)
+    mant = addsub.shift_right_bits(v, n - p)[..., :l]
+    exp = big.exp + (n - (g * LB + p))
+    sign = big.sign
+
+    out = ApTensor(sign, exp.astype(jnp.int64), mant)
+
+    # Exact cancellation -> +0 (MPFR_RNDZ convention).
+    cancel = ~same_sign & equal_mag
+    out = _select(cancel, _zero_like(out), out)
+    # Zero operands pass the other operand through.
+    out = _select(_is_zero(a), b, out)
+    out = _select(_is_zero(b) & ~_is_zero(a), a, out)
+    return out
+
+
+def apfp_mac(c: ApTensor, a: ApTensor, b: ApTensor, **mul_kw) -> ApTensor:
+    """The combined multiply-addition pipeline: c + a*b (product rounded to p
+    bits before accumulation, matching the hardware pipeline)."""
+    return apfp_add(c, apfp_mul(a, b, **mul_kw))
+
+
+# ---------------------------------------------------------------------------
+# GEMM compute-unit datapath (§III)
+# ---------------------------------------------------------------------------
+
+
+def gemm_tile(a: ApTensor, b: ApTensor, c: ApTensor, **mul_kw) -> ApTensor:
+    """One compute unit's tile update: C += A @ B over APFP elements.
+
+    a: (T_N, K), b: (K, T_M), c: (T_N, T_M).  The K loop is a sequential
+    scan of T_N x T_M outer products accumulated into the on-chip tile —
+    the exact dataflow of the paper's §III (one column of A times one row
+    of B per step).
+    """
+    t_n, _ = a.batch_shape
+    _, t_m = b.batch_shape
+    l = a.mant.shape[-1]
+
+    a_scan = ApTensor(a.sign.T, a.exp.T, jnp.swapaxes(a.mant, 0, 1))  # (K, T_N)
+    b_scan = b  # already (K, T_M) in the leading axis
+
+    def step(c_acc: ApTensor, ab):
+        a_k, b_k = ab  # a_k: (T_N,), b_k: (T_M,)
+        a_bc = ApTensor(
+            jnp.broadcast_to(a_k.sign[:, None], (t_n, t_m)),
+            jnp.broadcast_to(a_k.exp[:, None], (t_n, t_m)),
+            jnp.broadcast_to(a_k.mant[:, None, :], (t_n, t_m, l)),
+        )
+        b_bc = ApTensor(
+            jnp.broadcast_to(b_k.sign[None, :], (t_n, t_m)),
+            jnp.broadcast_to(b_k.exp[None, :], (t_n, t_m)),
+            jnp.broadcast_to(b_k.mant[None, :, :], (t_n, t_m, l)),
+        )
+        return apfp_mac(c_acc, a_bc, b_bc, **mul_kw), None
+
+    out, _ = jax.lax.scan(step, c, (a_scan, b_scan))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Stream operators (Tab. I / Tab. II microbenchmark path)
+# ---------------------------------------------------------------------------
+
+
+def mul_stream(a: ApTensor, b: ApTensor) -> ApTensor:
+    """Linear multiplier stream: c[i] = a[i] * b[i]."""
+    return apfp_mul(a, b)
+
+
+def add_stream(a: ApTensor, b: ApTensor) -> ApTensor:
+    return apfp_add(a, b)
+
+
+def mac_stream(c: ApTensor, a: ApTensor, b: ApTensor) -> ApTensor:
+    return apfp_mac(c, a, b)
+
+
+# ---------------------------------------------------------------------------
+# Flat-argument wrappers for AOT lowering (PJRT artifacts take/return planes)
+# ---------------------------------------------------------------------------
+
+
+def mul_stream_flat(sa, ea, ma, sb, eb, mb):
+    out = mul_stream(ApTensor(sa, ea, ma), ApTensor(sb, eb, mb))
+    return out.sign, out.exp, out.mant
+
+
+def add_stream_flat(sa, ea, ma, sb, eb, mb):
+    out = add_stream(ApTensor(sa, ea, ma), ApTensor(sb, eb, mb))
+    return out.sign, out.exp, out.mant
+
+
+def mac_stream_flat(sc, ec, mc, sa, ea, ma, sb, eb, mb):
+    out = mac_stream(ApTensor(sc, ec, mc), ApTensor(sa, ea, ma), ApTensor(sb, eb, mb))
+    return out.sign, out.exp, out.mant
+
+
+def gemm_tile_flat(sa, ea, ma, sb, eb, mb, sc, ec, mc):
+    out = gemm_tile(ApTensor(sa, ea, ma), ApTensor(sb, eb, mb), ApTensor(sc, ec, mc))
+    return out.sign, out.exp, out.mant

@@ -1,0 +1,77 @@
+"""L1/L2 performance probe (§Perf P3/P4 in EXPERIMENTS.md).
+
+interpret=True Pallas gives CPU-numpy timings only — *not* a TPU proxy —
+so L1 tuning is structural (MAC counts, recursion depth, HLO op counts)
+plus a CPU-wallclock sanity signal for the XLA-executed artifact graph:
+
+  P3: Karatsuba bottom-out (``base_limbs`` — the MULT_BASE_BITS analog):
+      MAC count + traced-graph size + CPU wallclock per batched multiply.
+  P4: carry-propagation chunking (``add_chunk_limbs`` — the ADD_BASE_BITS
+      analog): full ripple vs two-level chunked scan.
+
+Usage:  cd python && python -m compile.perf_probe
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from . import config
+from .kernels import carry, karatsuba
+
+
+def time_jitted(fn, *args, iters=20):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def probe_base_limbs(bits: int, batch: int = 64):
+    l = config.mant_limbs(bits)
+    rng = np.random.RandomState(0)
+    a = rng.randint(0, 256, (batch, l)).astype(np.int32)
+    b = rng.randint(0, 256, (batch, l)).astype(np.int32)
+    print(f"\nP3 — mult_mantissa({bits}-bit, batch {batch}): base_limbs sweep")
+    print(f"{'base':>6} {'depth':>6} {'leafconvs':>10} {'MACs':>8} {'ratio':>7} {'cpu_ms':>8}")
+    for base in (4, 8, 16, 32, 64):
+        r = karatsuba.vmem_report(bits, base, batch)
+        dt = time_jitted(
+            lambda a=a, b=b, base=base: karatsuba.mult_mantissa(a, b, base_limbs=base),
+            iters=10,
+        )
+        print(
+            f"{base:>6} {r['depth']:>6} {r['leaf_convs']:>10} "
+            f"{r['macs_per_mult']:>8} {r['mac_ratio']:>7.3f} {dt * 1e3:>8.2f}"
+        )
+
+
+def probe_carry_chunking(bits: int, batch: int = 64):
+    l = config.mant_limbs(bits)
+    rng = np.random.RandomState(1)
+    x = rng.randint(0, 2**24, (batch, 2 * l)).astype(np.int64)
+    print(f"\nP4 — propagate_carries({bits}-bit product, batch {batch}): chunk sweep")
+    print(f"{'chunk':>8} {'cpu_ms':>8}")
+    for chunk in (None, 4, 8, 16, 32):
+        dt = time_jitted(
+            lambda x=x, chunk=chunk: carry.propagate_carries(x, chunk_limbs=chunk),
+            iters=20,
+        )
+        label = "ripple" if chunk is None else str(chunk)
+        print(f"{label:>8} {dt * 1e3:>8.2f}")
+
+
+def main():
+    for bits in config.ARTIFACT_BITS:
+        probe_base_limbs(bits)
+        probe_carry_chunking(bits)
+
+
+if __name__ == "__main__":
+    main()

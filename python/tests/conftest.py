@@ -1,0 +1,50 @@
+"""Shared strategies and helpers for the APFP python test-suite.
+
+Hypothesis generates exact ``PyApfp`` values (the integer oracle); tests
+push batches of them through the JAX model and require *bit equality* —
+the same acceptance criterion the paper uses against MPFR.
+"""
+
+from __future__ import annotations
+
+import random
+
+from hypothesis import strategies as st
+
+from compile import config
+from compile.kernels import ref
+
+
+def mantissa_strategy(prec: int):
+    """Normalized prec-bit mantissas, biased toward the adversarial corners
+    (minimum 2^(p-1), maximum 2^p - 1, sparse and dense bit patterns)."""
+    lo = 1 << (prec - 1)
+    hi = (1 << prec) - 1
+    return st.one_of(
+        st.just(lo),
+        st.just(hi),
+        st.just(lo + 1),
+        st.just(hi - 1),
+        st.integers(min_value=lo, max_value=hi),
+        # sparse patterns: MSB plus a few scattered bits
+        st.lists(st.integers(0, prec - 2), min_size=0, max_size=4).map(
+            lambda bits: lo | sum(1 << b for b in set(bits))
+        ),
+    )
+
+
+def apfp_strategy(bits: int, exp_range: int = 600):
+    prec = config.PRECISIONS[bits]
+    nonzero = st.builds(
+        lambda s, e, m: ref.PyApfp(s, e, m, prec),
+        st.integers(0, 1),
+        st.integers(-exp_range, exp_range),
+        mantissa_strategy(prec),
+    )
+    return st.one_of(nonzero, st.just(ref.PyApfp.zero(prec)))
+
+
+def random_apfp(rng: random.Random, bits: int, exp_range: int = 300) -> ref.PyApfp:
+    prec = config.PRECISIONS[bits]
+    m = rng.getrandbits(prec) | (1 << (prec - 1))
+    return ref.PyApfp(rng.randint(0, 1), rng.randint(-exp_range, exp_range), m, prec)

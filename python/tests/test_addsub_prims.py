@@ -1,0 +1,79 @@
+"""Adder-pipeline primitives (§II-B): barrel shift, sticky, LZC, compare."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import addsub, ref
+
+N = 16  # limbs per test vector (128 bits)
+
+
+def _shift_ref(v: int, s: int, n_limbs: int) -> int:
+    """result bit k = source bit k + s, window [0, 8*n_limbs)."""
+    if s >= 0:
+        v >>= s
+    else:
+        v <<= -s
+    return v % (1 << (8 * n_limbs))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2 ** (8 * N) - 1), st.integers(-8 * N - 9, 8 * N + 9))
+def test_shift_right_bits(v, s):
+    x = np.array([ref.int_to_limbs(v, N)], np.int32)
+    got = np.asarray(addsub.shift_right_bits(x, np.array([s], np.int64)))[0]
+    assert ref.limbs_to_int(got) == _shift_ref(v, s, N)
+
+
+def test_shift_zero_is_identity():
+    rng = np.random.RandomState(5)
+    x = rng.randint(0, 256, (3, N)).astype(np.int32)
+    got = np.asarray(addsub.shift_right_bits(x, np.zeros(3, np.int64)))
+    np.testing.assert_array_equal(got, x)
+
+
+def test_shift_batched_mixed_signs():
+    v = (1 << 100) | 0xABCD
+    x = np.array([ref.int_to_limbs(v, N)] * 4, np.int32)
+    s = np.array([-8, -1, 1, 37], np.int64)
+    got = np.asarray(addsub.shift_right_bits(x, s))
+    for i, si in enumerate(s):
+        assert ref.limbs_to_int(got[i]) == _shift_ref(v, int(si), N)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2 ** (8 * N) - 1), st.integers(0, 8 * N + 16))
+def test_sticky_below(v, s):
+    x = np.array([ref.int_to_limbs(v, N)], np.int32)
+    got = bool(np.asarray(addsub.sticky_below(x, np.array([s], np.int64)))[0])
+    want = (v % (1 << min(s, 8 * N))) != 0 if s > 0 else False
+    assert got == want
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2 ** (8 * N) - 1))
+def test_bit_length(v):
+    x = np.array([ref.int_to_limbs(v, N)], np.int32)
+    got = int(np.asarray(addsub.bit_length(x))[0])
+    assert got == v.bit_length()
+
+
+def test_bit_length_edges():
+    for v in [0, 1, 255, 256, (1 << (8 * N)) - 1, 1 << (8 * N - 1)]:
+        x = np.array([ref.int_to_limbs(v, N)], np.int32)
+        assert int(np.asarray(addsub.bit_length(x))[0]) == v.bit_length()
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**64 - 1), st.integers(0, 2**64 - 1))
+def test_compare_mag(a, b):
+    la = np.array([ref.int_to_limbs(a, N)], np.int32)
+    lb = np.array([ref.int_to_limbs(b, N)], np.int32)
+    got = int(np.asarray(addsub.compare_mag(la, lb))[0])
+    want = (a > b) - (a < b)
+    assert got == want
+
+
+def test_compare_equal():
+    x = np.array([ref.int_to_limbs(123456789, N)], np.int32)
+    assert int(np.asarray(addsub.compare_mag(x, x))[0]) == 0

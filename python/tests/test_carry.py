@@ -1,0 +1,72 @@
+"""Carry/borrow canonicalization: chunked pipeline vs full ripple vs exact."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import carry, ref
+
+
+@pytest.mark.parametrize("chunk", [None, 2, 4, 8, 16, 64])
+def test_chunked_equals_exact(chunk):
+    rng = np.random.RandomState(chunk or 0)
+    x = rng.randint(0, 2**24, (5, 30)).astype(np.int64)
+    got = np.asarray(carry.propagate_carries(x, chunk_limbs=chunk))
+    # Workspace invariant: the value must fit the limb count after
+    # canonicalization; size the reference accordingly and compare prefix.
+    want = np.asarray(ref.carry_ref(x, 34))
+    for i in range(x.shape[0]):
+        v_got = ref.limbs_to_int(got[i])
+        v_want = ref.limbs_to_int(want[i])
+        assert v_got == v_want % (1 << (8 * 30))
+
+
+def test_already_canonical_is_identity():
+    rng = np.random.RandomState(9)
+    x = rng.randint(0, 256, (4, 16)).astype(np.int64)
+    got = np.asarray(carry.propagate_carries(x, chunk_limbs=4))
+    np.testing.assert_array_equal(got, x.astype(np.int32))
+
+
+def test_full_ripple_chain():
+    """A carry injected below a run of 0xFF limbs must ripple end to end —
+    the case that breaks naive fixed-sweep schemes."""
+    x = np.full((1, 20), 255, np.int64)
+    x[0, 0] = 256  # forces +1 into limb 1, rippling through all the 0xFFs
+    x[0, 19] = 0  # leave headroom so the ripple stays inside the workspace
+    got = np.asarray(carry.propagate_carries(x, chunk_limbs=4))[0]
+    want = ref.int_to_limbs(ref.limbs_to_int(x[0]), 20)
+    assert list(got) == want
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.lists(st.integers(0, 2**30 - 1), min_size=24, max_size=24),
+    st.sampled_from([None, 3, 8]),
+)
+def test_hypothesis_redundant(limbs, chunk):
+    x = np.array([limbs], np.int64)
+    got = np.asarray(carry.propagate_carries(x, chunk_limbs=chunk))[0]
+    total = ref.limbs_to_int(x[0])
+    assert ref.limbs_to_int(got) == total % (1 << (8 * 24))
+
+
+def test_borrows():
+    rng = np.random.RandomState(11)
+    for _ in range(10):
+        a = rng.randint(0, 2**60)
+        b = rng.randint(0, a + 1)
+        la = np.array([ref.int_to_limbs(a, 12)], np.int64)
+        lb = np.array([ref.int_to_limbs(b, 12)], np.int64)
+        got = np.asarray(carry.propagate_borrows(la - lb))[0]
+        assert ref.limbs_to_int(got) == a - b
+
+
+def test_borrow_ripple():
+    # 2^64 - 1 as 0x1_0000_0000_0000_0000 - 1: borrows ripple the whole way
+    a = np.zeros((1, 10), np.int64)
+    a[0, 8] = 1
+    b = np.zeros((1, 10), np.int64)
+    b[0, 0] = 1
+    got = np.asarray(carry.propagate_borrows(a - b))[0]
+    assert ref.limbs_to_int(got) == (1 << 64) - 1

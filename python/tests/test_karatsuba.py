@@ -1,0 +1,134 @@
+"""L1 kernel correctness: Pallas Karatsuba multiplier vs exact integers.
+
+This is the core correctness signal for the multiplier (§II-A): the kernel's
+canonicalized output must equal the exact product of the operand mantissas,
+for every precision and every bottom-out threshold configuration.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import config
+from compile.kernels import carry, karatsuba, ref
+
+
+def exact_product_check(a, b, base_limbs):
+    red = karatsuba.mult_mantissa(a, b, base_limbs=base_limbs)
+    canon = np.asarray(carry.propagate_carries(red))
+    for i in range(a.shape[0]):
+        got = ref.limbs_to_int(canon[i])
+        want = ref.limbs_to_int(a[i]) * ref.limbs_to_int(b[i])
+        assert got == want, f"row {i}: got {got:#x}, want {want:#x}"
+
+
+@pytest.mark.parametrize("bits", [512, 1024])
+@pytest.mark.parametrize("base_limbs", [4, 8, 16])
+def test_random_mantissas(bits, base_limbs):
+    l = config.mant_limbs(bits)
+    rng = np.random.RandomState(42 + bits + base_limbs)
+    a = rng.randint(0, 256, (8, l)).astype(np.int32)
+    b = rng.randint(0, 256, (8, l)).astype(np.int32)
+    exact_product_check(a, b, base_limbs)
+
+
+@pytest.mark.parametrize("bits", [512, 1024])
+def test_extreme_mantissas(bits):
+    """Worst-case carry-save headroom: all limbs at 255 (the bound in the
+    module docstring of kernels/karatsuba.py is tight here)."""
+    l = config.mant_limbs(bits)
+    ones = np.full((1, l), 255, np.int32)
+    zeros = np.zeros((1, l), np.int32)
+    one = np.zeros((1, l), np.int32)
+    one[0, 0] = 1
+    top = np.zeros((1, l), np.int32)
+    top[0, -1] = 255
+    for a in (ones, zeros, one, top):
+        for b in (ones, zeros, one, top):
+            exact_product_check(a, b, config.DEFAULT_BASE_LIMBS)
+
+
+def test_base_conv_matches_ref():
+    rng = np.random.RandomState(3)
+    a = rng.randint(0, 256, (4, 8)).astype(np.int32)
+    b = rng.randint(0, 256, (4, 8)).astype(np.int32)
+    got = np.asarray(karatsuba.base_conv(a, b))
+    want = np.asarray(ref.conv_ref(a, b))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_karatsuba_equals_schoolbook_conv():
+    """The recursion must compute the *same redundant polynomial* as the
+    schoolbook partial-product array once carries are resolved."""
+    rng = np.random.RandomState(4)
+    a = rng.randint(0, 256, (4, 32)).astype(np.int32)
+    b = rng.randint(0, 256, (4, 32)).astype(np.int32)
+    got = carry.propagate_carries(
+        np.pad(np.asarray(karatsuba.karatsuba(a, b, 8), np.int64), ((0, 0), (0, 1)))
+    )
+    want = carry.propagate_carries(
+        np.pad(np.asarray(ref.conv_ref(a, b)), ((0, 0), (0, 1)))
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    data=st.lists(
+        st.tuples(st.integers(0, 2**448 - 1), st.integers(0, 2**448 - 1)),
+        min_size=4,
+        max_size=4,
+    )
+)
+def test_hypothesis_512(data):
+    l = config.mant_limbs(512)
+    a = np.array([ref.int_to_limbs(x, l) for x, _ in data], np.int32)
+    b = np.array([ref.int_to_limbs(y, l) for _, y in data], np.int32)
+    exact_product_check(a, b, config.DEFAULT_BASE_LIMBS)
+
+
+def test_plan_depth_headroom():
+    assert karatsuba.plan_depth(56, 8) == 3  # 64 -> 32 -> 16 -> 8
+    assert karatsuba.plan_depth(120, 8) == 4  # 128 -> ... -> 8
+    assert karatsuba.plan_depth(56, 16) == 2
+    with pytest.raises(AssertionError):
+        # 2^14 limbs at base 4 would blow the int32 headroom bound
+        karatsuba.plan_depth(1 << 14, 4)
+
+
+def test_vmem_report():
+    r = karatsuba.vmem_report(512, 8, 64)
+    assert r["depth"] == 3
+    assert r["leaf_convs"] == 27
+    assert r["macs_per_mult"] == 27 * 8 * 8
+    # Karatsuba must beat schoolbook on MAC count at this size
+    assert r["mac_ratio"] < 0.5
+    r1024 = karatsuba.vmem_report(1024, 8, 64)
+    assert r1024["mac_ratio"] < r["mac_ratio"]  # asymptotic advantage grows
+
+
+@pytest.mark.parametrize("batch", [1, 2, 5, 7])
+@pytest.mark.parametrize("bits", [512, 1024])
+def test_shape_sweep(batch, bits):
+    """The kernel must be exact for any batch size (incl. odd/1) and both
+    precisions — the shapes the runtime feeds it under padding."""
+    l = config.mant_limbs(bits)
+    rng = np.random.RandomState(batch * 1000 + bits)
+    a = rng.randint(0, 256, (batch, l)).astype(np.int32)
+    b = rng.randint(0, 256, (batch, l)).astype(np.int32)
+    exact_product_check(a, b, config.DEFAULT_BASE_LIMBS)
+
+
+def test_dtype_is_int32_contract():
+    """Inputs are widened/validated to i32 lanes (the plane layout the
+    Rust runtime marshals); int64 input must still compute exactly."""
+    l = config.mant_limbs(512)
+    rng = np.random.RandomState(5)
+    a64 = rng.randint(0, 256, (2, l)).astype(np.int64)
+    b64 = rng.randint(0, 256, (2, l)).astype(np.int64)
+    red = karatsuba.mult_mantissa(a64, b64)
+    assert red.dtype == jnp.int32
+    canon = np.asarray(carry.propagate_carries(red))
+    for i in range(2):
+        assert ref.limbs_to_int(canon[i]) == ref.limbs_to_int(a64[i]) * ref.limbs_to_int(b64[i])

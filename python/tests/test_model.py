@@ -1,0 +1,151 @@
+"""L2 operator semantics: apfp_mul / apfp_add / apfp_mac vs the exact oracle.
+
+Bit equality (sign, exponent, every mantissa limb) is required — this is the
+reproduction's analog of the paper's MPFR bit-compatibility check.
+"""
+
+import random
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import apfp_types, config, model
+from compile.kernels import ref
+
+from .conftest import apfp_strategy, random_apfp
+
+
+def run_binop(op, pairs, bits):
+    a = apfp_types.from_py([p[0] for p in pairs], bits)
+    b = apfp_types.from_py([p[1] for p in pairs], bits)
+    return apfp_types.to_py(op(a, b), bits)
+
+
+@pytest.mark.parametrize("bits", [512, 1024])
+def test_mul_random(bits):
+    rng = random.Random(100 + bits)
+    pairs = [(random_apfp(rng, bits), random_apfp(rng, bits)) for _ in range(16)]
+    got = run_binop(model.apfp_mul, pairs, bits)
+    for i, (x, y) in enumerate(pairs):
+        assert got[i] == x.mul(y), i
+
+
+@pytest.mark.parametrize("bits", [512, 1024])
+def test_add_random(bits):
+    rng = random.Random(200 + bits)
+    pairs = [(random_apfp(rng, bits), random_apfp(rng, bits)) for _ in range(16)]
+    got = run_binop(model.apfp_add, pairs, bits)
+    for i, (x, y) in enumerate(pairs):
+        assert got[i] == x.add(y), i
+
+
+def test_add_nearby_exponents():
+    """d in {0, 1, 2} exercises the catastrophic-cancellation and the
+    guard-limb paths of the adder."""
+    bits = 512
+    prec = config.PRECISIONS[bits]
+    rng = random.Random(7)
+    pairs = []
+    for d in (0, 1, 2, 3, 17):
+        for _ in range(4):
+            x = random_apfp(rng, bits, exp_range=50)
+            m = rng.getrandbits(prec) | (1 << (prec - 1))
+            y = ref.PyApfp(1 - x.sign, x.exp - d, m, prec)
+            pairs.append((x, y))
+    got = run_binop(model.apfp_add, pairs, bits)
+    for i, (x, y) in enumerate(pairs):
+        assert got[i] == x.add(y), (i, pairs[i])
+
+
+def test_add_exact_cancellation():
+    bits = 512
+    rng = random.Random(8)
+    x = random_apfp(rng, bits)
+    got = run_binop(model.apfp_add, [(x, x.neg())], bits)[0]
+    assert got.is_zero()
+    assert got.sign == 0  # MPFR_RNDZ: exact cancellation yields +0
+
+
+def test_add_sticky_rndz_correction():
+    """Subtraction where the small operand loses bits below the workspace:
+    the computed difference must be corrected downward (DESIGN.md §5)."""
+    bits = 512
+    prec = config.PRECISIONS[bits]
+    one = ref.PyApfp.from_float(1.0, prec)
+    pairs = []
+    for e in (30, 465, 466, 467, 500, 1000):
+        tiny = ref.PyApfp(1, one.exp - e, (1 << (prec - 1)) | 1, prec)
+        pairs.append((one, tiny))
+    got = run_binop(model.apfp_add, pairs, bits)
+    for i, (x, y) in enumerate(pairs):
+        assert got[i] == x.add(y), f"exp diff case {i}"
+
+
+def test_zeros_and_signs():
+    bits = 512
+    prec = config.PRECISIONS[bits]
+    z = ref.PyApfp.zero(prec)
+    x = ref.PyApfp.from_float(3.5, prec)
+    assert run_binop(model.apfp_add, [(z, x)], bits)[0] == x
+    assert run_binop(model.apfp_add, [(x, z)], bits)[0] == x
+    assert run_binop(model.apfp_add, [(z, z)], bits)[0].is_zero()
+    assert run_binop(model.apfp_mul, [(z, x)], bits)[0].is_zero()
+    assert run_binop(model.apfp_mul, [(x, z)], bits)[0].is_zero()
+    xn = x.neg()
+    assert run_binop(model.apfp_mul, [(xn, x)], bits)[0].sign == 1
+    assert run_binop(model.apfp_mul, [(xn, xn)], bits)[0].sign == 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.tuples(apfp_strategy(512), apfp_strategy(512)), min_size=4, max_size=4))
+def test_hypothesis_mul_512(pairs):
+    got = run_binop(model.apfp_mul, pairs, 512)
+    for i, (x, y) in enumerate(pairs):
+        assert got[i] == x.mul(y), i
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.tuples(apfp_strategy(512), apfp_strategy(512)), min_size=4, max_size=4))
+def test_hypothesis_add_512(pairs):
+    got = run_binop(model.apfp_add, pairs, 512)
+    for i, (x, y) in enumerate(pairs):
+        assert got[i] == x.add(y), i
+
+
+def test_mac_intermediate_rounding():
+    """MAC must round the product before accumulating (pipeline semantics)."""
+    bits = 512
+    rng = random.Random(9)
+    trips = [
+        (random_apfp(rng, bits), random_apfp(rng, bits), random_apfp(rng, bits))
+        for _ in range(8)
+    ]
+    c = apfp_types.from_py([t[0] for t in trips], bits)
+    a = apfp_types.from_py([t[1] for t in trips], bits)
+    b = apfp_types.from_py([t[2] for t in trips], bits)
+    got = apfp_types.to_py(model.apfp_mac(c, a, b), bits)
+    for i, (cc, aa, bb) in enumerate(trips):
+        assert got[i] == cc.mac(aa, bb), i
+
+
+def test_mul_powers_of_two():
+    bits = 512
+    prec = config.PRECISIONS[bits]
+    two = ref.PyApfp.from_float(2.0, prec)
+    half = ref.PyApfp.from_float(0.5, prec)
+    x = ref.PyApfp.from_float(1.0, prec)
+    assert run_binop(model.apfp_mul, [(two, half)], bits)[0] == x
+    got = run_binop(model.apfp_mul, [(two, two)], bits)[0]
+    assert got == ref.PyApfp.from_float(4.0, prec)
+
+
+def test_float_roundtrip_through_model():
+    bits = 512
+    prec = config.PRECISIONS[bits]
+    vals = [3.14159, -2.71828, 1e-30, -1e30, 0.1]
+    xs = [ref.PyApfp.from_float(v, prec) for v in vals]
+    ys = [ref.PyApfp.from_float(1.0, prec)] * len(vals)
+    got = run_binop(model.apfp_mul, list(zip(xs, ys)), bits)
+    for g, v in zip(got, vals):
+        assert abs(g.to_float() - v) <= abs(v) * 1e-15

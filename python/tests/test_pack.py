@@ -1,0 +1,59 @@
+"""Fig. 1 packed format: layout invariants + roundtrip (pins rust/src/pack)."""
+
+import random
+
+import pytest
+
+from compile import apfp_types, config
+from compile.kernels import ref
+
+from .conftest import random_apfp
+
+
+@pytest.mark.parametrize("bits", [512, 1024])
+def test_roundtrip(bits):
+    rng = random.Random(bits)
+    for _ in range(20):
+        v = random_apfp(rng, bits, exp_range=10**9)
+        words = apfp_types.pack_words(v, bits)
+        assert len(words) == bits // 64  # multiple of 512 bits (Fig. 1)
+        assert apfp_types.unpack_words(words, bits) == v
+
+
+@pytest.mark.parametrize("bits", [512, 1024])
+def test_zero_packs_canonically(bits):
+    z = ref.PyApfp.zero(config.PRECISIONS[bits])
+    words = apfp_types.pack_words(z, bits)
+    assert apfp_types.unpack_words(words, bits).is_zero()
+    assert all(w == 0 for w in words[1:])
+
+
+def test_sign_in_exponent_msb():
+    """The sign occupies bit 63 of the head word (the paper packs the sign
+    into a single bit of the exponent word)."""
+    prec = config.PRECISIONS[512]
+    m = (1 << (prec - 1)) | 12345
+    pos = ref.PyApfp(0, 42, m, prec)
+    neg = ref.PyApfp(1, 42, m, prec)
+    wp = apfp_types.pack_words(pos, 512)
+    wn = apfp_types.pack_words(neg, 512)
+    assert wn[0] == wp[0] | (1 << 63)
+    assert wn[1:] == wp[1:]
+
+
+def test_negative_exponent_two_complement():
+    prec = config.PRECISIONS[512]
+    m = 1 << (prec - 1)
+    v = ref.PyApfp(0, -1, m, prec)
+    w = apfp_types.pack_words(v, 512)
+    assert w[0] == (1 << 63) - 1  # 63-bit two's complement of -1, sign bit 0
+    assert apfp_types.unpack_words(w, 512) == v
+
+
+def test_mantissa_little_endian_tight_packing():
+    prec = config.PRECISIONS[512]
+    m = (1 << (prec - 1)) | 0xDEADBEEF
+    v = ref.PyApfp(0, 0, m, prec)
+    w = apfp_types.pack_words(v, 512)
+    assert w[1] & 0xFFFFFFFF == 0xDEADBEEF  # low mantissa word first
+    assert w[7] >> 63 == 1  # normalized MSB lands in the top packed bit

@@ -1,0 +1,164 @@
+"""Self-consistency of the exact PyApfp oracle (the semantic root of trust).
+
+PyApfp is validated against plain Python integer/fraction arithmetic so the
+rest of the stack can safely be pinned against it.
+"""
+
+import random
+
+import pytest
+from hypothesis import given, settings
+
+from compile import config
+from compile.kernels import ref
+
+from .conftest import apfp_strategy, random_apfp
+
+PREC = config.PRECISIONS[512]
+
+
+def exact_value(v: ref.PyApfp):
+    """Return the value as an exact pair (numerator, 2**denominator_exp)."""
+    s, e = v.to_exact()
+    return s, e
+
+
+def test_from_float_exact():
+    for x in [1.0, -1.0, 0.5, 3.141592653589793, 2**-50, -(2**60)]:
+        v = ref.PyApfp.from_float(x, PREC)
+        s, e = v.to_exact()
+        assert s * 2.0**e == x  # doubles embed exactly into 448-bit APFP
+
+
+def test_mul_matches_integer_arithmetic():
+    rng = random.Random(1)
+    for _ in range(50):
+        a = random_apfp(rng, 512)
+        b = random_apfp(rng, 512)
+        got = a.mul(b)
+        sa, ea = a.to_exact()
+        sb, eb = b.to_exact()
+        exact_num = sa * sb  # exact product, scale 2^(ea+eb)
+        want = ref.PyApfp.from_int_scaled(exact_num, ea + eb, PREC)
+        assert got == want
+
+
+@settings(max_examples=100, deadline=None)
+@given(apfp_strategy(512), apfp_strategy(512))
+def test_add_matches_integer_arithmetic(a, b):
+    got = a.add(b)
+    if a.is_zero() or b.is_zero():
+        assert got == (b if a.is_zero() else a)
+        return  # the ZERO_EXP sentinel would make the shift below astronomical
+    sa, ea = a.to_exact()
+    sb, eb = b.to_exact()
+    e = min(ea, eb)
+    total = (sa << (ea - e)) + (sb << (eb - e))
+    want = ref.PyApfp.from_int_scaled(total, e, PREC)
+    assert got == want
+
+
+def test_rndz_truncates_toward_zero():
+    """RNDZ: |result| <= |exact| always, and within one ulp."""
+    rng = random.Random(2)
+    for _ in range(50):
+        a = random_apfp(rng, 512)
+        b = random_apfp(rng, 512)
+        got = a.mul(b)
+        sa, ea = a.to_exact()
+        sb, eb = b.to_exact()
+        gm, ge = got.to_exact()
+        # |got|*2^ge <= |exact|*2^(ea+eb) < (|got|+1)*2^ge, compared at a
+        # common scale m = min of the two exponents
+        exact_mag = abs(sa * sb)
+        m = min(ge, ea + eb)
+        lhs = abs(gm) << (ge - m)
+        rhs = exact_mag << (ea + eb - m)
+        assert lhs <= rhs < lhs + (1 << (ge - m))
+
+
+def test_commutativity():
+    rng = random.Random(3)
+    for _ in range(25):
+        a = random_apfp(rng, 512)
+        b = random_apfp(rng, 512)
+        assert a.mul(b) == b.mul(a)
+        assert a.add(b) == b.add(a)
+
+
+def test_identity_elements():
+    rng = random.Random(4)
+    one = ref.PyApfp.from_float(1.0, PREC)
+    zero = ref.PyApfp.zero(PREC)
+    for _ in range(10):
+        a = random_apfp(rng, 512)
+        assert a.mul(one) == a
+        assert a.add(zero) == a
+        assert a.mul(zero).is_zero()
+
+
+def test_neg_involution():
+    rng = random.Random(5)
+    a = random_apfp(rng, 512)
+    assert a.neg().neg() == a
+    assert a.add(a.neg()).is_zero()
+
+
+def test_limb_roundtrip():
+    rng = random.Random(6)
+    for _ in range(10):
+        a = random_apfp(rng, 512)
+        limbs = a.mant_limb_list()
+        assert len(limbs) == 56
+        back = ref.PyApfp.from_limb_parts(a.sign, a.exp, limbs, PREC)
+        assert back == a
+
+
+def test_gemm_ref_against_naive():
+    """gemm_ref (sequential-K MACs) agrees with a naive loop at f64 scale."""
+    rng = random.Random(8)
+    n = 3
+    av = [[rng.uniform(-2, 2) for _ in range(n)] for _ in range(n)]
+    bv = [[rng.uniform(-2, 2) for _ in range(n)] for _ in range(n)]
+    a = [[ref.PyApfp.from_float(x, PREC) for x in row] for row in av]
+    b = [[ref.PyApfp.from_float(x, PREC) for x in row] for row in bv]
+    c = [[ref.PyApfp.zero(PREC) for _ in range(n)] for _ in range(n)]
+    out = ref.gemm_ref(a, b, c)
+    for i in range(n):
+        for j in range(n):
+            want = sum(av[i][k] * bv[k][j] for k in range(n))
+            assert abs(out[i][j].to_float() - want) < 1e-12
+
+
+def test_div_matches_integer_arithmetic():
+    rng = random.Random(21)
+    for _ in range(50):
+        a = random_apfp(rng, 512)
+        b = random_apfp(rng, 512)
+        got = a.div(b)
+        # exact check: got = trunc_p(a/b) means |got| <= |a/b| < |got|+ulp
+        gm, ge = got.to_exact()
+        sa, ea = a.to_exact()
+        sb, eb = b.to_exact()
+        # compare |gm| * 2^ge <= |sa/sb| * 2^(ea-eb)  as integers:
+        # |gm| * |sb| * 2^(ge) vs |sa| * 2^(ea-eb); align exponents
+        lhs, rhs, sh = abs(gm) * abs(sb), abs(sa), ge - (ea - eb)
+        if sh >= 0:
+            lhs <<= sh
+        else:
+            rhs <<= -sh
+        assert lhs <= rhs, "RNDZ must not overshoot"
+        ulp_side = (abs(gm) + 1) * abs(sb)
+        if sh >= 0:
+            ulp_side <<= sh
+        assert rhs < ulp_side, "must be within one ulp"
+
+
+def test_div_identities():
+    rng = random.Random(22)
+    one = ref.PyApfp.from_float(1.0, PREC)
+    for _ in range(20):
+        a = random_apfp(rng, 512)
+        assert a.div(one) == a
+        assert a.div(a) == one
+        assert ref.PyApfp.zero(PREC).div(a).is_zero()

@@ -1,0 +1,78 @@
+//! Ablation studies over the design choices DESIGN.md calls out.
+//!
+//!  A1 — tile size: the paper fixes 32x32 "balancing useless work on sizes
+//!       that are not a multiple of the tile size with the reduction in
+//!       required memory bandwidth" (§V-C).  Sweep T and watch the design
+//!       flip from memory-bound to compute-bound as the arithmetic
+//!       intensity T^2/2T = T/2 crosses the DDR roofline.
+//!  A2 — placement policy: Fig. 4's round-robin across banks vs packing
+//!       all CUs onto one bank (bandwidth collapse).
+//!  A3 — multiplier algorithm at higher precisions: schoolbook vs
+//!       Karatsuba vs Toom-3 (the paper's §II-A lineage), measured.
+
+use apfp::bench_util::{bench, fmt_duration, Table};
+use apfp::bigint;
+use apfp::hwmodel::DesignPoint;
+use apfp::sim::{dram, gemm_sim};
+use apfp::testkit::Rng;
+
+fn main() {
+    println!("== A1: GEMM tile-size ablation (8 CUs, 512-bit, n = 8192) ==\n");
+    let d = DesignPoint::gemm_512(8);
+    let mut t = Table::new(&["tile", "arith. intensity", "compute_s", "mem_s", "bound", "MMAC/s"]);
+    for tile in [4usize, 8, 16, 32, 64, 128] {
+        let pt = gemm_sim::simulate(&d, 8192, tile, tile);
+        t.row(&[
+            format!("{tile}x{tile}"),
+            format!("{:.1}", tile as f64 / 2.0),
+            format!("{:.2}", pt.compute_s),
+            format!("{:.2}", pt.mem_s),
+            if pt.mem_s > pt.compute_s { "memory".into() } else { "compute".to_string() },
+            format!("{:.0}", pt.mmacs / 1e6),
+        ]);
+    }
+    println!("{}", t.render());
+    let t4 = gemm_sim::simulate(&d, 8192, 4, 4);
+    let t32 = gemm_sim::simulate(&d, 8192, 32, 32);
+    assert!(t4.mem_s > t4.compute_s, "4x4 must be memory-bound");
+    assert!(t32.compute_s > t32.mem_s, "32x32 must be compute-bound (paper's choice)");
+
+    println!("\n== A2: placement policy (8 CUs) ==\n");
+    // Fig. 4 round-robin: 2 CUs per bank -> 9.6 GB/s each.
+    let rr = dram::per_cu_bandwidth(8);
+    // all-on-one-bank straw man: 8 CUs share 19.2 GB/s
+    let packed = apfp::hwmodel::u250::DDR_BANK_BW / 8.0;
+    println!("  round-robin (Fig. 4): {:.1} GB/s per CU", rr / 1e9);
+    println!("  single-bank packing:  {:.1} GB/s per CU ({}x worse)", packed / 1e9, (rr / packed) as u64);
+    assert!(rr >= 4.0 * packed);
+
+    println!("\n== A3: multiplier algorithm vs precision (measured, this host) ==\n");
+    let mut rng = Rng::from_seed(0xA31A);
+    let mut t = Table::new(&["bits", "schoolbook", "karatsuba(8)", "toom-3"]);
+    for limbs in [16usize, 32, 64, 128, 256] {
+        let a = rng.limbs(limbs);
+        let b = rng.limbs(limbs);
+        let mut out = vec![0u64; 2 * limbs];
+        let rs = bench("s", 50, 400, || {
+            bigint::mul_schoolbook(&a, &b, &mut out);
+            std::hint::black_box(&out);
+        });
+        let rk = bench("k", 50, 400, || {
+            bigint::mul_karatsuba(&a, &b, &mut out, 8);
+            std::hint::black_box(&out);
+        });
+        let rt = bench("t", 50, 400, || {
+            bigint::mul_toom3(&a, &b, &mut out);
+            std::hint::black_box(&out);
+        });
+        t.row(&[
+            (limbs * 64).to_string(),
+            fmt_duration(rs.median_s()),
+            fmt_duration(rk.median_s()),
+            fmt_duration(rt.median_s()),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("\n(the paper stops at Karatsuba: at its 448/960-bit operands the");
+    println!(" schoolbook/Karatsuba crossover has not been reached, matching GMP)");
+}

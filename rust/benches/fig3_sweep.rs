@@ -1,0 +1,75 @@
+//! Fig. 3 regeneration: the (MULT_BASE_BITS x ADD_BASE_BITS) design-space
+//! sweep of the 512-bit multiplier — frequency + CLB from the hardware
+//! model, with Pareto-efficient configurations marked as in the paper.
+//!
+//! As the *measured* counterpart of the sweep, the software Karatsuba's
+//! bottom-out threshold (the same knob, software edition) is benchmarked
+//! on this host across base widths.
+
+use apfp::bench_util::{bench, fmt_rate, Table};
+use apfp::bigint;
+use apfp::hwmodel::{resources, DesignPoint};
+use apfp::testkit::Rng;
+
+fn main() {
+    println!("== Fig. 3: 512-bit multiplier design-space sweep (modeled U250) ==\n");
+    let mult_bases = [18u32, 36, 72, 144, 288];
+    let add_bases = [32u32, 64, 128, 256, 512, 1024];
+
+    // collect all points, then mark the Pareto frontier (max freq, min CLB)
+    let mut points = Vec::new();
+    for &mb in &mult_bases {
+        for &ab in &add_bases {
+            let d = DesignPoint { bits: 512, compute_units: 1, mult_base_bits: mb, add_base_bits: ab, gemm: false };
+            let s = d.synthesize();
+            let clbs = resources::fig3_multiplier_clbs(448, mb, ab);
+            points.push((mb, ab, s.frequency_mhz, clbs, s.failure));
+        }
+    }
+    let pareto: Vec<bool> = points
+        .iter()
+        .map(|p| {
+            p.4.is_none()
+                && !points.iter().any(|q| {
+                    q.4.is_none() && q.2 >= p.2 && q.3 <= p.3 && (q.2 > p.2 || q.3 < p.3)
+                })
+        })
+        .collect();
+
+    let mut t = Table::new(&["mult_base", "add_base", "freq [MHz]", "CLBs", "status"]);
+    for (p, is_pareto) in points.iter().zip(&pareto) {
+        let status = match (&p.4, is_pareto) {
+            (Some(_), _) => "FAILS SYNTHESIS".to_string(),
+            (None, true) => "PARETO".to_string(),
+            (None, false) => "ok".to_string(),
+        };
+        t.row(&[p.0.to_string(), p.1.to_string(), format!("{:.0}", p.2), p.3.to_string(), status]);
+    }
+    println!("{}", t.render());
+
+    // paper's qualitative findings, asserted
+    let best = points.iter().zip(&pareto).filter(|(_, &p)| p).map(|(p, _)| p.0).collect::<Vec<_>>();
+    assert!(best.contains(&72) || best.contains(&36), "paper: 72/36-bit bottom-out is Pareto");
+    assert!(points.iter().filter(|p| p.0 == 288).all(|p| p.4.is_some()), "paper: 288 fails synthesis");
+
+    println!("\n== measured software analog: Karatsuba bottom-out sweep (this host) ==\n");
+    let mut rng = Rng::from_seed(0x51EE9);
+    let n = 64; // 4096-bit operands: deep enough recursion to matter
+    let a = rng.limbs(n);
+    let b = rng.limbs(n);
+    let mut t = Table::new(&["base [limbs]", "base [bits]", "time/mul", "rate"]);
+    for base in [1usize, 2, 4, 8, 16, 32, 64] {
+        let mut out = vec![0u64; 2 * n];
+        let r = bench(&format!("kara base {base}"), 20, 200, || {
+            bigint::mul_karatsuba(&a, &b, &mut out, base);
+            std::hint::black_box(&out);
+        });
+        t.row(&[
+            base.to_string(),
+            (base * 64).to_string(),
+            apfp::bench_util::fmt_duration(r.median_s()),
+            fmt_rate(r.throughput()),
+        ]);
+    }
+    println!("{}", t.render());
+}

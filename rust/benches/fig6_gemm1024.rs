@@ -1,0 +1,34 @@
+//! Fig. 6 regeneration: 1024-bit GEMM (960-bit mantissa), single compute
+//! unit (the paper's preliminary monolithic design, downclocked by
+//! congestion), against the 36-core Xeon node.
+
+use apfp::bench_util::Table;
+use apfp::hwmodel::DesignPoint;
+use apfp::sim::{cpu_ref, gemm_sim};
+
+fn main() {
+    println!("== Fig. 6: C += A*B, 1024-bit numbers (960-bit mantissa) ==\n");
+    let d = DesignPoint::gemm_1024(1);
+    let s = d.synthesize();
+    println!(
+        "design: 1 CU @ {:.0} MHz, {:.1}% CLBs (paper: 212 MHz, 29.8% — congestion-downclocked)\n",
+        s.frequency_mhz,
+        s.clb_frac * 100.0
+    );
+    let mut t = Table::new(&["n", "FPGA 1 CU [MMAC/s]", "1 node [MMAC/s]", "2 nodes", "4 nodes"]);
+    for n in [256usize, 512, 1024, 2048, 4096, 8192] {
+        let pt = gemm_sim::simulate(&d, n, 32, 32);
+        t.row(&[
+            n.to_string(),
+            format!("{:.0}", pt.mmacs / 1e6),
+            format!("{:.0}", cpu_ref::gemm_mmacs(1024, 1, n) / 1e6),
+            format!("{:.0}", cpu_ref::gemm_mmacs(1024, 2, n) / 1e6),
+            format!("{:.0}", cpu_ref::gemm_mmacs(1024, 4, n) / 1e6),
+        ]);
+    }
+    println!("{}", t.render());
+    let peak = gemm_sim::peak(&d, 32).mmacs / 1e6;
+    let node = cpu_ref::gemm_mmacs(1024, 1, 8192) / 1e6;
+    println!("\npeak {peak:.0} MMAC/s vs 36-core node {node:.0} MMAC/s (paper: 158 vs ~70)");
+    assert!(peak > node, "paper: the single 1024-bit CU exceeds the Xeon node");
+}

@@ -1,0 +1,83 @@
+//! Hot-path microbenchmarks — the profiling targets of the §Perf pass
+//! (EXPERIMENTS.md).  Everything the GEMM datapath touches per tile is
+//! timed in isolation: softfloat ops (baseline arithmetic), bigint
+//! multiply kernels, plane packing, tile extraction.
+
+use apfp::bench_util::{bench, fmt_rate, Table};
+use apfp::bigint;
+use apfp::coordinator::Matrix;
+use apfp::pack::PlaneBatch;
+use apfp::softfloat::ApFloat;
+use apfp::testkit::Rng;
+
+fn rand_ap(rng: &mut Rng, prec: u32) -> ApFloat {
+    let n = (prec / 64) as usize;
+    let mut mant = rng.limbs(n);
+    mant[n - 1] |= 1 << 63;
+    ApFloat::from_parts(rng.bool(), rng.range_i64(-40, 40), mant, prec)
+}
+
+fn main() {
+    let mut rng = Rng::from_seed(7);
+    let mut t = Table::new(&["op", "median", "rate"]);
+
+    for prec in [448u32, 960] {
+        let a = rand_ap(&mut rng, prec);
+        let b = rand_ap(&mut rng, prec);
+        let mut acc = rand_ap(&mut rng, prec);
+        let r = bench(&format!("softfloat mul {prec}"), 1000, 20000, || {
+            std::hint::black_box(a.mul(&b));
+        });
+        t.row(&[format!("softfloat mul ({prec}b)"), apfp::bench_util::fmt_duration(r.median_s()), fmt_rate(r.throughput())]);
+        let r = bench(&format!("softfloat add {prec}"), 1000, 20000, || {
+            std::hint::black_box(a.add(&b));
+        });
+        t.row(&[format!("softfloat add ({prec}b)"), apfp::bench_util::fmt_duration(r.median_s()), fmt_rate(r.throughput())]);
+        let r = bench(&format!("softfloat mac {prec}"), 1000, 20000, || {
+            acc = acc.mac(&a, &b);
+            if acc.exp() > 1 << 30 {
+                acc = a.clone();
+            }
+        });
+        t.row(&[format!("softfloat mac ({prec}b)"), apfp::bench_util::fmt_duration(r.median_s()), fmt_rate(r.throughput())]);
+    }
+
+    // bigint multiply kernels at the two paper widths
+    for limbs in [7usize, 15, 32, 64] {
+        let a = rng.limbs(limbs);
+        let b = rng.limbs(limbs);
+        let mut out = vec![0u64; 2 * limbs];
+        let r = bench(&format!("schoolbook {limbs}"), 500, 5000, || {
+            bigint::mul_schoolbook(&a, &b, &mut out);
+            std::hint::black_box(&out);
+        });
+        t.row(&[format!("schoolbook mul ({} bits)", limbs * 64), apfp::bench_util::fmt_duration(r.median_s()), fmt_rate(r.throughput())]);
+        if limbs >= 16 {
+            let r = bench(&format!("karatsuba {limbs}"), 500, 5000, || {
+                bigint::mul_karatsuba(&a, &b, &mut out, 8);
+                std::hint::black_box(&out);
+            });
+            t.row(&[format!("karatsuba mul ({} bits)", limbs * 64), apfp::bench_util::fmt_duration(r.median_s()), fmt_rate(r.throughput())]);
+        }
+    }
+
+    // marshaling: plane pack/unpack and tile extraction
+    let vals: Vec<ApFloat> = (0..256).map(|_| rand_ap(&mut rng, 448)).collect();
+    let r = bench("plane pack 256", 50, 2000, || {
+        std::hint::black_box(PlaneBatch::from_slice(&vals, 448));
+    });
+    t.row(&["plane pack (256 values)".into(), apfp::bench_util::fmt_duration(r.median_s()), fmt_rate(r.throughput() * 256.0)]);
+    let planes = PlaneBatch::from_slice(&vals, 448);
+    let r = bench("plane unpack 256", 50, 2000, || {
+        std::hint::black_box(planes.to_vec());
+    });
+    t.row(&["plane unpack (256 values)".into(), apfp::bench_util::fmt_duration(r.median_s()), fmt_rate(r.throughput() * 256.0)]);
+
+    let m = Matrix::random(64, 64, 448, 3, 40);
+    let r = bench("tile extract 16x16", 50, 2000, || {
+        std::hint::black_box(m.extract_tile(8, 8, 16, 16));
+    });
+    t.row(&["tile extract (16x16)".into(), apfp::bench_util::fmt_duration(r.median_s()), fmt_rate(r.throughput())]);
+
+    println!("== hot-path microbenchmarks ==\n\n{}", t.render());
+}

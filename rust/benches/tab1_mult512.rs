@@ -1,0 +1,41 @@
+//! Tab. I regeneration: the 512-bit multiplier microbenchmark.
+//!
+//! Columns come from three sources, all reported:
+//!   modeled  — the hwmodel/sim U250 rows (the paper's FPGA numbers);
+//!   paper    — the reported 36-core MPFR reference;
+//!   measured — this host's softfloat throughput, single core and all
+//!              cores (our honest MPFR stand-in, §V-B methodology).
+
+use apfp::baseline;
+use apfp::bench_util::{fmt_rate, Table};
+use apfp::sim::mult_sim;
+
+fn main() {
+    let bits = 512;
+    let prec = 448;
+    println!("== Tab. I: 512-bit (448-bit mantissa) multiplier ==\n");
+    let mut t = Table::new(&["Configuration", "Freq.", "CLBs", "DSPs", "Throughput", "Speedup", "#Cores"]);
+    for r in mult_sim::table(bits) {
+        t.row(&[
+            r.label.clone(),
+            if r.frequency_mhz > 0.0 { format!("{:.0} MHz", r.frequency_mhz) } else { "-".into() },
+            if r.clb_pct > 0.0 { format!("{:.1}%", r.clb_pct) } else { "-".into() },
+            if r.dsp_pct > 0.0 { format!("{:.1}%", r.dsp_pct) } else { "-".into() },
+            format!("{:.0} MOp/s", r.throughput_mops),
+            format!("{:.1}x", r.speedup_vs_node),
+            format!("{:.1}x", r.equivalent_cores),
+        ]);
+    }
+    println!("{}", t.render());
+
+    println!("\nmeasured softfloat multiply on this host (L1-resident working set):");
+    let one = baseline::measure_mul_throughput(prec, 300_000);
+    println!("  1 core:  {}", fmt_rate(one));
+    let threads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    let all = baseline::measure_mul_throughput_threaded(prec, 300_000, threads);
+    println!("  {threads} cores: {}", fmt_rate(all));
+    println!(
+        "  modeled 16-CU FPGA / measured host-total ratio: {:.1}x",
+        mult_sim::fpga_row(bits, 16).throughput_mops * 1e6 / all
+    );
+}

@@ -1,0 +1,35 @@
+//! Tab. II regeneration: the 1024-bit multiplier microbenchmark
+//! (see tab1_mult512.rs for the three reporting sources).
+
+use apfp::baseline;
+use apfp::bench_util::{fmt_rate, Table};
+use apfp::sim::mult_sim;
+
+fn main() {
+    let bits = 1024;
+    let prec = 960;
+    println!("== Tab. II: 1024-bit (960-bit mantissa) multiplier ==\n");
+    let mut t = Table::new(&["Configuration", "Freq.", "CLBs", "DSPs", "Throughput", "Speedup", "#Cores"]);
+    for r in mult_sim::table(bits) {
+        t.row(&[
+            r.label.clone(),
+            if r.frequency_mhz > 0.0 { format!("{:.0} MHz", r.frequency_mhz) } else { "-".into() },
+            if r.clb_pct > 0.0 { format!("{:.1}%", r.clb_pct) } else { "-".into() },
+            if r.dsp_pct > 0.0 { format!("{:.1}%", r.dsp_pct) } else { "-".into() },
+            format!("{:.0} MOp/s", r.throughput_mops),
+            format!("{:.1}x", r.speedup_vs_node),
+            format!("{:.1}x", r.equivalent_cores),
+        ]);
+    }
+    println!("{}", t.render());
+
+    println!("\nmeasured softfloat multiply on this host:");
+    let one = baseline::measure_mul_throughput(prec, 100_000);
+    println!("  1 core:  {}", fmt_rate(one));
+    let p448 = baseline::measure_mul_throughput(448, 100_000);
+    println!(
+        "  512->1024-bit slowdown: {:.2}x (paper's MPFR slows {:.2}x: 490 -> 227 MOp/s)",
+        p448 / one,
+        490.0 / 227.0
+    );
+}

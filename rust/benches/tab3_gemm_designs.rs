@@ -1,0 +1,30 @@
+//! Tab. III regeneration: the evaluated 512-bit GEMM design points
+//! (frequency, CLB/DSP utilization, peak MMAC/s over the Fig. 5 n-range).
+
+use apfp::bench_util::Table;
+use apfp::hwmodel::DesignPoint;
+use apfp::sim::gemm_sim;
+
+fn main() {
+    println!("== Tab. III: overview of 512-bit GEMM designs ==\n");
+    let mut t = Table::new(&["Precision", "CUs", "Frequency", "CLBs", "DSPs", "Max. Performance"]);
+    let paper = [(1usize, 322.0f64), (2, 540.0), (4, 1049.0), (8, 2002.0)];
+    for (cus, paper_mmacs) in paper {
+        let d = DesignPoint::gemm_512(cus);
+        let s = d.synthesize();
+        assert!(s.failure.is_none(), "design {cus} CUs must fit: {:?}", s.failure);
+        let peak = gemm_sim::peak(&d, 32);
+        let got = peak.mmacs / 1e6;
+        t.row(&[
+            "512 (448)".into(),
+            cus.to_string(),
+            format!("{:.0} MHz", s.frequency_mhz),
+            format!("{:.1}%", s.clb_frac * 100.0),
+            format!("{:.1}%", s.dsp_frac * 100.0),
+            format!("{got:.0} MMAC/s (paper {paper_mmacs:.0})"),
+        ]);
+        assert!((got - paper_mmacs).abs() / paper_mmacs < 0.20, "CUs={cus}: {got:.0} vs paper {paper_mmacs}");
+    }
+    println!("{}", t.render());
+    println!("\nall four design points within 20% of the paper's reported peaks");
+}

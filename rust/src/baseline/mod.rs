@@ -1,0 +1,168 @@
+//! Software CPU baseline — the role MPFR + Elemental play in the paper.
+//!
+//! * [`gemm_serial`] / [`gemm_threaded`] — blocked GEMM over `softfloat`
+//!   scalars; the threaded version partitions output rows across cores the
+//!   way Elemental's MPI ranks partition the distributed matrix.
+//! * [`measure_mul_throughput`] / [`measure_mac_throughput`] — the §V-B
+//!   microbenchmark on this host: a hot loop over an L1-resident working
+//!   set, giving the measured ops/s the benches compare the accelerator
+//!   model against.
+
+use crate::coordinator::Matrix;
+use crate::softfloat::ApFloat;
+
+/// Reference GEMM: C += A*B, sequential K accumulation per element —
+/// the exact operation order of the accelerator datapath, so results are
+/// bit-comparable with the device output.
+pub fn gemm_serial(a: &Matrix, b: &Matrix, c: &Matrix) -> Matrix {
+    let mut out = c.clone();
+    for i in 0..a.rows() {
+        for j in 0..b.cols() {
+            let mut acc = c.get(i, j).clone();
+            for k in 0..a.cols() {
+                acc = acc.mac(a.get(i, k), b.get(k, j));
+            }
+            out.set(i, j, acc);
+        }
+    }
+    out
+}
+
+/// Multithreaded blocked GEMM (row bands across `threads` cores).
+pub fn gemm_threaded(a: &Matrix, b: &Matrix, c: &Matrix, threads: usize) -> Matrix {
+    assert_eq!(a.cols(), b.rows());
+    let n = a.rows();
+    let threads = threads.clamp(1, n.max(1));
+    let band = n.div_ceil(threads);
+    let mut out = c.clone();
+
+    // compute bands in parallel, collect rows, then write back
+    let results: Vec<Vec<(usize, Vec<ApFloat>)>> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let (a, b, c) = (&*a, &*b, &*c);
+            handles.push(scope.spawn(move || {
+                let start = (t * band).min(n);
+                let end = ((t + 1) * band).min(n);
+                let mut rows = Vec::with_capacity(end - start);
+                for i in start..end {
+                    let mut row = Vec::with_capacity(b.cols());
+                    for j in 0..b.cols() {
+                        let mut acc = c.get(i, j).clone();
+                        for k in 0..a.cols() {
+                            acc = acc.mac(a.get(i, k), b.get(k, j));
+                        }
+                        row.push(acc);
+                    }
+                    rows.push((i, row));
+                }
+                rows
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("baseline worker")).collect()
+    });
+    for rows in results {
+        for (i, row) in rows {
+            for (j, v) in row.into_iter().enumerate() {
+                out.set(i, j, v);
+            }
+        }
+    }
+    out
+}
+
+/// Measured multiplication throughput (ops/s) of one core on this host,
+/// L1-resident operands (the paper's §V-B CPU methodology).
+pub fn measure_mul_throughput(prec: u32, iters: usize) -> f64 {
+    let set = working_set(prec, 64);
+    let t0 = std::time::Instant::now();
+    let mut sink = set[0].clone();
+    for i in 0..iters {
+        let a = &set[i % set.len()];
+        let b = &set[(i * 7 + 3) % set.len()];
+        sink = a.mul(b);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    std::hint::black_box(&sink);
+    iters as f64 / dt
+}
+
+/// Measured multiply-add throughput (MAC/s) of one core on this host.
+pub fn measure_mac_throughput(prec: u32, iters: usize) -> f64 {
+    let set = working_set(prec, 64);
+    let t0 = std::time::Instant::now();
+    let mut acc = set[0].clone();
+    for i in 0..iters {
+        let a = &set[i % set.len()];
+        let b = &set[(i * 7 + 3) % set.len()];
+        acc = acc.mac(a, b);
+        if acc.is_zero() || acc.exp() > 1 << 40 {
+            acc = set[1].clone(); // keep exponents bounded in the hot loop
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    std::hint::black_box(&acc);
+    iters as f64 / dt
+}
+
+/// Multithreaded mul throughput (ops/s aggregated over `threads` cores).
+pub fn measure_mul_throughput_threaded(prec: u32, iters: usize, threads: usize) -> f64 {
+    let per: Vec<f64> = std::thread::scope(|scope| {
+        (0..threads)
+            .map(|_| scope.spawn(move || measure_mul_throughput(prec, iters)))
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().expect("bench thread"))
+            .collect()
+    });
+    per.iter().sum()
+}
+
+fn working_set(prec: u32, n: usize) -> Vec<ApFloat> {
+    let mut rng = crate::testkit::Rng::from_seed(0xBEEF);
+    (0..n)
+        .map(|_| {
+            let limbs = (prec / 64) as usize;
+            let mut mant = rng.limbs(limbs);
+            mant[limbs - 1] |= 1 << 63;
+            ApFloat::from_parts(rng.bool(), rng.range_i64(-30, 30), mant, prec)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threaded_matches_serial_bitwise() {
+        let a = Matrix::random(13, 9, 448, 1, 20);
+        let b = Matrix::random(9, 11, 448, 2, 20);
+        let c = Matrix::random(13, 11, 448, 3, 20);
+        let serial = gemm_serial(&a, &b, &c);
+        for threads in [1, 2, 4, 7] {
+            assert_eq!(gemm_threaded(&a, &b, &c, threads), serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn gemm_identity() {
+        let prec = 448;
+        let n = 5;
+        let a = Matrix::random(n, n, prec, 9, 10);
+        let eye = Matrix::from_fn(n, n, prec, |i, j| {
+            if i == j { ApFloat::from_u64(1, prec) } else { ApFloat::zero(prec) }
+        });
+        let zero = Matrix::zeros(n, n, prec);
+        assert_eq!(gemm_serial(&a, &eye, &zero), a);
+        assert_eq!(gemm_serial(&eye, &a, &zero), a);
+    }
+
+    #[test]
+    fn throughput_measure_is_positive() {
+        let ops = measure_mul_throughput(448, 2_000);
+        assert!(ops > 1000.0, "{ops} ops/s looks wrong");
+        let macs = measure_mac_throughput(448, 2_000);
+        assert!(macs > 1000.0);
+    }
+}

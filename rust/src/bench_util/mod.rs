@@ -1,0 +1,157 @@
+//! From-scratch micro-benchmark harness + table rendering (criterion is
+//! unavailable offline).
+//!
+//! `bench()` warms up, runs timed samples, and reports median/mean/min —
+//! enough statistics for the paper-table regeneration benches, with the
+//! whole harness under our control (no global state, deterministic sample
+//! counts).
+
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>, // seconds per iteration
+}
+
+impl BenchResult {
+    pub fn median_s(&self) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s[s.len() / 2]
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn min_s(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    /// iterations/second at the median sample.
+    pub fn throughput(&self) -> f64 {
+        1.0 / self.median_s()
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} median {:>12} mean {:>12} min {:>12}",
+            self.name,
+            fmt_duration(self.median_s()),
+            fmt_duration(self.mean_s()),
+            fmt_duration(self.min_s()),
+        )
+    }
+}
+
+/// Time `f` (one logical iteration per call): `warmup` unmeasured calls,
+/// then `samples` measured ones.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), samples: out }
+}
+
+pub fn fmt_duration(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+pub fn fmt_rate(per_sec: f64) -> String {
+    if per_sec >= 1e9 {
+        format!("{:.2} G/s", per_sec / 1e9)
+    } else if per_sec >= 1e6 {
+        format!("{:.1} M/s", per_sec / 1e6)
+    } else if per_sec >= 1e3 {
+        format!("{:.1} k/s", per_sec / 1e3)
+    } else {
+        format!("{per_sec:.1} /s")
+    }
+}
+
+/// Minimal fixed-width table printer for the paper-table benches.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let sep = widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  ");
+        let mut out = vec![line(&self.header), sep];
+        out.extend(self.rows.iter().map(|r| line(r)));
+        out.join("\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let r = bench("noop", 2, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(r.samples.len(), 5);
+        assert!(r.median_s() >= 0.0);
+        assert!(r.min_s() <= r.mean_s() * 1.0001);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert!(fmt_duration(2.5e-9).ends_with("ns"));
+        assert!(fmt_duration(2.5e-5).ends_with("us"));
+        assert!(fmt_duration(2.5e-2).ends_with("ms"));
+        assert!(fmt_duration(2.5).ends_with('s'));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["a", "bbbb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.row(&["333".into(), "4".into()]);
+        let r = t.render();
+        assert_eq!(r.lines().count(), 4);
+        let widths: Vec<usize> = r.lines().map(|l| l.len()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]));
+    }
+}

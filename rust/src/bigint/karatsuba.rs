@@ -1,0 +1,205 @@
+//! Recursive Karatsuba multiplication — the software mirror of the paper's
+//! §II-A decomposition (Lst. 1).
+//!
+//! A single recursion step on 2n-limb operands a = a0 + B·a1, b = b0 + B·b1
+//! (B = 2^(64n)) computes, exactly as the paper writes it:
+//!
+//! ```text
+//!     c0 = a0·b0
+//!     c2 = a1·b1
+//!     t  = |a1 - a0| · |b1 - b0|
+//!     s  = sign[(a1 - a0)(b1 - b0)]
+//!     c1 = c0 + c2 - (-1)^s · t
+//!     c  = c0 + B·c1 + B²·c2
+//! ```
+//!
+//! The sign bit `s` is tracked explicitly so that all three
+//! sub-multiplications stay at n limbs — the same trick the paper uses to
+//! keep its FPGA multipliers at half width (in the JAX/Pallas kernel we use
+//! the carry-save (a0+a1)(b0+b1) variant instead; see DESIGN.md
+//! §Hardware-Adaptation for why each substrate gets its own variant).
+//!
+//! The recursion bottoms out on [`super::mul_schoolbook`] below
+//! `base_limbs`, the software analog of `APFP_MULT_BASE_BITS`.
+
+use super::{add_assign, add_limb, cmp, mul_schoolbook, sub_assign};
+use std::cmp::Ordering;
+
+/// Limb count at/above which `mul_auto` prefers Karatsuba.  Measured on
+/// this host (EXPERIMENTS.md §Perf P3): the crossover sits at 32 limbs
+/// (2048 bits), matching GMP's `MUL_TOOM22_THRESHOLD` ballpark on x86-64.
+/// Both paper widths (7 / 15 limbs) therefore use the schoolbook kernel,
+/// exactly as MPFR does at these sizes.
+pub const KARATSUBA_THRESHOLD: usize = 32;
+
+/// out = a * b with recursive Karatsuba bottoming out at `base_limbs`.
+/// Requires a.len() == b.len() and out.len() == 2 * a.len().
+///
+/// One scratch buffer is allocated at the top and partitioned down the
+/// recursion (§Perf P2 in EXPERIMENTS.md: per-level `Vec` allocations made
+/// the recursion slower than schoolbook at every practical width).
+pub fn mul_karatsuba(a: &[u64], b: &[u64], out: &mut [u64], base_limbs: usize) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(out.len(), 2 * a.len());
+    // scratch need: S(n) = 3n + 1 + S(n/2)  =>  < 7n; round up generously
+    let mut scratch = vec![0u64; 8 * a.len() + 8];
+    kara_rec(a, b, out, &mut scratch, base_limbs);
+}
+
+/// Recursive step writing into `out`, using (a prefix of) `scratch`.
+fn kara_rec(a: &[u64], b: &[u64], out: &mut [u64], scratch: &mut [u64], base_limbs: usize) {
+    let n = a.len();
+    // Odd splits complicate the |a1-a0| step; recurse only on even sizes.
+    if n <= base_limbs.max(1) || n % 2 != 0 {
+        mul_schoolbook(a, b, out);
+        return;
+    }
+    let h = n / 2;
+    let (a0, a1) = a.split_at(h);
+    let (b0, b1) = b.split_at(h);
+
+    // scratch layout: [da: h | db: h | t: n | c1: n+1 | child scratch]
+    let (da, rest) = scratch.split_at_mut(h);
+    let (db, rest) = rest.split_at_mut(h);
+    let (t, rest) = rest.split_at_mut(n);
+    let (c1, child) = rest.split_at_mut(n + 1);
+
+    // c0 = a0*b0, c2 = a1*b1 — straight into the (disjoint) halves of the
+    // output buffer; the recombination then reads them back as c0 + B^2 c2.
+    {
+        let (lo, hi) = out.split_at_mut(n);
+        kara_rec(a0, b0, lo, child, base_limbs);
+        kara_rec(a1, b1, hi, child, base_limbs);
+    }
+
+    // |a1 - a0| and |b1 - b0| with explicit sign tracking (paper's `s`).
+    let sa = abs_diff(a1, a0, da);
+    let sb = abs_diff(b1, b0, db);
+    let s_negative = sa != sb; // sign of (a1-a0)(b1-b0)
+    kara_rec(da, db, t, child, base_limbs);
+
+    // c1 = c0 + c2 -+ t, built in n+1 limbs (the paper's (2n+2)-bit c1).
+    c1[..n].copy_from_slice(&out[..n]);
+    c1[n] = 0;
+    let carry = add_assign(&mut c1[..n], &out[n..]);
+    if carry {
+        add_limb(&mut c1[n..], 1);
+    }
+    if s_negative {
+        // (a1-a0)(b1-b0) < 0  =>  c1 = c0 + c2 + t
+        let carry = add_assign(&mut c1[..n], t);
+        if carry {
+            add_limb(&mut c1[n..], 1);
+        }
+    } else {
+        // c1 = c0 + c2 - t; never underflows (c1 = a0*b1 + a1*b0 >= 0)
+        let borrow = sub_assign(&mut c1[..n], t);
+        if borrow {
+            let under = sub_limb(&mut c1[n..], 1);
+            debug_assert!(!under, "karatsuba middle term underflow");
+        }
+    }
+
+    // c = (c0 + B^2 c2, already in out) + B*c1
+    let carry = add_assign(&mut out[h..h + n + 1], c1);
+    if carry {
+        let over = add_limb(&mut out[h + n + 1..], 1);
+        debug_assert!(!over, "karatsuba recombination overflow");
+    }
+}
+
+use super::sub_limb;
+
+/// out = |x - y|; returns true iff x < y (the tracked sign bit).
+fn abs_diff(x: &[u64], y: &[u64], out: &mut [u64]) -> bool {
+    match cmp(x, y) {
+        Ordering::Less => {
+            out.copy_from_slice(y);
+            let borrow = sub_assign(out, x);
+            debug_assert!(!borrow);
+            true
+        }
+        _ => {
+            out.copy_from_slice(x);
+            let borrow = sub_assign(out, y);
+            debug_assert!(!borrow);
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    fn check_vs_schoolbook(n: usize, base: usize, cases: u64) {
+        testkit::check(cases, |rng| {
+            let a = rng.limbs(n);
+            let b = rng.limbs(n);
+            let mut want = vec![0u64; 2 * n];
+            let mut got = vec![0u64; 2 * n];
+            mul_schoolbook(&a, &b, &mut want);
+            mul_karatsuba(&a, &b, &mut got, base);
+            assert_eq!(got, want, "n={n} base={base}");
+        });
+    }
+
+    #[test]
+    fn matches_schoolbook_power_of_two_sizes() {
+        for n in [2, 4, 8, 16, 32] {
+            check_vs_schoolbook(n, 1, 20);
+        }
+    }
+
+    #[test]
+    fn matches_schoolbook_odd_and_mixed_sizes() {
+        for n in [3, 6, 7, 10, 14, 24] {
+            check_vs_schoolbook(n, 2, 20);
+        }
+    }
+
+    #[test]
+    fn base_width_sweep() {
+        // Every bottom-out threshold must give identical results — the
+        // software version of the paper's Fig. 3 MULT_BASE_BITS sweep.
+        for base in [1, 2, 4, 8, 16] {
+            check_vs_schoolbook(16, base, 10);
+        }
+    }
+
+    #[test]
+    fn extreme_operands() {
+        let n = 8;
+        for (a, b) in [
+            (vec![u64::MAX; n], vec![u64::MAX; n]),
+            (vec![0u64; n], vec![u64::MAX; n]),
+            ({ let mut v = vec![0u64; n]; v[0] = 1; v }, vec![u64::MAX; n]),
+            ({ let mut v = vec![0u64; n]; v[n - 1] = u64::MAX; v },
+             { let mut v = vec![0u64; n]; v[n - 1] = u64::MAX; v }),
+        ] {
+            let mut want = vec![0u64; 2 * n];
+            let mut got = vec![0u64; 2 * n];
+            mul_schoolbook(&a, &b, &mut want);
+            mul_karatsuba(&a, &b, &mut got, 2);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn sign_tracking_both_branches() {
+        // force a1 < a0 (negative diff) against b1 > b0 and vice versa
+        let a = vec![u64::MAX, u64::MAX, 1, 0]; // a1 << a0
+        let b = vec![1, 0, u64::MAX, u64::MAX]; // b1 >> b0
+        let mut want = vec![0u64; 8];
+        let mut got = vec![0u64; 8];
+        mul_schoolbook(&a, &b, &mut want);
+        mul_karatsuba(&a, &b, &mut got, 2);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn deep_recursion() {
+        check_vs_schoolbook(64, 2, 5); // 5 levels of decomposition
+    }
+}

@@ -1,0 +1,482 @@
+//! Fixed-width unsigned big-integer arithmetic on little-endian `u64` limbs.
+//!
+//! This is the software substrate the APFP float library (`softfloat`) is
+//! built on — the role GMP's `mpn` layer plays under MPFR in the paper's CPU
+//! baseline.  Limb vectors are little-endian (`a[0]` least significant) and
+//! most operations take fixed-width slices.
+//!
+//! Multiplication follows GMP's strategy: schoolbook (the `MULX`/`ADCX`
+//! kernel a Broadwell Xeon runs, here expressed as `u128`
+//! multiply-accumulate) below a threshold, and the recursive Karatsuba
+//! decomposition of the paper's §II-A above it (see [`karatsuba`]).
+
+pub mod karatsuba;
+pub mod toom3;
+
+use std::cmp::Ordering;
+
+pub use karatsuba::{mul_karatsuba, KARATSUBA_THRESHOLD};
+pub use toom3::mul_toom3;
+
+/// a += b (equal lengths); returns the carry out of the top limb.
+pub fn add_assign(a: &mut [u64], b: &[u64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut carry = false;
+    for (x, &y) in a.iter_mut().zip(b.iter()) {
+        let (s1, c1) = x.overflowing_add(y);
+        let (s2, c2) = s1.overflowing_add(carry as u64);
+        *x = s2;
+        carry = c1 | c2;
+    }
+    carry
+}
+
+/// a += v (single limb); returns the carry out of the top limb.
+pub fn add_limb(a: &mut [u64], v: u64) -> bool {
+    let mut carry = v;
+    for x in a.iter_mut() {
+        if carry == 0 {
+            return false;
+        }
+        let (s, c) = x.overflowing_add(carry);
+        *x = s;
+        carry = c as u64;
+    }
+    carry != 0
+}
+
+/// a -= b (equal lengths); returns the borrow out of the top limb.
+pub fn sub_assign(a: &mut [u64], b: &[u64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut borrow = false;
+    for (x, &y) in a.iter_mut().zip(b.iter()) {
+        let (d1, b1) = x.overflowing_sub(y);
+        let (d2, b2) = d1.overflowing_sub(borrow as u64);
+        *x = d2;
+        borrow = b1 | b2;
+    }
+    borrow
+}
+
+/// a -= v (single limb); returns the borrow out of the top limb.
+pub fn sub_limb(a: &mut [u64], v: u64) -> bool {
+    let mut borrow = v;
+    for x in a.iter_mut() {
+        if borrow == 0 {
+            return false;
+        }
+        let (d, b) = x.overflowing_sub(borrow);
+        *x = d;
+        borrow = b as u64;
+    }
+    borrow != 0
+}
+
+/// Lexicographic magnitude comparison of equal-length limb vectors.
+pub fn cmp(a: &[u64], b: &[u64]) -> Ordering {
+    debug_assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().rev().zip(b.iter().rev()) {
+        match x.cmp(y) {
+            Ordering::Equal => continue,
+            ord => return ord,
+        }
+    }
+    Ordering::Equal
+}
+
+pub fn is_zero(a: &[u64]) -> bool {
+    a.iter().all(|&x| x == 0)
+}
+
+/// Number of significant bits (0 for the zero vector) — the LZC circuit of
+/// the paper's adder, software edition.
+pub fn bit_length(a: &[u64]) -> usize {
+    for (i, &x) in a.iter().enumerate().rev() {
+        if x != 0 {
+            return 64 * i + (64 - x.leading_zeros() as usize);
+        }
+    }
+    0
+}
+
+/// Read bit `i` (0 = LSB).
+pub fn get_bit(a: &[u64], i: usize) -> bool {
+    let (q, r) = (i / 64, i % 64);
+    q < a.len() && (a[q] >> r) & 1 == 1
+}
+
+/// out = a << s, truncated to `out.len()` limbs (bits shifted beyond the top
+/// are dropped, low bits fill with zero).  `out` may alias nothing.
+pub fn shl(a: &[u64], s: usize, out: &mut [u64]) {
+    let (q, r) = (s / 64, s % 64);
+    for i in (0..out.len()).rev() {
+        let lo = if i >= q && i - q < a.len() { a[i - q] } else { 0 };
+        let lo2 = if i >= q + 1 && i - q - 1 < a.len() { a[i - q - 1] } else { 0 };
+        out[i] = if r == 0 { lo } else { (lo << r) | (lo2 >> (64 - r)) };
+    }
+}
+
+/// out = a >> s (bits shifted below bit 0 are dropped).
+pub fn shr(a: &[u64], s: usize, out: &mut [u64]) {
+    let (q, r) = (s / 64, s % 64);
+    for i in 0..out.len() {
+        let lo = if i + q < a.len() { a[i + q] } else { 0 };
+        let hi = if i + q + 1 < a.len() { a[i + q + 1] } else { 0 };
+        out[i] = if r == 0 { lo } else { (lo >> r) | (hi << (64 - r)) };
+    }
+}
+
+/// True iff any bit of `a` strictly below position `s` is set — the sticky
+/// signal for RNDZ subtraction correction (DESIGN.md §5).
+pub fn sticky_below(a: &[u64], s: usize) -> bool {
+    let (q, r) = (s / 64, s % 64);
+    for &x in a.iter().take(q.min(a.len())) {
+        if x != 0 {
+            return true;
+        }
+    }
+    if r > 0 && q < a.len() && a[q] & ((1u64 << r) - 1) != 0 {
+        return true;
+    }
+    false
+}
+
+/// out = a * b, schoolbook (out.len() == a.len() + b.len()).
+///
+/// The inner step is a 64x64->128 multiply with carry chains — exactly the
+/// MULX + ADCX/ADOX instruction mix the paper credits the Broadwell Xeon
+/// baseline with (§V, Related Work), which LLVM emits for this u128 code.
+pub fn mul_schoolbook(a: &[u64], b: &[u64], out: &mut [u64]) {
+    debug_assert_eq!(out.len(), a.len() + b.len());
+    out.fill(0);
+    for (i, &x) in a.iter().enumerate() {
+        if x == 0 {
+            continue;
+        }
+        let mut carry: u64 = 0;
+        for (j, &y) in b.iter().enumerate() {
+            let t = x as u128 * y as u128 + out[i + j] as u128 + carry as u128;
+            out[i + j] = t as u64;
+            carry = (t >> 64) as u64;
+        }
+        out[i + b.len()] = carry;
+    }
+}
+
+/// out = a * b, choosing schoolbook or Karatsuba per GMP's threshold
+/// strategy.  This is what `softfloat` calls on its hot path.
+pub fn mul_auto(a: &[u64], b: &[u64], out: &mut [u64]) {
+    if a.len() < KARATSUBA_THRESHOLD || a.len() != b.len() {
+        mul_schoolbook(a, b, out);
+    } else {
+        mul_karatsuba(a, b, out, KARATSUBA_THRESHOLD);
+    }
+}
+
+/// Long division: (quotient, remainder) of num / den, den != 0.
+///
+/// Knuth-style limb division with a 128/64 digit estimate refined by the
+/// classic at-most-two correction steps.  Division is *not* on the paper's
+/// accelerated path (it inherits its cost from multiplication, §I); this
+/// exists for the softfloat `div` operator and the linalg substrate.
+pub fn div_rem(num: &[u64], den: &[u64]) -> (Vec<u64>, Vec<u64>) {
+    let dn = bit_length(den);
+    assert!(dn > 0, "division by zero");
+    let nn = bit_length(num);
+    if nn < dn {
+        return (vec![0; num.len()], num.to_vec());
+    }
+    // normalize: shift den so its top bit is the MSB of its top limb
+    let den_limbs = dn.div_ceil(64);
+    let shift = den_limbs * 64 - dn;
+    let mut d = vec![0u64; den_limbs];
+    shl(&den[..den_limbs.min(den.len())], shift, &mut d);
+    // numerator gets the same shift (one extra limb of headroom)
+    let num_limbs = nn.div_ceil(64);
+    let mut r = vec![0u64; num_limbs + 1];
+    {
+        let mut wide = vec![0u64; num_limbs + 1];
+        wide[..num_limbs].copy_from_slice(&num[..num_limbs]);
+        shl(&wide.clone(), shift, &mut r[..]);
+    }
+    let m = num_limbs + 1 - den_limbs; // quotient digits
+    let mut q = vec![0u64; num.len().max(m)];
+    let d_top = d[den_limbs - 1];
+    let d_next = if den_limbs >= 2 { d[den_limbs - 2] } else { 0 };
+
+    for j in (0..m).rev() {
+        // estimate q_hat from the top two remainder limbs vs d_top
+        let r_hi = r[j + den_limbs];
+        let r_lo = r[j + den_limbs - 1];
+        let mut q_hat = if r_hi >= d_top {
+            u64::MAX
+        } else {
+            (((r_hi as u128) << 64 | r_lo as u128) / d_top as u128) as u64
+        };
+        // refine with the next digit (Knuth's two-correction bound)
+        if q_hat > 0 {
+            let r_3rd = if j + den_limbs >= 2 { r[j + den_limbs - 2] } else { 0 };
+            loop {
+                let lhs = q_hat as u128 * d_next as u128;
+                let rem128 = ((r_hi as u128) << 64 | r_lo as u128)
+                    .wrapping_sub(q_hat as u128 * d_top as u128);
+                if rem128 >> 64 == 0 && lhs > (rem128 << 64 | r_3rd as u128) {
+                    q_hat -= 1;
+                } else {
+                    break;
+                }
+            }
+        }
+        // r -= q_hat * d  (at position j); fix up if we overshot by one
+        let borrow = sub_mul_limb(&mut r[j..j + den_limbs + 1], &d, q_hat);
+        if borrow {
+            q_hat -= 1;
+            let carry = add_assign(&mut r[j..j + den_limbs], &d);
+            if carry {
+                r[j + den_limbs] = r[j + den_limbs].wrapping_add(1);
+            }
+        }
+        q[j] = q_hat;
+    }
+
+    // un-normalize the remainder
+    let mut rem = vec![0u64; den.len().max(den_limbs)];
+    shr(&r[..den_limbs], shift, &mut rem[..den_limbs]);
+    rem.resize(den.len(), 0);
+    let mut quot = q;
+    quot.resize(num.len().max(m), 0);
+    (quot, rem)
+}
+
+/// a -= v * b (b zero-extended); returns true if the subtraction borrowed
+/// out of the top limb of `a` (i.e. v was one too large).
+fn sub_mul_limb(a: &mut [u64], b: &[u64], v: u64) -> bool {
+    let mut borrow: u64 = 0; // accumulated high part + borrows
+    for i in 0..b.len() {
+        let prod = v as u128 * b[i] as u128 + borrow as u128;
+        let (lo, hi) = (prod as u64, (prod >> 64) as u64);
+        let (d, b1) = a[i].overflowing_sub(lo);
+        a[i] = d;
+        borrow = hi + b1 as u64; // hi < 2^64 - 1, so no overflow
+    }
+    for x in a.iter_mut().skip(b.len()) {
+        if borrow == 0 {
+            return false;
+        }
+        let (d, b1) = x.overflowing_sub(borrow);
+        *x = d;
+        borrow = b1 as u64;
+    }
+    borrow != 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    /// Reference via u128 on 2-limb values.
+    fn to_u128(a: &[u64]) -> u128 {
+        debug_assert!(a.len() <= 2);
+        a.iter().enumerate().map(|(i, &x)| (x as u128) << (64 * i)).sum()
+    }
+
+    #[test]
+    fn add_with_carry_chain() {
+        let mut a = vec![u64::MAX, u64::MAX, 0];
+        let b = vec![1, 0, 0];
+        assert!(!add_assign(&mut a, &b));
+        assert_eq!(a, vec![0, 0, 1]);
+    }
+
+    #[test]
+    fn add_carry_out() {
+        let mut a = vec![u64::MAX, u64::MAX];
+        assert!(add_assign(&mut a.clone(), &[1, 0]) || {
+            add_limb(&mut a, 1)
+        });
+        let mut a = vec![u64::MAX, u64::MAX];
+        assert!(add_limb(&mut a, 1));
+        assert_eq!(a, vec![0, 0]);
+    }
+
+    #[test]
+    fn sub_with_borrow_chain() {
+        let mut a = vec![0, 0, 1];
+        let b = vec![1, 0, 0];
+        assert!(!sub_assign(&mut a, &b));
+        assert_eq!(a, vec![u64::MAX, u64::MAX, 0]);
+    }
+
+    #[test]
+    fn sub_borrow_out() {
+        let mut a = vec![0u64, 0];
+        assert!(sub_assign(&mut a, &[1, 0]));
+    }
+
+    #[test]
+    fn add_sub_roundtrip_property() {
+        testkit::check(200, |rng| {
+            let n = 1 + rng.below(6) as usize;
+            let a = rng.limbs(n);
+            let b = rng.limbs(n);
+            let mut c = a.clone();
+            let carry = add_assign(&mut c, &b);
+            let borrow = sub_assign(&mut c, &b);
+            assert_eq!(carry, borrow); // (a+b)-b == a mod 2^(64n), flags match
+            assert_eq!(c, a);
+        });
+    }
+
+    #[test]
+    fn cmp_ordering() {
+        assert_eq!(cmp(&[0, 1], &[u64::MAX, 0]), Ordering::Greater);
+        assert_eq!(cmp(&[5, 5], &[5, 5]), Ordering::Equal);
+        assert_eq!(cmp(&[4, 5], &[5, 5]), Ordering::Less);
+    }
+
+    #[test]
+    fn bit_length_cases() {
+        assert_eq!(bit_length(&[0, 0]), 0);
+        assert_eq!(bit_length(&[1, 0]), 1);
+        assert_eq!(bit_length(&[0, 1]), 65);
+        assert_eq!(bit_length(&[u64::MAX, u64::MAX]), 128);
+    }
+
+    #[test]
+    fn shifts_roundtrip() {
+        testkit::check(200, |rng| {
+            let a = rng.limbs(3);
+            let s = rng.below(64 * 3) as usize;
+            let mut wide = vec![0u64; 6];
+            shl(&a, s, &mut wide);
+            let mut back = vec![0u64; 3];
+            shr(&wide, s, &mut back);
+            assert_eq!(back, a);
+        });
+    }
+
+    #[test]
+    fn shl_drops_top_bits() {
+        let a = vec![u64::MAX];
+        let mut out = vec![0u64; 1];
+        shl(&a, 32, &mut out);
+        assert_eq!(out[0], u64::MAX << 32);
+    }
+
+    #[test]
+    fn shr_exactness_vs_u128() {
+        testkit::check(200, |rng| {
+            let a = rng.limbs(2);
+            let s = rng.below(128) as usize;
+            let mut out = vec![0u64; 2];
+            shr(&a, s, &mut out);
+            assert_eq!(to_u128(&out), to_u128(&a) >> s);
+        });
+    }
+
+    #[test]
+    fn sticky_matches_mask() {
+        testkit::check(200, |rng| {
+            let a = rng.limbs(2);
+            let s = rng.below(130) as usize;
+            let mask = if s >= 128 { u128::MAX } else { (1u128 << s) - 1 };
+            assert_eq!(sticky_below(&a, s), to_u128(&a) & mask != 0);
+        });
+    }
+
+    #[test]
+    fn schoolbook_vs_u128() {
+        testkit::check(300, |rng| {
+            let a = rng.limbs(1);
+            let b = rng.limbs(1);
+            let mut out = vec![0u64; 2];
+            mul_schoolbook(&a, &b, &mut out);
+            assert_eq!(to_u128(&out), a[0] as u128 * b[0] as u128);
+        });
+    }
+
+    #[test]
+    fn schoolbook_identity_and_zero() {
+        let a = vec![0x1234_5678_9ABC_DEF0u64, 42];
+        let one = vec![1u64, 0];
+        let zero = vec![0u64, 0];
+        let mut out = vec![0u64; 4];
+        mul_schoolbook(&a, &one, &mut out);
+        assert_eq!(&out[..2], &a[..]);
+        assert!(is_zero(&out[2..]));
+        mul_schoolbook(&a, &zero, &mut out);
+        assert!(is_zero(&out));
+    }
+
+    #[test]
+    fn div_rem_vs_u128() {
+        testkit::check(400, |rng| {
+            let num = rng.limbs(2);
+            let mut den = rng.limbs(2);
+            if rng.bool() {
+                den[1] = 0; // exercise single-limb divisors
+            }
+            if is_zero(&den) {
+                den[0] = 1;
+            }
+            let (q, r) = div_rem(&num, &den);
+            let (nu, de) = (to_u128(&num), to_u128(&den));
+            assert_eq!(to_u128(&q[..2]), nu / de, "quotient {nu} / {de}");
+            assert_eq!(to_u128(&r[..2]), nu % de, "remainder {nu} % {de}");
+        });
+    }
+
+    #[test]
+    fn div_rem_reconstructs_property() {
+        // num = q*den + r with r < den, at widths beyond u128
+        testkit::check(100, |rng| {
+            let n = 2 + rng.below(5) as usize;
+            let dl = 1 + rng.below(n as u64) as usize;
+            let num = rng.limbs(n);
+            let mut den = rng.limbs(n);
+            for x in den[dl..].iter_mut() {
+                *x = 0;
+            }
+            if is_zero(&den) {
+                den[0] = 3;
+            }
+            let (q, r) = div_rem(&num, &den);
+            assert_eq!(cmp(&r, &den), Ordering::Less, "remainder must be < divisor");
+            // reconstruct: q*den + r == num
+            let mut prod = vec![0u64; q.len() + den.len()];
+            mul_schoolbook(&q, &den, &mut prod);
+            let carry = add_assign(&mut prod[..r.len()], &r);
+            if carry {
+                add_limb(&mut prod[r.len()..], 1);
+            }
+            assert_eq!(&prod[..n], &num[..], "q*den + r != num");
+            assert!(is_zero(&prod[n..]));
+        });
+    }
+
+    #[test]
+    fn div_rem_edges() {
+        // exact division, divisor = 1, num < den
+        let (q, r) = div_rem(&[42, 0], &[7, 0]);
+        assert_eq!((q[0], r[0]), (6, 0));
+        let (q, r) = div_rem(&[u64::MAX, u64::MAX], &[1, 0]);
+        assert_eq!(q, vec![u64::MAX, u64::MAX]);
+        assert!(is_zero(&r));
+        let (q, r) = div_rem(&[5, 0], &[0, 1]);
+        assert!(is_zero(&q));
+        assert_eq!(r, vec![5, 0]);
+        // the q_hat = MAX correction path: num just below den << 64
+        let (q, _r) = div_rem(&[0, u64::MAX - 1, u64::MAX - 1], &[u64::MAX, u64::MAX, 0]);
+        assert_eq!(q[0], u64::MAX - 1);
+    }
+
+    #[test]
+    fn get_bit_matches_shift() {
+        let a = vec![0b1010u64, 1 << 63];
+        assert!(!get_bit(&a, 0));
+        assert!(get_bit(&a, 1));
+        assert!(get_bit(&a, 127));
+        assert!(!get_bit(&a, 128)); // out of range reads as 0
+    }
+}

@@ -1,0 +1,302 @@
+//! Toom-3 (Toom–Cook 3-way) multiplication — the generalization of
+//! Karatsuba the paper names in §II-A ("later generalized by Toom and
+//! described by Cook").  The paper stops at Karatsuba because its widths
+//! (448/960 bits) sit below the Toom-3 payoff; this implementation is the
+//! "beyond the paper" extension for higher precisions (DESIGN.md §8),
+//! with the same exactness guarantees as the other multipliers.
+//!
+//! Scheme:
+//!
+//! ```text
+//!   a = a0 + a1 B + a2 B^2,  B = 2^(64 k),  k = ceil(n/3)
+//!   w0   = a(0) b(0)        = a0 b0
+//!   w1   = a(1) b(1)
+//!   wm1  = a(-1) b(-1)          (signed)
+//!   wm2  = a(-2) b(-2)          (signed)
+//!   winf = a(inf) b(inf)    = a2 b2
+//! ```
+//!
+//! (evaluation points 0, 1, -1, -2, inf — the Bodrato/GMP sequence)
+//! followed by the classical interpolation with exact divisions by 2 and 3.
+//! Intermediates are signed, so the module carries a tiny sign-magnitude
+//! helper (`SInt`) — growing numbers stay exact throughout.
+
+use super::{add_assign, add_limb, cmp, is_zero, mul_auto, sub_assign};
+use std::cmp::Ordering;
+
+/// Signed arbitrary big integer: sign + little-endian magnitude.
+#[derive(Clone, Debug)]
+struct SInt {
+    neg: bool,
+    mag: Vec<u64>,
+}
+
+impl SInt {
+    fn from_slice(s: &[u64], extra: usize) -> Self {
+        let mut mag = s.to_vec();
+        mag.resize(s.len() + extra, 0);
+        SInt { neg: false, mag }
+    }
+
+    #[cfg(test)]
+    fn zero(limbs: usize) -> Self {
+        SInt { neg: false, mag: vec![0; limbs] }
+    }
+
+    fn grow(&mut self, limbs: usize) {
+        if self.mag.len() < limbs {
+            self.mag.resize(limbs, 0);
+        }
+    }
+
+    fn add(&mut self, other: &SInt) {
+        self.grow(other.mag.len() + 1);
+        let mut rhs = other.mag.clone();
+        rhs.resize(self.mag.len(), 0);
+        if self.neg == other.neg {
+            let carry = add_assign(&mut self.mag, &rhs);
+            debug_assert!(!carry);
+        } else {
+            // differing signs: subtract the smaller magnitude
+            match cmp(&self.mag, &rhs) {
+                Ordering::Less => {
+                    let mut m = rhs;
+                    let borrow = sub_assign(&mut m, &self.mag);
+                    debug_assert!(!borrow);
+                    self.mag = m;
+                    self.neg = other.neg;
+                }
+                _ => {
+                    let borrow = sub_assign(&mut self.mag, &rhs);
+                    debug_assert!(!borrow);
+                }
+            }
+        }
+        if is_zero(&self.mag) {
+            self.neg = false;
+        }
+    }
+
+    fn sub(&mut self, other: &SInt) {
+        let flipped = SInt { neg: !other.neg && !is_zero(&other.mag), mag: other.mag.clone() };
+        self.add(&flipped);
+    }
+
+    fn mul(&self, other: &SInt) -> SInt {
+        let mut out = vec![0u64; self.mag.len() + other.mag.len()];
+        mul_auto_unequal(&self.mag, &other.mag, &mut out);
+        SInt { neg: self.neg != other.neg && !is_zero(&out), mag: out }
+    }
+
+    /// Exact division by a small constant (panics in debug if inexact).
+    fn div_exact(&mut self, d: u64) {
+        let mut rem: u64 = 0;
+        for x in self.mag.iter_mut().rev() {
+            let t = ((rem as u128) << 64) | *x as u128;
+            *x = (t / d as u128) as u64;
+            rem = (t % d as u128) as u64;
+        }
+        debug_assert_eq!(rem, 0, "toom3 interpolation division must be exact");
+    }
+
+    /// self = self * 2 (shift left one bit).
+    fn double(&mut self) {
+        self.grow(self.mag.len() + 1);
+        let mut carry = 0u64;
+        for x in self.mag.iter_mut() {
+            let nc = *x >> 63;
+            *x = (*x << 1) | carry;
+            carry = nc;
+        }
+        debug_assert_eq!(carry, 0);
+    }
+}
+
+/// mul for possibly unequal lengths (pads the shorter operand).
+fn mul_auto_unequal(a: &[u64], b: &[u64], out: &mut [u64]) {
+    if a.len() == b.len() {
+        mul_auto(a, b, out);
+    } else {
+        super::mul_schoolbook(a, b, out);
+    }
+}
+
+/// out = a * b via Toom-3; a.len() == b.len(), out.len() == 2 * a.len().
+/// Sub-multiplications go through `mul_auto` (schoolbook / Karatsuba).
+pub fn mul_toom3(a: &[u64], b: &[u64], out: &mut [u64]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(out.len(), 2 * a.len());
+    let n = a.len();
+    if n < 9 {
+        // below three full parts, the split degenerates
+        super::mul_schoolbook(a, b, out);
+        return;
+    }
+    let k = n.div_ceil(3);
+
+    let part = |x: &[u64], i: usize| -> Vec<u64> {
+        let lo = (i * k).min(n);
+        let hi = ((i + 1) * k).min(n);
+        let mut v = x[lo..hi].to_vec();
+        v.resize(k, 0);
+        v
+    };
+    let (a0, a1, a2) = (part(a, 0), part(a, 1), part(a, 2));
+    let (b0, b1, b2) = (part(b, 0), part(b, 1), part(b, 2));
+
+    // evaluations (signed where needed), one extra limb of headroom
+    let eval = |p0: &[u64], p1: &[u64], p2: &[u64]| -> [SInt; 5] {
+        let s0 = SInt::from_slice(p0, 1);
+        let s1 = SInt::from_slice(p1, 1);
+        let s2 = SInt::from_slice(p2, 1);
+        let mut at1 = s0.clone(); // p0 + p1 + p2
+        at1.add(&s1);
+        at1.add(&s2);
+        let mut atm1 = s0.clone(); // p0 - p1 + p2
+        atm1.sub(&s1);
+        atm1.add(&s2);
+        let mut atm2 = s2.clone(); // p(-2) = 4 p2 - 2 p1 + p0 (Horner)
+        atm2.double();
+        atm2.sub(&s1);
+        atm2.double();
+        atm2.add(&s0);
+        [s0, at1, atm1, atm2, s2]
+    };
+    let ea = eval(&a0, &a1, &a2);
+    let eb = eval(&b0, &b1, &b2);
+
+    // pointwise products
+    let w0 = ea[0].mul(&eb[0]);
+    let w1 = ea[1].mul(&eb[1]);
+    let wm1 = ea[2].mul(&eb[2]);
+    let wm2 = ea[3].mul(&eb[3]);
+    let winf = ea[4].mul(&eb[4]);
+
+    // interpolation (classical sequence; all divisions exact)
+    let mut r3 = wm2.clone(); // (wm2 - w1)/3
+    r3.sub(&w1);
+    r3.div_exact(3);
+    let mut r1 = w1.clone(); // (w1 - wm1)/2
+    r1.sub(&wm1);
+    r1.div_exact(2);
+    let mut r2 = wm1.clone(); // wm1 - w0
+    r2.sub(&w0);
+    // r3 = (r2 - r3)/2 + 2*winf
+    let mut t = r2.clone();
+    t.sub(&r3);
+    t.div_exact(2);
+    let mut two_winf = winf.clone();
+    two_winf.double();
+    t.add(&two_winf);
+    r3 = t;
+    // r2 = r2 + r1 - winf
+    r2.add(&r1);
+    r2.sub(&winf);
+    // r1 = r1 - r3
+    r1.sub(&r3);
+
+    // recombine: out = w0 + r1 B + r2 B^2 + r3 B^3 + winf B^4
+    out.fill(0);
+    let acc = |out: &mut [u64], r: &SInt, pos: usize| {
+        debug_assert!(!r.neg || is_zero(&r.mag), "final coefficients are nonnegative");
+        let end = (pos + r.mag.len()).min(out.len());
+        if pos >= out.len() {
+            debug_assert!(is_zero(&r.mag));
+            return;
+        }
+        let width = end - pos;
+        let carry = add_assign(&mut out[pos..end], &r.mag[..width]);
+        debug_assert!(is_zero(&r.mag[width..]), "coefficient spills the product");
+        if carry {
+            let over = add_limb(&mut out[end..], 1);
+            debug_assert!(!over);
+        }
+    };
+    acc(out, &w0, 0);
+    acc(out, &r1, k);
+    acc(out, &r2, 2 * k);
+    acc(out, &r3, 3 * k);
+    acc(out, &winf, 4 * k);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bigint::mul_schoolbook;
+    use crate::testkit;
+
+    fn check(n: usize, cases: u64) {
+        testkit::check(cases, |rng| {
+            let a = rng.limbs(n);
+            let b = rng.limbs(n);
+            let mut want = vec![0u64; 2 * n];
+            let mut got = vec![0u64; 2 * n];
+            mul_schoolbook(&a, &b, &mut want);
+            mul_toom3(&a, &b, &mut got);
+            assert_eq!(got, want, "n={n}");
+        });
+    }
+
+    #[test]
+    fn matches_schoolbook_various_sizes() {
+        for n in [9, 10, 11, 12, 15, 16, 21, 24, 30, 33, 48] {
+            check(n, 10);
+        }
+    }
+
+    #[test]
+    fn small_sizes_fall_back() {
+        for n in [1, 2, 5, 8] {
+            check(n, 5);
+        }
+    }
+
+    #[test]
+    fn extreme_operands() {
+        for n in [9usize, 12, 24] {
+            let all = vec![u64::MAX; n];
+            let mut one = vec![0u64; n];
+            one[0] = 1;
+            let mut top = vec![0u64; n];
+            top[n - 1] = u64::MAX;
+            for (a, b) in [(&all, &all), (&all, &one), (&top, &all), (&top, &top)] {
+                let mut want = vec![0u64; 2 * n];
+                let mut got = vec![0u64; 2 * n];
+                mul_schoolbook(a, b, &mut want);
+                mul_toom3(a, b, &mut got);
+                assert_eq!(got, want, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn signed_helper_arithmetic() {
+        let mut x = SInt::from_slice(&[5], 1);
+        let y = SInt::from_slice(&[9], 1);
+        x.sub(&y); // -4
+        assert!(x.neg);
+        assert_eq!(x.mag[0], 4);
+        x.add(&y); // 5
+        assert!(!x.neg);
+        assert_eq!(x.mag[0], 5);
+        x.double();
+        assert_eq!(x.mag[0], 10);
+        x.div_exact(2);
+        assert_eq!(x.mag[0], 5);
+        let z = x.mul(&SInt { neg: true, mag: vec![3] });
+        assert!(z.neg);
+        assert_eq!(z.mag[0], 15);
+    }
+
+    #[test]
+    fn zero_operand() {
+        let n = 12;
+        let z = SInt::zero(3);
+        assert!(!z.neg);
+        let a = vec![0u64; n];
+        let b = vec![u64::MAX; n];
+        let mut got = vec![0u64; 2 * n];
+        mul_toom3(&a, &b, &mut got);
+        assert!(is_zero(&got));
+    }
+}

@@ -1,0 +1,115 @@
+//! BLAS-like software interface (§IV-B, Lst. 2).
+//!
+//! The paper exposes the accelerator as a drop-in for Elemental/MLAPACK:
+//! `apfp::Gemm` accepts *indexing functions* (closures mapping a linear
+//! index to a scalar) so callers keep their own storage (e.g. MPFR values
+//! inside Elemental matrices) without copies into an intermediate layout or
+//! leaking the internal packed format.  This module is that interface over
+//! [`crate::coordinator::Device`], using the same column-major + leading-
+//! dimension convention as BLAS/Elemental.
+
+use anyhow::Result;
+
+use crate::coordinator::{Device, GemmStats, Matrix};
+use crate::softfloat::ApFloat;
+
+/// Transposition argument, as in the paper's `apfp::BlasTrans`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BlasTrans {
+    Normal,
+    Transpose,
+}
+
+/// C += A * B (alpha = beta = 1, §III), with column-major indexing
+/// functions and leading dimensions, mirroring Lst. 2:
+///
+/// * `index_a(i)` returns element i of A's column-major storage (size
+///   `lda * k` for Normal); likewise `index_b`.
+/// * `index_c(i)` reads and `write_c(i, v)` writes C's storage.
+///
+/// m, n, k: C is m x n, the inner dimension is k (BLAS convention).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm(
+    device: &Device,
+    trans_a: BlasTrans,
+    trans_b: BlasTrans,
+    m: usize,
+    n: usize,
+    k: usize,
+    index_a: impl Fn(usize) -> ApFloat,
+    lda: usize,
+    index_b: impl Fn(usize) -> ApFloat,
+    ldb: usize,
+    index_c: impl Fn(usize) -> ApFloat,
+    mut write_c: impl FnMut(usize, ApFloat),
+    ldc: usize,
+) -> Result<GemmStats> {
+    let prec = device.config().prec();
+    // gather into device matrices (row-major internally)
+    let a = match trans_a {
+        BlasTrans::Normal => Matrix::from_fn(m, k, prec, |i, j| index_a(j * lda + i)),
+        BlasTrans::Transpose => Matrix::from_fn(m, k, prec, |i, j| index_a(i * lda + j)),
+    };
+    let b = match trans_b {
+        BlasTrans::Normal => Matrix::from_fn(k, n, prec, |i, j| index_b(j * ldb + i)),
+        BlasTrans::Transpose => Matrix::from_fn(k, n, prec, |i, j| index_b(i * ldb + j)),
+    };
+    let c = Matrix::from_fn(m, n, prec, |i, j| index_c(j * ldc + i));
+
+    let (out, stats) = device.gemm(&a, &b, &c)?;
+
+    for j in 0..n {
+        for i in 0..m {
+            write_c(j * ldc + i, out.get(i, j).clone());
+        }
+    }
+    Ok(stats)
+}
+
+/// Symmetric rank-k update, `C += A * A^T` on the lower triangle — the
+/// derived routine the paper names as the other SDP workhorse (§III).
+/// A is m x k (column-major through `index_a`), C is m x m.
+pub fn syrk(
+    device: &Device,
+    m: usize,
+    k: usize,
+    index_a: impl Fn(usize) -> ApFloat + Copy,
+    lda: usize,
+    index_c: impl Fn(usize) -> ApFloat,
+    mut write_c: impl FnMut(usize, ApFloat),
+    ldc: usize,
+) -> Result<GemmStats> {
+    // full GEMM against A^T, then commit only the lower triangle (a
+    // triangle-aware tile schedule is the paper's "derived routine" future
+    // work; the arithmetic and interface semantics are what SDP codes need)
+    let mut dropped = Vec::new();
+    let stats = gemm(
+        device,
+        BlasTrans::Normal,
+        BlasTrans::Transpose,
+        m,
+        m,
+        k,
+        index_a,
+        lda,
+        index_a,
+        lda,
+        index_c,
+        |idx, v| {
+            let (j, i) = (idx / ldc, idx % ldc);
+            if i >= j {
+                dropped.push((idx, v));
+            }
+        },
+        ldc,
+    )?;
+    for (idx, v) in dropped {
+        write_c(idx, v);
+    }
+    Ok(stats)
+}
+
+/// Convenience: GEMM directly on [`Matrix`] values (row-major callers).
+pub fn gemm_matrices(device: &Device, a: &Matrix, b: &Matrix, c: &Matrix) -> Result<(Matrix, GemmStats)> {
+    device.gemm(a, b, c)
+}

@@ -1,0 +1,205 @@
+//! Runtime configuration — the paper's CMake-time knobs (§IV-A) as a config
+//! system: defaults, config-file parsing (`key = value` lines), and CLI
+//! `--set key=value` overrides.
+//!
+//! | paper option            | field            |
+//! |-------------------------|------------------|
+//! | `APFP_BITS`             | `bits`           |
+//! | `APFP_COMPUTE_UNITS`    | `compute_units`  |
+//! | `APFP_TILE_SIZE_N`      | `tile_n`         |
+//! | `APFP_TILE_SIZE_M`      | `tile_m`         |
+//! | `APFP_MULT_BASE_BITS`   | `mult_base_bits` |
+//! | `APFP_ADD_BASE_BITS`    | `add_base_bits`  |
+
+use std::path::Path;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("cannot read config file: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("malformed config line {line}: {text:?}")]
+    Malformed { line: usize, text: String },
+    #[error("unknown config key: {0:?}")]
+    UnknownKey(String),
+    #[error("invalid value for {key}: {value:?}")]
+    InvalidValue { key: String, value: String },
+    #[error("invalid configuration: {0}")]
+    Invalid(String),
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ApfpConfig {
+    /// Total packed bits per number (Fig. 1), incl. the 64-bit head word.
+    pub bits: u32,
+    /// Replication factor of the compute pipeline (§IV-A).
+    pub compute_units: usize,
+    /// Output tile rows per compute unit (§III).
+    pub tile_n: usize,
+    /// Output tile columns per compute unit (§III).
+    pub tile_m: usize,
+    /// Karatsuba bottom-out threshold in bits (§II-A / Fig. 3).
+    pub mult_base_bits: u32,
+    /// Bits added per pipeline stage in wide adders (§II-A / Fig. 3).
+    pub add_base_bits: u32,
+    /// Worker threads backing the virtual device (host-side knob).
+    pub worker_threads: usize,
+}
+
+impl Default for ApfpConfig {
+    fn default() -> Self {
+        // The paper's evaluated configuration: 512-bit numbers, 32x32 tiles,
+        // the Fig. 3 Pareto point (72-bit mult bottom-out, 64-bit adder
+        // stages), one compute unit.
+        ApfpConfig {
+            bits: 512,
+            compute_units: 1,
+            tile_n: 32,
+            tile_m: 32,
+            mult_base_bits: 72,
+            add_base_bits: 64,
+            worker_threads: 0, // 0 = one per compute unit
+        }
+    }
+}
+
+impl ApfpConfig {
+    /// Mantissa precision in bits (Fig. 1: total minus the 64-bit head).
+    pub fn prec(&self) -> u32 {
+        crate::softfloat::prec_for_bits(self.bits)
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let err = |m: String| Err(ConfigError::Invalid(m));
+        if self.bits % 512 != 0 || self.bits == 0 {
+            return err(format!("bits must be a positive multiple of 512, got {}", self.bits));
+        }
+        if self.compute_units == 0 {
+            return err("compute_units must be >= 1".into());
+        }
+        if self.tile_n == 0 || self.tile_m == 0 {
+            return err("tile sizes must be >= 1".into());
+        }
+        if self.mult_base_bits < 17 {
+            return err("mult_base_bits below the DSP width is meaningless".into());
+        }
+        if self.add_base_bits == 0 {
+            return err("add_base_bits must be >= 1".into());
+        }
+        Ok(())
+    }
+
+    /// Apply one `key=value` override (CLI `--set`).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), ConfigError> {
+        let invalid = || ConfigError::InvalidValue { key: key.into(), value: value.into() };
+        match key {
+            "bits" | "APFP_BITS" => self.bits = value.parse().map_err(|_| invalid())?,
+            "compute_units" | "APFP_COMPUTE_UNITS" => {
+                self.compute_units = value.parse().map_err(|_| invalid())?
+            }
+            "tile_n" | "APFP_TILE_SIZE_N" => self.tile_n = value.parse().map_err(|_| invalid())?,
+            "tile_m" | "APFP_TILE_SIZE_M" => self.tile_m = value.parse().map_err(|_| invalid())?,
+            "mult_base_bits" | "APFP_MULT_BASE_BITS" => {
+                self.mult_base_bits = value.parse().map_err(|_| invalid())?
+            }
+            "add_base_bits" | "APFP_ADD_BASE_BITS" => {
+                self.add_base_bits = value.parse().map_err(|_| invalid())?
+            }
+            "worker_threads" => self.worker_threads = value.parse().map_err(|_| invalid())?,
+            _ => return Err(ConfigError::UnknownKey(key.into())),
+        }
+        Ok(())
+    }
+
+    /// Parse a config file of `key = value` lines (`#` comments allowed).
+    pub fn from_file(path: &Path) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path)?;
+        let mut cfg = ApfpConfig::default();
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| ConfigError::Malformed { line: i + 1, text: raw.into() })?;
+            cfg.set(k.trim(), v.trim())?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_paper_config() {
+        let c = ApfpConfig::default();
+        assert_eq!(c.bits, 512);
+        assert_eq!(c.prec(), 448);
+        assert_eq!((c.tile_n, c.tile_m), (32, 32));
+        assert_eq!(c.mult_base_bits, 72);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn set_accepts_both_naming_schemes() {
+        let mut c = ApfpConfig::default();
+        c.set("APFP_BITS", "1024").unwrap();
+        assert_eq!(c.bits, 1024);
+        assert_eq!(c.prec(), 960);
+        c.set("compute_units", "8").unwrap();
+        assert_eq!(c.compute_units, 8);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_values() {
+        let mut c = ApfpConfig::default();
+        assert!(matches!(c.set("nope", "1"), Err(ConfigError::UnknownKey(_))));
+        assert!(matches!(
+            c.set("bits", "abc"),
+            Err(ConfigError::InvalidValue { .. })
+        ));
+    }
+
+    #[test]
+    fn validation_catches_bad_geometry() {
+        let mut c = ApfpConfig::default();
+        c.bits = 500;
+        assert!(c.validate().is_err());
+        c = ApfpConfig::default();
+        c.compute_units = 0;
+        assert!(c.validate().is_err());
+        c = ApfpConfig::default();
+        c.mult_base_bits = 8;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn config_file_roundtrip() {
+        let dir = std::env::temp_dir().join("apfp_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("test.cfg");
+        std::fs::write(
+            &path,
+            "# paper Tab. III, 8-CU row\nAPFP_BITS = 512\ncompute_units = 8\ntile_n=32 # inline\n",
+        )
+        .unwrap();
+        let c = ApfpConfig::from_file(&path).unwrap();
+        assert_eq!(c.compute_units, 8);
+        assert_eq!(c.bits, 512);
+    }
+
+    #[test]
+    fn malformed_file_reports_line() {
+        let dir = std::env::temp_dir().join("apfp_cfg_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.cfg");
+        std::fs::write(&path, "bits 512\n").unwrap();
+        match ApfpConfig::from_file(&path) {
+            Err(ConfigError::Malformed { line: 1, .. }) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,246 @@
+//! The CUDA-like device interface (§IV-B) over the virtual accelerator.
+//!
+//! `Device::new` "programs the bitstream": it spawns one worker thread per
+//! configured compute unit, each with its own PJRT runtime, and records the
+//! Fig. 4 SLR/DDR-bank placement.  `gemm` launches the §III dataflow across
+//! the CUs; `mul_stream`/`add_stream`/`mac_stream` drive the Tab. I/II
+//! microbenchmark path.  Data stays on the "device" as [`Matrix`] buffers
+//! between calls, so workloads with many small operations amortize
+//! transfer, as the paper recommends for fine-grained use.
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::matrix::Matrix;
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::scheduler::Partition;
+use super::worker::{Job, StreamKind, WorkerHandle};
+use crate::config::ApfpConfig;
+use crate::hwmodel::floorplan::{self, Placement};
+use crate::pack::PlaneBatch;
+use crate::runtime::{manifest, ArtifactKind};
+
+pub struct Device {
+    config: ApfpConfig,
+    workers: Vec<WorkerHandle>,
+    placements: Vec<Placement>,
+    metrics: Arc<Metrics>,
+    artifacts: Vec<manifest::ArtifactMeta>,
+}
+
+#[derive(Clone, Debug)]
+pub struct GemmStats {
+    pub wall_s: f64,
+    pub tiles: u64,
+    pub artifact_calls: u64,
+    pub macs: u64,
+    /// fraction of datapath time in marshaling (coordinator overhead)
+    pub marshal_fraction: f64,
+}
+
+impl Device {
+    /// Open the virtual device with `config.compute_units` workers reading
+    /// artifacts from `artifact_dir`.
+    pub fn new(config: ApfpConfig, artifact_dir: &std::path::Path) -> Result<Self> {
+        config.validate().map_err(|e| anyhow!("{e}"))?;
+        let artifacts =
+            manifest::load(artifact_dir).context("device: loading artifact manifest")?;
+        let metrics = Metrics::new();
+        let cus = config.compute_units;
+        let workers = (0..cus)
+            .map(|cu| WorkerHandle::spawn(cu, artifact_dir.to_path_buf(), metrics.clone()))
+            .collect();
+        Ok(Device {
+            placements: floorplan::assign(cus),
+            config,
+            workers,
+            metrics,
+            artifacts,
+        })
+    }
+
+    pub fn config(&self) -> &ApfpConfig {
+        &self.config
+    }
+
+    /// Fig. 4 placement of each CU (bank/SLR).
+    pub fn placements(&self) -> &[Placement] {
+        &self.placements
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Allocate a zeroed device matrix (CUDA-like `cudaMalloc`).
+    pub fn alloc(&self, rows: usize, cols: usize) -> Matrix {
+        Matrix::zeros(rows, cols, self.config.prec())
+    }
+
+    fn artifact_for(&self, kind: ArtifactKind) -> Result<&manifest::ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|m| m.kind == kind && m.bits == self.config.bits)
+            .max_by_key(|m| m.t_n * m.t_m)
+            .ok_or_else(|| {
+                anyhow!("no {kind:?} artifact for {} bits — run `make artifacts`", self.config.bits)
+            })
+    }
+
+    // ---- GEMM (§III) ------------------------------------------------------
+
+    /// C += A @ B across all compute units; returns the updated C and stats.
+    ///
+    /// alpha = beta = 1 exactly as the paper fixes (§III).
+    pub fn gemm(&self, a: &Matrix, b: &Matrix, c: &Matrix) -> Result<(Matrix, GemmStats)> {
+        anyhow::ensure!(a.cols() == b.rows(), "inner dimensions: {} vs {}", a.cols(), b.rows());
+        anyhow::ensure!(a.rows() == c.rows() && b.cols() == c.cols(), "output shape");
+        let meta = self.artifact_for(ArtifactKind::Gemm)?;
+        let part = Partition {
+            n: a.rows(),
+            m: b.cols(),
+            k: a.cols(),
+            tile_n: meta.t_n,
+            tile_m: meta.t_m,
+            k_tile: meta.k_tile,
+            compute_units: self.workers.len(),
+        };
+        let artifact = meta.name.clone();
+        let before = self.metrics.snapshot();
+        let t0 = Instant::now();
+
+        let a = Arc::new(a.clone());
+        let b = Arc::new(b.clone());
+        let c_in = Arc::new(c.clone());
+        let (reply_tx, reply_rx) = channel();
+
+        // Submit each CU's row-band tiles to its own queue.  Submission
+        // round-robins across CUs one tile at a time so the bounded queues
+        // fill evenly and a stalled CU backpressures only its own band.
+        let mut pending = 0usize;
+        let mut iters: Vec<_> =
+            (0..self.workers.len()).map(|cu| part.tiles_for(cu).into_iter()).collect();
+        let mut active = true;
+        while active {
+            active = false;
+            for (cu, it) in iters.iter_mut().enumerate() {
+                if let Some(tile) = it.next() {
+                    self.workers[cu].submit(Job::GemmTile {
+                        artifact: artifact.clone(),
+                        a: a.clone(),
+                        b: b.clone(),
+                        c: c_in.clone(),
+                        tile,
+                        part: part.clone(),
+                        reply: reply_tx.clone(),
+                    });
+                    pending += 1;
+                    active = true;
+                }
+            }
+        }
+        drop(reply_tx);
+
+        // Assemble the output as tiles complete (any order).
+        let mut out = c.clone();
+        for _ in 0..pending {
+            let res = reply_rx.recv().context("collecting tile result")?;
+            let planes = res.planes.with_context(|| {
+                format!("tile at ({}, {}) on CU{}", res.tile.r0, res.tile.c0, res.tile.cu)
+            })?;
+            out.write_tile(res.tile.r0, res.tile.c0, part.tile_n, part.tile_m, &planes);
+        }
+
+        let after = self.metrics.snapshot();
+        let stats = GemmStats {
+            wall_s: t0.elapsed().as_secs_f64(),
+            tiles: after.tiles - before.tiles,
+            artifact_calls: after.artifact_calls - before.artifact_calls,
+            macs: after.macs - before.macs,
+            marshal_fraction: {
+                let exec = after.exec_ns - before.exec_ns;
+                let marshal = after.marshal_ns - before.marshal_ns;
+                if exec + marshal == 0 { 0.0 } else { marshal as f64 / (exec + marshal) as f64 }
+            },
+        };
+        Ok((out, stats))
+    }
+
+    // ---- stream operators (§V-B path) ---------------------------------------
+
+    fn stream(
+        &self,
+        kind: ArtifactKind,
+        stream_kind: StreamKind,
+        operands: &[&[crate::softfloat::ApFloat]],
+    ) -> Result<Vec<crate::softfloat::ApFloat>> {
+        let meta = self.artifact_for(kind)?;
+        let artifact = meta.name.clone();
+        let len = operands[0].len();
+        for o in operands {
+            anyhow::ensure!(o.len() == len, "stream operand lengths differ");
+        }
+        let prec = self.config.prec();
+        // partition the stream across CUs (the paper "partitions the input
+        // problem across the replications")
+        let chunk = len.div_ceil(self.workers.len()).max(1);
+        let (reply_tx, reply_rx) = channel();
+        let mut pending = 0;
+        for (w, start) in (0..len).step_by(chunk).enumerate() {
+            let end = (start + chunk).min(len);
+            let planes: Vec<PlaneBatch> = operands
+                .iter()
+                .map(|o| PlaneBatch::from_slice(&o[start..end], prec))
+                .collect();
+            self.workers[w % self.workers.len()].submit(Job::Stream {
+                artifact: artifact.clone(),
+                kind: stream_kind,
+                operands: planes,
+                offset: start,
+                reply: reply_tx.clone(),
+            });
+            pending += 1;
+        }
+        drop(reply_tx);
+        let mut out = vec![crate::softfloat::ApFloat::zero(prec); len];
+        for _ in 0..pending {
+            let res = reply_rx.recv()?;
+            let planes = res.planes?;
+            for (i, v) in planes.to_vec().into_iter().enumerate() {
+                out[res.offset + i] = v;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Element-wise c[i] = a[i] * b[i] through the multiplier artifacts.
+    pub fn mul_stream(
+        &self,
+        a: &[crate::softfloat::ApFloat],
+        b: &[crate::softfloat::ApFloat],
+    ) -> Result<Vec<crate::softfloat::ApFloat>> {
+        self.stream(ArtifactKind::Mul, StreamKind::Binop, &[a, b])
+    }
+
+    /// Element-wise c[i] = a[i] + b[i].
+    pub fn add_stream(
+        &self,
+        a: &[crate::softfloat::ApFloat],
+        b: &[crate::softfloat::ApFloat],
+    ) -> Result<Vec<crate::softfloat::ApFloat>> {
+        self.stream(ArtifactKind::Add, StreamKind::Binop, &[a, b])
+    }
+
+    /// Element-wise out[i] = c[i] + a[i] * b[i].
+    pub fn mac_stream(
+        &self,
+        c: &[crate::softfloat::ApFloat],
+        a: &[crate::softfloat::ApFloat],
+        b: &[crate::softfloat::ApFloat],
+    ) -> Result<Vec<crate::softfloat::ApFloat>> {
+        self.stream(ArtifactKind::Mac, StreamKind::Mac, &[c, a, b])
+    }
+}

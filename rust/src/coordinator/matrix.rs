@@ -1,0 +1,145 @@
+//! Row-major APFP matrices and tile extraction for the GEMM datapath.
+
+use crate::pack::PlaneBatch;
+use crate::softfloat::ApFloat;
+use crate::testkit::Rng;
+
+/// A dense row-major matrix of `ApFloat` scalars, all at one precision.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    prec: u32,
+    vals: Vec<ApFloat>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize, prec: u32) -> Self {
+        Matrix { rows, cols, prec, vals: vec![ApFloat::zero(prec); rows * cols] }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, prec: u32, mut f: impl FnMut(usize, usize) -> ApFloat) -> Self {
+        let mut vals = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                let v = f(i, j);
+                assert_eq!(v.prec(), prec);
+                vals.push(v);
+            }
+        }
+        Matrix { rows, cols, prec, vals }
+    }
+
+    /// Uniform random normalized values with exponents in +-`exp_range`
+    /// (deterministic: seeded testkit PRNG).
+    pub fn random(rows: usize, cols: usize, prec: u32, seed: u64, exp_range: i64) -> Self {
+        let mut rng = Rng::from_seed(seed);
+        Matrix::from_fn(rows, cols, prec, |_, _| {
+            let n = (prec / 64) as usize;
+            let mut mant = rng.limbs(n);
+            mant[n - 1] |= 1 << 63;
+            ApFloat::from_parts(rng.bool(), rng.range_i64(-exp_range, exp_range), mant, prec)
+        })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn prec(&self) -> u32 {
+        self.prec
+    }
+
+    pub fn get(&self, i: usize, j: usize) -> &ApFloat {
+        &self.vals[i * self.cols + j]
+    }
+
+    pub fn set(&mut self, i: usize, j: usize, v: ApFloat) {
+        assert_eq!(v.prec(), self.prec);
+        self.vals[i * self.cols + j] = v;
+    }
+
+    pub fn values(&self) -> &[ApFloat] {
+        &self.vals
+    }
+
+    /// Extract a `tn x tm` tile starting at (r0, c0) into the plane layout;
+    /// out-of-range positions pad with APFP zero (absorbing for mul,
+    /// identity for add — exactly how the hardware pads partial tiles).
+    pub fn extract_tile(&self, r0: usize, c0: usize, tn: usize, tm: usize) -> PlaneBatch {
+        let mut b = PlaneBatch::zeros(tn * tm, self.prec);
+        for i in 0..tn {
+            if r0 + i >= self.rows {
+                break;
+            }
+            for j in 0..tm {
+                if c0 + j >= self.cols {
+                    break;
+                }
+                b.set(i * tm + j, self.get(r0 + i, c0 + j));
+            }
+        }
+        b
+    }
+
+    /// Write a tile's planes back into the matrix (clipping at the edges).
+    pub fn write_tile(&mut self, r0: usize, c0: usize, tn: usize, tm: usize, b: &PlaneBatch) {
+        for i in 0..tn {
+            if r0 + i >= self.rows {
+                break;
+            }
+            for j in 0..tm {
+                if c0 + j >= self.cols {
+                    break;
+                }
+                self.set(r0 + i, c0 + j, b.get(i * tm + j));
+            }
+        }
+    }
+
+    /// Max |relative error| vs another matrix through f64 (diagnostics).
+    pub fn max_rel_err_f64(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let mut worst: f64 = 0.0;
+        for (x, y) in self.vals.iter().zip(other.vals.iter()) {
+            let (fx, fy) = (x.to_f64(), y.to_f64());
+            let denom = fx.abs().max(fy.abs()).max(1e-300);
+            worst = worst.max((fx - fy).abs() / denom);
+        }
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tile_roundtrip() {
+        let m = Matrix::random(10, 7, 448, 42, 20);
+        let t = m.extract_tile(2, 3, 4, 4);
+        let mut m2 = m.clone();
+        m2.write_tile(2, 3, 4, 4, &t);
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn edge_tiles_pad_with_zero() {
+        let m = Matrix::random(5, 5, 448, 1, 10);
+        let t = m.extract_tile(4, 4, 4, 4); // only (0,0) in range
+        assert_eq!(&t.get(0), m.get(4, 4));
+        for idx in 1..16 {
+            assert!(t.get(idx).is_zero());
+        }
+    }
+
+    #[test]
+    fn from_fn_layout() {
+        let m = Matrix::from_fn(3, 2, 448, |i, j| ApFloat::from_u64((i * 10 + j) as u64 + 1, 448));
+        assert_eq!(m.get(2, 1), &ApFloat::from_u64(22, 448));
+    }
+}

@@ -1,0 +1,104 @@
+//! Shared atomic counters for the coordinator (the paper's host runtime
+//! reports the same quantities per kernel invocation).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// GEMM tiles completed.
+    pub tiles: AtomicU64,
+    /// PJRT artifact invocations (tile K-steps + stream chunks).
+    pub artifact_calls: AtomicU64,
+    /// APFP multiply-add operations flowed through the datapath.
+    pub macs: AtomicU64,
+    /// Nanoseconds spent inside artifact execution (sum over workers).
+    pub exec_ns: AtomicU64,
+    /// Nanoseconds spent marshaling tiles (extract/writeback, sum over workers).
+    pub marshal_ns: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    pub fn add_tiles(&self, n: u64) {
+        self.tiles.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_calls(&self, n: u64) {
+        self.artifact_calls.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_macs(&self, n: u64) {
+        self.macs.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_exec_ns(&self, n: u64) {
+        self.exec_ns.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_marshal_ns(&self, n: u64) {
+        self.marshal_ns.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            tiles: self.tiles.load(Ordering::Relaxed),
+            artifact_calls: self.artifact_calls.load(Ordering::Relaxed),
+            macs: self.macs.load(Ordering::Relaxed),
+            exec_ns: self.exec_ns.load(Ordering::Relaxed),
+            marshal_ns: self.marshal_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub tiles: u64,
+    pub artifact_calls: u64,
+    pub macs: u64,
+    pub exec_ns: u64,
+    pub marshal_ns: u64,
+}
+
+impl MetricsSnapshot {
+    /// Coordinator overhead: fraction of datapath time spent outside the
+    /// artifacts (the §Perf L3 target keeps this small).
+    pub fn marshal_fraction(&self) -> f64 {
+        let total = self.exec_ns + self.marshal_ns;
+        if total == 0 {
+            0.0
+        } else {
+            self.marshal_ns as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.add_tiles(3);
+        m.add_tiles(2);
+        m.add_calls(7);
+        m.add_macs(1000);
+        let s = m.snapshot();
+        assert_eq!(s.tiles, 5);
+        assert_eq!(s.artifact_calls, 7);
+        assert_eq!(s.macs, 1000);
+    }
+
+    #[test]
+    fn marshal_fraction() {
+        let m = Metrics::new();
+        m.add_exec_ns(900);
+        m.add_marshal_ns(100);
+        assert!((m.snapshot().marshal_fraction() - 0.1).abs() < 1e-12);
+        assert_eq!(Metrics::new().snapshot().marshal_fraction(), 0.0);
+    }
+}

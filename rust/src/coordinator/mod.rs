@@ -1,0 +1,30 @@
+//! The accelerator coordinator — Layer 3's system contribution.
+//!
+//! The paper exposes its FPGA as a device with P replicated compute units,
+//! each bound to a DDR bank/SLR (Fig. 4), driven by a host runtime (XRT)
+//! through a CUDA-like interface (§IV-B).  This module is that runtime for
+//! the reproduction's virtual device:
+//!
+//! * [`matrix::Matrix`] — host/device-resident APFP matrices;
+//! * [`device::Device`] — the device handle: buffer management, stream
+//!   operators, and the tiled GEMM launch (CUDA-like API);
+//! * [`worker`] — one OS thread per compute unit, each owning its own PJRT
+//!   [`crate::runtime::Runtime`] (its own "circuit replica") and executing
+//!   tile jobs from a bounded queue (backpressure);
+//! * [`scheduler`] — the §III work partition: output rows are split into
+//!   N/P bands (one per CU), each band is tiled T_N x T_M, and every tile
+//!   accumulates over K in sequential k_tile steps;
+//! * [`metrics`] — counters for tiles, artifact calls and stage wall times.
+//!
+//! Performance of the *physical* accelerator is modeled by [`crate::sim`];
+//! this module provides the *functional* datapath (every result flows
+//! through the AOT artifacts) plus the coordination logic itself.
+
+pub mod device;
+pub mod matrix;
+pub mod metrics;
+pub mod scheduler;
+pub mod worker;
+
+pub use device::{Device, GemmStats};
+pub use matrix::Matrix;

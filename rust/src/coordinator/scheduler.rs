@@ -1,0 +1,141 @@
+//! The §III work partition.
+//!
+//! For `C (n x m) += A (n x k) * B (k x m)` with P compute units and
+//! per-CU output tiles T_N x T_M:
+//!
+//! * the N dimension is split into P row *bands* of ceil(n/P) rows — the
+//!   paper copies each band's A and C rows to the owning CU's DDR bank and
+//!   replicates B to every bank;
+//! * within a band, the CU walks its output tiles; each tile accumulates
+//!   over K in sequential `k_tile`-sized steps (the artifact performs one
+//!   step: a T_N x k_tile by k_tile x T_M update).
+
+/// One output tile owned by one compute unit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Tile {
+    pub cu: usize,
+    /// output row / column origin
+    pub r0: usize,
+    pub c0: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub n: usize,
+    pub m: usize,
+    pub k: usize,
+    pub tile_n: usize,
+    pub tile_m: usize,
+    pub k_tile: usize,
+    pub compute_units: usize,
+}
+
+impl Partition {
+    /// Row band [start, end) owned by compute unit `cu`.
+    pub fn band(&self, cu: usize) -> (usize, usize) {
+        let band = self.n.div_ceil(self.compute_units);
+        let start = (cu * band).min(self.n);
+        let end = ((cu + 1) * band).min(self.n);
+        (start, end)
+    }
+
+    /// Tiles owned by `cu`, in execution order (row-major over the band).
+    pub fn tiles_for(&self, cu: usize) -> Vec<Tile> {
+        let (start, end) = self.band(cu);
+        let mut tiles = Vec::new();
+        let mut r0 = start;
+        while r0 < end {
+            let mut c0 = 0;
+            while c0 < self.m {
+                tiles.push(Tile { cu, r0, c0 });
+                c0 += self.tile_m;
+            }
+            r0 += self.tile_n;
+        }
+        tiles
+    }
+
+    /// Number of sequential K steps per tile.
+    pub fn k_steps(&self) -> usize {
+        self.k.div_ceil(self.k_tile)
+    }
+
+    /// All tiles across all CUs (diagnostics / tests).
+    pub fn all_tiles(&self) -> Vec<Tile> {
+        (0..self.compute_units).flat_map(|cu| self.tiles_for(cu)).collect()
+    }
+
+    /// Total artifact invocations for the whole GEMM.
+    pub fn total_calls(&self) -> usize {
+        self.all_tiles().len() * self.k_steps()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn part(n: usize, m: usize, k: usize, p: usize) -> Partition {
+        Partition { n, m, k, tile_n: 8, tile_m: 8, k_tile: 8, compute_units: p }
+    }
+
+    #[test]
+    fn bands_cover_all_rows_disjointly() {
+        for (n, p) in [(64, 4), (65, 4), (7, 4), (100, 3), (8, 1)] {
+            let pt = part(n, 16, 8, p);
+            let mut covered = vec![false; n];
+            for cu in 0..p {
+                let (s, e) = pt.band(cu);
+                for r in s..e {
+                    assert!(!covered[r], "row {r} double-owned (n={n}, p={p})");
+                    covered[r] = true;
+                }
+            }
+            assert!(covered.iter().all(|&c| c), "rows uncovered (n={n}, p={p})");
+        }
+    }
+
+    #[test]
+    fn tiles_cover_output_exactly_once() {
+        let pt = part(20, 20, 16, 3);
+        let mut hit = vec![vec![0u32; 20]; 20];
+        for t in pt.all_tiles() {
+            for i in t.r0..(t.r0 + 8).min(pt.band(t.cu).1).min(20) {
+                for j in t.c0..(t.c0 + 8).min(20) {
+                    hit[i][j] += 1;
+                }
+            }
+        }
+        // every output element covered exactly once by its band's tiles
+        for (i, row) in hit.iter().enumerate() {
+            for (j, &h) in row.iter().enumerate() {
+                assert_eq!(h, 1, "({i},{j}) covered {h} times");
+            }
+        }
+    }
+
+    #[test]
+    fn k_steps_round_up() {
+        assert_eq!(part(8, 8, 8, 1).k_steps(), 1);
+        assert_eq!(part(8, 8, 9, 1).k_steps(), 2);
+        assert_eq!(part(8, 8, 64, 1).k_steps(), 8);
+    }
+
+    #[test]
+    fn more_cus_fewer_tiles_each() {
+        let p1 = part(64, 64, 8, 1);
+        let p4 = part(64, 64, 8, 4);
+        assert_eq!(p1.tiles_for(0).len(), 64);
+        assert_eq!(p4.tiles_for(0).len(), 16);
+        assert_eq!(p1.total_calls(), p4.total_calls());
+    }
+
+    #[test]
+    fn empty_band_when_more_cus_than_rows() {
+        let pt = part(8, 8, 8, 4); // band = 2 rows... ceil(8/4)=2
+        assert_eq!(pt.band(0), (0, 2));
+        let pt = part(2, 8, 8, 4); // bands beyond the matrix are empty
+        assert_eq!(pt.band(2), (2, 2));
+        assert!(pt.tiles_for(3).is_empty());
+    }
+}

@@ -1,0 +1,180 @@
+//! Compute-unit worker threads.
+//!
+//! Each worker models one replicated compute unit: it owns a private PJRT
+//! [`Runtime`] (its own compiled "circuit"), pulls jobs from a bounded
+//! queue (backpressure toward the leader), executes them through the AOT
+//! artifacts, and reports results on a reply channel.
+
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::matrix::Matrix;
+use super::metrics::Metrics;
+use super::scheduler::{Partition, Tile};
+use crate::pack::PlaneBatch;
+use crate::runtime::Runtime;
+
+/// Depth of each worker's job queue: small, so a slow CU exerts
+/// backpressure on the leader instead of buffering unbounded work.
+pub const QUEUE_DEPTH: usize = 4;
+
+pub enum Job {
+    /// One full output tile: accumulate C_tile over all K steps.
+    GemmTile {
+        artifact: String,
+        a: Arc<Matrix>,
+        b: Arc<Matrix>,
+        c: Arc<Matrix>,
+        tile: Tile,
+        part: Partition,
+        reply: Sender<TileResult>,
+    },
+    /// A chunk of a stream operator (Tab. I/II microbenchmark path).
+    Stream {
+        artifact: String,
+        kind: StreamKind,
+        operands: Vec<PlaneBatch>,
+        offset: usize,
+        reply: Sender<StreamResult>,
+    },
+    Shutdown,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub enum StreamKind {
+    Binop,
+    Mac,
+}
+
+pub struct TileResult {
+    pub tile: Tile,
+    pub planes: Result<PlaneBatch>,
+}
+
+pub struct StreamResult {
+    pub offset: usize,
+    pub planes: Result<PlaneBatch>,
+}
+
+pub struct WorkerHandle {
+    pub cu: usize,
+    sender: SyncSender<Job>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl WorkerHandle {
+    /// Spawn the worker; it creates its own Runtime on its own thread (the
+    /// PJRT client is not Send).
+    pub fn spawn(cu: usize, artifact_dir: std::path::PathBuf, metrics: Arc<Metrics>) -> Self {
+        let (tx, rx) = sync_channel::<Job>(QUEUE_DEPTH);
+        let thread = std::thread::Builder::new()
+            .name(format!("apfp-cu{cu}"))
+            .spawn(move || worker_main(cu, &artifact_dir, rx, metrics))
+            .expect("spawning CU worker");
+        WorkerHandle { cu, sender: tx, thread: Some(thread) }
+    }
+
+    /// Enqueue a job (blocks when the queue is full — backpressure).
+    pub fn submit(&self, job: Job) {
+        self.sender.send(job).expect("CU worker hung up");
+    }
+}
+
+impl Drop for WorkerHandle {
+    fn drop(&mut self) {
+        let _ = self.sender.send(Job::Shutdown);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn worker_main(cu: usize, dir: &std::path::Path, rx: Receiver<Job>, metrics: Arc<Metrics>) {
+    let rt = match Runtime::new(dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("CU{cu}: runtime init failed: {e:#}");
+            // Drain jobs, reporting the failure to every reply channel.
+            for job in rx {
+                match job {
+                    Job::GemmTile { tile, reply, .. } => {
+                        let _ = reply.send(TileResult {
+                            tile,
+                            planes: Err(anyhow::anyhow!("CU{cu} runtime unavailable")),
+                        });
+                    }
+                    Job::Stream { offset, reply, .. } => {
+                        let _ = reply.send(StreamResult {
+                            offset,
+                            planes: Err(anyhow::anyhow!("CU{cu} runtime unavailable")),
+                        });
+                    }
+                    Job::Shutdown => break,
+                }
+            }
+            return;
+        }
+    };
+
+    for job in rx {
+        match job {
+            Job::Shutdown => break,
+            Job::GemmTile { artifact, a, b, c, tile, part, reply } => {
+                let planes = run_tile(&rt, &artifact, &a, &b, &c, tile, &part, &metrics);
+                let _ = reply.send(TileResult { tile, planes });
+            }
+            Job::Stream { artifact, kind, operands, offset, reply } => {
+                let t0 = Instant::now();
+                let planes = match kind {
+                    StreamKind::Binop => {
+                        rt.exec_stream_binop(&artifact, &operands[0], &operands[1])
+                    }
+                    StreamKind::Mac => {
+                        rt.exec_stream_mac(&artifact, &operands[0], &operands[1], &operands[2])
+                    }
+                };
+                metrics.add_exec_ns(t0.elapsed().as_nanos() as u64);
+                metrics.add_calls(1);
+                let _ = reply.send(StreamResult { offset, planes });
+            }
+        }
+    }
+}
+
+/// Execute one output tile: sequential K accumulation through the artifact
+/// (the §III dataflow; the C tile stays "on chip" between K steps).
+fn run_tile(
+    rt: &Runtime,
+    artifact: &str,
+    a: &Matrix,
+    b: &Matrix,
+    c: &Matrix,
+    tile: Tile,
+    part: &Partition,
+    metrics: &Metrics,
+) -> Result<PlaneBatch> {
+    let (tn, tm, kt) = (part.tile_n, part.tile_m, part.k_tile);
+    let t_marshal = Instant::now();
+    let mut c_tile = c.extract_tile(tile.r0, tile.c0, tn, tm);
+    metrics.add_marshal_ns(t_marshal.elapsed().as_nanos() as u64);
+
+    for step in 0..part.k_steps() {
+        let k0 = step * kt;
+        let tm_marshal = Instant::now();
+        let a_tile = a.extract_tile(tile.r0, k0, tn, kt);
+        let b_tile = b.extract_tile(k0, tile.c0, kt, tm);
+        metrics.add_marshal_ns(tm_marshal.elapsed().as_nanos() as u64);
+
+        let t_exec = Instant::now();
+        c_tile = rt.exec_gemm_tile(artifact, &a_tile, &b_tile, &c_tile)?;
+        metrics.add_exec_ns(t_exec.elapsed().as_nanos() as u64);
+        metrics.add_calls(1);
+        metrics.add_macs((tn * tm * kt) as u64);
+    }
+    metrics.add_tiles(1);
+    Ok(c_tile)
+}

@@ -1,0 +1,106 @@
+//! DSP48E2 counting for the Karatsuba multiplier (§II-A).
+//!
+//! The recursion tree splits the `prec`-bit mantissa multiplication in
+//! half per level (3 children each) until operands are at most
+//! `mult_base_bits` wide, where a naive partial-product multiplier is
+//! instantiated out of DSP48E2 slices.  The DSP48E2 multiplies 27x18-bit
+//! signed operands; the paper drives it as an 18x18 integer multiplier, so
+//! an unsigned w-bit naive multiplier tiles into ceil(w/17)^2 DSPs
+//! (17 usable unsigned bits per port).
+//!
+//! Calibration check (tests in hwmodel::tests): 448-bit mantissa at the
+//! 72-bit bottom-out gives 27 leaves x ceil(56/17)^2 = 27*16 = 432 DSPs =
+//! 3.5% of the U250 — the paper's Tab. I reports 4% per CU.
+
+/// Usable unsigned multiplier bits per DSP48E2 port in 18x18 mode.
+pub const DSP_PORT_BITS: u32 = 17;
+
+/// DSPs for a naive (partial-product array) w x w-bit multiplier.
+pub fn naive_dsps(w: u32) -> u32 {
+    let tiles = w.div_ceil(DSP_PORT_BITS);
+    tiles * tiles
+}
+
+/// Karatsuba leaf geometry: (number of leaf multipliers, leaf width in bits).
+///
+/// Operand width halves per level (the sign-tracked |a1-a0| trick keeps
+/// children at exactly half width); recursion stops at or below
+/// `mult_base_bits`.
+pub fn karatsuba_leaves(prec: u32, mult_base_bits: u32) -> (u32, u32) {
+    let mut width = prec;
+    let mut leaves = 1u32;
+    while width > mult_base_bits {
+        width = width.div_ceil(2);
+        leaves *= 3;
+    }
+    (leaves, width)
+}
+
+/// Total DSP48E2s for one `prec`-bit Karatsuba multiplier.
+pub fn multiplier_dsps(prec: u32, mult_base_bits: u32) -> u32 {
+    let (leaves, width) = karatsuba_leaves(prec, mult_base_bits);
+    leaves * naive_dsps(width)
+}
+
+/// Recursion depth (levels of decomposition).
+pub fn karatsuba_depth(prec: u32, mult_base_bits: u32) -> u32 {
+    let mut width = prec;
+    let mut depth = 0;
+    while width > mult_base_bits {
+        width = width.div_ceil(2);
+        depth += 1;
+    }
+    depth
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn naive_tiles() {
+        assert_eq!(naive_dsps(17), 1);
+        assert_eq!(naive_dsps(18), 4);
+        assert_eq!(naive_dsps(34), 4);
+        assert_eq!(naive_dsps(56), 16);
+        assert_eq!(naive_dsps(72), 25);
+    }
+
+    #[test]
+    fn leaves_512() {
+        // 448 -> 224 -> 112 -> 56 (<= 72): 3 levels, 27 leaves of 56 bits
+        assert_eq!(karatsuba_leaves(448, 72), (27, 56));
+        assert_eq!(karatsuba_depth(448, 72), 3);
+        // bottom out at 36: one more level -> 81 leaves of 28 bits
+        assert_eq!(karatsuba_leaves(448, 36), (81, 28));
+        // huge base: no decomposition at all
+        assert_eq!(karatsuba_leaves(448, 448), (1, 448));
+    }
+
+    #[test]
+    fn dsp_counts_match_paper_scale() {
+        // 512-bit numbers (448-bit mantissa), 72-bit bottom-out
+        let d512 = multiplier_dsps(448, 72);
+        assert_eq!(d512, 27 * 16); // 432 = 3.5% of 12288 (paper: "4%")
+        // Karatsuba beats naive DSP count at full width
+        assert!(d512 < naive_dsps(448));
+        // 1024-bit (960-bit mantissa): 960->480->240->120->60, 81 leaves
+        let d1024 = multiplier_dsps(960, 72);
+        assert_eq!(d1024, 81 * naive_dsps(60));
+        // each Karatsuba level costs 3 half-width multipliers (§V-D:
+        // a 1024-bit unit "roughly corresponds" to three 512-bit ones)
+        let ratio = d1024 as f64 / d512 as f64;
+        assert!((2.0..4.5).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn smaller_base_fewer_or_equal_dsps() {
+        // going one level deeper can only reduce DSPs (3 * (w/2 tiles)^2
+        // <= (w tiles)^2 for w > 2 tiles) — the resource side of Fig. 3
+        let d72 = multiplier_dsps(448, 72);
+        let d36 = multiplier_dsps(448, 36);
+        let d144 = multiplier_dsps(448, 144);
+        assert!(d36 <= d72);
+        assert!(d72 <= d144);
+    }
+}

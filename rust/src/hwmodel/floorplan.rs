@@ -1,0 +1,101 @@
+//! SLR / DDR-bank placement (the paper's Fig. 4 assignment scheme).
+//!
+//! Compute units are assigned to DDR banks round-robin starting at bank 1
+//! (where the host-interface logic lives), then banks 0, 2, 3; each bank
+//! maps onto the SLR it is attached to, so the first four CUs land on
+//! distinct chiplets and replication wraps around.  Placement fails when a
+//! chiplet's share of compute units no longer fits its usable area — the
+//! constraint that caps the paper at 16 multiplier CUs / 8 GEMM CUs.
+
+use super::{u250, DesignPoint};
+
+/// Fig. 4 bank visit order.
+pub const BANK_ORDER: [u32; 4] = [1, 0, 2, 3];
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Placement {
+    pub cu: usize,
+    pub ddr_bank: u32,
+    pub slr: u32,
+}
+
+/// Round-robin CU -> (bank, SLR) assignment; SLR i hosts bank i.
+pub fn assign(compute_units: usize) -> Vec<Placement> {
+    (0..compute_units)
+        .map(|cu| {
+            let bank = BANK_ORDER[cu % BANK_ORDER.len()];
+            Placement { cu, ddr_bank: bank, slr: bank }
+        })
+        .collect()
+}
+
+/// Check that a design point's CUs fit their SLRs; returns the placement.
+pub fn place(d: &DesignPoint, cu_clbs: u32) -> Result<Vec<Placement>, String> {
+    let placements = assign(d.compute_units);
+    let slr_clbs = u250::CLB_TOTAL as f64 / u250::SLRS as f64 * u250::SLR_USABLE;
+    for slr in 0..u250::SLRS {
+        let on_slr = placements.iter().filter(|p| p.slr == slr).count();
+        let mut used = on_slr as f64 * cu_clbs as f64;
+        if slr <= 1 {
+            // the shell occupies part of SLR0/SLR1 on the xdma shell
+            used += super::resources::SHELL_CLBS as f64 / 2.0;
+        }
+        if used > slr_clbs {
+            return Err(format!(
+                "SLR{slr} over capacity: {on_slr} CUs x {cu_clbs} CLBs (+shell) \
+                 > {:.0} usable CLBs",
+                slr_clbs
+            ));
+        }
+    }
+    Ok(placements)
+}
+
+/// CUs per DDR bank (for the DRAM bandwidth-sharing model in `sim`).
+pub fn cus_per_bank(compute_units: usize) -> [usize; 4] {
+    let mut counts = [0usize; 4];
+    for p in assign(compute_units) {
+        counts[p.ddr_bank as usize] += 1;
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Fig. 4: first 8 CUs -> banks 1,0,2,3,1,0,2,3.
+    #[test]
+    fn fig4_assignment() {
+        let p = assign(8);
+        let banks: Vec<u32> = p.iter().map(|x| x.ddr_bank).collect();
+        assert_eq!(banks, vec![1, 0, 2, 3, 1, 0, 2, 3]);
+        // each CU stays within the chiplet of its bank
+        assert!(p.iter().all(|x| x.slr == x.ddr_bank));
+    }
+
+    #[test]
+    fn first_four_on_distinct_slrs() {
+        let p = assign(4);
+        let mut slrs: Vec<u32> = p.iter().map(|x| x.slr).collect();
+        slrs.sort();
+        assert_eq!(slrs, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn bank_sharing_counts() {
+        assert_eq!(cus_per_bank(1), [0, 1, 0, 0]);
+        assert_eq!(cus_per_bank(4), [1, 1, 1, 1]);
+        assert_eq!(cus_per_bank(16), [4, 4, 4, 4]);
+        assert_eq!(cus_per_bank(6), [2, 2, 1, 1]); // order 1,0,2,3,1,0
+    }
+
+    #[test]
+    fn capacity_rejects_oversized() {
+        // 4x-per-SLR of a ~4% CU fits; a ~25%-of-device CU does not at 8x
+        let d = crate::hwmodel::DesignPoint::mult_512(16);
+        assert!(place(&d, 8_000).is_ok());
+        let d8 = crate::hwmodel::DesignPoint::gemm_1024(8);
+        assert!(place(&d8, 40_000).is_err());
+    }
+}

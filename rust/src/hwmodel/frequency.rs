@@ -1,0 +1,128 @@
+//! Achievable clock frequency model (the Fig. 3 annotations + the frequency
+//! columns of Tab. I–III).
+//!
+//! Critical path = base routing/logic delay
+//!               + wide-adder carry chain (grows with `add_base_bits`)
+//!               + naive-leaf DSP cascade (grows with `mult_base_bits`)
+//!               + datapath width term
+//!               + (GEMM only) tile accumulation feedback path.
+//!
+//! Replication degrades routing (SLR crossings, congestion): the divisor
+//! grows with (CUs - 1) x per-CU area.  Congestion alone cannot push a
+//! design below the ~293 MHz the shell's kernel clock reliably closes at —
+//! the paper's many-CU designs all land at 293–300 MHz — but a long
+//! *pipeline* critical path can (the monolithic 1024-bit GEMM unit closes
+//! at 212 MHz, §V-D).
+
+use super::DesignPoint;
+
+/// Naive multipliers wider than this fail synthesis outright (Fig. 3: the
+/// 288-bit fallback "fails synthesis altogether").
+pub const MAX_SYNTH_MULT_BASE: u32 = 256;
+
+/// Device pipeline ceiling (DSP48E2 fmax region on the U250 -2 speed grade).
+pub const F_CEILING_MHZ: f64 = 500.0;
+
+/// Congestion floor: the slowest kernel clock the shell quantizes to.
+pub const F_FLOOR_MHZ: f64 = 293.0;
+
+/// ns per bit of combinational carry chain in one adder stage.
+const T_CARRY_PER_BIT: f64 = 0.004;
+/// ns per bit of naive-leaf multiplier width (DSP cascade + PP gather).
+const T_LEAF_PER_BIT: f64 = 0.012;
+/// ns per mantissa bit of general datapath fan-out.
+const T_WIDTH_PER_BIT: f64 = 0.001;
+/// ns per mantissa bit of GEMM tile accumulate/writeback feedback.
+const T_GEMM_PER_BIT: f64 = 0.00195;
+/// fixed routing + logic (ns).
+const T_BASE: f64 = 0.62;
+/// congestion sensitivity: delay grows with neighbours' area.
+const CONGESTION: f64 = 1.5;
+
+/// Pipeline-limited frequency of a single compute unit.
+pub fn pipeline_mhz(d: &DesignPoint) -> f64 {
+    let prec = d.prec() as f64;
+    let mut t = T_BASE
+        + T_WIDTH_PER_BIT * prec
+        + T_CARRY_PER_BIT * d.add_base_bits as f64
+        + T_LEAF_PER_BIT * d.mult_base_bits as f64;
+    if d.gemm {
+        t += T_GEMM_PER_BIT * prec;
+    }
+    (1000.0 / t).min(F_CEILING_MHZ)
+}
+
+/// Post-placement frequency including replication congestion.
+pub fn achievable_mhz(d: &DesignPoint, _total_clb_frac: f64) -> f64 {
+    let f_base = pipeline_mhz(d);
+    let cu_frac = super::resources::cu_clbs(d) as f64 / super::u250::CLB_TOTAL as f64;
+    let congestion = 1.0 + CONGESTION * (d.compute_units as f64 - 1.0) * cu_frac;
+    let f_cong = f_base / congestion;
+    // congestion saturates at the shell floor; a slow pipeline does not
+    f_cong.max(F_FLOOR_MHZ.min(f_base))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwmodel::DesignPoint;
+
+    /// Tab. I frequency column: 456 / 376 / 300 / 300 / 300 MHz.
+    #[test]
+    fn tab1_frequencies() {
+        let f = |cus| achievable_mhz(&DesignPoint::mult_512(cus), 0.0);
+        assert!((f(1) - 456.0).abs() < 20.0, "1 CU: {:.0}", f(1));
+        assert!((f(4) - 376.0).abs() < 35.0, "4 CUs: {:.0}", f(4));
+        for cus in [8, 12, 16] {
+            assert!((f(cus) - 300.0).abs() < 40.0, "{cus} CUs: {:.0}", f(cus));
+        }
+        assert!(f(1) > f(4) && f(4) >= f(8));
+    }
+
+    /// Tab. II: 361 MHz @ 1 CU, 293 MHz @ 4 CUs (1024-bit).
+    #[test]
+    fn tab2_frequencies() {
+        let f1 = achievable_mhz(&DesignPoint::mult_1024(1), 0.0);
+        let f4 = achievable_mhz(&DesignPoint::mult_1024(4), 0.0);
+        assert!((f1 - 361.0).abs() < 25.0, "1 CU: {f1:.0}");
+        assert!((f4 - 293.0).abs() < 20.0, "4 CUs: {f4:.0}");
+    }
+
+    /// Tab. III: GEMM 512 closes at 327 (1 CU) down to ~278-293.
+    #[test]
+    fn tab3_gemm_frequencies() {
+        let f1 = achievable_mhz(&DesignPoint::gemm_512(1), 0.0);
+        assert!((f1 - 327.0).abs() < 15.0, "1 CU: {f1:.0}");
+        for cus in [2, 4, 8] {
+            let f = achievable_mhz(&DesignPoint::gemm_512(cus), 0.0);
+            assert!((f - 285.0).abs() < 25.0, "{cus} CUs: {f:.0}");
+        }
+    }
+
+    /// §V-D: the monolithic 1024-bit GEMM unit is downclocked to ~212 MHz.
+    #[test]
+    fn gemm_1024_downclock() {
+        let f = achievable_mhz(&DesignPoint::gemm_1024(1), 0.0);
+        assert!((f - 212.0).abs() < 20.0, "got {f:.0}");
+    }
+
+    /// Fig. 3 shape: 36-bit bottom-out clocks fastest, 144 hampers, wide
+    /// adder stages degrade frequency.
+    #[test]
+    fn fig3_frequency_shape() {
+        let f = |mult, add| {
+            pipeline_mhz(&DesignPoint {
+                bits: 512,
+                compute_units: 1,
+                mult_base_bits: mult,
+                add_base_bits: add,
+                gemm: false,
+            })
+        };
+        assert!(f(36, 64) > f(72, 64));
+        assert!(f(72, 64) > f(144, 64));
+        assert!(f(144, 64) < 360.0); // "significantly hampers"
+        assert!(f(72, 64) > f(72, 512));
+        assert!(f(72, 512) > f(72, 1024));
+    }
+}

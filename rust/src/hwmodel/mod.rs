@@ -1,0 +1,202 @@
+//! Analytic model of the Alveo U250 implementation — the substitute for
+//! Vitis/Vivado synthesis (DESIGN.md §1).
+//!
+//! The model predicts, for a given configuration (`APFP_BITS`,
+//! `APFP_MULT_BASE_BITS`, `APFP_ADD_BASE_BITS`, compute units):
+//!
+//! * DSP48E2 usage — exact combinatorics of the Karatsuba recursion tree
+//!   ([`dsp`]);
+//! * CLB usage — recombination adders, pipeline registers, stream logic
+//!   ([`resources`]);
+//! * achievable frequency — carry-chain, DSP-cascade and congestion limits
+//!   ([`frequency`]);
+//! * placement — the Fig. 4 SLR / DDR-bank round-robin ([`floorplan`]).
+//!
+//! Constants are calibrated against the paper's reported design points
+//! (Fig. 3, Tab. I–III); unit tests assert that the calibration reproduces
+//! them.  The goal is the *shape* of the design space — which
+//! configurations are Pareto-optimal, where synthesis fails, how frequency
+//! degrades — from the physical causes the paper names, not a lookup table
+//! of the paper's numbers.
+
+pub mod dsp;
+pub mod floorplan;
+pub mod frequency;
+pub mod resources;
+
+/// Alveo U250 device constants (Xilinx DS962 / UG1120).
+pub mod u250 {
+    /// DSP48E2 slices on the device.
+    pub const DSP_TOTAL: u32 = 12_288;
+    /// Configurable logic blocks (8 LUT6 + 16 FF each).
+    pub const CLB_TOTAL: u32 = 216_000;
+    /// Super Logical Regions (chiplets).
+    pub const SLRS: u32 = 4;
+    /// DDR4 memory banks (one per SLR on the evaluated shell).
+    pub const DDR_BANKS: u32 = 4;
+    /// Peak bandwidth per DDR4 bank, bytes/s (§V: 19.2 GB/s).
+    pub const DDR_BANK_BW: f64 = 19.2e9;
+    /// Usable fraction of an SLR for user kernels (the shell occupies part
+    /// of SLR0/SLR1 on the xdma shell).
+    pub const SLR_USABLE: f64 = 0.92;
+}
+
+/// One evaluated hardware design point.
+#[derive(Clone, Debug)]
+pub struct DesignPoint {
+    pub bits: u32,
+    pub compute_units: usize,
+    pub mult_base_bits: u32,
+    pub add_base_bits: u32,
+    /// true for the GEMM accelerator (adds tile buffers + adder), false for
+    /// the bare multiplier microbenchmark kernel.
+    pub gemm: bool,
+}
+
+/// Synthesis outcome for a design point.
+#[derive(Clone, Debug)]
+pub struct Synthesis {
+    pub dsps: u32,
+    pub dsp_frac: f64,
+    pub clbs: u32,
+    pub clb_frac: f64,
+    pub frequency_mhz: f64,
+    /// None = fits; Some(reason) = synthesis/implementation fails, like the
+    /// paper's 288-bit naive-multiplication configuration.
+    pub failure: Option<String>,
+}
+
+impl DesignPoint {
+    pub fn mult_512(cus: usize) -> Self {
+        DesignPoint { bits: 512, compute_units: cus, mult_base_bits: 72, add_base_bits: 64, gemm: false }
+    }
+
+    pub fn mult_1024(cus: usize) -> Self {
+        DesignPoint { bits: 1024, compute_units: cus, mult_base_bits: 72, add_base_bits: 64, gemm: false }
+    }
+
+    pub fn gemm_512(cus: usize) -> Self {
+        DesignPoint { bits: 512, compute_units: cus, mult_base_bits: 72, add_base_bits: 64, gemm: true }
+    }
+
+    pub fn gemm_1024(cus: usize) -> Self {
+        DesignPoint { bits: 1024, compute_units: cus, mult_base_bits: 72, add_base_bits: 64, gemm: true }
+    }
+
+    /// Mantissa bits (Fig. 1).
+    pub fn prec(&self) -> u32 {
+        self.bits - 64
+    }
+
+    /// Run the analytic "synthesis".
+    pub fn synthesize(&self) -> Synthesis {
+        let dsps_per_cu = dsp::multiplier_dsps(self.prec(), self.mult_base_bits);
+        let dsps = dsps_per_cu * self.compute_units as u32;
+        let clb_cu = resources::cu_clbs(self);
+        let multi = if self.compute_units > 1 { resources::MULTI_CU_CLBS } else { 0 };
+        let clbs = resources::SHELL_CLBS + multi + clb_cu * self.compute_units as u32;
+        let clb_frac = clbs as f64 / u250::CLB_TOTAL as f64;
+        let dsp_frac = dsps as f64 / u250::DSP_TOTAL as f64;
+
+        let mut failure = None;
+        if self.mult_base_bits > frequency::MAX_SYNTH_MULT_BASE {
+            failure = Some(format!(
+                "naive {}x{}-bit multiplier exceeds routable DSP cascade depth \
+                 (paper Fig. 3: 288-bit fails synthesis)",
+                self.mult_base_bits, self.mult_base_bits
+            ));
+        }
+        match floorplan::place(self, clb_cu) {
+            Ok(_) => {}
+            Err(e) => failure = failure.or(Some(e)),
+        }
+        if clb_frac > 0.88 {
+            failure = failure.or(Some(format!(
+                "CLB utilization {:.1}% exceeds routable density",
+                clb_frac * 100.0
+            )));
+        }
+
+        Synthesis {
+            dsps,
+            dsp_frac,
+            clbs,
+            clb_frac,
+            frequency_mhz: frequency::achievable_mhz(self, clb_frac),
+            failure,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tab. I resource columns: 512-bit multiplier, CLB/DSP percentages.
+    #[test]
+    fn tab1_resource_calibration() {
+        // (CUs, paper CLB %, paper DSP %)
+        for (cus, clb, dsp) in [(1, 16.0, 4.0), (4, 37.0, 14.0), (8, 48.0, 28.0), (12, 62.0, 42.0), (16, 75.0, 56.0)] {
+            let s = DesignPoint::mult_512(cus).synthesize();
+            assert!(s.failure.is_none(), "CUs={cus}: {:?}", s.failure);
+            let clb_got = s.clb_frac * 100.0;
+            let dsp_got = s.dsp_frac * 100.0;
+            assert!((clb_got - clb).abs() < 8.0, "CLB CUs={cus}: got {clb_got:.1}%, paper {clb}%");
+            assert!((dsp_got - dsp).abs() < 2.0, "DSP CUs={cus}: got {dsp_got:.1}%, paper {dsp}%");
+        }
+    }
+
+    /// Tab. II: 1024-bit multiplier DSP usage.
+    #[test]
+    fn tab2_resource_calibration() {
+        let s1 = DesignPoint::mult_1024(1).synthesize();
+        assert!((s1.dsp_frac * 100.0 - 8.0).abs() < 3.5, "got {:.1}%", s1.dsp_frac * 100.0);
+        let s4 = DesignPoint::mult_1024(4).synthesize();
+        assert!(s4.failure.is_none());
+        assert!(s4.dsp_frac > 3.0 * s1.dsp_frac);
+    }
+
+    /// Tab. III: GEMM designs use more CLB per CU than the bare multiplier.
+    #[test]
+    fn tab3_gemm_overhead() {
+        let m = DesignPoint::mult_512(1).synthesize();
+        let g = DesignPoint::gemm_512(1).synthesize();
+        assert!(g.clbs > m.clbs);
+        let got = g.clb_frac * 100.0;
+        assert!((got - 18.9).abs() < 6.0, "paper 18.9%, got {got:.1}%");
+    }
+
+    /// Frequency degrades with replication (Tab. I: 456 -> 300 MHz).
+    #[test]
+    fn frequency_degrades_with_cus() {
+        let f1 = DesignPoint::mult_512(1).synthesize().frequency_mhz;
+        let f16 = DesignPoint::mult_512(16).synthesize().frequency_mhz;
+        assert!(f1 > 400.0, "1 CU should clock > 400 MHz, got {f1:.0}");
+        assert!(f16 < 330.0, "16 CUs congested, got {f16:.0}");
+        assert!(f1 > f16);
+    }
+
+    /// Fig. 3: 288-bit naive fallback fails synthesis.
+    #[test]
+    fn mult_base_288_fails() {
+        let mut d = DesignPoint::mult_512(1);
+        d.mult_base_bits = 288;
+        assert!(d.synthesize().failure.is_some());
+    }
+
+    /// 17 CUs of the 512-bit multiplier exceed the device (paper stops at 16).
+    #[test]
+    fn replication_limit() {
+        assert!(DesignPoint::mult_512(16).synthesize().failure.is_none());
+        assert!(DesignPoint::mult_512(24).synthesize().failure.is_some());
+    }
+
+    /// A single 1024-bit GEMM CU occupies nearly a full SLR (§V-D).
+    #[test]
+    fn gemm_1024_nearly_fills_slr() {
+        let s = DesignPoint::gemm_1024(1).synthesize();
+        assert!(s.failure.is_none());
+        let got = s.clb_frac * 100.0;
+        assert!((got - 29.8).abs() < 9.0, "paper 29.8%, got {got:.1}%");
+    }
+}

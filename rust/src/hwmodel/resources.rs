@@ -1,0 +1,124 @@
+//! CLB estimation for multiplier / GEMM compute units.
+//!
+//! The dominant fabric consumers in the paper's design are (a) the
+//! recombination adders of the Karatsuba tree, (b) the partial-product
+//! accumulation of the naive leaf multipliers, and (c) pipeline registers.
+//! We count LUT-equivalents for (a) and (b) from the recursion geometry and
+//! convert to CLBs (8 LUT6 + 16 FF per CLB) with a routable packing factor;
+//! calibration constants are fixed against Tab. I/II/III (see
+//! hwmodel::tests) and the scaling between 512- and 1024-bit units follows
+//! the paper's own observation that one Karatsuba level costs ~3x (§V-D).
+
+use super::DesignPoint;
+
+/// Static infrastructure: XDMA shell + host interface (~10% of the U250).
+pub const SHELL_CLBS: u32 = 21_600;
+
+/// One-time cost of the multi-CU interconnect / bank crossbar (the paper
+/// places host logic at bank 1 and fans out round-robin, Fig. 4).
+pub const MULTI_CU_CLBS: u32 = 12_960;
+
+/// Per-CU fixed logic: operand stream FIFOs, control FSM (~0.5%).
+const FIXED_CU_CLBS: u32 = 1_080;
+
+/// LUTs -> CLBs: 8 LUTs + 16 FFs per CLB, 2 pipeline FFs per datapath LUT,
+/// 55% routable packing density.
+fn luts_to_clbs(luts: u64) -> u32 {
+    let clb = (luts as f64 / 8.0 + 2.0 * luts as f64 / 16.0) / 0.55;
+    clb.round() as u32
+}
+
+/// LUT-equivalents of the Karatsuba recombination adder tree: each node of
+/// width w needs ~6w bits of addition (two c1-input adds + the shifted
+/// recombination, §II-A).
+pub fn recombination_luts(prec: u32, mult_base_bits: u32) -> u64 {
+    let mut total: u64 = 0;
+    let mut width = prec;
+    let mut nodes: u64 = 1;
+    while width > mult_base_bits {
+        total += nodes * 6 * width as u64;
+        width = width.div_ceil(2);
+        nodes *= 3;
+    }
+    total
+}
+
+/// LUT-equivalents of the naive leaf multipliers' partial-product
+/// accumulation that does not fit in the DSP cascade (~tiles * w / 2 each).
+pub fn leaf_luts(prec: u32, mult_base_bits: u32) -> u64 {
+    let (leaves, w) = super::dsp::karatsuba_leaves(prec, mult_base_bits);
+    let tiles = w.div_ceil(super::dsp::DSP_PORT_BITS) as u64;
+    leaves as u64 * tiles * (w as u64 / 2)
+}
+
+/// Total datapath LUTs of one bare multiplier.
+pub fn multiplier_luts(prec: u32, mult_base_bits: u32) -> u64 {
+    recombination_luts(prec, mult_base_bits) + leaf_luts(prec, mult_base_bits)
+}
+
+/// CLBs of one compute unit (bare multiplier, or GEMM unit with its tile
+/// buffers, adder pipeline and writeback logic).
+pub fn cu_clbs(d: &DesignPoint) -> u32 {
+    let mut clbs = FIXED_CU_CLBS + luts_to_clbs(multiplier_luts(d.prec(), d.mult_base_bits));
+    if d.gemm {
+        // floating-point adder + tile accumulation storage control: scales
+        // linearly with width (the tile itself lives in BRAM/URAM)
+        clbs += 12 * d.prec();
+    }
+    clbs
+}
+
+/// Fig. 3 resource metric: CLBs of a *single multiplier only* (no shell),
+/// including the pipeline-register sensitivity to `add_base_bits` (smaller
+/// chunks => more stages => more registers).
+pub fn fig3_multiplier_clbs(prec: u32, mult_base_bits: u32, add_base_bits: u32) -> u32 {
+    let luts = multiplier_luts(prec, mult_base_bits) as f64;
+    let stages = (2 * prec).div_ceil(add_base_bits) as f64;
+    let ffs = luts * (1.0 + 0.25 * stages);
+    ((luts / 8.0 + ffs / 16.0) / 0.55).round() as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwmodel::DesignPoint;
+
+    #[test]
+    fn cu_clbs_calibration() {
+        // ~3.8% of 216k CLBs per 512-bit multiplier CU (Tab. I slope)
+        let c512 = cu_clbs(&DesignPoint::mult_512(1)) as f64 / 216_000.0;
+        assert!((0.030..0.048).contains(&c512), "512 CU frac = {c512:.3}");
+        // 1024-bit CU ~3x (one extra Karatsuba level, §V-D)
+        let c1024 = cu_clbs(&DesignPoint::mult_1024(1)) as f64 / 216_000.0;
+        let ratio = c1024 / c512;
+        assert!((2.5..4.0).contains(&ratio), "ratio = {ratio:.2}");
+    }
+
+    #[test]
+    fn gemm_adds_tile_logic() {
+        let m = cu_clbs(&DesignPoint::mult_512(1));
+        let g = cu_clbs(&DesignPoint::gemm_512(1));
+        assert!(g > m + 3000, "tile buffers/adder must cost CLBs: {m} -> {g}");
+    }
+
+    #[test]
+    fn fig3_resource_ordering() {
+        // resources shrink as adder stages get wider (fewer registers)...
+        let narrow = fig3_multiplier_clbs(448, 72, 32);
+        let mid = fig3_multiplier_clbs(448, 72, 64);
+        let wide = fig3_multiplier_clbs(448, 72, 256);
+        assert!(narrow > mid && mid > wide);
+        // ...and the 36-bit bottom-out costs more fabric than 72 (Fig. 3:
+        // "consistently high frequencies, but higher resource usage")
+        let b36 = fig3_multiplier_clbs(448, 36, 64);
+        let b72 = fig3_multiplier_clbs(448, 72, 64);
+        assert!(b36 > b72, "36-bit {b36} should exceed 72-bit {b72}");
+    }
+
+    #[test]
+    fn recombination_grows_with_depth() {
+        assert!(recombination_luts(448, 36) > recombination_luts(448, 72));
+        assert!(recombination_luts(448, 72) > recombination_luts(448, 144));
+        assert_eq!(recombination_luts(448, 448), 0); // pure naive: no tree
+    }
+}

@@ -1,0 +1,312 @@
+//! Dense APFP linear algebra on [`Matrix`] — the routines the paper's
+//! motivating SDP solvers (§I: SDPB-style interior-point methods) build on
+//! top of GEMM: Cholesky decomposition, triangular solves and inverses.
+//!
+//! Everything here computes in full APFP precision through `softfloat`;
+//! the O(n^3) matrix-matrix products can be routed through the accelerator
+//! ([`MatmulBackend::Device`]) exactly as the paper drops its FPGA GEMM
+//! into Elemental, while the O(n^3)/3 factorizations stay on the host
+//! (also true of SDPB, whose GEMM/SYRK calls dominate).
+
+use anyhow::Result;
+
+use crate::baseline;
+use crate::coordinator::{Device, Matrix};
+use crate::softfloat::ApFloat;
+
+/// Where to run matrix-matrix products.
+pub enum MatmulBackend<'d> {
+    /// Host softfloat (multithreaded blocked GEMM).
+    Host { threads: usize },
+    /// The virtual accelerator (bit-identical results).
+    Device(&'d Device),
+}
+
+impl MatmulBackend<'_> {
+    /// C = A*B (+C), dispatched to the selected backend.
+    pub fn gemm(&self, a: &Matrix, b: &Matrix, c: &Matrix) -> Result<Matrix> {
+        match self {
+            MatmulBackend::Host { threads } => Ok(baseline::gemm_threaded(a, b, c, *threads)),
+            MatmulBackend::Device(dev) => Ok(dev.gemm(a, b, c)?.0),
+        }
+    }
+}
+
+/// Transpose.
+pub fn transpose(a: &Matrix) -> Matrix {
+    Matrix::from_fn(a.cols(), a.rows(), a.prec(), |i, j| a.get(j, i).clone())
+}
+
+/// Identity matrix.
+pub fn identity(n: usize, prec: u32) -> Matrix {
+    Matrix::from_fn(n, n, prec, |i, j| {
+        if i == j { ApFloat::from_u64(1, prec) } else { ApFloat::zero(prec) }
+    })
+}
+
+/// Frobenius inner product <A, B> = sum_ij A_ij * B_ij.
+pub fn frob_inner(a: &Matrix, b: &Matrix) -> ApFloat {
+    let mut acc = ApFloat::zero(a.prec());
+    for i in 0..a.rows() {
+        for j in 0..a.cols() {
+            acc = acc.mac(a.get(i, j), b.get(i, j));
+        }
+    }
+    acc
+}
+
+/// Cholesky factorization A = L * L^T for symmetric positive-definite A.
+/// Returns None when a pivot is non-positive (A not PD) — which doubles as
+/// the PSD boundary test the barrier solver in examples/sdp_solver.rs uses.
+pub fn cholesky(a: &Matrix) -> Option<Matrix> {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "cholesky needs a square matrix");
+    let prec = a.prec();
+    let mut l = Matrix::zeros(n, n, prec);
+    for j in 0..n {
+        // d = A[j][j] - sum_k L[j][k]^2
+        let mut d = a.get(j, j).clone();
+        for k in 0..j {
+            let v = l.get(j, k);
+            d = d.sub(&v.mul(v));
+        }
+        if d.is_zero() || d.sign() {
+            return None; // not positive definite
+        }
+        let ljj = sqrt(&d);
+        let inv_ljj = reciprocal(&ljj);
+        l.set(j, j, ljj);
+        for i in (j + 1)..n {
+            let mut s = a.get(i, j).clone();
+            for k in 0..j {
+                s = s.sub(&l.get(i, k).mul(l.get(j, k)));
+            }
+            l.set(i, j, s.mul(&inv_ljj));
+        }
+    }
+    Some(l)
+}
+
+/// Solve L * X = B for lower-triangular L (forward substitution), matrix RHS.
+pub fn solve_lower(l: &Matrix, b: &Matrix) -> Matrix {
+    let n = l.rows();
+    let prec = l.prec();
+    let mut x = Matrix::zeros(n, b.cols(), prec);
+    // cache reciprocals of the diagonal (one Newton solve per row)
+    let inv_diag: Vec<ApFloat> = (0..n).map(|i| reciprocal(l.get(i, i))).collect();
+    for c in 0..b.cols() {
+        for i in 0..n {
+            let mut s = b.get(i, c).clone();
+            for k in 0..i {
+                s = s.sub(&l.get(i, k).mul(x.get(k, c)));
+            }
+            x.set(i, c, s.mul(&inv_diag[i]));
+        }
+    }
+    x
+}
+
+/// Solve L^T * X = B for lower-triangular L (back substitution).
+pub fn solve_lower_transpose(l: &Matrix, b: &Matrix) -> Matrix {
+    let n = l.rows();
+    let prec = l.prec();
+    let mut x = Matrix::zeros(n, b.cols(), prec);
+    let inv_diag: Vec<ApFloat> = (0..n).map(|i| reciprocal(l.get(i, i))).collect();
+    for c in 0..b.cols() {
+        for i in (0..n).rev() {
+            let mut s = b.get(i, c).clone();
+            for k in (i + 1)..n {
+                s = s.sub(&l.get(k, i).mul(x.get(k, c)));
+            }
+            x.set(i, c, s.mul(&inv_diag[i]));
+        }
+    }
+    x
+}
+
+/// A^{-1} for SPD A via Cholesky: solve L Y = I, then L^T X = Y.
+/// The two triangular solves are O(n^3); with `backend` the caller can
+/// instead form A^{-1} = L^{-T} * L^{-1} with the accelerator GEMM.
+pub fn spd_inverse(a: &Matrix) -> Option<Matrix> {
+    let l = cholesky(a)?;
+    let y = solve_lower(&l, &identity(a.rows(), a.prec()));
+    Some(solve_lower_transpose(&l, &y))
+}
+
+/// sqrt by Newton iteration on APFP (converges quadratically; the seed
+/// comes from f64, so ~6 iterations reach 448-bit precision).
+pub fn sqrt(x: &ApFloat) -> ApFloat {
+    assert!(!x.sign(), "sqrt of negative");
+    if x.is_zero() {
+        return x.clone();
+    }
+    let prec = x.prec();
+    // seed from f64 with exponent handling for out-of-range values
+    let e = x.exp();
+    // scale x to ~1: x = m * 2^e -> sqrt(x) = sqrt(m * 2^(e mod 2)) * 2^(e div 2)
+    let e_half = e.div_euclid(2);
+    let e_rem = e - 2 * e_half; // 0 or 1
+    let scaled = scale_exp(x, -e + e_rem); // in [0.5, 2)
+    let mut y = ApFloat::from_f64(scaled.to_f64().sqrt(), prec);
+    let half = ApFloat::from_f64(0.5, prec);
+    // Newton: y <- (y + scaled/y) / 2 ; division via reciprocal
+    for _ in 0..iterations_for(prec) {
+        let q = scaled.mul(&reciprocal(&y));
+        y = y.add(&q).mul(&half);
+    }
+    scale_exp(&y, e_half)
+}
+
+/// 1/x by Newton-Raphson on APFP: r <- r * (2 - x*r), f64 seed.
+pub fn reciprocal(x: &ApFloat) -> ApFloat {
+    assert!(!x.is_zero(), "reciprocal of zero");
+    let prec = x.prec();
+    // work on the mantissa scaled near 1 to keep the f64 seed in range
+    let e = x.exp();
+    let scaled = scale_exp(x, -e); // in [0.5, 1)
+    let mut r = ApFloat::from_f64(1.0 / scaled.to_f64(), prec);
+    let two = ApFloat::from_u64(2, prec);
+    for _ in 0..iterations_for(prec) {
+        r = r.mul(&two.sub(&scaled.mul(&r)));
+    }
+    scale_exp(&r, -e)
+}
+
+fn iterations_for(prec: u32) -> u32 {
+    // f64 seed gives ~50 correct bits; Newton doubles per step (+ margin)
+    let mut bits = 50u32;
+    let mut iters = 0;
+    while bits < prec + 8 {
+        bits *= 2;
+        iters += 1;
+    }
+    iters + 1
+}
+
+/// x * 2^k (exact exponent shift).
+pub fn scale_exp(x: &ApFloat, k: i64) -> ApFloat {
+    if x.is_zero() {
+        return x.clone();
+    }
+    ApFloat::from_parts(x.sign(), x.exp() + k, x.limbs().to_vec(), x.prec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const P: u32 = 448;
+
+    fn approx(a: &ApFloat, b: f64, tol: f64) {
+        assert!((a.to_f64() - b).abs() <= tol * b.abs().max(1.0), "{} vs {}", a.to_f64(), b);
+    }
+
+    #[test]
+    fn reciprocal_high_precision() {
+        // 1/3 to 448 bits: 3 * (1/3) must round-trip to within 1 ulp of 1
+        let three = ApFloat::from_u64(3, P);
+        let r = reciprocal(&three);
+        let prod = three.mul(&r);
+        let one = ApFloat::from_u64(1, P);
+        let diff = prod.sub(&one);
+        assert!(diff.is_zero() || diff.exp() < -440, "residual exp {}", diff.exp());
+        // huge/tiny exponents stay exact in scaling
+        let big = scale_exp(&three, 1000);
+        approx(&big.mul(&reciprocal(&big)), 1.0, 1e-15);
+    }
+
+    #[test]
+    fn sqrt_high_precision() {
+        let two = ApFloat::from_u64(2, P);
+        let s = sqrt(&two);
+        let sq = s.mul(&s);
+        let diff = sq.sub(&two);
+        assert!(diff.is_zero() || diff.exp() < -438, "residual exp {}", diff.exp());
+        approx(&sqrt(&ApFloat::from_u64(9, P)), 3.0, 1e-15);
+        assert!(sqrt(&ApFloat::zero(P)).is_zero());
+        // odd exponent path
+        let eight = ApFloat::from_u64(8, P);
+        approx(&sqrt(&eight), 8f64.sqrt(), 1e-15);
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        // A = M*M^T + n*I is SPD
+        let n = 6;
+        let m = Matrix::random(n, n, P, 7, 3);
+        let mt = transpose(&m);
+        let mut a = baseline::gemm_serial(&m, &mt, &Matrix::zeros(n, n, P));
+        for i in 0..n {
+            a.set(i, i, a.get(i, i).add(&ApFloat::from_u64(1 << 20, P)));
+        }
+        let l = cholesky(&a).expect("SPD");
+        let back = baseline::gemm_serial(&l, &transpose(&l), &Matrix::zeros(n, n, P));
+        assert!(back.max_rel_err_f64(&a) < 1e-12);
+        // strictly lower-triangular structure
+        for i in 0..n {
+            for j in (i + 1)..n {
+                assert!(l.get(i, j).is_zero());
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut a = identity(3, P);
+        a.set(2, 2, ApFloat::from_i64(-1, P));
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let n = 5;
+        let mut l = Matrix::random(n, n, P, 9, 2);
+        for i in 0..n {
+            l.set(i, i, ApFloat::from_u64(3, P)); // well-conditioned diagonal
+            for j in (i + 1)..n {
+                l.set(i, j, ApFloat::zero(P));
+            }
+        }
+        let b = Matrix::random(n, 2, P, 10, 2);
+        let x = solve_lower(&l, &b);
+        let back = baseline::gemm_serial(&l, &x, &Matrix::zeros(n, 2, P));
+        assert!(back.max_rel_err_f64(&b) < 1e-12);
+        let xt = solve_lower_transpose(&l, &b);
+        let back_t = baseline::gemm_serial(&transpose(&l), &xt, &Matrix::zeros(n, 2, P));
+        assert!(back_t.max_rel_err_f64(&b) < 1e-12);
+    }
+
+    #[test]
+    fn spd_inverse_roundtrip() {
+        let n = 4;
+        let m = Matrix::random(n, n, P, 11, 2);
+        let mut a = baseline::gemm_serial(&m, &transpose(&m), &Matrix::zeros(n, n, P));
+        for i in 0..n {
+            a.set(i, i, a.get(i, i).add(&ApFloat::from_u64(1 << 12, P)));
+        }
+        let inv = spd_inverse(&a).unwrap();
+        let prod = baseline::gemm_serial(&a, &inv, &Matrix::zeros(n, n, P));
+        // off-diagonals of A*A^{-1} are ~2^-400: compare with *absolute*
+        // tolerance (relative error against an exact 0 is meaningless)
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                let got = prod.get(i, j).to_f64();
+                assert!((got - want).abs() < 1e-12, "({i},{j}): {got}");
+            }
+        }
+    }
+
+    #[test]
+    fn frob_inner_matches_f64() {
+        let a = Matrix::random(3, 3, P, 13, 2);
+        let b = Matrix::random(3, 3, P, 14, 2);
+        let mut want = 0.0;
+        for i in 0..3 {
+            for j in 0..3 {
+                want += a.get(i, j).to_f64() * b.get(i, j).to_f64();
+            }
+        }
+        approx(&frob_inner(&a, &b), want, 1e-12);
+    }
+}

@@ -1,0 +1,367 @@
+//! `repro` — leader binary / CLI for the APFP accelerator reproduction.
+//!
+//! Subcommands regenerate every table and figure of the paper's evaluation
+//! (§V) and drive the functional accelerator end-to-end:
+//!
+//! ```text
+//! repro selftest                  quick e2e: device GEMM vs softfloat, bit-exact
+//! repro tables  [--tab 1|2|3]     Tab. I / II / III (add --measured for host baseline)
+//! repro figures [--fig 3|5|6]     Fig. 3 sweep / Fig. 5 / Fig. 6 series
+//! repro gemm --n 64 [--check]     run an n x n GEMM on the device, report stats
+//! repro multbench [--bits 512]    measured softfloat throughput vs modeled FPGA
+//! repro placement [--cus 8]       Fig. 4 SLR/DDR-bank assignment
+//! ```
+//!
+//! Config: `--config file.cfg` (key = value) and repeated `--set key=value`
+//! overrides, exposing the paper's CMake options (§IV-A) at runtime.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use apfp::baseline;
+use apfp::bench_util::{fmt_rate, Table};
+use apfp::config::ApfpConfig;
+use apfp::coordinator::{Device, Matrix};
+use apfp::hwmodel::{resources, DesignPoint};
+use apfp::runtime::default_artifact_dir;
+use apfp::sim::{cpu_ref, gemm_sim, mult_sim};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Minimal argv parser: positional command + `--key value` / `--flag`.
+struct Args {
+    command: String,
+    options: HashMap<String, Vec<String>>,
+}
+
+impl Args {
+    fn parse() -> Result<Self> {
+        let mut argv = std::env::args().skip(1);
+        let command = argv.next().unwrap_or_else(|| "help".into());
+        let mut options: HashMap<String, Vec<String>> = HashMap::new();
+        let mut key: Option<String> = None;
+        for a in argv {
+            if let Some(k) = a.strip_prefix("--") {
+                if let Some(prev) = key.take() {
+                    options.entry(prev).or_default().push("true".into());
+                }
+                key = Some(k.to_string());
+            } else if let Some(k) = key.take() {
+                options.entry(k).or_default().push(a);
+            } else {
+                bail!("unexpected positional argument {a:?}");
+            }
+        }
+        if let Some(prev) = key.take() {
+            options.entry(prev).or_default().push("true".into());
+        }
+        Ok(Args { command, options })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| anyhow!("invalid --{key} value {s:?}")),
+        }
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.get(key).is_some()
+    }
+
+    fn config(&self) -> Result<ApfpConfig> {
+        let mut cfg = match self.get("config") {
+            Some(path) => ApfpConfig::from_file(std::path::Path::new(path))?,
+            None => ApfpConfig::default(),
+        };
+        if let Some(sets) = self.options.get("set") {
+            for s in sets {
+                let (k, v) = s.split_once('=').ok_or_else(|| anyhow!("--set expects key=value"))?;
+                cfg.set(k.trim(), v.trim())?;
+            }
+        }
+        if let Some(b) = self.get("bits") {
+            cfg.set("bits", b)?;
+        }
+        if let Some(c) = self.get("cus") {
+            cfg.set("compute_units", c)?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse()?;
+    match args.command.as_str() {
+        "selftest" => selftest(&args),
+        "tables" => tables(&args),
+        "figures" => figures(&args),
+        "gemm" => gemm_cmd(&args),
+        "multbench" => multbench(&args),
+        "placement" => placement(&args),
+        "help" | "--help" | "-h" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; see `repro help`"),
+    }
+}
+
+const HELP: &str = "\
+repro — APFP-on-FPGA reproduction (three-layer Rust + JAX + Pallas)
+
+commands:
+  selftest                      e2e: device GEMM vs softfloat, bit-exact
+  tables  [--tab 1|2|3] [--measured]   regenerate Tab. I / II / III
+  figures [--fig 3|5|6]         regenerate figure data series
+  gemm --n N [--check] [--cus P] [--bits 512|1024]
+  multbench [--bits B] [--iters N] [--threads T]
+  placement [--cus P]           Fig. 4 CU -> SLR/DDR-bank assignment
+common options:
+  --config FILE   key = value config (APFP_* names accepted)
+  --set key=value repeated config overrides
+";
+
+// ---------------------------------------------------------------------------
+
+fn selftest(args: &Args) -> Result<()> {
+    let cfg = args.config()?;
+    let dir = default_artifact_dir();
+    println!("opening device: {} CUs, {} bits, artifacts at {}", cfg.compute_units, cfg.bits, dir.display());
+    let dev = Device::new(cfg.clone(), &dir)?;
+    let prec = cfg.prec();
+    let n = 20;
+    let a = Matrix::random(n, n, prec, 101, 40);
+    let b = Matrix::random(n, n, prec, 102, 40);
+    let c = Matrix::random(n, n, prec, 103, 40);
+    let (got, stats) = dev.gemm(&a, &b, &c)?;
+    let want = baseline::gemm_serial(&a, &b, &c);
+    anyhow::ensure!(got == want, "device GEMM disagrees with softfloat reference!");
+    println!(
+        "OK: {n}x{n} GEMM bit-exact vs softfloat ({} tiles, {} artifact calls, {:.2}s, marshal {:.1}%)",
+        stats.tiles,
+        stats.artifact_calls,
+        stats.wall_s,
+        stats.marshal_fraction * 100.0
+    );
+    Ok(())
+}
+
+fn mult_table(bits: u32, measured: bool) -> Table {
+    let mut t = Table::new(&["Configuration", "Freq.", "CLBs", "DSPs", "Throughput", "Speedup", "#Cores"]);
+    for r in mult_sim::table(bits) {
+        push_mult_row(&mut t, &r);
+    }
+    if measured {
+        let host = baseline::measure_mul_throughput(apfp::softfloat::prec_for_bits(bits), 50_000);
+        let threads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+        let host_all =
+            baseline::measure_mul_throughput_threaded(apfp::softfloat::prec_for_bits(bits), 50_000, threads);
+        push_mult_row(&mut t, &mult_sim::measured_cpu_row("this host, 1 core (measured)", host, bits));
+        push_mult_row(
+            &mut t,
+            &mult_sim::measured_cpu_row(&format!("this host, {threads} cores (measured)"), host_all, bits),
+        );
+    }
+    t
+}
+
+fn push_mult_row(t: &mut Table, r: &mult_sim::MultRow) {
+    t.row(&[
+        r.label.clone(),
+        if r.frequency_mhz > 0.0 { format!("{:.0} MHz", r.frequency_mhz) } else { "-".into() },
+        if r.clb_pct > 0.0 { format!("{:.1}%", r.clb_pct) } else { "-".into() },
+        if r.dsp_pct > 0.0 { format!("{:.1}%", r.dsp_pct) } else { "-".into() },
+        format!("{:.0} MOp/s", r.throughput_mops),
+        format!("{:.1}x", r.speedup_vs_node),
+        format!("{:.1}x", r.equivalent_cores),
+    ]);
+}
+
+fn tables(args: &Args) -> Result<()> {
+    let which: u32 = args.get_parse("tab", 0)?;
+    let measured = args.flag("measured");
+    if which == 0 || which == 1 {
+        println!("\n== Tab. I: 512-bit multiplier (448-bit mantissa) ==");
+        println!("{}", mult_table(512, measured).render());
+    }
+    if which == 0 || which == 2 {
+        println!("\n== Tab. II: 1024-bit multiplier (960-bit mantissa) ==");
+        println!("{}", mult_table(1024, measured).render());
+    }
+    if which == 0 || which == 3 {
+        println!("\n== Tab. III: 512-bit GEMM designs ==");
+        let mut t = Table::new(&["Precision", "CUs", "Frequency", "CLBs", "DSPs", "Max. Performance"]);
+        for cus in [1usize, 2, 4, 8] {
+            let d = DesignPoint::gemm_512(cus);
+            let s = d.synthesize();
+            let peak = gemm_sim::peak(&d, 32);
+            t.row(&[
+                "512 (448)".into(),
+                cus.to_string(),
+                format!("{:.0} MHz", s.frequency_mhz),
+                format!("{:.1}%", s.clb_frac * 100.0),
+                format!("{:.1}%", s.dsp_frac * 100.0),
+                format!("{:.0} MMAC/s", peak.mmacs / 1e6),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+    Ok(())
+}
+
+fn figures(args: &Args) -> Result<()> {
+    let which: u32 = args.get_parse("fig", 0)?;
+    if which == 0 || which == 3 {
+        println!("\n== Fig. 3: multiplier design-space sweep (512-bit) ==");
+        let mut t = Table::new(&["mult_base", "add_base", "freq [MHz]", "CLBs", "status"]);
+        for mult_base in [18u32, 36, 72, 144, 288] {
+            for add_base in [32u32, 64, 128, 256, 512, 1024] {
+                let d = DesignPoint {
+                    bits: 512,
+                    compute_units: 1,
+                    mult_base_bits: mult_base,
+                    add_base_bits: add_base,
+                    gemm: false,
+                };
+                let s = d.synthesize();
+                let clbs = resources::fig3_multiplier_clbs(448, mult_base, add_base);
+                t.row(&[
+                    mult_base.to_string(),
+                    add_base.to_string(),
+                    format!("{:.0}", s.frequency_mhz),
+                    clbs.to_string(),
+                    s.failure.map(|_| "FAILS SYNTHESIS".into()).unwrap_or_else(|| "ok".to_string()),
+                ]);
+            }
+        }
+        println!("{}", t.render());
+    }
+    if which == 0 || which == 5 {
+        println!("\n== Fig. 5: 512-bit GEMM MMAC/s vs n ==");
+        figure_gemm(512)?;
+    }
+    if which == 0 || which == 6 {
+        println!("\n== Fig. 6: 1024-bit GEMM MMAC/s vs n ==");
+        figure_gemm(1024)?;
+    }
+    Ok(())
+}
+
+fn figure_gemm(bits: u32) -> Result<()> {
+    let sizes = [256usize, 512, 1024, 2048, 4096, 8192, 16384];
+    let cu_counts: &[usize] = if bits == 512 { &[1, 2, 4, 8] } else { &[1] };
+    let mut header: Vec<String> = vec!["n".into()];
+    header.extend(cu_counts.iter().map(|c| format!("FPGA {c} CU [MMAC/s]")));
+    for nodes in [1, 2, 4, 8] {
+        header.push(format!("{nodes} node{} [MMAC/s]", if nodes == 1 { "" } else { "s" }));
+    }
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr);
+    for &n in &sizes {
+        let mut row = vec![n.to_string()];
+        for &cus in cu_counts {
+            let d = if bits == 512 { DesignPoint::gemm_512(cus) } else { DesignPoint::gemm_1024(cus) };
+            let pt = gemm_sim::simulate(&d, n, 32, 32);
+            row.push(format!("{:.0}", pt.mmacs / 1e6));
+        }
+        for nodes in [1, 2, 4, 8] {
+            row.push(format!("{:.0}", cpu_ref::gemm_mmacs(bits, nodes, n) / 1e6));
+        }
+        t.row(&row);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn gemm_cmd(args: &Args) -> Result<()> {
+    let cfg = args.config()?;
+    let n: usize = args.get_parse("n", 64)?;
+    let check = args.flag("check");
+    let dir = default_artifact_dir();
+    let dev = Device::new(cfg.clone(), &dir)?;
+    let prec = cfg.prec();
+    println!("n={n}, {} CUs, {} bits", cfg.compute_units, cfg.bits);
+    let a = Matrix::random(n, n, prec, 201, 60);
+    let b = Matrix::random(n, n, prec, 202, 60);
+    let c = Matrix::zeros(n, n, prec);
+    let t0 = std::time::Instant::now();
+    let (got, stats) = dev.gemm(&a, &b, &c)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let macs = (n * n * n) as f64;
+    println!(
+        "device GEMM: {:.2}s wall, {} tiles, {} artifact calls, {} MAC/s through \
+         the functional PJRT path on this CPU host",
+        wall,
+        stats.tiles,
+        stats.artifact_calls,
+        fmt_rate(macs / wall),
+    );
+    println!("coordinator marshal overhead: {:.2}%", stats.marshal_fraction * 100.0);
+    // modeled hardware performance of the same call
+    let d = if cfg.bits == 512 {
+        DesignPoint::gemm_512(cfg.compute_units)
+    } else {
+        DesignPoint::gemm_1024(cfg.compute_units)
+    };
+    let pt = gemm_sim::simulate(&d, n, cfg.tile_n, cfg.tile_m);
+    println!(
+        "modeled U250 ({} CUs): {:.0} MMAC/s at {:.0} MHz (efficiency {:.0}%)",
+        cfg.compute_units,
+        pt.mmacs / 1e6,
+        d.synthesize().frequency_mhz,
+        pt.efficiency * 100.0
+    );
+    if check {
+        let want = baseline::gemm_serial(&a, &b, &c);
+        anyhow::ensure!(got == want, "MISMATCH vs softfloat");
+        println!("check: bit-exact vs softfloat reference");
+    }
+    Ok(())
+}
+
+fn multbench(args: &Args) -> Result<()> {
+    let cfg = args.config()?;
+    let iters: usize = args.get_parse("iters", 200_000)?;
+    let threads: usize = args.get_parse(
+        "threads",
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1),
+    )?;
+    let prec = cfg.prec();
+    println!("softfloat {}-bit multiply, {iters} iters:", cfg.bits);
+    let one = baseline::measure_mul_throughput(prec, iters);
+    println!("  1 core (measured):        {}", fmt_rate(one));
+    let all = baseline::measure_mul_throughput_threaded(prec, iters, threads);
+    println!("  {threads} cores (measured):     {}", fmt_rate(all));
+    println!("  paper 36-core node (MPFR): {}", fmt_rate(cpu_ref::mult_node_mops(cfg.bits)));
+    let row = mult_sim::fpga_row(cfg.bits, cfg.compute_units);
+    println!(
+        "  modeled FPGA {} CUs:       {} ({:.1}x node, {:.0}x cores)",
+        cfg.compute_units,
+        fmt_rate(row.throughput_mops * 1e6),
+        row.speedup_vs_node,
+        row.equivalent_cores
+    );
+    Ok(())
+}
+
+fn placement(args: &Args) -> Result<()> {
+    let cus: usize = args.get_parse("cus", 8)?;
+    let mut t = Table::new(&["CU", "DDR bank", "SLR"]);
+    for p in apfp::hwmodel::floorplan::assign(cus) {
+        t.row(&[format!("CU[{}]", p.cu), p.ddr_bank.to_string(), format!("SLR{}", p.slr)]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}

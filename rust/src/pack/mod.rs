@@ -1,0 +1,221 @@
+//! The paper's Fig. 1 hardware number format + the PJRT limb-plane layout.
+//!
+//! Two packed representations live here:
+//!
+//! 1. **Fig. 1 words** (`pack_words`/`unpack_words`): the DRAM format — the
+//!    63-bit two's-complement exponent with the sign packed into bit 63 of
+//!    the head word, followed by the tightly packed mantissa, padded to a
+//!    multiple of 512 bits for efficient memory access.  Byte-compatible
+//!    with python/compile/apfp_types.py (pinned by artifacts/test_vectors).
+//!
+//! 2. **Limb planes** (`PlaneBatch`): the struct-of-arrays layout the AOT
+//!    artifacts consume — i32 sign plane, i64 exponent plane, and the
+//!    mantissa as 8-bit limbs in i32 lanes.  This is the HBM layout of the
+//!    TPU re-think (DESIGN.md §Hardware-Adaptation).
+
+use crate::softfloat::{ApFloat, ZERO_EXP};
+
+/// Total packed bits for a given precision (Fig. 1: next multiple of 512
+/// covering prec + 64 head bits).
+pub fn bits_for_prec(prec: u32) -> u32 {
+    (prec + 64).div_ceil(512) * 512
+}
+
+/// Number of u64 words in the packed representation.
+pub fn words_for_bits(bits: u32) -> usize {
+    (bits / 64) as usize
+}
+
+/// Pack into Fig. 1 words.  Word 0: exponent (63-bit two's complement) with
+/// the sign in bit 63; words 1..: mantissa, least-significant limb first.
+pub fn pack_words(v: &ApFloat, out: &mut [u64]) {
+    let bits = bits_for_prec(v.prec());
+    assert_eq!(out.len(), words_for_bits(bits));
+    let exp63 = (v.exp() as u64) & ((1 << 63) - 1);
+    out[0] = exp63 | ((v.sign() as u64) << 63);
+    out[1..1 + v.limbs().len()].copy_from_slice(v.limbs());
+    out[1 + v.limbs().len()..].fill(0);
+}
+
+/// Unpack from Fig. 1 words.
+pub fn unpack_words(words: &[u64], prec: u32) -> ApFloat {
+    let head = words[0];
+    let sign = head >> 63 == 1;
+    // sign-extend the 63-bit two's-complement field: shift the field into
+    // the top 63 bits, then arithmetic-shift back down
+    let exp = ((head << 1) as i64) >> 1;
+    let n = (prec / 64) as usize;
+    let mant = words[1..1 + n].to_vec();
+    if crate::bigint::is_zero(&mant) {
+        return ApFloat::zero(prec);
+    }
+    ApFloat::from_parts(sign, exp, mant, prec)
+}
+
+/// Struct-of-arrays batch in the artifact plane layout.
+///
+/// `mant` is row-major `[batch, limbs8]` where `limbs8 = prec / 8` —
+/// little-endian 8-bit limbs widened into i32 lanes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlaneBatch {
+    pub sign: Vec<i32>,
+    pub exp: Vec<i64>,
+    pub mant: Vec<i32>,
+    pub limbs8: usize,
+    pub prec: u32,
+}
+
+impl PlaneBatch {
+    pub fn zeros(batch: usize, prec: u32) -> Self {
+        let limbs8 = (prec / 8) as usize;
+        PlaneBatch {
+            sign: vec![0; batch],
+            exp: vec![ZERO_EXP; batch],
+            mant: vec![0; batch * limbs8],
+            limbs8,
+            prec,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sign.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sign.is_empty()
+    }
+
+    /// Write one value into slot `i`.
+    pub fn set(&mut self, i: usize, v: &ApFloat) {
+        assert_eq!(v.prec(), self.prec);
+        self.sign[i] = v.sign() as i32;
+        self.exp[i] = v.exp();
+        let row = &mut self.mant[i * self.limbs8..(i + 1) * self.limbs8];
+        for (k, slot) in row.iter_mut().enumerate() {
+            let word = v.limbs()[k / 8];
+            *slot = ((word >> (8 * (k % 8))) & 0xFF) as i32;
+        }
+    }
+
+    /// Read slot `i` back into an ApFloat.
+    pub fn get(&self, i: usize) -> ApFloat {
+        if self.exp[i] == ZERO_EXP {
+            return ApFloat::zero(self.prec);
+        }
+        let row = &self.mant[i * self.limbs8..(i + 1) * self.limbs8];
+        let mut mant = vec![0u64; (self.prec / 64) as usize];
+        for (k, &limb) in row.iter().enumerate() {
+            debug_assert!((0..256).contains(&limb), "non-canonical limb from artifact");
+            mant[k / 8] |= ((limb as u64) & 0xFF) << (8 * (k % 8));
+        }
+        ApFloat::from_parts(self.sign[i] != 0, self.exp[i], mant, self.prec)
+    }
+
+    pub fn from_slice(vals: &[ApFloat], prec: u32) -> Self {
+        let mut b = PlaneBatch::zeros(vals.len(), prec);
+        for (i, v) in vals.iter().enumerate() {
+            b.set(i, v);
+        }
+        b
+    }
+
+    pub fn to_vec(&self) -> Vec<ApFloat> {
+        (0..self.len()).map(|i| self.get(i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{self, Rng};
+
+    const P: u32 = 448;
+
+    fn rand_ap(rng: &mut Rng, prec: u32) -> ApFloat {
+        let n = (prec / 64) as usize;
+        let mut mant = rng.limbs(n);
+        mant[n - 1] |= 1 << 63;
+        ApFloat::from_parts(rng.bool(), rng.range_i64(-(1 << 40), 1 << 40), mant, prec)
+    }
+
+    #[test]
+    fn fig1_geometry() {
+        assert_eq!(bits_for_prec(448), 512);
+        assert_eq!(bits_for_prec(960), 1024);
+        assert_eq!(words_for_bits(512), 8);
+        assert_eq!(words_for_bits(1024), 16);
+    }
+
+    #[test]
+    fn words_roundtrip_property() {
+        testkit::check(200, |rng| {
+            for prec in [448u32, 960] {
+                let v = rand_ap(rng, prec);
+                let mut w = vec![0u64; words_for_bits(bits_for_prec(prec))];
+                pack_words(&v, &mut w);
+                assert_eq!(unpack_words(&w, prec), v);
+            }
+        });
+    }
+
+    #[test]
+    fn sign_bit_position() {
+        let mut m = vec![0u64; 7];
+        m[6] = 1 << 63;
+        let pos = ApFloat::from_parts(false, 42, m.clone(), P);
+        let neg = ApFloat::from_parts(true, 42, m, P);
+        let mut wp = vec![0u64; 8];
+        let mut wn = vec![0u64; 8];
+        pack_words(&pos, &mut wp);
+        pack_words(&neg, &mut wn);
+        assert_eq!(wn[0], wp[0] | (1 << 63));
+        assert_eq!(wn[1..], wp[1..]);
+    }
+
+    #[test]
+    fn negative_exponent_two_complement() {
+        let mut m = vec![0u64; 7];
+        m[6] = 1 << 63;
+        let v = ApFloat::from_parts(false, -1, m, P);
+        let mut w = vec![0u64; 8];
+        pack_words(&v, &mut w);
+        assert_eq!(w[0], (1 << 63) - 1); // 63-bit -1, sign bit clear
+        assert_eq!(unpack_words(&w, P), v);
+    }
+
+    #[test]
+    fn zero_roundtrip() {
+        let z = ApFloat::zero(P);
+        let mut w = vec![0u64; 8];
+        pack_words(&z, &mut w);
+        assert!(unpack_words(&w, P).is_zero());
+    }
+
+    #[test]
+    fn planes_roundtrip_property() {
+        testkit::check(50, |rng| {
+            for prec in [448u32, 960] {
+                let vals: Vec<_> = (0..5)
+                    .map(|i| {
+                        if i == 2 {
+                            ApFloat::zero(prec)
+                        } else {
+                            rand_ap(rng, prec)
+                        }
+                    })
+                    .collect();
+                let planes = PlaneBatch::from_slice(&vals, prec);
+                assert_eq!(planes.to_vec(), vals);
+            }
+        });
+    }
+
+    #[test]
+    fn plane_limbs_are_bytes_little_endian() {
+        let v = ApFloat::from_i64(1, P); // mantissa = 2^447
+        let b = PlaneBatch::from_slice(std::slice::from_ref(&v), P);
+        assert_eq!(b.limbs8, 56);
+        assert_eq!(b.mant[55], 0x80); // MSB limb holds the top byte
+        assert!(b.mant[..55].iter().all(|&x| x == 0));
+    }
+}

@@ -1,0 +1,139 @@
+//! Artifact manifest parsing.
+//!
+//! `make artifacts` writes `artifacts/manifest.txt` with one line per AOT
+//! artifact (see python/compile/aot.py):
+//!
+//! ```text
+//!     name kind bits batch t_n t_m k_tile limbs file
+//! ```
+//!
+//! `kind` is one of `mul`/`add`/`mac` (stream operators, fixed batch) or
+//! `gemm` (the tile datapath, shapes t_n x k_tile / k_tile x t_m).
+
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("cannot read manifest {path}: {source}")]
+    Io { path: PathBuf, source: std::io::Error },
+    #[error("malformed manifest line {line}: {text:?}")]
+    Malformed { line: usize, text: String },
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    Mul,
+    Add,
+    Mac,
+    Gemm,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Option<Self> {
+        match s {
+            "mul" => Some(Self::Mul),
+            "add" => Some(Self::Add),
+            "mac" => Some(Self::Mac),
+            "gemm" => Some(Self::Gemm),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: ArtifactKind,
+    /// total packed bits (512 / 1024)
+    pub bits: u32,
+    /// stream batch (0 for gemm)
+    pub batch: usize,
+    pub t_n: usize,
+    pub t_m: usize,
+    pub k_tile: usize,
+    /// mantissa limbs in the plane layout (8-bit limbs)
+    pub limbs: usize,
+    /// HLO text file, relative to the artifact directory
+    pub file: String,
+}
+
+impl ArtifactMeta {
+    pub fn prec(&self) -> u32 {
+        (self.limbs * 8) as u32
+    }
+}
+
+/// Parse `<dir>/manifest.txt`.
+pub fn load(dir: &Path) -> Result<Vec<ArtifactMeta>, ManifestError> {
+    let path = dir.join("manifest.txt");
+    let text = std::fs::read_to_string(&path)
+        .map_err(|source| ManifestError::Io { path: path.clone(), source })?;
+    let mut out = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mal = || ManifestError::Malformed { line: i + 1, text: raw.to_string() };
+        let f: Vec<&str> = line.split_whitespace().collect();
+        if f.len() != 9 {
+            return Err(mal());
+        }
+        out.push(ArtifactMeta {
+            name: f[0].to_string(),
+            kind: ArtifactKind::parse(f[1]).ok_or_else(mal)?,
+            bits: f[2].parse().map_err(|_| mal())?,
+            batch: f[3].parse().map_err(|_| mal())?,
+            t_n: f[4].parse().map_err(|_| mal())?,
+            t_m: f[5].parse().map_err(|_| mal())?,
+            k_tile: f[6].parse().map_err(|_| mal())?,
+            limbs: f[7].parse().map_err(|_| mal())?,
+            file: f[8].to_string(),
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(content: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("apfp_manifest_{:x}", content.len()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), content).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_valid_lines() {
+        let dir = write_manifest(
+            "# name kind bits batch t_n t_m k_tile limbs file\n\
+             mul_512 mul 512 64 0 0 0 56 mul_512.hlo.txt\n\
+             gemm_512_t8 gemm 512 0 8 8 8 56 gemm_512_t8.hlo.txt\n",
+        );
+        let m = load(&dir).unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[0].kind, ArtifactKind::Mul);
+        assert_eq!(m[0].batch, 64);
+        assert_eq!(m[1].kind, ArtifactKind::Gemm);
+        assert_eq!((m[1].t_n, m[1].t_m, m[1].k_tile), (8, 8, 8));
+        assert_eq!(m[1].prec(), 448);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        let dir = write_manifest("mul_512 mul 512 64\n");
+        assert!(matches!(load(&dir), Err(ManifestError::Malformed { line: 1, .. })));
+        let dir = write_manifest("x unknownkind 512 64 0 0 0 56 f.hlo\n");
+        assert!(matches!(load(&dir), Err(ManifestError::Malformed { .. })));
+    }
+
+    #[test]
+    fn missing_file_is_io_error() {
+        let dir = std::env::temp_dir().join("apfp_manifest_missing");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(matches!(load(&dir), Err(ManifestError::Io { .. })));
+    }
+}

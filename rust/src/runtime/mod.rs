@@ -1,0 +1,264 @@
+//! PJRT execution runtime: load AOT artifacts (HLO text), compile them on
+//! the PJRT CPU client, and execute them on limb-plane batches.
+//!
+//! This is the only place the `xla` crate is touched.  One `Runtime` is
+//! **thread-local by construction** (the crate's `PjRtClient` is `Rc`-based);
+//! the coordinator gives each compute-unit worker its own `Runtime`, which
+//! is also the honest analogy: each CU on the FPGA is its own replica of
+//! the circuit.
+//!
+//! Python never runs here: artifacts were lowered once by `make artifacts`
+//! (see python/compile/aot.py and the HLO-text-vs-proto note there).
+
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+
+pub use manifest::{ArtifactKind, ArtifactMeta};
+
+use crate::pack::PlaneBatch;
+use crate::softfloat::ZERO_EXP;
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    metas: Vec<ArtifactMeta>,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU-PJRT runtime over an artifact directory.
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let metas = manifest::load(artifact_dir).context("loading artifact manifest")?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir: artifact_dir.to_path_buf(),
+            metas,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn artifacts(&self) -> &[ArtifactMeta] {
+        &self.metas
+    }
+
+    pub fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.metas
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| anyhow!("no artifact named {name:?} in manifest"))
+    }
+
+    /// Pick an artifact by kind + precision (gemm: prefers the largest tile;
+    /// callers pad partial tiles).
+    pub fn find(&self, kind: ArtifactKind, bits: u32) -> Result<&ArtifactMeta> {
+        self.metas
+            .iter()
+            .filter(|m| m.kind == kind && m.bits == bits)
+            .max_by_key(|m| m.t_n * m.t_m)
+            .ok_or_else(|| anyhow!("no {kind:?} artifact for {bits} bits"))
+    }
+
+    /// Lazily compile + cache an executable.
+    fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self.meta(name)?;
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Warm the executable cache (compile everything needed up front, like
+    /// programming the bitstream before timing anything).
+    pub fn warm(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    // ---- plane <-> literal marshaling -------------------------------------
+
+    fn literals_for(&self, b: &PlaneBatch, dims: &[i64]) -> Result<[xla::Literal; 3]> {
+        let limbs = b.limbs8 as i64;
+        let mut mant_dims: Vec<i64> = dims.to_vec();
+        mant_dims.push(limbs);
+        let sign = xla::Literal::vec1(&b.sign)
+            .reshape(dims)
+            .map_err(|e| anyhow!("sign reshape: {e:?}"))?;
+        let exp = xla::Literal::vec1(&b.exp)
+            .reshape(dims)
+            .map_err(|e| anyhow!("exp reshape: {e:?}"))?;
+        let mant = xla::Literal::vec1(&b.mant)
+            .reshape(&mant_dims)
+            .map_err(|e| anyhow!("mant reshape: {e:?}"))?;
+        Ok([sign, exp, mant])
+    }
+
+    fn batch_from_literals(
+        &self,
+        parts: Vec<xla::Literal>,
+        len: usize,
+        limbs: usize,
+        prec: u32,
+    ) -> Result<PlaneBatch> {
+        anyhow::ensure!(parts.len() == 3, "artifact must return (sign, exp, mant)");
+        let sign = parts[0].to_vec::<i32>().map_err(|e| anyhow!("sign: {e:?}"))?;
+        let exp = parts[1].to_vec::<i64>().map_err(|e| anyhow!("exp: {e:?}"))?;
+        let mant = parts[2].to_vec::<i32>().map_err(|e| anyhow!("mant: {e:?}"))?;
+        if sign.len() != len || mant.len() != len * limbs {
+            return Err(anyhow!(
+                "artifact output shape mismatch: sign {} mant {} (expect {len} x {limbs})",
+                sign.len(),
+                mant.len()
+            ));
+        }
+        Ok(PlaneBatch { sign, exp, mant, limbs8: limbs, prec })
+    }
+
+    fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untupling {name}: {e:?}"))
+    }
+
+    // ---- stream operators (mul/add/mac) ------------------------------------
+
+    /// Execute a binary stream artifact on arbitrary-length batches
+    /// (chunks + zero padding to the artifact's fixed batch).
+    pub fn exec_stream_binop(
+        &self,
+        name: &str,
+        a: &PlaneBatch,
+        b: &PlaneBatch,
+    ) -> Result<PlaneBatch> {
+        let meta = self.meta(name)?.clone();
+        anyhow::ensure!(a.len() == b.len(), "stream operand length mismatch");
+        let batch = meta.batch;
+        let limbs = meta.limbs;
+        let prec = meta.prec();
+        let mut out = PlaneBatch::zeros(a.len(), prec);
+        let mut start = 0;
+        while start < a.len() {
+            let n = (a.len() - start).min(batch);
+            let pa = pad_slice(a, start, n, batch);
+            let pb = pad_slice(b, start, n, batch);
+            let ia = self.literals_for(&pa, &[batch as i64])?;
+            let ib = self.literals_for(&pb, &[batch as i64])?;
+            let inputs: Vec<xla::Literal> = ia.into_iter().chain(ib).collect();
+            let parts = self.run(&meta.name, &inputs)?;
+            let chunk = self.batch_from_literals(parts, batch, limbs, prec)?;
+            copy_into(&mut out, start, &chunk, n);
+            start += n;
+        }
+        Ok(out)
+    }
+
+    /// Execute the ternary MAC stream artifact: c + a*b element-wise.
+    pub fn exec_stream_mac(
+        &self,
+        name: &str,
+        c: &PlaneBatch,
+        a: &PlaneBatch,
+        b: &PlaneBatch,
+    ) -> Result<PlaneBatch> {
+        let meta = self.meta(name)?.clone();
+        anyhow::ensure!(a.len() == b.len() && a.len() == c.len());
+        let batch = meta.batch;
+        let limbs = meta.limbs;
+        let prec = meta.prec();
+        let mut out = PlaneBatch::zeros(a.len(), prec);
+        let mut start = 0;
+        while start < a.len() {
+            let n = (a.len() - start).min(batch);
+            let pc = pad_slice(c, start, n, batch);
+            let pa = pad_slice(a, start, n, batch);
+            let pb = pad_slice(b, start, n, batch);
+            let ic = self.literals_for(&pc, &[batch as i64])?;
+            let ia = self.literals_for(&pa, &[batch as i64])?;
+            let ib = self.literals_for(&pb, &[batch as i64])?;
+            let inputs: Vec<xla::Literal> = ic.into_iter().chain(ia).chain(ib).collect();
+            let parts = self.run(&meta.name, &inputs)?;
+            let chunk = self.batch_from_literals(parts, batch, limbs, prec)?;
+            copy_into(&mut out, start, &chunk, n);
+            start += n;
+        }
+        Ok(out)
+    }
+
+    // ---- GEMM tile (the compute-unit datapath) -----------------------------
+
+    /// One tile update: C += A @ B with A: (t_n, k_tile), B: (k_tile, t_m),
+    /// C: (t_n, t_m), all exactly the artifact's shapes (callers pad).
+    pub fn exec_gemm_tile(
+        &self,
+        name: &str,
+        a: &PlaneBatch,
+        b: &PlaneBatch,
+        c: &PlaneBatch,
+    ) -> Result<PlaneBatch> {
+        let meta = self.meta(name)?.clone();
+        let (tn, tm, kt) = (meta.t_n, meta.t_m, meta.k_tile);
+        anyhow::ensure!(a.len() == tn * kt, "A tile shape");
+        anyhow::ensure!(b.len() == kt * tm, "B tile shape");
+        anyhow::ensure!(c.len() == tn * tm, "C tile shape");
+        let ia = self.literals_for(a, &[tn as i64, kt as i64])?;
+        let ib = self.literals_for(b, &[kt as i64, tm as i64])?;
+        let ic = self.literals_for(c, &[tn as i64, tm as i64])?;
+        let inputs: Vec<xla::Literal> = ia.into_iter().chain(ib).chain(ic).collect();
+        let parts = self.run(&meta.name, &inputs)?;
+        self.batch_from_literals(parts, tn * tm, meta.limbs, meta.prec())
+    }
+}
+
+/// Extract `n` rows starting at `start`, zero-padded to `batch` rows.
+/// Padding rows are APFP zero (absorbing for mul, identity for add), so
+/// padded lanes never contaminate real outputs.
+fn pad_slice(src: &PlaneBatch, start: usize, n: usize, batch: usize) -> PlaneBatch {
+    let mut out = PlaneBatch::zeros(batch, src.prec);
+    out.sign[..n].copy_from_slice(&src.sign[start..start + n]);
+    out.exp[..n].copy_from_slice(&src.exp[start..start + n]);
+    out.mant[..n * src.limbs8]
+        .copy_from_slice(&src.mant[start * src.limbs8..(start + n) * src.limbs8]);
+    for e in out.exp[n..].iter_mut() {
+        *e = ZERO_EXP;
+    }
+    out
+}
+
+fn copy_into(dst: &mut PlaneBatch, start: usize, src: &PlaneBatch, n: usize) {
+    dst.sign[start..start + n].copy_from_slice(&src.sign[..n]);
+    dst.exp[start..start + n].copy_from_slice(&src.exp[..n]);
+    dst.mant[start * dst.limbs8..(start + n) * dst.limbs8]
+        .copy_from_slice(&src.mant[..n * src.limbs8]);
+}
+
+/// Default artifact directory: $APFP_ARTIFACTS or ./artifacts.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("APFP_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

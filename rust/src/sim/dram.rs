@@ -1,0 +1,52 @@
+//! DDR4 bank bandwidth accounting (§III / §V).
+//!
+//! Each of the U250's four banks peaks at 19.2 GB/s; compute units share
+//! the bank they are placed on (Fig. 4 round-robin).  Strided (column-
+//! major) reads of the non-contiguous GEMM operand still burst at least one
+//! full number per access because every APFP element spans >= 512 bits
+//! (§III), but lose some row-buffer locality — modeled as a derate.
+
+use crate::hwmodel::{floorplan, u250};
+
+/// Burst efficiency of contiguous streaming reads.
+pub const CONTIGUOUS_EFF: f64 = 0.93;
+/// Burst efficiency of the column-wise (strided) operand; the paper notes
+/// the access is "less efficient" but still bursts >= one full number.
+pub const STRIDED_EFF: f64 = 0.78;
+
+/// Effective bandwidth available to one CU, given total replication.
+pub fn per_cu_bandwidth(compute_units: usize) -> f64 {
+    let counts = floorplan::cus_per_bank(compute_units);
+    // the most-loaded bank limits the aggregate (synchronized K loops)
+    let worst = *counts.iter().max().unwrap() as usize;
+    if worst == 0 {
+        return u250::DDR_BANK_BW;
+    }
+    u250::DDR_BANK_BW / worst as f64
+}
+
+/// Seconds to stream `bytes` at a given efficiency on one CU's share.
+pub fn stream_time(bytes: f64, compute_units: usize, efficiency: f64) -> f64 {
+    bytes / (per_cu_bandwidth(compute_units) * efficiency)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bandwidth_shares() {
+        assert_eq!(per_cu_bandwidth(1), 19.2e9);
+        assert_eq!(per_cu_bandwidth(4), 19.2e9); // one per bank
+        assert_eq!(per_cu_bandwidth(8), 9.6e9); // two per bank
+        assert_eq!(per_cu_bandwidth(16), 4.8e9);
+    }
+
+    #[test]
+    fn stream_time_scales() {
+        let t1 = stream_time(19.2e9, 1, 1.0);
+        assert!((t1 - 1.0).abs() < 1e-9);
+        let t8 = stream_time(19.2e9, 8, 1.0);
+        assert!((t8 - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,143 @@
+//! §V-B multiplier microbenchmark model — regenerates Tab. I and Tab. II.
+//!
+//! The paper's benchmark streams operand pairs through the multiplier with
+//! the memory bottleneck artificially removed (same element re-fed), so a
+//! fully pipelined CU delivers exactly one multiplication per cycle:
+//! throughput = CUs x f.  The CPU column is the paper's measured MPFR
+//! throughput with all operands resident in L1.
+
+use crate::hwmodel::DesignPoint;
+use crate::sim::cpu_ref;
+
+#[derive(Clone, Debug)]
+pub struct MultRow {
+    pub label: String,
+    pub frequency_mhz: f64,
+    pub clb_pct: f64,
+    pub dsp_pct: f64,
+    pub throughput_mops: f64,
+    pub speedup_vs_node: f64,
+    pub equivalent_cores: f64,
+    pub failed: Option<String>,
+}
+
+/// One FPGA row of Tab. I/II for `cus` compute units at `bits` precision.
+pub fn fpga_row(bits: u32, cus: usize) -> MultRow {
+    let d = match bits {
+        512 => DesignPoint::mult_512(cus),
+        1024 => DesignPoint::mult_1024(cus),
+        _ => DesignPoint {
+            bits,
+            compute_units: cus,
+            mult_base_bits: 72,
+            add_base_bits: 64,
+            gemm: false,
+        },
+    };
+    let s = d.synthesize();
+    // one op per cycle per CU; memory bottleneck removed as in the paper
+    let throughput = s.frequency_mhz * 1e6 * cus as f64;
+    let node = cpu_ref::mult_node_mops(bits);
+    MultRow {
+        label: format!("FPGA {cus} CU{}", if cus == 1 { "" } else { "s" }),
+        frequency_mhz: s.frequency_mhz,
+        clb_pct: s.clb_frac * 100.0,
+        dsp_pct: s.dsp_frac * 100.0,
+        throughput_mops: throughput / 1e6,
+        speedup_vs_node: throughput / node,
+        equivalent_cores: throughput / (node / cpu_ref::NODE_CORES),
+        failed: s.failure,
+    }
+}
+
+/// The CPU reference row (paper-reported MPFR on the 36-core node).
+pub fn cpu_row(bits: u32) -> MultRow {
+    let node = cpu_ref::mult_node_mops(bits);
+    MultRow {
+        label: "36-core CPU (paper MPFR)".into(),
+        frequency_mhz: 2100.0,
+        clb_pct: 0.0,
+        dsp_pct: 0.0,
+        throughput_mops: node / 1e6,
+        speedup_vs_node: 1.0,
+        equivalent_cores: cpu_ref::NODE_CORES,
+        failed: None,
+    }
+}
+
+/// A CPU row from a *measured* host throughput (ops/s) — the honest local
+/// baseline the benches feed in (EXPERIMENTS.md reports both).
+pub fn measured_cpu_row(label: &str, ops_per_sec: f64, bits: u32) -> MultRow {
+    let node = cpu_ref::mult_node_mops(bits);
+    MultRow {
+        label: label.into(),
+        frequency_mhz: 0.0,
+        clb_pct: 0.0,
+        dsp_pct: 0.0,
+        throughput_mops: ops_per_sec / 1e6,
+        speedup_vs_node: ops_per_sec / node,
+        equivalent_cores: ops_per_sec / (node / cpu_ref::NODE_CORES),
+        failed: None,
+    }
+}
+
+/// All rows of Tab. I (512-bit: 1/4/8/12/16 CUs) or Tab. II (1024: 1/4).
+pub fn table(bits: u32) -> Vec<MultRow> {
+    let cu_counts: &[usize] = match bits {
+        512 => &[1, 4, 8, 12, 16],
+        _ => &[1, 4],
+    };
+    let mut rows = vec![cpu_row(bits)];
+    rows.extend(cu_counts.iter().map(|&c| fpga_row(bits, c)));
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tab. I headline: 16 CUs reach ~4.8 GOp/s, ~9.8x the node, ~351 cores.
+    #[test]
+    fn tab1_headline() {
+        let r = fpga_row(512, 16);
+        assert!(r.failed.is_none());
+        assert!((r.throughput_mops - 4784.0).abs() / 4784.0 < 0.10, "{:.0} MOp/s", r.throughput_mops);
+        assert!((r.speedup_vs_node - 9.8).abs() < 1.2, "{:.1}x", r.speedup_vs_node);
+        assert!((r.equivalent_cores - 351.0).abs() < 45.0, "{:.0} cores", r.equivalent_cores);
+    }
+
+    /// Tab. I: a single CU roughly matches the full 36-core node (0.9x).
+    #[test]
+    fn tab1_single_cu_parity() {
+        let r = fpga_row(512, 1);
+        assert!((0.75..1.15).contains(&r.speedup_vs_node), "{:.2}x", r.speedup_vs_node);
+    }
+
+    /// Tab. II headline: 4 CUs at 1024 bits ~1.2 GOp/s, ~5.3x, ~191 cores.
+    #[test]
+    fn tab2_headline() {
+        let r = fpga_row(1024, 4);
+        assert!(r.failed.is_none());
+        assert!((r.throughput_mops - 1202.0).abs() / 1202.0 < 0.10, "{:.0} MOp/s", r.throughput_mops);
+        assert!((r.speedup_vs_node - 5.3).abs() < 0.8, "{:.1}x", r.speedup_vs_node);
+        assert!((r.equivalent_cores - 191.0).abs() < 30.0, "{:.0} cores", r.equivalent_cores);
+    }
+
+    /// Tab. II: one 1024-bit CU beats the node (1.6x).
+    #[test]
+    fn tab2_single_cu() {
+        let r = fpga_row(1024, 1);
+        assert!((r.speedup_vs_node - 1.6).abs() < 0.3, "{:.2}x", r.speedup_vs_node);
+    }
+
+    #[test]
+    fn table_shapes() {
+        assert_eq!(table(512).len(), 6); // CPU + 5 FPGA rows
+        assert_eq!(table(1024).len(), 3);
+        // throughput strictly increases with replication
+        let t = table(512);
+        for w in t[1..].windows(2) {
+            assert!(w[1].throughput_mops > w[0].throughput_mops);
+        }
+    }
+}

@@ -1,0 +1,317 @@
+//! Conversions: f64 <-> ApFloat, decimal strings -> ApFloat, display.
+//!
+//! These are host-side conveniences (loading matrices, printing results);
+//! none of this is on the accelerator hot path.
+
+use super::ApFloat;
+use crate::bigint;
+
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum ParseApFloatError {
+    #[error("empty or malformed number: {0:?}")]
+    Malformed(String),
+    #[error("exponent out of range: {0:?}")]
+    ExponentRange(String),
+}
+
+impl ApFloat {
+    /// Exact embedding of an f64 (doubles have 53-bit significands, far
+    /// below any supported precision, so this never rounds).
+    pub fn from_f64(x: f64, prec: u32) -> Self {
+        assert!(x.is_finite(), "inf/NaN are outside the APFP domain");
+        if x == 0.0 {
+            return ApFloat::zero(prec);
+        }
+        let bits = x.to_bits();
+        let sign = bits >> 63 == 1;
+        let biased = ((bits >> 52) & 0x7FF) as i64;
+        let frac = bits & ((1u64 << 52) - 1);
+        let (mant53, e) = if biased == 0 {
+            (frac, -1074i64) // subnormal double
+        } else {
+            (frac | (1 << 52), biased - 1075)
+        };
+        ApFloat::from_int_scaled(sign, &[mant53], e, prec)
+    }
+
+    /// Truncating conversion to f64 (exact RNDZ to the f64 grid, built
+    /// directly from the bit pattern; saturates to +-inf / 0 at the range
+    /// edges like `mpfr_get_d`).
+    pub fn to_f64(&self) -> f64 {
+        if self.is_zero() {
+            return 0.0;
+        }
+        let sign_bit = (self.sign as u64) << 63;
+        // value in [2^(exp-1), 2^exp)  =>  unbiased f64 exponent = exp - 1
+        let e = self.exp - 1;
+        let top = self.mant[self.mant.len() - 1]; // bit 63 set (normalized)
+        let bits = if e > 1023 {
+            0x7FF0_0000_0000_0000 // +inf magnitude
+        } else if e >= -1022 {
+            // normal: drop the implicit leading 1, keep the next 52 bits
+            let frac = (top << 1) >> 12;
+            (((e + 1023) as u64) << 52) | frac
+        } else {
+            // subnormal: the significand keeps 52 - (-1022 - e - 1) bits,
+            // leading 1 included explicitly
+            let shift = (-1022 - e) as u64; // >= 1
+            if shift > 52 {
+                0 // underflows to zero
+            } else {
+                top >> (11 + shift)
+            }
+        };
+        f64::from_bits(sign_bit | bits)
+    }
+
+    /// Parse a decimal string: `[+-]digits[.digits][eE[+-]digits]`.
+    /// The value is computed exactly and truncated (RNDZ) to `prec` bits,
+    /// so parsing agrees bit-for-bit with MPFR's `mpfr_set_str(..., RNDZ)`.
+    pub fn parse_decimal(s: &str, prec: u32) -> Result<Self, ParseApFloatError> {
+        let t = s.trim();
+        let malformed = || ParseApFloatError::Malformed(s.to_string());
+        let (sign, rest) = match t.as_bytes().first() {
+            Some(b'-') => (true, &t[1..]),
+            Some(b'+') => (false, &t[1..]),
+            Some(_) => (false, t),
+            None => return Err(malformed()),
+        };
+        let (mant_part, exp_part) = match rest.find(['e', 'E']) {
+            Some(i) => (&rest[..i], Some(&rest[i + 1..])),
+            None => (rest, None),
+        };
+        let e10_extra: i64 = match exp_part {
+            Some(e) => e.parse().map_err(|_| malformed())?,
+            None => 0,
+        };
+        let (int_part, frac_part) = match mant_part.find('.') {
+            Some(i) => (&mant_part[..i], &mant_part[i + 1..]),
+            None => (mant_part, ""),
+        };
+        if int_part.is_empty() && frac_part.is_empty() {
+            return Err(malformed());
+        }
+        if !int_part.bytes().all(|b| b.is_ascii_digit())
+            || !frac_part.bytes().all(|b| b.is_ascii_digit())
+        {
+            return Err(malformed());
+        }
+        // digits as a big integer D; value = D * 10^e10
+        let mut digits = vec![0u64; 1];
+        for b in int_part.bytes().chain(frac_part.bytes()) {
+            mul_small_grow(&mut digits, 10);
+            if bigint::add_limb(&mut digits, (b - b'0') as u64) {
+                digits.push(1);
+            }
+        }
+        let e10 = e10_extra - frac_part.len() as i64;
+        if e10.unsigned_abs() > 1 << 24 {
+            return Err(ParseApFloatError::ExponentRange(s.to_string()));
+        }
+        Ok(Self::from_decimal_parts(sign, digits, e10, prec))
+    }
+
+    /// value = (-1)^sign * D * 10^e10, exact then RNDZ-truncated.
+    fn from_decimal_parts(sign: bool, mut digits: Vec<u64>, e10: i64, prec: u32) -> Self {
+        if bigint::is_zero(&digits) {
+            return ApFloat::zero(prec);
+        }
+        if e10 >= 0 {
+            for _ in 0..e10 {
+                mul_small_grow(&mut digits, 10);
+            }
+            return ApFloat::from_int_scaled(sign, &digits, 0, prec);
+        }
+        // D / 10^k: widen D so the quotient keeps prec + 64 significant
+        // bits, divide by 10 k times; any nonzero remainder only lowers the
+        // true value, which truncation (RNDZ) already accounts for.
+        let k = (-e10) as u64;
+        // 10^k < 2^(4k): give the numerator prec + 64 + 4k extra low bits
+        let extra_bits = prec as u64 + 64 + 4 * k;
+        let shift_limbs = extra_bits.div_ceil(64) as usize;
+        let mut num = vec![0u64; digits.len() + shift_limbs];
+        num[shift_limbs..].copy_from_slice(&digits);
+        for _ in 0..k {
+            div_small(&mut num, 10);
+        }
+        ApFloat::from_int_scaled(sign, &num, -((shift_limbs * 64) as i64), prec)
+    }
+
+    /// Scientific-notation decimal rendering with `sig_digits` significant
+    /// digits (exact digit extraction; truncated toward zero).
+    pub fn to_decimal_string(&self, sig_digits: usize) -> String {
+        if self.is_zero() {
+            return "0".to_string();
+        }
+        // Compute D = floor(|x| * 10^s) for s chosen so D has ~sig_digits
+        // digits: x = M * 2^(exp - prec).
+        let e2 = self.exp as i128 - self.prec as i128;
+        // decimal exponent of x is about exp * log10(2)
+        let dec_exp = (self.exp as f64 * std::f64::consts::LOG10_2).floor() as i64;
+        let s = sig_digits as i64 - dec_exp; // scale: multiply by 10^s
+        let mut acc = self.mant.clone();
+        // acc * 10^s * 2^e2, tracked in (acc, bin_shift)
+        let mut bin: i128 = e2;
+        if s >= 0 {
+            for _ in 0..s {
+                mul_small_grow(&mut acc, 10);
+            }
+        } else {
+            let k = (-s) as u64;
+            let extra = (4 * k + 64).div_ceil(64) as usize;
+            let mut wide = vec![0u64; acc.len() + extra];
+            wide[extra..].copy_from_slice(&acc);
+            bin -= (extra * 64) as i128;
+            for _ in 0..k {
+                div_small(&mut wide, 10);
+            }
+            acc = wide;
+        }
+        // apply the binary scale exactly (truncating on right shifts)
+        if bin >= 0 {
+            let grow = (bin as usize).div_ceil(64) + 1;
+            let mut wide = vec![0u64; acc.len() + grow];
+            bigint::shl(&acc, bin as usize, &mut wide[..]);
+            // shl keeps width; rebuild with room
+            let mut src = acc.clone();
+            src.resize(acc.len() + grow, 0);
+            bigint::shl(&src, bin as usize, &mut wide);
+            acc = wide;
+        } else {
+            let sh = (-bin) as usize;
+            let mut out = vec![0u64; acc.len()];
+            bigint::shr(&acc, sh, &mut out);
+            acc = out;
+        }
+        // extract decimal digits of acc
+        let mut digits = Vec::new();
+        while !bigint::is_zero(&acc) {
+            let r = div_small(&mut acc, 10);
+            digits.push(b'0' + r as u8);
+        }
+        if digits.is_empty() {
+            digits.push(b'0');
+        }
+        digits.reverse();
+        let text: String = digits.iter().map(|&b| b as char).collect();
+        let shown = &text[..sig_digits.min(text.len())];
+        let point_exp = text.len() as i64 - s - 1; // value = 0.text * 10^(len - s)
+        let mantissa = if shown.len() > 1 {
+            format!("{}.{}", &shown[..1], &shown[1..])
+        } else {
+            shown.to_string()
+        };
+        let sign = if self.sign { "-" } else { "" };
+        format!("{sign}{mantissa}e{point_exp}")
+    }
+}
+
+/// a *= m (small multiplier), growing the vector if it overflows.
+fn mul_small_grow(a: &mut Vec<u64>, m: u64) {
+    let mut carry: u64 = 0;
+    for x in a.iter_mut() {
+        let t = *x as u128 * m as u128 + carry as u128;
+        *x = t as u64;
+        carry = (t >> 64) as u64;
+    }
+    if carry != 0 {
+        a.push(carry);
+    }
+}
+
+/// a /= d (small divisor); returns the remainder.
+fn div_small(a: &mut [u64], d: u64) -> u64 {
+    let mut rem: u64 = 0;
+    for x in a.iter_mut().rev() {
+        let t = ((rem as u128) << 64) | *x as u128;
+        *x = (t / d as u128) as u64;
+        rem = (t % d as u128) as u64;
+    }
+    rem
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ApFloat;
+    use crate::testkit;
+
+    const P: u32 = 448;
+
+    #[test]
+    fn f64_roundtrip_exact() {
+        for x in [1.0, -1.0, 0.5, 3.141592653589793, 1e300, -1e-300, 2f64.powi(-1074)] {
+            let v = ApFloat::from_f64(x, P);
+            assert_eq!(v.to_f64(), x, "{x}");
+        }
+        assert_eq!(ApFloat::from_f64(0.0, P).to_f64(), 0.0);
+    }
+
+    #[test]
+    fn f64_roundtrip_property() {
+        testkit::check(300, |rng| {
+            let x = f64::from_bits(rng.next_u64());
+            if x.is_finite() {
+                assert_eq!(ApFloat::from_f64(x, P).to_f64(), x, "{x:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn parse_integers() {
+        assert_eq!(ApFloat::parse_decimal("42", P).unwrap(), ApFloat::from_i64(42, P));
+        assert_eq!(ApFloat::parse_decimal("-7", P).unwrap(), ApFloat::from_i64(-7, P));
+        assert_eq!(ApFloat::parse_decimal("+0", P).unwrap(), ApFloat::zero(P));
+        // 10^24 exactly (1e24 as an f64 literal would NOT be exact)
+        let e12 = ApFloat::from_i64(1_000_000_000_000, P);
+        assert_eq!(
+            ApFloat::parse_decimal("1000000000000000000000000", P).unwrap(),
+            e12.mul(&e12)
+        );
+    }
+
+    #[test]
+    fn parse_fractions_exact_binary() {
+        assert_eq!(ApFloat::parse_decimal("0.5", P).unwrap(), ApFloat::from_f64(0.5, P));
+        assert_eq!(ApFloat::parse_decimal("2.5e1", P).unwrap(), ApFloat::from_i64(25, P));
+        assert_eq!(ApFloat::parse_decimal("1e3", P).unwrap(), ApFloat::from_i64(1000, P));
+        assert_eq!(ApFloat::parse_decimal(".25", P).unwrap(), ApFloat::from_f64(0.25, P));
+    }
+
+    #[test]
+    fn parse_tenth_truncates_toward_zero() {
+        // 0.1 is not binary-representable; RNDZ result must be < 0.1
+        let v = ApFloat::parse_decimal("0.1", P).unwrap();
+        let f = v.to_f64();
+        assert!((f - 0.1).abs() < 1e-15);
+        // check strict truncation via 10 * v <= 1
+        let ten = ApFloat::from_i64(10, P);
+        let one = ApFloat::from_i64(1, P);
+        assert_eq!(v.mul(&ten).cmp_total(&one), std::cmp::Ordering::Less);
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(ApFloat::parse_decimal("", P).is_err());
+        assert!(ApFloat::parse_decimal("abc", P).is_err());
+        assert!(ApFloat::parse_decimal("1.2.3", P).is_err());
+        assert!(ApFloat::parse_decimal("1e99999999999", P).is_err());
+    }
+
+    #[test]
+    fn decimal_string_roundtrip() {
+        for s in ["1", "-2.5", "3.25e10", "7.625e-5"] {
+            let v = ApFloat::parse_decimal(s, P).unwrap();
+            let shown = v.to_decimal_string(30);
+            let back = ApFloat::parse_decimal(&shown, P).unwrap();
+            let rel = (back.to_f64() - v.to_f64()).abs() / v.to_f64().abs().max(1e-300);
+            assert!(rel < 1e-25, "{s} -> {shown} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn decimal_string_pi() {
+        let pi = ApFloat::from_f64(std::f64::consts::PI, P);
+        let s = pi.to_decimal_string(16);
+        assert!(s.starts_with("3.14159265358979"), "{s}");
+    }
+}

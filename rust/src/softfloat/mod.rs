@@ -1,0 +1,248 @@
+//! `ApFloat` — arbitrary-precision floating point with MPFR-compatible
+//! round-to-zero semantics (the paper's `MPFR_RNDZ` baseline arithmetic).
+//!
+//! Representation (DESIGN.md §5, identical to the Python/JAX layers):
+//!
+//! ```text
+//!     value = (-1)^sign * M * 2^(exp - prec)
+//! ```
+//!
+//! with `M` a `prec`-bit mantissa normalized into [2^(prec-1), 2^prec)
+//! stored as little-endian u64 limbs, `exp` a 63-bit signed exponent, and
+//! zero represented as (sign = +, exp = ZERO_EXP, M = 0).  Subnormals,
+//! infinities and NaN are out of scope, exactly as in the paper.
+//!
+//! This library plays two roles in the reproduction:
+//!   1. the *CPU baseline* — what the paper benchmarks MPFR for (§V-B/C);
+//!   2. the *verification reference* for the accelerator path — results
+//!      coming back from the PJRT artifacts are bit-compared against it
+//!      (the paper compares its FPGA output against MPFR the same way).
+
+mod convert;
+mod ops;
+
+pub use convert::ParseApFloatError;
+
+use crate::bigint;
+
+/// Exponent sentinel for the zero value (matches python/compile/config.py).
+pub const ZERO_EXP: i64 = -(1 << 61);
+
+/// Default total widths evaluated in the paper (Fig. 1: multiples of 512
+/// bits, 64 of which hold sign+exponent).
+pub const BITS_512_PREC: u32 = 448;
+pub const BITS_1024_PREC: u32 = 960;
+
+/// Precision (mantissa bits) for a total packed width (Fig. 1 layout).
+pub fn prec_for_bits(total_bits: u32) -> u32 {
+    assert!(total_bits % 512 == 0 && total_bits >= 512, "Fig. 1 packing");
+    total_bits - 64
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ApFloat {
+    pub(crate) sign: bool,
+    pub(crate) exp: i64,
+    /// little-endian; len = ceil(prec / 64); normalized (top bit set) unless zero
+    pub(crate) mant: Vec<u64>,
+    pub(crate) prec: u32,
+}
+
+impl ApFloat {
+    // ---- constructors -----------------------------------------------------
+
+    pub fn zero(prec: u32) -> Self {
+        assert!(prec % 64 == 0 && prec >= 128, "prec must be a multiple of 64");
+        ApFloat { sign: false, exp: ZERO_EXP, mant: vec![0; (prec / 64) as usize], prec }
+    }
+
+    /// Construct from parts; mantissa must be normalized or all-zero.
+    pub fn from_parts(sign: bool, exp: i64, mant: Vec<u64>, prec: u32) -> Self {
+        assert_eq!(mant.len(), (prec / 64) as usize);
+        if bigint::is_zero(&mant) {
+            return ApFloat::zero(prec);
+        }
+        assert!(
+            bigint::bit_length(&mant) == prec as usize,
+            "mantissa must be normalized (MSB set)"
+        );
+        ApFloat { sign, exp, mant, prec }
+    }
+
+    /// Exact value `signed * 2^scale_exp`, truncated toward zero to `prec`
+    /// bits (RNDZ) — the canonical normalizer shared by all constructors.
+    pub fn from_int_scaled(sign: bool, mag: &[u64], scale_exp: i64, prec: u32) -> Self {
+        let nbits = bigint::bit_length(mag);
+        if nbits == 0 {
+            return ApFloat::zero(prec);
+        }
+        let n = (prec / 64) as usize;
+        let mut mant = vec![0u64; n];
+        if nbits >= prec as usize {
+            bigint::shr(mag, nbits - prec as usize, &mut mant); // truncate = RNDZ
+        } else {
+            bigint::shl(mag, prec as usize - nbits, &mut mant);
+        }
+        ApFloat { sign, exp: scale_exp + nbits as i64, mant, prec }
+    }
+
+    pub fn from_u64(v: u64, prec: u32) -> Self {
+        ApFloat::from_int_scaled(false, &[v], 0, prec)
+    }
+
+    pub fn from_i64(v: i64, prec: u32) -> Self {
+        ApFloat::from_int_scaled(v < 0, &[v.unsigned_abs()], 0, prec)
+    }
+
+    // ---- accessors ----------------------------------------------------------
+
+    pub fn prec(&self) -> u32 {
+        self.prec
+    }
+
+    pub fn limbs(&self) -> &[u64] {
+        &self.mant
+    }
+
+    pub fn sign(&self) -> bool {
+        self.sign
+    }
+
+    pub fn exp(&self) -> i64 {
+        self.exp
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.exp == ZERO_EXP
+    }
+
+    pub fn neg(&self) -> Self {
+        if self.is_zero() {
+            self.clone()
+        } else {
+            ApFloat { sign: !self.sign, ..self.clone() }
+        }
+    }
+
+    pub fn abs(&self) -> Self {
+        if self.is_zero() {
+            self.clone()
+        } else {
+            ApFloat { sign: false, ..self.clone() }
+        }
+    }
+
+    /// Magnitude comparison |self| vs |other|.
+    pub fn cmp_mag(&self, other: &Self) -> std::cmp::Ordering {
+        use std::cmp::Ordering;
+        match (self.is_zero(), other.is_zero()) {
+            (true, true) => Ordering::Equal,
+            (true, false) => Ordering::Less,
+            (false, true) => Ordering::Greater,
+            (false, false) => self
+                .exp
+                .cmp(&other.exp)
+                .then_with(|| bigint::cmp(&self.mant, &other.mant)),
+        }
+    }
+
+    /// Signed total order.
+    pub fn cmp_total(&self, other: &Self) -> std::cmp::Ordering {
+        use std::cmp::Ordering;
+        match (self.is_zero(), other.is_zero()) {
+            (true, true) => Ordering::Equal,
+            (true, false) => {
+                if other.sign { Ordering::Greater } else { Ordering::Less }
+            }
+            (false, true) => {
+                if self.sign { Ordering::Less } else { Ordering::Greater }
+            }
+            (false, false) => match (self.sign, other.sign) {
+                (false, true) => Ordering::Greater,
+                (true, false) => Ordering::Less,
+                (false, false) => self.cmp_mag(other),
+                (true, true) => other.cmp_mag(self),
+            },
+        }
+    }
+}
+
+impl PartialOrd for ApFloat {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp_total(other))
+    }
+}
+
+impl std::fmt::Display for ApFloat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.to_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const P: u32 = 448;
+
+    #[test]
+    fn zero_is_canonical() {
+        let z = ApFloat::zero(P);
+        assert!(z.is_zero());
+        assert!(!z.sign());
+        assert_eq!(z.exp(), ZERO_EXP);
+        assert_eq!(z.neg(), z); // -0 stays +0 in this representation
+    }
+
+    #[test]
+    fn from_u64_normalizes() {
+        let x = ApFloat::from_u64(1, P);
+        assert_eq!(x.exp(), 1); // 1 = 0.5 * 2^1
+        assert_eq!(bigint::bit_length(x.limbs()), P as usize);
+        let y = ApFloat::from_u64(6, P);
+        assert_eq!(y.exp(), 3); // 6 = 0.75 * 2^3
+    }
+
+    #[test]
+    fn from_i64_sign() {
+        assert!(ApFloat::from_i64(-5, P).sign());
+        assert!(!ApFloat::from_i64(5, P).sign());
+        assert!(ApFloat::from_i64(0, P).is_zero());
+        assert_eq!(ApFloat::from_i64(i64::MIN, P).to_f64(), i64::MIN as f64);
+    }
+
+    #[test]
+    fn from_int_scaled_truncates_rndz() {
+        // 2^448 + 1 doesn't fit 448 bits; RNDZ drops the low 1
+        let mut mag = vec![0u64; 8];
+        mag[0] = 1;
+        mag[7] = 1 << 0; // bit 448
+        let x = ApFloat::from_int_scaled(false, &mag, 0, P);
+        assert_eq!(x.exp(), 449);
+        // mantissa = 2^447 exactly (the +1 truncated away)
+        assert_eq!(bigint::bit_length(x.limbs()), 448);
+        let mut expect = vec![0u64; 7];
+        expect[6] = 1 << 63;
+        assert_eq!(x.limbs(), &expect[..]);
+    }
+
+    #[test]
+    fn cmp_total_orders_signs_and_magnitudes() {
+        use std::cmp::Ordering::*;
+        let a = ApFloat::from_i64(3, P);
+        let b = ApFloat::from_i64(-7, P);
+        let z = ApFloat::zero(P);
+        assert_eq!(a.cmp_total(&b), Greater);
+        assert_eq!(b.cmp_total(&a), Less);
+        assert_eq!(z.cmp_total(&a), Less);
+        assert_eq!(z.cmp_total(&b), Greater);
+        assert_eq!(b.cmp_total(&ApFloat::from_i64(-2, P)), Less);
+    }
+
+    #[test]
+    fn prec_for_bits_fig1() {
+        assert_eq!(prec_for_bits(512), 448);
+        assert_eq!(prec_for_bits(1024), 960);
+        assert_eq!(prec_for_bits(1536), 1472);
+    }
+}

@@ -1,0 +1,377 @@
+//! Arithmetic on `ApFloat`: the software editions of the paper's §II
+//! operators, bit-compatible with the JAX model and the Python oracle.
+
+use super::ApFloat;
+use crate::bigint;
+
+/// Widths up to `STACK_LIMBS * 64` bits (2048) use stack scratch on the hot
+/// path instead of heap workspaces (§Perf P1 in EXPERIMENTS.md).
+const STACK_LIMBS: usize = 32;
+
+impl ApFloat {
+    /// RNDZ multiplication (§II-A).  The mantissa product is exact, so
+    /// truncating its low bits *is* round-to-zero.
+    pub fn mul(&self, other: &Self) -> Self {
+        assert_eq!(self.prec, other.prec);
+        if self.is_zero() || other.is_zero() {
+            return ApFloat::zero(self.prec);
+        }
+        let n = self.mant.len();
+        let p = self.prec as usize;
+        // product workspace on the stack for the paper's widths (P1)
+        let mut prod_stack = [0u64; 2 * STACK_LIMBS];
+        let mut prod_heap;
+        let prod: &mut [u64] = if n <= STACK_LIMBS {
+            &mut prod_stack[..2 * n]
+        } else {
+            prod_heap = vec![0u64; 2 * n];
+            &mut prod_heap
+        };
+        bigint::mul_auto(&self.mant, &other.mant, prod);
+        let nbits = bigint::bit_length(prod); // 2p or 2p-1
+        debug_assert!(nbits == 2 * p || nbits == 2 * p - 1);
+        let mut mant = vec![0u64; n];
+        bigint::shr(prod, nbits - p, &mut mant); // truncate = RNDZ
+        ApFloat {
+            sign: self.sign != other.sign,
+            exp: self.exp + other.exp + (nbits as i64 - 2 * p as i64),
+            mant,
+            prec: self.prec,
+        }
+    }
+
+    /// RNDZ addition/subtraction (§II-B), bit-exact vs exact-integer
+    /// arithmetic via the guard-limb workspace + sticky correction
+    /// (DESIGN.md §5).  Stages mirror the hardware adder pipeline:
+    /// swap, barrel shift + sticky, wide add/sub, LZC renormalize, truncate.
+    pub fn add(&self, other: &Self) -> Self {
+        assert_eq!(self.prec, other.prec);
+        if self.is_zero() {
+            return other.clone();
+        }
+        if other.is_zero() {
+            return self.clone();
+        }
+
+        // -- stage 1: order by magnitude ------------------------------------
+        let (big, small) = if self.cmp_mag(other) == std::cmp::Ordering::Less {
+            (other, self)
+        } else {
+            (self, other)
+        };
+        let same_sign = big.sign == small.sign;
+
+        // -- stage 2: alignment ----------------------------------------------
+        // Workspace: [1 guard limb | n mantissa limbs | 1 overflow limb];
+        // `big`'s MSB sits at bit 64 + p - 1.
+        let n = self.mant.len();
+        let p = self.prec as usize;
+        let ws = n + 2;
+        // all three workspaces on the stack for the paper's widths (P1)
+        let mut stack = [0u64; 3 * (STACK_LIMBS + 2)];
+        let mut heap;
+        let bufs: &mut [u64] = if ws <= STACK_LIMBS + 2 {
+            &mut stack[..3 * ws]
+        } else {
+            heap = vec![0u64; 3 * ws];
+            &mut heap
+        };
+        let (ws_big, rest) = bufs.split_at_mut(ws);
+        let (placed_small, ws_small) = rest.split_at_mut(ws);
+        ws_big[1..1 + n].copy_from_slice(&big.mant);
+        placed_small[1..1 + n].copy_from_slice(&small.mant);
+
+        let d_wide = (big.exp as i128) - (small.exp as i128); // >= 0
+        let d = d_wide.min((64 * ws) as i128) as usize; // beyond this all bits are sticky
+        bigint::shr(placed_small, d, ws_small);
+        let sticky = bigint::sticky_below(placed_small, d);
+
+        // -- stage 3: wide add / subtract -------------------------------------
+        let v = ws_big;
+        if same_sign {
+            let carry = bigint::add_assign(v, ws_small);
+            debug_assert!(!carry, "overflow limb absorbs the carry");
+        } else {
+            let borrow = bigint::sub_assign(v, ws_small);
+            debug_assert!(!borrow, "|big| >= |small| by stage 1");
+            if sticky {
+                // RNDZ correction: the truncated small operand under-shoots,
+                // so the raw difference over-shoots by <1 ws-ulp.
+                let borrow = bigint::sub_limb(v, 1);
+                debug_assert!(!borrow);
+            }
+        }
+
+        // -- stages 4+5: renormalize + truncate --------------------------------
+        let nbits = bigint::bit_length(v);
+        if nbits == 0 {
+            return ApFloat::zero(self.prec); // exact cancellation -> +0
+        }
+        let mut mant = vec![0u64; n];
+        if nbits >= p {
+            bigint::shr(v, nbits - p, &mut mant);
+        } else {
+            bigint::shl(v, p - nbits, &mut mant);
+        }
+        ApFloat {
+            sign: big.sign,
+            exp: big.exp + (nbits as i64 - (64 + p) as i64),
+            mant,
+            prec: self.prec,
+        }
+    }
+
+    pub fn sub(&self, other: &Self) -> Self {
+        self.add(&other.neg())
+    }
+
+    /// RNDZ division — the "dependent operation" the paper notes inherits
+    /// multiplication's cost (§I).  q = floor(Ma * 2^(p+1) / Mb) keeps one
+    /// guard + one headroom bit; truncating q to p bits equals truncating
+    /// the exact quotient (floor composed with a coarser floor).
+    pub fn div(&self, other: &Self) -> Self {
+        assert_eq!(self.prec, other.prec);
+        assert!(!other.is_zero(), "APFP division by zero");
+        if self.is_zero() {
+            return self.clone();
+        }
+        let n = self.mant.len();
+        let p = self.prec as i64;
+        // numerator = mant << (p + 1): n limbs shifted up by n limbs + 1 bit
+        let mut num = vec![0u64; 2 * n + 1];
+        num[n..2 * n].copy_from_slice(&self.mant);
+        let src = num.clone();
+        bigint::shl(&src, 1, &mut num);
+        let (q, _r) = bigint::div_rem(&num, &other.mant);
+        ApFloat::from_int_scaled(
+            self.sign != other.sign,
+            &q,
+            self.exp - other.exp - (p + 1),
+            self.prec,
+        )
+    }
+
+    /// Fused pipeline semantics: `self + a*b` with the product rounded to
+    /// `prec` before accumulation (the multiplier normalizes its output
+    /// before feeding the adder, as in the paper's combined pipeline).
+    pub fn mac(&self, a: &Self, b: &Self) -> Self {
+        self.add(&a.mul(b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{self, Rng};
+
+    const P: u32 = 448;
+
+    fn rand_ap(rng: &mut Rng, prec: u32, exp_range: i64) -> ApFloat {
+        let n = (prec / 64) as usize;
+        let mut mant = rng.limbs(n);
+        mant[n - 1] |= 1 << 63; // normalize
+        ApFloat::from_parts(rng.bool(), rng.range_i64(-exp_range, exp_range), mant, prec)
+    }
+
+    #[test]
+    fn mul_small_integers() {
+        let a = ApFloat::from_i64(6, P);
+        let b = ApFloat::from_i64(-7, P);
+        assert_eq!(a.mul(&b), ApFloat::from_i64(-42, P));
+        assert_eq!(b.mul(&b), ApFloat::from_i64(49, P));
+    }
+
+    #[test]
+    fn add_small_integers() {
+        let a = ApFloat::from_i64(100, P);
+        let b = ApFloat::from_i64(-58, P);
+        assert_eq!(a.add(&b), ApFloat::from_i64(42, P));
+        assert_eq!(b.add(&a), ApFloat::from_i64(42, P));
+        assert_eq!(a.sub(&a), ApFloat::zero(P));
+    }
+
+    #[test]
+    fn add_is_exact_on_integers_property() {
+        testkit::check(300, |rng| {
+            let x = rng.range_i64(-(1 << 40), 1 << 40);
+            let y = rng.range_i64(-(1 << 40), 1 << 40);
+            let got = ApFloat::from_i64(x, P).add(&ApFloat::from_i64(y, P));
+            assert_eq!(got, ApFloat::from_i64(x + y, P), "{x} + {y}");
+        });
+    }
+
+    #[test]
+    fn mul_is_exact_on_integers_property() {
+        testkit::check(300, |rng| {
+            let x = rng.range_i64(-(1 << 30), 1 << 30);
+            let y = rng.range_i64(-(1 << 30), 1 << 30);
+            let got = ApFloat::from_i64(x, P).mul(&ApFloat::from_i64(y, P));
+            assert_eq!(got, ApFloat::from_i64(x * y, P), "{x} * {y}");
+        });
+    }
+
+    #[test]
+    fn commutativity_property() {
+        testkit::check(100, |rng| {
+            let a = rand_ap(rng, P, 500);
+            let b = rand_ap(rng, P, 500);
+            assert_eq!(a.mul(&b), b.mul(&a));
+            assert_eq!(a.add(&b), b.add(&a));
+        });
+    }
+
+    #[test]
+    fn identities_property() {
+        let one = ApFloat::from_i64(1, P);
+        let zero = ApFloat::zero(P);
+        testkit::check(100, |rng| {
+            let a = rand_ap(rng, P, 500);
+            assert_eq!(a.mul(&one), a);
+            assert_eq!(a.add(&zero), a);
+            assert!(a.mul(&zero).is_zero());
+            assert!(a.sub(&a).is_zero());
+            assert_eq!(a.neg().neg(), a);
+        });
+    }
+
+    #[test]
+    fn rndz_never_increases_magnitude() {
+        // |fl(a*b)| <= |a*b| exactly: check via exponent/mantissa when the
+        // product is exactly representable vs truncated.
+        testkit::check(100, |rng| {
+            let a = rand_ap(rng, P, 100);
+            let b = rand_ap(rng, P, 100);
+            let ab = a.mul(&b);
+            // multiply back the other way and compare magnitudes loosely
+            let fa = a.to_f64().abs();
+            let fb = b.to_f64().abs();
+            let fab = ab.to_f64().abs();
+            let rel = (fab - fa * fb).abs() / (fa * fb);
+            assert!(rel < 1e-12, "rel={rel}");
+        });
+    }
+
+    #[test]
+    fn catastrophic_cancellation_keeps_low_bits() {
+        // (2^200 + 1) - 2^200 must give exactly 1 (guard limb at work
+        // it is not: d=0 subtraction is exact by construction)
+        let mut big_plus = vec![0u64; 7];
+        big_plus[0] = 1;
+        big_plus[6] = 1 << 63; // 2^447 + 1 as mantissa, exp = 448
+        let x = ApFloat::from_parts(false, 448, big_plus, P); // 2^447+1 scaled
+        let mut big = vec![0u64; 7];
+        big[6] = 1 << 63;
+        let y = ApFloat::from_parts(true, 448, big, P); // -(2^447)
+        let diff = x.add(&y);
+        assert_eq!(diff, ApFloat::from_i64(1, P));
+    }
+
+    #[test]
+    fn sticky_correction_one_ulp() {
+        // 1 - 2^-1000: exact result is 0.111...1 (1000 ones); RNDZ at 448
+        // bits = 0.111...1 (448 ones) * 2^0 — requires the sticky path.
+        let one = ApFloat::from_i64(1, P);
+        let mut tiny_m = vec![0u64; 7];
+        tiny_m[6] = 1 << 63;
+        let tiny = ApFloat::from_parts(true, -999, tiny_m, P); // -(2^-1000)
+        let got = one.add(&tiny);
+        assert_eq!(got.exp(), 0);
+        assert!(got.limbs().iter().all(|&w| w == u64::MAX), "all-ones mantissa");
+    }
+
+    #[test]
+    fn guard_limb_boundary_diffs() {
+        // exponent differences straddling the guard-limb capacity (64 bits)
+        // and the workspace edge: compare against exact integer arithmetic
+        // done in 4096-bit software (via from_int_scaled on wide buffers).
+        for d in [1usize, 2, 63, 64, 65, 447, 448, 449, 511, 512, 513, 600] {
+            let one = ApFloat::from_i64(1, P); // exp = 1
+            let mut m = vec![0u64; 7];
+            m[6] = 1 << 63;
+            m[0] = 1; // mantissa 2^447 + 1 => value has bits at both ends
+            let small = ApFloat::from_parts(true, 1 - d as i64, m, P);
+            let got = one.add(&small);
+            // exact: 1 - (2^447+1)*2^(1-d-448) = 1 - 2^-d - 2^(-447-d)
+            // compute reference with wide integers: scale 2^(448+d+64)
+            let scale = 448 + d + 64;
+            let mut acc = vec![0u64; (scale + 64).div_ceil(64)];
+            let limb = scale / 64;
+            acc[limb] |= 1 << (scale % 64); // 1
+            let mut sub = vec![0u64; acc.len()];
+            sub[(scale - d) / 64] |= 1 << ((scale - d) % 64); // 2^-d
+            let borrow = bigint::sub_assign(&mut acc, &sub);
+            assert!(!borrow);
+            sub.fill(0);
+            sub[(scale - d - 447) / 64] |= 1 << ((scale - d - 447) % 64);
+            let borrow = bigint::sub_assign(&mut acc, &sub);
+            assert!(!borrow);
+            let want = ApFloat::from_int_scaled(false, &acc, -(scale as i64), P);
+            assert_eq!(got, want, "d={d}");
+        }
+    }
+
+    #[test]
+    fn div_small_integers() {
+        let a = ApFloat::from_i64(42, P);
+        let b = ApFloat::from_i64(-7, P);
+        assert_eq!(a.div(&b), ApFloat::from_i64(-6, P));
+        assert_eq!(b.div(&b), ApFloat::from_i64(1, P));
+        assert!(ApFloat::zero(P).div(&a).is_zero());
+    }
+
+    #[test]
+    fn div_mul_roundtrip_property() {
+        // (a / b) * b agrees with a to within 2 ulps (two RNDZ roundings)
+        testkit::check(150, |rng| {
+            let a = rand_ap(rng, P, 200);
+            let b = rand_ap(rng, P, 200);
+            let back = a.div(&b).mul(&b);
+            let diff = back.sub(&a);
+            assert!(
+                diff.is_zero() || diff.exp() <= a.exp() - (P as i64) + 2,
+                "residual exp {} vs a exp {}",
+                diff.exp(),
+                a.exp()
+            );
+        });
+    }
+
+    #[test]
+    fn div_truncates_toward_zero() {
+        // 1 / 3 in RNDZ: 3 * (1/3) must be strictly <= 1
+        let one = ApFloat::from_i64(1, P);
+        let three = ApFloat::from_i64(3, P);
+        let third = one.div(&three);
+        assert!(third.mul(&three).cmp_total(&one) == std::cmp::Ordering::Less);
+        // and the negative mirror truncates toward zero too (magnitude down)
+        let neg_third = one.neg().div(&three);
+        assert!(neg_third.neg() == third);
+    }
+
+    #[test]
+    fn div_at_960_bits() {
+        let p = 960;
+        let a = ApFloat::from_i64(1 << 40, p);
+        let b = ApFloat::from_i64(1 << 20, p);
+        assert_eq!(a.div(&b), ApFloat::from_i64(1 << 20, p));
+    }
+
+    #[test]
+    fn mac_matches_mul_then_add() {
+        testkit::check(50, |rng| {
+            let c = rand_ap(rng, P, 50);
+            let a = rand_ap(rng, P, 50);
+            let b = rand_ap(rng, P, 50);
+            assert_eq!(c.mac(&a, &b), c.add(&a.mul(&b)));
+        });
+    }
+
+    #[test]
+    fn works_at_960_bit_precision() {
+        let p = 960;
+        let a = ApFloat::from_i64(123456789, p);
+        let b = ApFloat::from_i64(-987654321, p);
+        assert_eq!(a.mul(&b), ApFloat::from_i64(123456789 * -987654321, p));
+        assert_eq!(a.add(&b), ApFloat::from_i64(123456789 - 987654321, p));
+    }
+}

@@ -1,0 +1,116 @@
+//! From-scratch property-testing kit (proptest is unavailable offline).
+//!
+//! Deterministic xorshift PRNG + a tiny runner that executes a property over
+//! many generated cases and reports the failing seed, so failures are
+//! reproducible with `Rng::from_seed(seed)`.
+
+/// xorshift64* — deterministic, fast, good enough for test-case generation.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn from_seed(seed: u64) -> Self {
+        // avoid the all-zero fixed point
+        Rng { state: seed.wrapping_mul(2685821657736338717).max(1) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, n) (n > 0).
+    pub fn below(&mut self, n: u64) -> u64 {
+        // multiply-shift; bias is negligible for test generation
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform in [lo, hi] inclusive.
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo <= hi);
+        lo + self.below((hi - lo + 1) as u64) as i64
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    /// One of the elements of a slice.
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+
+    /// Vector of uniformly random u64 limbs.
+    pub fn limbs(&mut self, n: usize) -> Vec<u64> {
+        (0..n).map(|_| self.next_u64()).collect()
+    }
+}
+
+/// Run `prop` over `cases` generated cases; panic with the case seed on
+/// failure, so the failure reproduces with `Rng::from_seed(seed)`.
+pub fn check<F: FnMut(&mut Rng)>(cases: u64, mut prop: F) {
+    for case in 0..cases {
+        let seed = 0x9E3779B97F4A7C15u64.wrapping_mul(case + 1);
+        let mut rng = Rng::from_seed(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng)
+        }));
+        if let Err(e) = result {
+            eprintln!("testkit: property failed on case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::from_seed(7);
+        let mut b = Rng::from_seed(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut rng = Rng::from_seed(1);
+        for _ in 0..1000 {
+            assert!(rng.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn range_inclusive() {
+        let mut rng = Rng::from_seed(2);
+        let mut seen_lo = false;
+        let mut seen_hi = false;
+        for _ in 0..2000 {
+            let v = rng.range_i64(-3, 3);
+            assert!((-3..=3).contains(&v));
+            seen_lo |= v == -3;
+            seen_hi |= v == 3;
+        }
+        assert!(seen_lo && seen_hi);
+    }
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut n = 0;
+        check(25, |_| n += 1);
+        assert_eq!(n, 25);
+    }
+}

@@ -1,0 +1,152 @@
+//! BLAS interface tests (§IV-B, Lst. 2): indexing-function GEMM / SYRK over
+//! column-major storage, verified against the softfloat baseline.
+
+use apfp::baseline;
+use apfp::blas::{self, BlasTrans};
+use apfp::config::ApfpConfig;
+use apfp::coordinator::{Device, Matrix};
+use apfp::softfloat::ApFloat;
+
+fn device() -> Option<Device> {
+    let dir = apfp::runtime::default_artifact_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipped: no artifacts");
+        return None;
+    }
+    let cfg = ApfpConfig { compute_units: 2, ..Default::default() };
+    Some(Device::new(cfg, &dir).unwrap())
+}
+
+/// Column-major buffer like Elemental's LockedBuffer view.
+struct ColMajor {
+    data: Vec<ApFloat>,
+    ld: usize,
+}
+
+impl ColMajor {
+    fn from_matrix(m: &Matrix) -> Self {
+        let ld = m.rows();
+        let mut data = vec![ApFloat::zero(m.prec()); ld * m.cols()];
+        for i in 0..m.rows() {
+            for j in 0..m.cols() {
+                data[j * ld + i] = m.get(i, j).clone();
+            }
+        }
+        ColMajor { data, ld }
+    }
+
+    fn to_matrix(&self, rows: usize, cols: usize, prec: u32) -> Matrix {
+        Matrix::from_fn(rows, cols, prec, |i, j| self.data[j * self.ld + i].clone())
+    }
+}
+
+#[test]
+fn gemm_normal_normal_matches_reference() {
+    let Some(dev) = device() else { return };
+    let (m, n, k) = (11, 13, 9);
+    let a = Matrix::random(m, k, 448, 70, 30);
+    let b = Matrix::random(k, n, 448, 71, 30);
+    let c = Matrix::random(m, n, 448, 72, 30);
+    let (ca, cb) = (ColMajor::from_matrix(&a), ColMajor::from_matrix(&b));
+    let mut cc = ColMajor::from_matrix(&c);
+
+    // Lst. 2 style: closures indexing the caller's own storage
+    let out_ref = std::cell::RefCell::new(vec![ApFloat::zero(448); cc.data.len()]);
+    blas::gemm(
+        &dev,
+        BlasTrans::Normal,
+        BlasTrans::Normal,
+        m, n, k,
+        |i| ca.data[i].clone(), ca.ld,
+        |i| cb.data[i].clone(), cb.ld,
+        |i| cc.data[i].clone(),
+        |i, v| out_ref.borrow_mut()[i] = v,
+        cc.ld,
+    )
+    .unwrap();
+    cc.data = out_ref.into_inner();
+
+    let got = cc.to_matrix(m, n, 448);
+    let want = baseline::gemm_serial(&a, &b, &c);
+    assert_eq!(got, want);
+}
+
+#[test]
+fn gemm_transpose_b() {
+    let Some(dev) = device() else { return };
+    let (m, n, k) = (6, 5, 7);
+    let a = Matrix::random(m, k, 448, 80, 30);
+    let bt = Matrix::random(n, k, 448, 81, 30); // we pass B^T storage
+    let c = Matrix::zeros(m, n, 448);
+    let (ca, cbt) = (ColMajor::from_matrix(&a), ColMajor::from_matrix(&bt));
+    let cc = ColMajor::from_matrix(&c);
+
+    let out_ref = std::cell::RefCell::new(cc.data.clone());
+    blas::gemm(
+        &dev,
+        BlasTrans::Normal,
+        BlasTrans::Transpose,
+        m, n, k,
+        |i| ca.data[i].clone(), ca.ld,
+        |i| cbt.data[i].clone(), cbt.ld,
+        |_| ApFloat::zero(448),
+        |i, v| out_ref.borrow_mut()[i] = v,
+        cc.ld,
+    )
+    .unwrap();
+
+    // reference: B = bt^T
+    let b = Matrix::from_fn(k, n, 448, |i, j| bt.get(j, i).clone());
+    let want = baseline::gemm_serial(&a, &b, &c);
+    let got = ColMajor { data: out_ref.into_inner(), ld: cc.ld }.to_matrix(m, n, 448);
+    assert_eq!(got, want);
+}
+
+#[test]
+fn syrk_lower_triangle() {
+    let Some(dev) = device() else { return };
+    let (m, k) = (8, 5);
+    let a = Matrix::random(m, k, 448, 90, 30);
+    let ca = ColMajor::from_matrix(&a);
+    let c0 = Matrix::zeros(m, m, 448);
+    let cc = ColMajor::from_matrix(&c0);
+
+    let out_ref = std::cell::RefCell::new(cc.data.clone());
+    blas::syrk(
+        &dev,
+        m, k,
+        |i| ca.data[i].clone(), ca.ld,
+        |_| ApFloat::zero(448),
+        |i, v| out_ref.borrow_mut()[i] = v,
+        m,
+    )
+    .unwrap();
+    let got = ColMajor { data: out_ref.into_inner(), ld: m }.to_matrix(m, m, 448);
+
+    // reference: full A * A^T
+    let at = Matrix::from_fn(k, m, 448, |i, j| a.get(j, i).clone());
+    let want = baseline::gemm_serial(&a, &at, &c0);
+    for i in 0..m {
+        for j in 0..m {
+            if i >= j {
+                assert_eq!(got.get(i, j), want.get(i, j), "lower ({i},{j})");
+            } else {
+                assert!(got.get(i, j).is_zero(), "upper ({i},{j}) must be untouched");
+            }
+        }
+    }
+}
+
+#[test]
+fn linalg_backend_device_matches_host() {
+    // MatmulBackend::Device must be bit-identical to MatmulBackend::Host —
+    // the guarantee the SDP example's drop-in relies on.
+    use apfp::linalg::MatmulBackend;
+    let Some(dev) = device() else { return };
+    let a = Matrix::random(9, 7, 448, 95, 25);
+    let b = Matrix::random(7, 8, 448, 96, 25);
+    let c = Matrix::random(9, 8, 448, 97, 25);
+    let host = MatmulBackend::Host { threads: 2 }.gemm(&a, &b, &c).unwrap();
+    let devr = MatmulBackend::Device(&dev).gemm(&a, &b, &c).unwrap();
+    assert_eq!(host, devr);
+}

@@ -1,0 +1,98 @@
+//! End-to-end coordinator test: multi-CU GEMM through PJRT artifacts,
+//! bit-compared against the software baseline (the paper's verification
+//! methodology: accelerator output vs MPFR software computation).
+
+use apfp::baseline;
+use apfp::config::ApfpConfig;
+use apfp::coordinator::{Device, Matrix};
+
+fn device(cus: usize, bits: u32) -> Option<Device> {
+    let dir = apfp::runtime::default_artifact_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipped: no artifacts");
+        return None;
+    }
+    let mut cfg = ApfpConfig { compute_units: cus, bits, ..Default::default() };
+    cfg.tile_n = 16;
+    cfg.tile_m = 16;
+    Some(Device::new(cfg, &dir).unwrap())
+}
+
+#[test]
+fn gemm_single_cu_bit_exact() {
+    let Some(dev) = device(1, 512) else { return };
+    let a = Matrix::random(24, 20, 448, 10, 40);
+    let b = Matrix::random(20, 28, 448, 11, 40);
+    let c = Matrix::random(24, 28, 448, 12, 40);
+    let (got, stats) = dev.gemm(&a, &b, &c).unwrap();
+    let want = baseline::gemm_serial(&a, &b, &c);
+    assert_eq!(got, want, "device GEMM must be bit-identical to softfloat");
+    assert!(stats.tiles > 0 && stats.artifact_calls >= stats.tiles);
+}
+
+#[test]
+fn gemm_multi_cu_bit_exact_and_partitioned() {
+    let Some(dev) = device(3, 512) else { return };
+    // deliberately awkward sizes: not multiples of the tile or CU count
+    let a = Matrix::random(37, 19, 448, 20, 40);
+    let b = Matrix::random(19, 23, 448, 21, 40);
+    let c = Matrix::random(37, 23, 448, 22, 40);
+    let (got, stats) = dev.gemm(&a, &b, &c).unwrap();
+    let want = baseline::gemm_serial(&a, &b, &c);
+    assert_eq!(got, want);
+    assert_eq!(dev.placements().len(), 3);
+    assert!(stats.macs > 0);
+}
+
+#[test]
+fn gemm_repeated_calls_reuse_compiled_artifacts() {
+    let Some(dev) = device(2, 512) else { return };
+    let a = Matrix::random(16, 16, 448, 30, 20);
+    let b = Matrix::random(16, 16, 448, 31, 20);
+    let c0 = Matrix::zeros(16, 16, 448);
+    let t0 = std::time::Instant::now();
+    let (c1, _) = dev.gemm(&a, &b, &c0).unwrap();
+    let first = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let (c2, _) = dev.gemm(&a, &b, &c1).unwrap();
+    let second = t1.elapsed();
+    // C accumulates (beta = 1): second call adds A*B again
+    let want = baseline::gemm_serial(&a, &b, &c1);
+    assert_eq!(c2, want);
+    // compile happened once: the second call must be much faster
+    assert!(second < first, "no executable reuse: {first:?} -> {second:?}");
+}
+
+#[test]
+fn stream_ops_through_device() {
+    let Some(dev) = device(2, 512) else { return };
+    let a = Matrix::random(1, 90, 448, 40, 100);
+    let b = Matrix::random(1, 90, 448, 41, 100);
+    let got = dev.mul_stream(a.values(), b.values()).unwrap();
+    for (i, g) in got.iter().enumerate() {
+        assert_eq!(*g, a.values()[i].mul(&b.values()[i]), "mul lane {i}");
+    }
+    let got = dev.add_stream(a.values(), b.values()).unwrap();
+    for (i, g) in got.iter().enumerate() {
+        assert_eq!(*g, a.values()[i].add(&b.values()[i]), "add lane {i}");
+    }
+}
+
+#[test]
+fn gemm_1024_bits() {
+    let Some(dev) = device(2, 1024) else { return };
+    let a = Matrix::random(10, 9, 960, 50, 40);
+    let b = Matrix::random(9, 12, 960, 51, 40);
+    let c = Matrix::random(10, 12, 960, 52, 40);
+    let (got, _) = dev.gemm(&a, &b, &c).unwrap();
+    assert_eq!(got, baseline::gemm_serial(&a, &b, &c));
+}
+
+#[test]
+fn shape_mismatch_is_error() {
+    let Some(dev) = device(1, 512) else { return };
+    let a = Matrix::random(4, 5, 448, 60, 10);
+    let b = Matrix::random(6, 4, 448, 61, 10); // 5 != 6
+    let c = Matrix::zeros(4, 4, 448);
+    assert!(dev.gemm(&a, &b, &c).is_err());
+}

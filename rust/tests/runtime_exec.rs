@@ -1,0 +1,112 @@
+//! Integration: execute real AOT artifacts through PJRT and bit-compare
+//! against the softfloat reference — the reproduction's analog of the
+//! paper's "output compared to the equivalent MPFR software computation".
+//!
+//! Requires `make artifacts` to have run (skipped otherwise).
+
+use apfp::pack::PlaneBatch;
+use apfp::runtime::{default_artifact_dir, Runtime};
+use apfp::softfloat::ApFloat;
+use apfp::testkit::Rng;
+
+fn artifact_dir() -> Option<std::path::PathBuf> {
+    let d = default_artifact_dir();
+    d.join("manifest.txt").exists().then_some(d)
+}
+
+fn rand_ap(rng: &mut Rng, prec: u32) -> ApFloat {
+    let n = (prec / 64) as usize;
+    let mut mant = rng.limbs(n);
+    mant[n - 1] |= 1 << 63;
+    ApFloat::from_parts(rng.bool(), rng.range_i64(-900, 900), mant, prec)
+}
+
+#[test]
+fn mul_stream_bit_exact_512() {
+    let Some(dir) = artifact_dir() else { eprintln!("skipped: no artifacts"); return };
+    let rt = Runtime::new(&dir).unwrap();
+    let mut rng = Rng::from_seed(1);
+    let n = 100; // exercises chunking (batch is 64) and padding
+    let a: Vec<ApFloat> = (0..n).map(|_| rand_ap(&mut rng, 448)).collect();
+    let mut b: Vec<ApFloat> = (0..n).map(|_| rand_ap(&mut rng, 448)).collect();
+    b[7] = ApFloat::zero(448); // zero lane
+    let got = rt
+        .exec_stream_binop("mul_512", &PlaneBatch::from_slice(&a, 448), &PlaneBatch::from_slice(&b, 448))
+        .unwrap()
+        .to_vec();
+    for i in 0..n {
+        assert_eq!(got[i], a[i].mul(&b[i]), "lane {i}");
+    }
+}
+
+#[test]
+fn add_stream_bit_exact_512() {
+    let Some(dir) = artifact_dir() else { eprintln!("skipped: no artifacts"); return };
+    let rt = Runtime::new(&dir).unwrap();
+    let mut rng = Rng::from_seed(2);
+    let n = 64;
+    let a: Vec<ApFloat> = (0..n).map(|_| rand_ap(&mut rng, 448)).collect();
+    let mut b: Vec<ApFloat> = (0..n).map(|_| rand_ap(&mut rng, 448)).collect();
+    b[3] = a[3].neg(); // exact cancellation lane
+    let got = rt
+        .exec_stream_binop("add_512", &PlaneBatch::from_slice(&a, 448), &PlaneBatch::from_slice(&b, 448))
+        .unwrap()
+        .to_vec();
+    for i in 0..n {
+        assert_eq!(got[i], a[i].add(&b[i]), "lane {i}");
+    }
+}
+
+#[test]
+fn mac_stream_bit_exact_1024() {
+    let Some(dir) = artifact_dir() else { eprintln!("skipped: no artifacts"); return };
+    let rt = Runtime::new(&dir).unwrap();
+    let mut rng = Rng::from_seed(3);
+    let n = 32;
+    let c: Vec<ApFloat> = (0..n).map(|_| rand_ap(&mut rng, 960)).collect();
+    let a: Vec<ApFloat> = (0..n).map(|_| rand_ap(&mut rng, 960)).collect();
+    let b: Vec<ApFloat> = (0..n).map(|_| rand_ap(&mut rng, 960)).collect();
+    let got = rt
+        .exec_stream_mac(
+            "mac_1024",
+            &PlaneBatch::from_slice(&c, 960),
+            &PlaneBatch::from_slice(&a, 960),
+            &PlaneBatch::from_slice(&b, 960),
+        )
+        .unwrap()
+        .to_vec();
+    for i in 0..n {
+        assert_eq!(got[i], c[i].mac(&a[i], &b[i]), "lane {i}");
+    }
+}
+
+#[test]
+fn gemm_tile_bit_exact_512() {
+    let Some(dir) = artifact_dir() else { eprintln!("skipped: no artifacts"); return };
+    let rt = Runtime::new(&dir).unwrap();
+    let meta = rt.meta("gemm_512_t8").unwrap().clone();
+    let (tn, tm, kt) = (meta.t_n, meta.t_m, meta.k_tile);
+    let mut rng = Rng::from_seed(4);
+    let a: Vec<ApFloat> = (0..tn * kt).map(|_| rand_ap(&mut rng, 448)).collect();
+    let b: Vec<ApFloat> = (0..kt * tm).map(|_| rand_ap(&mut rng, 448)).collect();
+    let c: Vec<ApFloat> = (0..tn * tm).map(|_| rand_ap(&mut rng, 448)).collect();
+    let got = rt
+        .exec_gemm_tile(
+            "gemm_512_t8",
+            &PlaneBatch::from_slice(&a, 448),
+            &PlaneBatch::from_slice(&b, 448),
+            &PlaneBatch::from_slice(&c, 448),
+        )
+        .unwrap()
+        .to_vec();
+    // reference: sequential K accumulation with intermediate rounding
+    for i in 0..tn {
+        for j in 0..tm {
+            let mut acc = c[i * tm + j].clone();
+            for k in 0..kt {
+                acc = acc.mac(&a[i * kt + k], &b[k * tm + j]);
+            }
+            assert_eq!(got[i * tm + j], acc, "tile element ({i},{j})");
+        }
+    }
+}
