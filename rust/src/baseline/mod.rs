@@ -72,15 +72,18 @@ pub fn gemm_threaded(a: &Matrix, b: &Matrix, c: &Matrix, threads: usize) -> Matr
 }
 
 /// Measured multiplication throughput (ops/s) of one core on this host,
-/// L1-resident operands (the paper's §V-B CPU methodology).
+/// L1-resident operands (the paper's §V-B CPU methodology).  Runs the
+/// allocation-free `mul_into` path against a private scratch arena — the
+/// honest analog of MPFR's `mpfr_mul` into a preallocated result.
 pub fn measure_mul_throughput(prec: u32, iters: usize) -> f64 {
     let set = working_set(prec, 64);
-    let t0 = std::time::Instant::now();
+    let mut scratch = crate::bigint::MulScratch::new();
     let mut sink = set[0].clone();
+    let t0 = std::time::Instant::now();
     for i in 0..iters {
         let a = &set[i % set.len()];
         let b = &set[(i * 7 + 3) % set.len()];
-        sink = a.mul(b);
+        a.mul_into(b, &mut sink, &mut scratch);
     }
     let dt = t0.elapsed().as_secs_f64();
     std::hint::black_box(&sink);

@@ -34,6 +34,12 @@ impl BenchResult {
         1.0 / self.median_s()
     }
 
+    /// Median-time ratio `baseline / self`: > 1 means `self` is faster.
+    /// Used by the hot-path benches to assert kernel swaps don't regress.
+    pub fn speedup_vs(&self, baseline: &BenchResult) -> f64 {
+        baseline.median_s() / self.median_s()
+    }
+
     pub fn report(&self) -> String {
         format!(
             "{:<40} median {:>12} mean {:>12} min {:>12}",
@@ -134,6 +140,14 @@ mod tests {
         assert_eq!(r.samples.len(), 5);
         assert!(r.median_s() >= 0.0);
         assert!(r.min_s() <= r.mean_s() * 1.0001);
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        let fast = BenchResult { name: "fast".into(), samples: vec![1.0, 1.0, 1.0] };
+        let slow = BenchResult { name: "slow".into(), samples: vec![2.0, 2.0, 2.0] };
+        assert!((fast.speedup_vs(&slow) - 2.0).abs() < 1e-12);
+        assert!((slow.speedup_vs(&fast) - 0.5).abs() < 1e-12);
     }
 
     #[test]

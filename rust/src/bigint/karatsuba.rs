@@ -19,31 +19,48 @@
 //! the carry-save (a0+a1)(b0+b1) variant instead; see DESIGN.md
 //! §Hardware-Adaptation for why each substrate gets its own variant).
 //!
-//! The recursion bottoms out on [`super::mul_schoolbook`] below
-//! `base_limbs`, the software analog of `APFP_MULT_BASE_BITS`.
+//! The recursion bottoms out on [`super::mul_comba`] below `base_limbs`,
+//! the software analog of `APFP_MULT_BASE_BITS`.
 
-use super::{add_assign, add_limb, cmp, mul_schoolbook, sub_assign};
+use super::{add_assign, add_limb, cmp, mul_comba, sub_assign, MulScratch};
 use std::cmp::Ordering;
 
 /// Limb count at/above which `mul_auto` prefers Karatsuba.  Measured on
 /// this host (EXPERIMENTS.md §Perf P3): the crossover sits at 32 limbs
 /// (2048 bits), matching GMP's `MUL_TOOM22_THRESHOLD` ballpark on x86-64.
-/// Both paper widths (7 / 15 limbs) therefore use the schoolbook kernel,
-/// exactly as MPFR does at these sizes.
+/// Both paper widths (7 / 15 limbs) therefore use the columnwise Comba
+/// kernel, exactly as MPFR stays on `mpn` basecase at these sizes.  The
+/// Comba swap shifts the crossover at most upward (it beats the row-wise
+/// schoolbook the 32 was measured against); re-check with
+/// `cargo bench --bench fig3_sweep` / `--bench hotpath` (ROADMAP open item)
+/// before moving it.
 pub const KARATSUBA_THRESHOLD: usize = 32;
 
-/// out = a * b with recursive Karatsuba bottoming out at `base_limbs`.
+/// out = a * b with recursive Karatsuba bottoming out at `base_limbs`,
+/// using the thread-local scratch arena (steady-state allocation-free).
 /// Requires a.len() == b.len() and out.len() == 2 * a.len().
-///
-/// One scratch buffer is allocated at the top and partitioned down the
-/// recursion (§Perf P2 in EXPERIMENTS.md: per-level `Vec` allocations made
-/// the recursion slower than schoolbook at every practical width).
 pub fn mul_karatsuba(a: &[u64], b: &[u64], out: &mut [u64], base_limbs: usize) {
+    super::with_scratch(|s| mul_karatsuba_with(a, b, out, base_limbs, s));
+}
+
+/// [`mul_karatsuba`] against an explicit [`MulScratch`] arena.
+///
+/// One workspace is taken from the arena at the top and partitioned down
+/// the recursion (§Perf P2 in EXPERIMENTS.md: per-level `Vec` allocations
+/// made the recursion slower than schoolbook at every practical width; the
+/// arena removes even the single top-level allocation across calls).
+pub fn mul_karatsuba_with(
+    a: &[u64],
+    b: &[u64],
+    out: &mut [u64],
+    base_limbs: usize,
+    scratch: &mut MulScratch,
+) {
     debug_assert_eq!(a.len(), b.len());
     debug_assert_eq!(out.len(), 2 * a.len());
     // scratch need: S(n) = 3n + 1 + S(n/2)  =>  < 7n; round up generously
-    let mut scratch = vec![0u64; 8 * a.len() + 8];
-    kara_rec(a, b, out, &mut scratch, base_limbs);
+    let ws = scratch.kara_ws(8 * a.len() + 8);
+    kara_rec(a, b, out, ws, base_limbs);
 }
 
 /// Recursive step writing into `out`, using (a prefix of) `scratch`.
@@ -51,7 +68,7 @@ fn kara_rec(a: &[u64], b: &[u64], out: &mut [u64], scratch: &mut [u64], base_lim
     let n = a.len();
     // Odd splits complicate the |a1-a0| step; recurse only on even sizes.
     if n <= base_limbs.max(1) || n % 2 != 0 {
-        mul_schoolbook(a, b, out);
+        mul_comba(a, b, out);
         return;
     }
     let h = n / 2;
@@ -131,6 +148,7 @@ fn abs_diff(x: &[u64], y: &[u64], out: &mut [u64]) -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bigint::mul_schoolbook;
     use crate::testkit;
 
     fn check_vs_schoolbook(n: usize, base: usize, cases: u64) {
@@ -201,5 +219,21 @@ mod tests {
     #[test]
     fn deep_recursion() {
         check_vs_schoolbook(64, 2, 5); // 5 levels of decomposition
+    }
+
+    #[test]
+    fn explicit_arena_matches_wrapper_and_is_reusable() {
+        let mut scratch = MulScratch::new();
+        testkit::check(20, |rng| {
+            for n in [8usize, 16, 32] {
+                let a = rng.limbs(n);
+                let b = rng.limbs(n);
+                let mut want = vec![0u64; 2 * n];
+                let mut got = vec![0u64; 2 * n];
+                mul_karatsuba(&a, &b, &mut want, 2);
+                mul_karatsuba_with(&a, &b, &mut got, 2, &mut scratch);
+                assert_eq!(got, want, "n={n}");
+            }
+        });
     }
 }

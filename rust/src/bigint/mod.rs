@@ -5,18 +5,103 @@
 //! baseline.  Limb vectors are little-endian (`a[0]` least significant) and
 //! most operations take fixed-width slices.
 //!
-//! Multiplication follows GMP's strategy: schoolbook (the `MULX`/`ADCX`
-//! kernel a Broadwell Xeon runs, here expressed as `u128`
-//! multiply-accumulate) below a threshold, and the recursive Karatsuba
-//! decomposition of the paper's §II-A above it (see [`karatsuba`]).
+//! Multiplication follows GMP's strategy: a Comba-style columnwise
+//! schoolbook (the `MULX`/`ADCX` column kernel a Broadwell Xeon runs, here
+//! expressed as `u128` multiply-accumulate) below a threshold, and the
+//! recursive Karatsuba decomposition of the paper's §II-A above it (see
+//! [`karatsuba`]).  All kernels run against a reusable [`MulScratch`]
+//! arena, so the hot path is allocation-free in steady state.
 
 pub mod karatsuba;
 pub mod toom3;
 
+use std::cell::RefCell;
 use std::cmp::Ordering;
 
-pub use karatsuba::{mul_karatsuba, KARATSUBA_THRESHOLD};
-pub use toom3::mul_toom3;
+pub use karatsuba::{mul_karatsuba, mul_karatsuba_with, KARATSUBA_THRESHOLD};
+pub use toom3::{mul_toom3, mul_toom3_with};
+
+/// Reusable scratch arena for the multiply hot path.
+///
+/// One instance serves any operand width: every buffer grows to its
+/// high-water mark and is reused across calls, so steady-state
+/// multiplication through [`mul_auto_with`] (and `ApFloat::mul` above it)
+/// performs zero heap allocations.  A thread-local instance backs the
+/// scratch-free convenience wrappers ([`mul_auto`], [`mul_karatsuba`],
+/// [`mul_toom3`]); the `*_with` kernels never touch the thread-local, so a
+/// borrowed arena can be threaded down a whole call tree.
+#[derive(Debug, Default)]
+pub struct MulScratch {
+    /// Karatsuba recursion workspace (partitioned down the recursion).
+    kara: Vec<u64>,
+    /// Double-width product buffer for the softfloat mantissa multiply.
+    prod: Vec<u64>,
+    /// Recycled result buffers (see `softfloat::recycle`).
+    pool: Vec<Vec<u64>>,
+}
+
+/// Recycle-pool depth cap, so stray widths cannot grow the arena unbounded.
+const POOL_CAP: usize = 32;
+
+impl MulScratch {
+    pub const fn new() -> Self {
+        MulScratch { kara: Vec::new(), prod: Vec::new(), pool: Vec::new() }
+    }
+
+    /// Karatsuba workspace of at least `len` limbs.  Contents are
+    /// arbitrary: the recursion fully writes every region before reading it.
+    fn kara_ws(&mut self, len: usize) -> &mut [u64] {
+        if self.kara.len() < len {
+            self.kara.resize(len, 0);
+        }
+        &mut self.kara[..len]
+    }
+
+    /// Take the double-width product buffer, resized to `len` zeroed limbs.
+    /// Return it with [`MulScratch::put_prod`] when done so the next call
+    /// reuses the capacity (the buffer moves out to sidestep the borrow of
+    /// `self` that the multiply kernels need concurrently).
+    pub fn take_prod(&mut self, len: usize) -> Vec<u64> {
+        let mut v = std::mem::take(&mut self.prod);
+        v.clear();
+        v.resize(len, 0);
+        v
+    }
+
+    /// Return the product buffer taken by [`MulScratch::take_prod`].
+    pub fn put_prod(&mut self, v: Vec<u64>) {
+        if v.capacity() > self.prod.capacity() {
+            self.prod = v;
+        }
+    }
+
+    /// Take a recycled result buffer of exactly `len` zeroed limbs
+    /// (allocates only when the pool is empty or the capacity is short).
+    pub fn take_limbs(&mut self, len: usize) -> Vec<u64> {
+        let mut v = self.pool.pop().unwrap_or_default();
+        v.clear();
+        v.resize(len, 0);
+        v
+    }
+
+    /// Return a result buffer to the recycle pool.
+    pub fn put_limbs(&mut self, v: Vec<u64>) {
+        if self.pool.len() < POOL_CAP {
+            self.pool.push(v);
+        }
+    }
+}
+
+thread_local! {
+    static SCRATCH: RefCell<MulScratch> = const { RefCell::new(MulScratch::new()) };
+}
+
+/// Run `f` on this thread's shared [`MulScratch`].  Not re-entrant: the
+/// `*_with` kernels take the arena by `&mut` precisely so nothing below
+/// them needs to borrow the thread-local again.
+pub fn with_scratch<R>(f: impl FnOnce(&mut MulScratch) -> R) -> R {
+    SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
 
 /// a += b (equal lengths); returns the carry out of the top limb.
 pub fn add_assign(a: &mut [u64], b: &[u64]) -> bool {
@@ -163,13 +248,56 @@ pub fn mul_schoolbook(a: &[u64], b: &[u64], out: &mut [u64]) {
     }
 }
 
-/// out = a * b, choosing schoolbook or Karatsuba per GMP's threshold
-/// strategy.  This is what `softfloat` calls on its hot path.
+/// out = a * b, Comba-style columnwise schoolbook
+/// (out.len() == a.len() + b.len()).
+///
+/// Where [`mul_schoolbook`] walks row-by-row and read-modify-writes every
+/// output limb once per row, this kernel accumulates each output *column*
+/// into a 128-bit accumulator (plus an overflow counter: two near-maximal
+/// 64x64 products already exceed 2^128, so every wrap of the accumulator is
+/// counted and re-injected one limb up) and writes each output limb exactly
+/// once — the memory-traffic shape of the MULX/ADCX column kernels GMP uses
+/// below its Karatsuba threshold.  This is the bottom-out kernel of
+/// `mul_auto` and the Karatsuba recursion.
+pub fn mul_comba(a: &[u64], b: &[u64], out: &mut [u64]) {
+    debug_assert_eq!(out.len(), a.len() + b.len());
+    let (na, nb) = (a.len(), b.len());
+    if na == 0 || nb == 0 {
+        out.fill(0);
+        return;
+    }
+    let mut acc: u128 = 0; // low 128 bits of the running column sum
+    let mut over: u64 = 0; // count of 2^128 overflows within one column
+    for k in 0..na + nb - 1 {
+        let i_lo = k.saturating_sub(nb - 1);
+        let i_hi = k.min(na - 1);
+        for i in i_lo..=i_hi {
+            let (s, c) = acc.overflowing_add(a[i] as u128 * b[k - i] as u128);
+            acc = s;
+            over += c as u64;
+        }
+        out[k] = acc as u64;
+        acc = (acc >> 64) | ((over as u128) << 64);
+        over = 0;
+    }
+    out[na + nb - 1] = acc as u64;
+    debug_assert_eq!(acc >> 64, 0, "comba column carry must be consumed");
+}
+
+/// out = a * b, choosing the Comba kernel or Karatsuba per GMP's threshold
+/// strategy, on the thread-local scratch arena.  This is what `softfloat`
+/// calls on its hot path when no explicit arena is in hand.
 pub fn mul_auto(a: &[u64], b: &[u64], out: &mut [u64]) {
+    with_scratch(|s| mul_auto_with(a, b, out, s));
+}
+
+/// [`mul_auto`] against an explicit scratch arena: allocation-free once the
+/// arena is warm.
+pub fn mul_auto_with(a: &[u64], b: &[u64], out: &mut [u64], scratch: &mut MulScratch) {
     if a.len() < KARATSUBA_THRESHOLD || a.len() != b.len() {
-        mul_schoolbook(a, b, out);
+        mul_comba(a, b, out);
     } else {
-        mul_karatsuba(a, b, out, KARATSUBA_THRESHOLD);
+        mul_karatsuba_with(a, b, out, KARATSUBA_THRESHOLD, scratch);
     }
 }
 
@@ -469,6 +597,138 @@ mod tests {
         // the q_hat = MAX correction path: num just below den << 64
         let (q, _r) = div_rem(&[0, u64::MAX - 1, u64::MAX - 1], &[u64::MAX, u64::MAX, 0]);
         assert_eq!(q[0], u64::MAX - 1);
+    }
+
+    #[test]
+    fn shl_shr_exhaustive_small_width_vs_u128() {
+        // Satellite: every shift amount 0..=130 on 2-limb values against a
+        // u128 reference — covers r == 0 limb boundaries (s = 64, 128) and
+        // the whole-vector overshoot (s >= 64 * len) in one sweep.
+        testkit::check(100, |rng| {
+            let a = rng.limbs(2);
+            let v = to_u128(&a);
+            for s in 0..=130usize {
+                let mut out = vec![0u64; 2];
+                shl(&a, s, &mut out);
+                let want = if s >= 128 { 0 } else { v << s };
+                assert_eq!(to_u128(&out), want, "shl s={s}");
+                let mut out = vec![0u64; 2];
+                shr(&a, s, &mut out);
+                let want = if s >= 128 { 0 } else { v >> s };
+                assert_eq!(to_u128(&out), want, "shr s={s}");
+                let mask = if s >= 128 { u128::MAX } else { (1u128 << s) - 1 };
+                assert_eq!(sticky_below(&a, s), v & mask != 0, "sticky s={s}");
+            }
+        });
+    }
+
+    #[test]
+    fn shl_widening_and_shr_narrowing_widths() {
+        // out wider than a (shl must zero-extend), out narrower than a
+        // (shr must window the right limbs), at limb-exact shifts too.
+        testkit::check(100, |rng| {
+            let a = rng.limbs(2);
+            let v = to_u128(&a);
+            for s in [0usize, 1, 63, 64, 65, 127, 128, 129, 191, 192, 256, 300] {
+                // widening shl: reference is (v << s) split into 256 bits
+                let (lo, hi): (u128, u128) = if s == 0 {
+                    (v, 0)
+                } else if s < 128 {
+                    (v << s, v >> (128 - s))
+                } else if s < 256 {
+                    (0, v << (s - 128))
+                } else {
+                    (0, 0)
+                };
+                let want = vec![lo as u64, (lo >> 64) as u64, hi as u64, (hi >> 64) as u64];
+                let mut wide = vec![0u64; 4];
+                shl(&a, s, &mut wide);
+                assert_eq!(wide, want, "shl wide s={s}");
+
+                // narrowing shr: 3-limb source, 1-limb output = bits s..s+64
+                let src = vec![a[0], a[1], !a[0]];
+                let lo2 = src[0] as u128 | (src[1] as u128) << 64; // bits 0..128
+                let hi2 = src[1] as u128 | (src[2] as u128) << 64; // bits 64..192
+                let expect: u64 = if s >= 192 {
+                    0
+                } else if s >= 64 {
+                    (hi2 >> (s - 64)) as u64
+                } else {
+                    (lo2 >> s) as u64
+                };
+                let mut narrow = vec![0u64; 1];
+                shr(&src, s, &mut narrow);
+                assert_eq!(narrow[0], expect, "shr narrow s={s}");
+            }
+        });
+    }
+
+    #[test]
+    fn comba_matches_schoolbook_property() {
+        testkit::check(300, |rng| {
+            let na = 1 + rng.below(12) as usize;
+            let nb = if rng.bool() { na } else { 1 + rng.below(12) as usize };
+            let a = rng.limbs(na);
+            let b = rng.limbs(nb);
+            let mut want = vec![0u64; na + nb];
+            let mut got = vec![0u64; na + nb];
+            mul_schoolbook(&a, &b, &mut want);
+            mul_comba(&a, &b, &mut got);
+            assert_eq!(got, want, "na={na} nb={nb}");
+        });
+    }
+
+    #[test]
+    fn comba_column_overflow_stress() {
+        // All-ones operands maximize every column sum, wrapping the 128-bit
+        // accumulator as often as possible so the `over` counter must carry
+        // every wrap.  Cover the paper widths and deeper columns.
+        for n in [1usize, 7, 15, 31, 32, 33, 40, 64] {
+            let a = vec![u64::MAX; n];
+            let mut want = vec![0u64; 2 * n];
+            let mut got = vec![0u64; 2 * n];
+            mul_schoolbook(&a, &a, &mut want);
+            mul_comba(&a, &a, &mut got);
+            assert_eq!(got, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn mul_auto_with_reuses_one_arena_across_widths() {
+        let mut scratch = MulScratch::new();
+        let mut rng = testkit::Rng::from_seed(42);
+        for n in [7usize, 15, 32, 48, 64, 7] {
+            let a = rng.limbs(n);
+            let b = rng.limbs(n);
+            let mut want = vec![0u64; 2 * n];
+            let mut got = vec![0u64; 2 * n];
+            mul_schoolbook(&a, &b, &mut want);
+            mul_auto_with(&a, &b, &mut got, &mut scratch);
+            assert_eq!(got, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn scratch_prod_and_pool_roundtrip() {
+        let mut s = MulScratch::new();
+        let mut p = s.take_prod(14);
+        assert_eq!(p.len(), 14);
+        assert!(is_zero(&p));
+        p[13] = 7;
+        let cap = p.capacity();
+        s.put_prod(p);
+        let p2 = s.take_prod(10);
+        assert_eq!(p2.len(), 10);
+        assert!(is_zero(&p2), "take_prod must re-zero recycled buffers");
+        assert_eq!(p2.capacity(), cap, "capacity must be reused");
+        s.put_prod(p2);
+
+        let v = s.take_limbs(7);
+        assert_eq!(v.len(), 7);
+        s.put_limbs(v);
+        let v2 = s.take_limbs(7);
+        assert_eq!(v2.len(), 7);
+        assert!(is_zero(&v2));
     }
 
     #[test]

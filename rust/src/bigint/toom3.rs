@@ -21,7 +21,7 @@
 //! Intermediates are signed, so the module carries a tiny sign-magnitude
 //! helper (`SInt`) — growing numbers stay exact throughout.
 
-use super::{add_assign, add_limb, cmp, is_zero, mul_auto, sub_assign};
+use super::{add_assign, add_limb, cmp, is_zero, mul_auto_with, mul_comba, sub_assign, MulScratch};
 use std::cmp::Ordering;
 
 /// Signed arbitrary big integer: sign + little-endian magnitude.
@@ -82,9 +82,9 @@ impl SInt {
         self.add(&flipped);
     }
 
-    fn mul(&self, other: &SInt) -> SInt {
+    fn mul(&self, other: &SInt, scratch: &mut MulScratch) -> SInt {
         let mut out = vec![0u64; self.mag.len() + other.mag.len()];
-        mul_auto_unequal(&self.mag, &other.mag, &mut out);
+        mul_auto_unequal(&self.mag, &other.mag, &mut out, scratch);
         SInt { neg: self.neg != other.neg && !is_zero(&out), mag: out }
     }
 
@@ -113,23 +113,32 @@ impl SInt {
 }
 
 /// mul for possibly unequal lengths (pads the shorter operand).
-fn mul_auto_unequal(a: &[u64], b: &[u64], out: &mut [u64]) {
+fn mul_auto_unequal(a: &[u64], b: &[u64], out: &mut [u64], scratch: &mut MulScratch) {
     if a.len() == b.len() {
-        mul_auto(a, b, out);
+        mul_auto_with(a, b, out, scratch);
     } else {
-        super::mul_schoolbook(a, b, out);
+        mul_comba(a, b, out);
     }
 }
 
-/// out = a * b via Toom-3; a.len() == b.len(), out.len() == 2 * a.len().
-/// Sub-multiplications go through `mul_auto` (schoolbook / Karatsuba).
+/// out = a * b via Toom-3 on the thread-local scratch arena;
+/// a.len() == b.len(), out.len() == 2 * a.len().
 pub fn mul_toom3(a: &[u64], b: &[u64], out: &mut [u64]) {
+    super::with_scratch(|s| mul_toom3_with(a, b, out, s));
+}
+
+/// [`mul_toom3`] against an explicit [`MulScratch`]: the five pointwise
+/// sub-multiplications go through `mul_auto_with` (Comba / Karatsuba) on
+/// the shared arena.  The signed interpolation intermediates still own
+/// their (growing) buffers — Toom-3 sits above the `ApFloat::mul` hot path,
+/// so only its sub-multiplications need the arena.
+pub fn mul_toom3_with(a: &[u64], b: &[u64], out: &mut [u64], scratch: &mut MulScratch) {
     debug_assert_eq!(a.len(), b.len());
     debug_assert_eq!(out.len(), 2 * a.len());
     let n = a.len();
     if n < 9 {
         // below three full parts, the split degenerates
-        super::mul_schoolbook(a, b, out);
+        mul_comba(a, b, out);
         return;
     }
     let k = n.div_ceil(3);
@@ -166,11 +175,11 @@ pub fn mul_toom3(a: &[u64], b: &[u64], out: &mut [u64]) {
     let eb = eval(&b0, &b1, &b2);
 
     // pointwise products
-    let w0 = ea[0].mul(&eb[0]);
-    let w1 = ea[1].mul(&eb[1]);
-    let wm1 = ea[2].mul(&eb[2]);
-    let wm2 = ea[3].mul(&eb[3]);
-    let winf = ea[4].mul(&eb[4]);
+    let w0 = ea[0].mul(&eb[0], scratch);
+    let w1 = ea[1].mul(&eb[1], scratch);
+    let wm1 = ea[2].mul(&eb[2], scratch);
+    let wm2 = ea[3].mul(&eb[3], scratch);
+    let winf = ea[4].mul(&eb[4], scratch);
 
     // interpolation (classical sequence; all divisions exact)
     let mut r3 = wm2.clone(); // (wm2 - w1)/3
@@ -283,9 +292,25 @@ mod tests {
         assert_eq!(x.mag[0], 10);
         x.div_exact(2);
         assert_eq!(x.mag[0], 5);
-        let z = x.mul(&SInt { neg: true, mag: vec![3] });
+        let z = x.mul(&SInt { neg: true, mag: vec![3] }, &mut MulScratch::new());
         assert!(z.neg);
         assert_eq!(z.mag[0], 15);
+    }
+
+    #[test]
+    fn explicit_arena_matches_wrapper() {
+        let mut scratch = MulScratch::new();
+        testkit::check(10, |rng| {
+            for n in [9usize, 16, 33] {
+                let a = rng.limbs(n);
+                let b = rng.limbs(n);
+                let mut want = vec![0u64; 2 * n];
+                let mut got = vec![0u64; 2 * n];
+                mul_schoolbook(&a, &b, &mut want);
+                mul_toom3_with(&a, &b, &mut got, &mut scratch);
+                assert_eq!(got, want, "n={n}");
+            }
+        });
     }
 
     #[test]

@@ -82,7 +82,7 @@ pub fn syrk(
     // full GEMM against A^T, then commit only the lower triangle (a
     // triangle-aware tile schedule is the paper's "derived routine" future
     // work; the arithmetic and interface semantics are what SDP codes need)
-    let mut dropped = Vec::new();
+    let mut dropped = Vec::with_capacity(m * (m + 1) / 2);
     let stats = gemm(
         device,
         BlasTrans::Normal,

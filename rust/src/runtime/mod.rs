@@ -1,16 +1,19 @@
 //! PJRT execution runtime: load AOT artifacts (HLO text), compile them on
 //! the PJRT CPU client, and execute them on limb-plane batches.
 //!
-//! This is the only place the `xla` crate is touched.  One `Runtime` is
-//! **thread-local by construction** (the crate's `PjRtClient` is `Rc`-based);
-//! the coordinator gives each compute-unit worker its own `Runtime`, which
-//! is also the honest analogy: each CU on the FPGA is its own replica of
-//! the circuit.
+//! This is the only place the `xla` crate is touched — in offline builds
+//! via the [`xla`] stub module, which compiles the same call sites but
+//! fails at client construction (workers degrade gracefully; integration
+//! tests skip without artifacts).  One `Runtime` is **thread-local by
+//! construction** (the crate's `PjRtClient` is `Rc`-based); the coordinator
+//! gives each compute-unit worker its own `Runtime`, which is also the
+//! honest analogy: each CU on the FPGA is its own replica of the circuit.
 //!
 //! Python never runs here: artifacts were lowered once by `make artifacts`
 //! (see python/compile/aot.py and the HLO-text-vs-proto note there).
 
 pub mod manifest;
+mod xla;
 
 use std::cell::RefCell;
 use std::collections::HashMap;

@@ -1,0 +1,108 @@
+//! Offline stand-in for the `xla` crate (PJRT bindings).
+//!
+//! The real PJRT CPU client comes from the `xla` crate (xla-rs), which
+//! needs a vendored libxla and is unavailable in offline builds.  This shim
+//! exposes exactly the API surface `runtime::Runtime` touches so the whole
+//! coordinator stack compiles and tests; constructing the client fails with
+//! a clear error, which the compute-unit workers already degrade on (they
+//! report "runtime unavailable" per job instead of panicking).  Integration
+//! tests gate on artifacts being present, so a clean checkout skips them.
+//!
+//! To light up the real backend, delete this module, add the `xla` crate to
+//! Cargo.toml, and restore `use xla;` in `runtime/mod.rs` — the call sites
+//! are written against the real crate's API.
+
+#![allow(dead_code)]
+
+use std::fmt;
+
+/// Error type mirroring the real crate's (callers only format it).
+#[derive(Debug)]
+pub struct XlaError(String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable() -> XlaError {
+    XlaError(
+        "PJRT backend unavailable: built with the offline xla stub \
+         (see rust/src/runtime/xla.rs)"
+            .to_string(),
+    )
+}
+
+/// Element types the plane layout marshals (i32 limb lanes, i64 exponents).
+pub trait NativeType: Copy {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_values: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal)
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable())
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable())
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}

@@ -39,6 +39,33 @@ pub fn prec_for_bits(total_bits: u32) -> u32 {
     total_bits - 64
 }
 
+/// Return a spent value's mantissa buffer to the thread-local multiply
+/// arena so a subsequent [`ApFloat::mul`] can reuse it.  This is the
+/// steady-state contract that makes `mul` allocation-free in hot loops:
+///
+/// ```ignore
+/// let r = a.mul(&b);       // buffer drawn from the recycle pool
+/// consume(&r);
+/// softfloat::recycle(r);   // buffer returned: no allocator traffic
+/// ```
+///
+/// Loops that instead keep one output alive should prefer
+/// [`ApFloat::mul_into`], which needs no pool at all, and loops running an
+/// *explicit* arena pair [`ApFloat::mul_with`] with [`recycle_into`] —
+/// this function only refills the thread-local arena that plain `mul`
+/// draws from.
+pub fn recycle(f: ApFloat) {
+    crate::bigint::with_scratch(|s| s.put_limbs(f.mant));
+}
+
+/// Like [`recycle`], but returns the buffer to an explicit arena — the
+/// partner of [`ApFloat::mul_with`], whose results are drawn from
+/// `scratch`'s pool, so the explicit-arena path is also allocation-free
+/// in steady state.
+pub fn recycle_into(f: ApFloat, scratch: &mut crate::bigint::MulScratch) {
+    scratch.put_limbs(f.mant);
+}
+
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ApFloat {
     pub(crate) sign: bool,
@@ -224,6 +251,41 @@ mod tests {
         let mut expect = vec![0u64; 7];
         expect[6] = 1 << 63;
         assert_eq!(x.limbs(), &expect[..]);
+    }
+
+    #[test]
+    fn from_int_scaled_truncation_at_exact_limb_boundaries() {
+        // Satellite regression: when nbits - prec is an exact multiple of
+        // 64, the truncating shift takes the r == 0 limb-copy path of
+        // bigint::shr.  Pin the result against hand-built references.
+        for extra_limbs in [1usize, 2, 4] {
+            let n = 7 + extra_limbs; // nbits = 64 * n, shift = 64 * extra
+            let mut mag = vec![u64::MAX; n];
+            mag[0] = 123; // entirely inside the truncated-away low limbs
+            let x = ApFloat::from_int_scaled(false, &mag, -9, P);
+            assert_eq!(x.exp(), (64 * n) as i64 - 9, "extra={extra_limbs}");
+            // top 448 bits of mag are all ones
+            assert!(x.limbs().iter().all(|&w| w == u64::MAX), "extra={extra_limbs}");
+        }
+        // one bit past a limb boundary: shift = 65 mixes both limbs
+        let mut mag = vec![0u64; 9]; // 513 significant bits
+        mag[8] = 1; // bit 512
+        mag[0] = u64::MAX; // low bits, all truncated
+        let x = ApFloat::from_int_scaled(true, &mag, 0, P);
+        assert_eq!(x.exp(), 513);
+        assert!(x.sign());
+        // mantissa = 2^447 exactly (the low ones vanish under RNDZ)
+        let mut expect = vec![0u64; 7];
+        expect[6] = 1 << 63;
+        assert_eq!(x.limbs(), &expect[..]);
+        // trailing zero limbs above the MSB must not confuse bit_length
+        let mut mag = vec![0u64; 12];
+        mag[6] = 1 << 63; // exactly prec bits: shift = 0
+        mag[0] = 1;
+        let x = ApFloat::from_int_scaled(false, &mag, 4, P);
+        assert_eq!(x.exp(), 448 + 4);
+        assert_eq!(x.limbs()[0], 1);
+        assert_eq!(x.limbs()[6], 1 << 63);
     }
 
     #[test]

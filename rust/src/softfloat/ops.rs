@@ -1,43 +1,64 @@
 //! Arithmetic on `ApFloat`: the software editions of the paper's §II
 //! operators, bit-compatible with the JAX model and the Python oracle.
 
-use super::ApFloat;
-use crate::bigint;
+use super::{ApFloat, ZERO_EXP};
+use crate::bigint::{self, MulScratch};
 
-/// Widths up to `STACK_LIMBS * 64` bits (2048) use stack scratch on the hot
-/// path instead of heap workspaces (§Perf P1 in EXPERIMENTS.md).
+/// Widths up to `STACK_LIMBS * 64` bits (2048) use stack scratch in `add`
+/// instead of heap workspaces (§Perf P1 in EXPERIMENTS.md).  `mul` goes
+/// through the [`MulScratch`] arena instead — see [`ApFloat::mul_into`].
 const STACK_LIMBS: usize = 32;
 
 impl ApFloat {
     /// RNDZ multiplication (§II-A).  The mantissa product is exact, so
     /// truncating its low bits *is* round-to-zero.
+    ///
+    /// Runs on the thread-local [`MulScratch`] arena: the product workspace
+    /// and any Karatsuba scratch are reused across calls, and the result
+    /// mantissa is drawn from the arena's recycle pool.  A hot loop that
+    /// returns spent values via [`super::recycle`] (or that reuses an
+    /// output with [`ApFloat::mul_into`]) therefore performs zero heap
+    /// allocations in steady state.
     pub fn mul(&self, other: &Self) -> Self {
+        bigint::with_scratch(|s| self.mul_with(other, s))
+    }
+
+    /// [`ApFloat::mul`] against an explicit scratch arena (the result
+    /// buffer is drawn from the arena's recycle pool).
+    pub fn mul_with(&self, other: &Self, scratch: &mut MulScratch) -> Self {
         assert_eq!(self.prec, other.prec);
-        if self.is_zero() || other.is_zero() {
-            return ApFloat::zero(self.prec);
-        }
+        let mant = scratch.take_limbs(self.mant.len());
+        let mut out = ApFloat { sign: false, exp: ZERO_EXP, mant, prec: self.prec };
+        self.mul_into(other, &mut out, scratch);
+        out
+    }
+
+    /// Write `self * other` (RNDZ) into `out`, reusing `out`'s mantissa
+    /// buffer and the scratch arena: zero heap allocations once both are
+    /// warm.  `out` may have any prior value/precision; it is overwritten.
+    pub fn mul_into(&self, other: &Self, out: &mut ApFloat, scratch: &mut MulScratch) {
+        assert_eq!(self.prec, other.prec);
         let n = self.mant.len();
-        let p = self.prec as usize;
-        // product workspace on the stack for the paper's widths (P1)
-        let mut prod_stack = [0u64; 2 * STACK_LIMBS];
-        let mut prod_heap;
-        let prod: &mut [u64] = if n <= STACK_LIMBS {
-            &mut prod_stack[..2 * n]
-        } else {
-            prod_heap = vec![0u64; 2 * n];
-            &mut prod_heap
-        };
-        bigint::mul_auto(&self.mant, &other.mant, prod);
-        let nbits = bigint::bit_length(prod); // 2p or 2p-1
-        debug_assert!(nbits == 2 * p || nbits == 2 * p - 1);
-        let mut mant = vec![0u64; n];
-        bigint::shr(prod, nbits - p, &mut mant); // truncate = RNDZ
-        ApFloat {
-            sign: self.sign != other.sign,
-            exp: self.exp + other.exp + (nbits as i64 - 2 * p as i64),
-            mant,
-            prec: self.prec,
+        out.prec = self.prec;
+        if out.mant.len() != n {
+            out.mant.clear();
+            out.mant.resize(n, 0);
         }
+        if self.is_zero() || other.is_zero() {
+            out.sign = false;
+            out.exp = ZERO_EXP;
+            out.mant.fill(0);
+            return;
+        }
+        let p = self.prec as usize;
+        let mut prod = scratch.take_prod(2 * n);
+        bigint::mul_auto_with(&self.mant, &other.mant, &mut prod, scratch);
+        let nbits = bigint::bit_length(&prod); // 2p or 2p-1
+        debug_assert!(nbits == 2 * p || nbits == 2 * p - 1);
+        bigint::shr(&prod, nbits - p, &mut out.mant); // truncate = RNDZ
+        scratch.put_prod(prod);
+        out.sign = self.sign != other.sign;
+        out.exp = self.exp + other.exp + (nbits as i64 - 2 * p as i64);
     }
 
     /// RNDZ addition/subtraction (§II-B), bit-exact vs exact-integer
@@ -162,16 +183,9 @@ impl ApFloat {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::testkit::{self, Rng};
+    use crate::testkit::{self, rand_ap};
 
     const P: u32 = 448;
-
-    fn rand_ap(rng: &mut Rng, prec: u32, exp_range: i64) -> ApFloat {
-        let n = (prec / 64) as usize;
-        let mut mant = rng.limbs(n);
-        mant[n - 1] |= 1 << 63; // normalize
-        ApFloat::from_parts(rng.bool(), rng.range_i64(-exp_range, exp_range), mant, prec)
-    }
 
     #[test]
     fn mul_small_integers() {
@@ -179,6 +193,32 @@ mod tests {
         let b = ApFloat::from_i64(-7, P);
         assert_eq!(a.mul(&b), ApFloat::from_i64(-42, P));
         assert_eq!(b.mul(&b), ApFloat::from_i64(49, P));
+    }
+
+    #[test]
+    fn mul_into_matches_mul_property() {
+        // the arena/in-place path must be bit-identical to plain mul,
+        // including reuse of a stale output across widths and zeros
+        use crate::bigint::MulScratch;
+        let mut scratch = MulScratch::new();
+        let mut out = ApFloat::zero(960); // wrong precision on purpose
+        testkit::check(200, |rng| {
+            let prec = *rng.choice(&[448u32, 960]);
+            let a = rand_ap(rng, prec, 300);
+            let b = rand_ap(rng, prec, 300);
+            let want = a.mul(&b);
+            a.mul_into(&b, &mut out, &mut scratch);
+            assert_eq!(out, want, "mul_into vs mul at prec {prec}");
+            let got = a.mul_with(&b, &mut scratch);
+            assert_eq!(got, want, "mul_with vs mul at prec {prec}");
+            crate::softfloat::recycle_into(got, &mut scratch);
+        });
+        // zero operands through the in-place path
+        let z = ApFloat::zero(P);
+        let x = ApFloat::from_i64(3, P);
+        x.mul_into(&z, &mut out, &mut scratch);
+        assert!(out.is_zero());
+        assert_eq!(out, ApFloat::zero(P));
     }
 
     #[test]

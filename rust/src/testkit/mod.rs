@@ -56,6 +56,21 @@ impl Rng {
     }
 }
 
+/// Random normalized [`crate::softfloat::ApFloat`] with exponent uniform
+/// in [-exp_range, exp_range] — the operand generator shared by the
+/// softfloat tests, the allocation-free test and the hot-path benches.
+pub fn rand_ap(rng: &mut Rng, prec: u32, exp_range: i64) -> crate::softfloat::ApFloat {
+    let n = (prec / 64) as usize;
+    let mut mant = rng.limbs(n);
+    mant[n - 1] |= 1 << 63; // normalize: MSB set
+    crate::softfloat::ApFloat::from_parts(
+        rng.bool(),
+        rng.range_i64(-exp_range, exp_range),
+        mant,
+        prec,
+    )
+}
+
 /// Run `prop` over `cases` generated cases; panic with the case seed on
 /// failure, so the failure reproduces with `Rng::from_seed(seed)`.
 pub fn check<F: FnMut(&mut Rng)>(cases: u64, mut prop: F) {

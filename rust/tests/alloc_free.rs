@@ -1,0 +1,101 @@
+//! Counting-allocator proof of the ISSUE 1 acceptance criterion: the
+//! softfloat multiply hot path performs zero heap allocations in steady
+//! state, both through the explicit-arena `mul_into` path and through
+//! plain `ApFloat::mul` when results are recycled.
+//!
+//! This file intentionally holds a single `#[test]` so no sibling test
+//! thread allocates while a measurement window is open.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use apfp::bigint::MulScratch;
+use apfp::softfloat;
+use apfp::testkit::{rand_ap, Rng};
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOC_CALLS.load(Ordering::Relaxed)
+}
+
+/// Smallest allocation count observed over `rounds` runs of `body` — the
+/// steady-state cost, immune to one-off warmup effects.
+fn min_alloc_delta(rounds: usize, mut body: impl FnMut()) -> u64 {
+    let mut best = u64::MAX;
+    for _ in 0..rounds {
+        let before = allocs();
+        body();
+        best = best.min(allocs() - before);
+    }
+    best
+}
+
+#[test]
+fn mul_hot_path_is_allocation_free() {
+    for prec in [448u32, 960] {
+        let mut rng = Rng::from_seed(0xA110C);
+        let a = rand_ap(&mut rng, prec, 40);
+        let b = rand_ap(&mut rng, prec, 40);
+
+        // --- mul_into against an explicit arena ----------------------------
+        let mut scratch = MulScratch::new();
+        let mut out = a.mul_with(&b, &mut scratch); // warm arena + output
+        let delta = min_alloc_delta(3, || {
+            for _ in 0..1000 {
+                a.mul_into(&b, &mut out, &mut scratch);
+            }
+        });
+        assert_eq!(delta, 0, "mul_into allocated in steady state at prec {prec}");
+        assert_eq!(out, a.mul(&b), "arena path must stay correct");
+
+        // --- mul_with + recycle_into on the same explicit arena ------------
+        let warm = a.mul_with(&b, &mut scratch);
+        softfloat::recycle_into(warm, &mut scratch); // warm pool
+        let delta = min_alloc_delta(3, || {
+            for _ in 0..1000 {
+                let r = a.mul_with(&b, &mut scratch);
+                softfloat::recycle_into(r, &mut scratch);
+            }
+        });
+        assert_eq!(delta, 0, "mul_with + recycle_into allocated at prec {prec}");
+
+        // --- plain `mul` with recycling (thread-local arena) ---------------
+        for _ in 0..4 {
+            softfloat::recycle(a.mul(&b)); // warm pool, scratch, and TLS
+        }
+        let delta = min_alloc_delta(3, || {
+            for _ in 0..1000 {
+                let r = a.mul(&b);
+                softfloat::recycle(r);
+            }
+        });
+        assert_eq!(delta, 0, "recycled mul allocated in steady state at prec {prec}");
+    }
+}

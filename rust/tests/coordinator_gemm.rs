@@ -89,6 +89,38 @@ fn gemm_1024_bits() {
 }
 
 #[test]
+fn device_new_without_manifest_errors_cleanly() {
+    // The artifact-missing path must be a clean Err (callers and the
+    // integration tests skip on it), never a panic.
+    let dir = std::env::temp_dir().join("apfp_no_artifacts_here");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let err = match Device::new(ApfpConfig::default(), &dir) {
+        Err(e) => e,
+        Ok(_) => panic!("Device::new must fail without a manifest"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("manifest"), "error should name the missing manifest: {msg}");
+
+    // a directory that does not exist at all behaves the same way
+    let missing = dir.join("definitely/not/created");
+    assert!(Device::new(ApfpConfig::default(), &missing).is_err());
+}
+
+#[test]
+fn device_new_rejects_invalid_config_before_touching_artifacts() {
+    let bad = ApfpConfig { compute_units: 0, ..Default::default() };
+    let dir = std::env::temp_dir().join("apfp_cfg_gate_unused");
+    let err = match Device::new(bad, &dir) {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => panic!("zero compute units must be rejected"),
+    };
+    // the config gate, not the (also-missing) manifest, must trip first
+    assert!(err.contains("compute_units"), "unexpected error: {err}");
+    assert!(!err.contains("manifest"), "config must be validated first: {err}");
+}
+
+#[test]
 fn shape_mismatch_is_error() {
     let Some(dev) = device(1, 512) else { return };
     let a = Matrix::random(4, 5, 448, 60, 10);
