@@ -72,4 +72,35 @@ fn main() {
         ]);
     }
     println!("{}", t.render());
+
+    // the mul_auto crossover itself: straight Comba vs the recursion at the
+    // widths around the threshold, so a host can pick its own override
+    println!("\n== Comba vs Karatsuba crossover (mul_auto threshold) ==\n");
+    let mut t = Table::new(&["limbs", "comba", "karatsuba", "kara speedup"]);
+    for limbs in [16usize, 24, 32, 40, 48, 64] {
+        let a = rng.limbs(limbs);
+        let b = rng.limbs(limbs);
+        let mut out = vec![0u64; 2 * limbs];
+        let rc = bench(&format!("comba {limbs}"), 50, 500, || {
+            bigint::mul_comba(&a, &b, &mut out);
+            std::hint::black_box(&out);
+        });
+        let rk = bench(&format!("kara {limbs}"), 50, 500, || {
+            bigint::mul_karatsuba(&a, &b, &mut out, 8);
+            std::hint::black_box(&out);
+        });
+        t.row(&[
+            limbs.to_string(),
+            apfp::bench_util::fmt_duration(rc.median_s()),
+            apfp::bench_util::fmt_duration(rk.median_s()),
+            format!("{:.2}x", rk.speedup_vs(&rc)),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "\nactive mul_auto threshold: {} limbs (default {}; override with \
+         APFP_KARATSUBA_THRESHOLD)",
+        bigint::karatsuba_threshold(),
+        bigint::KARATSUBA_THRESHOLD,
+    );
 }

@@ -1,73 +1,142 @@
 //! Software CPU baseline — the role MPFR + Elemental play in the paper.
 //!
-//! * [`gemm_serial`] / [`gemm_threaded`] — blocked GEMM over `softfloat`
-//!   scalars; the threaded version partitions output rows across cores the
-//!   way Elemental's MPI ranks partition the distributed matrix.
+//! * [`gemm_serial`] / [`gemm_threaded`] / [`gemm_into`] — tiled GEMM over
+//!   `softfloat` scalars on the allocation-free `mac_into` pipeline; the
+//!   threaded version partitions output rows across cores the way
+//!   Elemental's MPI ranks partition the distributed matrix, one arena per
+//!   thread.
 //! * [`measure_mul_throughput`] / [`measure_mac_throughput`] — the §V-B
 //!   microbenchmark on this host: a hot loop over an L1-resident working
 //!   set, giving the measured ops/s the benches compare the accelerator
 //!   model against.
 
+use crate::bigint::Scratch;
 use crate::coordinator::Matrix;
 use crate::softfloat::ApFloat;
+
+/// Output columns advanced together in the register-blocked inner loop:
+/// each A element is loaded once and fed to `JB` accumulators, so the
+/// A-panel traffic is amortized `JB`-fold (the software shape of the
+/// paper's T_N x T_M output tile).
+const JB: usize = 4;
+
+/// Reusable GEMM workspace: the packed B column panels plus the operator
+/// arena.  Repeated same-shape [`gemm_into`] calls against one warm
+/// `GemmScratch` perform zero heap allocations (see tests/alloc_free.rs).
+#[derive(Default)]
+pub struct GemmScratch {
+    scratch: Scratch,
+    /// B packed column-major: column j at `bt[j*k .. (j+1)*k]`.  Packing
+    /// clones each column's values back-to-back once per GEMM, so the
+    /// k-innermost scan walks freshly co-allocated mantissas instead of
+    /// striding `b.cols()` scattered elements per step.
+    bt: Vec<ApFloat>,
+}
+
+impl GemmScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Refresh the packed B panel in place (allocation-free once warm).
+    fn pack_b(&mut self, b: &Matrix) {
+        let (k, m) = (b.rows(), b.cols());
+        let prec = b.prec();
+        if self.bt.len() != k * m {
+            self.bt.clear();
+            self.bt.resize(k * m, ApFloat::zero(prec));
+        }
+        for j in 0..m {
+            for kk in 0..k {
+                self.bt[j * k + kk].assign(b.get(kk, j));
+            }
+        }
+    }
+}
+
+/// One output row band of C += A*B on the packed panel: rows `i0..` of A
+/// against every packed B column, `JB` output columns per pass, sequential
+/// K accumulation per element through [`ApFloat::mac_into`] — the exact
+/// operation order of the accelerator datapath, so results stay
+/// bit-comparable with the device output.
+fn gemm_band(
+    a: &Matrix,
+    bt: &[ApFloat],
+    k: usize,
+    out: &mut [ApFloat],
+    i0: usize,
+    cols: usize,
+    scratch: &mut Scratch,
+) {
+    debug_assert_eq!(out.len() % cols.max(1), 0);
+    let rows = if cols == 0 { 0 } else { out.len() / cols };
+    for r in 0..rows {
+        let arow = a.row(i0 + r);
+        let out_row = &mut out[r * cols..(r + 1) * cols];
+        for j0 in (0..cols).step_by(JB) {
+            let jw = JB.min(cols - j0);
+            for (kk, x) in arow.iter().enumerate() {
+                for jj in 0..jw {
+                    let j = j0 + jj;
+                    out_row[j].mac_into(x, &bt[j * k + kk], scratch);
+                }
+            }
+        }
+    }
+}
+
+/// In-place tiled GEMM: `out += a * b` with sequential K accumulation per
+/// element (bit-identical to [`gemm_serial`] on the same inputs).  `out`
+/// plays the role of C and is updated in place; with a warm `ws` the call
+/// performs zero heap allocations.
+pub fn gemm_into(a: &Matrix, b: &Matrix, out: &mut Matrix, ws: &mut GemmScratch) {
+    assert_eq!(a.cols(), b.rows(), "inner dimensions");
+    assert!(a.rows() == out.rows() && b.cols() == out.cols(), "output shape");
+    ws.pack_b(b);
+    let k = a.cols();
+    let cols = out.cols();
+    gemm_band(a, &ws.bt, k, out.values_mut(), 0, cols, &mut ws.scratch);
+}
 
 /// Reference GEMM: C += A*B, sequential K accumulation per element —
 /// the exact operation order of the accelerator datapath, so results are
 /// bit-comparable with the device output.
 pub fn gemm_serial(a: &Matrix, b: &Matrix, c: &Matrix) -> Matrix {
     let mut out = c.clone();
-    for i in 0..a.rows() {
-        for j in 0..b.cols() {
-            let mut acc = c.get(i, j).clone();
-            for k in 0..a.cols() {
-                acc = acc.mac(a.get(i, k), b.get(k, j));
-            }
-            out.set(i, j, acc);
-        }
-    }
+    let mut ws = GemmScratch::new();
+    gemm_into(a, b, &mut out, &mut ws);
     out
 }
 
-/// Multithreaded blocked GEMM (row bands across `threads` cores).
+/// Multithreaded tiled GEMM (row bands across `threads` cores).  The B
+/// panel is packed once and shared read-only; each worker accumulates its
+/// band of the output in place with a private arena, so the inner loops
+/// allocate nothing.
 pub fn gemm_threaded(a: &Matrix, b: &Matrix, c: &Matrix, threads: usize) -> Matrix {
-    assert_eq!(a.cols(), b.rows());
+    assert_eq!(a.cols(), b.rows(), "inner dimensions");
+    assert!(a.rows() == c.rows() && b.cols() == c.cols(), "output shape");
     let n = a.rows();
     let threads = threads.clamp(1, n.max(1));
     let band = n.div_ceil(threads);
     let mut out = c.clone();
-
-    // compute bands in parallel, collect rows, then write back
-    let results: Vec<Vec<(usize, Vec<ApFloat>)>> = std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        for t in 0..threads {
-            let (a, b, c) = (&*a, &*b, &*c);
-            handles.push(scope.spawn(move || {
-                let start = (t * band).min(n);
-                let end = ((t + 1) * band).min(n);
-                let mut rows = Vec::with_capacity(end - start);
-                for i in start..end {
-                    let mut row = Vec::with_capacity(b.cols());
-                    for j in 0..b.cols() {
-                        let mut acc = c.get(i, j).clone();
-                        for k in 0..a.cols() {
-                            acc = acc.mac(a.get(i, k), b.get(k, j));
-                        }
-                        row.push(acc);
-                    }
-                    rows.push((i, row));
-                }
-                rows
-            }));
-        }
-        handles.into_iter().map(|h| h.join().expect("baseline worker")).collect()
-    });
-    for rows in results {
-        for (i, row) in rows {
-            for (j, v) in row.into_iter().enumerate() {
-                out.set(i, j, v);
-            }
-        }
+    let mut ws = GemmScratch::new();
+    ws.pack_b(b);
+    let k = a.cols();
+    let cols = out.cols();
+    if cols == 0 || n == 0 {
+        return out;
     }
+
+    let bt = &ws.bt;
+    std::thread::scope(|scope| {
+        for (t, band_vals) in out.values_mut().chunks_mut(band * cols).enumerate() {
+            let a = &*a;
+            scope.spawn(move || {
+                let mut scratch = Scratch::new();
+                gemm_band(a, bt, k, band_vals, t * band, cols, &mut scratch);
+            });
+        }
+    });
     out
 }
 
@@ -77,7 +146,7 @@ pub fn gemm_threaded(a: &Matrix, b: &Matrix, c: &Matrix, threads: usize) -> Matr
 /// honest analog of MPFR's `mpfr_mul` into a preallocated result.
 pub fn measure_mul_throughput(prec: u32, iters: usize) -> f64 {
     let set = working_set(prec, 64);
-    let mut scratch = crate::bigint::MulScratch::new();
+    let mut scratch = Scratch::new();
     let mut sink = set[0].clone();
     let t0 = std::time::Instant::now();
     for i in 0..iters {
@@ -91,16 +160,21 @@ pub fn measure_mul_throughput(prec: u32, iters: usize) -> f64 {
 }
 
 /// Measured multiply-add throughput (MAC/s) of one core on this host.
+/// Runs the allocation-free `mac_into` accumulation against a private
+/// arena — the honest analog of an MPFR harness accumulating into a
+/// preallocated `mpfr_t`, so the CPU numbers the benches report reflect
+/// the preallocated path, not allocator overhead.
 pub fn measure_mac_throughput(prec: u32, iters: usize) -> f64 {
     let set = working_set(prec, 64);
+    let mut scratch = Scratch::new();
     let t0 = std::time::Instant::now();
     let mut acc = set[0].clone();
     for i in 0..iters {
         let a = &set[i % set.len()];
         let b = &set[(i * 7 + 3) % set.len()];
-        acc = acc.mac(a, b);
+        acc.mac_into(a, b, &mut scratch);
         if acc.is_zero() || acc.exp() > 1 << 40 {
-            acc = set[1].clone(); // keep exponents bounded in the hot loop
+            acc.assign(&set[1]); // keep exponents bounded in the hot loop
         }
     }
     let dt = t0.elapsed().as_secs_f64();
@@ -113,6 +187,20 @@ pub fn measure_mul_throughput_threaded(prec: u32, iters: usize, threads: usize) 
     let per: Vec<f64> = std::thread::scope(|scope| {
         (0..threads)
             .map(|_| scope.spawn(move || measure_mul_throughput(prec, iters)))
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().expect("bench thread"))
+            .collect()
+    });
+    per.iter().sum()
+}
+
+/// Multithreaded MAC throughput (MAC/s aggregated over `threads` cores,
+/// one arena per thread).
+pub fn measure_mac_throughput_threaded(prec: u32, iters: usize, threads: usize) -> f64 {
+    let per: Vec<f64> = std::thread::scope(|scope| {
+        (0..threads)
+            .map(|_| scope.spawn(move || measure_mac_throughput(prec, iters)))
             .collect::<Vec<_>>()
             .into_iter()
             .map(|h| h.join().expect("bench thread"))
@@ -162,10 +250,72 @@ mod tests {
     }
 
     #[test]
+    fn gemm_into_matches_serial_and_reuses_workspace() {
+        // one warm GemmScratch across shapes and calls must stay bit-exact
+        let mut ws = GemmScratch::new();
+        for (n, k, m, seed) in [(5usize, 4usize, 6usize, 7u64), (3, 8, 3, 8), (6, 4, 5, 9)] {
+            let a = Matrix::random(n, k, 448, seed, 20);
+            let b = Matrix::random(k, m, 448, seed + 1, 20);
+            let c = Matrix::random(n, m, 448, seed + 2, 20);
+            let want = gemm_serial(&a, &b, &c);
+            let mut out = c.clone();
+            gemm_into(&a, &b, &mut out, &mut ws);
+            assert_eq!(out, want, "n={n} k={k} m={m}");
+            // accumulating again == C + 2AB, still bit-exact vs reference
+            gemm_into(&a, &b, &mut out, &mut ws);
+            assert_eq!(out, gemm_serial(&a, &b, &want), "second accumulation");
+        }
+    }
+
+    #[test]
+    fn gemm_matches_per_element_mac_chain() {
+        // the tiled/packed kernel must preserve the per-element sequential
+        // K order: compare against the naive triple loop written out
+        let (n, k, m) = (7usize, 5usize, 9usize); // m not a multiple of JB
+        let a = Matrix::random(n, k, 448, 21, 25);
+        let b = Matrix::random(k, m, 448, 22, 25);
+        let c = Matrix::random(n, m, 448, 23, 25);
+        let got = gemm_serial(&a, &b, &c);
+        for i in 0..n {
+            for j in 0..m {
+                let mut acc = c.get(i, j).clone();
+                for kk in 0..k {
+                    acc = acc.mac(a.get(i, kk), b.get(kk, j));
+                }
+                assert_eq!(*got.get(i, j), acc, "element ({i}, {j})");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_degenerate_shapes() {
+        let prec = 448;
+        // k = 0: C passes through untouched
+        let a = Matrix::zeros(3, 0, prec);
+        let b = Matrix::zeros(0, 4, prec);
+        let c = Matrix::random(3, 4, prec, 4, 10);
+        assert_eq!(gemm_serial(&a, &b, &c), c);
+        assert_eq!(gemm_threaded(&a, &b, &c, 2), c);
+        // 1x1
+        let a = Matrix::random(1, 1, prec, 5, 10);
+        let b = Matrix::random(1, 1, prec, 6, 10);
+        let c = Matrix::zeros(1, 1, prec);
+        let got = gemm_serial(&a, &b, &c);
+        assert_eq!(got.get(0, 0), &a.get(0, 0).mul(b.get(0, 0)));
+        // more threads than rows
+        let a = Matrix::random(2, 3, prec, 7, 10);
+        let b = Matrix::random(3, 2, prec, 8, 10);
+        let c = Matrix::zeros(2, 2, prec);
+        assert_eq!(gemm_threaded(&a, &b, &c, 16), gemm_serial(&a, &b, &c));
+    }
+
+    #[test]
     fn throughput_measure_is_positive() {
         let ops = measure_mul_throughput(448, 2_000);
         assert!(ops > 1000.0, "{ops} ops/s looks wrong");
         let macs = measure_mac_throughput(448, 2_000);
         assert!(macs > 1000.0);
+        let macs2 = measure_mac_throughput_threaded(448, 1_000, 2);
+        assert!(macs2 > 1000.0);
     }
 }

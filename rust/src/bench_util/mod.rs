@@ -40,6 +40,24 @@ impl BenchResult {
         baseline.median_s() / self.median_s()
     }
 
+    /// Soft perf regression gate shared by the hot-path benches: when
+    /// `self` runs below `floor` x the speed of `baseline`, print a
+    /// warning — and hard-fail only when `APFP_BENCH_STRICT` is set, since
+    /// timing ratios are noisy on shared hosts.  Returns the speedup.
+    pub fn gate_speedup(&self, baseline: &BenchResult, floor: f64, what: &str) -> f64 {
+        let speedup = self.speedup_vs(baseline);
+        println!("{what}: {speedup:.2}x vs {}", baseline.name);
+        if speedup <= floor {
+            eprintln!("WARNING: {what} below {floor:.2}x of {} ({speedup:.2}x)", baseline.name);
+            assert!(
+                std::env::var_os("APFP_BENCH_STRICT").is_none(),
+                "{what} regressed vs {}: {speedup:.2}x (floor {floor:.2}x)",
+                baseline.name
+            );
+        }
+        speedup
+    }
+
     pub fn report(&self) -> String {
         format!(
             "{:<40} median {:>12} mean {:>12} min {:>12}",
@@ -148,6 +166,17 @@ mod tests {
         let slow = BenchResult { name: "slow".into(), samples: vec![2.0, 2.0, 2.0] };
         assert!((fast.speedup_vs(&slow) - 2.0).abs() < 1e-12);
         assert!((slow.speedup_vs(&fast) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gate_speedup_reports_ratio_without_failing_by_default() {
+        let fast = BenchResult { name: "fast".into(), samples: vec![1.0] };
+        let slow = BenchResult { name: "slow".into(), samples: vec![2.0] };
+        assert!((fast.gate_speedup(&slow, 0.5, "fast vs slow") - 2.0).abs() < 1e-12);
+        // below the floor: warns but must not panic unless APFP_BENCH_STRICT
+        if std::env::var_os("APFP_BENCH_STRICT").is_none() {
+            assert!((slow.gate_speedup(&fast, 1.0, "slow vs fast") - 0.5).abs() < 1e-12);
+        }
     }
 
     #[test]

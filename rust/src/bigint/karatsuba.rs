@@ -22,19 +22,37 @@
 //! The recursion bottoms out on [`super::mul_comba`] below `base_limbs`,
 //! the software analog of `APFP_MULT_BASE_BITS`.
 
-use super::{add_assign, add_limb, cmp, mul_comba, sub_assign, MulScratch};
+use super::{add_assign, add_limb, cmp, mul_comba, sub_assign, Scratch};
 use std::cmp::Ordering;
 
-/// Limb count at/above which `mul_auto` prefers Karatsuba.  Measured on
-/// this host (EXPERIMENTS.md §Perf P3): the crossover sits at 32 limbs
-/// (2048 bits), matching GMP's `MUL_TOOM22_THRESHOLD` ballpark on x86-64.
-/// Both paper widths (7 / 15 limbs) therefore use the columnwise Comba
-/// kernel, exactly as MPFR stays on `mpn` basecase at these sizes.  The
-/// Comba swap shifts the crossover at most upward (it beats the row-wise
-/// schoolbook the 32 was measured against); re-check with
-/// `cargo bench --bench fig3_sweep` / `--bench hotpath` (ROADMAP open item)
-/// before moving it.
-pub const KARATSUBA_THRESHOLD: usize = 32;
+/// Default limb count at/above which `mul_auto` prefers Karatsuba.
+///
+/// The 32-limb (2048-bit) crossover was measured against the row-wise
+/// schoolbook (EXPERIMENTS.md §Perf P3); the Comba columnwise swap lowers
+/// the basecase constant (one memory write per output limb), which moves
+/// the crossover *up* — the recursion's add/recombination overhead did not
+/// get cheaper, only the n^2 side did.  40 limbs is the re-estimated
+/// default on that reasoning; both paper widths (7 / 15 limbs) sit far
+/// below either value on the Comba kernel, exactly as MPFR stays on `mpn`
+/// basecase at these sizes.  Pin the measured value per host with
+/// `cargo bench --bench fig3_sweep` (it prints the direct Comba-vs-
+/// Karatsuba crossover table) and the `APFP_KARATSUBA_THRESHOLD` override
+/// (read once, see [`karatsuba_threshold`]).
+pub const KARATSUBA_THRESHOLD: usize = 40;
+
+/// The active Karatsuba crossover: `APFP_KARATSUBA_THRESHOLD` when set to
+/// a positive integer (clamped to >= 2 so the recursion stays meaningful),
+/// otherwise [`KARATSUBA_THRESHOLD`].  Parsed once per process.
+pub fn karatsuba_threshold() -> usize {
+    static THRESHOLD: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *THRESHOLD.get_or_init(|| {
+        std::env::var("APFP_KARATSUBA_THRESHOLD")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .map(|t| t.max(2))
+            .unwrap_or(KARATSUBA_THRESHOLD)
+    })
+}
 
 /// out = a * b with recursive Karatsuba bottoming out at `base_limbs`,
 /// using the thread-local scratch arena (steady-state allocation-free).
@@ -43,7 +61,7 @@ pub fn mul_karatsuba(a: &[u64], b: &[u64], out: &mut [u64], base_limbs: usize) {
     super::with_scratch(|s| mul_karatsuba_with(a, b, out, base_limbs, s));
 }
 
-/// [`mul_karatsuba`] against an explicit [`MulScratch`] arena.
+/// [`mul_karatsuba`] against an explicit [`Scratch`] arena.
 ///
 /// One workspace is taken from the arena at the top and partitioned down
 /// the recursion (§Perf P2 in EXPERIMENTS.md: per-level `Vec` allocations
@@ -54,7 +72,7 @@ pub fn mul_karatsuba_with(
     b: &[u64],
     out: &mut [u64],
     base_limbs: usize,
-    scratch: &mut MulScratch,
+    scratch: &mut Scratch,
 ) {
     debug_assert_eq!(a.len(), b.len());
     debug_assert_eq!(out.len(), 2 * a.len());
@@ -223,7 +241,7 @@ mod tests {
 
     #[test]
     fn explicit_arena_matches_wrapper_and_is_reusable() {
-        let mut scratch = MulScratch::new();
+        let mut scratch = Scratch::new();
         testkit::check(20, |rng| {
             for n in [8usize, 16, 32] {
                 let a = rng.limbs(n);

@@ -9,7 +9,7 @@
 //! schoolbook (the `MULX`/`ADCX` column kernel a Broadwell Xeon runs, here
 //! expressed as `u128` multiply-accumulate) below a threshold, and the
 //! recursive Karatsuba decomposition of the paper's §II-A above it (see
-//! [`karatsuba`]).  All kernels run against a reusable [`MulScratch`]
+//! [`karatsuba`]).  All kernels run against a reusable [`Scratch`]
 //! arena, so the hot path is allocation-free in steady state.
 
 pub mod karatsuba;
@@ -18,34 +18,43 @@ pub mod toom3;
 use std::cell::RefCell;
 use std::cmp::Ordering;
 
-pub use karatsuba::{mul_karatsuba, mul_karatsuba_with, KARATSUBA_THRESHOLD};
+pub use karatsuba::{karatsuba_threshold, mul_karatsuba, mul_karatsuba_with, KARATSUBA_THRESHOLD};
 pub use toom3::{mul_toom3, mul_toom3_with};
 
-/// Reusable scratch arena for the multiply hot path.
+/// Reusable scratch arena for the arithmetic hot paths (mul, add/sub/mac
+/// alignment, div normalization).
 ///
-/// One instance serves any operand width: every buffer grows to its
-/// high-water mark and is reused across calls, so steady-state
-/// multiplication through [`mul_auto_with`] (and `ApFloat::mul` above it)
-/// performs zero heap allocations.  A thread-local instance backs the
-/// scratch-free convenience wrappers ([`mul_auto`], [`mul_karatsuba`],
-/// [`mul_toom3`]); the `*_with` kernels never touch the thread-local, so a
-/// borrowed arena can be threaded down a whole call tree.
+/// One instance serves any operand width and every operator: each buffer
+/// grows to its high-water mark and is reused across calls, so the whole
+/// steady-state MAC pipeline — [`mul_auto_with`], `ApFloat::{mul_into,
+/// add_into, mac_into}` and the GEMM inner loops built on them — performs
+/// zero heap allocations.  A thread-local instance backs the scratch-free
+/// convenience wrappers ([`mul_auto`], [`mul_karatsuba`], [`mul_toom3`],
+/// `ApFloat::{mul, add, sub, mac, div}`); the `*_with` kernels never touch
+/// the thread-local, so a borrowed arena can be threaded down a whole call
+/// tree (one arena per GEMM worker thread).
 #[derive(Debug, Default)]
-pub struct MulScratch {
+pub struct Scratch {
     /// Karatsuba recursion workspace (partitioned down the recursion).
     kara: Vec<u64>,
     /// Double-width product buffer for the softfloat mantissa multiply.
     prod: Vec<u64>,
+    /// Adder alignment workspace for widths beyond the stack fast path.
+    addws: Vec<u64>,
     /// Recycled result buffers (see `softfloat::recycle`).
     pool: Vec<Vec<u64>>,
 }
 
+/// Former name of [`Scratch`], kept while it was multiply-only; the arena
+/// now also backs the adder and divider paths.
+pub type MulScratch = Scratch;
+
 /// Recycle-pool depth cap, so stray widths cannot grow the arena unbounded.
 const POOL_CAP: usize = 32;
 
-impl MulScratch {
+impl Scratch {
     pub const fn new() -> Self {
-        MulScratch { kara: Vec::new(), prod: Vec::new(), pool: Vec::new() }
+        Scratch { kara: Vec::new(), prod: Vec::new(), addws: Vec::new(), pool: Vec::new() }
     }
 
     /// Karatsuba workspace of at least `len` limbs.  Contents are
@@ -58,7 +67,7 @@ impl MulScratch {
     }
 
     /// Take the double-width product buffer, resized to `len` zeroed limbs.
-    /// Return it with [`MulScratch::put_prod`] when done so the next call
+    /// Return it with [`Scratch::put_prod`] when done so the next call
     /// reuses the capacity (the buffer moves out to sidestep the borrow of
     /// `self` that the multiply kernels need concurrently).
     pub fn take_prod(&mut self, len: usize) -> Vec<u64> {
@@ -68,10 +77,27 @@ impl MulScratch {
         v
     }
 
-    /// Return the product buffer taken by [`MulScratch::take_prod`].
+    /// Return the product buffer taken by [`Scratch::take_prod`].
     pub fn put_prod(&mut self, v: Vec<u64>) {
         if v.capacity() > self.prod.capacity() {
             self.prod = v;
+        }
+    }
+
+    /// Take the adder alignment workspace, resized to `len` zeroed limbs
+    /// (the `ApFloat` adder needs it only for widths past its stack fast
+    /// path).  Same move-out contract as [`Scratch::take_prod`].
+    pub fn take_addws(&mut self, len: usize) -> Vec<u64> {
+        let mut v = std::mem::take(&mut self.addws);
+        v.clear();
+        v.resize(len, 0);
+        v
+    }
+
+    /// Return the workspace taken by [`Scratch::take_addws`].
+    pub fn put_addws(&mut self, v: Vec<u64>) {
+        if v.capacity() > self.addws.capacity() {
+            self.addws = v;
         }
     }
 
@@ -93,13 +119,13 @@ impl MulScratch {
 }
 
 thread_local! {
-    static SCRATCH: RefCell<MulScratch> = const { RefCell::new(MulScratch::new()) };
+    static SCRATCH: RefCell<Scratch> = const { RefCell::new(Scratch::new()) };
 }
 
-/// Run `f` on this thread's shared [`MulScratch`].  Not re-entrant: the
+/// Run `f` on this thread's shared [`Scratch`].  Not re-entrant: the
 /// `*_with` kernels take the arena by `&mut` precisely so nothing below
 /// them needs to borrow the thread-local again.
-pub fn with_scratch<R>(f: impl FnOnce(&mut MulScratch) -> R) -> R {
+pub fn with_scratch<R>(f: impl FnOnce(&mut Scratch) -> R) -> R {
     SCRATCH.with(|s| f(&mut s.borrow_mut()))
 }
 
@@ -211,6 +237,18 @@ pub fn shr(a: &[u64], s: usize, out: &mut [u64]) {
     }
 }
 
+/// a <<= 1 in place; returns the bit shifted out of the top limb.  The
+/// divider uses this to place its guard bit without cloning the numerator.
+pub fn shl1_in_place(a: &mut [u64]) -> u64 {
+    let mut carry = 0u64;
+    for x in a.iter_mut() {
+        let next = *x >> 63;
+        *x = (*x << 1) | carry;
+        carry = next;
+    }
+    carry
+}
+
 /// True iff any bit of `a` strictly below position `s` is set — the sticky
 /// signal for RNDZ subtraction correction (DESIGN.md §5).
 pub fn sticky_below(a: &[u64], s: usize) -> bool {
@@ -292,43 +330,55 @@ pub fn mul_auto(a: &[u64], b: &[u64], out: &mut [u64]) {
 }
 
 /// [`mul_auto`] against an explicit scratch arena: allocation-free once the
-/// arena is warm.
-pub fn mul_auto_with(a: &[u64], b: &[u64], out: &mut [u64], scratch: &mut MulScratch) {
-    if a.len() < KARATSUBA_THRESHOLD || a.len() != b.len() {
+/// arena is warm.  The crossover is [`karatsuba_threshold`] — compiled
+/// default [`KARATSUBA_THRESHOLD`], overridable per host via the
+/// `APFP_KARATSUBA_THRESHOLD` environment variable.
+pub fn mul_auto_with(a: &[u64], b: &[u64], out: &mut [u64], scratch: &mut Scratch) {
+    let threshold = karatsuba_threshold();
+    if a.len() < threshold || a.len() != b.len() {
         mul_comba(a, b, out);
     } else {
-        mul_karatsuba_with(a, b, out, KARATSUBA_THRESHOLD, scratch);
+        mul_karatsuba_with(a, b, out, threshold, scratch);
     }
 }
 
-/// Long division: (quotient, remainder) of num / den, den != 0.
+/// Long division: (quotient, remainder) of num / den, den != 0, on the
+/// thread-local scratch arena.
+pub fn div_rem(num: &[u64], den: &[u64]) -> (Vec<u64>, Vec<u64>) {
+    with_scratch(|s| div_rem_with(num, den, s))
+}
+
+/// [`div_rem`] against an explicit arena: the normalization workspaces come
+/// from the recycle pool, and so do the returned quotient/remainder buffers
+/// (hand them back with [`Scratch::put_limbs`] to keep a hot loop
+/// allocation-free once the pool is warm).
 ///
 /// Knuth-style limb division with a 128/64 digit estimate refined by the
 /// classic at-most-two correction steps.  Division is *not* on the paper's
 /// accelerated path (it inherits its cost from multiplication, §I); this
 /// exists for the softfloat `div` operator and the linalg substrate.
-pub fn div_rem(num: &[u64], den: &[u64]) -> (Vec<u64>, Vec<u64>) {
+pub fn div_rem_with(num: &[u64], den: &[u64], scratch: &mut Scratch) -> (Vec<u64>, Vec<u64>) {
     let dn = bit_length(den);
     assert!(dn > 0, "division by zero");
     let nn = bit_length(num);
     if nn < dn {
-        return (vec![0; num.len()], num.to_vec());
+        let q = scratch.take_limbs(num.len());
+        let mut r = scratch.take_limbs(num.len());
+        r.copy_from_slice(num);
+        return (q, r);
     }
     // normalize: shift den so its top bit is the MSB of its top limb
     let den_limbs = dn.div_ceil(64);
     let shift = den_limbs * 64 - dn;
-    let mut d = vec![0u64; den_limbs];
+    let mut d = scratch.take_limbs(den_limbs);
     shl(&den[..den_limbs.min(den.len())], shift, &mut d);
-    // numerator gets the same shift (one extra limb of headroom)
+    // numerator gets the same shift (one extra limb of headroom; `shl`
+    // zero-extends the shorter source across the top limb)
     let num_limbs = nn.div_ceil(64);
-    let mut r = vec![0u64; num_limbs + 1];
-    {
-        let mut wide = vec![0u64; num_limbs + 1];
-        wide[..num_limbs].copy_from_slice(&num[..num_limbs]);
-        shl(&wide.clone(), shift, &mut r[..]);
-    }
+    let mut r = scratch.take_limbs(num_limbs + 1);
+    shl(&num[..num_limbs], shift, &mut r[..]);
     let m = num_limbs + 1 - den_limbs; // quotient digits
-    let mut q = vec![0u64; num.len().max(m)];
+    let mut q = scratch.take_limbs(num.len().max(m));
     let d_top = d[den_limbs - 1];
     let d_next = if den_limbs >= 2 { d[den_limbs - 2] } else { 0 };
 
@@ -367,13 +417,13 @@ pub fn div_rem(num: &[u64], den: &[u64]) -> (Vec<u64>, Vec<u64>) {
         q[j] = q_hat;
     }
 
-    // un-normalize the remainder
-    let mut rem = vec![0u64; den.len().max(den_limbs)];
+    // un-normalize the remainder (den_limbs <= den.len(), so the tail of
+    // the pool-zeroed buffer is already the required zero padding)
+    let mut rem = scratch.take_limbs(den.len());
     shr(&r[..den_limbs], shift, &mut rem[..den_limbs]);
-    rem.resize(den.len(), 0);
-    let mut quot = q;
-    quot.resize(num.len().max(m), 0);
-    (quot, rem)
+    scratch.put_limbs(d);
+    scratch.put_limbs(r);
+    (q, rem)
 }
 
 /// a -= v * b (b zero-extended); returns true if the subtraction borrowed
@@ -695,7 +745,7 @@ mod tests {
 
     #[test]
     fn mul_auto_with_reuses_one_arena_across_widths() {
-        let mut scratch = MulScratch::new();
+        let mut scratch = Scratch::new();
         let mut rng = testkit::Rng::from_seed(42);
         for n in [7usize, 15, 32, 48, 64, 7] {
             let a = rng.limbs(n);
@@ -710,7 +760,7 @@ mod tests {
 
     #[test]
     fn scratch_prod_and_pool_roundtrip() {
-        let mut s = MulScratch::new();
+        let mut s = Scratch::new();
         let mut p = s.take_prod(14);
         assert_eq!(p.len(), 14);
         assert!(is_zero(&p));
@@ -729,6 +779,51 @@ mod tests {
         let v2 = s.take_limbs(7);
         assert_eq!(v2.len(), 7);
         assert!(is_zero(&v2));
+    }
+
+    #[test]
+    fn shl1_in_place_vs_u128() {
+        testkit::check(200, |rng| {
+            let mut a = rng.limbs(2);
+            let v = to_u128(&a);
+            let carry = shl1_in_place(&mut a);
+            assert_eq!(to_u128(&a), v << 1);
+            assert_eq!(carry, (v >> 127) as u64);
+        });
+    }
+
+    #[test]
+    fn addws_roundtrip_rezeroes_and_reuses_capacity() {
+        let mut s = Scratch::new();
+        let mut w = s.take_addws(21);
+        assert_eq!(w.len(), 21);
+        assert!(is_zero(&w));
+        w[20] = 9;
+        let cap = w.capacity();
+        s.put_addws(w);
+        let w2 = s.take_addws(15);
+        assert_eq!(w2.len(), 15);
+        assert!(is_zero(&w2), "take_addws must re-zero recycled buffers");
+        assert_eq!(w2.capacity(), cap, "capacity must be reused");
+    }
+
+    #[test]
+    fn div_rem_with_matches_div_rem_on_one_arena() {
+        let mut scratch = Scratch::new();
+        testkit::check(100, |rng| {
+            let n = 1 + rng.below(5) as usize;
+            let num = rng.limbs(n);
+            let mut den = rng.limbs(n);
+            if is_zero(&den) {
+                den[0] = 5;
+            }
+            let (q0, r0) = div_rem(&num, &den);
+            let (q1, r1) = div_rem_with(&num, &den, &mut scratch);
+            assert_eq!(q0, q1);
+            assert_eq!(r0, r1);
+            scratch.put_limbs(q1);
+            scratch.put_limbs(r1);
+        });
     }
 
     #[test]

@@ -21,7 +21,7 @@
 //! Intermediates are signed, so the module carries a tiny sign-magnitude
 //! helper (`SInt`) — growing numbers stay exact throughout.
 
-use super::{add_assign, add_limb, cmp, is_zero, mul_auto_with, mul_comba, sub_assign, MulScratch};
+use super::{add_assign, add_limb, cmp, is_zero, mul_auto_with, mul_comba, sub_assign, Scratch};
 use std::cmp::Ordering;
 
 /// Signed arbitrary big integer: sign + little-endian magnitude.
@@ -82,7 +82,7 @@ impl SInt {
         self.add(&flipped);
     }
 
-    fn mul(&self, other: &SInt, scratch: &mut MulScratch) -> SInt {
+    fn mul(&self, other: &SInt, scratch: &mut Scratch) -> SInt {
         let mut out = vec![0u64; self.mag.len() + other.mag.len()];
         mul_auto_unequal(&self.mag, &other.mag, &mut out, scratch);
         SInt { neg: self.neg != other.neg && !is_zero(&out), mag: out }
@@ -113,7 +113,7 @@ impl SInt {
 }
 
 /// mul for possibly unequal lengths (pads the shorter operand).
-fn mul_auto_unequal(a: &[u64], b: &[u64], out: &mut [u64], scratch: &mut MulScratch) {
+fn mul_auto_unequal(a: &[u64], b: &[u64], out: &mut [u64], scratch: &mut Scratch) {
     if a.len() == b.len() {
         mul_auto_with(a, b, out, scratch);
     } else {
@@ -127,12 +127,12 @@ pub fn mul_toom3(a: &[u64], b: &[u64], out: &mut [u64]) {
     super::with_scratch(|s| mul_toom3_with(a, b, out, s));
 }
 
-/// [`mul_toom3`] against an explicit [`MulScratch`]: the five pointwise
+/// [`mul_toom3`] against an explicit [`Scratch`]: the five pointwise
 /// sub-multiplications go through `mul_auto_with` (Comba / Karatsuba) on
 /// the shared arena.  The signed interpolation intermediates still own
 /// their (growing) buffers — Toom-3 sits above the `ApFloat::mul` hot path,
 /// so only its sub-multiplications need the arena.
-pub fn mul_toom3_with(a: &[u64], b: &[u64], out: &mut [u64], scratch: &mut MulScratch) {
+pub fn mul_toom3_with(a: &[u64], b: &[u64], out: &mut [u64], scratch: &mut Scratch) {
     debug_assert_eq!(a.len(), b.len());
     debug_assert_eq!(out.len(), 2 * a.len());
     let n = a.len();
@@ -292,14 +292,14 @@ mod tests {
         assert_eq!(x.mag[0], 10);
         x.div_exact(2);
         assert_eq!(x.mag[0], 5);
-        let z = x.mul(&SInt { neg: true, mag: vec![3] }, &mut MulScratch::new());
+        let z = x.mul(&SInt { neg: true, mag: vec![3] }, &mut Scratch::new());
         assert!(z.neg);
         assert_eq!(z.mag[0], 15);
     }
 
     #[test]
     fn explicit_arena_matches_wrapper() {
-        let mut scratch = MulScratch::new();
+        let mut scratch = Scratch::new();
         testkit::check(10, |rng| {
             for n in [9usize, 16, 33] {
                 let a = rng.limbs(n);

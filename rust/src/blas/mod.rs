@@ -58,9 +58,12 @@ pub fn gemm(
 
     let (out, stats) = device.gemm(&a, &b, &c)?;
 
-    for j in 0..n {
-        for i in 0..m {
-            write_c(j * ldc + i, out.get(i, j).clone());
+    // hand the results back by value, consuming the device matrix row-major
+    // — no per-element clone on the marshaling path
+    let mut vals = out.into_values().into_iter();
+    for i in 0..m {
+        for j in 0..n {
+            write_c(j * ldc + i, vals.next().expect("m*n values"));
         }
     }
     Ok(stats)

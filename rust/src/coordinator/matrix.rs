@@ -58,6 +58,18 @@ impl Matrix {
         &self.vals[i * self.cols + j]
     }
 
+    /// Mutable element access for in-place accumulation (`mac_into`); the
+    /// caller must keep the element at the matrix's precision.
+    pub fn get_mut(&mut self, i: usize, j: usize) -> &mut ApFloat {
+        &mut self.vals[i * self.cols + j]
+    }
+
+    /// Row `i` as a contiguous slice (the natural A-panel of the row-major
+    /// GEMM kernel — no packing step needed on the A side).
+    pub fn row(&self, i: usize) -> &[ApFloat] {
+        &self.vals[i * self.cols..(i + 1) * self.cols]
+    }
+
     pub fn set(&mut self, i: usize, j: usize, v: ApFloat) {
         assert_eq!(v.prec(), self.prec);
         self.vals[i * self.cols + j] = v;
@@ -65,6 +77,21 @@ impl Matrix {
 
     pub fn values(&self) -> &[ApFloat] {
         &self.vals
+    }
+
+    /// Mutable row-major storage, for kernels that update elements in
+    /// place (the tiled GEMM writes output row bands through this).
+    /// Crate-internal: writers must preserve the uniform-precision
+    /// invariant that [`Matrix::set`] enforces.
+    pub(crate) fn values_mut(&mut self) -> &mut [ApFloat] {
+        &mut self.vals
+    }
+
+    /// Consume the matrix into its row-major values — the clone-free
+    /// marshaling path for handing results back to caller-owned storage
+    /// (`blas::gemm`'s write-back).
+    pub fn into_values(self) -> Vec<ApFloat> {
+        self.vals
     }
 
     /// Extract a `tn x tm` tile starting at (r0, c0) into the plane layout;
@@ -135,6 +162,18 @@ mod tests {
         for idx in 1..16 {
             assert!(t.get(idx).is_zero());
         }
+    }
+
+    #[test]
+    fn row_get_mut_and_into_values_agree_with_get() {
+        let mut m = Matrix::random(4, 3, 448, 5, 10);
+        assert_eq!(m.row(2)[1], *m.get(2, 1));
+        let want = m.get(1, 2).neg();
+        let slot = m.get_mut(1, 2);
+        *slot = slot.neg();
+        assert_eq!(*m.get(1, 2), want);
+        let snapshot: Vec<_> = m.values().to_vec();
+        assert_eq!(m.into_values(), snapshot);
     }
 
     #[test]

@@ -44,14 +44,17 @@ pub fn identity(n: usize, prec: u32) -> Matrix {
     })
 }
 
-/// Frobenius inner product <A, B> = sum_ij A_ij * B_ij.
+/// Frobenius inner product <A, B> = sum_ij A_ij * B_ij, accumulated on the
+/// allocation-free `mac_into` pipeline (thread-local arena).
 pub fn frob_inner(a: &Matrix, b: &Matrix) -> ApFloat {
     let mut acc = ApFloat::zero(a.prec());
-    for i in 0..a.rows() {
-        for j in 0..a.cols() {
-            acc = acc.mac(a.get(i, j), b.get(i, j));
+    crate::bigint::with_scratch(|scratch| {
+        for i in 0..a.rows() {
+            for j in 0..a.cols() {
+                acc.mac_into(a.get(i, j), b.get(i, j), scratch);
+            }
         }
-    }
+    });
     acc
 }
 

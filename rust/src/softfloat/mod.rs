@@ -39,9 +39,10 @@ pub fn prec_for_bits(total_bits: u32) -> u32 {
     total_bits - 64
 }
 
-/// Return a spent value's mantissa buffer to the thread-local multiply
-/// arena so a subsequent [`ApFloat::mul`] can reuse it.  This is the
-/// steady-state contract that makes `mul` allocation-free in hot loops:
+/// Return a spent value's mantissa buffer to the thread-local arithmetic
+/// arena so a subsequent operator ([`ApFloat::mul`], [`ApFloat::add`],
+/// [`ApFloat::mac`], …) can reuse it.  This is the steady-state contract
+/// that makes the whole operator set allocation-free in hot loops:
 ///
 /// ```ignore
 /// let r = a.mul(&b);       // buffer drawn from the recycle pool
@@ -49,11 +50,12 @@ pub fn prec_for_bits(total_bits: u32) -> u32 {
 /// softfloat::recycle(r);   // buffer returned: no allocator traffic
 /// ```
 ///
-/// Loops that instead keep one output alive should prefer
-/// [`ApFloat::mul_into`], which needs no pool at all, and loops running an
-/// *explicit* arena pair [`ApFloat::mul_with`] with [`recycle_into`] —
-/// this function only refills the thread-local arena that plain `mul`
-/// draws from.
+/// Loops that instead keep one output alive should prefer the `*_into`
+/// operators ([`ApFloat::mul_into`], [`ApFloat::add_into`],
+/// [`ApFloat::mac_into`]), which need no pool at all, and loops running an
+/// *explicit* arena pair the `*_with` operators with [`recycle_into`] —
+/// this function only refills the thread-local arena that the plain
+/// operators draw from.
 pub fn recycle(f: ApFloat) {
     crate::bigint::with_scratch(|s| s.put_limbs(f.mant));
 }
@@ -62,7 +64,7 @@ pub fn recycle(f: ApFloat) {
 /// partner of [`ApFloat::mul_with`], whose results are drawn from
 /// `scratch`'s pool, so the explicit-arena path is also allocation-free
 /// in steady state.
-pub fn recycle_into(f: ApFloat, scratch: &mut crate::bigint::MulScratch) {
+pub fn recycle_into(f: ApFloat, scratch: &mut crate::bigint::Scratch) {
     scratch.put_limbs(f.mant);
 }
 
@@ -141,6 +143,20 @@ impl ApFloat {
 
     pub fn is_zero(&self) -> bool {
         self.exp == ZERO_EXP
+    }
+
+    /// Copy `src`'s value into `self`, reusing `self`'s mantissa buffer —
+    /// the allocation-free counterpart of `*self = src.clone()` whenever
+    /// the widths already match (tile packing, accumulator resets).
+    pub fn assign(&mut self, src: &ApFloat) {
+        self.sign = src.sign;
+        self.exp = src.exp;
+        self.prec = src.prec;
+        if self.mant.len() != src.mant.len() {
+            self.mant.clear();
+            self.mant.resize(src.mant.len(), 0);
+        }
+        self.mant.copy_from_slice(&src.mant);
     }
 
     pub fn neg(&self) -> Self {
@@ -286,6 +302,24 @@ mod tests {
         assert_eq!(x.exp(), 448 + 4);
         assert_eq!(x.limbs()[0], 1);
         assert_eq!(x.limbs()[6], 1 << 63);
+    }
+
+    #[test]
+    fn assign_reuses_buffer_and_handles_width_changes() {
+        let src = ApFloat::from_i64(-42, P);
+        let mut dst = ApFloat::from_u64(7, P);
+        let buf_ptr = dst.limbs().as_ptr();
+        dst.assign(&src);
+        assert_eq!(dst, src);
+        assert_eq!(dst.limbs().as_ptr(), buf_ptr, "same-width assign must not reallocate");
+        // width change reallocates once, then value matches
+        let wide = ApFloat::from_i64(9, 960);
+        dst.assign(&wide);
+        assert_eq!(dst, wide);
+        // zero propagates canonically
+        dst.assign(&ApFloat::zero(P));
+        assert!(dst.is_zero());
+        assert_eq!(dst, ApFloat::zero(P));
     }
 
     #[test]

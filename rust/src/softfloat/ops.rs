@@ -2,18 +2,19 @@
 //! operators, bit-compatible with the JAX model and the Python oracle.
 
 use super::{ApFloat, ZERO_EXP};
-use crate::bigint::{self, MulScratch};
+use crate::bigint::{self, Scratch};
 
-/// Widths up to `STACK_LIMBS * 64` bits (2048) use stack scratch in `add`
-/// instead of heap workspaces (§Perf P1 in EXPERIMENTS.md).  `mul` goes
-/// through the [`MulScratch`] arena instead — see [`ApFloat::mul_into`].
+/// Widths up to `STACK_LIMBS * 64` bits (2048) use stack scratch in the
+/// adder pipeline (§Perf P1 in EXPERIMENTS.md); wider operands draw the
+/// alignment workspace from the [`Scratch`] arena, the same pool that
+/// backs `mul` — so every operator is allocation-free in steady state.
 const STACK_LIMBS: usize = 32;
 
 impl ApFloat {
     /// RNDZ multiplication (§II-A).  The mantissa product is exact, so
     /// truncating its low bits *is* round-to-zero.
     ///
-    /// Runs on the thread-local [`MulScratch`] arena: the product workspace
+    /// Runs on the thread-local [`Scratch`] arena: the product workspace
     /// and any Karatsuba scratch are reused across calls, and the result
     /// mantissa is drawn from the arena's recycle pool.  A hot loop that
     /// returns spent values via [`super::recycle`] (or that reuses an
@@ -25,7 +26,7 @@ impl ApFloat {
 
     /// [`ApFloat::mul`] against an explicit scratch arena (the result
     /// buffer is drawn from the arena's recycle pool).
-    pub fn mul_with(&self, other: &Self, scratch: &mut MulScratch) -> Self {
+    pub fn mul_with(&self, other: &Self, scratch: &mut Scratch) -> Self {
         assert_eq!(self.prec, other.prec);
         let mant = scratch.take_limbs(self.mant.len());
         let mut out = ApFloat { sign: false, exp: ZERO_EXP, mant, prec: self.prec };
@@ -36,7 +37,7 @@ impl ApFloat {
     /// Write `self * other` (RNDZ) into `out`, reusing `out`'s mantissa
     /// buffer and the scratch arena: zero heap allocations once both are
     /// warm.  `out` may have any prior value/precision; it is overwritten.
-    pub fn mul_into(&self, other: &Self, out: &mut ApFloat, scratch: &mut MulScratch) {
+    pub fn mul_into(&self, other: &Self, out: &mut ApFloat, scratch: &mut Scratch) {
         assert_eq!(self.prec, other.prec);
         let n = self.mant.len();
         out.prec = self.prec;
@@ -65,85 +66,50 @@ impl ApFloat {
     /// arithmetic via the guard-limb workspace + sticky correction
     /// (DESIGN.md §5).  Stages mirror the hardware adder pipeline:
     /// swap, barrel shift + sticky, wide add/sub, LZC renormalize, truncate.
+    ///
+    /// Runs on the thread-local [`Scratch`] arena: the alignment workspace
+    /// comes from the stack (paper widths) or the arena, and the result
+    /// mantissa is drawn from the arena's recycle pool — a hot loop that
+    /// returns spent values via [`super::recycle`] (or reuses an output
+    /// with [`ApFloat::add_into`]) performs zero heap allocations.
     pub fn add(&self, other: &Self) -> Self {
+        bigint::with_scratch(|s| self.add_with(other, s))
+    }
+
+    /// [`ApFloat::add`] against an explicit scratch arena (the result
+    /// buffer is drawn from the arena's recycle pool).
+    pub fn add_with(&self, other: &Self, scratch: &mut Scratch) -> Self {
         assert_eq!(self.prec, other.prec);
-        if self.is_zero() {
-            return other.clone();
-        }
-        if other.is_zero() {
-            return self.clone();
-        }
+        let mant = scratch.take_limbs(self.mant.len());
+        let mut out = ApFloat { sign: false, exp: ZERO_EXP, mant, prec: self.prec };
+        self.add_into(other, &mut out, scratch);
+        out
+    }
 
-        // -- stage 1: order by magnitude ------------------------------------
-        let (big, small) = if self.cmp_mag(other) == std::cmp::Ordering::Less {
-            (other, self)
-        } else {
-            (self, other)
-        };
-        let same_sign = big.sign == small.sign;
-
-        // -- stage 2: alignment ----------------------------------------------
-        // Workspace: [1 guard limb | n mantissa limbs | 1 overflow limb];
-        // `big`'s MSB sits at bit 64 + p - 1.
-        let n = self.mant.len();
-        let p = self.prec as usize;
-        let ws = n + 2;
-        // all three workspaces on the stack for the paper's widths (P1)
-        let mut stack = [0u64; 3 * (STACK_LIMBS + 2)];
-        let mut heap;
-        let bufs: &mut [u64] = if ws <= STACK_LIMBS + 2 {
-            &mut stack[..3 * ws]
-        } else {
-            heap = vec![0u64; 3 * ws];
-            &mut heap
-        };
-        let (ws_big, rest) = bufs.split_at_mut(ws);
-        let (placed_small, ws_small) = rest.split_at_mut(ws);
-        ws_big[1..1 + n].copy_from_slice(&big.mant);
-        placed_small[1..1 + n].copy_from_slice(&small.mant);
-
-        let d_wide = (big.exp as i128) - (small.exp as i128); // >= 0
-        let d = d_wide.min((64 * ws) as i128) as usize; // beyond this all bits are sticky
-        bigint::shr(placed_small, d, ws_small);
-        let sticky = bigint::sticky_below(placed_small, d);
-
-        // -- stage 3: wide add / subtract -------------------------------------
-        let v = ws_big;
-        if same_sign {
-            let carry = bigint::add_assign(v, ws_small);
-            debug_assert!(!carry, "overflow limb absorbs the carry");
-        } else {
-            let borrow = bigint::sub_assign(v, ws_small);
-            debug_assert!(!borrow, "|big| >= |small| by stage 1");
-            if sticky {
-                // RNDZ correction: the truncated small operand under-shoots,
-                // so the raw difference over-shoots by <1 ws-ulp.
-                let borrow = bigint::sub_limb(v, 1);
-                debug_assert!(!borrow);
-            }
-        }
-
-        // -- stages 4+5: renormalize + truncate --------------------------------
-        let nbits = bigint::bit_length(v);
-        if nbits == 0 {
-            return ApFloat::zero(self.prec); // exact cancellation -> +0
-        }
-        let mut mant = vec![0u64; n];
-        if nbits >= p {
-            bigint::shr(v, nbits - p, &mut mant);
-        } else {
-            bigint::shl(v, p - nbits, &mut mant);
-        }
-        ApFloat {
-            sign: big.sign,
-            exp: big.exp + (nbits as i64 - (64 + p) as i64),
-            mant,
-            prec: self.prec,
-        }
+    /// Write `self + other` (RNDZ) into `out`, reusing `out`'s mantissa
+    /// buffer and the scratch arena: zero heap allocations once both are
+    /// warm.  `out` may have any prior value/precision; it is overwritten.
+    pub fn add_into(&self, other: &Self, out: &mut ApFloat, scratch: &mut Scratch) {
+        add_core(self, other, false, out, scratch);
     }
 
     pub fn sub(&self, other: &Self) -> Self {
-        self.add(&other.neg())
+        bigint::with_scratch(|s| self.sub_with(other, s))
+    }
+
+    /// [`ApFloat::sub`] against an explicit scratch arena.
+    pub fn sub_with(&self, other: &Self, scratch: &mut Scratch) -> Self {
+        assert_eq!(self.prec, other.prec);
+        let mant = scratch.take_limbs(self.mant.len());
+        let mut out = ApFloat { sign: false, exp: ZERO_EXP, mant, prec: self.prec };
+        self.sub_into(other, &mut out, scratch);
+        out
+    }
+
+    /// Write `self - other` (RNDZ) into `out` — [`ApFloat::add_into`] with
+    /// the subtrahend's sign flipped in the pipeline (no operand clone).
+    pub fn sub_into(&self, other: &Self, out: &mut ApFloat, scratch: &mut Scratch) {
+        add_core(self, other, true, out, scratch);
     }
 
     /// RNDZ division — the "dependent operation" the paper notes inherits
@@ -151,6 +117,14 @@ impl ApFloat {
     /// guard + one headroom bit; truncating q to p bits equals truncating
     /// the exact quotient (floor composed with a coarser floor).
     pub fn div(&self, other: &Self) -> Self {
+        bigint::with_scratch(|s| self.div_with(other, s))
+    }
+
+    /// [`ApFloat::div`] against an explicit arena: the widened numerator,
+    /// the division workspaces and the quotient/remainder all come from the
+    /// recycle pool, and the guard-bit shift happens in place — no
+    /// numerator clone on the divider path.
+    pub fn div_with(&self, other: &Self, scratch: &mut Scratch) -> Self {
         assert_eq!(self.prec, other.prec);
         assert!(!other.is_zero(), "APFP division by zero");
         if self.is_zero() {
@@ -158,25 +132,154 @@ impl ApFloat {
         }
         let n = self.mant.len();
         let p = self.prec as i64;
-        // numerator = mant << (p + 1): n limbs shifted up by n limbs + 1 bit
-        let mut num = vec![0u64; 2 * n + 1];
+        // numerator = mant << (p + 1): the mantissa placed n limbs up (p
+        // bits, since prec % 64 == 0), then one guard-bit shift in place
+        let mut num = scratch.take_limbs(2 * n + 1);
         num[n..2 * n].copy_from_slice(&self.mant);
-        let src = num.clone();
-        bigint::shl(&src, 1, &mut num);
-        let (q, _r) = bigint::div_rem(&num, &other.mant);
-        ApFloat::from_int_scaled(
+        let carry = bigint::shl1_in_place(&mut num);
+        debug_assert_eq!(carry, 0, "top limb is headroom");
+        let (q, r) = bigint::div_rem_with(&num, &other.mant, scratch);
+        let out = ApFloat::from_int_scaled(
             self.sign != other.sign,
             &q,
             self.exp - other.exp - (p + 1),
             self.prec,
-        )
+        );
+        scratch.put_limbs(num);
+        scratch.put_limbs(q);
+        scratch.put_limbs(r);
+        out
     }
 
     /// Fused pipeline semantics: `self + a*b` with the product rounded to
     /// `prec` before accumulation (the multiplier normalizes its output
     /// before feeding the adder, as in the paper's combined pipeline).
+    /// The intermediate product lives entirely in the thread-local arena.
     pub fn mac(&self, a: &Self, b: &Self) -> Self {
-        self.add(&a.mul(b))
+        bigint::with_scratch(|s| {
+            let prod = a.mul_with(b, s);
+            let out = self.add_with(&prod, s);
+            s.put_limbs(prod.mant);
+            out
+        })
+    }
+
+    /// In-place MAC: `*self += a * b` (product rounded to `prec` before
+    /// accumulation, bit-identical to [`ApFloat::mac`]).  This is the GEMM
+    /// inner-loop primitive: the product and the sum cycle through the
+    /// arena's recycle pool, so a steady-state accumulation chain performs
+    /// zero heap allocations (proven by `tests/alloc_free.rs`).
+    pub fn mac_into(&mut self, a: &Self, b: &Self, scratch: &mut Scratch) {
+        assert_eq!(self.prec, a.prec);
+        let n = self.mant.len();
+        let mant = scratch.take_limbs(n);
+        let mut prod = ApFloat { sign: false, exp: ZERO_EXP, mant, prec: self.prec };
+        a.mul_into(b, &mut prod, scratch);
+        let mant = scratch.take_limbs(n);
+        let mut sum = ApFloat { sign: false, exp: ZERO_EXP, mant, prec: self.prec };
+        add_core(self, &prod, false, &mut sum, scratch);
+        std::mem::swap(self, &mut sum);
+        scratch.put_limbs(prod.mant);
+        scratch.put_limbs(sum.mant); // the accumulator's previous buffer
+    }
+}
+
+/// The shared §II-B adder pipeline: `out = x + (-1)^flip_y * y` (RNDZ),
+/// reusing `out`'s mantissa buffer.  Alignment workspaces live on
+/// the stack up to `STACK_LIMBS`-limb mantissas and in the arena beyond,
+/// so the path allocates nothing once `out` and `scratch` are warm.
+fn add_core(x: &ApFloat, y: &ApFloat, flip_y: bool, out: &mut ApFloat, scratch: &mut Scratch) {
+    assert_eq!(x.prec, y.prec);
+    let n = x.mant.len();
+    out.prec = x.prec;
+    if out.mant.len() != n {
+        out.mant.clear();
+        out.mant.resize(n, 0);
+    }
+    let y_sign = y.sign != flip_y;
+    if y.is_zero() {
+        // covers x == y == 0 too: x's canonical zero is copied through
+        out.sign = x.sign;
+        out.exp = x.exp;
+        out.mant.copy_from_slice(&x.mant);
+        return;
+    }
+    if x.is_zero() {
+        out.sign = y_sign;
+        out.exp = y.exp;
+        out.mant.copy_from_slice(&y.mant);
+        return;
+    }
+
+    // -- stage 1: order by magnitude ------------------------------------
+    let swap = x.cmp_mag(y) == std::cmp::Ordering::Less;
+    let (big_sign, big_exp) = if swap { (y_sign, y.exp) } else { (x.sign, x.exp) };
+    let small_exp = if swap { x.exp } else { y.exp };
+    let same_sign = x.sign == y_sign;
+
+    // -- stage 2: alignment ----------------------------------------------
+    // Workspace: [1 guard limb | n mantissa limbs | 1 overflow limb];
+    // `big`'s MSB sits at bit 64 + p - 1.
+    let p = x.prec as usize;
+    let ws = n + 2;
+    // all three workspaces on the stack for the paper's widths (P1);
+    // wider mantissas borrow the arena's adder workspace (zeroed on take)
+    let mut stack = [0u64; 3 * (STACK_LIMBS + 2)];
+    let mut pooled: Option<Vec<u64>> = None;
+    let bufs: &mut [u64] = if ws <= STACK_LIMBS + 2 {
+        &mut stack[..3 * ws]
+    } else {
+        pooled = Some(scratch.take_addws(3 * ws));
+        pooled.as_mut().expect("just set")
+    };
+    let (ws_big, rest) = bufs.split_at_mut(ws);
+    let (placed_small, ws_small) = rest.split_at_mut(ws);
+    {
+        let (big_mant, small_mant) =
+            if swap { (&y.mant, &x.mant) } else { (&x.mant, &y.mant) };
+        ws_big[1..1 + n].copy_from_slice(big_mant);
+        placed_small[1..1 + n].copy_from_slice(small_mant);
+    }
+
+    let d_wide = (big_exp as i128) - (small_exp as i128); // >= 0
+    let d = d_wide.min((64 * ws) as i128) as usize; // beyond this all bits are sticky
+    bigint::shr(placed_small, d, ws_small);
+    let sticky = bigint::sticky_below(placed_small, d);
+
+    // -- stage 3: wide add / subtract -------------------------------------
+    let v = ws_big;
+    if same_sign {
+        let carry = bigint::add_assign(v, ws_small);
+        debug_assert!(!carry, "overflow limb absorbs the carry");
+    } else {
+        let borrow = bigint::sub_assign(v, ws_small);
+        debug_assert!(!borrow, "|big| >= |small| by stage 1");
+        if sticky {
+            // RNDZ correction: the truncated small operand under-shoots,
+            // so the raw difference over-shoots by <1 ws-ulp.
+            let borrow = bigint::sub_limb(v, 1);
+            debug_assert!(!borrow);
+        }
+    }
+
+    // -- stages 4+5: renormalize + truncate --------------------------------
+    let nbits = bigint::bit_length(v);
+    if nbits == 0 {
+        // exact cancellation -> +0
+        out.sign = false;
+        out.exp = ZERO_EXP;
+        out.mant.fill(0);
+    } else {
+        if nbits >= p {
+            bigint::shr(v, nbits - p, &mut out.mant);
+        } else {
+            bigint::shl(v, p - nbits, &mut out.mant);
+        }
+        out.sign = big_sign;
+        out.exp = big_exp + (nbits as i64 - (64 + p) as i64);
+    }
+    if let Some(buf) = pooled {
+        scratch.put_addws(buf);
     }
 }
 
@@ -199,8 +302,8 @@ mod tests {
     fn mul_into_matches_mul_property() {
         // the arena/in-place path must be bit-identical to plain mul,
         // including reuse of a stale output across widths and zeros
-        use crate::bigint::MulScratch;
-        let mut scratch = MulScratch::new();
+        use crate::bigint::Scratch;
+        let mut scratch = Scratch::new();
         let mut out = ApFloat::zero(960); // wrong precision on purpose
         testkit::check(200, |rng| {
             let prec = *rng.choice(&[448u32, 960]);
@@ -219,6 +322,121 @@ mod tests {
         x.mul_into(&z, &mut out, &mut scratch);
         assert!(out.is_zero());
         assert_eq!(out, ApFloat::zero(P));
+    }
+
+    #[test]
+    fn add_into_and_sub_into_match_add_sub_property() {
+        // the arena/in-place adder must be bit-identical to the plain ops,
+        // including reuse of a stale output across precisions and zeros
+        let mut scratch = Scratch::new();
+        let mut out = ApFloat::zero(960); // wrong precision on purpose
+        testkit::check(300, |rng| {
+            let prec = *rng.choice(&[448u32, 960]);
+            let a = rand_ap(rng, prec, 300);
+            let b = rand_ap(rng, prec, 300);
+            let want = a.add(&b);
+            a.add_into(&b, &mut out, &mut scratch);
+            assert_eq!(out, want, "add_into vs add at prec {prec}");
+            let got = a.add_with(&b, &mut scratch);
+            assert_eq!(got, want, "add_with vs add at prec {prec}");
+            crate::softfloat::recycle_into(got, &mut scratch);
+            let want = a.sub(&b);
+            a.sub_into(&b, &mut out, &mut scratch);
+            assert_eq!(out, want, "sub_into vs sub at prec {prec}");
+            let got = a.sub_with(&b, &mut scratch);
+            assert_eq!(got, want, "sub_with vs sub at prec {prec}");
+            crate::softfloat::recycle_into(got, &mut scratch);
+        });
+        // zero operands through the in-place path, both sides and both ops
+        let z = ApFloat::zero(P);
+        let x = ApFloat::from_i64(3, P);
+        z.add_into(&x, &mut out, &mut scratch);
+        assert_eq!(out, x);
+        x.add_into(&z, &mut out, &mut scratch);
+        assert_eq!(out, x);
+        z.sub_into(&x, &mut out, &mut scratch);
+        assert_eq!(out, x.neg());
+        x.sub_into(&z, &mut out, &mut scratch);
+        assert_eq!(out, x);
+        z.add_into(&z, &mut out, &mut scratch);
+        assert_eq!(out, z);
+        z.sub_into(&z, &mut out, &mut scratch);
+        assert_eq!(out, z, "0 - 0 must stay canonical +0");
+    }
+
+    #[test]
+    fn add_nearly_cancelling_through_in_place_path() {
+        // exact cancellation and the sticky-correction branch via add_into
+        let mut scratch = Scratch::new();
+        let mut out = ApFloat::from_i64(7, P); // stale nonzero output
+        let a = ApFloat::from_i64(5, P);
+        a.sub_into(&a, &mut out, &mut scratch);
+        assert!(out.is_zero());
+        assert_eq!(out, ApFloat::zero(P));
+        let one = ApFloat::from_i64(1, P);
+        let mut tiny_m = vec![0u64; 7];
+        tiny_m[6] = 1 << 63;
+        let tiny = ApFloat::from_parts(true, -999, tiny_m, P); // -(2^-1000)
+        one.add_into(&tiny, &mut out, &mut scratch);
+        assert_eq!(out.exp(), 0);
+        assert!(out.limbs().iter().all(|&w| w == u64::MAX), "sticky path");
+    }
+
+    #[test]
+    fn add_beyond_stack_limbs_uses_arena_workspace() {
+        // 4096-bit mantissas exceed STACK_LIMBS: the pooled-workspace branch
+        // must be bit-identical to integer reference arithmetic
+        let prec = 4096;
+        let mut scratch = Scratch::new();
+        let mut out = ApFloat::zero(prec);
+        testkit::check(40, |rng| {
+            let x = rng.range_i64(-(1 << 40), 1 << 40);
+            let y = rng.range_i64(-(1 << 40), 1 << 40);
+            let a = ApFloat::from_i64(x, prec);
+            let b = ApFloat::from_i64(y, prec);
+            a.add_into(&b, &mut out, &mut scratch);
+            assert_eq!(out, ApFloat::from_i64(x + y, prec), "{x} + {y}");
+            assert_eq!(a.add(&b), out);
+        });
+        // and the sticky/cancellation branch at the wide width
+        let a = rand_ap(&mut testkit::Rng::from_seed(9), prec, 100);
+        a.sub_into(&a, &mut out, &mut scratch);
+        assert!(out.is_zero());
+    }
+
+    #[test]
+    fn mac_into_matches_mac_property() {
+        let mut scratch = Scratch::new();
+        testkit::check(200, |rng| {
+            let prec = *rng.choice(&[448u32, 960]);
+            let mut acc = rand_ap(rng, prec, 120);
+            let a = rand_ap(rng, prec, 120);
+            let b = rand_ap(rng, prec, 120);
+            let want = acc.mac(&a, &b);
+            acc.mac_into(&a, &b, &mut scratch);
+            assert_eq!(acc, want, "mac_into vs mac at prec {prec}");
+        });
+        // accumulation chains stay bit-identical step by step
+        let mut rng = testkit::Rng::from_seed(0xC41);
+        let mut acc_into = ApFloat::zero(P);
+        let mut acc_ref = ApFloat::zero(P);
+        for _ in 0..50 {
+            let a = rand_ap(&mut rng, P, 30);
+            let b = rand_ap(&mut rng, P, 30);
+            acc_ref = acc_ref.mac(&a, &b);
+            acc_into.mac_into(&a, &b, &mut scratch);
+            assert_eq!(acc_into, acc_ref);
+        }
+        // zero product leaves the accumulator unchanged
+        let z = ApFloat::zero(P);
+        let x = ApFloat::from_i64(3, P);
+        let before = acc_into.clone();
+        acc_into.mac_into(&x, &z, &mut scratch);
+        assert_eq!(acc_into, before);
+        // zero accumulator picks up the rounded product
+        let mut acc = ApFloat::zero(P);
+        acc.mac_into(&x, &x, &mut scratch);
+        assert_eq!(acc, ApFloat::from_i64(9, P));
     }
 
     #[test]
@@ -386,6 +604,42 @@ mod tests {
         // and the negative mirror truncates toward zero too (magnitude down)
         let neg_third = one.neg().div(&three);
         assert!(neg_third.neg() == third);
+    }
+
+    /// The pre-arena divider, verbatim: clone-based numerator widening and
+    /// the allocating `div_rem`.  Kept as the bit-exactness oracle for the
+    /// in-place guard-shift + pooled-workspace path that replaced it.
+    fn div_reference(a: &ApFloat, b: &ApFloat) -> ApFloat {
+        assert!(!b.is_zero());
+        if a.is_zero() {
+            return a.clone();
+        }
+        let n = a.mant.len();
+        let p = a.prec as i64;
+        let mut num = vec![0u64; 2 * n + 1];
+        num[n..2 * n].copy_from_slice(&a.mant);
+        let src = num.clone();
+        bigint::shl(&src, 1, &mut num);
+        let (q, _r) = bigint::div_rem(&num, &b.mant);
+        ApFloat::from_int_scaled(a.sign != b.sign, &q, a.exp - b.exp - (p + 1), a.prec)
+    }
+
+    #[test]
+    fn div_matches_pre_arena_path_bitwise() {
+        let mut scratch = Scratch::new();
+        testkit::check(200, |rng| {
+            let prec = *rng.choice(&[448u32, 960]);
+            let a = rand_ap(rng, prec, 250);
+            let b = rand_ap(rng, prec, 250);
+            let want = div_reference(&a, &b);
+            assert_eq!(a.div(&b), want, "div vs old path at prec {prec}");
+            assert_eq!(a.div_with(&b, &mut scratch), want, "div_with at prec {prec}");
+        });
+        // exact quotients and zero numerator through both entry points
+        let a = ApFloat::from_i64(-84, P);
+        let b = ApFloat::from_i64(7, P);
+        assert_eq!(a.div(&b), div_reference(&a, &b));
+        assert_eq!(ApFloat::zero(P).div_with(&b, &mut scratch), ApFloat::zero(P));
     }
 
     #[test]
