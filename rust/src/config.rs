@@ -13,6 +13,8 @@
 
 use std::path::Path;
 
+use crate::runtime::BackendKind;
+
 #[derive(Debug, thiserror::Error)]
 pub enum ConfigError {
     #[error("cannot read config file: {0}")]
@@ -43,6 +45,10 @@ pub struct ApfpConfig {
     pub add_base_bits: u32,
     /// Worker threads backing the virtual device (host-side knob).
     pub worker_threads: usize,
+    /// Execution backend for the device stack (`APFP_BACKEND`): the native
+    /// in-process executor (default; works on a clean checkout) or the
+    /// XLA/PJRT artifact path.
+    pub backend: BackendKind,
 }
 
 impl Default for ApfpConfig {
@@ -58,6 +64,7 @@ impl Default for ApfpConfig {
             mult_base_bits: 72,
             add_base_bits: 64,
             worker_threads: 0, // 0 = one per compute unit
+            backend: BackendKind::from_env(),
         }
     }
 }
@@ -105,6 +112,9 @@ impl ApfpConfig {
                 self.add_base_bits = value.parse().map_err(|_| invalid())?
             }
             "worker_threads" => self.worker_threads = value.parse().map_err(|_| invalid())?,
+            "backend" | "APFP_BACKEND" => {
+                self.backend = BackendKind::parse(value).ok_or_else(invalid)?
+            }
             _ => return Err(ConfigError::UnknownKey(key.into())),
         }
         Ok(())
@@ -151,6 +161,14 @@ mod tests {
         assert_eq!(c.prec(), 960);
         c.set("compute_units", "8").unwrap();
         assert_eq!(c.compute_units, 8);
+        c.set("APFP_BACKEND", "xla").unwrap();
+        assert_eq!(c.backend, BackendKind::Xla);
+        c.set("backend", "native").unwrap();
+        assert_eq!(c.backend, BackendKind::Native);
+        assert!(matches!(
+            c.set("backend", "fpga"),
+            Err(ConfigError::InvalidValue { .. })
+        ));
     }
 
     #[test]

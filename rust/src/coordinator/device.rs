@@ -17,11 +17,11 @@ use anyhow::{anyhow, Context, Result};
 use super::matrix::Matrix;
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::scheduler::Partition;
-use super::worker::{Job, StreamKind, WorkerHandle};
+use super::worker::{GemmOperands, Job, StreamKind, WorkerHandle};
 use crate::config::ApfpConfig;
 use crate::hwmodel::floorplan::{self, Placement};
 use crate::pack::PlaneBatch;
-use crate::runtime::{manifest, ArtifactKind};
+use crate::runtime::{self, manifest, ArtifactKind};
 
 pub struct Device {
     config: ApfpConfig,
@@ -42,16 +42,21 @@ pub struct GemmStats {
 }
 
 impl Device {
-    /// Open the virtual device with `config.compute_units` workers reading
-    /// artifacts from `artifact_dir`.
+    /// Open the virtual device with `config.compute_units` workers on
+    /// `config.backend`, reading artifacts from `artifact_dir`.  On the
+    /// native backend a missing artifact directory is fine: the builtin
+    /// in-memory manifest lights up the full device stack on a clean
+    /// checkout.
     pub fn new(config: ApfpConfig, artifact_dir: &std::path::Path) -> Result<Self> {
         config.validate().map_err(|e| anyhow!("{e}"))?;
         let artifacts =
-            manifest::load(artifact_dir).context("device: loading artifact manifest")?;
+            runtime::load_metas(artifact_dir, config.backend).context("opening device")?;
         let metrics = Metrics::new();
         let cus = config.compute_units;
         let workers = (0..cus)
-            .map(|cu| WorkerHandle::spawn(cu, artifact_dir.to_path_buf(), metrics.clone()))
+            .map(|cu| {
+                WorkerHandle::spawn(cu, artifact_dir.to_path_buf(), config.backend, metrics.clone())
+            })
             .collect();
         Ok(Device {
             placements: floorplan::assign(cus),
@@ -112,9 +117,13 @@ impl Device {
         let before = self.metrics.snapshot();
         let t0 = Instant::now();
 
-        let a = Arc::new(a.clone());
-        let b = Arc::new(b.clone());
-        let c_in = Arc::new(c.clone());
+        // Pack the three operands into shared plane panels exactly once —
+        // the "copy to device DDR" step.  Workers extract tiles from these
+        // with plane-row copies; nothing clones a full Matrix per launch.
+        let t_pack = Instant::now();
+        let ops =
+            Arc::new(GemmOperands { a: a.to_panel(), b: b.to_panel(), c: c.to_panel() });
+        self.metrics.add_marshal_ns(t_pack.elapsed().as_nanos() as u64);
         let (reply_tx, reply_rx) = channel();
 
         // Submit each CU's row-band tiles to its own queue.  Submission
@@ -130,9 +139,7 @@ impl Device {
                 if let Some(tile) = it.next() {
                     self.workers[cu].submit(Job::GemmTile {
                         artifact: artifact.clone(),
-                        a: a.clone(),
-                        b: b.clone(),
-                        c: c_in.clone(),
+                        ops: ops.clone(),
                         tile,
                         part: part.clone(),
                         reply: reply_tx.clone(),
@@ -144,14 +151,16 @@ impl Device {
         }
         drop(reply_tx);
 
-        // Assemble the output as tiles complete (any order).
-        let mut out = c.clone();
+        // Assemble the output as tiles complete (any order).  Every output
+        // element is owned by exactly one tile (bands clip `tile.rows`), so
+        // the result starts zeroed and each write lands once.
+        let mut out = Matrix::zeros(c.rows(), c.cols(), c.prec());
         for _ in 0..pending {
             let res = reply_rx.recv().context("collecting tile result")?;
             let planes = res.planes.with_context(|| {
                 format!("tile at ({}, {}) on CU{}", res.tile.r0, res.tile.c0, res.tile.cu)
             })?;
-            out.write_tile(res.tile.r0, res.tile.c0, part.tile_n, part.tile_m, &planes);
+            out.write_tile(res.tile.r0, res.tile.c0, res.tile.rows, part.tile_m, &planes);
         }
 
         let after = self.metrics.snapshot();

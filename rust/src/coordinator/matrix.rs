@@ -1,6 +1,6 @@
 //! Row-major APFP matrices and tile extraction for the GEMM datapath.
 
-use crate::pack::PlaneBatch;
+use crate::pack::{PlaneBatch, PlanePanel};
 use crate::softfloat::ApFloat;
 use crate::testkit::Rng;
 
@@ -94,11 +94,39 @@ impl Matrix {
         self.vals
     }
 
+    /// Pack the whole matrix into the plane layout once (the "copy to
+    /// device DDR" step): after this, tile extraction is plane-row copies
+    /// instead of per-element encodes.
+    pub fn to_panel(&self) -> PlanePanel {
+        let mut p = PlanePanel::zeros(self.rows, self.cols, self.prec);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                p.set(i, j, self.get(i, j));
+            }
+        }
+        p
+    }
+
     /// Extract a `tn x tm` tile starting at (r0, c0) into the plane layout;
     /// out-of-range positions pad with APFP zero (absorbing for mul,
     /// identity for add — exactly how the hardware pads partial tiles).
     pub fn extract_tile(&self, r0: usize, c0: usize, tn: usize, tm: usize) -> PlaneBatch {
         let mut b = PlaneBatch::zeros(tn * tm, self.prec);
+        self.extract_tile_into(r0, c0, tn, tm, &mut b);
+        b
+    }
+
+    /// [`Matrix::extract_tile`] into a caller-owned batch: reuses `out`'s
+    /// storage, so a hot tile loop extracts with zero allocations.
+    pub fn extract_tile_into(
+        &self,
+        r0: usize,
+        c0: usize,
+        tn: usize,
+        tm: usize,
+        out: &mut PlaneBatch,
+    ) {
+        out.reset(tn * tm, self.prec);
         for i in 0..tn {
             if r0 + i >= self.rows {
                 break;
@@ -107,10 +135,9 @@ impl Matrix {
                 if c0 + j >= self.cols {
                     break;
                 }
-                b.set(i * tm + j, self.get(r0 + i, c0 + j));
+                out.set(i * tm + j, self.get(r0 + i, c0 + j));
             }
         }
-        b
     }
 
     /// Write a tile's planes back into the matrix (clipping at the edges).
@@ -174,6 +201,22 @@ mod tests {
         assert_eq!(*m.get(1, 2), want);
         let snapshot: Vec<_> = m.values().to_vec();
         assert_eq!(m.into_values(), snapshot);
+    }
+
+    #[test]
+    fn panel_and_direct_extraction_agree() {
+        let m = Matrix::random(11, 9, 448, 7, 30);
+        let p = m.to_panel();
+        assert_eq!((p.rows(), p.cols(), p.prec()), (11, 9, 448));
+        let mut from_panel = PlaneBatch::default();
+        let mut from_matrix = PlaneBatch::default();
+        // interior, right edge, bottom edge, far corner (pure padding rows)
+        for (r0, c0) in [(0usize, 0usize), (3, 6), (8, 2), (10, 8)] {
+            p.extract_tile_into(r0, c0, 4, 4, &mut from_panel);
+            m.extract_tile_into(r0, c0, 4, 4, &mut from_matrix);
+            assert_eq!(from_panel, from_matrix, "tile at ({r0},{c0})");
+            assert_eq!(from_matrix, m.extract_tile(r0, c0, 4, 4));
+        }
     }
 
     #[test]

@@ -8,9 +8,10 @@
 //! * [`matrix::Matrix`] — host/device-resident APFP matrices;
 //! * [`device::Device`] — the device handle: buffer management, stream
 //!   operators, and the tiled GEMM launch (CUDA-like API);
-//! * [`worker`] — one OS thread per compute unit, each owning its own PJRT
-//!   [`crate::runtime::Runtime`] (its own "circuit replica") and executing
-//!   tile jobs from a bounded queue (backpressure);
+//! * [`worker`] — one OS thread per compute unit, each owning its own
+//!   [`crate::runtime::Runtime`] on the configured backend (its own
+//!   "circuit replica") and executing tile jobs from a bounded queue
+//!   (backpressure);
 //! * [`scheduler`] — the §III work partition: output rows are split into
 //!   N/P bands (one per CU), each band is tiled T_N x T_M, and every tile
 //!   accumulates over K in sequential k_tile steps;
@@ -18,7 +19,9 @@
 //!
 //! Performance of the *physical* accelerator is modeled by [`crate::sim`];
 //! this module provides the *functional* datapath (every result flows
-//! through the AOT artifacts) plus the coordination logic itself.
+//! through the runtime's pluggable backend — native in-process execution
+//! by default, AOT artifacts under `APFP_BACKEND=xla`) plus the
+//! coordination logic itself.
 
 pub mod device;
 pub mod matrix;

@@ -17,6 +17,11 @@ pub struct Tile {
     /// output row / column origin
     pub r0: usize,
     pub c0: usize,
+    /// Output rows this tile *owns*: `tile_n` clipped at the band end, so
+    /// a band that is not a multiple of `tile_n` never writes rows
+    /// belonging to the next CU's band (the artifact still computes the
+    /// full `tile_n` rows; the extras are padding, discarded on write).
+    pub rows: usize,
 }
 
 #[derive(Clone, Debug)]
@@ -45,9 +50,10 @@ impl Partition {
         let mut tiles = Vec::new();
         let mut r0 = start;
         while r0 < end {
+            let rows = self.tile_n.min(end - r0);
             let mut c0 = 0;
             while c0 < self.m {
-                tiles.push(Tile { cu, r0, c0 });
+                tiles.push(Tile { cu, r0, c0, rows });
                 c0 += self.tile_m;
             }
             r0 += self.tile_n;
@@ -100,7 +106,8 @@ mod tests {
         let pt = part(20, 20, 16, 3);
         let mut hit = vec![vec![0u32; 20]; 20];
         for t in pt.all_tiles() {
-            for i in t.r0..(t.r0 + 8).min(pt.band(t.cu).1).min(20) {
+            // t.rows is the tile's owned extent: no manual band clipping
+            for i in t.r0..(t.r0 + t.rows).min(20) {
                 for j in t.c0..(t.c0 + 8).min(20) {
                     hit[i][j] += 1;
                 }
@@ -110,6 +117,36 @@ mod tests {
         for (i, row) in hit.iter().enumerate() {
             for (j, &h) in row.iter().enumerate() {
                 assert_eq!(h, 1, "({i},{j}) covered {h} times");
+            }
+        }
+    }
+
+    #[test]
+    fn band_boundary_tiles_clip_their_rows() {
+        // Regression: when a CU's band is not a multiple of tile_n, its
+        // last tile row used to spill into the next CU's band and both CUs
+        // wrote the same output rows.  t.rows must clip at the band end so
+        // no row is owned (computed-and-written) twice.
+        for (n, m, p) in [(20usize, 20usize, 3usize), (37, 23, 3), (65, 16, 4), (9, 8, 2)] {
+            let pt = part(n, m, 16, p);
+            let mut owner = vec![0u32; n];
+            for t in pt.all_tiles() {
+                assert!(t.rows > 0 && t.rows <= pt.tile_n, "rows {} (n={n} p={p})", t.rows);
+                let (start, end) = pt.band(t.cu);
+                assert!(
+                    t.r0 >= start && t.r0 + t.rows <= end,
+                    "tile r0={} rows={} escapes band [{start},{end}) (n={n} p={p})",
+                    t.r0,
+                    t.rows
+                );
+                if t.c0 == 0 {
+                    for r in t.r0..t.r0 + t.rows {
+                        owner[r] += 1;
+                    }
+                }
+            }
+            for (r, &h) in owner.iter().enumerate() {
+                assert_eq!(h, 1, "row {r} owned {h} times (n={n} p={p})");
             }
         }
     }

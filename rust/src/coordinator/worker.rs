@@ -1,9 +1,13 @@
 //! Compute-unit worker threads.
 //!
-//! Each worker models one replicated compute unit: it owns a private PJRT
-//! [`Runtime`] (its own compiled "circuit"), pulls jobs from a bounded
-//! queue (backpressure toward the leader), executes them through the AOT
-//! artifacts, and reports results on a reply channel.
+//! Each worker models one replicated compute unit: it owns a private
+//! [`Runtime`] on the device's configured backend (its own compiled
+//! "circuit"), pulls jobs from a bounded queue (backpressure toward the
+//! leader), executes them through the artifacts, and reports results on a
+//! reply channel.  GEMM operands arrive as shared [`PlanePanel`]s — packed
+//! once per launch by the leader — and each worker keeps its A/B tile
+//! buffers warm across K steps *and* across jobs, so steady-state tile
+//! marshaling is plane-row copies into reused storage.
 
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
 use std::sync::Arc;
@@ -12,23 +16,34 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::matrix::Matrix;
 use super::metrics::Metrics;
 use super::scheduler::{Partition, Tile};
-use crate::pack::PlaneBatch;
-use crate::runtime::Runtime;
+use crate::pack::{PlaneBatch, PlanePanel};
+use crate::runtime::{BackendKind, Runtime};
 
 /// Depth of each worker's job queue: small, so a slow CU exerts
 /// backpressure on the leader instead of buffering unbounded work.
 pub const QUEUE_DEPTH: usize = 4;
 
+/// The three GEMM operands packed into the plane layout, shared read-only
+/// across every tile job of one launch (the paper copies each band's A/C
+/// rows to the owning CU's DDR bank and replicates B; the host-side analog
+/// is one packing pass and `Arc` sharing instead of three full `Matrix`
+/// clones per launch).
+pub struct GemmOperands {
+    /// A: n x k.
+    pub a: PlanePanel,
+    /// B: k x m.
+    pub b: PlanePanel,
+    /// C (input values): n x m.
+    pub c: PlanePanel,
+}
+
 pub enum Job {
     /// One full output tile: accumulate C_tile over all K steps.
     GemmTile {
         artifact: String,
-        a: Arc<Matrix>,
-        b: Arc<Matrix>,
-        c: Arc<Matrix>,
+        ops: Arc<GemmOperands>,
         tile: Tile,
         part: Partition,
         reply: Sender<TileResult>,
@@ -67,13 +82,19 @@ pub struct WorkerHandle {
 }
 
 impl WorkerHandle {
-    /// Spawn the worker; it creates its own Runtime on its own thread (the
-    /// PJRT client is not Send).
-    pub fn spawn(cu: usize, artifact_dir: std::path::PathBuf, metrics: Arc<Metrics>) -> Self {
+    /// Spawn the worker; it creates its own Runtime on its own thread (no
+    /// backend client is Send — PJRT is `Rc`-based and the native arena is
+    /// private).
+    pub fn spawn(
+        cu: usize,
+        artifact_dir: std::path::PathBuf,
+        backend: BackendKind,
+        metrics: Arc<Metrics>,
+    ) -> Self {
         let (tx, rx) = sync_channel::<Job>(QUEUE_DEPTH);
         let thread = std::thread::Builder::new()
             .name(format!("apfp-cu{cu}"))
-            .spawn(move || worker_main(cu, &artifact_dir, rx, metrics))
+            .spawn(move || worker_main(cu, &artifact_dir, backend, rx, metrics))
             .expect("spawning CU worker");
         WorkerHandle { cu, sender: tx, thread: Some(thread) }
     }
@@ -93,8 +114,21 @@ impl Drop for WorkerHandle {
     }
 }
 
-fn worker_main(cu: usize, dir: &std::path::Path, rx: Receiver<Job>, metrics: Arc<Metrics>) {
-    let rt = match Runtime::new(dir) {
+/// Per-worker tile staging buffers, reused across K steps and across jobs.
+#[derive(Default)]
+struct TileBufs {
+    a: PlaneBatch,
+    b: PlaneBatch,
+}
+
+fn worker_main(
+    cu: usize,
+    dir: &std::path::Path,
+    backend: BackendKind,
+    rx: Receiver<Job>,
+    metrics: Arc<Metrics>,
+) {
+    let rt = match Runtime::with_backend(dir, backend) {
         Ok(rt) => rt,
         Err(e) => {
             eprintln!("CU{cu}: runtime init failed: {e:#}");
@@ -120,11 +154,12 @@ fn worker_main(cu: usize, dir: &std::path::Path, rx: Receiver<Job>, metrics: Arc
         }
     };
 
+    let mut bufs = TileBufs::default();
     for job in rx {
         match job {
             Job::Shutdown => break,
-            Job::GemmTile { artifact, a, b, c, tile, part, reply } => {
-                let planes = run_tile(&rt, &artifact, &a, &b, &c, tile, &part, &metrics);
+            Job::GemmTile { artifact, ops, tile, part, reply } => {
+                let planes = run_tile(&rt, &artifact, &ops, tile, &part, &metrics, &mut bufs);
                 let _ = reply.send(TileResult { tile, planes });
             }
             Job::Stream { artifact, kind, operands, offset, reply } => {
@@ -146,31 +181,36 @@ fn worker_main(cu: usize, dir: &std::path::Path, rx: Receiver<Job>, metrics: Arc
 }
 
 /// Execute one output tile: sequential K accumulation through the artifact
-/// (the §III dataflow; the C tile stays "on chip" between K steps).
+/// (the §III dataflow).  The C tile stays "on chip" between K steps — the
+/// backend updates it in place — and the A/B staging buffers are reused
+/// across steps and jobs, so the per-step marshaling cost is the plane-row
+/// copies out of the shared panels.
 fn run_tile(
     rt: &Runtime,
     artifact: &str,
-    a: &Matrix,
-    b: &Matrix,
-    c: &Matrix,
+    ops: &GemmOperands,
     tile: Tile,
     part: &Partition,
     metrics: &Metrics,
+    bufs: &mut TileBufs,
 ) -> Result<PlaneBatch> {
     let (tn, tm, kt) = (part.tile_n, part.tile_m, part.k_tile);
     let t_marshal = Instant::now();
-    let mut c_tile = c.extract_tile(tile.r0, tile.c0, tn, tm);
+    // default() + extract: extract's reset does the one required
+    // initialization (zeros() here would zero everything a second time)
+    let mut c_tile = PlaneBatch::default();
+    ops.c.extract_tile_into(tile.r0, tile.c0, tn, tm, &mut c_tile);
     metrics.add_marshal_ns(t_marshal.elapsed().as_nanos() as u64);
 
     for step in 0..part.k_steps() {
         let k0 = step * kt;
         let tm_marshal = Instant::now();
-        let a_tile = a.extract_tile(tile.r0, k0, tn, kt);
-        let b_tile = b.extract_tile(k0, tile.c0, kt, tm);
+        ops.a.extract_tile_into(tile.r0, k0, tn, kt, &mut bufs.a);
+        ops.b.extract_tile_into(k0, tile.c0, kt, tm, &mut bufs.b);
         metrics.add_marshal_ns(tm_marshal.elapsed().as_nanos() as u64);
 
         let t_exec = Instant::now();
-        c_tile = rt.exec_gemm_tile(artifact, &a_tile, &b_tile, &c_tile)?;
+        rt.exec_gemm_tile(artifact, &bufs.a, &bufs.b, &mut c_tile)?;
         metrics.add_exec_ns(t_exec.elapsed().as_nanos() as u64);
         metrics.add_calls(1);
         metrics.add_macs((tn * tm * kt) as u64);

@@ -138,7 +138,13 @@ common options:
 fn selftest(args: &Args) -> Result<()> {
     let cfg = args.config()?;
     let dir = default_artifact_dir();
-    println!("opening device: {} CUs, {} bits, artifacts at {}", cfg.compute_units, cfg.bits, dir.display());
+    println!(
+        "opening device: {} CUs, {} bits, {} backend, artifacts at {}",
+        cfg.compute_units,
+        cfg.bits,
+        cfg.backend,
+        dir.display()
+    );
     let dev = Device::new(cfg.clone(), &dir)?;
     let prec = cfg.prec();
     let n = 20;
@@ -302,11 +308,12 @@ fn gemm_cmd(args: &Args) -> Result<()> {
     let macs = (n * n * n) as f64;
     println!(
         "device GEMM: {:.2}s wall, {} tiles, {} artifact calls, {} MAC/s through \
-         the functional PJRT path on this CPU host",
+         the functional {} backend on this CPU host",
         wall,
         stats.tiles,
         stats.artifact_calls,
         fmt_rate(macs / wall),
+        cfg.backend,
     );
     println!("coordinator marshal overhead: {:.2}%", stats.marshal_fraction * 100.0);
     // modeled hardware performance of the same call

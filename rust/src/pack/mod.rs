@@ -56,7 +56,7 @@ pub fn unpack_words(words: &[u64], prec: u32) -> ApFloat {
 ///
 /// `mant` is row-major `[batch, limbs8]` where `limbs8 = prec / 8` —
 /// little-endian 8-bit limbs widened into i32 lanes.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct PlaneBatch {
     pub sign: Vec<i32>,
     pub exp: Vec<i64>,
@@ -75,6 +75,20 @@ impl PlaneBatch {
             limbs8,
             prec,
         }
+    }
+
+    /// Re-shape in place to `batch` all-zero lanes at `prec`, reusing the
+    /// existing capacity — the allocation-free counterpart of
+    /// [`PlaneBatch::zeros`] for buffers that live across calls.
+    pub fn reset(&mut self, batch: usize, prec: u32) {
+        self.prec = prec;
+        self.limbs8 = (prec / 8) as usize;
+        self.sign.clear();
+        self.sign.resize(batch, 0);
+        self.exp.clear();
+        self.exp.resize(batch, ZERO_EXP);
+        self.mant.clear();
+        self.mant.resize(batch * self.limbs8, 0);
     }
 
     pub fn len(&self) -> usize {
@@ -99,16 +113,49 @@ impl PlaneBatch {
 
     /// Read slot `i` back into an ApFloat.
     pub fn get(&self, i: usize) -> ApFloat {
-        if self.exp[i] == ZERO_EXP {
-            return ApFloat::zero(self.prec);
+        let mut out = ApFloat::zero(self.prec.max(128));
+        self.get_into(i, &mut out);
+        out
+    }
+
+    /// Decode slot `i` into a caller-owned `ApFloat`, reusing its mantissa
+    /// buffer — the allocation-free decode the native backend and the tile
+    /// marshaling loops run per lane.
+    pub fn get_into(&self, i: usize, out: &mut ApFloat) {
+        out.prec = self.prec;
+        let n = (self.prec / 64) as usize;
+        if out.mant.len() != n {
+            out.mant.clear();
+            out.mant.resize(n, 0);
         }
+        if self.exp[i] == ZERO_EXP {
+            out.sign = false;
+            out.exp = ZERO_EXP;
+            out.mant.fill(0);
+            return;
+        }
+        out.mant.fill(0);
         let row = &self.mant[i * self.limbs8..(i + 1) * self.limbs8];
-        let mut mant = vec![0u64; (self.prec / 64) as usize];
         for (k, &limb) in row.iter().enumerate() {
             debug_assert!((0..256).contains(&limb), "non-canonical limb from artifact");
-            mant[k / 8] |= ((limb as u64) & 0xFF) << (8 * (k % 8));
+            out.mant[k / 8] |= ((limb as u64) & 0xFF) << (8 * (k % 8));
         }
-        ApFloat::from_parts(self.sign[i] != 0, self.exp[i], mant, self.prec)
+        if crate::bigint::is_zero(&out.mant) {
+            // canonicalize a zero mantissa exactly like ApFloat::from_parts
+            out.sign = false;
+            out.exp = ZERO_EXP;
+            return;
+        }
+        // Hard check (like ApFloat::from_parts): a backend returning a
+        // non-normalized mantissa must fail loudly at the decode boundary,
+        // not poison downstream arithmetic.  Cheap: bit_length looks at
+        // the top limb first, which is nonzero for every normalized value.
+        assert!(
+            crate::bigint::bit_length(&out.mant) == self.prec as usize,
+            "non-normalized mantissa from artifact"
+        );
+        out.sign = self.sign[i] != 0;
+        out.exp = self.exp[i];
     }
 
     pub fn from_slice(vals: &[ApFloat], prec: u32) -> Self {
@@ -121,6 +168,79 @@ impl PlaneBatch {
 
     pub fn to_vec(&self) -> Vec<ApFloat> {
         (0..self.len()).map(|i| self.get(i)).collect()
+    }
+}
+
+/// A 2-D matrix packed once into the plane layout (lane `r * cols + c`),
+/// the shared-operand form `Device::gemm` hands its workers: each launch
+/// encodes A/B/C into panels exactly once, and every tile extraction after
+/// that is a plane-row `memcpy` instead of a per-element `ApFloat`
+/// materialization.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlanePanel {
+    planes: PlaneBatch,
+    rows: usize,
+    cols: usize,
+}
+
+impl PlanePanel {
+    pub fn zeros(rows: usize, cols: usize, prec: u32) -> Self {
+        PlanePanel { planes: PlaneBatch::zeros(rows * cols, prec), rows, cols }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn prec(&self) -> u32 {
+        self.planes.prec
+    }
+
+    pub fn set(&mut self, r: usize, c: usize, v: &ApFloat) {
+        assert!(r < self.rows && c < self.cols);
+        self.planes.set(r * self.cols + c, v);
+    }
+
+    pub fn get(&self, r: usize, c: usize) -> ApFloat {
+        assert!(r < self.rows && c < self.cols);
+        self.planes.get(r * self.cols + c)
+    }
+
+    /// Extract a `tn x tm` tile at (r0, c0) into a caller-owned batch
+    /// (lane `i * tm + j`), zero-padding positions outside the panel —
+    /// APFP zero is absorbing for mul and identity for add, exactly how
+    /// the hardware pads partial tiles.  Pure plane-row copies: no
+    /// per-element decode, no allocation once `out` has capacity.
+    pub fn extract_tile_into(
+        &self,
+        r0: usize,
+        c0: usize,
+        tn: usize,
+        tm: usize,
+        out: &mut PlaneBatch,
+    ) {
+        out.reset(tn * tm, self.planes.prec);
+        if c0 >= self.cols {
+            return;
+        }
+        let w = tm.min(self.cols - c0);
+        let l8 = self.planes.limbs8;
+        for i in 0..tn {
+            let r = r0 + i;
+            if r >= self.rows {
+                break;
+            }
+            let s = r * self.cols + c0;
+            let d = i * tm;
+            out.sign[d..d + w].copy_from_slice(&self.planes.sign[s..s + w]);
+            out.exp[d..d + w].copy_from_slice(&self.planes.exp[s..s + w]);
+            out.mant[d * l8..(d + w) * l8]
+                .copy_from_slice(&self.planes.mant[s * l8..(s + w) * l8]);
+        }
     }
 }
 
@@ -208,6 +328,88 @@ mod tests {
                 assert_eq!(planes.to_vec(), vals);
             }
         });
+    }
+
+    #[test]
+    fn words_and_planes_pin_each_other() {
+        // Cross-representation consistency: the Fig. 1 word format and the
+        // limb-plane layout must agree on every value — including zero and
+        // negative-exponent lanes — at both evaluated widths.
+        testkit::check(100, |rng| {
+            for prec in [448u32, 960] {
+                let n = (prec / 64) as usize;
+                let mut neg_exp = rng.limbs(n);
+                neg_exp[n - 1] |= 1 << 63;
+                let vals = [
+                    rand_ap(rng, prec),
+                    ApFloat::zero(prec),
+                    ApFloat::from_parts(rng.bool(), -rng.range_i64(1, 1 << 40), neg_exp, prec),
+                ];
+                let planes = PlaneBatch::from_slice(&vals, prec);
+                let mut w = vec![0u64; words_for_bits(bits_for_prec(prec))];
+                for (i, v) in vals.iter().enumerate() {
+                    pack_words(v, &mut w);
+                    let from_words = unpack_words(&w, prec);
+                    let from_planes = planes.get(i);
+                    assert_eq!(&from_words, v, "words roundtrip lane {i} prec {prec}");
+                    assert_eq!(&from_planes, v, "planes roundtrip lane {i} prec {prec}");
+                    assert_eq!(from_words, from_planes, "formats disagree lane {i} prec {prec}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn get_into_reuses_buffers_across_lanes_and_widths() {
+        let mut rng = Rng::from_seed(77);
+        let vals = [rand_ap(&mut rng, 448), ApFloat::zero(448), rand_ap(&mut rng, 448)];
+        let planes = PlaneBatch::from_slice(&vals, 448);
+        let mut out = rand_ap(&mut rng, 448);
+        let ptr = out.limbs().as_ptr();
+        for (i, v) in vals.iter().enumerate() {
+            planes.get_into(i, &mut out);
+            assert_eq!(&out, v, "lane {i}");
+            assert_eq!(out.limbs().as_ptr(), ptr, "same-width decode must not reallocate");
+        }
+        // width change reallocates once, then decodes correctly
+        let wide = [rand_ap(&mut rng, 960)];
+        let wide_planes = PlaneBatch::from_slice(&wide, 960);
+        wide_planes.get_into(0, &mut out);
+        assert_eq!(out, wide[0]);
+    }
+
+    #[test]
+    fn panel_tile_extraction_matches_per_element_reads() {
+        let mut rng = Rng::from_seed(99);
+        let (rows, cols) = (7usize, 9usize);
+        let mut panel = PlanePanel::zeros(rows, cols, 448);
+        let mut vals = Vec::new();
+        for r in 0..rows {
+            for c in 0..cols {
+                let v = if (r + c) % 5 == 0 { ApFloat::zero(448) } else { rand_ap(&mut rng, 448) };
+                panel.set(r, c, &v);
+                vals.push(v);
+            }
+        }
+        let mut tile = PlaneBatch::default();
+        // interior, right-edge, bottom-edge, and fully-padded corners
+        for (r0, c0, tn, tm) in [(1, 2, 4, 4), (0, 6, 4, 4), (5, 0, 4, 4), (6, 8, 4, 4)] {
+            panel.extract_tile_into(r0, c0, tn, tm, &mut tile);
+            assert_eq!(tile.len(), tn * tm);
+            for i in 0..tn {
+                for j in 0..tm {
+                    let want = if r0 + i < rows && c0 + j < cols {
+                        vals[(r0 + i) * cols + (c0 + j)].clone()
+                    } else {
+                        ApFloat::zero(448)
+                    };
+                    assert_eq!(tile.get(i * tm + j), want, "tile ({r0},{c0}) elem ({i},{j})");
+                }
+            }
+        }
+        // out-of-range column origin yields an all-zero tile
+        panel.extract_tile_into(0, 20, 2, 2, &mut tile);
+        assert!(tile.to_vec().iter().all(|v| v.is_zero()));
     }
 
     #[test]

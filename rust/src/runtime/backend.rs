@@ -1,0 +1,355 @@
+//! Pluggable execution backends for the [`super::Runtime`].
+//!
+//! The paper's §IV-B interface is "plug-and-play": the host runtime does not
+//! care what executes a kernel as long as the results are bit-exact.  The
+//! reproduction mirrors that with a [`Backend`] trait over limb-plane
+//! batches and two implementations:
+//!
+//! * [`XlaBackend`] (here) — the AOT-artifact path through the PJRT CPU
+//!   client; offline builds compile against the stub in `runtime/xla.rs`
+//!   and fail cleanly at construction, exactly as before the refactor;
+//! * [`super::NativeBackend`] — in-process execution of the same artifact
+//!   semantics on the arena-backed softfloat pipeline, the bit-exact
+//!   software twin the device stack is validated against.
+//!
+//! Selection: `$APFP_BACKEND` (`native` | `xla`, default `native`), or
+//! explicitly through [`crate::config::ApfpConfig::backend`] /
+//! [`super::Runtime::with_backend`].
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+
+use super::manifest::ArtifactMeta;
+use super::xla;
+use crate::pack::PlaneBatch;
+use crate::softfloat::ZERO_EXP;
+
+/// Which execution backend a runtime (and the devices/workers above it)
+/// drives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// In-process softfloat execution of the artifact semantics.
+    Native,
+    /// AOT HLO artifacts through the PJRT CPU client (`xla` crate).
+    Xla,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Some(Self::Native),
+            "xla" | "pjrt" => Some(Self::Xla),
+            _ => None,
+        }
+    }
+
+    /// `$APFP_BACKEND`, defaulting to [`BackendKind::Native`] (which works
+    /// on a clean checkout with no artifacts).  Unrecognized values warn on
+    /// stderr and fall back to native rather than failing a whole run.
+    pub fn from_env() -> Self {
+        match std::env::var("APFP_BACKEND") {
+            Ok(v) => Self::parse(&v).unwrap_or_else(|| {
+                eprintln!("APFP_BACKEND={v:?} not recognized (native|xla); using native");
+                Self::Native
+            }),
+            Err(_) => Self::Native,
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::Native => "native",
+            Self::Xla => "xla",
+        })
+    }
+}
+
+/// One execution engine over limb-plane batches.
+///
+/// Implementations must be *bit-exact*: every output lane equals the
+/// corresponding RNDZ softfloat operator (`mul`/`add`/`mac`, and the
+/// sequential-K tile accumulation for GEMM) — the acceptance criterion the
+/// paper applies to its FPGA against MPFR, and what the integration tests
+/// assert against `baseline::gemm_serial`.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    /// Pre-compile / warm one artifact (no-op for backends with nothing to
+    /// compile).
+    fn warm(&self, _meta: &ArtifactMeta) -> Result<()> {
+        Ok(())
+    }
+
+    /// Element-wise binary stream operator (`mul` / `add` artifact kinds)
+    /// on arbitrary-length batches.
+    fn exec_stream_binop(
+        &self,
+        meta: &ArtifactMeta,
+        a: &PlaneBatch,
+        b: &PlaneBatch,
+    ) -> Result<PlaneBatch>;
+
+    /// Element-wise ternary MAC stream: `c + a*b` per lane.
+    fn exec_stream_mac(
+        &self,
+        meta: &ArtifactMeta,
+        c: &PlaneBatch,
+        a: &PlaneBatch,
+        b: &PlaneBatch,
+    ) -> Result<PlaneBatch>;
+
+    /// One GEMM tile K-step in place: `c += a @ b` at the artifact's fixed
+    /// shapes (A: `t_n x k_tile`, B: `k_tile x t_m`, C: `t_n x t_m`;
+    /// callers zero-pad partial tiles).  Updating `c` in place keeps the
+    /// accumulator tile "on chip" across K steps with no per-step
+    /// allocation.
+    fn exec_gemm_tile(
+        &self,
+        meta: &ArtifactMeta,
+        a: &PlaneBatch,
+        b: &PlaneBatch,
+        c: &mut PlaneBatch,
+    ) -> Result<()>;
+}
+
+// ---------------------------------------------------------------------------
+// The XLA/PJRT backend (the path the real hardware artifacts take).
+// ---------------------------------------------------------------------------
+
+/// PJRT execution of AOT HLO-text artifacts.  One instance is
+/// **thread-local by construction** (the `xla` crate's `PjRtClient` is
+/// `Rc`-based); the coordinator gives each compute-unit worker its own.
+pub struct XlaBackend {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl XlaBackend {
+    /// Create the PJRT CPU client over an artifact directory.  With the
+    /// offline stub this fails with a clear "backend unavailable" error and
+    /// the callers degrade exactly as before (workers report per job).
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(XlaBackend {
+            client,
+            dir: artifact_dir.to_path_buf(),
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Lazily compile + cache an executable (compile once, like programming
+    /// the bitstream before timing anything).
+    fn executable(&self, meta: &ArtifactMeta) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(&meta.name) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", meta.name))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(meta.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    // ---- plane <-> literal marshaling -------------------------------------
+
+    fn literals_for(&self, b: &PlaneBatch, dims: &[i64]) -> Result<[xla::Literal; 3]> {
+        let limbs = b.limbs8 as i64;
+        let mut mant_dims: Vec<i64> = dims.to_vec();
+        mant_dims.push(limbs);
+        let sign = xla::Literal::vec1(&b.sign)
+            .reshape(dims)
+            .map_err(|e| anyhow!("sign reshape: {e:?}"))?;
+        let exp = xla::Literal::vec1(&b.exp)
+            .reshape(dims)
+            .map_err(|e| anyhow!("exp reshape: {e:?}"))?;
+        let mant = xla::Literal::vec1(&b.mant)
+            .reshape(&mant_dims)
+            .map_err(|e| anyhow!("mant reshape: {e:?}"))?;
+        Ok([sign, exp, mant])
+    }
+
+    fn batch_from_literals(
+        &self,
+        parts: Vec<xla::Literal>,
+        len: usize,
+        limbs: usize,
+        prec: u32,
+    ) -> Result<PlaneBatch> {
+        anyhow::ensure!(parts.len() == 3, "artifact must return (sign, exp, mant)");
+        let sign = parts[0].to_vec::<i32>().map_err(|e| anyhow!("sign: {e:?}"))?;
+        let exp = parts[1].to_vec::<i64>().map_err(|e| anyhow!("exp: {e:?}"))?;
+        let mant = parts[2].to_vec::<i32>().map_err(|e| anyhow!("mant: {e:?}"))?;
+        if sign.len() != len || mant.len() != len * limbs {
+            return Err(anyhow!(
+                "artifact output shape mismatch: sign {} mant {} (expect {len} x {limbs})",
+                sign.len(),
+                mant.len()
+            ));
+        }
+        Ok(PlaneBatch { sign, exp, mant, limbs8: limbs, prec })
+    }
+
+    fn run(&self, meta: &ArtifactMeta, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(meta)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {}: {e:?}", meta.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {}: {e:?}", meta.name))?;
+        lit.to_tuple().map_err(|e| anyhow!("untupling {}: {e:?}", meta.name))
+    }
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn warm(&self, meta: &ArtifactMeta) -> Result<()> {
+        self.executable(meta).map(|_| ())
+    }
+
+    /// Arbitrary-length batches run in chunks of the artifact's fixed
+    /// `batch`, zero-padded at the tail.
+    fn exec_stream_binop(
+        &self,
+        meta: &ArtifactMeta,
+        a: &PlaneBatch,
+        b: &PlaneBatch,
+    ) -> Result<PlaneBatch> {
+        anyhow::ensure!(a.len() == b.len(), "stream operand length mismatch");
+        let batch = meta.batch;
+        let limbs = meta.limbs;
+        let prec = meta.prec();
+        let mut out = PlaneBatch::zeros(a.len(), prec);
+        let mut start = 0;
+        while start < a.len() {
+            let n = (a.len() - start).min(batch);
+            let pa = pad_slice(a, start, n, batch);
+            let pb = pad_slice(b, start, n, batch);
+            let ia = self.literals_for(&pa, &[batch as i64])?;
+            let ib = self.literals_for(&pb, &[batch as i64])?;
+            let inputs: Vec<xla::Literal> = ia.into_iter().chain(ib).collect();
+            let parts = self.run(meta, &inputs)?;
+            let chunk = self.batch_from_literals(parts, batch, limbs, prec)?;
+            copy_into(&mut out, start, &chunk, n);
+            start += n;
+        }
+        Ok(out)
+    }
+
+    fn exec_stream_mac(
+        &self,
+        meta: &ArtifactMeta,
+        c: &PlaneBatch,
+        a: &PlaneBatch,
+        b: &PlaneBatch,
+    ) -> Result<PlaneBatch> {
+        anyhow::ensure!(
+            a.len() == b.len() && a.len() == c.len(),
+            "stream operand length mismatch"
+        );
+        let batch = meta.batch;
+        let limbs = meta.limbs;
+        let prec = meta.prec();
+        let mut out = PlaneBatch::zeros(a.len(), prec);
+        let mut start = 0;
+        while start < a.len() {
+            let n = (a.len() - start).min(batch);
+            let pc = pad_slice(c, start, n, batch);
+            let pa = pad_slice(a, start, n, batch);
+            let pb = pad_slice(b, start, n, batch);
+            let ic = self.literals_for(&pc, &[batch as i64])?;
+            let ia = self.literals_for(&pa, &[batch as i64])?;
+            let ib = self.literals_for(&pb, &[batch as i64])?;
+            let inputs: Vec<xla::Literal> = ic.into_iter().chain(ia).chain(ib).collect();
+            let parts = self.run(meta, &inputs)?;
+            let chunk = self.batch_from_literals(parts, batch, limbs, prec)?;
+            copy_into(&mut out, start, &chunk, n);
+            start += n;
+        }
+        Ok(out)
+    }
+
+    fn exec_gemm_tile(
+        &self,
+        meta: &ArtifactMeta,
+        a: &PlaneBatch,
+        b: &PlaneBatch,
+        c: &mut PlaneBatch,
+    ) -> Result<()> {
+        let (tn, tm, kt) = (meta.t_n, meta.t_m, meta.k_tile);
+        let ia = self.literals_for(a, &[tn as i64, kt as i64])?;
+        let ib = self.literals_for(b, &[kt as i64, tm as i64])?;
+        let ic = self.literals_for(c, &[tn as i64, tm as i64])?;
+        let inputs: Vec<xla::Literal> = ia.into_iter().chain(ib).chain(ic).collect();
+        let parts = self.run(meta, &inputs)?;
+        *c = self.batch_from_literals(parts, tn * tm, meta.limbs, meta.prec())?;
+        Ok(())
+    }
+}
+
+/// Extract `n` rows starting at `start`, zero-padded to `batch` rows.
+/// Padding rows are APFP zero (absorbing for mul, identity for add), so
+/// padded lanes never contaminate real outputs.
+fn pad_slice(src: &PlaneBatch, start: usize, n: usize, batch: usize) -> PlaneBatch {
+    let mut out = PlaneBatch::zeros(batch, src.prec);
+    out.sign[..n].copy_from_slice(&src.sign[start..start + n]);
+    out.exp[..n].copy_from_slice(&src.exp[start..start + n]);
+    out.mant[..n * src.limbs8]
+        .copy_from_slice(&src.mant[start * src.limbs8..(start + n) * src.limbs8]);
+    for e in out.exp[n..].iter_mut() {
+        *e = ZERO_EXP;
+    }
+    out
+}
+
+fn copy_into(dst: &mut PlaneBatch, start: usize, src: &PlaneBatch, n: usize) {
+    dst.sign[start..start + n].copy_from_slice(&src.sign[..n]);
+    dst.exp[start..start + n].copy_from_slice(&src.exp[..n]);
+    dst.mant[start * dst.limbs8..(start + n) * dst.limbs8]
+        .copy_from_slice(&src.mant[..n * src.limbs8]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parses_both_names_and_env_synonyms() {
+        assert_eq!(BackendKind::parse("native"), Some(BackendKind::Native));
+        assert_eq!(BackendKind::parse("NATIVE"), Some(BackendKind::Native));
+        assert_eq!(BackendKind::parse("xla"), Some(BackendKind::Xla));
+        assert_eq!(BackendKind::parse("pjrt"), Some(BackendKind::Xla));
+        assert_eq!(BackendKind::parse("tpu"), None);
+        assert_eq!(BackendKind::Native.to_string(), "native");
+        assert_eq!(BackendKind::Xla.to_string(), "xla");
+    }
+
+    #[test]
+    fn offline_xla_backend_fails_at_construction() {
+        // With the offline stub the client cannot be built; the error is
+        // what workers degrade on.
+        let err = match XlaBackend::new(Path::new("/nonexistent")) {
+            Err(e) => format!("{e:#}"),
+            Ok(_) => return, // a real xla crate is linked in: nothing to assert
+        };
+        assert!(err.contains("PJRT"), "unexpected error: {err}");
+    }
+}

@@ -63,6 +63,50 @@ impl ArtifactMeta {
     }
 }
 
+/// The in-memory manifest the native backend synthesizes when no artifact
+/// directory exists: the stream operators plus an 8x8x8 GEMM tile at one
+/// packed width.  Names match what `make artifacts` would emit
+/// (`mul_512`, ..., `gemm_512_t8`), so tests and callers address builtin
+/// and on-disk artifacts identically.
+pub fn builtin(bits: u32) -> Vec<ArtifactMeta> {
+    assert!(bits % 512 == 0 && bits >= 512, "Fig. 1 packing");
+    let limbs = ((bits - 64) / 8) as usize;
+    let stream = |prefix: &str, kind: ArtifactKind| ArtifactMeta {
+        name: format!("{prefix}_{bits}"),
+        kind,
+        bits,
+        batch: 64,
+        t_n: 0,
+        t_m: 0,
+        k_tile: 0,
+        limbs,
+        file: "<builtin>".to_string(),
+    };
+    vec![
+        stream("mul", ArtifactKind::Mul),
+        stream("add", ArtifactKind::Add),
+        stream("mac", ArtifactKind::Mac),
+        ArtifactMeta {
+            name: format!("gemm_{bits}_t8"),
+            kind: ArtifactKind::Gemm,
+            bits,
+            batch: 0,
+            t_n: 8,
+            t_m: 8,
+            k_tile: 8,
+            limbs,
+            file: "<builtin>".to_string(),
+        },
+    ]
+}
+
+/// Builtin manifests for both packed widths the paper evaluates.
+pub fn builtin_all() -> Vec<ArtifactMeta> {
+    let mut all = builtin(512);
+    all.extend(builtin(1024));
+    all
+}
+
 /// Parse `<dir>/manifest.txt`.
 pub fn load(dir: &Path) -> Result<Vec<ArtifactMeta>, ManifestError> {
     let path = dir.join("manifest.txt");
@@ -98,8 +142,16 @@ pub fn load(dir: &Path) -> Result<Vec<ArtifactMeta>, ManifestError> {
 mod tests {
     use super::*;
 
+    /// Unique per-call temp dir: two manifests of equal length must not
+    /// collide (keying on `content.len()` raced under `cargo test`).
     fn write_manifest(content: &str) -> PathBuf {
-        let dir = std::env::temp_dir().join(format!("apfp_manifest_{:x}", content.len()));
+        use std::sync::atomic::{AtomicU32, Ordering};
+        static DIR_SEQ: AtomicU32 = AtomicU32::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "apfp_manifest_{}_{}",
+            std::process::id(),
+            DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
         std::fs::create_dir_all(&dir).unwrap();
         std::fs::write(dir.join("manifest.txt"), content).unwrap();
         dir
@@ -127,6 +179,24 @@ mod tests {
         assert!(matches!(load(&dir), Err(ManifestError::Malformed { line: 1, .. })));
         let dir = write_manifest("x unknownkind 512 64 0 0 0 56 f.hlo\n");
         assert!(matches!(load(&dir), Err(ManifestError::Malformed { .. })));
+    }
+
+    #[test]
+    fn builtin_manifests_are_well_formed() {
+        for bits in [512u32, 1024] {
+            let m = builtin(bits);
+            assert_eq!(m.len(), 4);
+            for kind in [ArtifactKind::Mul, ArtifactKind::Add, ArtifactKind::Mac] {
+                let a = m.iter().find(|a| a.kind == kind).unwrap();
+                assert_eq!(a.bits, bits);
+                assert!(a.batch > 0, "stream artifacts have a fixed batch");
+                assert_eq!(a.prec(), bits - 64);
+            }
+            let g = m.iter().find(|a| a.kind == ArtifactKind::Gemm).unwrap();
+            assert_eq!((g.t_n, g.t_m, g.k_tile), (8, 8, 8));
+            assert_eq!(g.name, format!("gemm_{bits}_t8"));
+        }
+        assert_eq!(builtin_all().len(), 8);
     }
 
     #[test]

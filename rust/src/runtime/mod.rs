@@ -1,50 +1,86 @@
-//! PJRT execution runtime: load AOT artifacts (HLO text), compile them on
-//! the PJRT CPU client, and execute them on limb-plane batches.
+//! Execution runtime: resolve artifacts from a manifest and run them on a
+//! pluggable [`Backend`] over limb-plane batches.
 //!
-//! This is the only place the `xla` crate is touched — in offline builds
-//! via the [`xla`] stub module, which compiles the same call sites but
-//! fails at client construction (workers degrade gracefully; integration
-//! tests skip without artifacts).  One `Runtime` is **thread-local by
-//! construction** (the crate's `PjRtClient` is `Rc`-based); the coordinator
-//! gives each compute-unit worker its own `Runtime`, which is also the
-//! honest analogy: each CU on the FPGA is its own replica of the circuit.
+//! Two backends implement the same artifact semantics (§IV-B's
+//! "plug-and-play" promise):
+//!
+//! * [`NativeBackend`] (`APFP_BACKEND=native`, the default) executes in
+//!   process on the arena-backed softfloat pipeline, synthesizing the
+//!   builtin manifest when no artifact directory exists — so the whole
+//!   device stack runs end to end on a clean checkout, bit-identically to
+//!   the software baseline;
+//! * [`backend::XlaBackend`] (`APFP_BACKEND=xla`) loads AOT artifacts (HLO
+//!   text), compiles them on the PJRT CPU client and executes them.  In
+//!   offline builds it compiles against the [`xla`] stub module and fails
+//!   at client construction (workers degrade gracefully).
+//!
+//! One `Runtime` is **thread-local by construction** (the `xla` crate's
+//! `PjRtClient` is `Rc`-based, and the native backend keeps a private
+//! arena); the coordinator gives each compute-unit worker its own
+//! `Runtime`, which is also the honest analogy: each CU on the FPGA is its
+//! own replica of the circuit.
 //!
 //! Python never runs here: artifacts were lowered once by `make artifacts`
 //! (see python/compile/aot.py and the HLO-text-vs-proto note there).
 
+pub mod backend;
 pub mod manifest;
+mod native;
 mod xla;
 
-use std::cell::RefCell;
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
 
 use anyhow::{anyhow, Context, Result};
 
+pub use backend::{Backend, BackendKind};
 pub use manifest::{ArtifactKind, ArtifactMeta};
+pub use native::NativeBackend;
 
 use crate::pack::PlaneBatch;
-use crate::softfloat::ZERO_EXP;
 
 pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
+    backend: Box<dyn Backend>,
     metas: Vec<ArtifactMeta>,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+/// Load artifact metadata for a backend: the on-disk manifest when present,
+/// else (native only, and only when the manifest is genuinely *absent*) the
+/// builtin in-memory manifest.  A manifest that exists but cannot be read
+/// (permissions, it's a directory, ...) stays a hard error on every
+/// backend — silently substituting builtin tile geometry for a configured
+/// one would be worse than failing.  The XLA path cannot run without HLO
+/// files, so a missing manifest stays a hard error there too.
+pub fn load_metas(artifact_dir: &Path, kind: BackendKind) -> Result<Vec<ArtifactMeta>> {
+    match manifest::load(artifact_dir) {
+        Ok(m) => Ok(m),
+        Err(manifest::ManifestError::Io { ref source, .. })
+            if kind == BackendKind::Native && source.kind() == std::io::ErrorKind::NotFound =>
+        {
+            Ok(manifest::builtin_all())
+        }
+        Err(e) => Err(e).context("loading artifact manifest"),
+    }
 }
 
 impl Runtime {
-    /// Create a CPU-PJRT runtime over an artifact directory.
+    /// Create a runtime over an artifact directory on the `$APFP_BACKEND`
+    /// backend (default: native, which works without any artifacts).
     pub fn new(artifact_dir: &Path) -> Result<Self> {
-        let metas = manifest::load(artifact_dir).context("loading artifact manifest")?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
-        Ok(Runtime {
-            client,
-            dir: artifact_dir.to_path_buf(),
-            metas,
-            cache: RefCell::new(HashMap::new()),
-        })
+        Self::with_backend(artifact_dir, BackendKind::from_env())
+    }
+
+    /// Create a runtime on an explicit backend.
+    pub fn with_backend(artifact_dir: &Path, kind: BackendKind) -> Result<Self> {
+        let metas = load_metas(artifact_dir, kind)?;
+        let backend: Box<dyn Backend> = match kind {
+            BackendKind::Native => Box::new(NativeBackend::new()),
+            BackendKind::Xla => Box::new(backend::XlaBackend::new(artifact_dir)?),
+        };
+        Ok(Runtime { backend, metas })
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     pub fn artifacts(&self) -> &[ArtifactMeta] {
@@ -68,116 +104,28 @@ impl Runtime {
             .ok_or_else(|| anyhow!("no {kind:?} artifact for {bits} bits"))
     }
 
-    /// Lazily compile + cache an executable.
-    fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.borrow().get(name) {
-            return Ok(e.clone());
-        }
-        let meta = self.meta(name)?;
-        let path = self.dir.join(&meta.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-        let exe = Rc::new(exe);
-        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
-        Ok(exe)
-    }
-
-    /// Warm the executable cache (compile everything needed up front, like
-    /// programming the bitstream before timing anything).
+    /// Warm the backend (compile everything needed up front, like
+    /// programming the bitstream before timing anything; a no-op on the
+    /// native backend).
     pub fn warm(&self, names: &[&str]) -> Result<()> {
         for n in names {
-            self.executable(n)?;
+            self.backend.warm(self.meta(n)?)?;
         }
         Ok(())
     }
 
-    // ---- plane <-> literal marshaling -------------------------------------
-
-    fn literals_for(&self, b: &PlaneBatch, dims: &[i64]) -> Result<[xla::Literal; 3]> {
-        let limbs = b.limbs8 as i64;
-        let mut mant_dims: Vec<i64> = dims.to_vec();
-        mant_dims.push(limbs);
-        let sign = xla::Literal::vec1(&b.sign)
-            .reshape(dims)
-            .map_err(|e| anyhow!("sign reshape: {e:?}"))?;
-        let exp = xla::Literal::vec1(&b.exp)
-            .reshape(dims)
-            .map_err(|e| anyhow!("exp reshape: {e:?}"))?;
-        let mant = xla::Literal::vec1(&b.mant)
-            .reshape(&mant_dims)
-            .map_err(|e| anyhow!("mant reshape: {e:?}"))?;
-        Ok([sign, exp, mant])
-    }
-
-    fn batch_from_literals(
-        &self,
-        parts: Vec<xla::Literal>,
-        len: usize,
-        limbs: usize,
-        prec: u32,
-    ) -> Result<PlaneBatch> {
-        anyhow::ensure!(parts.len() == 3, "artifact must return (sign, exp, mant)");
-        let sign = parts[0].to_vec::<i32>().map_err(|e| anyhow!("sign: {e:?}"))?;
-        let exp = parts[1].to_vec::<i64>().map_err(|e| anyhow!("exp: {e:?}"))?;
-        let mant = parts[2].to_vec::<i32>().map_err(|e| anyhow!("mant: {e:?}"))?;
-        if sign.len() != len || mant.len() != len * limbs {
-            return Err(anyhow!(
-                "artifact output shape mismatch: sign {} mant {} (expect {len} x {limbs})",
-                sign.len(),
-                mant.len()
-            ));
-        }
-        Ok(PlaneBatch { sign, exp, mant, limbs8: limbs, prec })
-    }
-
-    fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let exe = self.executable(name)?;
-        let result = exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
-        lit.to_tuple().map_err(|e| anyhow!("untupling {name}: {e:?}"))
-    }
-
     // ---- stream operators (mul/add/mac) ------------------------------------
 
-    /// Execute a binary stream artifact on arbitrary-length batches
-    /// (chunks + zero padding to the artifact's fixed batch).
+    /// Execute a binary stream artifact on arbitrary-length batches.
     pub fn exec_stream_binop(
         &self,
         name: &str,
         a: &PlaneBatch,
         b: &PlaneBatch,
     ) -> Result<PlaneBatch> {
-        let meta = self.meta(name)?.clone();
+        let meta = self.meta(name)?;
         anyhow::ensure!(a.len() == b.len(), "stream operand length mismatch");
-        let batch = meta.batch;
-        let limbs = meta.limbs;
-        let prec = meta.prec();
-        let mut out = PlaneBatch::zeros(a.len(), prec);
-        let mut start = 0;
-        while start < a.len() {
-            let n = (a.len() - start).min(batch);
-            let pa = pad_slice(a, start, n, batch);
-            let pb = pad_slice(b, start, n, batch);
-            let ia = self.literals_for(&pa, &[batch as i64])?;
-            let ib = self.literals_for(&pb, &[batch as i64])?;
-            let inputs: Vec<xla::Literal> = ia.into_iter().chain(ib).collect();
-            let parts = self.run(&meta.name, &inputs)?;
-            let chunk = self.batch_from_literals(parts, batch, limbs, prec)?;
-            copy_into(&mut out, start, &chunk, n);
-            start += n;
-        }
-        Ok(out)
+        self.backend.exec_stream_binop(meta, a, b)
     }
 
     /// Execute the ternary MAC stream artifact: c + a*b element-wise.
@@ -188,75 +136,30 @@ impl Runtime {
         a: &PlaneBatch,
         b: &PlaneBatch,
     ) -> Result<PlaneBatch> {
-        let meta = self.meta(name)?.clone();
+        let meta = self.meta(name)?;
         anyhow::ensure!(a.len() == b.len() && a.len() == c.len());
-        let batch = meta.batch;
-        let limbs = meta.limbs;
-        let prec = meta.prec();
-        let mut out = PlaneBatch::zeros(a.len(), prec);
-        let mut start = 0;
-        while start < a.len() {
-            let n = (a.len() - start).min(batch);
-            let pc = pad_slice(c, start, n, batch);
-            let pa = pad_slice(a, start, n, batch);
-            let pb = pad_slice(b, start, n, batch);
-            let ic = self.literals_for(&pc, &[batch as i64])?;
-            let ia = self.literals_for(&pa, &[batch as i64])?;
-            let ib = self.literals_for(&pb, &[batch as i64])?;
-            let inputs: Vec<xla::Literal> = ic.into_iter().chain(ia).chain(ib).collect();
-            let parts = self.run(&meta.name, &inputs)?;
-            let chunk = self.batch_from_literals(parts, batch, limbs, prec)?;
-            copy_into(&mut out, start, &chunk, n);
-            start += n;
-        }
-        Ok(out)
+        self.backend.exec_stream_mac(meta, c, a, b)
     }
 
     // ---- GEMM tile (the compute-unit datapath) -----------------------------
 
-    /// One tile update: C += A @ B with A: (t_n, k_tile), B: (k_tile, t_m),
-    /// C: (t_n, t_m), all exactly the artifact's shapes (callers pad).
+    /// One tile update in place: C += A @ B with A: (t_n, k_tile),
+    /// B: (k_tile, t_m), C: (t_n, t_m), all exactly the artifact's shapes
+    /// (callers pad partial tiles; C stays "on chip" across K steps).
     pub fn exec_gemm_tile(
         &self,
         name: &str,
         a: &PlaneBatch,
         b: &PlaneBatch,
-        c: &PlaneBatch,
-    ) -> Result<PlaneBatch> {
-        let meta = self.meta(name)?.clone();
+        c: &mut PlaneBatch,
+    ) -> Result<()> {
+        let meta = self.meta(name)?;
         let (tn, tm, kt) = (meta.t_n, meta.t_m, meta.k_tile);
         anyhow::ensure!(a.len() == tn * kt, "A tile shape");
         anyhow::ensure!(b.len() == kt * tm, "B tile shape");
         anyhow::ensure!(c.len() == tn * tm, "C tile shape");
-        let ia = self.literals_for(a, &[tn as i64, kt as i64])?;
-        let ib = self.literals_for(b, &[kt as i64, tm as i64])?;
-        let ic = self.literals_for(c, &[tn as i64, tm as i64])?;
-        let inputs: Vec<xla::Literal> = ia.into_iter().chain(ib).chain(ic).collect();
-        let parts = self.run(&meta.name, &inputs)?;
-        self.batch_from_literals(parts, tn * tm, meta.limbs, meta.prec())
+        self.backend.exec_gemm_tile(meta, a, b, c)
     }
-}
-
-/// Extract `n` rows starting at `start`, zero-padded to `batch` rows.
-/// Padding rows are APFP zero (absorbing for mul, identity for add), so
-/// padded lanes never contaminate real outputs.
-fn pad_slice(src: &PlaneBatch, start: usize, n: usize, batch: usize) -> PlaneBatch {
-    let mut out = PlaneBatch::zeros(batch, src.prec);
-    out.sign[..n].copy_from_slice(&src.sign[start..start + n]);
-    out.exp[..n].copy_from_slice(&src.exp[start..start + n]);
-    out.mant[..n * src.limbs8]
-        .copy_from_slice(&src.mant[start * src.limbs8..(start + n) * src.limbs8]);
-    for e in out.exp[n..].iter_mut() {
-        *e = ZERO_EXP;
-    }
-    out
-}
-
-fn copy_into(dst: &mut PlaneBatch, start: usize, src: &PlaneBatch, n: usize) {
-    dst.sign[start..start + n].copy_from_slice(&src.sign[..n]);
-    dst.exp[start..start + n].copy_from_slice(&src.exp[..n]);
-    dst.mant[start * dst.limbs8..(start + n) * dst.limbs8]
-        .copy_from_slice(&src.mant[..n * src.limbs8]);
 }
 
 /// Default artifact directory: $APFP_ARTIFACTS or ./artifacts.
@@ -264,4 +167,73 @@ pub fn default_artifact_dir() -> PathBuf {
     std::env::var_os("APFP_ARTIFACTS")
         .map(PathBuf::from)
         .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_runtime_works_without_any_artifact_dir() {
+        let dir = std::env::temp_dir().join("apfp_rt_no_artifacts/definitely/absent");
+        let rt = Runtime::with_backend(&dir, BackendKind::Native).unwrap();
+        assert_eq!(rt.backend_name(), "native");
+        assert_eq!(rt.artifacts().len(), 8, "builtin manifest covers both widths");
+        for bits in [512u32, 1024] {
+            for kind in [ArtifactKind::Mul, ArtifactKind::Add, ArtifactKind::Mac, ArtifactKind::Gemm]
+            {
+                assert!(rt.find(kind.clone(), bits).is_ok(), "{kind:?} at {bits}");
+            }
+        }
+        // warm is a no-op but must resolve names
+        rt.warm(&["mul_512", "gemm_1024_t8"]).unwrap();
+        assert!(rt.warm(&["nope"]).is_err());
+    }
+
+    #[test]
+    fn xla_runtime_without_manifest_is_a_manifest_error() {
+        let dir = std::env::temp_dir().join("apfp_rt_xla_no_manifest");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = match Runtime::with_backend(&dir, BackendKind::Xla) {
+            Err(e) => format!("{e:#}"),
+            Ok(_) => panic!("xla runtime must not fabricate a manifest"),
+        };
+        assert!(err.contains("manifest"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn on_disk_manifest_overrides_builtin_for_native() {
+        let dir = std::env::temp_dir().join(format!("apfp_rt_disk_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "gemm_512_t4 gemm 512 0 4 4 4 56 gemm_512_t4.hlo.txt\n",
+        )
+        .unwrap();
+        let rt = Runtime::with_backend(&dir, BackendKind::Native).unwrap();
+        assert_eq!(rt.artifacts().len(), 1);
+        let m = rt.find(ArtifactKind::Gemm, 512).unwrap();
+        assert_eq!((m.t_n, m.t_m, m.k_tile), (4, 4, 4));
+        // and the native backend honors the on-disk tile geometry
+        use crate::pack::PlaneBatch;
+        use crate::testkit::{rand_ap, Rng};
+        let mut rng = Rng::from_seed(11);
+        let vals = |n: usize, rng: &mut Rng| -> Vec<crate::softfloat::ApFloat> {
+            (0..n).map(|_| rand_ap(rng, 448, 40)).collect()
+        };
+        let (av, bv, cv) = (vals(16, &mut rng), vals(16, &mut rng), vals(16, &mut rng));
+        let (a, b) = (PlaneBatch::from_slice(&av, 448), PlaneBatch::from_slice(&bv, 448));
+        let mut c = PlaneBatch::from_slice(&cv, 448);
+        rt.exec_gemm_tile("gemm_512_t4", &a, &b, &mut c).unwrap();
+        for i in 0..4 {
+            for j in 0..4 {
+                let mut acc = cv[i * 4 + j].clone();
+                for k in 0..4 {
+                    acc = acc.mac(&av[i * 4 + k], &bv[k * 4 + j]);
+                }
+                assert_eq!(c.get(i * 4 + j), acc, "({i},{j})");
+            }
+        }
+    }
 }

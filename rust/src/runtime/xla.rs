@@ -2,15 +2,16 @@
 //!
 //! The real PJRT CPU client comes from the `xla` crate (xla-rs), which
 //! needs a vendored libxla and is unavailable in offline builds.  This shim
-//! exposes exactly the API surface `runtime::Runtime` touches so the whole
-//! coordinator stack compiles and tests; constructing the client fails with
-//! a clear error, which the compute-unit workers already degrade on (they
-//! report "runtime unavailable" per job instead of panicking).  Integration
-//! tests gate on artifacts being present, so a clean checkout skips them.
+//! exposes exactly the API surface `runtime::backend::XlaBackend` touches
+//! so the whole coordinator stack compiles and tests; constructing the
+//! client fails with a clear error, which the compute-unit workers already
+//! degrade on (they report "runtime unavailable" per job instead of
+//! panicking).  A clean checkout runs everything on the native backend
+//! instead (`runtime::NativeBackend`), which needs none of this.
 //!
 //! To light up the real backend, delete this module, add the `xla` crate to
-//! Cargo.toml, and restore `use xla;` in `runtime/mod.rs` — the call sites
-//! are written against the real crate's API.
+//! Cargo.toml, and replace `use super::xla;` in `runtime/backend.rs` with
+//! `use xla;` — the call sites are written against the real crate's API.
 
 #![allow(dead_code)]
 

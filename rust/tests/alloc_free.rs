@@ -13,7 +13,10 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use apfp::baseline::{gemm_into, GemmScratch};
 use apfp::bigint::Scratch;
 use apfp::coordinator::Matrix;
+use apfp::pack::PlaneBatch;
+use apfp::runtime::{manifest, ArtifactKind, Backend, NativeBackend};
 use apfp::softfloat;
+use apfp::softfloat::ApFloat;
 use apfp::testkit::{rand_ap, Rng};
 
 struct CountingAlloc;
@@ -160,5 +163,48 @@ fn mac_pipeline_is_allocation_free() {
             want = apfp::baseline::gemm_serial(&a, &b, &want);
         }
         assert_eq!(out, want, "warm tile accumulation must stay correct");
+    }
+
+    // --- steady-state NativeBackend GEMM tile: the device datapath --------
+    // The native backend decodes planes into reused slots and accumulates
+    // through the arena, so a warm exec_gemm_tile loop — the compute-unit
+    // worker's K-step — must not touch the allocator (the same standard
+    // the host GEMM meets above).
+    for bits in [512u32, 1024] {
+        let meta = manifest::builtin(bits)
+            .into_iter()
+            .find(|m| m.kind == ArtifactKind::Gemm)
+            .expect("builtin gemm artifact");
+        let prec = meta.prec();
+        let (tn, tm, kt) = (meta.t_n, meta.t_m, meta.k_tile);
+        let mut rng = Rng::from_seed(0xD00D);
+        let batch = |n: usize, rng: &mut Rng| -> (Vec<ApFloat>, PlaneBatch) {
+            let vals: Vec<ApFloat> = (0..n).map(|_| rand_ap(rng, prec, 30)).collect();
+            let planes = PlaneBatch::from_slice(&vals, prec);
+            (vals, planes)
+        };
+        let (av, a) = batch(tn * kt, &mut rng);
+        let (bv, b) = batch(kt * tm, &mut rng);
+        let (cv, mut c) = batch(tn * tm, &mut rng);
+        let backend = NativeBackend::new();
+        backend.exec_gemm_tile(&meta, &a, &b, &mut c).unwrap(); // warm slots + arena
+        let delta = min_alloc_delta(3, || {
+            backend.exec_gemm_tile(&meta, &a, &b, &mut c).unwrap();
+        });
+        assert_eq!(delta, 0, "native exec_gemm_tile allocated in steady state at {bits} bits");
+        // the warm path stays bit-exact: replay warmup + measured rounds
+        // through the softfloat mac chain
+        let rounds = 1 + 3;
+        for i in 0..tn {
+            for j in 0..tm {
+                let mut acc = cv[i * tm + j].clone();
+                for _ in 0..rounds {
+                    for k in 0..kt {
+                        acc = acc.mac(&av[i * kt + k], &bv[k * tm + j]);
+                    }
+                }
+                assert_eq!(c.get(i * tm + j), acc, "warm native tile ({i},{j}) at {bits} bits");
+            }
+        }
     }
 }

@@ -1,21 +1,36 @@
-//! End-to-end coordinator test: multi-CU GEMM through PJRT artifacts,
-//! bit-compared against the software baseline (the paper's verification
-//! methodology: accelerator output vs MPFR software computation).
+//! End-to-end coordinator test: multi-CU GEMM through the pluggable
+//! backend, bit-compared against the software baseline (the paper's
+//! verification methodology: accelerator output vs MPFR software
+//! computation).
+//!
+//! On the default native backend the full device stack — scheduler
+//! partition, bounded worker queues, tile K-accumulation, metrics — runs
+//! on every checkout, with no `artifacts/` directory.  `APFP_BACKEND=xla`
+//! drives the same tests through PJRT artifacts instead (skipping when
+//! that runtime cannot come up).
 
 use apfp::baseline;
 use apfp::config::ApfpConfig;
 use apfp::coordinator::{Device, Matrix};
+use apfp::runtime::BackendKind;
 
 fn device(cus: usize, bits: u32) -> Option<Device> {
     let dir = apfp::runtime::default_artifact_dir();
-    if !dir.join("manifest.txt").exists() {
-        eprintln!("skipped: no artifacts");
-        return None;
-    }
     let mut cfg = ApfpConfig { compute_units: cus, bits, ..Default::default() };
     cfg.tile_n = 16;
     cfg.tile_m = 16;
-    Some(Device::new(cfg, &dir).unwrap())
+    let native = cfg.backend == BackendKind::Native;
+    match Device::new(cfg, &dir) {
+        Ok(dev) => Some(dev),
+        // the xla backend legitimately skips without artifacts; the native
+        // backend must come up on every checkout — a failure there is a
+        // real regression, never a skip
+        Err(e) if !native => {
+            eprintln!("skipped: {e:#}");
+            None
+        }
+        Err(e) => panic!("native device must open on a clean checkout: {e:#}"),
+    }
 }
 
 #[test]
@@ -33,7 +48,8 @@ fn gemm_single_cu_bit_exact() {
 #[test]
 fn gemm_multi_cu_bit_exact_and_partitioned() {
     let Some(dev) = device(3, 512) else { return };
-    // deliberately awkward sizes: not multiples of the tile or CU count
+    // deliberately awkward sizes: not multiples of the tile or CU count,
+    // so band ends fall mid-tile (the clipped-tile write path)
     let a = Matrix::random(37, 19, 448, 20, 40);
     let b = Matrix::random(19, 23, 448, 21, 40);
     let c = Matrix::random(37, 23, 448, 22, 40);
@@ -45,7 +61,7 @@ fn gemm_multi_cu_bit_exact_and_partitioned() {
 }
 
 #[test]
-fn gemm_repeated_calls_reuse_compiled_artifacts() {
+fn gemm_repeated_calls_accumulate_and_reuse_the_backend() {
     let Some(dev) = device(2, 512) else { return };
     let a = Matrix::random(16, 16, 448, 30, 20);
     let b = Matrix::random(16, 16, 448, 31, 20);
@@ -59,8 +75,12 @@ fn gemm_repeated_calls_reuse_compiled_artifacts() {
     // C accumulates (beta = 1): second call adds A*B again
     let want = baseline::gemm_serial(&a, &b, &c1);
     assert_eq!(c2, want);
-    // compile happened once: the second call must be much faster
-    assert!(second < first, "no executable reuse: {first:?} -> {second:?}");
+    // On the xla path the compile happens once, so the second call must be
+    // much faster.  (Native has nothing to compile; both calls are warm
+    // and the timing comparison would be noise.)
+    if dev.config().backend == BackendKind::Xla {
+        assert!(second < first, "no executable reuse: {first:?} -> {second:?}");
+    }
 }
 
 #[test]
@@ -68,6 +88,7 @@ fn stream_ops_through_device() {
     let Some(dev) = device(2, 512) else { return };
     let a = Matrix::random(1, 90, 448, 40, 100);
     let b = Matrix::random(1, 90, 448, 41, 100);
+    let c = Matrix::random(1, 90, 448, 42, 100);
     let got = dev.mul_stream(a.values(), b.values()).unwrap();
     for (i, g) in got.iter().enumerate() {
         assert_eq!(*g, a.values()[i].mul(&b.values()[i]), "mul lane {i}");
@@ -75,6 +96,10 @@ fn stream_ops_through_device() {
     let got = dev.add_stream(a.values(), b.values()).unwrap();
     for (i, g) in got.iter().enumerate() {
         assert_eq!(*g, a.values()[i].add(&b.values()[i]), "add lane {i}");
+    }
+    let got = dev.mac_stream(c.values(), a.values(), b.values()).unwrap();
+    for (i, g) in got.iter().enumerate() {
+        assert_eq!(*g, c.values()[i].mac(&a.values()[i], &b.values()[i]), "mac lane {i}");
     }
 }
 
@@ -89,22 +114,48 @@ fn gemm_1024_bits() {
 }
 
 #[test]
-fn device_new_without_manifest_errors_cleanly() {
-    // The artifact-missing path must be a clean Err (callers and the
-    // integration tests skip on it), never a panic.
+fn native_device_runs_end_to_end_without_artifacts() {
+    // The tentpole acceptance criterion: on a clean checkout with no
+    // artifacts/ and no xla crate, the native backend lights up the whole
+    // device stack and stays bit-identical to the softfloat baseline.
+    let dir = std::env::temp_dir().join("apfp_native_no_artifacts/none");
+    let cfg = ApfpConfig {
+        backend: BackendKind::Native,
+        compute_units: 2,
+        ..Default::default()
+    };
+    let dev = Device::new(cfg, &dir).unwrap();
+    let a = Matrix::random(13, 11, 448, 60, 40);
+    let b = Matrix::random(11, 17, 448, 61, 40);
+    let c = Matrix::random(13, 17, 448, 62, 40);
+    let (got, stats) = dev.gemm(&a, &b, &c).unwrap();
+    assert_eq!(got, baseline::gemm_serial(&a, &b, &c));
+    assert!(stats.tiles > 0 && stats.artifact_calls >= stats.tiles && stats.macs > 0);
+    let got = dev.mul_stream(a.row(0), a.row(1)).unwrap();
+    for (i, g) in got.iter().enumerate() {
+        assert_eq!(*g, a.row(0)[i].mul(&a.row(1)[i]), "mul lane {i}");
+    }
+}
+
+#[test]
+fn device_new_without_manifest_errors_cleanly_on_xla() {
+    // The artifact-missing path must stay a clean Err on the xla backend
+    // (it cannot run without HLO files), never a panic — and never a
+    // silently fabricated manifest.
     let dir = std::env::temp_dir().join("apfp_no_artifacts_here");
     let _ = std::fs::remove_dir_all(&dir);
     std::fs::create_dir_all(&dir).unwrap();
-    let err = match Device::new(ApfpConfig::default(), &dir) {
+    let cfg = ApfpConfig { backend: BackendKind::Xla, ..Default::default() };
+    let err = match Device::new(cfg.clone(), &dir) {
         Err(e) => e,
-        Ok(_) => panic!("Device::new must fail without a manifest"),
+        Ok(_) => panic!("Device::new must fail without a manifest on xla"),
     };
     let msg = format!("{err:#}");
     assert!(msg.contains("manifest"), "error should name the missing manifest: {msg}");
 
     // a directory that does not exist at all behaves the same way
     let missing = dir.join("definitely/not/created");
-    assert!(Device::new(ApfpConfig::default(), &missing).is_err());
+    assert!(Device::new(cfg, &missing).is_err());
 }
 
 #[test]
