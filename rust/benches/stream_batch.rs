@@ -1,0 +1,101 @@
+//! Packing amortization of the batched stream API (see BENCH.md):
+//! N chained one-shot `Device::gemm` calls — each of which re-packs A/B/C
+//! and round-trips C through the host — against one `Device::stream()`
+//! holding operands resident across N `enqueue_gemm` launches.
+//!
+//! The metrics counters make the reuse visible alongside the wall times:
+//! one-shot repacks the B tile grid every call (`panel_builds == N` per
+//! round), the stream packs it once and reuses it (`panel_reuses` grows).
+
+use apfp::bench_util::{bench, fmt_duration, Table};
+use apfp::config::ApfpConfig;
+use apfp::coordinator::{Device, Matrix};
+use apfp::runtime::BackendKind;
+
+fn main() {
+    let cus = std::thread::available_parallelism().map(|v| v.get().min(4)).unwrap_or(2);
+    let cfg = ApfpConfig {
+        compute_units: cus,
+        tile_n: 8,
+        tile_m: 8,
+        tile_k: 8,
+        ..Default::default()
+    };
+    if cfg.backend != BackendKind::Native {
+        eprintln!("stream_batch: needs the native backend (APFP_BACKEND=native)");
+        return;
+    }
+    let dir = apfp::runtime::default_artifact_dir();
+    let dev = Device::new(cfg.clone(), &dir).expect("native device");
+
+    let n = 24usize; // matrix side: small enough that packing is visible
+    let chain = 8usize; // launches per round
+    let a = Matrix::random(n, n, 448, 1, 25);
+    let b = Matrix::random(n, n, 448, 2, 25);
+    let c0 = Matrix::zeros(n, n, 448);
+
+    println!(
+        "== stream_batch: {chain} chained {n}x{n} GEMMs, {} CUs, tiles {}x{}x{} ==\n",
+        cfg.compute_units, cfg.tile_n, cfg.tile_m, cfg.tile_k
+    );
+
+    // -- N one-shot calls: C round-trips through the host every launch ----
+    let before_oneshot = dev.metrics();
+    let oneshot = bench("one-shot gemm x N", 1, 5, || {
+        let mut c = c0.clone();
+        for _ in 0..chain {
+            let (next, _) = dev.gemm(&a, &b, &c).expect("gemm");
+            c = next;
+        }
+        std::hint::black_box(&c);
+    });
+    let after_oneshot = dev.metrics();
+
+    // -- one stream: pack once, enqueue N times, C stays resident ---------
+    let before_stream = dev.metrics();
+    let streamed = bench("stream enqueue x N", 1, 5, || {
+        let mut s = dev.stream().expect("stream");
+        let (ha, hb) = (s.upload(&a), s.upload(&b));
+        let hc = s.upload(&c0);
+        for _ in 0..chain {
+            s.enqueue_gemm(ha, hb, hc).expect("enqueue");
+        }
+        std::hint::black_box(&s.download(hc).expect("download"));
+    });
+    let after_stream = dev.metrics();
+
+    println!("{}", oneshot.report());
+    println!("{}", streamed.report());
+    let speedup = streamed.speedup_vs(&oneshot);
+    println!("\nstream vs one-shot: {speedup:.2}x on wall time");
+
+    let mut t = Table::new(&["path", "launches", "B-grid packs", "B-grid reuses", "median"]);
+    let rounds = 6u64; // 1 warmup + 5 samples
+    t.row(&[
+        "one-shot".into(),
+        (after_oneshot.enqueues - before_oneshot.enqueues).to_string(),
+        (after_oneshot.panel_builds - before_oneshot.panel_builds).to_string(),
+        (after_oneshot.panel_reuses - before_oneshot.panel_reuses).to_string(),
+        fmt_duration(oneshot.median_s()),
+    ]);
+    t.row(&[
+        "stream".into(),
+        (after_stream.enqueues - before_stream.enqueues).to_string(),
+        (after_stream.panel_builds - before_stream.panel_builds).to_string(),
+        (after_stream.panel_reuses - before_stream.panel_reuses).to_string(),
+        fmt_duration(streamed.median_s()),
+    ]);
+    println!("\n{}", t.render());
+
+    // The structural claim the bench exists to check: the one-shot path
+    // packs a B grid per launch, the stream packs one per round.
+    let oneshot_builds = after_oneshot.panel_builds - before_oneshot.panel_builds;
+    let stream_builds = after_stream.panel_builds - before_stream.panel_builds;
+    assert_eq!(oneshot_builds, rounds * chain as u64, "one-shot must pack per launch");
+    assert_eq!(stream_builds, rounds, "stream must pack once per round");
+    assert_eq!(
+        after_stream.panel_reuses - before_stream.panel_reuses,
+        rounds * (chain as u64 - 1),
+        "stream must reuse the cached grid for every later enqueue"
+    );
+}

@@ -1,18 +1,42 @@
 //! Runtime configuration — the paper's CMake-time knobs (§IV-A) as a config
-//! system: defaults, config-file parsing (`key = value` lines), and CLI
-//! `--set key=value` overrides.
+//! system: defaults, config-file parsing (`key = value` lines), CLI
+//! `--set key=value` overrides, and environment-variable defaults for the
+//! tile geometry and backend.
 //!
-//! | paper option            | field            |
-//! |-------------------------|------------------|
-//! | `APFP_BITS`             | `bits`           |
-//! | `APFP_COMPUTE_UNITS`    | `compute_units`  |
-//! | `APFP_TILE_SIZE_N`      | `tile_n`         |
-//! | `APFP_TILE_SIZE_M`      | `tile_m`         |
-//! | `APFP_MULT_BASE_BITS`   | `mult_base_bits` |
-//! | `APFP_ADD_BASE_BITS`    | `add_base_bits`  |
+//! | paper option            | field            | env default            |
+//! |-------------------------|------------------|------------------------|
+//! | `APFP_BITS`             | `bits`           | —                      |
+//! | `APFP_COMPUTE_UNITS`    | `compute_units`  | —                      |
+//! | `APFP_TILE_SIZE_N`      | `tile_n`         | `APFP_TILE_N`          |
+//! | `APFP_TILE_SIZE_M`      | `tile_m`         | `APFP_TILE_M`          |
+//! | `APFP_TILE_SIZE_K`      | `tile_k`         | `APFP_TILE_K`          |
+//! | `APFP_MULT_BASE_BITS`   | `mult_base_bits` | —                      |
+//! | `APFP_ADD_BASE_BITS`    | `add_base_bits`  | —                      |
+//! | —                       | `backend`        | `APFP_BACKEND`         |
+//!
+//! The tile fields shape the **builtin GEMM artifact** end to end: they
+//! flow through [`crate::runtime::manifest::builtin`] into the scheduler's
+//! band/tile partition, the native backend's tile executor, and each
+//! worker's staging buffers — the host-side analog of re-synthesizing the
+//! bitstream with different `APFP_TILE_SIZE_*` values.  (An on-disk
+//! `artifacts/manifest.txt` still wins: its geometry describes compiled
+//! artifacts, which a host config cannot reshape.)
+//!
+//! ```
+//! use apfp::config::ApfpConfig;
+//!
+//! let mut cfg = ApfpConfig::default();
+//! cfg.set("APFP_TILE_SIZE_N", "16").unwrap();
+//! cfg.set("tile_k", "8").unwrap();
+//! cfg.validate().unwrap();
+//! assert_eq!((cfg.tile_n, cfg.tile_k), (16, 8));
+//! assert!(cfg.set("tile_n", "0").is_ok());   // set() records,
+//! assert!(cfg.validate().is_err());          // validate() rejects
+//! ```
 
 use std::path::Path;
 
+use crate::runtime::manifest::TileShape;
 use crate::runtime::BackendKind;
 
 #[derive(Debug, thiserror::Error)]
@@ -39,6 +63,8 @@ pub struct ApfpConfig {
     pub tile_n: usize,
     /// Output tile columns per compute unit (§III).
     pub tile_m: usize,
+    /// Inner-dimension depth of one K step of the tile datapath (§III).
+    pub tile_k: usize,
     /// Karatsuba bottom-out threshold in bits (§II-A / Fig. 3).
     pub mult_base_bits: u32,
     /// Bits added per pipeline stage in wide adders (§II-A / Fig. 3).
@@ -55,12 +81,15 @@ impl Default for ApfpConfig {
     fn default() -> Self {
         // The paper's evaluated configuration: 512-bit numbers, 32x32 tiles,
         // the Fig. 3 Pareto point (72-bit mult bottom-out, 64-bit adder
-        // stages), one compute unit.
+        // stages), one compute unit.  Tile geometry and backend honor their
+        // environment overrides (`APFP_TILE_N/M/K`, `APFP_BACKEND`).
+        let tile = TileShape::from_env();
         ApfpConfig {
             bits: 512,
             compute_units: 1,
-            tile_n: 32,
-            tile_m: 32,
+            tile_n: tile.n,
+            tile_m: tile.m,
+            tile_k: tile.k,
             mult_base_bits: 72,
             add_base_bits: 64,
             worker_threads: 0, // 0 = one per compute unit
@@ -75,6 +104,12 @@ impl ApfpConfig {
         crate::softfloat::prec_for_bits(self.bits)
     }
 
+    /// The GEMM tile geometry as one value — what `Device::new` threads
+    /// into the builtin manifest and each worker's runtime.
+    pub fn tile_shape(&self) -> TileShape {
+        TileShape { n: self.tile_n, m: self.tile_m, k: self.tile_k }
+    }
+
     pub fn validate(&self) -> Result<(), ConfigError> {
         let err = |m: String| Err(ConfigError::Invalid(m));
         if self.bits % 512 != 0 || self.bits == 0 {
@@ -83,8 +118,10 @@ impl ApfpConfig {
         if self.compute_units == 0 {
             return err("compute_units must be >= 1".into());
         }
-        if self.tile_n == 0 || self.tile_m == 0 {
-            return err("tile sizes must be >= 1".into());
+        // zero or oversized tiles would otherwise surface as panics deep in
+        // a worker thread — reject them here with the typed manifest error
+        if let Err(e) = self.tile_shape().validate() {
+            return err(e.to_string());
         }
         if self.mult_base_bits < 17 {
             return err("mult_base_bits below the DSP width is meaningless".into());
@@ -103,8 +140,15 @@ impl ApfpConfig {
             "compute_units" | "APFP_COMPUTE_UNITS" => {
                 self.compute_units = value.parse().map_err(|_| invalid())?
             }
-            "tile_n" | "APFP_TILE_SIZE_N" => self.tile_n = value.parse().map_err(|_| invalid())?,
-            "tile_m" | "APFP_TILE_SIZE_M" => self.tile_m = value.parse().map_err(|_| invalid())?,
+            "tile_n" | "APFP_TILE_SIZE_N" | "APFP_TILE_N" => {
+                self.tile_n = value.parse().map_err(|_| invalid())?
+            }
+            "tile_m" | "APFP_TILE_SIZE_M" | "APFP_TILE_M" => {
+                self.tile_m = value.parse().map_err(|_| invalid())?
+            }
+            "tile_k" | "APFP_TILE_SIZE_K" | "APFP_TILE_K" => {
+                self.tile_k = value.parse().map_err(|_| invalid())?
+            }
             "mult_base_bits" | "APFP_MULT_BASE_BITS" => {
                 self.mult_base_bits = value.parse().map_err(|_| invalid())?
             }
@@ -143,12 +187,26 @@ impl ApfpConfig {
 mod tests {
     use super::*;
 
+    /// True when no `APFP_TILE_*` override is present, so tests asserting
+    /// the paper defaults don't fail spuriously under the very env knobs
+    /// this module documents.
+    fn tile_env_unset() -> bool {
+        ["N", "M", "K"].iter().all(|d| {
+            std::env::var_os(format!("APFP_TILE_{d}")).is_none()
+                && std::env::var_os(format!("APFP_TILE_SIZE_{d}")).is_none()
+        })
+    }
+
     #[test]
     fn default_is_paper_config() {
         let c = ApfpConfig::default();
         assert_eq!(c.bits, 512);
         assert_eq!(c.prec(), 448);
-        assert_eq!((c.tile_n, c.tile_m), (32, 32));
+        assert_eq!(c.tile_shape(), TileShape::from_env(), "defaults honor the env");
+        if tile_env_unset() {
+            assert_eq!((c.tile_n, c.tile_m, c.tile_k), (32, 32, 32));
+            assert_eq!(c.tile_shape(), TileShape::default());
+        }
         assert_eq!(c.mult_base_bits, 72);
         c.validate().unwrap();
     }
@@ -183,15 +241,32 @@ mod tests {
 
     #[test]
     fn validation_catches_bad_geometry() {
-        let mut c = ApfpConfig::default();
-        c.bits = 500;
+        let c = ApfpConfig { bits: 500, ..Default::default() };
         assert!(c.validate().is_err());
-        c = ApfpConfig::default();
-        c.compute_units = 0;
+        let c = ApfpConfig { compute_units: 0, ..Default::default() };
         assert!(c.validate().is_err());
-        c = ApfpConfig::default();
-        c.mult_base_bits = 8;
+        let c = ApfpConfig { mult_base_bits: 8, ..Default::default() };
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_tiles() {
+        use crate::runtime::manifest::MAX_TILE_DIM;
+        for (n, m, k) in [(0, 8, 8), (8, 0, 8), (8, 8, 0), (MAX_TILE_DIM + 1, 8, 8)] {
+            let c = ApfpConfig { tile_n: n, tile_m: m, tile_k: k, ..Default::default() };
+            let err = c.validate().expect_err("degenerate tile must be rejected");
+            assert!(matches!(err, ConfigError::Invalid(_)), "{err:?}");
+            assert!(err.to_string().contains("tile"), "{err}");
+        }
+        // the tile_k knob parses through every spelling (fixed base shape,
+        // so the assertions hold under APFP_TILE_* env overrides too)
+        let mut c = ApfpConfig { tile_n: 32, tile_m: 32, tile_k: 32, ..Default::default() };
+        c.set("APFP_TILE_SIZE_K", "4").unwrap();
+        assert_eq!(c.tile_k, 4);
+        c.set("APFP_TILE_K", "6").unwrap();
+        assert_eq!(c.tile_k, 6);
+        c.set("tile_k", "2").unwrap();
+        assert_eq!(c.tile_shape(), TileShape { n: 32, m: 32, k: 2 });
     }
 
     #[test]

@@ -1,12 +1,14 @@
 //! The CUDA-like device interface (§IV-B) over the virtual accelerator.
 //!
-//! `Device::new` "programs the bitstream": it spawns one worker thread per
-//! configured compute unit, each with its own PJRT runtime, and records the
-//! Fig. 4 SLR/DDR-bank placement.  `gemm` launches the §III dataflow across
-//! the CUs; `mul_stream`/`add_stream`/`mac_stream` drive the Tab. I/II
-//! microbenchmark path.  Data stays on the "device" as [`Matrix`] buffers
-//! between calls, so workloads with many small operations amortize
-//! transfer, as the paper recommends for fine-grained use.
+//! `Device::new` "programs the bitstream": it validates the configuration
+//! (tile geometry included — degenerate shapes are typed errors, never
+//! worker panics), spawns one worker thread per configured compute unit,
+//! each with its own runtime shaped to the configured tiles, and records
+//! the Fig. 4 SLR/DDR-bank placement.  [`Device::gemm`] launches the §III
+//! dataflow across the CUs as a one-shot wrapper over [`Device::stream`],
+//! the batched API that keeps operands resident between launches;
+//! `mul_stream`/`add_stream`/`mac_stream` drive the Tab. I/II
+//! microbenchmark path.
 
 use std::sync::mpsc::channel;
 use std::sync::Arc;
@@ -16,19 +18,19 @@ use anyhow::{anyhow, Context, Result};
 
 use super::matrix::Matrix;
 use super::metrics::{Metrics, MetricsSnapshot};
-use super::scheduler::Partition;
-use super::worker::{GemmOperands, Job, StreamKind, WorkerHandle};
+use super::stream::DeviceStream;
+use super::worker::{Job, StreamKind, WorkerHandle};
 use crate::config::ApfpConfig;
 use crate::hwmodel::floorplan::{self, Placement};
 use crate::pack::PlaneBatch;
 use crate::runtime::{self, manifest, ArtifactKind};
 
 pub struct Device {
-    config: ApfpConfig,
-    workers: Vec<WorkerHandle>,
-    placements: Vec<Placement>,
-    metrics: Arc<Metrics>,
-    artifacts: Vec<manifest::ArtifactMeta>,
+    pub(super) config: ApfpConfig,
+    pub(super) workers: Vec<WorkerHandle>,
+    pub(super) placements: Vec<Placement>,
+    pub(super) metrics: Arc<Metrics>,
+    pub(super) artifacts: Vec<manifest::ArtifactMeta>,
 }
 
 #[derive(Clone, Debug)]
@@ -45,17 +47,23 @@ impl Device {
     /// Open the virtual device with `config.compute_units` workers on
     /// `config.backend`, reading artifacts from `artifact_dir`.  On the
     /// native backend a missing artifact directory is fine: the builtin
-    /// in-memory manifest lights up the full device stack on a clean
-    /// checkout.
+    /// in-memory manifest — GEMM tiles shaped by `config.tile_shape()` —
+    /// lights up the full device stack on a clean checkout.
     pub fn new(config: ApfpConfig, artifact_dir: &std::path::Path) -> Result<Self> {
-        config.validate().map_err(|e| anyhow!("{e}"))?;
-        let artifacts =
-            runtime::load_metas(artifact_dir, config.backend).context("opening device")?;
+        config.validate()?;
+        let artifacts = runtime::load_metas(artifact_dir, config.backend, config.tile_shape())
+            .context("opening device")?;
         let metrics = Metrics::new();
         let cus = config.compute_units;
         let workers = (0..cus)
             .map(|cu| {
-                WorkerHandle::spawn(cu, artifact_dir.to_path_buf(), config.backend, metrics.clone())
+                WorkerHandle::spawn(
+                    cu,
+                    artifact_dir.to_path_buf(),
+                    config.backend,
+                    config.tile_shape(),
+                    metrics.clone(),
+                )
             })
             .collect();
         Ok(Device {
@@ -80,7 +88,7 @@ impl Device {
         self.metrics.snapshot()
     }
 
-    /// Allocate a zeroed device matrix (CUDA-like `cudaMalloc`).
+    /// Allocate a zeroed host-side matrix at the device precision.
     pub fn alloc(&self, rows: usize, cols: usize) -> Matrix {
         Matrix::zeros(rows, cols, self.config.prec())
     }
@@ -97,71 +105,32 @@ impl Device {
 
     // ---- GEMM (§III) ------------------------------------------------------
 
-    /// C += A @ B across all compute units; returns the updated C and stats.
-    ///
-    /// alpha = beta = 1 exactly as the paper fixes (§III).
+    /// Open a batched GEMM stream: device-resident buffers, packed once,
+    /// with chained launches that keep C on the device (see
+    /// [`crate::coordinator::stream`]).
+    pub fn stream(&self) -> Result<DeviceStream<'_>> {
+        let meta = self.artifact_for(ArtifactKind::Gemm)?.clone();
+        Ok(DeviceStream::new(self, meta))
+    }
+
+    /// C += A @ B across all compute units; returns the updated C and
+    /// stats.  One-shot wrapper over [`Device::stream`]: upload all three
+    /// operands, enqueue, wait, download.  Workloads with many launches
+    /// over shared operands should hold a stream instead and amortize the
+    /// packing (alpha = beta = 1 exactly as the paper fixes, §III).
     pub fn gemm(&self, a: &Matrix, b: &Matrix, c: &Matrix) -> Result<(Matrix, GemmStats)> {
         anyhow::ensure!(a.cols() == b.rows(), "inner dimensions: {} vs {}", a.cols(), b.rows());
         anyhow::ensure!(a.rows() == c.rows() && b.cols() == c.cols(), "output shape");
-        let meta = self.artifact_for(ArtifactKind::Gemm)?;
-        let part = Partition {
-            n: a.rows(),
-            m: b.cols(),
-            k: a.cols(),
-            tile_n: meta.t_n,
-            tile_m: meta.t_m,
-            k_tile: meta.k_tile,
-            compute_units: self.workers.len(),
-        };
-        let artifact = meta.name.clone();
         let before = self.metrics.snapshot();
         let t0 = Instant::now();
 
-        // Pack the three operands into shared plane panels exactly once —
-        // the "copy to device DDR" step.  Workers extract tiles from these
-        // with plane-row copies; nothing clones a full Matrix per launch.
-        let t_pack = Instant::now();
-        let ops =
-            Arc::new(GemmOperands { a: a.to_panel(), b: b.to_panel(), c: c.to_panel() });
-        self.metrics.add_marshal_ns(t_pack.elapsed().as_nanos() as u64);
-        let (reply_tx, reply_rx) = channel();
-
-        // Submit each CU's row-band tiles to its own queue.  Submission
-        // round-robins across CUs one tile at a time so the bounded queues
-        // fill evenly and a stalled CU backpressures only its own band.
-        let mut pending = 0usize;
-        let mut iters: Vec<_> =
-            (0..self.workers.len()).map(|cu| part.tiles_for(cu).into_iter()).collect();
-        let mut active = true;
-        while active {
-            active = false;
-            for (cu, it) in iters.iter_mut().enumerate() {
-                if let Some(tile) = it.next() {
-                    self.workers[cu].submit(Job::GemmTile {
-                        artifact: artifact.clone(),
-                        ops: ops.clone(),
-                        tile,
-                        part: part.clone(),
-                        reply: reply_tx.clone(),
-                    });
-                    pending += 1;
-                    active = true;
-                }
-            }
-        }
-        drop(reply_tx);
-
-        // Assemble the output as tiles complete (any order).  Every output
-        // element is owned by exactly one tile (bands clip `tile.rows`), so
-        // the result starts zeroed and each write lands once.
-        let mut out = Matrix::zeros(c.rows(), c.cols(), c.prec());
-        for _ in 0..pending {
-            let res = reply_rx.recv().context("collecting tile result")?;
-            let planes = res.planes.with_context(|| {
-                format!("tile at ({}, {}) on CU{}", res.tile.r0, res.tile.c0, res.tile.cu)
-            })?;
-            out.write_tile(res.tile.r0, res.tile.c0, res.tile.rows, part.tile_m, &planes);
-        }
+        let mut stream = self.stream()?;
+        let ha = stream.upload(a);
+        let hb = stream.upload(b);
+        let hc = stream.upload(c);
+        stream.enqueue_gemm(ha, hb, hc)?;
+        stream.wait()?;
+        let out = stream.download(hc)?;
 
         let after = self.metrics.snapshot();
         let stats = GemmStats {
@@ -180,7 +149,7 @@ impl Device {
 
     // ---- stream operators (§V-B path) ---------------------------------------
 
-    fn stream(
+    fn stream_op(
         &self,
         kind: ArtifactKind,
         stream_kind: StreamKind,
@@ -231,7 +200,7 @@ impl Device {
         a: &[crate::softfloat::ApFloat],
         b: &[crate::softfloat::ApFloat],
     ) -> Result<Vec<crate::softfloat::ApFloat>> {
-        self.stream(ArtifactKind::Mul, StreamKind::Binop, &[a, b])
+        self.stream_op(ArtifactKind::Mul, StreamKind::Binop, &[a, b])
     }
 
     /// Element-wise c[i] = a[i] + b[i].
@@ -240,7 +209,7 @@ impl Device {
         a: &[crate::softfloat::ApFloat],
         b: &[crate::softfloat::ApFloat],
     ) -> Result<Vec<crate::softfloat::ApFloat>> {
-        self.stream(ArtifactKind::Add, StreamKind::Binop, &[a, b])
+        self.stream_op(ArtifactKind::Add, StreamKind::Binop, &[a, b])
     }
 
     /// Element-wise out[i] = c[i] + a[i] * b[i].
@@ -250,6 +219,6 @@ impl Device {
         a: &[crate::softfloat::ApFloat],
         b: &[crate::softfloat::ApFloat],
     ) -> Result<Vec<crate::softfloat::ApFloat>> {
-        self.stream(ArtifactKind::Mac, StreamKind::Mac, &[c, a, b])
+        self.stream_op(ArtifactKind::Mac, StreamKind::Mac, &[c, a, b])
     }
 }

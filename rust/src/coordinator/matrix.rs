@@ -107,6 +107,12 @@ impl Matrix {
         p
     }
 
+    /// Decode a device-resident panel back into a host matrix — the
+    /// "copy from device DDR" step a stream's `download` performs.
+    pub fn from_panel(p: &PlanePanel) -> Self {
+        Matrix::from_fn(p.rows(), p.cols(), p.prec(), |i, j| p.get(i, j))
+    }
+
     /// Extract a `tn x tm` tile starting at (r0, c0) into the plane layout;
     /// out-of-range positions pad with APFP zero (absorbing for mul,
     /// identity for add — exactly how the hardware pads partial tiles).
@@ -141,6 +147,9 @@ impl Matrix {
     }
 
     /// Write a tile's planes back into the matrix (clipping at the edges).
+    /// Host-side utility (tests, ad-hoc tooling): the device path lands
+    /// tiles in panels via [`PlanePanel::write_tile`] without ever
+    /// materializing a `Matrix`.
     pub fn write_tile(&mut self, r0: usize, c0: usize, tn: usize, tm: usize, b: &PlaneBatch) {
         for i in 0..tn {
             if r0 + i >= self.rows {
@@ -208,6 +217,7 @@ mod tests {
         let m = Matrix::random(11, 9, 448, 7, 30);
         let p = m.to_panel();
         assert_eq!((p.rows(), p.cols(), p.prec()), (11, 9, 448));
+        assert_eq!(Matrix::from_panel(&p), m, "panel roundtrip");
         let mut from_panel = PlaneBatch::default();
         let mut from_matrix = PlaneBatch::default();
         // interior, right edge, bottom edge, far corner (pure padding rows)

@@ -16,6 +16,14 @@ pub struct Metrics {
     pub exec_ns: AtomicU64,
     /// Nanoseconds spent marshaling tiles (extract/writeback, sum over workers).
     pub marshal_ns: AtomicU64,
+    /// GEMM launches enqueued (one-shot `Device::gemm` counts one each).
+    pub enqueues: AtomicU64,
+    /// B tile-grids packed (stream cache misses: first use of a buffer as
+    /// B, or reuse after it was written).
+    pub panel_builds: AtomicU64,
+    /// B tile-grids reused from a stream's cache (the packing a batched
+    /// launch amortized away; always 0 for one-shot calls).
+    pub panel_reuses: AtomicU64,
 }
 
 impl Metrics {
@@ -43,6 +51,18 @@ impl Metrics {
         self.marshal_ns.fetch_add(n, Ordering::Relaxed);
     }
 
+    pub fn add_enqueues(&self, n: u64) {
+        self.enqueues.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_panel_builds(&self, n: u64) {
+        self.panel_builds.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_panel_reuses(&self, n: u64) {
+        self.panel_reuses.fetch_add(n, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             tiles: self.tiles.load(Ordering::Relaxed),
@@ -50,6 +70,9 @@ impl Metrics {
             macs: self.macs.load(Ordering::Relaxed),
             exec_ns: self.exec_ns.load(Ordering::Relaxed),
             marshal_ns: self.marshal_ns.load(Ordering::Relaxed),
+            enqueues: self.enqueues.load(Ordering::Relaxed),
+            panel_builds: self.panel_builds.load(Ordering::Relaxed),
+            panel_reuses: self.panel_reuses.load(Ordering::Relaxed),
         }
     }
 }
@@ -61,6 +84,9 @@ pub struct MetricsSnapshot {
     pub macs: u64,
     pub exec_ns: u64,
     pub marshal_ns: u64,
+    pub enqueues: u64,
+    pub panel_builds: u64,
+    pub panel_reuses: u64,
 }
 
 impl MetricsSnapshot {
@@ -87,10 +113,14 @@ mod tests {
         m.add_tiles(2);
         m.add_calls(7);
         m.add_macs(1000);
+        m.add_enqueues(2);
+        m.add_panel_builds(1);
+        m.add_panel_reuses(4);
         let s = m.snapshot();
         assert_eq!(s.tiles, 5);
         assert_eq!(s.artifact_calls, 7);
         assert_eq!(s.macs, 1000);
+        assert_eq!((s.enqueues, s.panel_builds, s.panel_reuses), (2, 1, 4));
     }
 
     #[test]

@@ -5,17 +5,23 @@
 //! through a CUDA-like interface (§IV-B).  This module is that runtime for
 //! the reproduction's virtual device:
 //!
-//! * [`matrix::Matrix`] — host/device-resident APFP matrices;
+//! * [`matrix::Matrix`] — host-side APFP matrices;
 //! * [`device::Device`] — the device handle: buffer management, stream
 //!   operators, and the tiled GEMM launch (CUDA-like API);
+//! * [`stream::DeviceStream`] — the batched launch API: device-resident
+//!   buffers packed once, shared B tile grids, chained GEMMs whose C stays
+//!   on the device between launches (`Device::gemm` is its one-shot
+//!   wrapper);
 //! * [`worker`] — one OS thread per compute unit, each owning its own
-//!   [`crate::runtime::Runtime`] on the configured backend (its own
-//!   "circuit replica") and executing tile jobs from a bounded queue
-//!   (backpressure);
+//!   [`crate::runtime::Runtime`] on the configured backend and tile
+//!   geometry (its own "circuit replica") and executing tile jobs from a
+//!   bounded queue (backpressure);
 //! * [`scheduler`] — the §III work partition: output rows are split into
-//!   N/P bands (one per CU), each band is tiled T_N x T_M, and every tile
-//!   accumulates over K in sequential k_tile steps;
-//! * [`metrics`] — counters for tiles, artifact calls and stage wall times.
+//!   N/P bands (one per CU), each band is tiled T_N x T_M with edge tiles
+//!   clipped in every dimension, and every tile accumulates over K in
+//!   sequential k_tile steps;
+//! * [`metrics`] — counters for tiles, artifact calls, stage wall times
+//!   and the stream's panel-packing reuse.
 //!
 //! Performance of the *physical* accelerator is modeled by [`crate::sim`];
 //! this module provides the *functional* datapath (every result flows
@@ -27,7 +33,9 @@ pub mod device;
 pub mod matrix;
 pub mod metrics;
 pub mod scheduler;
+pub mod stream;
 pub mod worker;
 
 pub use device::{Device, GemmStats};
 pub use matrix::Matrix;
+pub use stream::{BufId, DeviceStream};

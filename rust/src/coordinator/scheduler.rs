@@ -22,6 +22,12 @@ pub struct Tile {
     /// belonging to the next CU's band (the artifact still computes the
     /// full `tile_n` rows; the extras are padding, discarded on write).
     pub rows: usize,
+    /// Output columns this tile owns: `tile_m` clipped at the matrix's
+    /// right edge.  Like `rows`, the artifact computes the full `tile_m`
+    /// columns and the padding is discarded on write — clipping here makes
+    /// ownership explicit so writebacks into a resident C panel touch only
+    /// real elements.
+    pub cols: usize,
 }
 
 #[derive(Clone, Debug)]
@@ -46,24 +52,38 @@ impl Partition {
 
     /// Tiles owned by `cu`, in execution order (row-major over the band).
     pub fn tiles_for(&self, cu: usize) -> Vec<Tile> {
-        let (start, end) = self.band(cu);
         let mut tiles = Vec::new();
+        self.tiles_into(cu, &mut tiles);
+        tiles
+    }
+
+    /// [`Partition::tiles_for`] into a caller-owned vector (cleared first):
+    /// the allocation-free form the stream's warm enqueue path uses.
+    pub fn tiles_into(&self, cu: usize, out: &mut Vec<Tile>) {
+        out.clear();
+        let (start, end) = self.band(cu);
         let mut r0 = start;
         while r0 < end {
             let rows = self.tile_n.min(end - r0);
             let mut c0 = 0;
             while c0 < self.m {
-                tiles.push(Tile { cu, r0, c0, rows });
+                let cols = self.tile_m.min(self.m - c0);
+                out.push(Tile { cu, r0, c0, rows, cols });
                 c0 += self.tile_m;
             }
             r0 += self.tile_n;
         }
-        tiles
     }
 
     /// Number of sequential K steps per tile.
     pub fn k_steps(&self) -> usize {
         self.k.div_ceil(self.k_tile)
+    }
+
+    /// Number of tile columns across the output (the width of the shared
+    /// B-tile grid: one pre-packed B tile per (K step, tile column)).
+    pub fn m_tiles(&self) -> usize {
+        self.m.div_ceil(self.tile_m)
     }
 
     /// All tiles across all CUs (diagnostics / tests).
@@ -106,9 +126,9 @@ mod tests {
         let pt = part(20, 20, 16, 3);
         let mut hit = vec![vec![0u32; 20]; 20];
         for t in pt.all_tiles() {
-            // t.rows is the tile's owned extent: no manual band clipping
-            for i in t.r0..(t.r0 + t.rows).min(20) {
-                for j in t.c0..(t.c0 + 8).min(20) {
+            // t.rows/t.cols are the tile's owned extents: no manual clipping
+            for i in t.r0..t.r0 + t.rows {
+                for j in t.c0..t.c0 + t.cols {
                     hit[i][j] += 1;
                 }
             }
@@ -119,6 +139,28 @@ mod tests {
                 assert_eq!(h, 1, "({i},{j}) covered {h} times");
             }
         }
+    }
+
+    #[test]
+    fn edge_tiles_clip_columns_and_tiles_into_reuses_storage() {
+        let pt = part(8, 20, 16, 1); // m = 20, tile_m = 8 -> cols 8, 8, 4
+        let tiles = pt.tiles_for(0);
+        assert_eq!(pt.m_tiles(), 3);
+        let widths: Vec<usize> = tiles.iter().map(|t| t.cols).collect();
+        assert_eq!(widths, vec![8, 8, 4]);
+        for t in &tiles {
+            assert!(t.c0 + t.cols <= pt.m, "tile escapes the right edge");
+            assert_eq!(t.c0 % pt.tile_m, 0, "origins stay on the tile grid");
+        }
+        // tiles_into refills a warm vector without reallocating
+        let mut buf = Vec::with_capacity(tiles.len());
+        pt.tiles_into(0, &mut buf);
+        assert_eq!(buf, tiles);
+        let cap = buf.capacity();
+        let ptr = buf.as_ptr();
+        pt.tiles_into(0, &mut buf);
+        assert_eq!(buf, tiles);
+        assert_eq!((buf.capacity(), buf.as_ptr()), (cap, ptr), "refill must reuse storage");
     }
 
     #[test]

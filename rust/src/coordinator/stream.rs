@@ -1,0 +1,364 @@
+//! The batched device stream — "keep data on the device" (§IV-B) as an API.
+//!
+//! A [`DeviceStream`] owns device-resident buffers ([`DeviceBuf`], packed
+//! limb-plane panels) and launches GEMMs against them by handle:
+//!
+//! * [`DeviceStream::upload`] packs a host [`Matrix`] into the plane layout
+//!   **once** — the "copy to device DDR" step;
+//! * [`DeviceStream::enqueue_gemm`] launches `C += A @ B` over the worker
+//!   queues; the updated C stays resident, so it can be the A, B or C of
+//!   the next enqueue with **no host round-trip**;
+//! * [`DeviceStream::wait`] drains outstanding tiles into the C panel;
+//! * [`DeviceStream::download`] is the only step that decodes planes back
+//!   into host values.
+//!
+//! Two forms of reuse make a warm stream cheap:
+//!
+//! * **Shared B tiles.** The first time a buffer is used as B, its panel is
+//!   cut into the tile grid once (`k_steps x m_tiles` pre-packed tiles,
+//!   one [`crate::pack::PlaneBatch`] each) and every compute unit reads the
+//!   same grid through the buffer's `Arc` — the host analog of the paper
+//!   replicating B to each CU's DDR bank, minus the copies.  The grid is
+//!   cached on the buffer and reused by later enqueues until the buffer is
+//!   written (`panel_builds` / `panel_reuses` in the device metrics make
+//!   the amortization visible).
+//! * **Pooled staging.** Tile C-staging buffers cycle leader -> worker ->
+//!   leader through a pool, tile lists and reply channels are reused, and
+//!   job payloads are `Arc` clones — in steady state (same shapes, warm
+//!   pool) an `enqueue_gemm` + [`DeviceStream::wait`] round performs **zero
+//!   heap allocations** end to end, workers included
+//!   (`tests/alloc_free.rs`).
+//!
+//! [`crate::coordinator::Device::gemm`] is a one-shot wrapper over this
+//! API: upload, enqueue, wait, download.
+//!
+//! ```no_run
+//! use apfp::config::ApfpConfig;
+//! use apfp::coordinator::{Device, Matrix};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let dev = Device::new(ApfpConfig::default(), std::path::Path::new("artifacts"))?;
+//! let prec = dev.config().prec();
+//! let mut s = dev.stream()?;
+//! let a = s.upload(&Matrix::random(64, 64, prec, 1, 30));
+//! let b = s.upload(&Matrix::random(64, 64, prec, 2, 30));
+//! let c = s.alloc(64, 64);
+//! s.enqueue_gemm(a, b, c)?; // C += A @ B
+//! s.enqueue_gemm(c, b, c)?; // chain: C += C @ B, no round-trip
+//! let out = s.download(c)?;
+//! # let _ = out;
+//! # Ok(())
+//! # }
+//! ```
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::device::Device;
+use super::matrix::Matrix;
+use super::scheduler::{Partition, Tile};
+use super::worker::{Job, TileResult};
+use crate::pack::{PlaneBatch, PlanePanel};
+use crate::runtime::ArtifactMeta;
+
+/// Handle to one device-resident buffer of a [`DeviceStream`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BufId(pub(crate) usize);
+
+/// A device-resident matrix: the packed plane panel plus the lazily built,
+/// shared B tile grid.  Workers hold these through `Arc` for the duration
+/// of a launch; the stream regains exclusive access (and with it the right
+/// to write the panel) only once every tile of the launch has replied.
+pub struct DeviceBuf {
+    pub(crate) panel: PlanePanel,
+    pub(crate) b_cache: BTileCache,
+}
+
+/// The pre-packed B tile grid: `k_steps x m_tiles` tiles of shape
+/// `k_tile x tile_m`, extracted once per panel version and read by every
+/// compute unit.  `valid` drops when the owning buffer is written.
+#[derive(Default)]
+pub(crate) struct BTileCache {
+    tiles: Vec<PlaneBatch>,
+    k_tile: usize,
+    tile_m: usize,
+    m_tiles: usize,
+    k_steps: usize,
+    valid: bool,
+}
+
+impl DeviceBuf {
+    pub(crate) fn panel(&self) -> &PlanePanel {
+        &self.panel
+    }
+
+    /// The shared pre-packed B tile for K step `step`, tile column `jt`.
+    pub(crate) fn b_tile(&self, step: usize, jt: usize) -> Result<&PlaneBatch> {
+        anyhow::ensure!(self.b_cache.valid, "B tile grid not packed for this launch");
+        anyhow::ensure!(
+            step < self.b_cache.k_steps && jt < self.b_cache.m_tiles,
+            "B tile ({step},{jt}) outside the {}x{} grid",
+            self.b_cache.k_steps,
+            self.b_cache.m_tiles
+        );
+        Ok(&self.b_cache.tiles[step * self.b_cache.m_tiles + jt])
+    }
+}
+
+/// One launch currently in flight: which buffer receives the writeback,
+/// under which partition, and how many tile replies are outstanding.
+struct Inflight {
+    c: usize,
+    part: Partition,
+    pending: usize,
+}
+
+/// A batched GEMM stream over a [`Device`] — see the module docs.
+///
+/// Dropping a stream with work still in flight abandons those results:
+/// workers finish their queued tiles and their replies are discarded.
+pub struct DeviceStream<'d> {
+    dev: &'d Device,
+    meta: ArtifactMeta,
+    artifact: Arc<str>,
+    bufs: Vec<Arc<DeviceBuf>>,
+    /// Per-CU tile lists, refilled in place each enqueue.
+    cu_tiles: Vec<Vec<Tile>>,
+    /// Per-CU submission cursors (reset each enqueue).
+    cursors: Vec<usize>,
+    /// Recycled C-staging tile buffers (leader -> worker -> leader).
+    c_pool: Vec<PlaneBatch>,
+    /// Reply staging for [`DeviceStream::wait`] (capacity reused).
+    results: Vec<TileResult>,
+    /// Bounded reply channel, recreated only when a launch needs more
+    /// capacity than any before it (workers must never block on replies —
+    /// that would deadlock against the bounded job queues).
+    reply: Option<(SyncSender<TileResult>, Receiver<TileResult>)>,
+    reply_cap: usize,
+    inflight: Option<Inflight>,
+}
+
+impl<'d> DeviceStream<'d> {
+    pub(crate) fn new(dev: &'d Device, meta: ArtifactMeta) -> Self {
+        let cus = dev.workers.len();
+        DeviceStream {
+            artifact: Arc::from(meta.name.as_str()),
+            meta,
+            dev,
+            bufs: Vec::new(),
+            cu_tiles: (0..cus).map(|_| Vec::new()).collect(),
+            cursors: vec![0; cus],
+            c_pool: Vec::new(),
+            results: Vec::new(),
+            reply: None,
+            reply_cap: 0,
+            inflight: None,
+        }
+    }
+
+    /// Pack a host matrix into a device-resident panel (the one-time
+    /// "copy to DDR"); everything after this moves plane rows, not values.
+    pub fn upload(&mut self, m: &Matrix) -> BufId {
+        let t0 = Instant::now();
+        let panel = m.to_panel();
+        self.dev.metrics.add_marshal_ns(t0.elapsed().as_nanos() as u64);
+        self.push_buf(panel)
+    }
+
+    /// Allocate a zeroed device-resident `rows x cols` buffer at the
+    /// device's precision (the `cudaMalloc` analog).
+    pub fn alloc(&mut self, rows: usize, cols: usize) -> BufId {
+        let prec = self.dev.config.prec();
+        self.push_buf(PlanePanel::zeros(rows, cols, prec))
+    }
+
+    fn push_buf(&mut self, panel: PlanePanel) -> BufId {
+        self.bufs.push(Arc::new(DeviceBuf { panel, b_cache: BTileCache::default() }));
+        BufId(self.bufs.len() - 1)
+    }
+
+    fn buf(&self, id: BufId) -> Result<&Arc<DeviceBuf>> {
+        self.bufs.get(id.0).ok_or_else(|| anyhow!("unknown device buffer id {}", id.0))
+    }
+
+    /// Drain pending work, then decode a buffer back to a host matrix —
+    /// the only step of the stream that materializes `ApFloat`s.
+    pub fn download(&mut self, id: BufId) -> Result<Matrix> {
+        self.wait()?;
+        let buf = self.buf(id)?;
+        Ok(Matrix::from_panel(&buf.panel))
+    }
+
+    /// Launch `C += A @ B` (alpha = beta = 1, §III) across the device's
+    /// compute units.  Inputs are pre-launch buffer contents: an earlier
+    /// enqueue's output is drained into its panel before this launch reads
+    /// it, so chains like `enqueue_gemm(c, b, c)` are well defined.
+    /// Returns once every tile is submitted (the bounded worker queues
+    /// backpressure the caller); [`DeviceStream::wait`] collects results.
+    pub fn enqueue_gemm(&mut self, a: BufId, b: BufId, c: BufId) -> Result<()> {
+        // Sequencing: earlier launches write panels this one may read.
+        self.wait()?;
+        let prec = self.meta.prec();
+        let (n, k, m) = {
+            let (pa, pb, pc) = (&self.buf(a)?.panel, &self.buf(b)?.panel, &self.buf(c)?.panel);
+            anyhow::ensure!(
+                pa.cols() == pb.rows(),
+                "inner dimensions: {} vs {}",
+                pa.cols(),
+                pb.rows()
+            );
+            anyhow::ensure!(
+                pa.rows() == pc.rows() && pb.cols() == pc.cols(),
+                "output shape: {}x{} vs {}x{}",
+                pa.rows(),
+                pb.cols(),
+                pc.rows(),
+                pc.cols()
+            );
+            anyhow::ensure!(
+                pa.prec() == prec && pb.prec() == prec && pc.prec() == prec,
+                "operand precision vs device artifact ({prec} bits of mantissa)"
+            );
+            (pa.rows(), pa.cols(), pb.cols())
+        };
+        let part = Partition {
+            n,
+            m,
+            k,
+            tile_n: self.meta.t_n,
+            tile_m: self.meta.t_m,
+            k_tile: self.meta.k_tile,
+            compute_units: self.dev.workers.len(),
+        };
+        self.build_b_cache(b, &part)?;
+
+        // Plan each CU's band and make sure the reply channel can absorb
+        // every tile of this launch without blocking a worker.
+        let mut total = 0;
+        for (cu, tiles) in self.cu_tiles.iter_mut().enumerate() {
+            part.tiles_into(cu, tiles);
+            total += tiles.len();
+            self.cursors[cu] = 0;
+        }
+        if self.reply.is_none() || self.reply_cap < total {
+            let cap = total.max(1);
+            self.reply = Some(sync_channel(cap));
+            self.reply_cap = cap;
+        }
+        let reply_tx = &self.reply.as_ref().expect("just ensured").0;
+
+        // Submit round-robin, one tile per CU per pass, so the bounded
+        // queues fill evenly and a stalled CU backpressures only its band.
+        let c_id = c.0;
+        let (a, b, c) = (self.buf(a)?.clone(), self.buf(b)?.clone(), self.buf(c)?.clone());
+        let mut pending = 0usize;
+        let mut active = true;
+        while active {
+            active = false;
+            for cu in 0..self.dev.workers.len() {
+                let Some(tile) = self.cu_tiles[cu].get(self.cursors[cu]) else { continue };
+                self.cursors[cu] += 1;
+                let c_buf = self.c_pool.pop().unwrap_or_default();
+                self.dev.workers[cu].submit(Job::GemmTile {
+                    artifact: self.artifact.clone(),
+                    a: a.clone(),
+                    b: b.clone(),
+                    c: c.clone(),
+                    c_buf,
+                    tile: *tile,
+                    part: part.clone(),
+                    reply: reply_tx.clone(),
+                });
+                pending += 1;
+                active = true;
+            }
+        }
+        self.dev.metrics.add_enqueues(1);
+        self.inflight = Some(Inflight { c: c_id, part, pending });
+        Ok(())
+    }
+
+    /// Pack (or reuse) the shared B tile grid for `part` on buffer `b`.
+    fn build_b_cache(&mut self, b: BufId, part: &Partition) -> Result<()> {
+        let (m_tiles, k_steps) = (part.m_tiles(), part.k_steps());
+        let buf = Arc::get_mut(&mut self.bufs[b.0])
+            .expect("a drained stream has exclusive access to its buffers");
+        let cache = &mut buf.b_cache;
+        if cache.valid
+            && cache.k_tile == part.k_tile
+            && cache.tile_m == part.tile_m
+            && cache.m_tiles == m_tiles
+            && cache.k_steps == k_steps
+        {
+            self.dev.metrics.add_panel_reuses(1);
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        let count = k_steps * m_tiles;
+        if cache.tiles.len() != count {
+            cache.tiles.resize_with(count, PlaneBatch::default);
+        }
+        for step in 0..k_steps {
+            for jt in 0..m_tiles {
+                buf.panel.extract_tile_into(
+                    step * part.k_tile,
+                    jt * part.tile_m,
+                    part.k_tile,
+                    part.tile_m,
+                    &mut cache.tiles[step * m_tiles + jt],
+                );
+            }
+        }
+        cache.k_tile = part.k_tile;
+        cache.tile_m = part.tile_m;
+        cache.m_tiles = m_tiles;
+        cache.k_steps = k_steps;
+        cache.valid = true;
+        self.dev.metrics.add_marshal_ns(t0.elapsed().as_nanos() as u64);
+        self.dev.metrics.add_panel_builds(1);
+        Ok(())
+    }
+
+    /// Collect every outstanding tile of the last enqueue and land it in
+    /// the C buffer's panel (each output element is owned by exactly one
+    /// clipped tile, so writes are disjoint).  No-op when nothing is in
+    /// flight.
+    pub fn wait(&mut self) -> Result<()> {
+        let Some(fl) = self.inflight.take() else { return Ok(()) };
+        let rx = &self.reply.as_ref().expect("inflight implies a reply channel").1;
+        self.results.clear();
+        for _ in 0..fl.pending {
+            self.results.push(rx.recv().context("collecting tile result")?);
+        }
+        // Every job has replied, and workers drop their buffer references
+        // before replying — the stream owns the panels again.
+        let buf = Arc::get_mut(&mut self.bufs[fl.c])
+            .expect("all launches drained, so the C buffer is exclusively ours");
+        // The panel is about to change: any cached B tiles go stale.
+        buf.b_cache.valid = false;
+        let t0 = Instant::now();
+        let mut first_err = None;
+        for res in self.results.drain(..) {
+            let t = res.tile;
+            match res.planes {
+                Ok(planes) => {
+                    buf.panel.write_tile(t.r0, t.c0, t.rows, t.cols, fl.part.tile_m, &planes);
+                    self.c_pool.push(planes);
+                }
+                Err(e) if first_err.is_none() => {
+                    first_err =
+                        Some(e.context(format!("tile at ({}, {}) on CU{}", t.r0, t.c0, t.cu)));
+                }
+                Err(_) => {}
+            }
+        }
+        self.dev.metrics.add_marshal_ns(t0.elapsed().as_nanos() as u64);
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}

@@ -1,13 +1,20 @@
 //! Compute-unit worker threads.
 //!
 //! Each worker models one replicated compute unit: it owns a private
-//! [`Runtime`] on the device's configured backend (its own compiled
-//! "circuit"), pulls jobs from a bounded queue (backpressure toward the
-//! leader), executes them through the artifacts, and reports results on a
-//! reply channel.  GEMM operands arrive as shared [`PlanePanel`]s — packed
-//! once per launch by the leader — and each worker keeps its A/B tile
-//! buffers warm across K steps *and* across jobs, so steady-state tile
-//! marshaling is plane-row copies into reused storage.
+//! [`Runtime`] on the device's configured backend and tile geometry (its
+//! own compiled "circuit"), pulls jobs from a bounded queue (backpressure
+//! toward the leader), executes them through the artifacts, and reports
+//! results on a reply channel.  GEMM operands arrive as `Arc`s of
+//! device-resident [`DeviceBuf`]s — A and C are read out of their shared
+//! panels into per-worker staging buffers kept warm across K steps *and*
+//! across jobs, while B tiles come **pre-packed** from the buffer's shared
+//! tile grid (cut once by the stream, read by every CU).  The C staging
+//! buffer cycles leader -> worker -> leader through the stream's pool, so
+//! a steady-state tile job touches the allocator not at all.
+//!
+//! Discipline: a worker drops every shared-buffer `Arc` *before* sending
+//! its reply.  The stream counts replies to know when it has regained
+//! exclusive access to its panels (`Arc::get_mut`) for writeback.
 
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
 use std::sync::Arc;
@@ -18,35 +25,31 @@ use anyhow::Result;
 
 use super::metrics::Metrics;
 use super::scheduler::{Partition, Tile};
-use crate::pack::{PlaneBatch, PlanePanel};
-use crate::runtime::{BackendKind, Runtime};
+use super::stream::DeviceBuf;
+use crate::pack::PlaneBatch;
+use crate::runtime::{BackendKind, Runtime, TileShape};
 
 /// Depth of each worker's job queue: small, so a slow CU exerts
 /// backpressure on the leader instead of buffering unbounded work.
 pub const QUEUE_DEPTH: usize = 4;
 
-/// The three GEMM operands packed into the plane layout, shared read-only
-/// across every tile job of one launch (the paper copies each band's A/C
-/// rows to the owning CU's DDR bank and replicates B; the host-side analog
-/// is one packing pass and `Arc` sharing instead of three full `Matrix`
-/// clones per launch).
-pub struct GemmOperands {
-    /// A: n x k.
-    pub a: PlanePanel,
-    /// B: k x m.
-    pub b: PlanePanel,
-    /// C (input values): n x m.
-    pub c: PlanePanel,
-}
-
 pub enum Job {
     /// One full output tile: accumulate C_tile over all K steps.
     GemmTile {
-        artifact: String,
-        ops: Arc<GemmOperands>,
+        artifact: Arc<str>,
+        /// A: n x k, read from the shared panel.
+        a: Arc<DeviceBuf>,
+        /// B: k x m, read from the shared pre-packed tile grid.
+        b: Arc<DeviceBuf>,
+        /// C input values: n x m, read from the shared panel (the leader
+        /// writes results back only after the launch fully drains).
+        c: Arc<DeviceBuf>,
+        /// Pooled staging buffer the C tile is accumulated in; returned to
+        /// the leader inside [`TileResult`].
+        c_buf: PlaneBatch,
         tile: Tile,
         part: Partition,
-        reply: Sender<TileResult>,
+        reply: SyncSender<TileResult>,
     },
     /// A chunk of a stream operator (Tab. I/II microbenchmark path).
     Stream {
@@ -84,17 +87,19 @@ pub struct WorkerHandle {
 impl WorkerHandle {
     /// Spawn the worker; it creates its own Runtime on its own thread (no
     /// backend client is Send — PJRT is `Rc`-based and the native arena is
-    /// private).
+    /// private).  `tile` shapes the worker's builtin manifest so its
+    /// artifact names and geometry match the leader's partition exactly.
     pub fn spawn(
         cu: usize,
         artifact_dir: std::path::PathBuf,
         backend: BackendKind,
+        tile: TileShape,
         metrics: Arc<Metrics>,
     ) -> Self {
         let (tx, rx) = sync_channel::<Job>(QUEUE_DEPTH);
         let thread = std::thread::Builder::new()
             .name(format!("apfp-cu{cu}"))
-            .spawn(move || worker_main(cu, &artifact_dir, backend, rx, metrics))
+            .spawn(move || worker_main(cu, &artifact_dir, backend, tile, rx, metrics))
             .expect("spawning CU worker");
         WorkerHandle { cu, sender: tx, thread: Some(thread) }
     }
@@ -114,25 +119,34 @@ impl Drop for WorkerHandle {
     }
 }
 
-/// Per-worker tile staging buffers, reused across K steps and across jobs.
+/// Per-worker A-tile staging, reused across K steps and across jobs.
 #[derive(Default)]
 struct TileBufs {
     a: PlaneBatch,
-    b: PlaneBatch,
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> &str {
+    p.downcast_ref::<&str>()
+        .copied()
+        .or_else(|| p.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("non-string panic payload")
 }
 
 fn worker_main(
     cu: usize,
     dir: &std::path::Path,
     backend: BackendKind,
+    tile: TileShape,
     rx: Receiver<Job>,
     metrics: Arc<Metrics>,
 ) {
-    let rt = match Runtime::with_backend(dir, backend) {
+    let rt = match Runtime::with_backend_tiled(dir, backend, tile) {
         Ok(rt) => rt,
         Err(e) => {
             eprintln!("CU{cu}: runtime init failed: {e:#}");
             // Drain jobs, reporting the failure to every reply channel.
+            // (Destructuring with `..` drops the shared-buffer Arcs before
+            // the send, same as the healthy path.)
             for job in rx {
                 match job {
                     Job::GemmTile { tile, reply, .. } => {
@@ -158,19 +172,49 @@ fn worker_main(
     for job in rx {
         match job {
             Job::Shutdown => break,
-            Job::GemmTile { artifact, ops, tile, part, reply } => {
-                let planes = run_tile(&rt, &artifact, &ops, tile, &part, &metrics, &mut bufs);
+            Job::GemmTile { artifact, a, b, c, mut c_buf, tile, part, reply } => {
+                // A panic inside the tile (an assert anywhere in the
+                // pack/softfloat stack) must become an error *reply*: the
+                // leader counts replies, and a job that dies silently would
+                // hang its `wait()` forever.  catch_unwind costs nothing on
+                // the non-panicking path.
+                let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    run_tile(
+                        &rt, &artifact, &a, &b, &c, tile, &part, &metrics, &mut bufs, &mut c_buf,
+                    )
+                }));
+                // Release the shared buffers before replying: the leader
+                // reclaims exclusive panel access by counting replies.
+                drop((a, b, c, artifact));
+                let planes = match res {
+                    Ok(Ok(())) => Ok(c_buf),
+                    Ok(Err(e)) => Err(e),
+                    Err(panic) => Err(anyhow::anyhow!(
+                        "CU{cu} panicked executing tile: {}",
+                        panic_message(&panic)
+                    )),
+                };
                 let _ = reply.send(TileResult { tile, planes });
             }
             Job::Stream { artifact, kind, operands, offset, reply } => {
                 let t0 = Instant::now();
-                let planes = match kind {
+                // Same containment as the tile path: a panic must not kill
+                // the worker, or jobs queued behind it die reply-less and
+                // their collectors hang.
+                let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| match kind {
                     StreamKind::Binop => {
                         rt.exec_stream_binop(&artifact, &operands[0], &operands[1])
                     }
                     StreamKind::Mac => {
                         rt.exec_stream_mac(&artifact, &operands[0], &operands[1], &operands[2])
                     }
+                }));
+                let planes = match res {
+                    Ok(r) => r,
+                    Err(panic) => Err(anyhow::anyhow!(
+                        "CU{cu} panicked executing stream chunk: {}",
+                        panic_message(&panic)
+                    )),
                 };
                 metrics.add_exec_ns(t0.elapsed().as_nanos() as u64);
                 metrics.add_calls(1);
@@ -181,40 +225,49 @@ fn worker_main(
 }
 
 /// Execute one output tile: sequential K accumulation through the artifact
-/// (the §III dataflow).  The C tile stays "on chip" between K steps — the
-/// backend updates it in place — and the A/B staging buffers are reused
-/// across steps and jobs, so the per-step marshaling cost is the plane-row
-/// copies out of the shared panels.
+/// (the §III dataflow).  The C tile stays "on chip" between K steps in the
+/// pooled `c_tile` staging buffer — the backend updates it in place — the
+/// A staging buffer is reused across steps and jobs, and B tiles are read
+/// straight from the shared pre-packed grid, so the per-step marshaling
+/// cost is one plane-row copy out of the A panel.
+#[allow(clippy::too_many_arguments)]
 fn run_tile(
     rt: &Runtime,
     artifact: &str,
-    ops: &GemmOperands,
+    a: &DeviceBuf,
+    b: &DeviceBuf,
+    c: &DeviceBuf,
     tile: Tile,
     part: &Partition,
     metrics: &Metrics,
     bufs: &mut TileBufs,
-) -> Result<PlaneBatch> {
+    c_tile: &mut PlaneBatch,
+) -> Result<()> {
     let (tn, tm, kt) = (part.tile_n, part.tile_m, part.k_tile);
+    let jt = tile.c0 / tm;
     let t_marshal = Instant::now();
-    // default() + extract: extract's reset does the one required
-    // initialization (zeros() here would zero everything a second time)
-    let mut c_tile = PlaneBatch::default();
-    ops.c.extract_tile_into(tile.r0, tile.c0, tn, tm, &mut c_tile);
+    c.panel().extract_tile_into(tile.r0, tile.c0, tn, tm, c_tile);
     metrics.add_marshal_ns(t_marshal.elapsed().as_nanos() as u64);
 
     for step in 0..part.k_steps() {
         let k0 = step * kt;
         let tm_marshal = Instant::now();
-        ops.a.extract_tile_into(tile.r0, k0, tn, kt, &mut bufs.a);
-        ops.b.extract_tile_into(k0, tile.c0, kt, tm, &mut bufs.b);
+        a.panel().extract_tile_into(tile.r0, k0, tn, kt, &mut bufs.a);
+        let b_tile = b.b_tile(step, jt)?;
         metrics.add_marshal_ns(tm_marshal.elapsed().as_nanos() as u64);
 
         let t_exec = Instant::now();
-        rt.exec_gemm_tile(artifact, &bufs.a, &bufs.b, &mut c_tile)?;
+        rt.exec_gemm_tile(artifact, &bufs.a, b_tile, c_tile)?;
         metrics.add_exec_ns(t_exec.elapsed().as_nanos() as u64);
         metrics.add_calls(1);
-        metrics.add_macs((tn * tm * kt) as u64);
+        // Count useful MAC lanes — the owned extent x the real K depth of
+        // this step, summed over all tiles exactly n * m * k regardless of
+        // tiling fit.  Padding lanes are excluded (the backend skips their
+        // zero products); lanes whose *data* happens to be zero still
+        // count, like any dense-GEMM FLOP figure.
+        let k_eff = kt.min(part.k - k0);
+        metrics.add_macs((tile.rows * tile.cols * k_eff) as u64);
     }
     metrics.add_tiles(1);
-    Ok(c_tile)
+    Ok(())
 }

@@ -1,3 +1,49 @@
+//! `apfp` — the CPU side of a three-layer reproduction of *Fast Arbitrary
+//! Precision Floating Point on FPGA* (cs.DC 2022).
+//!
+//! The crate is organized bottom-up, mirroring the paper's hardware stack
+//! (see `docs/ARCHITECTURE.md` at the repository root for the full tour
+//! with dataflow diagrams):
+//!
+//! * [`bigint`] — limb arithmetic with a reusable [`bigint::Scratch`]
+//!   arena: Comba/Karatsuba/Toom-3 multiplication, shifts, division;
+//! * [`softfloat`] — the paper's RNDZ arbitrary-precision float
+//!   ([`softfloat::ApFloat`]) with allocation-free `mul`/`add`/`mac`
+//!   pipelines, the MPFR-class reference every backend is bit-compared to;
+//! * [`pack`] — the Fig. 1 word format and the limb-plane layout
+//!   ([`pack::PlaneBatch`] / [`pack::PlanePanel`]) operands travel in;
+//! * [`baseline`] / [`blas`] / [`linalg`] — host-side GEMM kernels and the
+//!   §IV-B BLAS-style interfaces built on them;
+//! * [`runtime`] — artifact manifests and the pluggable execution
+//!   [`runtime::Backend`] (in-process [`runtime::NativeBackend`] by
+//!   default, the XLA/PJRT artifact path behind `APFP_BACKEND=xla`);
+//! * [`coordinator`] — the virtual device: compute-unit workers, the §III
+//!   band/tile scheduler, the CUDA-like [`coordinator::Device`], and the
+//!   batched [`coordinator::DeviceStream`] launch API;
+//! * [`hwmodel`] / [`sim`] — the analytic U250 model that regenerates the
+//!   paper's tables and figures;
+//! * [`config`] / [`bench_util`] / [`testkit`] — configuration, the
+//!   offline bench harness, and the property-testing kit.
+//!
+//! # Environment variables
+//!
+//! Every runtime knob the crate reads from the environment:
+//!
+//! | variable | effect | default |
+//! |----------|--------|---------|
+//! | `APFP_BACKEND` | Execution backend: `native` or `xla`/`pjrt` ([`runtime::BackendKind::from_env`]) | `native` |
+//! | `APFP_ARTIFACTS` | Artifact directory ([`runtime::default_artifact_dir`]) | `artifacts` |
+//! | `APFP_TILE_N` | Builtin GEMM tile rows (long form `APFP_TILE_SIZE_N`; [`runtime::TileShape::from_env`]) | `32` |
+//! | `APFP_TILE_M` | Builtin GEMM tile columns (long form `APFP_TILE_SIZE_M`) | `32` |
+//! | `APFP_TILE_K` | Builtin GEMM K-step depth (long form `APFP_TILE_SIZE_K`) | `32` |
+//! | `APFP_KARATSUBA_THRESHOLD` | Karatsuba bottom-out in limbs ([`bigint`]) | `40` |
+//!
+//! The tile variables reshape builtin-manifest execution end to end — the
+//! synthesized artifact, the scheduler partition, every worker's staging
+//! buffers — exactly like re-synthesizing the bitstream with different
+//! `APFP_TILE_SIZE_*` CMake options (§IV-A).  Config files and CLI
+//! `--set key=value` overrides accept the same names ([`config`]).
+
 pub mod baseline;
 pub mod bench_util;
 pub mod bigint;

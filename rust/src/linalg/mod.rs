@@ -44,7 +44,7 @@ pub fn identity(n: usize, prec: u32) -> Matrix {
     })
 }
 
-/// Frobenius inner product <A, B> = sum_ij A_ij * B_ij, accumulated on the
+/// Frobenius inner product `<A, B>` = sum_ij A_ij * B_ij, accumulated on the
 /// allocation-free `mac_into` pipeline (thread-local arena).
 pub fn frob_inner(a: &Matrix, b: &Matrix) -> ApFloat {
     let mut acc = ApFloat::zero(a.prec());

@@ -12,6 +12,21 @@
 //!    artifacts consume — i32 sign plane, i64 exponent plane, and the
 //!    mantissa as 8-bit limbs in i32 lanes.  This is the HBM layout of the
 //!    TPU re-think (DESIGN.md §Hardware-Adaptation).
+//!
+//! [`PlanePanel`] wraps a 2-D batch as a device-resident matrix: packed
+//! once, then tiles move in and out as plane-row `memcpy`s
+//! ([`PlanePanel::extract_tile_into`] / [`PlanePanel::write_tile`]) — the
+//! data layout both the one-shot GEMM launch and the batched stream keep
+//! operands in between kernel invocations.
+//!
+//! ```
+//! use apfp::pack::PlaneBatch;
+//! use apfp::softfloat::ApFloat;
+//!
+//! let vals = [ApFloat::from_i64(-3, 448), ApFloat::zero(448)];
+//! let planes = PlaneBatch::from_slice(&vals, 448);
+//! assert_eq!(planes.to_vec(), vals); // lossless struct-of-arrays roundtrip
+//! ```
 
 use crate::softfloat::{ApFloat, ZERO_EXP};
 
@@ -242,6 +257,43 @@ impl PlanePanel {
                 .copy_from_slice(&self.planes.mant[s * l8..(s + w) * l8]);
         }
     }
+
+    /// Write a `rows x cols` region of a tile batch back into the panel at
+    /// (r0, c0) — the inverse of [`PlanePanel::extract_tile_into`], used to
+    /// land completed C tiles in a device-resident panel without decoding a
+    /// single element.  `stride` is the tile's full row width (`tile_m`):
+    /// row `i` of the region occupies batch lanes
+    /// `i * stride .. i * stride + cols`, so a band/edge-clipped tile
+    /// writes only the elements it owns and the padding lanes never leave
+    /// the batch.  Pure plane-row copies; never allocates.
+    pub fn write_tile(
+        &mut self,
+        r0: usize,
+        c0: usize,
+        rows: usize,
+        cols: usize,
+        stride: usize,
+        b: &PlaneBatch,
+    ) {
+        assert_eq!(b.prec, self.planes.prec, "tile precision vs panel");
+        assert!(cols <= stride, "owned columns exceed the tile row stride");
+        assert!(
+            r0 + rows <= self.rows && c0 + cols <= self.cols,
+            "clipped tile escapes the panel: ({r0},{c0}) + {rows}x{cols} vs {}x{}",
+            self.rows,
+            self.cols
+        );
+        assert!(rows * stride <= b.len(), "tile batch too small for the region");
+        let l8 = self.planes.limbs8;
+        for i in 0..rows {
+            let s = i * stride;
+            let d = (r0 + i) * self.cols + c0;
+            self.planes.sign[d..d + cols].copy_from_slice(&b.sign[s..s + cols]);
+            self.planes.exp[d..d + cols].copy_from_slice(&b.exp[s..s + cols]);
+            self.planes.mant[d * l8..(d + cols) * l8]
+                .copy_from_slice(&b.mant[s * l8..(s + cols) * l8]);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -410,6 +462,48 @@ mod tests {
         // out-of-range column origin yields an all-zero tile
         panel.extract_tile_into(0, 20, 2, 2, &mut tile);
         assert!(tile.to_vec().iter().all(|v| v.is_zero()));
+    }
+
+    #[test]
+    fn panel_write_tile_roundtrips_and_ignores_padding_lanes() {
+        let mut rng = Rng::from_seed(123);
+        let (rows, cols) = (6usize, 7usize);
+        let mut panel = PlanePanel::zeros(rows, cols, 448);
+        let mut vals = Vec::new();
+        for r in 0..rows {
+            for c in 0..cols {
+                let v = rand_ap(&mut rng, 448);
+                panel.set(r, c, &v);
+                vals.push(v);
+            }
+        }
+        let reference = panel.clone();
+
+        // extract an edge tile (4x4 at (4,4): only 2x3 in range), poison the
+        // padding lanes, write the owned region back: panel must be unchanged
+        let (tn, tm) = (4usize, 4usize);
+        let (r0, c0) = (4usize, 4usize);
+        let mut tile = PlaneBatch::default();
+        panel.extract_tile_into(r0, c0, tn, tm, &mut tile);
+        let (owned_rows, owned_cols) = (rows - r0, cols - c0);
+        let poison = rand_ap(&mut rng, 448);
+        for i in 0..tn {
+            for j in 0..tm {
+                if i >= owned_rows || j >= owned_cols {
+                    tile.set(i * tm + j, &poison);
+                }
+            }
+        }
+        panel.write_tile(r0, c0, owned_rows, owned_cols, tm, &tile);
+        assert_eq!(panel, reference, "padding lanes must never land in the panel");
+
+        // an interior tile actually moves data
+        let v = rand_ap(&mut rng, 448);
+        let mut tile2 = PlaneBatch::zeros(tn * tm, 448);
+        tile2.set(tm + 2, &v);
+        panel.write_tile(0, 0, tn, tm, tm, &tile2);
+        assert_eq!(panel.get(1, 2), v);
+        assert_eq!(panel.get(4, 4), vals[4 * cols + 4], "outside the write is untouched");
     }
 
     #[test]

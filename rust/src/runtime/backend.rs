@@ -30,6 +30,15 @@ use crate::softfloat::ZERO_EXP;
 
 /// Which execution backend a runtime (and the devices/workers above it)
 /// drives.
+///
+/// ```
+/// use apfp::runtime::BackendKind;
+///
+/// assert_eq!(BackendKind::parse("native"), Some(BackendKind::Native));
+/// assert_eq!(BackendKind::parse("PJRT"), Some(BackendKind::Xla));
+/// assert_eq!(BackendKind::parse("fpga"), None);
+/// assert_eq!(BackendKind::Xla.to_string(), "xla");
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BackendKind {
     /// In-process softfloat execution of the artifact semantics.

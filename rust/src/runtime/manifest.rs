@@ -1,4 +1,4 @@
-//! Artifact manifest parsing.
+//! Artifact manifest parsing and builtin-manifest synthesis.
 //!
 //! `make artifacts` writes `artifacts/manifest.txt` with one line per AOT
 //! artifact (see python/compile/aot.py):
@@ -9,6 +9,11 @@
 //!
 //! `kind` is one of `mul`/`add`/`mac` (stream operators, fixed batch) or
 //! `gemm` (the tile datapath, shapes t_n x k_tile / k_tile x t_m).
+//!
+//! When no manifest exists on disk, the native backend synthesizes one in
+//! memory with [`builtin`], shaping the GEMM tile to the configured
+//! [`TileShape`] — the host-side analog of re-synthesizing the bitstream
+//! for a different `APFP_TILE_SIZE_N/M` (§IV-A).
 
 use std::path::{Path, PathBuf};
 
@@ -18,6 +23,101 @@ pub enum ManifestError {
     Io { path: PathBuf, source: std::io::Error },
     #[error("malformed manifest line {line}: {text:?}")]
     Malformed { line: usize, text: String },
+    #[error("builtin manifest needs bits to be a positive multiple of 512, got {0}")]
+    InvalidBits(u32),
+    #[error("degenerate tile geometry {n}x{m}x{k}: {reason}")]
+    InvalidTile { n: usize, m: usize, k: usize, reason: &'static str },
+}
+
+/// Hard cap on any single builtin tile dimension.  A tile is a *compute
+/// unit's* working set (decoded operand slots live per worker); dimensions
+/// beyond this are configuration mistakes, not workloads, and are rejected
+/// with a typed error instead of exhausting memory downstream.
+pub const MAX_TILE_DIM: usize = 1024;
+
+/// The GEMM tile geometry of a compute unit: `n x m` output tiles
+/// accumulated over `k`-deep K steps (the paper's `APFP_TILE_SIZE_N` /
+/// `APFP_TILE_SIZE_M` CMake knobs, plus the K-step depth of the §III
+/// datapath).
+///
+/// ```
+/// use apfp::runtime::manifest::TileShape;
+///
+/// let t = TileShape { n: 16, m: 8, k: 4 };
+/// t.validate().unwrap();
+/// assert_eq!(t.suffix(), "t16x8x4");
+/// assert_eq!(TileShape::default().suffix(), "t32"); // uniform tiles abbreviate
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileShape {
+    /// Output tile rows per compute unit.
+    pub n: usize,
+    /// Output tile columns per compute unit.
+    pub m: usize,
+    /// Inner-dimension depth of one K step.
+    pub k: usize,
+}
+
+impl Default for TileShape {
+    /// The paper's evaluated 32x32 output tile, with a matching K depth.
+    fn default() -> Self {
+        TileShape { n: 32, m: 32, k: 32 }
+    }
+}
+
+impl TileShape {
+    /// Reject degenerate geometry (zero or absurdly large tiles) with a
+    /// typed error.  Called by [`builtin`] and by
+    /// [`crate::config::ApfpConfig::validate`], so a bad shape surfaces at
+    /// configuration time instead of panicking in a worker thread.
+    pub fn validate(&self) -> Result<(), ManifestError> {
+        let err =
+            |reason| Err(ManifestError::InvalidTile { n: self.n, m: self.m, k: self.k, reason });
+        if self.n == 0 || self.m == 0 || self.k == 0 {
+            return err("tile dimensions must be >= 1");
+        }
+        if self.n > MAX_TILE_DIM || self.m > MAX_TILE_DIM || self.k > MAX_TILE_DIM {
+            return err("tile dimension exceeds MAX_TILE_DIM");
+        }
+        Ok(())
+    }
+
+    /// Artifact-name suffix: `t8` for uniform 8x8x8 tiles (the historical
+    /// builtin name), `t16x8x4` otherwise.
+    pub fn suffix(&self) -> String {
+        if self.n == self.m && self.m == self.k {
+            format!("t{}", self.n)
+        } else {
+            format!("t{}x{}x{}", self.n, self.m, self.k)
+        }
+    }
+
+    /// Tile geometry from `APFP_TILE_N` / `APFP_TILE_M` / `APFP_TILE_K`
+    /// (long forms `APFP_TILE_SIZE_*` also accepted), defaulting each
+    /// missing dimension.  Unparsable values warn on stderr and fall back
+    /// to the default rather than failing a whole run — the same contract
+    /// as `APFP_BACKEND`; validation still happens at device construction.
+    pub fn from_env() -> Self {
+        let dim = |short: &str, long: &str, default: usize| {
+            for key in [short, long] {
+                if let Ok(v) = std::env::var(key) {
+                    match v.parse::<usize>() {
+                        Ok(n) => return n,
+                        Err(_) => {
+                            eprintln!("{key}={v:?} is not a tile size; using {default}")
+                        }
+                    }
+                }
+            }
+            default
+        };
+        let d = TileShape::default();
+        TileShape {
+            n: dim("APFP_TILE_N", "APFP_TILE_SIZE_N", d.n),
+            m: dim("APFP_TILE_M", "APFP_TILE_SIZE_M", d.m),
+            k: dim("APFP_TILE_K", "APFP_TILE_SIZE_K", d.k),
+        }
+    }
 }
 
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -64,12 +164,19 @@ impl ArtifactMeta {
 }
 
 /// The in-memory manifest the native backend synthesizes when no artifact
-/// directory exists: the stream operators plus an 8x8x8 GEMM tile at one
-/// packed width.  Names match what `make artifacts` would emit
-/// (`mul_512`, ..., `gemm_512_t8`), so tests and callers address builtin
-/// and on-disk artifacts identically.
-pub fn builtin(bits: u32) -> Vec<ArtifactMeta> {
-    assert!(bits % 512 == 0 && bits >= 512, "Fig. 1 packing");
+/// directory exists: the stream operators plus a GEMM tile at the
+/// configured [`TileShape`], at one packed width.  Names match what
+/// `make artifacts` would emit (`mul_512`, ..., `gemm_512_t8`), so tests
+/// and callers address builtin and on-disk artifacts identically.
+///
+/// Degenerate geometry (zero, oversized tiles, bad packing width) is a
+/// typed [`ManifestError`], never a panic — `Device::new` surfaces it
+/// before any worker spawns.
+pub fn builtin(bits: u32, tile: TileShape) -> Result<Vec<ArtifactMeta>, ManifestError> {
+    if bits % 512 != 0 || bits == 0 {
+        return Err(ManifestError::InvalidBits(bits));
+    }
+    tile.validate()?;
     let limbs = ((bits - 64) / 8) as usize;
     let stream = |prefix: &str, kind: ArtifactKind| ArtifactMeta {
         name: format!("{prefix}_{bits}"),
@@ -82,29 +189,30 @@ pub fn builtin(bits: u32) -> Vec<ArtifactMeta> {
         limbs,
         file: "<builtin>".to_string(),
     };
-    vec![
+    Ok(vec![
         stream("mul", ArtifactKind::Mul),
         stream("add", ArtifactKind::Add),
         stream("mac", ArtifactKind::Mac),
         ArtifactMeta {
-            name: format!("gemm_{bits}_t8"),
+            name: format!("gemm_{bits}_{}", tile.suffix()),
             kind: ArtifactKind::Gemm,
             bits,
             batch: 0,
-            t_n: 8,
-            t_m: 8,
-            k_tile: 8,
+            t_n: tile.n,
+            t_m: tile.m,
+            k_tile: tile.k,
             limbs,
             file: "<builtin>".to_string(),
         },
-    ]
+    ])
 }
 
-/// Builtin manifests for both packed widths the paper evaluates.
-pub fn builtin_all() -> Vec<ArtifactMeta> {
-    let mut all = builtin(512);
-    all.extend(builtin(1024));
-    all
+/// Builtin manifests for both packed widths the paper evaluates, tiled to
+/// one configured shape.
+pub fn builtin_all(tile: TileShape) -> Result<Vec<ArtifactMeta>, ManifestError> {
+    let mut all = builtin(512, tile)?;
+    all.extend(builtin(1024, tile)?);
+    Ok(all)
 }
 
 /// Parse `<dir>/manifest.txt`.
@@ -183,8 +291,9 @@ mod tests {
 
     #[test]
     fn builtin_manifests_are_well_formed() {
+        let tile = TileShape { n: 8, m: 8, k: 8 };
         for bits in [512u32, 1024] {
-            let m = builtin(bits);
+            let m = builtin(bits, tile).unwrap();
             assert_eq!(m.len(), 4);
             for kind in [ArtifactKind::Mul, ArtifactKind::Add, ArtifactKind::Mac] {
                 let a = m.iter().find(|a| a.kind == kind).unwrap();
@@ -194,9 +303,44 @@ mod tests {
             }
             let g = m.iter().find(|a| a.kind == ArtifactKind::Gemm).unwrap();
             assert_eq!((g.t_n, g.t_m, g.k_tile), (8, 8, 8));
-            assert_eq!(g.name, format!("gemm_{bits}_t8"));
+            assert_eq!(g.name, format!("gemm_{bits}_t8"), "historical uniform-tile name");
         }
-        assert_eq!(builtin_all().len(), 8);
+        assert_eq!(builtin_all(tile).unwrap().len(), 8);
+    }
+
+    #[test]
+    fn builtin_tiles_follow_the_configured_shape() {
+        let m = builtin(512, TileShape { n: 16, m: 8, k: 4 }).unwrap();
+        let g = m.iter().find(|a| a.kind == ArtifactKind::Gemm).unwrap();
+        assert_eq!((g.t_n, g.t_m, g.k_tile), (16, 8, 4));
+        assert_eq!(g.name, "gemm_512_t16x8x4");
+        let d = builtin(1024, TileShape::default()).unwrap();
+        let g = d.iter().find(|a| a.kind == ArtifactKind::Gemm).unwrap();
+        assert_eq!(g.name, "gemm_1024_t32");
+    }
+
+    #[test]
+    fn builtin_rejects_degenerate_geometry_with_typed_errors() {
+        let ok = TileShape::default();
+        assert!(matches!(builtin(500, ok), Err(ManifestError::InvalidBits(500))));
+        assert!(matches!(builtin(0, ok), Err(ManifestError::InvalidBits(0))));
+        for bad in [
+            TileShape { n: 0, m: 8, k: 8 },
+            TileShape { n: 8, m: 0, k: 8 },
+            TileShape { n: 8, m: 8, k: 0 },
+            TileShape { n: MAX_TILE_DIM + 1, m: 8, k: 8 },
+            TileShape { n: 8, m: 8, k: MAX_TILE_DIM + 1 },
+        ] {
+            assert!(
+                matches!(builtin(512, bad), Err(ManifestError::InvalidTile { .. })),
+                "{bad:?} must be rejected"
+            );
+            assert!(bad.validate().is_err());
+        }
+        // the boundary itself is legal
+        let huge = TileShape { n: MAX_TILE_DIM, m: 1, k: 1 };
+        huge.validate().unwrap();
+        assert!(builtin(512, huge).is_ok());
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //!   the software baseline;
 //! * [`backend::XlaBackend`] (`APFP_BACKEND=xla`) loads AOT artifacts (HLO
 //!   text), compiles them on the PJRT CPU client and executes them.  In
-//!   offline builds it compiles against the [`xla`] stub module and fails
+//!   offline builds it compiles against the `xla` stub module and fails
 //!   at client construction (workers degrade gracefully).
 //!
 //! One `Runtime` is **thread-local by construction** (the `xla` crate's
@@ -33,7 +33,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, Context, Result};
 
 pub use backend::{Backend, BackendKind};
-pub use manifest::{ArtifactKind, ArtifactMeta};
+pub use manifest::{ArtifactKind, ArtifactMeta, TileShape};
 pub use native::NativeBackend;
 
 use crate::pack::PlaneBatch;
@@ -45,18 +45,22 @@ pub struct Runtime {
 
 /// Load artifact metadata for a backend: the on-disk manifest when present,
 /// else (native only, and only when the manifest is genuinely *absent*) the
-/// builtin in-memory manifest.  A manifest that exists but cannot be read
-/// (permissions, it's a directory, ...) stays a hard error on every
-/// backend — silently substituting builtin tile geometry for a configured
-/// one would be worse than failing.  The XLA path cannot run without HLO
-/// files, so a missing manifest stays a hard error there too.
-pub fn load_metas(artifact_dir: &Path, kind: BackendKind) -> Result<Vec<ArtifactMeta>> {
+/// builtin in-memory manifest shaped to `tile`.  A manifest that exists but
+/// cannot be read (permissions, it's a directory, ...) stays a hard error
+/// on every backend — silently substituting builtin tile geometry for a
+/// configured one would be worse than failing.  The XLA path cannot run
+/// without HLO files, so a missing manifest stays a hard error there too.
+pub fn load_metas(
+    artifact_dir: &Path,
+    kind: BackendKind,
+    tile: TileShape,
+) -> Result<Vec<ArtifactMeta>> {
     match manifest::load(artifact_dir) {
         Ok(m) => Ok(m),
         Err(manifest::ManifestError::Io { ref source, .. })
             if kind == BackendKind::Native && source.kind() == std::io::ErrorKind::NotFound =>
         {
-            Ok(manifest::builtin_all())
+            manifest::builtin_all(tile).context("synthesizing builtin manifest")
         }
         Err(e) => Err(e).context("loading artifact manifest"),
     }
@@ -64,14 +68,27 @@ pub fn load_metas(artifact_dir: &Path, kind: BackendKind) -> Result<Vec<Artifact
 
 impl Runtime {
     /// Create a runtime over an artifact directory on the `$APFP_BACKEND`
-    /// backend (default: native, which works without any artifacts).
+    /// backend (default: native, which works without any artifacts),
+    /// builtin tiles shaped by `$APFP_TILE_N/M/K`.
     pub fn new(artifact_dir: &Path) -> Result<Self> {
         Self::with_backend(artifact_dir, BackendKind::from_env())
     }
 
-    /// Create a runtime on an explicit backend.
+    /// Create a runtime on an explicit backend (builtin tiles still honor
+    /// the `APFP_TILE_*` environment, like [`Runtime::new`]).
     pub fn with_backend(artifact_dir: &Path, kind: BackendKind) -> Result<Self> {
-        let metas = load_metas(artifact_dir, kind)?;
+        Self::with_backend_tiled(artifact_dir, kind, TileShape::from_env())
+    }
+
+    /// Create a runtime on an explicit backend with an explicit builtin
+    /// tile geometry — what each compute-unit worker uses so its synthesized
+    /// manifest matches the leader's partition exactly.
+    pub fn with_backend_tiled(
+        artifact_dir: &Path,
+        kind: BackendKind,
+        tile: TileShape,
+    ) -> Result<Self> {
+        let metas = load_metas(artifact_dir, kind, tile)?;
         let backend: Box<dyn Backend> = match kind {
             BackendKind::Native => Box::new(NativeBackend::new()),
             BackendKind::Xla => Box::new(backend::XlaBackend::new(artifact_dir)?),
@@ -186,8 +203,22 @@ mod tests {
             }
         }
         // warm is a no-op but must resolve names
-        rt.warm(&["mul_512", "gemm_1024_t8"]).unwrap();
+        let gemm_name = rt.find(ArtifactKind::Gemm, 1024).unwrap().name.clone();
+        rt.warm(&["mul_512", &gemm_name]).unwrap();
         assert!(rt.warm(&["nope"]).is_err());
+    }
+
+    #[test]
+    fn builtin_manifest_follows_an_explicit_tile_shape() {
+        let dir = std::env::temp_dir().join("apfp_rt_tiled/definitely/absent");
+        let tile = TileShape { n: 16, m: 8, k: 4 };
+        let rt = Runtime::with_backend_tiled(&dir, BackendKind::Native, tile).unwrap();
+        let g = rt.find(ArtifactKind::Gemm, 512).unwrap();
+        assert_eq!((g.t_n, g.t_m, g.k_tile), (16, 8, 4));
+        assert_eq!(g.name, "gemm_512_t16x8x4");
+        // degenerate geometry is a clean error, not a panic
+        let bad = TileShape { n: 0, m: 8, k: 8 };
+        assert!(Runtime::with_backend_tiled(&dir, BackendKind::Native, bad).is_err());
     }
 
     #[test]

@@ -7,8 +7,8 @@
 //! RNDZ pipeline (`mul_into` / `add_into` / `mac_into` against one
 //! [`Scratch`] arena per backend), and re-encodes into the caller's planes.
 //! Nothing is materialized per element, so a steady-state
-//! [`NativeBackend::exec_gemm_tile`] loop performs **zero heap
-//! allocations** after warmup (proven in `tests/alloc_free.rs`).
+//! [`Backend::exec_gemm_tile`] loop performs **zero heap allocations**
+//! after warmup (proven in `tests/alloc_free.rs`).
 //!
 //! Because the backend runs real artifact *semantics* — fixed tile shapes,
 //! zero-padded partial tiles, sequential-K accumulation — the whole device
@@ -168,12 +168,19 @@ impl Backend for NativeBackend {
         }
         // Sequential K per output element — the artifact's accumulation
         // order, which composed over the coordinator's ascending K-step
-        // loop reproduces baseline::gemm_serial bit for bit.
+        // loop reproduces baseline::gemm_serial bit for bit.  A MAC whose
+        // product is zero is skipped: `acc + 0` is exact under RNDZ (the
+        // adder copies the accumulator through unchanged), so zero-padded
+        // lanes — edge tiles clipped in any of the three dimensions — cost
+        // a flag check instead of a full multiply-add.
         for i in 0..tn {
             for j in 0..tm {
                 c.get_into(i * tm + j, &mut st.acc);
                 for k in 0..kt {
                     let (ax, bx) = (&st.a_vals[i * kt + k], &st.b_vals[k * tm + j]);
+                    if ax.is_zero() || bx.is_zero() {
+                        continue;
+                    }
                     st.acc.mac_into(ax, bx, &mut st.scratch);
                 }
                 c.set(i * tm + j, &st.acc);
@@ -190,7 +197,7 @@ mod tests {
     use crate::testkit::{rand_ap, Rng};
 
     fn metas(bits: u32) -> Vec<ArtifactMeta> {
-        manifest::builtin(bits)
+        manifest::builtin(bits, manifest::TileShape { n: 8, m: 8, k: 8 }).unwrap()
     }
 
     fn meta_of(bits: u32, kind: ArtifactKind) -> ArtifactMeta {
@@ -247,9 +254,15 @@ mod tests {
             let meta = meta_of(bits, ArtifactKind::Gemm);
             let (tn, tm, kt) = (meta.t_n, meta.t_m, meta.k_tile);
             let mut rng = Rng::from_seed(9);
-            let (av, ap) = batch_of(&mut rng, tn * kt, prec);
-            let (bv, bp) = batch_of(&mut rng, kt * tm, prec);
+            let (mut av, _) = batch_of(&mut rng, tn * kt, prec);
+            let (mut bv, _) = batch_of(&mut rng, kt * tm, prec);
             let (cv, cp) = batch_of(&mut rng, tn * tm, prec);
+            // zero lanes exercise the skip path: the reference mac chain
+            // below still includes them, pinning `acc + 0*b == acc` exactly
+            av[3] = ApFloat::zero(prec);
+            bv[kt * tm / 2] = ApFloat::zero(prec);
+            let ap = PlaneBatch::from_slice(&av, prec);
+            let bp = PlaneBatch::from_slice(&bv, prec);
             let mut c = cp.clone();
             be.exec_gemm_tile(&meta, &ap, &bp, &mut c).unwrap();
             // second in-place step accumulates another A@B on top

@@ -9,7 +9,7 @@
 //! crate, and skip cleanly when the runtime cannot come up.
 
 use apfp::pack::PlaneBatch;
-use apfp::runtime::{default_artifact_dir, BackendKind, Runtime};
+use apfp::runtime::{default_artifact_dir, ArtifactKind, BackendKind, Runtime};
 use apfp::softfloat::ApFloat;
 use apfp::testkit::Rng;
 
@@ -94,7 +94,7 @@ fn mac_stream_bit_exact_1024() {
 #[test]
 fn gemm_tile_bit_exact_512() {
     let Some(rt) = runtime() else { return };
-    let meta = rt.meta("gemm_512_t8").unwrap().clone();
+    let meta = rt.find(ArtifactKind::Gemm, 512).unwrap().clone();
     let (tn, tm, kt) = (meta.t_n, meta.t_m, meta.k_tile);
     let mut rng = Rng::from_seed(4);
     let a: Vec<ApFloat> = (0..tn * kt).map(|_| rand_ap(&mut rng, 448)).collect();
@@ -102,7 +102,7 @@ fn gemm_tile_bit_exact_512() {
     let c: Vec<ApFloat> = (0..tn * tm).map(|_| rand_ap(&mut rng, 448)).collect();
     let mut got = PlaneBatch::from_slice(&c, 448);
     rt.exec_gemm_tile(
-        "gemm_512_t8",
+        &meta.name,
         &PlaneBatch::from_slice(&a, 448),
         &PlaneBatch::from_slice(&b, 448),
         &mut got,
@@ -126,7 +126,7 @@ fn gemm_tile_k_steps_accumulate_in_place_1024() {
     // Two artifact invocations against the same C planes — the §III
     // K-step loop the worker runs — must equal one long mac chain.
     let Some(rt) = runtime() else { return };
-    let meta = rt.meta("gemm_1024_t8").unwrap().clone();
+    let meta = rt.find(ArtifactKind::Gemm, 1024).unwrap().clone();
     let (tn, tm, kt) = (meta.t_n, meta.t_m, meta.k_tile);
     let mut rng = Rng::from_seed(5);
     let a1: Vec<ApFloat> = (0..tn * kt).map(|_| rand_ap(&mut rng, 960)).collect();
@@ -137,7 +137,7 @@ fn gemm_tile_k_steps_accumulate_in_place_1024() {
     let mut got = PlaneBatch::from_slice(&c, 960);
     for (a, b) in [(&a1, &b1), (&a2, &b2)] {
         rt.exec_gemm_tile(
-            "gemm_1024_t8",
+            &meta.name,
             &PlaneBatch::from_slice(a, 960),
             &PlaneBatch::from_slice(b, 960),
             &mut got,

@@ -1,0 +1,94 @@
+//! Property test for the config-driven tile geometry: randomized
+//! `tile_n`/`tile_m`/`tile_k` (including non-divisible edge shapes, tiles
+//! larger than the matrix, and single-row/column degenerates) driven
+//! through the scheduler and the native backend must stay bit-identical to
+//! `baseline::gemm_serial` — the same acceptance criterion the paper
+//! applies to its FPGA against MPFR, here applied to every legal tiling.
+//!
+//! On `APFP_BACKEND=xla` without artifacts these tests skip (the builtin
+//! manifest whose geometry is under test is a native-backend feature).
+
+use apfp::baseline;
+use apfp::config::ApfpConfig;
+use apfp::coordinator::{Device, Matrix};
+use apfp::runtime::BackendKind;
+use apfp::testkit::Rng;
+
+fn native_device(cfg: ApfpConfig) -> Option<Device> {
+    // A guaranteed-absent artifact dir: the property is about the *builtin*
+    // manifest's geometry, so an on-disk artifacts/manifest.txt (whose
+    // compiled geometry deliberately wins over the config) must not leak in.
+    let dir = std::env::temp_dir().join("apfp_tile_property_no_artifacts/none");
+    if cfg.backend != BackendKind::Native {
+        eprintln!("skipped: tile-geometry property is a builtin-manifest feature");
+        return None;
+    }
+    Some(Device::new(cfg, &dir).expect("native device must open on a clean checkout"))
+}
+
+#[test]
+fn randomized_tile_shapes_stay_bit_exact() {
+    let mut rng = Rng::from_seed(0x7112E);
+    for case in 0..18u64 {
+        let tile_n = rng.range_i64(1, 9) as usize;
+        let tile_m = rng.range_i64(1, 9) as usize;
+        let tile_k = rng.range_i64(1, 9) as usize;
+        let cus = rng.range_i64(1, 3) as usize;
+        let n = rng.range_i64(1, 19) as usize;
+        let k = rng.range_i64(1, 14) as usize;
+        let m = rng.range_i64(1, 19) as usize;
+        let cfg = ApfpConfig { compute_units: cus, tile_n, tile_m, tile_k, ..Default::default() };
+        let Some(dev) = native_device(cfg) else { return };
+
+        let a = Matrix::random(n, k, 448, 1000 + case, 40);
+        let b = Matrix::random(k, m, 448, 2000 + case, 40);
+        let c = Matrix::random(n, m, 448, 3000 + case, 40);
+        let (got, stats) = dev.gemm(&a, &b, &c).unwrap();
+        let want = baseline::gemm_serial(&a, &b, &c);
+        assert_eq!(
+            got, want,
+            "case {case}: {n}x{k}x{m} on {cus} CUs with {tile_n}x{tile_m}x{tile_k} tiles"
+        );
+        assert!(stats.tiles > 0 && stats.artifact_calls >= stats.tiles);
+    }
+}
+
+#[test]
+fn randomized_tiles_through_a_chained_stream() {
+    // The same property through the batched API: two chained launches
+    // (C += A@B, then E += C@D with C still device-resident) across random
+    // tile geometry, against two serial baseline applications.
+    let mut rng = Rng::from_seed(0x57BEA);
+    for case in 0..8u64 {
+        let tile_n = rng.range_i64(1, 7) as usize;
+        let tile_m = rng.range_i64(1, 7) as usize;
+        let tile_k = rng.range_i64(1, 7) as usize;
+        let cus = rng.range_i64(1, 3) as usize;
+        let n = rng.range_i64(1, 13) as usize;
+        let k = rng.range_i64(1, 10) as usize;
+        let m = rng.range_i64(1, 13) as usize;
+        let p = rng.range_i64(1, 10) as usize;
+        let cfg = ApfpConfig { compute_units: cus, tile_n, tile_m, tile_k, ..Default::default() };
+        let Some(dev) = native_device(cfg) else { return };
+
+        let a = Matrix::random(n, k, 448, 4000 + case, 30);
+        let b = Matrix::random(k, m, 448, 5000 + case, 30);
+        let c = Matrix::random(n, m, 448, 6000 + case, 30);
+        let d = Matrix::random(m, p, 448, 7000 + case, 30);
+        let e = Matrix::random(n, p, 448, 8000 + case, 30);
+
+        let mut s = dev.stream().unwrap();
+        let (ha, hb, hc) = (s.upload(&a), s.upload(&b), s.upload(&c));
+        let (hd, he) = (s.upload(&d), s.upload(&e));
+        s.enqueue_gemm(ha, hb, hc).unwrap();
+        s.enqueue_gemm(hc, hd, he).unwrap();
+
+        let c1 = baseline::gemm_serial(&a, &b, &c);
+        let want = baseline::gemm_serial(&c1, &d, &e);
+        let shapes = format!(
+            "case {case}: {n}x{k}x{m}x{p} on {cus} CUs with {tile_n}x{tile_m}x{tile_k} tiles"
+        );
+        assert_eq!(s.download(he).unwrap(), want, "{shapes}");
+        assert_eq!(s.download(hc).unwrap(), c1, "{shapes}");
+    }
+}
