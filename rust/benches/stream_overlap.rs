@@ -1,0 +1,107 @@
+//! Pipelining of independent launches through the hazard tracker (see
+//! BENCH.md): a *dependent* chain — every `enqueue_gemm(c, b, c)` reads
+//! the previous launch's output, so each enqueue must drain its
+//! predecessor — against *independent* launches over disjoint C buffers,
+//! which the per-launch hazard check keeps in flight simultaneously so
+//! leader-side drain/writeback of one launch overlaps worker compute of
+//! the next.
+//!
+//! The structural claim is asserted, not just timed: the dependent chain
+//! must never have two launches in flight (`inflight_max == 1` on a fresh
+//! device), and the independent round must (`inflight_max >= 2`) — the
+//! ISSUE 5 acceptance criterion.  Total arithmetic is identical on both
+//! paths (same launch count over the same shapes), so the wall-time delta
+//! is pure pipeline overlap.
+
+use apfp::bench_util::{bench, fmt_duration, Table};
+use apfp::config::ApfpConfig;
+use apfp::coordinator::{Device, Matrix};
+use apfp::runtime::BackendKind;
+
+fn main() {
+    let cus = std::thread::available_parallelism().map(|v| v.get().min(4)).unwrap_or(2);
+    let cfg = ApfpConfig {
+        compute_units: cus,
+        tile_n: 8,
+        tile_m: 8,
+        tile_k: 8,
+        ..Default::default()
+    };
+    if cfg.backend != BackendKind::Native {
+        eprintln!("stream_overlap: needs the native backend (APFP_BACKEND=native)");
+        return;
+    }
+    let dir = apfp::runtime::default_artifact_dir();
+
+    let n = 24usize; // matrix side
+    let chain = 8usize; // launches per round
+    let a = Matrix::random(n, n, 448, 1, 25);
+    let b = Matrix::random(n, n, 448, 2, 25);
+    let c0 = Matrix::zeros(n, n, 448);
+
+    println!(
+        "== stream_overlap: {chain} {n}x{n} GEMM launches, {} CUs, tiles {}x{}x{} ==\n",
+        cfg.compute_units, cfg.tile_n, cfg.tile_m, cfg.tile_k
+    );
+
+    // -- dependent chain: every launch reads the previous C ---------------
+    // Fresh device per path so inflight_max (a high-water mark) is
+    // attributable to that path alone.
+    let dev_dep = Device::new(cfg.clone(), &dir).expect("native device");
+    let dependent = bench("dependent chain x N", 1, 5, || {
+        let mut s = dev_dep.stream().expect("stream");
+        let hb = s.upload(&b);
+        let hc = s.upload(&c0);
+        for _ in 0..chain {
+            s.enqueue_gemm(hc, hb, hc).expect("enqueue");
+        }
+        std::hint::black_box(&s.download(hc).expect("download"));
+    });
+    let dep_metrics = dev_dep.metrics();
+    assert_eq!(
+        dep_metrics.inflight_max, 1,
+        "a dependent chain must drain between launches (RAW hazard)"
+    );
+
+    // -- independent launches: disjoint C buffers stay in flight ----------
+    let dev_ind = Device::new(cfg.clone(), &dir).expect("native device");
+    let independent = bench("independent x N", 1, 5, || {
+        let mut s = dev_ind.stream().expect("stream");
+        let ha = s.upload(&a);
+        let hb = s.upload(&b);
+        let hcs: Vec<_> = (0..chain).map(|_| s.upload(&c0)).collect();
+        for &hc in &hcs {
+            s.enqueue_gemm(ha, hb, hc).expect("enqueue");
+        }
+        s.wait().expect("wait");
+        std::hint::black_box(&s.download(hcs[chain - 1]).expect("download"));
+    });
+    let ind_metrics = dev_ind.metrics();
+    assert!(
+        ind_metrics.inflight_max >= 2,
+        "independent launches must overlap (got inflight_max {})",
+        ind_metrics.inflight_max
+    );
+
+    println!("{}", dependent.report());
+    println!("{}", independent.report());
+    let speedup = independent.speedup_vs(&dependent);
+    println!("\nindependent vs dependent: {speedup:.2}x on wall time");
+
+    let mut t = Table::new(&["path", "launches", "inflight_max", "drain/launch", "median"]);
+    t.row(&[
+        "dependent".into(),
+        dep_metrics.launches.to_string(),
+        dep_metrics.inflight_max.to_string(),
+        fmt_duration(dep_metrics.drain_ns_per_launch() / 1e9),
+        fmt_duration(dependent.median_s()),
+    ]);
+    t.row(&[
+        "independent".into(),
+        ind_metrics.launches.to_string(),
+        ind_metrics.inflight_max.to_string(),
+        fmt_duration(ind_metrics.drain_ns_per_launch() / 1e9),
+        fmt_duration(independent.median_s()),
+    ]);
+    println!("\n{}", t.render());
+}

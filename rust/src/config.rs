@@ -53,6 +53,32 @@ pub enum ConfigError {
     Invalid(String),
 }
 
+/// Test-only fault injection ("failpoints") for the device stack.
+///
+/// The default is no faults, and nothing sets these from config files or
+/// the environment on purpose: faults are wired explicitly by the
+/// failure-path tests (`tests/stream_faults.rs`) so the stream's error
+/// handling — typed errors, pool recovery, no hangs, no panics — stays
+/// under test without a way to trip it in production.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// Fail `Runtime` construction on this compute unit: its worker comes
+    /// up as a reply-only drain and every tile routed to it reports an
+    /// error (the same path a real backend-init failure takes).
+    pub init_fail_cu: Option<usize>,
+    /// Inject a failure on the output tile with this `(row, column)`
+    /// origin, on whichever CU owns it.
+    pub fail_tile: Option<(usize, usize)>,
+    /// Make the injected tile fault a panic (exercising the worker's
+    /// catch-and-reply containment) instead of a returned error.
+    pub panic_tile: bool,
+    /// Kill the worker thread (it exits without replying or draining its
+    /// queue) when it receives the tile with this `(row, column)` origin —
+    /// models a crashed CU, exercising the stream's reply-liveness
+    /// detection and poisoning instead of a hang.
+    pub die_on_tile: Option<(usize, usize)>,
+}
+
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ApfpConfig {
     /// Total packed bits per number (Fig. 1), incl. the 64-bit head word.
@@ -75,6 +101,9 @@ pub struct ApfpConfig {
     /// in-process executor (default; works on a clean checkout) or the
     /// XLA/PJRT artifact path.
     pub backend: BackendKind,
+    /// Test-only failure injection (see [`FaultSpec`]); no faults by
+    /// default and not settable from files or the environment.
+    pub faults: FaultSpec,
 }
 
 impl Default for ApfpConfig {
@@ -94,6 +123,7 @@ impl Default for ApfpConfig {
             add_base_bits: 64,
             worker_threads: 0, // 0 = one per compute unit
             backend: BackendKind::from_env(),
+            faults: FaultSpec::default(),
         }
     }
 }

@@ -62,6 +62,7 @@ impl Device {
                     artifact_dir.to_path_buf(),
                     config.backend,
                     config.tile_shape(),
+                    config.faults,
                     metrics.clone(),
                 )
             })
@@ -106,7 +107,8 @@ impl Device {
     // ---- GEMM (§III) ------------------------------------------------------
 
     /// Open a batched GEMM stream: device-resident buffers, packed once,
-    /// with chained launches that keep C on the device (see
+    /// with chained launches that keep C on the device and hazard-tracked
+    /// pipelining of launches with disjoint buffer sets (see
     /// [`crate::coordinator::stream`]).
     pub fn stream(&self) -> Result<DeviceStream<'_>> {
         let meta = self.artifact_for(ArtifactKind::Gemm)?.clone();
@@ -173,13 +175,20 @@ impl Device {
                 .iter()
                 .map(|o| PlaneBatch::from_slice(&o[start..end], prec))
                 .collect();
-            self.workers[w % self.workers.len()].submit(Job::Stream {
+            let cu = w % self.workers.len();
+            let job = Job::Stream {
                 artifact: artifact.clone(),
                 kind: stream_kind,
                 operands: planes,
                 offset: start,
                 reply: reply_tx.clone(),
-            });
+            };
+            if self.workers[cu].submit(job).is_err() {
+                // worker thread gone: abort with a typed-ish error instead
+                // of panicking; replies already in flight are discarded
+                // with the receiver
+                return Err(anyhow!("compute unit {cu} is gone; stream operator aborted"));
+            }
             pending += 1;
         }
         drop(reply_tx);

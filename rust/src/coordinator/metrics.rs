@@ -24,6 +24,15 @@ pub struct Metrics {
     /// B tile-grids reused from a stream's cache (the packing a batched
     /// launch amortized away; always 0 for one-shot calls).
     pub panel_reuses: AtomicU64,
+    /// High-water mark of launches simultaneously in flight on any stream
+    /// (hazard-tracked pipelining: >= 2 proves independent launches
+    /// overlapped instead of draining between enqueues).
+    pub inflight_max: AtomicU64,
+    /// Nanoseconds the leader spent blocked collecting tile replies —
+    /// divide by `launches` for the per-launch drain time.
+    pub drain_ns: AtomicU64,
+    /// Launches retired (drained and written back, or failed cleanly).
+    pub launches: AtomicU64,
 }
 
 impl Metrics {
@@ -63,6 +72,19 @@ impl Metrics {
         self.panel_reuses.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Record an observed in-flight launch depth; keeps the maximum.
+    pub fn record_inflight(&self, n: u64) {
+        self.inflight_max.fetch_max(n, Ordering::Relaxed);
+    }
+
+    pub fn add_drain_ns(&self, n: u64) {
+        self.drain_ns.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_launches(&self, n: u64) {
+        self.launches.fetch_add(n, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             tiles: self.tiles.load(Ordering::Relaxed),
@@ -73,6 +95,9 @@ impl Metrics {
             enqueues: self.enqueues.load(Ordering::Relaxed),
             panel_builds: self.panel_builds.load(Ordering::Relaxed),
             panel_reuses: self.panel_reuses.load(Ordering::Relaxed),
+            inflight_max: self.inflight_max.load(Ordering::Relaxed),
+            drain_ns: self.drain_ns.load(Ordering::Relaxed),
+            launches: self.launches.load(Ordering::Relaxed),
         }
     }
 }
@@ -87,6 +112,9 @@ pub struct MetricsSnapshot {
     pub enqueues: u64,
     pub panel_builds: u64,
     pub panel_reuses: u64,
+    pub inflight_max: u64,
+    pub drain_ns: u64,
+    pub launches: u64,
 }
 
 impl MetricsSnapshot {
@@ -98,6 +126,15 @@ impl MetricsSnapshot {
             0.0
         } else {
             self.marshal_ns as f64 / total as f64
+        }
+    }
+
+    /// Mean leader-side drain time per retired launch, in nanoseconds.
+    pub fn drain_ns_per_launch(&self) -> f64 {
+        if self.launches == 0 {
+            0.0
+        } else {
+            self.drain_ns as f64 / self.launches as f64
         }
     }
 }
@@ -116,11 +153,26 @@ mod tests {
         m.add_enqueues(2);
         m.add_panel_builds(1);
         m.add_panel_reuses(4);
+        m.add_drain_ns(500);
+        m.add_launches(2);
         let s = m.snapshot();
         assert_eq!(s.tiles, 5);
         assert_eq!(s.artifact_calls, 7);
         assert_eq!(s.macs, 1000);
         assert_eq!((s.enqueues, s.panel_builds, s.panel_reuses), (2, 1, 4));
+        assert_eq!((s.drain_ns, s.launches), (500, 2));
+        assert!((s.drain_ns_per_launch() - 250.0).abs() < 1e-12);
+        assert_eq!(Metrics::new().snapshot().drain_ns_per_launch(), 0.0);
+    }
+
+    #[test]
+    fn inflight_max_is_a_high_water_mark() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().inflight_max, 0);
+        m.record_inflight(1);
+        m.record_inflight(3);
+        m.record_inflight(2);
+        assert_eq!(m.snapshot().inflight_max, 3, "fetch_max keeps the peak");
     }
 
     #[test]

@@ -10,8 +10,11 @@
 //!   operators, and the tiled GEMM launch (CUDA-like API);
 //! * [`stream::DeviceStream`] — the batched launch API: device-resident
 //!   buffers packed once, shared B tile grids, chained GEMMs whose C stays
-//!   on the device between launches (`Device::gemm` is its one-shot
-//!   wrapper);
+//!   on the device between launches, and per-launch hazard tracking that
+//!   lets launches with disjoint buffer sets pipeline through the worker
+//!   queues while dependent chains stay serialized (`Device::gemm` is its
+//!   one-shot wrapper; failures surface as typed [`stream::StreamError`]s,
+//!   never panics);
 //! * [`worker`] — one OS thread per compute unit, each owning its own
 //!   [`crate::runtime::Runtime`] on the configured backend and tile
 //!   geometry (its own "circuit replica") and executing tile jobs from a
@@ -38,4 +41,4 @@ pub mod worker;
 
 pub use device::{Device, GemmStats};
 pub use matrix::Matrix;
-pub use stream::{BufId, DeviceStream};
+pub use stream::{BufId, DeviceStream, StreamError};

@@ -86,6 +86,18 @@ impl Partition {
         self.m.div_ceil(self.tile_m)
     }
 
+    /// Total output tiles across every CU's band — the number of tile
+    /// replies one launch produces (the stream sizes a launch's bounded
+    /// reply channel with this so a worker never blocks sending a result).
+    pub fn total_tiles(&self) -> usize {
+        (0..self.compute_units)
+            .map(|cu| {
+                let (start, end) = self.band(cu);
+                (end - start).div_ceil(self.tile_n) * self.m_tiles()
+            })
+            .sum()
+    }
+
     /// All tiles across all CUs (diagnostics / tests).
     pub fn all_tiles(&self) -> Vec<Tile> {
         (0..self.compute_units).flat_map(|cu| self.tiles_for(cu)).collect()
@@ -190,6 +202,14 @@ mod tests {
             for (r, &h) in owner.iter().enumerate() {
                 assert_eq!(h, 1, "row {r} owned {h} times (n={n} p={p})");
             }
+        }
+    }
+
+    #[test]
+    fn total_tiles_matches_enumeration() {
+        for (n, m, p) in [(20, 20, 3), (37, 23, 3), (65, 16, 4), (8, 8, 4), (2, 8, 4), (1, 1, 1)] {
+            let pt = part(n, m, 16, p);
+            assert_eq!(pt.total_tiles(), pt.all_tiles().len(), "n={n} m={m} p={p}");
         }
     }
 

@@ -1,4 +1,5 @@
-//! The batched device stream — "keep data on the device" (§IV-B) as an API.
+//! The batched device stream — "keep data on the device" (§IV-B) as an API,
+//! with hazard-tracked pipelining of independent launches.
 //!
 //! A [`DeviceStream`] owns device-resident buffers ([`DeviceBuf`], packed
 //! limb-plane panels) and launches GEMMs against them by handle:
@@ -8,25 +9,63 @@
 //! * [`DeviceStream::enqueue_gemm`] launches `C += A @ B` over the worker
 //!   queues; the updated C stays resident, so it can be the A, B or C of
 //!   the next enqueue with **no host round-trip**;
-//! * [`DeviceStream::wait`] drains outstanding tiles into the C panel;
-//! * [`DeviceStream::download`] is the only step that decodes planes back
-//!   into host values.
+//! * [`DeviceStream::wait`] drains every outstanding launch into its C
+//!   panel; [`DeviceStream::download`] drains only the launches the read
+//!   depends on, then decodes that buffer back into host values.
 //!
-//! Two forms of reuse make a warm stream cheap:
+//! # Launch hazards
+//!
+//! Each `enqueue_gemm(a, b, c)` has the read set `{A, B, C}` (the C input
+//! is read too — the launch accumulates onto it) and the write set `{C}`.
+//! An enqueue only waits for in-flight launches it actually conflicts
+//! with: a launch that **writes** one of our three buffers (RAW/WAW —
+//! our inputs must be its retired output), or any launch still referencing
+//! B when B's tile grid has to be (re)built.  Launches with disjoint
+//! buffer sets flow through the worker queues concurrently — the
+//! `inflight_max` metric records the high-water mark, and the
+//! `stream_overlap` bench demonstrates the pipelining.  Write-after-read
+//! needs no wait at all: writebacks are deferred to retirement, and
+//! launches retire strictly in enqueue order, so a later writer can never
+//! overtake an earlier reader.
+//!
+//! Dependent chains keep their serial semantics: `enqueue_gemm(c, b, c)`
+//! reads pre-launch buffer contents and stays bit-identical to
+//! [`crate::baseline::gemm_serial`] (`tests/tile_property.rs`).
+//!
+//! # Failure semantics
+//!
+//! No stream failure path panics; everything surfaces as a typed
+//! [`StreamError`]:
+//!
+//! * a launch with failed tiles (a backend error, a caught worker panic, a
+//!   CU whose runtime never came up) drains **completely** — every pooled
+//!   staging buffer is recovered — writes **nothing** (C keeps its
+//!   pre-launch contents), and reports every failed tile in one
+//!   [`StreamError::LaunchFailed`];
+//! * a handle minted by another stream is rejected up front
+//!   ([`StreamError::ForeignHandle`]) — [`BufId`]s are stamped with their
+//!   stream's token, so a foreign handle can never index the wrong buffer;
+//! * the unrecoverable cases — a worker thread that vanished, a reply
+//!   channel that died mid-drain — poison the stream: the failing call
+//!   returns the root error and every later call returns
+//!   [`StreamError::Poisoned`] instead of hanging or panicking.
+//!
+//! # What makes a warm stream cheap
 //!
 //! * **Shared B tiles.** The first time a buffer is used as B, its panel is
 //!   cut into the tile grid once (`k_steps x m_tiles` pre-packed tiles,
 //!   one [`crate::pack::PlaneBatch`] each) and every compute unit reads the
-//!   same grid through the buffer's `Arc` — the host analog of the paper
-//!   replicating B to each CU's DDR bank, minus the copies.  The grid is
-//!   cached on the buffer and reused by later enqueues until the buffer is
-//!   written (`panel_builds` / `panel_reuses` in the device metrics make
-//!   the amortization visible).
-//! * **Pooled staging.** Tile C-staging buffers cycle leader -> worker ->
-//!   leader through a pool, tile lists and reply channels are reused, and
-//!   job payloads are `Arc` clones — in steady state (same shapes, warm
-//!   pool) an `enqueue_gemm` + [`DeviceStream::wait`] round performs **zero
-//!   heap allocations** end to end, workers included
+//!   same grid through the buffer's `Arc`.  The grid records the panel
+//!   *version* it was cut from; a version is bumped only when a launch
+//!   that writes the buffer retires, so the grid stays valid across any
+//!   number of non-conflicting launches and waits (`panel_builds` /
+//!   `panel_reuses` in the device metrics make the amortization visible).
+//! * **Pooled everything.** Tile C-staging buffers cycle leader -> worker
+//!   -> leader through a pool (on success *and* on failure), per-launch
+//!   reply channels and tile lists are reused, and job payloads are `Arc`
+//!   clones — in steady state (same shapes, warm pools) an `enqueue_gemm`
+//!   + [`DeviceStream::wait`] round performs **zero heap allocations** end
+//!   to end, workers included, even with several launches in flight
 //!   (`tests/alloc_free.rs`).
 //!
 //! [`crate::coordinator::Device::gemm`] is a one-shot wrapper over this
@@ -43,19 +82,24 @@
 //! let a = s.upload(&Matrix::random(64, 64, prec, 1, 30));
 //! let b = s.upload(&Matrix::random(64, 64, prec, 2, 30));
 //! let c = s.alloc(64, 64);
+//! let d = s.alloc(64, 64);
 //! s.enqueue_gemm(a, b, c)?; // C += A @ B
-//! s.enqueue_gemm(c, b, c)?; // chain: C += C @ B, no round-trip
+//! s.enqueue_gemm(b, a, d)?; // disjoint write set: overlaps with the first
+//! s.enqueue_gemm(c, b, c)?; // dependent chain: waits for launch 1 only
 //! let out = s.download(c)?;
 //! # let _ = out;
 //! # Ok(())
 //! # }
 //! ```
 
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::collections::VecDeque;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{Context, Result};
 
 use super::device::Device;
 use super::matrix::Matrix;
@@ -64,22 +108,92 @@ use super::worker::{Job, TileResult};
 use crate::pack::{PlaneBatch, PlanePanel};
 use crate::runtime::ArtifactMeta;
 
-/// Handle to one device-resident buffer of a [`DeviceStream`].
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct BufId(pub(crate) usize);
+/// Every stream failure mode, as one typed error.  Stream methods return
+/// `anyhow::Result`; callers that need to dispatch on the failure
+/// downcast with `err.downcast_ref::<StreamError>()`
+/// (`tests/stream_faults.rs` pins every variant).
+#[derive(Debug, thiserror::Error)]
+pub enum StreamError {
+    /// A [`BufId`] minted by a different stream: handles are stream-local
+    /// (they index that stream's buffer table), so a foreign handle is
+    /// rejected before it can touch the wrong buffer.
+    #[error(
+        "buffer handle #{index} belongs to stream {handle_stream}, not stream {this_stream}: \
+         device buffers are stream-local"
+    )]
+    ForeignHandle { index: usize, handle_stream: u64, this_stream: u64 },
+    /// A handle whose index is out of range for this stream (defensive —
+    /// the stream token check makes this unreachable through the API).
+    #[error("unknown device buffer id {index}")]
+    UnknownBuffer { index: usize },
+    /// One or more tiles of a launch failed.  The launch drained fully,
+    /// recovered its pooled staging buffers, and wrote **nothing** — the
+    /// C buffer keeps its pre-launch contents — and `tiles` lists every
+    /// failed tile.  The stream stays usable.
+    #[error("launch {launch}: {failed} of {total} tiles failed; C left unchanged: {tiles}")]
+    LaunchFailed { launch: u64, failed: usize, total: usize, tiles: String },
+    /// The reply channel disconnected with tile results still outstanding
+    /// (a worker thread died mid-launch).  The launch cannot complete, so
+    /// the stream is poisoned.
+    #[error("launch {launch}: reply channel closed with {missing} of {total} tiles outstanding")]
+    ReplyLost { launch: u64, missing: usize, total: usize },
+    /// A compute unit's job queue is gone (its worker thread exited), so
+    /// the launch could not be fully submitted.  The stream is poisoned.
+    #[error("compute unit {cu} is gone (worker thread exited); launch {launch} not submitted")]
+    WorkerGone { cu: usize, launch: u64 },
+    /// An internal invariant broke (a drained launch left a live buffer
+    /// reference).  The stream is poisoned.
+    #[error("stream invariant broken: {what}; the stream is poisoned")]
+    Invariant { what: &'static str },
+    /// An earlier unrecoverable failure poisoned this stream; every call
+    /// after it reports the original reason instead of hanging/panicking.
+    #[error("stream poisoned by an earlier failure: {reason}")]
+    Poisoned { reason: String },
+    /// Several launches failed in one drain; `summary` joins their
+    /// individual [`StreamError::LaunchFailed`] reports.
+    #[error("{count} launches failed: {summary}")]
+    Multi { count: usize, summary: String },
+}
 
-/// A device-resident matrix: the packed plane panel plus the lazily built,
-/// shared B tile grid.  Workers hold these through `Arc` for the duration
-/// of a launch; the stream regains exclusive access (and with it the right
-/// to write the panel) only once every tile of the launch has replied.
+/// Source of unique per-stream tokens stamped into [`BufId`]s.
+static NEXT_STREAM_TOKEN: AtomicU64 = AtomicU64::new(1);
+
+/// How long a reply may be overdue before the drain loop probes worker
+/// liveness.  A live worker always replies eventually (replies are sent
+/// for errors and caught panics too), so the probe only matters when a
+/// worker thread died reply-less — the timeout bounds how long that takes
+/// to surface as [`StreamError::ReplyLost`] instead of a hang.  Slow but
+/// live workers are unaffected: every timeout with all threads alive just
+/// keeps waiting.
+const REPLY_LIVENESS_INTERVAL: Duration = Duration::from_millis(250);
+
+/// Handle to one device-resident buffer of a [`DeviceStream`].  Stamped
+/// with the owning stream's token: using it on another stream is a typed
+/// [`StreamError::ForeignHandle`], never a silent wrong-buffer read.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BufId {
+    pub(crate) index: usize,
+    pub(crate) stream: u64,
+}
+
+/// A device-resident matrix: the packed plane panel, its writeback
+/// version, and the lazily built, shared B tile grid.  Workers hold these
+/// through `Arc` for the duration of a launch; the stream regains
+/// exclusive access (and with it the right to write the panel) only once
+/// every tile of the launch has replied.
 pub struct DeviceBuf {
     pub(crate) panel: PlanePanel,
+    /// Writeback generation of `panel`: bumped by the leader each time a
+    /// launch writing this buffer retires.  The B tile grid records the
+    /// version it was cut from, so the cache invalidation point is exactly
+    /// "a conflicting writer completed" — not "any wait happened".
+    pub(crate) version: u64,
     pub(crate) b_cache: BTileCache,
 }
 
 /// The pre-packed B tile grid: `k_steps x m_tiles` tiles of shape
 /// `k_tile x tile_m`, extracted once per panel version and read by every
-/// compute unit.  `valid` drops when the owning buffer is written.
+/// compute unit.
 #[derive(Default)]
 pub(crate) struct BTileCache {
     tiles: Vec<PlaneBatch>,
@@ -87,7 +201,10 @@ pub(crate) struct BTileCache {
     tile_m: usize,
     m_tiles: usize,
     k_steps: usize,
-    valid: bool,
+    built: bool,
+    /// Panel version the grid was cut from; stale when the buffer's
+    /// `version` has moved past it (a writer launch retired).
+    built_version: u64,
 }
 
 impl DeviceBuf {
@@ -97,7 +214,10 @@ impl DeviceBuf {
 
     /// The shared pre-packed B tile for K step `step`, tile column `jt`.
     pub(crate) fn b_tile(&self, step: usize, jt: usize) -> Result<&PlaneBatch> {
-        anyhow::ensure!(self.b_cache.valid, "B tile grid not packed for this launch");
+        anyhow::ensure!(
+            self.b_cache.built && self.b_cache.built_version == self.version,
+            "B tile grid not packed for this panel version"
+        );
         anyhow::ensure!(
             step < self.b_cache.k_steps && jt < self.b_cache.m_tiles,
             "B tile ({step},{jt}) outside the {}x{} grid",
@@ -108,12 +228,32 @@ impl DeviceBuf {
     }
 }
 
-/// One launch currently in flight: which buffer receives the writeback,
-/// under which partition, and how many tile replies are outstanding.
-struct Inflight {
+/// A pooled bounded reply channel (capacity `cap` tile results).  Workers
+/// must never block sending a reply — that would deadlock against the
+/// bounded job queues — so a launch only takes a channel whose capacity
+/// covers its whole tile count.
+struct ReplyChannel {
+    tx: SyncSender<TileResult>,
+    rx: Receiver<TileResult>,
+    cap: usize,
+}
+
+/// One launch currently in flight: its buffer read/write sets (by index),
+/// the partition it runs under, how many tile replies are outstanding, and
+/// its private reply channel.  Writeback into the C panel is deferred to
+/// retirement, which happens strictly in enqueue order.
+struct Launch {
+    id: u64,
+    /// Read set: A, B, and the C input (accumulated onto).
+    a: usize,
+    b: usize,
+    /// Write set: the C buffer, written at retirement.
     c: usize,
     part: Partition,
+    /// Tile replies this launch owes — every submitted tile replies
+    /// exactly once, so this is also the launch's total tile count.
     pending: usize,
+    reply: ReplyChannel,
 }
 
 /// A batched GEMM stream over a [`Device`] — see the module docs.
@@ -124,21 +264,26 @@ pub struct DeviceStream<'d> {
     dev: &'d Device,
     meta: ArtifactMeta,
     artifact: Arc<str>,
+    /// This stream's identity, stamped into every [`BufId`] it mints.
+    token: u64,
+    next_launch: u64,
     bufs: Vec<Arc<DeviceBuf>>,
     /// Per-CU tile lists, refilled in place each enqueue.
     cu_tiles: Vec<Vec<Tile>>,
     /// Per-CU submission cursors (reset each enqueue).
     cursors: Vec<usize>,
-    /// Recycled C-staging tile buffers (leader -> worker -> leader).
+    /// Recycled C-staging tile buffers (leader -> worker -> leader, on
+    /// success and on failure alike).
     c_pool: Vec<PlaneBatch>,
-    /// Reply staging for [`DeviceStream::wait`] (capacity reused).
+    /// Reply staging for one retirement (capacity reused).
     results: Vec<TileResult>,
-    /// Bounded reply channel, recreated only when a launch needs more
-    /// capacity than any before it (workers must never block on replies —
-    /// that would deadlock against the bounded job queues).
-    reply: Option<(SyncSender<TileResult>, Receiver<TileResult>)>,
-    reply_cap: usize,
-    inflight: Option<Inflight>,
+    /// Recycled per-launch reply channels (each bounded at the tile count
+    /// of the launch it was created for).
+    reply_pool: Vec<ReplyChannel>,
+    /// Launches in flight, oldest first; retirement pops from the front.
+    inflight: VecDeque<Launch>,
+    /// Set by an unrecoverable failure; every later call reports it.
+    poisoned: Option<String>,
 }
 
 impl<'d> DeviceStream<'d> {
@@ -148,14 +293,16 @@ impl<'d> DeviceStream<'d> {
             artifact: Arc::from(meta.name.as_str()),
             meta,
             dev,
+            token: NEXT_STREAM_TOKEN.fetch_add(1, Ordering::Relaxed),
+            next_launch: 0,
             bufs: Vec::new(),
             cu_tiles: (0..cus).map(|_| Vec::new()).collect(),
             cursors: vec![0; cus],
             c_pool: Vec::new(),
             results: Vec::new(),
-            reply: None,
-            reply_cap: 0,
-            inflight: None,
+            reply_pool: Vec::new(),
+            inflight: VecDeque::new(),
+            poisoned: None,
         }
     }
 
@@ -176,34 +323,74 @@ impl<'d> DeviceStream<'d> {
     }
 
     fn push_buf(&mut self, panel: PlanePanel) -> BufId {
-        self.bufs.push(Arc::new(DeviceBuf { panel, b_cache: BTileCache::default() }));
-        BufId(self.bufs.len() - 1)
+        self.bufs.push(Arc::new(DeviceBuf {
+            panel,
+            version: 0,
+            b_cache: BTileCache::default(),
+        }));
+        BufId { index: self.bufs.len() - 1, stream: self.token }
     }
 
-    fn buf(&self, id: BufId) -> Result<&Arc<DeviceBuf>> {
-        self.bufs.get(id.0).ok_or_else(|| anyhow!("unknown device buffer id {}", id.0))
+    /// Resolve a handle to this stream's buffer index, rejecting handles
+    /// minted by other streams.
+    fn index(&self, id: BufId) -> Result<usize, StreamError> {
+        if id.stream != self.token {
+            return Err(StreamError::ForeignHandle {
+                index: id.index,
+                handle_stream: id.stream,
+                this_stream: self.token,
+            });
+        }
+        if id.index >= self.bufs.len() {
+            return Err(StreamError::UnknownBuffer { index: id.index });
+        }
+        Ok(id.index)
     }
 
-    /// Drain pending work, then decode a buffer back to a host matrix —
-    /// the only step of the stream that materializes `ApFloat`s.
+    fn check_live(&self) -> Result<(), StreamError> {
+        match &self.poisoned {
+            Some(reason) => Err(StreamError::Poisoned { reason: reason.clone() }),
+            None => Ok(()),
+        }
+    }
+
+    /// Record `e` as this stream's poison reason and hand it back.
+    fn poison(&mut self, e: StreamError) -> StreamError {
+        self.poisoned = Some(e.to_string());
+        e
+    }
+
+    /// Drain the launches a read of `id` depends on, then decode the
+    /// buffer back to a host matrix — the only step of the stream that
+    /// materializes `ApFloat`s.  Launches writing *other* buffers keep
+    /// flowing; retirement is FIFO, so landing the last in-flight writer
+    /// of this buffer retires exactly the prefix up to it.
     pub fn download(&mut self, id: BufId) -> Result<Matrix> {
-        self.wait()?;
-        let buf = self.buf(id)?;
-        Ok(Matrix::from_panel(&buf.panel))
+        self.check_live()?;
+        let idx = self.index(id)?;
+        if let Some(i) = self.inflight.iter().rposition(|l| l.c == idx) {
+            self.retire_n(i + 1).context("draining launches this download depends on")?;
+        }
+        Ok(Matrix::from_panel(&self.bufs[idx].panel))
     }
 
     /// Launch `C += A @ B` (alpha = beta = 1, §III) across the device's
-    /// compute units.  Inputs are pre-launch buffer contents: an earlier
-    /// enqueue's output is drained into its panel before this launch reads
-    /// it, so chains like `enqueue_gemm(c, b, c)` are well defined.
-    /// Returns once every tile is submitted (the bounded worker queues
-    /// backpressure the caller); [`DeviceStream::wait`] collects results.
+    /// compute units.  Inputs are pre-launch buffer contents: any
+    /// in-flight launch *writing* one of the three operands is drained
+    /// first (RAW/WAW), so chains like `enqueue_gemm(c, b, c)` are well
+    /// defined — while launches with disjoint buffer sets stay in flight
+    /// and pipeline through the worker queues.  Returns once every tile is
+    /// submitted (the bounded worker queues backpressure the caller);
+    /// [`DeviceStream::wait`] collects results.  A hazard drain that
+    /// surfaces an earlier launch's failure returns that error here, and
+    /// this launch is not submitted.
     pub fn enqueue_gemm(&mut self, a: BufId, b: BufId, c: BufId) -> Result<()> {
-        // Sequencing: earlier launches write panels this one may read.
-        self.wait()?;
+        self.check_live()?;
+        let (ai, bi, ci) = (self.index(a)?, self.index(b)?, self.index(c)?);
         let prec = self.meta.prec();
         let (n, k, m) = {
-            let (pa, pb, pc) = (&self.buf(a)?.panel, &self.buf(b)?.panel, &self.buf(c)?.panel);
+            let (pa, pb, pc) =
+                (&self.bufs[ai].panel, &self.bufs[bi].panel, &self.bufs[ci].panel);
             anyhow::ensure!(
                 pa.cols() == pb.rows(),
                 "inner dimensions: {} vs {}",
@@ -233,27 +420,47 @@ impl<'d> DeviceStream<'d> {
             k_tile: self.meta.k_tile,
             compute_units: self.dev.workers.len(),
         };
-        self.build_b_cache(b, &part)?;
 
-        // Plan each CU's band and make sure the reply channel can absorb
-        // every tile of this launch without blocking a worker.
-        let mut total = 0;
+        // Hazard scan: wait only for in-flight launches we conflict with.
+        // A conflict is a launch *writing* one of our buffers (RAW on A/B/
+        // the C input, WAW on C — its writeback must land before our
+        // workers read the panel), or — when B's grid must be (re)built —
+        // any launch still holding a reference to B (the build needs
+        // exclusive access).  Write-after-read needs no wait: writebacks
+        // are deferred to FIFO retirement, so ours can never overtake an
+        // earlier reader.  Retirement is in order, so draining through the
+        // *last* conflicting launch clears every conflict at once.
+        let grid_fresh = Self::grid_fresh(&self.bufs[bi], &part);
+        let mut drain_to = None;
+        for (i, l) in self.inflight.iter().enumerate() {
+            let writes_our_set = l.c == ai || l.c == bi || l.c == ci;
+            let blocks_grid_build = !grid_fresh && (l.a == bi || l.b == bi || l.c == bi);
+            if writes_our_set || blocks_grid_build {
+                drain_to = Some(i);
+            }
+        }
+        if let Some(i) = drain_to {
+            self.retire_n(i + 1).context("draining conflicting launches")?;
+        }
+        self.build_b_cache(bi, &part)?;
+
+        // Plan each CU's band; the reply channel must absorb every tile of
+        // this launch without a worker ever blocking on it.
+        let total = part.total_tiles();
+        let mut planned = 0;
         for (cu, tiles) in self.cu_tiles.iter_mut().enumerate() {
             part.tiles_into(cu, tiles);
-            total += tiles.len();
+            planned += tiles.len();
             self.cursors[cu] = 0;
         }
-        if self.reply.is_none() || self.reply_cap < total {
-            let cap = total.max(1);
-            self.reply = Some(sync_channel(cap));
-            self.reply_cap = cap;
-        }
-        let reply_tx = &self.reply.as_ref().expect("just ensured").0;
+        debug_assert_eq!(planned, total, "Partition::total_tiles must match enumeration");
+        let reply = self.take_reply_channel(total);
+        let launch = self.next_launch;
+        self.next_launch += 1;
 
         // Submit round-robin, one tile per CU per pass, so the bounded
         // queues fill evenly and a stalled CU backpressures only its band.
-        let c_id = c.0;
-        let (a, b, c) = (self.buf(a)?.clone(), self.buf(b)?.clone(), self.buf(c)?.clone());
+        let (ab, bb, cb) = (self.bufs[ai].clone(), self.bufs[bi].clone(), self.bufs[ci].clone());
         let mut pending = 0usize;
         let mut active = true;
         while active {
@@ -262,41 +469,73 @@ impl<'d> DeviceStream<'d> {
                 let Some(tile) = self.cu_tiles[cu].get(self.cursors[cu]) else { continue };
                 self.cursors[cu] += 1;
                 let c_buf = self.c_pool.pop().unwrap_or_default();
-                self.dev.workers[cu].submit(Job::GemmTile {
+                let job = Job::GemmTile {
+                    launch,
                     artifact: self.artifact.clone(),
-                    a: a.clone(),
-                    b: b.clone(),
-                    c: c.clone(),
+                    a: ab.clone(),
+                    b: bb.clone(),
+                    c: cb.clone(),
                     c_buf,
                     tile: *tile,
                     part: part.clone(),
-                    reply: reply_tx.clone(),
-                });
+                    reply: reply.tx.clone(),
+                };
+                if let Err(job) = self.dev.workers[cu].submit(job) {
+                    // The worker thread is gone mid-submission.  Reclaim
+                    // this job's staging buffer, drop the partial launch
+                    // (the poisoned stream will never retire it — already
+                    // submitted tiles' replies are discarded with its
+                    // channel), and poison: reply accounting for this
+                    // stream is unreliable from here on.
+                    if let Job::GemmTile { c_buf, .. } = job {
+                        self.c_pool.push(c_buf);
+                    }
+                    drop(reply);
+                    return Err(self.poison(StreamError::WorkerGone { cu, launch }).into());
+                }
                 pending += 1;
                 active = true;
             }
         }
+        debug_assert_eq!(pending, total, "every planned tile must have been submitted");
         self.dev.metrics.add_enqueues(1);
-        self.inflight = Some(Inflight { c: c_id, part, pending });
+        self.inflight.push_back(Launch { id: launch, a: ai, b: bi, c: ci, part, pending, reply });
+        self.dev.metrics.record_inflight(self.inflight.len() as u64);
         Ok(())
     }
 
+    /// Is `b`'s cached tile grid valid for `part` — cut from the current
+    /// panel version at the same geometry?  Read-only, so a fresh grid is
+    /// shared with in-flight launches without needing exclusive access.
+    fn grid_fresh(buf: &DeviceBuf, part: &Partition) -> bool {
+        let c = &buf.b_cache;
+        c.built
+            && c.built_version == buf.version
+            && c.k_tile == part.k_tile
+            && c.tile_m == part.tile_m
+            && c.m_tiles == part.m_tiles()
+            && c.k_steps == part.k_steps()
+    }
+
     /// Pack (or reuse) the shared B tile grid for `part` on buffer `b`.
-    fn build_b_cache(&mut self, b: BufId, part: &Partition) -> Result<()> {
-        let (m_tiles, k_steps) = (part.m_tiles(), part.k_steps());
-        let buf = Arc::get_mut(&mut self.bufs[b.0])
-            .expect("a drained stream has exclusive access to its buffers");
-        let cache = &mut buf.b_cache;
-        if cache.valid
-            && cache.k_tile == part.k_tile
-            && cache.tile_m == part.tile_m
-            && cache.m_tiles == m_tiles
-            && cache.k_steps == k_steps
-        {
+    /// The caller has already drained every launch referencing `b` when a
+    /// rebuild is needed, so exclusive access is an invariant here.
+    fn build_b_cache(&mut self, b: usize, part: &Partition) -> Result<()> {
+        if Self::grid_fresh(&self.bufs[b], part) {
             self.dev.metrics.add_panel_reuses(1);
             return Ok(());
         }
+        let Some(buf) = Arc::get_mut(&mut self.bufs[b]) else {
+            return Err(self
+                .poison(StreamError::Invariant {
+                    what: "rebuilding a B tile grid while a launch still references the buffer",
+                })
+                .into());
+        };
         let t0 = Instant::now();
+        let (m_tiles, k_steps) = (part.m_tiles(), part.k_steps());
+        let version = buf.version;
+        let cache = &mut buf.b_cache;
         let count = k_steps * m_tiles;
         if cache.tiles.len() != count {
             cache.tiles.resize_with(count, PlaneBatch::default);
@@ -316,49 +555,288 @@ impl<'d> DeviceStream<'d> {
         cache.tile_m = part.tile_m;
         cache.m_tiles = m_tiles;
         cache.k_steps = k_steps;
-        cache.valid = true;
+        cache.built = true;
+        cache.built_version = version;
         self.dev.metrics.add_marshal_ns(t0.elapsed().as_nanos() as u64);
         self.dev.metrics.add_panel_builds(1);
         Ok(())
     }
 
-    /// Collect every outstanding tile of the last enqueue and land it in
-    /// the C buffer's panel (each output element is owned by exactly one
-    /// clipped tile, so writes are disjoint).  No-op when nothing is in
-    /// flight.
-    pub fn wait(&mut self) -> Result<()> {
-        let Some(fl) = self.inflight.take() else { return Ok(()) };
-        let rx = &self.reply.as_ref().expect("inflight implies a reply channel").1;
-        self.results.clear();
-        for _ in 0..fl.pending {
-            self.results.push(rx.recv().context("collecting tile result")?);
+    /// Does compute unit `cu` still owe `l` tile replies?  Planned tiles
+    /// follow from the partition (closed form, no allocation — this runs
+    /// on the overdue-reply cold path); received ones are counted out of
+    /// the drain staging.
+    fn owes_replies(cu: usize, l: &Launch, results: &[TileResult]) -> bool {
+        let (start, end) = l.part.band(cu);
+        let planned = (end - start).div_ceil(l.part.tile_n) * l.part.m_tiles();
+        let received = results.iter().filter(|r| r.tile.cu == cu).count();
+        received < planned
+    }
+
+    /// Take a pooled reply channel with room for `total` tile results, or
+    /// create one.
+    fn take_reply_channel(&mut self, total: usize) -> ReplyChannel {
+        let need = total.max(1);
+        if let Some(pos) = self.reply_pool.iter().position(|r| r.cap >= need) {
+            return self.reply_pool.swap_remove(pos);
         }
-        // Every job has replied, and workers drop their buffer references
-        // before replying — the stream owns the panels again.
-        let buf = Arc::get_mut(&mut self.bufs[fl.c])
-            .expect("all launches drained, so the C buffer is exclusively ours");
-        // The panel is about to change: any cached B tiles go stale.
-        buf.b_cache.valid = false;
-        let t0 = Instant::now();
-        let mut first_err = None;
-        for res in self.results.drain(..) {
-            let t = res.tile;
-            match res.planes {
-                Ok(planes) => {
-                    buf.panel.write_tile(t.r0, t.c0, t.rows, t.cols, fl.part.tile_m, &planes);
-                    self.c_pool.push(planes);
-                }
-                Err(e) if first_err.is_none() => {
-                    first_err =
-                        Some(e.context(format!("tile at ({}, {}) on CU{}", t.r0, t.c0, t.cu)));
-                }
-                Err(_) => {}
+        let (tx, rx) = sync_channel(need);
+        ReplyChannel { tx, rx, cap: need }
+    }
+
+    /// Collect every outstanding launch and land each in its C buffer's
+    /// panel (each output element is owned by exactly one clipped tile, so
+    /// writes are disjoint).  Even when a launch fails, the remaining
+    /// launches are still drained — an error never leaves replies pending.
+    /// No-op when nothing is in flight.
+    pub fn wait(&mut self) -> Result<()> {
+        self.check_live()?;
+        let n = self.inflight.len();
+        self.retire_n(n)
+    }
+
+    /// Retire the `n` oldest in-flight launches in order, aggregating
+    /// failures so later launches always drain even when earlier ones
+    /// error.
+    fn retire_n(&mut self, n: usize) -> Result<()> {
+        let mut errs: Vec<StreamError> = Vec::new();
+        for _ in 0..n {
+            if let Err(e) = self.retire_one() {
+                errs.push(e);
             }
         }
-        self.dev.metrics.add_marshal_ns(t0.elapsed().as_nanos() as u64);
-        match first_err {
-            Some(e) => Err(e),
-            None => Ok(()),
+        match errs.len() {
+            0 => Ok(()),
+            1 => Err(errs.pop().expect("len checked").into()),
+            count => {
+                let mut summary = String::new();
+                for (i, e) in errs.iter().enumerate() {
+                    if i > 0 {
+                        summary.push_str(" | ");
+                    }
+                    let _ = write!(summary, "{e}");
+                }
+                Err(StreamError::Multi { count, summary }.into())
+            }
         }
+    }
+
+    /// Retire the oldest in-flight launch: drain all of its tile replies,
+    /// recover every pooled staging buffer (errored tiles included), and
+    /// either write the results back into the C panel (bumping its
+    /// version, which is what invalidates cached B grids cut from it) or
+    /// — if any tile failed — write nothing and report every failure.
+    fn retire_one(&mut self) -> Result<(), StreamError> {
+        let Some(l) = self.inflight.pop_front() else { return Ok(()) };
+        let t_drain = Instant::now();
+        self.results.clear();
+        // Drain with liveness detection: the leader holds a sender for the
+        // pooled channel, so a plain `recv` could never disconnect — a
+        // worker that died reply-less would hang us forever.  Instead,
+        // when a reply is overdue we probe the worker threads; replies are
+        // declared lost only after a dead thread is seen AND a further
+        // full interval passes with no progress (a dead CU doesn't stop
+        // the live ones from finishing their tiles).
+        let mut lost = 0usize;
+        let mut dead_seen = false;
+        while self.results.len() < l.pending {
+            match l.reply.rx.recv_timeout(REPLY_LIVENESS_INTERVAL) {
+                Ok(res) => {
+                    debug_assert_eq!(res.launch, l.id, "reply routed to the wrong launch");
+                    self.results.push(res);
+                    dead_seen = false; // progress: keep draining
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    if dead_seen {
+                        lost = l.pending - self.results.len();
+                        break;
+                    }
+                    // Probe only workers that still owe THIS launch a
+                    // reply: a CU that crashed serving some other stream
+                    // must not poison a launch it holds no tiles of.
+                    dead_seen = (0..self.dev.workers.len()).any(|cu| {
+                        self.dev.workers[cu].is_finished()
+                            && Self::owes_replies(cu, &l, &self.results)
+                    });
+                    // all owing workers alive: the launch is just slow —
+                    // keep waiting
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    lost = l.pending - self.results.len();
+                    break;
+                }
+            }
+        }
+        self.dev.metrics.add_drain_ns(t_drain.elapsed().as_nanos() as u64);
+        self.dev.metrics.add_launches(1);
+
+        let mut failed = 0usize;
+        let mut tiles = String::new();
+        for res in &self.results {
+            if let Some(err) = &res.err {
+                failed += 1;
+                if !tiles.is_empty() {
+                    tiles.push_str("; ");
+                }
+                let t = res.tile;
+                let _ = write!(tiles, "CU{} tile({},{}): {:#}", t.cu, t.r0, t.c0, err);
+            }
+        }
+
+        if lost > 0 {
+            // The channel died with replies outstanding: recover what did
+            // arrive, write nothing (the launch is incomplete), and poison
+            // the stream — jobs that never replied may still hold buffer
+            // references, so panel ownership can no longer be proven.
+            for res in self.results.drain(..) {
+                self.c_pool.push(res.c_buf);
+            }
+            return Err(self.poison(StreamError::ReplyLost {
+                launch: l.id,
+                missing: lost,
+                total: l.pending,
+            }));
+        }
+
+        if failed > 0 {
+            // Fully drained, but some tiles failed: recover every staging
+            // buffer into the pool, leave C untouched (its pre-launch
+            // contents — and its version — stand), and report every failed
+            // tile in one error.  The stream stays usable.
+            for res in self.results.drain(..) {
+                self.c_pool.push(res.c_buf);
+            }
+            self.reply_pool.push(l.reply);
+            let (launch, total) = (l.id, l.pending);
+            return Err(StreamError::LaunchFailed { launch, failed, total, tiles });
+        }
+
+        // Healthy path: every job replied, and workers drop their buffer
+        // references before replying — the stream owns the panel again.
+        let Some(buf) = Arc::get_mut(&mut self.bufs[l.c]) else {
+            for res in self.results.drain(..) {
+                self.c_pool.push(res.c_buf);
+            }
+            return Err(self.poison(StreamError::Invariant {
+                what: "a fully drained launch left a live reference to its C buffer",
+            }));
+        };
+        // The panel is about to change: bump its version so B grids cut
+        // from the old contents read as stale from here on.
+        buf.version += 1;
+        let t0 = Instant::now();
+        for res in self.results.drain(..) {
+            let t = res.tile;
+            buf.panel.write_tile(t.r0, t.c0, t.rows, t.cols, l.part.tile_m, &res.c_buf);
+            self.c_pool.push(res.c_buf);
+        }
+        self.dev.metrics.add_marshal_ns(t0.elapsed().as_nanos() as u64);
+        self.reply_pool.push(l.reply);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ApfpConfig, FaultSpec};
+    use crate::runtime::BackendKind;
+
+    fn dev_with(faults: FaultSpec) -> Device {
+        let cfg = ApfpConfig {
+            backend: BackendKind::Native,
+            compute_units: 1,
+            tile_n: 4,
+            tile_m: 4,
+            tile_k: 4,
+            faults,
+            ..Default::default()
+        };
+        let dir = std::env::temp_dir().join("apfp_stream_unit_no_artifacts/none");
+        Device::new(cfg, &dir).expect("native device on a clean checkout")
+    }
+
+    #[test]
+    fn failed_launch_recovers_every_staging_buffer_into_the_pool() {
+        // 8x8 matrices on 4x4 tiles, 1 CU: 4 tiles per launch, one of which
+        // (origin (0,4)) is injected to fail.
+        let dev = dev_with(FaultSpec { fail_tile: Some((0, 4)), ..Default::default() });
+        let a = Matrix::random(8, 8, 448, 1, 20);
+        let b = Matrix::random(8, 8, 448, 2, 20);
+        let c = Matrix::random(8, 8, 448, 3, 20);
+        let mut s = dev.stream().unwrap();
+        let (ha, hb, hc) = (s.upload(&a), s.upload(&b), s.upload(&c));
+        for round in 0..3 {
+            s.enqueue_gemm(ha, hb, hc).unwrap();
+            let err = s.wait().expect_err("injected tile failure must surface");
+            let se = err.downcast_ref::<StreamError>().expect("typed StreamError");
+            match se {
+                StreamError::LaunchFailed { failed, total, .. } => {
+                    assert_eq!((*failed, *total), (1, 4), "round {round}");
+                }
+                other => panic!("round {round}: unexpected error {other:?}"),
+            }
+            // every tile's staging buffer came home — the failed one too —
+            // so repeated failures never shrink the pool or grow it
+            assert_eq!(s.c_pool.len(), 4, "round {round}: pool must recover all buffers");
+            assert_eq!(s.reply_pool.len(), 1, "round {round}: reply channel recycled");
+            assert!(s.poisoned.is_none(), "tile failures must not poison the stream");
+        }
+        // the failed launches wrote nothing: C still decodes to its upload
+        assert_eq!(s.download(hc).unwrap(), c);
+    }
+
+    #[test]
+    fn writeback_bumps_the_version_and_staleness_is_per_buffer() {
+        let dev = dev_with(FaultSpec::default());
+        let a = Matrix::random(8, 8, 448, 4, 20);
+        let b = Matrix::random(8, 8, 448, 5, 20);
+        let c = Matrix::random(8, 8, 448, 6, 20);
+        let mut s = dev.stream().unwrap();
+        let (ha, hb, hc) = (s.upload(&a), s.upload(&b), s.upload(&c));
+        s.enqueue_gemm(ha, hb, hc).unwrap();
+        s.wait().unwrap();
+        assert_eq!(s.bufs[hc.index].version, 1, "writeback must bump the C version");
+        assert_eq!(s.bufs[ha.index].version, 0, "read-only operands keep their version");
+        assert_eq!(s.bufs[hb.index].version, 0);
+        // B's grid was cut from version 0 and B was never written: fresh
+        let part = Partition {
+            n: 8,
+            m: 8,
+            k: 8,
+            tile_n: 4,
+            tile_m: 4,
+            k_tile: 4,
+            compute_units: 1,
+        };
+        assert!(DeviceStream::grid_fresh(&s.bufs[hb.index], &part));
+        // C was written, so a grid cut from it before the launch would be
+        // stale — and C never had one built anyway
+        assert!(!DeviceStream::grid_fresh(&s.bufs[hc.index], &part));
+    }
+
+    #[test]
+    fn foreign_handles_are_rejected_before_touching_state() {
+        let dev = dev_with(FaultSpec::default());
+        let a = Matrix::random(4, 4, 448, 7, 20);
+        let mut s1 = dev.stream().unwrap();
+        let mut s2 = dev.stream().unwrap();
+        let h1 = s1.upload(&a);
+        let h2 = s2.upload(&a);
+        let err = s2.enqueue_gemm(h1, h2, h2).expect_err("foreign handle");
+        assert!(
+            matches!(err.downcast_ref::<StreamError>(), Some(StreamError::ForeignHandle { .. })),
+            "{err:#}"
+        );
+        let err = s2.download(h1).expect_err("foreign handle on download");
+        assert!(
+            matches!(err.downcast_ref::<StreamError>(), Some(StreamError::ForeignHandle { .. })),
+            "{err:#}"
+        );
+        // both streams remain fully usable with their own handles
+        s1.enqueue_gemm(h1, h1, h1).unwrap();
+        s1.wait().unwrap();
+        s2.enqueue_gemm(h2, h2, h2).unwrap();
+        s2.wait().unwrap();
     }
 }

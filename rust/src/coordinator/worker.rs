@@ -12,9 +12,20 @@
 //! buffer cycles leader -> worker -> leader through the stream's pool, so
 //! a steady-state tile job touches the allocator not at all.
 //!
-//! Discipline: a worker drops every shared-buffer `Arc` *before* sending
-//! its reply.  The stream counts replies to know when it has regained
-//! exclusive access to its panels (`Arc::get_mut`) for writeback.
+//! Discipline, which the stream's hazard tracking depends on:
+//!
+//! * a worker drops every shared-buffer `Arc` *before* sending its reply —
+//!   the stream counts replies per launch to know when it has regained
+//!   exclusive access to a launch's panels (`Arc::get_mut`) for writeback;
+//! * **every** submitted job produces exactly one reply, error or not:
+//!   panics are caught and converted, a worker whose runtime never came up
+//!   stays alive as a reply-only drain, and the pooled C staging buffer
+//!   rides home inside the reply even when the tile failed (an errored
+//!   tile must not shrink the leader's pool).
+//!
+//! [`crate::config::FaultSpec`] injects failures at exactly these seams
+//! (runtime init, a chosen tile, panic vs error) so the failure paths stay
+//! under test (`tests/stream_faults.rs`).
 
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
 use std::sync::Arc;
@@ -26,6 +37,7 @@ use anyhow::Result;
 use super::metrics::Metrics;
 use super::scheduler::{Partition, Tile};
 use super::stream::DeviceBuf;
+use crate::config::FaultSpec;
 use crate::pack::PlaneBatch;
 use crate::runtime::{BackendKind, Runtime, TileShape};
 
@@ -36,6 +48,9 @@ pub const QUEUE_DEPTH: usize = 4;
 pub enum Job {
     /// One full output tile: accumulate C_tile over all K steps.
     GemmTile {
+        /// Stream-local id of the launch this tile belongs to; echoed in
+        /// the reply so mis-routed results are detectable.
+        launch: u64,
         artifact: Arc<str>,
         /// A: n x k, read from the shared panel.
         a: Arc<DeviceBuf>,
@@ -45,7 +60,7 @@ pub enum Job {
         /// writes results back only after the launch fully drains).
         c: Arc<DeviceBuf>,
         /// Pooled staging buffer the C tile is accumulated in; returned to
-        /// the leader inside [`TileResult`].
+        /// the leader inside [`TileResult`] on success *and* failure.
         c_buf: PlaneBatch,
         tile: Tile,
         part: Partition,
@@ -69,8 +84,15 @@ pub enum StreamKind {
 }
 
 pub struct TileResult {
+    /// Launch id echoed from the job.
+    pub launch: u64,
     pub tile: Tile,
-    pub planes: Result<PlaneBatch>,
+    /// The pooled C staging buffer, always returned to the leader.  On
+    /// success it holds the accumulated C tile; when `err` is set its
+    /// contents are unspecified (the leader recycles it without reading).
+    pub c_buf: PlaneBatch,
+    /// `None` on success; the tile's failure otherwise.
+    pub err: Option<anyhow::Error>,
 }
 
 pub struct StreamResult {
@@ -88,25 +110,39 @@ impl WorkerHandle {
     /// Spawn the worker; it creates its own Runtime on its own thread (no
     /// backend client is Send — PJRT is `Rc`-based and the native arena is
     /// private).  `tile` shapes the worker's builtin manifest so its
-    /// artifact names and geometry match the leader's partition exactly.
+    /// artifact names and geometry match the leader's partition exactly;
+    /// `faults` is the test-only failure injection (no faults in
+    /// production configs).
     pub fn spawn(
         cu: usize,
         artifact_dir: std::path::PathBuf,
         backend: BackendKind,
         tile: TileShape,
+        faults: FaultSpec,
         metrics: Arc<Metrics>,
     ) -> Self {
         let (tx, rx) = sync_channel::<Job>(QUEUE_DEPTH);
         let thread = std::thread::Builder::new()
             .name(format!("apfp-cu{cu}"))
-            .spawn(move || worker_main(cu, &artifact_dir, backend, tile, rx, metrics))
+            .spawn(move || worker_main(cu, &artifact_dir, backend, tile, faults, rx, metrics))
             .expect("spawning CU worker");
         WorkerHandle { cu, sender: tx, thread: Some(thread) }
     }
 
     /// Enqueue a job (blocks when the queue is full — backpressure).
-    pub fn submit(&self, job: Job) {
-        self.sender.send(job).expect("CU worker hung up");
+    /// Returns the job back when the worker thread is gone, so the caller
+    /// can reclaim pooled buffers and surface a typed error instead of
+    /// panicking.
+    pub fn submit(&self, job: Job) -> std::result::Result<(), Job> {
+        self.sender.send(job).map_err(|e| e.0)
+    }
+
+    /// Has this worker's thread exited?  A live worker replies to every
+    /// submitted job, so a reply that never comes implies a finished
+    /// thread — the stream's drain loop probes this (only when a reply is
+    /// overdue) to turn a would-be hang into a typed error.
+    pub fn is_finished(&self) -> bool {
+        self.thread.as_ref().is_none_or(|t| t.is_finished())
     }
 }
 
@@ -137,28 +173,38 @@ fn worker_main(
     dir: &std::path::Path,
     backend: BackendKind,
     tile: TileShape,
+    faults: FaultSpec,
     rx: Receiver<Job>,
     metrics: Arc<Metrics>,
 ) {
-    let rt = match Runtime::with_backend_tiled(dir, backend, tile) {
+    let rt = if faults.init_fail_cu == Some(cu) {
+        Err(anyhow::anyhow!("injected runtime init failure on CU{cu}"))
+    } else {
+        Runtime::with_backend_tiled(dir, backend, tile)
+    };
+    let rt = match rt {
         Ok(rt) => rt,
         Err(e) => {
             eprintln!("CU{cu}: runtime init failed: {e:#}");
+            let reason = format!("CU{cu} runtime unavailable: {e:#}");
             // Drain jobs, reporting the failure to every reply channel.
             // (Destructuring with `..` drops the shared-buffer Arcs before
-            // the send, same as the healthy path.)
+            // the send, same as the healthy path.)  The staging buffer
+            // still rides home so the leader's pool survives a dead CU.
             for job in rx {
                 match job {
-                    Job::GemmTile { tile, reply, .. } => {
+                    Job::GemmTile { launch, tile, c_buf, reply, .. } => {
                         let _ = reply.send(TileResult {
+                            launch,
                             tile,
-                            planes: Err(anyhow::anyhow!("CU{cu} runtime unavailable")),
+                            c_buf,
+                            err: Some(anyhow::anyhow!("{reason}")),
                         });
                     }
                     Job::Stream { offset, reply, .. } => {
                         let _ = reply.send(StreamResult {
                             offset,
-                            planes: Err(anyhow::anyhow!("CU{cu} runtime unavailable")),
+                            planes: Err(anyhow::anyhow!("{reason}")),
                         });
                     }
                     Job::Shutdown => break,
@@ -172,13 +218,25 @@ fn worker_main(
     for job in rx {
         match job {
             Job::Shutdown => break,
-            Job::GemmTile { artifact, a, b, c, mut c_buf, tile, part, reply } => {
+            Job::GemmTile { launch, artifact, a, b, c, mut c_buf, tile, part, reply } => {
+                if faults.die_on_tile == Some((tile.r0, tile.c0)) {
+                    // Injected CU crash: the thread exits without replying
+                    // or draining its queue.  The stream's liveness probe
+                    // must turn this into a typed ReplyLost, never a hang.
+                    return;
+                }
                 // A panic inside the tile (an assert anywhere in the
                 // pack/softfloat stack) must become an error *reply*: the
-                // leader counts replies, and a job that dies silently would
-                // hang its `wait()` forever.  catch_unwind costs nothing on
-                // the non-panicking path.
+                // leader counts replies per launch, and a job that dies
+                // silently would hang its retirement forever.
+                // catch_unwind costs nothing on the non-panicking path.
                 let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    if faults.fail_tile == Some((tile.r0, tile.c0)) {
+                        if faults.panic_tile {
+                            panic!("injected panic on tile ({}, {})", tile.r0, tile.c0);
+                        }
+                        anyhow::bail!("injected failure on tile ({}, {})", tile.r0, tile.c0);
+                    }
                     run_tile(
                         &rt, &artifact, &a, &b, &c, tile, &part, &metrics, &mut bufs, &mut c_buf,
                     )
@@ -186,15 +244,15 @@ fn worker_main(
                 // Release the shared buffers before replying: the leader
                 // reclaims exclusive panel access by counting replies.
                 drop((a, b, c, artifact));
-                let planes = match res {
-                    Ok(Ok(())) => Ok(c_buf),
-                    Ok(Err(e)) => Err(e),
-                    Err(panic) => Err(anyhow::anyhow!(
+                let err = match res {
+                    Ok(Ok(())) => None,
+                    Ok(Err(e)) => Some(e),
+                    Err(panic) => Some(anyhow::anyhow!(
                         "CU{cu} panicked executing tile: {}",
                         panic_message(&panic)
                     )),
                 };
-                let _ = reply.send(TileResult { tile, planes });
+                let _ = reply.send(TileResult { launch, tile, c_buf, err });
             }
             Job::Stream { artifact, kind, operands, offset, reply } => {
                 let t0 = Instant::now();

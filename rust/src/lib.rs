@@ -19,7 +19,9 @@
 //!   default, the XLA/PJRT artifact path behind `APFP_BACKEND=xla`);
 //! * [`coordinator`] — the virtual device: compute-unit workers, the §III
 //!   band/tile scheduler, the CUDA-like [`coordinator::Device`], and the
-//!   batched [`coordinator::DeviceStream`] launch API;
+//!   batched [`coordinator::DeviceStream`] launch API with hazard-tracked
+//!   pipelining of independent launches and typed
+//!   [`coordinator::StreamError`] failure paths;
 //! * [`hwmodel`] / [`sim`] — the analytic U250 model that regenerates the
 //!   paper's tables and figures;
 //! * [`config`] / [`bench_util`] / [`testkit`] — configuration, the

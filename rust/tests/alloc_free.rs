@@ -210,12 +210,14 @@ fn mac_pipeline_is_allocation_free() {
         }
     }
 
-    // --- steady-state DeviceStream: warm enqueue_gemm + wait --------------
+    // --- steady-state DeviceStream: warm pipelined enqueues + wait --------
     // The batched-launch acceptance criterion: on a warm stream (B tile
-    // grid cached, staging pool filled, reply channel sized, worker
-    // buffers shaped) a full enqueue+drain round touches the allocator
-    // exactly zero times — leader-side submission AND the worker thread's
-    // tile execution, since the counting allocator is global.
+    // grids cached, staging pool filled, reply channels pooled, worker
+    // buffers shaped) a full round of TWO independent enqueues — which the
+    // hazard tracker keeps in flight simultaneously — plus the drain
+    // touches the allocator exactly zero times: leader-side submission,
+    // per-launch bookkeeping AND the worker thread's tile execution, since
+    // the counting allocator is global.
     if BackendKind::from_env() == BackendKind::Native {
         let cfg = ApfpConfig {
             compute_units: 1,
@@ -229,26 +231,42 @@ fn mac_pipeline_is_allocation_free() {
         let a = Matrix::random(8, 8, 448, 70, 20);
         let b = Matrix::random(8, 8, 448, 71, 20);
         let c = Matrix::random(8, 8, 448, 72, 20);
+        let d = Matrix::random(8, 8, 448, 73, 20);
+        let e = Matrix::random(8, 8, 448, 74, 20);
+        let f = Matrix::random(8, 8, 448, 75, 20);
         let mut s = dev.stream().unwrap();
         let (ha, hb, hc) = (s.upload(&a), s.upload(&b), s.upload(&c));
+        let (hd, he, hf) = (s.upload(&d), s.upload(&e), s.upload(&f));
         let warm_rounds = 2;
         for _ in 0..warm_rounds {
             s.enqueue_gemm(ha, hb, hc).unwrap();
+            s.enqueue_gemm(hd, he, hf).unwrap(); // disjoint: stays in flight
             s.wait().unwrap();
         }
+        // the warm rounds really pipelined: both launches were in flight
+        assert!(
+            dev.metrics().inflight_max >= 2,
+            "disjoint warm launches must overlap, got {}",
+            dev.metrics().inflight_max
+        );
         let measured_rounds = 3;
         let delta = min_alloc_delta(measured_rounds, || {
             s.enqueue_gemm(ha, hb, hc).unwrap();
+            s.enqueue_gemm(hd, he, hf).unwrap();
             s.wait().unwrap();
         });
-        assert_eq!(delta, 0, "warm stream enqueue_gemm+wait allocated in steady state");
+        assert_eq!(delta, 0, "warm pipelined enqueue+wait allocated in steady state");
         // the warm path stays bit-exact: every round accumulated A@B onto
-        // the resident C; replay the same chain through the baseline
-        let mut want = c.clone();
-        for _ in 0..warm_rounds + measured_rounds {
-            want = apfp::baseline::gemm_serial(&a, &b, &want);
+        // the resident C and D@E onto the resident F; replay both chains
+        // through the baseline
+        let rounds = warm_rounds + measured_rounds;
+        let (mut want_c, mut want_f) = (c.clone(), f.clone());
+        for _ in 0..rounds {
+            want_c = apfp::baseline::gemm_serial(&a, &b, &want_c);
+            want_f = apfp::baseline::gemm_serial(&d, &e, &want_f);
         }
-        assert_eq!(s.download(hc).unwrap(), want, "warm stream accumulation stays correct");
+        assert_eq!(s.download(hc).unwrap(), want_c, "warm stream accumulation stays correct");
+        assert_eq!(s.download(hf).unwrap(), want_f, "pipelined launch accumulation stays correct");
     } else {
         eprintln!("skipped: stream alloc proof needs the native backend");
     }

@@ -14,16 +14,8 @@ use apfp::config::ApfpConfig;
 use apfp::coordinator::{Device, Matrix};
 use apfp::runtime::BackendKind;
 
-fn device(cus: usize, bits: u32) -> Option<Device> {
+fn open_device(cfg: ApfpConfig) -> Option<Device> {
     let dir = apfp::runtime::default_artifact_dir();
-    let cfg = ApfpConfig {
-        compute_units: cus,
-        bits,
-        tile_n: 16,
-        tile_m: 16,
-        tile_k: 16,
-        ..Default::default()
-    };
     let native = cfg.backend == BackendKind::Native;
     match Device::new(cfg, &dir) {
         Ok(dev) => Some(dev),
@@ -36,6 +28,25 @@ fn device(cus: usize, bits: u32) -> Option<Device> {
         }
         Err(e) => panic!("native device must open on a clean checkout: {e:#}"),
     }
+}
+
+fn device(cus: usize, bits: u32) -> Option<Device> {
+    let cfg = ApfpConfig {
+        compute_units: cus,
+        bits,
+        tile_n: 16,
+        tile_m: 16,
+        tile_k: 16,
+        ..Default::default()
+    };
+    open_device(cfg)
+}
+
+/// Like [`device`], but honoring the environment's tile shape
+/// (`APFP_TILE_N/M/K`) so the CI tile-shape matrix genuinely varies the
+/// geometry the launch-hazard tests run at.
+fn device_env_tiles(cus: usize, bits: u32) -> Option<Device> {
+    open_device(ApfpConfig { compute_units: cus, bits, ..Default::default() })
 }
 
 #[test]
@@ -258,6 +269,85 @@ fn stream_chains_gemms_without_round_trips() {
     assert_eq!(after.panel_builds, before.panel_builds, "warm B grid must not repack");
     assert_eq!(after.panel_reuses, before.panel_reuses + 1);
     assert_eq!(s.download(hc).unwrap(), baseline::gemm_serial(&a, &b, &c1));
+}
+
+#[test]
+fn independent_launches_pipeline_and_stay_bit_exact() {
+    // The hazard-tracking acceptance criterion: launches with disjoint
+    // buffer sets must be in flight simultaneously (no drain between
+    // enqueues), and both results still match the serial baseline.
+    let Some(dev) = device_env_tiles(2, 512) else { return };
+    let a1 = Matrix::random(14, 10, 448, 500, 30);
+    let b1 = Matrix::random(10, 12, 448, 501, 30);
+    let c1 = Matrix::random(14, 12, 448, 502, 30);
+    let a2 = Matrix::random(9, 11, 448, 503, 30);
+    let b2 = Matrix::random(11, 13, 448, 504, 30);
+    let c2 = Matrix::random(9, 13, 448, 505, 30);
+
+    let mut s = dev.stream().unwrap();
+    let (ha1, hb1, hc1) = (s.upload(&a1), s.upload(&b1), s.upload(&c1));
+    let (ha2, hb2, hc2) = (s.upload(&a2), s.upload(&b2), s.upload(&c2));
+    s.enqueue_gemm(ha1, hb1, hc1).unwrap();
+    s.enqueue_gemm(ha2, hb2, hc2).unwrap();
+    assert!(
+        dev.metrics().inflight_max >= 2,
+        "disjoint launches must overlap, got inflight_max {}",
+        dev.metrics().inflight_max
+    );
+    s.wait().unwrap();
+    assert_eq!(s.download(hc1).unwrap(), baseline::gemm_serial(&a1, &b1, &c1));
+    assert_eq!(s.download(hc2).unwrap(), baseline::gemm_serial(&a2, &b2, &c2));
+    let snap = dev.metrics();
+    assert_eq!(snap.launches, 2, "both launches retired");
+    assert!(snap.drain_ns > 0, "per-launch drain time must be recorded");
+}
+
+#[test]
+fn dependent_chain_serializes_through_the_hazard_check() {
+    // enqueue_gemm(c, b, c) reads what the previous launch wrote: the
+    // hazard scan must drain between them (inflight_max stays 1) and the
+    // chain must stay bit-identical to serial application.
+    let Some(dev) = device_env_tiles(2, 512) else { return };
+    let b = Matrix::random(12, 12, 448, 510, 25);
+    let c = Matrix::random(12, 12, 448, 511, 25);
+    let mut s = dev.stream().unwrap();
+    let (hb, hc) = (s.upload(&b), s.upload(&c));
+    let mut want = c.clone();
+    for _ in 0..3 {
+        s.enqueue_gemm(hc, hb, hc).unwrap();
+        want = baseline::gemm_serial(&want, &b, &want);
+    }
+    assert_eq!(
+        dev.metrics().inflight_max,
+        1,
+        "a dependent chain must never have two launches in flight"
+    );
+    assert_eq!(s.download(hc).unwrap(), want);
+}
+
+#[test]
+fn download_drains_only_what_the_read_depends_on() {
+    // Retirement is FIFO, so downloading a buffer lands every launch up to
+    // its last writer — but launches writing other buffers stay in flight.
+    let Some(dev) = device_env_tiles(2, 512) else { return };
+    let a = Matrix::random(10, 8, 448, 520, 25);
+    let b = Matrix::random(8, 9, 448, 521, 25);
+    let c1 = Matrix::random(10, 9, 448, 522, 25);
+    let c2 = Matrix::random(10, 9, 448, 523, 25);
+    let mut s = dev.stream().unwrap();
+    let (ha, hb) = (s.upload(&a), s.upload(&b));
+    let (hc1, hc2) = (s.upload(&c1), s.upload(&c2));
+    s.enqueue_gemm(ha, hb, hc1).unwrap();
+    s.enqueue_gemm(ha, hb, hc2).unwrap();
+    // downloading c1 retires launch 1 only; launch 2 still drains later
+    assert_eq!(s.download(hc1).unwrap(), baseline::gemm_serial(&a, &b, &c1));
+    assert_eq!(dev.metrics().launches, 1, "download must retire only up to c1's writer");
+    assert_eq!(s.download(hc2).unwrap(), baseline::gemm_serial(&a, &b, &c2));
+    assert_eq!(dev.metrics().launches, 2);
+    // an untouched buffer downloads without draining anything
+    s.enqueue_gemm(ha, hb, hc1).unwrap();
+    assert_eq!(s.download(hb).unwrap(), b);
+    s.wait().unwrap();
 }
 
 #[test]

@@ -1,0 +1,316 @@
+//! Failure-path injection tests for the device stream (ISSUE 5).
+//!
+//! Every fault — a backend error on a chosen tile, a worker panic, a CU
+//! whose runtime never comes up, a handle used on the wrong stream, a wait
+//! after an error — must surface as a **typed** [`StreamError`], never a
+//! panic and never a hang, and the stream must stay usable afterwards
+//! (a failed launch writes nothing, so C keeps its pre-launch contents).
+//!
+//! Faults are injected through [`FaultSpec`] in the device config (the
+//! crate's failpoints), so these tests drive the *real* worker/stream
+//! machinery: the same reply channels, the same catch_unwind containment,
+//! the same pool recycling.  Tile geometry is taken from the default
+//! config so the CI tile-shape matrix (`APFP_TILE_N/M/K`) exercises the
+//! fault paths under clipped and non-divisible tiles too.
+
+use apfp::baseline;
+use apfp::config::{ApfpConfig, FaultSpec};
+use apfp::coordinator::scheduler::Partition;
+use apfp::coordinator::{Device, Matrix, StreamError};
+use apfp::runtime::BackendKind;
+
+/// A native-backend device with the given fault injection.  Forced native:
+/// fault handling is backend-agnostic and must be testable on any
+/// checkout, artifacts or not.
+fn faulty_device(cus: usize, faults: FaultSpec) -> Device {
+    let cfg = ApfpConfig {
+        backend: BackendKind::Native,
+        compute_units: cus,
+        faults,
+        ..Default::default()
+    };
+    let dir = std::env::temp_dir().join("apfp_stream_faults_no_artifacts/none");
+    Device::new(cfg, &dir).expect("native device must open on a clean checkout")
+}
+
+/// The (row, column) origin of a tile that exists in a `wide_m()`-column
+/// output but not in a `tile_m`-column one — so one launch shape trips the
+/// fault and another avoids it, whatever the configured tile geometry.
+fn fault_origin() -> (usize, usize) {
+    (0, 2 * ApfpConfig::default().tile_m)
+}
+
+/// Columns wide enough that the `fault_origin()` tile exists.
+fn wide_m() -> usize {
+    2 * ApfpConfig::default().tile_m + 1
+}
+
+fn launch_failed(err: &anyhow::Error) -> &StreamError {
+    match err.downcast_ref::<StreamError>() {
+        Some(se @ StreamError::LaunchFailed { .. }) => se,
+        Some(other) => panic!("expected LaunchFailed, got {other:?}"),
+        None => panic!("error must downcast to StreamError: {err:#}"),
+    }
+}
+
+#[test]
+fn injected_tile_error_is_typed_and_leaves_c_unchanged() {
+    let (r0, c0) = fault_origin();
+    let dev = faulty_device(2, FaultSpec { fail_tile: Some((r0, c0)), ..Default::default() });
+    let (n, k, m) = (10, 6, wide_m());
+    let a = Matrix::random(n, k, 448, 1, 30);
+    let b = Matrix::random(k, m, 448, 2, 30);
+    let c = Matrix::random(n, m, 448, 3, 30);
+
+    let mut s = dev.stream().unwrap();
+    let (ha, hb, hc) = (s.upload(&a), s.upload(&b), s.upload(&c));
+    s.enqueue_gemm(ha, hb, hc).unwrap();
+    let err = s.wait().expect_err("the injected tile failure must surface");
+    match launch_failed(&err) {
+        StreamError::LaunchFailed { failed, total, tiles, .. } => {
+            assert_eq!(*failed, 1, "exactly the faulted tile fails: {tiles}");
+            assert_eq!(*total, partition_for(&dev, n, m, k).total_tiles());
+            assert!(tiles.contains(&format!("tile({r0},{c0})")), "{tiles}");
+            assert!(tiles.contains("injected failure"), "{tiles}");
+        }
+        _ => unreachable!(),
+    }
+    // a failed launch writes nothing: C still holds its uploaded contents
+    assert_eq!(s.download(hc).unwrap(), c, "failed launch must leave C unchanged");
+
+    // the stream stays usable: a launch whose tiles avoid the faulted
+    // origin runs to completion, bit-exact
+    let m2 = ApfpConfig::default().tile_m.min(7);
+    let b2 = Matrix::random(k, m2, 448, 4, 30);
+    let c2 = Matrix::random(n, m2, 448, 5, 30);
+    let (hb2, hc2) = (s.upload(&b2), s.upload(&c2));
+    s.enqueue_gemm(ha, hb2, hc2).unwrap();
+    s.wait().unwrap();
+    assert_eq!(s.download(hc2).unwrap(), baseline::gemm_serial(&a, &b2, &c2));
+}
+
+#[test]
+fn injected_tile_panic_is_caught_and_reported() {
+    let (r0, c0) = fault_origin();
+    let faults = FaultSpec { fail_tile: Some((r0, c0)), panic_tile: true, ..Default::default() };
+    let dev = faulty_device(2, faults);
+    let (n, k, m) = (9, 5, wide_m());
+    let a = Matrix::random(n, k, 448, 10, 30);
+    let b = Matrix::random(k, m, 448, 11, 30);
+    let c = Matrix::random(n, m, 448, 12, 30);
+
+    let mut s = dev.stream().unwrap();
+    let (ha, hb, hc) = (s.upload(&a), s.upload(&b), s.upload(&c));
+    s.enqueue_gemm(ha, hb, hc).unwrap();
+    let err = s.wait().expect_err("a panicking tile must surface as an error, not a crash");
+    match launch_failed(&err) {
+        StreamError::LaunchFailed { failed, tiles, .. } => {
+            assert_eq!(*failed, 1, "{tiles}");
+            assert!(tiles.contains("panicked"), "panic must be named: {tiles}");
+        }
+        _ => unreachable!(),
+    }
+    assert_eq!(s.download(hc).unwrap(), c);
+    // the worker survived the caught panic: the same stream still executes
+    s.enqueue_gemm(ha, ha, ha).unwrap_err(); // shape mismatch is still typed...
+    let sq = Matrix::random(k, k, 448, 13, 30);
+    let hsq = s.upload(&sq);
+    s.enqueue_gemm(hsq, hsq, hsq).unwrap();
+    s.wait().unwrap();
+    assert_eq!(s.download(hsq).unwrap(), baseline::gemm_serial(&sq, &sq, &sq));
+}
+
+fn partition_for(dev: &Device, n: usize, m: usize, k: usize) -> Partition {
+    let t = dev.config().tile_shape();
+    Partition {
+        n,
+        m,
+        k,
+        tile_n: t.n,
+        tile_m: t.m,
+        k_tile: t.k,
+        compute_units: dev.config().compute_units,
+    }
+}
+
+#[test]
+fn cu_runtime_init_failure_errors_every_tile_of_its_band() {
+    let dev = faulty_device(2, FaultSpec { init_fail_cu: Some(1), ..Default::default() });
+    let (n, k, m) = (10, 6, wide_m());
+    let a = Matrix::random(n, k, 448, 20, 30);
+    let b = Matrix::random(k, m, 448, 21, 30);
+    let c = Matrix::random(n, m, 448, 22, 30);
+    let part = partition_for(&dev, n, m, k);
+    let expected_failed = part.tiles_for(1).len();
+    let expected_total = part.total_tiles();
+    assert!(expected_failed >= 2, "test needs CU1 to own several tiles");
+
+    let mut s = dev.stream().unwrap();
+    let (ha, hb, hc) = (s.upload(&a), s.upload(&b), s.upload(&c));
+    s.enqueue_gemm(ha, hb, hc).unwrap();
+    let err = s.wait().expect_err("a dead CU's tiles must all error");
+    match launch_failed(&err) {
+        StreamError::LaunchFailed { failed, total, tiles, .. } => {
+            // every failure is aggregated into the one error, not just the
+            // first
+            assert_eq!(*failed, expected_failed, "{tiles}");
+            assert_eq!(*total, expected_total);
+            assert_eq!(tiles.matches("CU1 tile(").count(), expected_failed, "{tiles}");
+            assert!(tiles.contains("runtime unavailable"), "{tiles}");
+        }
+        _ => unreachable!(),
+    }
+    assert_eq!(s.download(hc).unwrap(), c, "no partial writeback from healthy CUs");
+
+    // the stream-operator path over the same dead CU errors too (its
+    // chunk replies an error) — and never hangs
+    let x = Matrix::random(1, 64, 448, 23, 30);
+    let y = Matrix::random(1, 64, 448, 24, 30);
+    assert!(dev.mul_stream(x.row(0), y.row(0)).is_err());
+}
+
+#[test]
+fn foreign_handles_are_rejected_across_streams_and_devices() {
+    let dev1 = faulty_device(1, FaultSpec::default());
+    let dev2 = faulty_device(1, FaultSpec::default());
+    let a = Matrix::random(6, 6, 448, 30, 30);
+    let mut s1 = dev1.stream().unwrap();
+    let mut s2 = dev1.stream().unwrap(); // same device, different stream
+    let mut s3 = dev2.stream().unwrap(); // different device entirely
+    let h1 = s1.upload(&a);
+    let h2 = s2.upload(&a);
+    let h3 = s3.upload(&a);
+    assert_ne!(h1, h2, "same index on different streams must not compare equal");
+
+    for (err, what) in [
+        (s2.enqueue_gemm(h1, h2, h2).expect_err("foreign A"), "enqueue A"),
+        (s2.enqueue_gemm(h2, h1, h2).expect_err("foreign B"), "enqueue B"),
+        (s2.enqueue_gemm(h2, h2, h1).expect_err("foreign C"), "enqueue C"),
+        (s2.download(h1).expect_err("foreign download"), "download"),
+        (s3.download(h1).expect_err("cross-device download"), "cross-device"),
+        (s1.download(h3).expect_err("cross-device reverse"), "cross-device reverse"),
+    ] {
+        assert!(
+            matches!(err.downcast_ref::<StreamError>(), Some(StreamError::ForeignHandle { .. })),
+            "{what}: {err:#}"
+        );
+    }
+
+    // rejection happened before any state change: all three streams work
+    for (s, h) in [(&mut s1, h1), (&mut s2, h2), (&mut s3, h3)] {
+        s.enqueue_gemm(h, h, h).unwrap();
+        s.wait().unwrap();
+        assert_eq!(s.download(h).unwrap(), baseline::gemm_serial(&a, &a, &a));
+    }
+}
+
+#[test]
+fn wait_after_error_sequences_stay_clean() {
+    let (r0, c0) = fault_origin();
+    let dev = faulty_device(2, FaultSpec { fail_tile: Some((r0, c0)), ..Default::default() });
+    let (n, k) = (8, 5);
+    let a = Matrix::random(n, k, 448, 40, 30);
+    let bw = Matrix::random(k, wide_m(), 448, 41, 30);
+    let cw = Matrix::random(n, wide_m(), 448, 42, 30);
+
+    let mut s = dev.stream().unwrap();
+    let (ha, hbw, hcw) = (s.upload(&a), s.upload(&bw), s.upload(&cw));
+
+    // fail -> wait(Err) -> wait(Ok): the error drains everything, so a
+    // second wait has nothing pending and reports clean
+    s.enqueue_gemm(ha, hbw, hcw).unwrap();
+    assert!(s.wait().is_err());
+    s.wait().unwrap();
+
+    // fail -> download(Err) -> download(Ok): download surfaces the launch
+    // failure once, then reads the unchanged buffer
+    s.enqueue_gemm(ha, hbw, hcw).unwrap();
+    let err = s.download(hcw).expect_err("download must surface the drained failure");
+    launch_failed(&err);
+    assert_eq!(s.download(hcw).unwrap(), cw);
+}
+
+#[test]
+fn worker_death_poisons_the_stream_instead_of_hanging() {
+    // A worker thread that exits reply-less (a crashed CU — nothing the
+    // catch_unwind containment can see) is the one failure the reply
+    // counting cannot absorb.  The drain loop's liveness probe must turn
+    // it into a typed ReplyLost within a bounded time, poison the stream,
+    // and every later call must report Poisoned — no hang, no panic.
+    let tm = ApfpConfig::default().tile_m;
+    let tn = ApfpConfig::default().tile_n;
+    // die on the launch's last tile so every job is already submitted and
+    // the leader is blocked in wait() when the thread exits
+    let die_at = (0, 2 * tm);
+    let dev = faulty_device(1, FaultSpec { die_on_tile: Some(die_at), ..Default::default() });
+    let (n, k, m) = (tn.min(8), 5, wide_m());
+    let a = Matrix::random(n, k, 448, 60, 30);
+    let b = Matrix::random(k, m, 448, 61, 30);
+    let c = Matrix::random(n, m, 448, 62, 30);
+
+    let mut s = dev.stream().unwrap();
+    let (ha, hb, hc) = (s.upload(&a), s.upload(&b), s.upload(&c));
+    s.enqueue_gemm(ha, hb, hc).unwrap();
+    let t0 = std::time::Instant::now();
+    let err = s.wait().expect_err("a reply-less dead worker must be detected");
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(30),
+        "liveness detection must be bounded, took {:?}",
+        t0.elapsed()
+    );
+    assert!(
+        matches!(err.downcast_ref::<StreamError>(), Some(StreamError::ReplyLost { .. })),
+        "{err:#}"
+    );
+    // the stream is cleanly poisoned: every later call reports it
+    for attempt in 0..2 {
+        let err = s.wait().expect_err("poisoned stream must keep erroring");
+        assert!(
+            matches!(err.downcast_ref::<StreamError>(), Some(StreamError::Poisoned { .. })),
+            "attempt {attempt}: {err:#}"
+        );
+    }
+    let err = s.enqueue_gemm(ha, hb, hc).expect_err("enqueue on a poisoned stream");
+    assert!(
+        matches!(err.downcast_ref::<StreamError>(), Some(StreamError::Poisoned { .. })),
+        "{err:#}"
+    );
+    let err = s.download(hc).expect_err("download on a poisoned stream");
+    assert!(
+        matches!(err.downcast_ref::<StreamError>(), Some(StreamError::Poisoned { .. })),
+        "{err:#}"
+    );
+}
+
+#[test]
+fn dependent_enqueue_surfaces_the_failed_launch_it_waits_on() {
+    let (r0, c0) = fault_origin();
+    let dev = faulty_device(2, FaultSpec { fail_tile: Some((r0, c0)), ..Default::default() });
+    let (n, k, m) = (8, 5, wide_m());
+    let a = Matrix::random(n, k, 448, 50, 30);
+    let b = Matrix::random(k, m, 448, 51, 30);
+    let c = Matrix::random(n, m, 448, 52, 30);
+    let d = Matrix::random(m, 4, 448, 53, 30);
+    let e = Matrix::random(n, 4, 448, 54, 30);
+
+    let mut s = dev.stream().unwrap();
+    let (ha, hb, hc) = (s.upload(&a), s.upload(&b), s.upload(&c));
+    let (hd, he) = (s.upload(&d), s.upload(&e));
+    s.enqueue_gemm(ha, hb, hc).unwrap(); // will fail at (r0, c0)
+    // reads hc -> RAW hazard -> drains the failing launch and reports it
+    let err = s.enqueue_gemm(hc, hd, he).expect_err("hazard drain must propagate the failure");
+    launch_failed(&err);
+    // the dependent launch was never submitted: nothing in flight, E and C
+    // both untouched
+    s.wait().unwrap();
+    assert_eq!(s.download(he).unwrap(), e);
+    assert_eq!(s.download(hc).unwrap(), c);
+    // and the chain can be retried cleanly on a fault-free shape
+    let m2 = 4;
+    let b2 = Matrix::random(k, m2, 448, 55, 30);
+    let c2 = Matrix::random(n, m2, 448, 56, 30);
+    let (hb2, hc2) = (s.upload(&b2), s.upload(&c2));
+    s.enqueue_gemm(ha, hb2, hc2).unwrap();
+    let c2_next = baseline::gemm_serial(&a, &b2, &c2);
+    assert_eq!(s.download(hc2).unwrap(), c2_next);
+}

@@ -55,9 +55,13 @@ fn randomized_tile_shapes_stay_bit_exact() {
 
 #[test]
 fn randomized_tiles_through_a_chained_stream() {
-    // The same property through the batched API: two chained launches
-    // (C += A@B, then E += C@D with C still device-resident) across random
-    // tile geometry, against two serial baseline applications.
+    // The same property through the batched API, now mixing every launch
+    // relationship the hazard tracker distinguishes: a dependent chain
+    // (E += C@D reads the C a previous launch wrote), an independent
+    // launch with a disjoint write set (F += A@B, pipelined alongside),
+    // and an aliased self-chain (E += E@Bsq, read and write sets meet) —
+    // all across random tile geometry, against serial baseline
+    // applications in enqueue order.
     let mut rng = Rng::from_seed(0x57BEA);
     for case in 0..8u64 {
         let tile_n = rng.range_i64(1, 7) as usize;
@@ -76,19 +80,27 @@ fn randomized_tiles_through_a_chained_stream() {
         let c = Matrix::random(n, m, 448, 6000 + case, 30);
         let d = Matrix::random(m, p, 448, 7000 + case, 30);
         let e = Matrix::random(n, p, 448, 8000 + case, 30);
+        let f = Matrix::random(n, m, 448, 9000 + case, 30);
+        let bsq = Matrix::random(p, p, 448, 9500 + case, 30);
 
         let mut s = dev.stream().unwrap();
         let (ha, hb, hc) = (s.upload(&a), s.upload(&b), s.upload(&c));
         let (hd, he) = (s.upload(&d), s.upload(&e));
-        s.enqueue_gemm(ha, hb, hc).unwrap();
-        s.enqueue_gemm(hc, hd, he).unwrap();
+        let (hf, hbsq) = (s.upload(&f), s.upload(&bsq));
+        s.enqueue_gemm(ha, hb, hc).unwrap(); // C += A@B
+        s.enqueue_gemm(hc, hd, he).unwrap(); // dependent: reads updated C
+        s.enqueue_gemm(ha, hb, hf).unwrap(); // independent: disjoint write
+        s.enqueue_gemm(he, hbsq, he).unwrap(); // aliased self-chain on E
 
         let c1 = baseline::gemm_serial(&a, &b, &c);
-        let want = baseline::gemm_serial(&c1, &d, &e);
+        let e1 = baseline::gemm_serial(&c1, &d, &e);
+        let e2 = baseline::gemm_serial(&e1, &bsq, &e1);
+        let f1 = baseline::gemm_serial(&a, &b, &f);
         let shapes = format!(
             "case {case}: {n}x{k}x{m}x{p} on {cus} CUs with {tile_n}x{tile_m}x{tile_k} tiles"
         );
-        assert_eq!(s.download(he).unwrap(), want, "{shapes}");
+        assert_eq!(s.download(he).unwrap(), e2, "{shapes}");
         assert_eq!(s.download(hc).unwrap(), c1, "{shapes}");
+        assert_eq!(s.download(hf).unwrap(), f1, "{shapes}");
     }
 }
