@@ -7,7 +7,7 @@ import pytest
 from compile import apfp_types, model
 from compile.kernels import ref
 
-from .conftest import random_apfp
+from conftest import random_apfp
 
 
 def rand_mat(rng, rows, cols, bits, exp_range=40):

@@ -7,7 +7,7 @@ import pytest
 from compile import apfp_types, config
 from compile.kernels import ref
 
-from .conftest import random_apfp
+from conftest import random_apfp
 
 
 @pytest.mark.parametrize("bits", [512, 1024])

@@ -183,6 +183,9 @@ pub fn measure_mac_throughput(prec: u32, iters: usize) -> f64 {
 }
 
 /// Multithreaded mul throughput (ops/s aggregated over `threads` cores).
+// join() fails only when a bench thread panicked; propagating that panic
+// is the right behavior for a measurement harness.
+#[allow(clippy::expect_used)]
 pub fn measure_mul_throughput_threaded(prec: u32, iters: usize, threads: usize) -> f64 {
     let per: Vec<f64> = std::thread::scope(|scope| {
         (0..threads)
@@ -197,6 +200,8 @@ pub fn measure_mul_throughput_threaded(prec: u32, iters: usize, threads: usize) 
 
 /// Multithreaded MAC throughput (MAC/s aggregated over `threads` cores,
 /// one arena per thread).
+// join() fails only when a bench thread panicked; see above.
+#[allow(clippy::expect_used)]
 pub fn measure_mac_throughput_threaded(prec: u32, iters: usize, threads: usize) -> f64 {
     let per: Vec<f64> = std::thread::scope(|scope| {
         (0..threads)

@@ -17,7 +17,7 @@ pub struct BenchResult {
 impl BenchResult {
     pub fn median_s(&self) -> f64 {
         let mut s = self.samples.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(|a, b| a.total_cmp(b));
         s[s.len() / 2]
     }
 

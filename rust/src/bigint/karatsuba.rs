@@ -40,17 +40,31 @@ use std::cmp::Ordering;
 /// (read once, see [`karatsuba_threshold`]).
 pub const KARATSUBA_THRESHOLD: usize = 40;
 
+/// Strict parse of an `APFP_KARATSUBA_THRESHOLD` override value: a
+/// positive integer, clamped to >= 2 so the recursion stays meaningful.
+/// `None` when the value is malformed (non-numeric, negative, zero) —
+/// [`karatsuba_threshold`] then warns and falls back, while the strict
+/// config path ([`crate::config::ApfpConfig::try_from_env_with`]) turns
+/// it into a typed error.
+pub fn parse_threshold(v: &str) -> Option<usize> {
+    v.trim().parse::<usize>().ok().filter(|&t| t > 0).map(|t| t.max(2))
+}
+
 /// The active Karatsuba crossover: `APFP_KARATSUBA_THRESHOLD` when set to
 /// a positive integer (clamped to >= 2 so the recursion stays meaningful),
-/// otherwise [`KARATSUBA_THRESHOLD`].  Parsed once per process.
+/// otherwise [`KARATSUBA_THRESHOLD`].  Parsed once per process; a
+/// malformed value warns on stderr and keeps the default.
 pub fn karatsuba_threshold() -> usize {
     static THRESHOLD: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
-    *THRESHOLD.get_or_init(|| {
-        std::env::var("APFP_KARATSUBA_THRESHOLD")
-            .ok()
-            .and_then(|v| v.trim().parse::<usize>().ok())
-            .map(|t| t.max(2))
-            .unwrap_or(KARATSUBA_THRESHOLD)
+    *THRESHOLD.get_or_init(|| match std::env::var("APFP_KARATSUBA_THRESHOLD") {
+        Ok(v) => parse_threshold(&v).unwrap_or_else(|| {
+            eprintln!(
+                "APFP_KARATSUBA_THRESHOLD={v:?} is not a positive integer; \
+                 using {KARATSUBA_THRESHOLD}"
+            );
+            KARATSUBA_THRESHOLD
+        }),
+        Err(_) => KARATSUBA_THRESHOLD,
     })
 }
 
@@ -67,6 +81,7 @@ pub fn mul_karatsuba(a: &[u64], b: &[u64], out: &mut [u64], base_limbs: usize) {
 /// the recursion (§Perf P2 in EXPERIMENTS.md: per-level `Vec` allocations
 /// made the recursion slower than schoolbook at every practical width; the
 /// arena removes even the single top-level allocation across calls).
+// apfp-lint: no_alloc
 pub fn mul_karatsuba_with(
     a: &[u64],
     b: &[u64],

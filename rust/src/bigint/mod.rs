@@ -61,6 +61,7 @@ impl Scratch {
     /// arbitrary: the recursion fully writes every region before reading it.
     fn kara_ws(&mut self, len: usize) -> &mut [u64] {
         if self.kara.len() < len {
+            // apfp-lint: allow(alloc, reason="arena growth: reallocates only when a wider operand arrives; warm widths hit the len check")
             self.kara.resize(len, 0);
         }
         &mut self.kara[..len]
@@ -73,6 +74,7 @@ impl Scratch {
     pub fn take_prod(&mut self, len: usize) -> Vec<u64> {
         let mut v = std::mem::take(&mut self.prod);
         v.clear();
+            // apfp-lint: allow(alloc, reason="pool reuse: clear+resize fills recycled capacity; reallocates only when the width grows")
         v.resize(len, 0);
         v
     }
@@ -90,6 +92,7 @@ impl Scratch {
     pub fn take_addws(&mut self, len: usize) -> Vec<u64> {
         let mut v = std::mem::take(&mut self.addws);
         v.clear();
+            // apfp-lint: allow(alloc, reason="pool reuse: clear+resize fills recycled capacity; reallocates only when the width grows")
         v.resize(len, 0);
         v
     }
@@ -106,6 +109,7 @@ impl Scratch {
     pub fn take_limbs(&mut self, len: usize) -> Vec<u64> {
         let mut v = self.pool.pop().unwrap_or_default();
         v.clear();
+            // apfp-lint: allow(alloc, reason="pool reuse: clear+resize fills recycled capacity; reallocates only when the width grows")
         v.resize(len, 0);
         v
     }
@@ -333,6 +337,7 @@ pub fn mul_auto(a: &[u64], b: &[u64], out: &mut [u64]) {
 /// arena is warm.  The crossover is [`karatsuba_threshold`] — compiled
 /// default [`KARATSUBA_THRESHOLD`], overridable per host via the
 /// `APFP_KARATSUBA_THRESHOLD` environment variable.
+// apfp-lint: no_alloc
 pub fn mul_auto_with(a: &[u64], b: &[u64], out: &mut [u64], scratch: &mut Scratch) {
     let threshold = karatsuba_threshold();
     if a.len() < threshold || a.len() != b.len() {

@@ -61,6 +61,7 @@ pub fn gemm(
     // hand the results back by value, consuming the device matrix row-major
     // — no per-element clone on the marshaling path
     let mut vals = out.into_values().into_iter();
+    #[allow(clippy::expect_used)] // device.gemm returned an m x n matrix above
     for i in 0..m {
         for j in 0..n {
             write_c(j * ldc + i, vals.next().expect("m*n values"));

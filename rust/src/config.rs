@@ -49,6 +49,10 @@ pub enum ConfigError {
     UnknownKey(String),
     #[error("invalid value for {key}: {value:?}")]
     InvalidValue { key: String, value: String },
+    #[error("malformed environment override {key}={value:?}")]
+    MalformedEnv { key: String, value: String },
+    #[error(transparent)]
+    Tile(#[from] crate::runtime::manifest::ManifestError),
     #[error("invalid configuration: {0}")]
     Invalid(String),
 }
@@ -77,6 +81,67 @@ pub struct FaultSpec {
     /// models a crashed CU, exercising the stream's reply-liveness
     /// detection and poisoning instead of a hang.
     pub die_on_tile: Option<(usize, usize)>,
+}
+
+/// `"ROWxCOL"` → `(row, col)`, e.g. `"2x3"`; `None` when malformed.
+fn parse_tile_origin(v: &str) -> Option<(usize, usize)> {
+    let (r, c) = v.split_once('x')?;
+    Some((r.trim().parse().ok()?, c.trim().parse().ok()?))
+}
+
+impl FaultSpec {
+    /// Parse the comma-separated fault-spec string the failure-injection
+    /// harnesses use, e.g. `"init_fail_cu=1,fail_tile=2x3,panic_tile"`:
+    ///
+    /// * `init_fail_cu=<cu>` — fail `Runtime` construction on that CU
+    /// * `fail_tile=<row>x<col>` — error the tile at that origin
+    /// * `panic_tile` (or `panic_tile=true|false`) — make the injected
+    ///   fault a panic instead of a returned error
+    /// * `die_on_tile=<row>x<col>` — kill the owning worker reply-less
+    ///
+    /// Unknown keys and malformed counts are typed [`ConfigError`]s.  This
+    /// is deliberately *not* wired to any `APFP_*` variable read by
+    /// production code — faults stay explicit in the tests that want them
+    /// (see the `FaultSpec` docs above).
+    pub fn parse(spec: &str) -> Result<Self, ConfigError> {
+        let mut f = FaultSpec::default();
+        for item in spec.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            let (key, value) = match item.split_once('=') {
+                Some((k, v)) => (k.trim(), Some(v.trim())),
+                None => (item, None),
+            };
+            let invalid = || ConfigError::InvalidValue {
+                key: key.into(),
+                value: value.unwrap_or("").into(),
+            };
+            match (key, value) {
+                ("init_fail_cu", Some(v)) => {
+                    f.init_fail_cu = Some(v.parse().map_err(|_| invalid())?)
+                }
+                ("fail_tile", Some(v)) => {
+                    f.fail_tile = Some(parse_tile_origin(v).ok_or_else(invalid)?)
+                }
+                ("die_on_tile", Some(v)) => {
+                    f.die_on_tile = Some(parse_tile_origin(v).ok_or_else(invalid)?)
+                }
+                ("panic_tile", None) => f.panic_tile = true,
+                ("panic_tile", Some(v)) => {
+                    f.panic_tile = match v {
+                        "true" | "1" => true,
+                        "false" | "0" => false,
+                        _ => return Err(invalid()),
+                    }
+                }
+                ("init_fail_cu" | "fail_tile" | "die_on_tile", None) => return Err(invalid()),
+                _ => return Err(ConfigError::UnknownKey(key.into())),
+            }
+        }
+        Ok(f)
+    }
 }
 
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -194,6 +259,45 @@ impl ApfpConfig {
         Ok(())
     }
 
+    /// [`Default::default`] with `from_file` strictness for the
+    /// environment: every malformed `APFP_*` override is a typed
+    /// [`ConfigError`] naming the offending key instead of a stderr
+    /// warning and a silent fallback.  `lookup` stands in for
+    /// `std::env::var` so tests can inject an environment without
+    /// mutating process state; [`Self::try_from_env`] wires the real one.
+    pub fn try_from_env_with<F>(lookup: F) -> Result<Self, ConfigError>
+    where
+        F: Fn(&str) -> Option<String>,
+    {
+        let malformed = |key: &str, value: String| ConfigError::MalformedEnv {
+            key: key.into(),
+            value,
+        };
+        let tile = TileShape::try_from_env_with(&lookup)?;
+        let mut cfg = ApfpConfig::default();
+        cfg.tile_n = tile.n;
+        cfg.tile_m = tile.m;
+        cfg.tile_k = tile.k;
+        if let Some(v) = lookup("APFP_BACKEND") {
+            cfg.backend =
+                BackendKind::parse(&v).ok_or_else(|| malformed("APFP_BACKEND", v.clone()))?;
+        }
+        // the threshold lives in a process-wide OnceLock, not in the
+        // config; strict mode still rejects a malformed override so it
+        // cannot silently run with the default crossover
+        if let Some(v) = lookup("APFP_KARATSUBA_THRESHOLD") {
+            crate::bigint::karatsuba::parse_threshold(&v)
+                .ok_or_else(|| malformed("APFP_KARATSUBA_THRESHOLD", v.clone()))?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// [`Self::try_from_env_with`] against the process environment.
+    pub fn try_from_env() -> Result<Self, ConfigError> {
+        Self::try_from_env_with(|key| std::env::var(key).ok())
+    }
+
     /// Parse a config file of `key = value` lines (`#` comments allowed).
     pub fn from_file(path: &Path) -> Result<Self, ConfigError> {
         let text = std::fs::read_to_string(path)?;
@@ -297,6 +401,139 @@ mod tests {
         assert_eq!(c.tile_k, 6);
         c.set("tile_k", "2").unwrap();
         assert_eq!(c.tile_shape(), TileShape { n: 32, m: 32, k: 2 });
+    }
+
+    /// A fake environment as a slice of pairs — no process-env mutation
+    /// (env writes race under the parallel test harness).
+    fn env_of(pairs: &[(&str, &str)]) -> impl Fn(&str) -> Option<String> + '_ {
+        move |key: &str| {
+            pairs.iter().find(|(k, _)| *k == key).map(|(_, v)| v.to_string())
+        }
+    }
+
+    #[test]
+    fn try_from_env_empty_environment_is_default() {
+        let c = ApfpConfig::try_from_env_with(|_| None).unwrap();
+        assert_eq!((c.tile_n, c.tile_m, c.tile_k), (32, 32, 32));
+        assert_eq!(c.backend, BackendKind::Native);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn try_from_env_applies_well_formed_overrides() {
+        let c = ApfpConfig::try_from_env_with(env_of(&[
+            ("APFP_TILE_N", "16"),
+            ("APFP_TILE_SIZE_M", "8"),
+            ("APFP_BACKEND", "xla"),
+            ("APFP_KARATSUBA_THRESHOLD", "24"),
+        ]))
+        .unwrap();
+        assert_eq!((c.tile_n, c.tile_m, c.tile_k), (16, 8, 32));
+        assert_eq!(c.backend, BackendKind::Xla);
+    }
+
+    #[test]
+    fn try_from_env_rejects_malformed_tile() {
+        let err = ApfpConfig::try_from_env_with(env_of(&[("APFP_TILE_N", "abc")]))
+            .expect_err("malformed tile env must fail");
+        assert!(matches!(err, ConfigError::Tile(_)), "{err:?}");
+        let msg = err.to_string();
+        assert!(msg.contains("APFP_TILE_N") && msg.contains("abc"), "{msg}");
+    }
+
+    #[test]
+    fn try_from_env_rejects_malformed_backend_and_threshold() {
+        let err = ApfpConfig::try_from_env_with(env_of(&[("APFP_BACKEND", "fpga")]))
+            .expect_err("unknown backend must fail strictly");
+        assert!(
+            matches!(&err, ConfigError::MalformedEnv { key, value }
+                if key == "APFP_BACKEND" && value == "fpga"),
+            "{err:?}"
+        );
+        for bad in ["zero?", "0", "-1", "1e3"] {
+            let err = ApfpConfig::try_from_env_with(env_of(&[(
+                "APFP_KARATSUBA_THRESHOLD",
+                bad,
+            )]))
+            .expect_err("malformed threshold must fail strictly");
+            assert!(
+                matches!(&err, ConfigError::MalformedEnv { key, .. }
+                    if key == "APFP_KARATSUBA_THRESHOLD"),
+                "{bad:?}: {err:?}"
+            );
+        }
+        // well-formed thresholds clamp to >= 2 on the lenient path
+        assert_eq!(crate::bigint::karatsuba::parse_threshold(" 24 "), Some(24));
+        assert_eq!(crate::bigint::karatsuba::parse_threshold("1"), Some(2));
+        assert_eq!(crate::bigint::karatsuba::parse_threshold("0"), None);
+    }
+
+    #[test]
+    fn fault_spec_parses_valid_strings() {
+        assert_eq!(FaultSpec::parse("").unwrap(), FaultSpec::default());
+        let f = FaultSpec::parse("init_fail_cu=1, fail_tile=2x3, panic_tile").unwrap();
+        assert_eq!(f.init_fail_cu, Some(1));
+        assert_eq!(f.fail_tile, Some((2, 3)));
+        assert!(f.panic_tile);
+        assert_eq!(f.die_on_tile, None);
+        let f = FaultSpec::parse("die_on_tile=0x1,panic_tile=false").unwrap();
+        assert_eq!(f.die_on_tile, Some((0, 1)));
+        assert!(!f.panic_tile);
+    }
+
+    #[test]
+    fn fault_spec_rejects_unknown_keys() {
+        assert!(matches!(
+            FaultSpec::parse("explode=yes"),
+            Err(ConfigError::UnknownKey(k)) if k == "explode"
+        ));
+    }
+
+    #[test]
+    fn fault_spec_rejects_malformed_counts() {
+        for bad in [
+            "init_fail_cu=abc",
+            "init_fail_cu",          // key without a count
+            "fail_tile=2",           // missing column
+            "fail_tile=2x",          // empty column
+            "fail_tile=x3",          // empty row
+            "die_on_tile=axb",
+            "panic_tile=maybe",
+        ] {
+            assert!(
+                matches!(FaultSpec::parse(bad), Err(ConfigError::InvalidValue { .. })),
+                "{bad:?} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn config_error_source_chains() {
+        use std::error::Error as _;
+        // Io wraps the underlying error as source()
+        let err = ApfpConfig::from_file(Path::new("/nonexistent/apfp.cfg")).unwrap_err();
+        assert!(matches!(err, ConfigError::Io(_)));
+        assert!(err.source().is_some(), "Io must expose the underlying error");
+        // the transparent Tile variant delegates Display to ManifestError
+        let tile_err = ConfigError::from(
+            TileShape::try_from_env_with(|k| {
+                (k == "APFP_TILE_N").then(|| "bogus".to_string())
+            })
+            .unwrap_err(),
+        );
+        assert!(tile_err.to_string().contains("APFP_TILE_N"), "{tile_err}");
+        // leaf variants carry their payload in Display and have no source
+        let leaf = ConfigError::MalformedEnv { key: "K".into(), value: "v".into() };
+        assert!(leaf.to_string().contains("K") && leaf.to_string().contains("v"));
+        assert!(leaf.source().is_none());
+    }
+
+    #[test]
+    fn try_from_env_still_validates_geometry() {
+        // parses fine, but a zero tile must be rejected by validate()
+        let err = ApfpConfig::try_from_env_with(env_of(&[("APFP_TILE_K", "0")]))
+            .expect_err("zero tile must fail validation");
+        assert!(matches!(err, ConfigError::Invalid(_)), "{err:?}");
     }
 
     #[test]

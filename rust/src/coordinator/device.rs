@@ -66,7 +66,8 @@ impl Device {
                     metrics.clone(),
                 )
             })
-            .collect();
+            .collect::<std::io::Result<Vec<_>>>()
+            .context("spawning CU workers")?;
         Ok(Device {
             placements: floorplan::assign(cus),
             config,
@@ -159,7 +160,10 @@ impl Device {
     ) -> Result<Vec<crate::softfloat::ApFloat>> {
         let meta = self.artifact_for(kind)?;
         let artifact = meta.name.clone();
-        let len = operands[0].len();
+        let Some(first) = operands.first() else {
+            anyhow::bail!("stream op needs at least one operand");
+        };
+        let len = first.len();
         for o in operands {
             anyhow::ensure!(o.len() == len, "stream operand lengths differ");
         }

@@ -37,7 +37,9 @@ impl Matrix {
         Matrix::from_fn(rows, cols, prec, |_, _| {
             let n = (prec / 64) as usize;
             let mut mant = rng.limbs(n);
-            mant[n - 1] |= 1 << 63;
+            if let Some(top) = mant.last_mut() {
+                *top |= 1 << 63;
+            }
             ApFloat::from_parts(rng.bool(), rng.range_i64(-exp_range, exp_range), mant, prec)
         })
     }
@@ -54,12 +56,14 @@ impl Matrix {
         self.prec
     }
 
+    // apfp-lint: allow(index, scope=fn, reason="row-major accessor: panicking on out-of-range is the Index-trait contract; device paths go through clipped tiles")
     pub fn get(&self, i: usize, j: usize) -> &ApFloat {
         &self.vals[i * self.cols + j]
     }
 
     /// Mutable element access for in-place accumulation (`mac_into`); the
     /// caller must keep the element at the matrix's precision.
+    // apfp-lint: allow(index, scope=fn, reason="row-major accessor: panicking on out-of-range is the Index-trait contract; device paths go through clipped tiles")
     pub fn get_mut(&mut self, i: usize, j: usize) -> &mut ApFloat {
         &mut self.vals[i * self.cols + j]
     }
@@ -70,6 +74,7 @@ impl Matrix {
         &self.vals[i * self.cols..(i + 1) * self.cols]
     }
 
+    // apfp-lint: allow(index, scope=fn, reason="row-major accessor: panicking on out-of-range is the Index-trait contract; device paths go through clipped tiles")
     pub fn set(&mut self, i: usize, j: usize, v: ApFloat) {
         assert_eq!(v.prec(), self.prec);
         self.vals[i * self.cols + j] = v;

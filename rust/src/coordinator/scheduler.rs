@@ -30,7 +30,7 @@ pub struct Tile {
     pub cols: usize,
 }
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Copy, Debug)]
 pub struct Partition {
     pub n: usize,
     pub m: usize,

@@ -155,6 +155,27 @@ pub enum StreamError {
     Multi { count: usize, summary: String },
 }
 
+/// Fold the per-launch failures of one drain into a single error: `None`
+/// when nothing failed, the error itself for exactly one failure, and
+/// [`StreamError::Multi`] for several — joining the individual reports
+/// with `" | "` **in launch order** (oldest launch first, the order
+/// `retire_n` drained them), so the summary reads as a timeline.
+// apfp-lint: allow(alloc, scope=fn, reason="failure path: the multi-error summary exists only when launches failed")
+fn join_failures(mut errs: Vec<StreamError>) -> Option<StreamError> {
+    if errs.len() > 1 {
+        let count = errs.len();
+        let mut summary = String::new();
+        for (i, e) in errs.iter().enumerate() {
+            if i > 0 {
+                summary.push_str(" | ");
+            }
+            let _ = write!(summary, "{e}");
+        }
+        return Some(StreamError::Multi { count, summary });
+    }
+    errs.pop()
+}
+
 /// Source of unique per-stream tokens stamped into [`BufId`]s.
 static NEXT_STREAM_TOKEN: AtomicU64 = AtomicU64::new(1);
 
@@ -287,6 +308,7 @@ pub struct DeviceStream<'d> {
 }
 
 impl<'d> DeviceStream<'d> {
+    // apfp-lint: allow(alloc, scope=fn, reason="cold constructor: the stream's pools and tables are allocated once at open, before any launch")
     pub(crate) fn new(dev: &'d Device, meta: ArtifactMeta) -> Self {
         let cus = dev.workers.len();
         DeviceStream {
@@ -349,6 +371,7 @@ impl<'d> DeviceStream<'d> {
 
     fn check_live(&self) -> Result<(), StreamError> {
         match &self.poisoned {
+            // apfp-lint: allow(alloc, reason="failure path: the poison reason is cloned only to report it")
             Some(reason) => Err(StreamError::Poisoned { reason: reason.clone() }),
             None => Ok(()),
         }
@@ -356,6 +379,7 @@ impl<'d> DeviceStream<'d> {
 
     /// Record `e` as this stream's poison reason and hand it back.
     fn poison(&mut self, e: StreamError) -> StreamError {
+        // apfp-lint: allow(alloc, reason="failure path: the poison reason is recorded once, at the failing call")
         self.poisoned = Some(e.to_string());
         e
     }
@@ -384,12 +408,14 @@ impl<'d> DeviceStream<'d> {
     /// [`DeviceStream::wait`] collects results.  A hazard drain that
     /// surfaces an earlier launch's failure returns that error here, and
     /// this launch is not submitted.
+    // apfp-lint: no_alloc
     pub fn enqueue_gemm(&mut self, a: BufId, b: BufId, c: BufId) -> Result<()> {
         self.check_live()?;
         let (ai, bi, ci) = (self.index(a)?, self.index(b)?, self.index(c)?);
         let prec = self.meta.prec();
         let (n, k, m) = {
             let (pa, pb, pc) =
+                // apfp-lint: allow(index, reason="ai/bi/ci come from index(), which validated the handle against this stream's buffer table")
                 (&self.bufs[ai].panel, &self.bufs[bi].panel, &self.bufs[ci].panel);
             anyhow::ensure!(
                 pa.cols() == pb.rows(),
@@ -430,6 +456,7 @@ impl<'d> DeviceStream<'d> {
         // are deferred to FIFO retirement, so ours can never overtake an
         // earlier reader.  Retirement is in order, so draining through the
         // *last* conflicting launch clears every conflict at once.
+        // apfp-lint: allow(index, reason="bi comes from index(), which validated the handle against this stream's buffer table")
         let grid_fresh = Self::grid_fresh(&self.bufs[bi], &part);
         let mut drain_to = None;
         for (i, l) in self.inflight.iter().enumerate() {
@@ -460,6 +487,8 @@ impl<'d> DeviceStream<'d> {
 
         // Submit round-robin, one tile per CU per pass, so the bounded
         // queues fill evenly and a stalled CU backpressures only its band.
+        // apfp-lint: allow(index, reason="ai/bi/ci come from index(), which validated the handle against this stream's buffer table")
+        // apfp-lint: allow(alloc, reason="Arc clones: refcount bumps on the shared device buffers, no heap allocation")
         let (ab, bb, cb) = (self.bufs[ai].clone(), self.bufs[bi].clone(), self.bufs[ci].clone());
         let mut pending = 0usize;
         let mut active = true;
@@ -471,14 +500,14 @@ impl<'d> DeviceStream<'d> {
                 let c_buf = self.c_pool.pop().unwrap_or_default();
                 let job = Job::GemmTile {
                     launch,
-                    artifact: self.artifact.clone(),
-                    a: ab.clone(),
-                    b: bb.clone(),
-                    c: cb.clone(),
+                    artifact: self.artifact.clone(), // apfp-lint: allow(alloc, reason="Arc<str> refcount bump")
+                    a: ab.clone(), // apfp-lint: allow(alloc, reason="Arc refcount bump")
+                    b: bb.clone(), // apfp-lint: allow(alloc, reason="Arc refcount bump")
+                    c: cb.clone(), // apfp-lint: allow(alloc, reason="Arc refcount bump")
                     c_buf,
                     tile: *tile,
-                    part: part.clone(),
-                    reply: reply.tx.clone(),
+                    part,
+                    reply: reply.tx.clone(), // apfp-lint: allow(alloc, reason="SyncSender clone: channel refcount bump")
                 };
                 if let Err(job) = self.dev.workers[cu].submit(job) {
                     // The worker thread is gone mid-submission.  Reclaim
@@ -538,6 +567,7 @@ impl<'d> DeviceStream<'d> {
         let cache = &mut buf.b_cache;
         let count = k_steps * m_tiles;
         if cache.tiles.len() != count {
+            // apfp-lint: allow(alloc, reason="B-grid (re)build: cut once per panel version and shared by every CU; panel_builds/panel_reuses metrics track the amortization")
             cache.tiles.resize_with(count, PlaneBatch::default);
         }
         for step in 0..k_steps {
@@ -580,6 +610,7 @@ impl<'d> DeviceStream<'d> {
         if let Some(pos) = self.reply_pool.iter().position(|r| r.cap >= need) {
             return self.reply_pool.swap_remove(pos);
         }
+        // apfp-lint: allow(alloc, reason="pool miss: a reply channel is minted only when no pooled one has the capacity")
         let (tx, rx) = sync_channel(need);
         ReplyChannel { tx, rx, cap: need }
     }
@@ -589,6 +620,7 @@ impl<'d> DeviceStream<'d> {
     /// writes are disjoint).  Even when a launch fails, the remaining
     /// launches are still drained — an error never leaves replies pending.
     /// No-op when nothing is in flight.
+    // apfp-lint: no_alloc
     pub fn wait(&mut self) -> Result<()> {
         self.check_live()?;
         let n = self.inflight.len();
@@ -599,25 +631,16 @@ impl<'d> DeviceStream<'d> {
     /// failures so later launches always drain even when earlier ones
     /// error.
     fn retire_n(&mut self, n: usize) -> Result<()> {
+        // apfp-lint: allow(alloc, reason="Vec::new is allocation-free; it grows only on the failure path")
         let mut errs: Vec<StreamError> = Vec::new();
         for _ in 0..n {
             if let Err(e) = self.retire_one() {
                 errs.push(e);
             }
         }
-        match errs.len() {
-            0 => Ok(()),
-            1 => Err(errs.pop().expect("len checked").into()),
-            count => {
-                let mut summary = String::new();
-                for (i, e) in errs.iter().enumerate() {
-                    if i > 0 {
-                        summary.push_str(" | ");
-                    }
-                    let _ = write!(summary, "{e}");
-                }
-                Err(StreamError::Multi { count, summary }.into())
-            }
+        match join_failures(errs) {
+            None => Ok(()),
+            Some(e) => Err(e.into()),
         }
     }
 
@@ -671,6 +694,7 @@ impl<'d> DeviceStream<'d> {
         self.dev.metrics.add_launches(1);
 
         let mut failed = 0usize;
+        // apfp-lint: allow(alloc, reason="String::new is allocation-free; it grows only when tiles failed")
         let mut tiles = String::new();
         for res in &self.results {
             if let Some(err) = &res.err {
@@ -754,6 +778,95 @@ mod tests {
         };
         let dir = std::env::temp_dir().join("apfp_stream_unit_no_artifacts/none");
         Device::new(cfg, &dir).expect("native device on a clean checkout")
+    }
+
+    /// One exemplar of every [`StreamError`] variant, for taxonomy tests.
+    fn every_variant() -> Vec<StreamError> {
+        vec![
+            StreamError::ForeignHandle { index: 3, handle_stream: 7, this_stream: 9 },
+            StreamError::UnknownBuffer { index: 12 },
+            StreamError::LaunchFailed {
+                launch: 4,
+                failed: 1,
+                total: 4,
+                tiles: "(0,4): injected".to_string(),
+            },
+            StreamError::ReplyLost { launch: 5, missing: 2, total: 4 },
+            StreamError::WorkerGone { cu: 1, launch: 6 },
+            StreamError::Invariant { what: "drained launch left a live reference" },
+            StreamError::Poisoned { reason: "compute unit 1 is gone".to_string() },
+            StreamError::Multi { count: 2, summary: "a | b".to_string() },
+        ]
+    }
+
+    #[test]
+    fn stream_error_display_carries_the_dispatch_payload() {
+        // every variant's Display names its discriminating fields, so a
+        // log line alone is enough to identify the failure
+        for (e, needles) in every_variant().iter().zip([
+            vec!["#3", "stream 7", "stream 9"],
+            vec!["buffer id 12"],
+            vec!["launch 4", "1 of 4", "(0,4): injected", "C left unchanged"],
+            vec!["launch 5", "2 of 4", "outstanding"],
+            vec!["compute unit 1", "launch 6"],
+            vec!["drained launch left a live reference", "poisoned"],
+            vec!["poisoned by an earlier failure", "compute unit 1 is gone"],
+            vec!["2 launches failed", "a | b"],
+        ]) {
+            let msg = e.to_string();
+            for needle in needles {
+                assert!(msg.contains(needle), "{e:?} display {msg:?} lacks {needle:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn stream_errors_are_leaves_without_source_chains() {
+        // the taxonomy is flat on purpose: callers downcast to StreamError
+        // and dispatch on the variant, never on a wrapped cause
+        use std::error::Error as _;
+        for e in every_variant() {
+            assert!(e.source().is_none(), "{e:?} must not hide a source");
+        }
+    }
+
+    #[test]
+    fn multi_aggregation_preserves_launch_order() {
+        let errs = vec![
+            StreamError::LaunchFailed {
+                launch: 11,
+                failed: 1,
+                total: 4,
+                tiles: "(0,0): first".to_string(),
+            },
+            StreamError::WorkerGone { cu: 0, launch: 12 },
+            StreamError::LaunchFailed {
+                launch: 13,
+                failed: 2,
+                total: 4,
+                tiles: "(4,4): third".to_string(),
+            },
+        ];
+        match join_failures(errs) {
+            Some(StreamError::Multi { count, summary }) => {
+                assert_eq!(count, 3);
+                let first = summary.find("launch 11").expect("first report present");
+                let second = summary.find("compute unit 0").expect("second report present");
+                let third = summary.find("launch 13").expect("third report present");
+                assert!(first < second && second < third, "launch order lost: {summary}");
+                assert_eq!(summary.matches(" | ").count(), 2, "{summary}");
+            }
+            other => panic!("expected Multi, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn join_failures_passes_singletons_through() {
+        assert!(join_failures(Vec::new()).is_none());
+        match join_failures(vec![StreamError::UnknownBuffer { index: 1 }]) {
+            Some(StreamError::UnknownBuffer { index: 1 }) => {}
+            other => panic!("singleton must pass through unchanged, got {other:?}"),
+        }
     }
 
     #[test]

@@ -120,13 +120,12 @@ impl WorkerHandle {
         tile: TileShape,
         faults: FaultSpec,
         metrics: Arc<Metrics>,
-    ) -> Self {
+    ) -> std::io::Result<Self> {
         let (tx, rx) = sync_channel::<Job>(QUEUE_DEPTH);
         let thread = std::thread::Builder::new()
             .name(format!("apfp-cu{cu}"))
-            .spawn(move || worker_main(cu, &artifact_dir, backend, tile, faults, rx, metrics))
-            .expect("spawning CU worker");
-        WorkerHandle { cu, sender: tx, thread: Some(thread) }
+            .spawn(move || worker_main(cu, &artifact_dir, backend, tile, faults, rx, metrics))?;
+        Ok(WorkerHandle { cu, sender: tx, thread: Some(thread) })
     }
 
     /// Enqueue a job (blocks when the queue is full — backpressure).
@@ -233,6 +232,7 @@ fn worker_main(
                 let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     if faults.fail_tile == Some((tile.r0, tile.c0)) {
                         if faults.panic_tile {
+                            // apfp-lint: allow(panic, reason="FaultSpec failpoint: this injected panic is the fault under test, contained by the catch_unwind above")
                             panic!("injected panic on tile ({}, {})", tile.r0, tile.c0);
                         }
                         anyhow::bail!("injected failure on tile ({}, {})", tile.r0, tile.c0);
@@ -259,12 +259,14 @@ fn worker_main(
                 // Same containment as the tile path: a panic must not kill
                 // the worker, or jobs queued behind it die reply-less and
                 // their collectors hang.
-                let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| match kind {
-                    StreamKind::Binop => {
-                        rt.exec_stream_binop(&artifact, &operands[0], &operands[1])
-                    }
-                    StreamKind::Mac => {
-                        rt.exec_stream_mac(&artifact, &operands[0], &operands[1], &operands[2])
+                let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    match (kind, operands.as_slice()) {
+                        (StreamKind::Binop, [a, b]) => rt.exec_stream_binop(&artifact, a, b),
+                        (StreamKind::Mac, [c, a, b]) => rt.exec_stream_mac(&artifact, c, a, b),
+                        (kind, ops) => Err(anyhow::anyhow!(
+                            "stream job shape mismatch: {kind:?} with {} operands",
+                            ops.len()
+                        )),
                     }
                 }));
                 let planes = match res {
@@ -288,6 +290,7 @@ fn worker_main(
 /// A staging buffer is reused across steps and jobs, and B tiles are read
 /// straight from the shared pre-packed grid, so the per-step marshaling
 /// cost is one plane-row copy out of the A panel.
+// apfp-lint: no_alloc
 #[allow(clippy::too_many_arguments)]
 fn run_tile(
     rt: &Runtime,

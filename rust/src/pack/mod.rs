@@ -95,14 +95,18 @@ impl PlaneBatch {
     /// Re-shape in place to `batch` all-zero lanes at `prec`, reusing the
     /// existing capacity — the allocation-free counterpart of
     /// [`PlaneBatch::zeros`] for buffers that live across calls.
+    // apfp-lint: no_alloc
     pub fn reset(&mut self, batch: usize, prec: u32) {
         self.prec = prec;
         self.limbs8 = (prec / 8) as usize;
         self.sign.clear();
+        // apfp-lint: allow(alloc, reason="capacity reuse: clear+resize refills the existing planes; reallocates only when the batch or width grows")
         self.sign.resize(batch, 0);
         self.exp.clear();
+        // apfp-lint: allow(alloc, reason="capacity reuse: clear+resize refills the existing planes; reallocates only when the batch or width grows")
         self.exp.resize(batch, ZERO_EXP);
         self.mant.clear();
+        // apfp-lint: allow(alloc, reason="capacity reuse: clear+resize refills the existing planes; reallocates only when the batch or width grows")
         self.mant.resize(batch * self.limbs8, 0);
     }
 
@@ -136,11 +140,13 @@ impl PlaneBatch {
     /// Decode slot `i` into a caller-owned `ApFloat`, reusing its mantissa
     /// buffer — the allocation-free decode the native backend and the tile
     /// marshaling loops run per lane.
+    // apfp-lint: no_alloc
     pub fn get_into(&self, i: usize, out: &mut ApFloat) {
         out.prec = self.prec;
         let n = (self.prec / 64) as usize;
         if out.mant.len() != n {
             out.mant.clear();
+            // apfp-lint: allow(alloc, reason="capacity reuse: clear+resize refills the existing buffer; reallocates only when the width grows")
             out.mant.resize(n, 0);
         }
         if self.exp[i] == ZERO_EXP {
@@ -230,6 +236,7 @@ impl PlanePanel {
     /// APFP zero is absorbing for mul and identity for add, exactly how
     /// the hardware pads partial tiles.  Pure plane-row copies: no
     /// per-element decode, no allocation once `out` has capacity.
+    // apfp-lint: no_alloc
     pub fn extract_tile_into(
         &self,
         r0: usize,
@@ -266,6 +273,7 @@ impl PlanePanel {
     /// `i * stride .. i * stride + cols`, so a band/edge-clipped tile
     /// writes only the elements it owns and the padding lanes never leave
     /// the batch.  Pure plane-row copies; never allocates.
+    // apfp-lint: no_alloc
     pub fn write_tile(
         &mut self,
         r0: usize,

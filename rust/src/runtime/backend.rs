@@ -199,10 +199,12 @@ impl XlaBackend {
         limbs: usize,
         prec: u32,
     ) -> Result<PlaneBatch> {
-        anyhow::ensure!(parts.len() == 3, "artifact must return (sign, exp, mant)");
-        let sign = parts[0].to_vec::<i32>().map_err(|e| anyhow!("sign: {e:?}"))?;
-        let exp = parts[1].to_vec::<i64>().map_err(|e| anyhow!("exp: {e:?}"))?;
-        let mant = parts[2].to_vec::<i32>().map_err(|e| anyhow!("mant: {e:?}"))?;
+        let [sign_lit, exp_lit, mant_lit] = parts.as_slice() else {
+            anyhow::bail!("artifact must return (sign, exp, mant), got {} parts", parts.len());
+        };
+        let sign = sign_lit.to_vec::<i32>().map_err(|e| anyhow!("sign: {e:?}"))?;
+        let exp = exp_lit.to_vec::<i64>().map_err(|e| anyhow!("exp: {e:?}"))?;
+        let mant = mant_lit.to_vec::<i32>().map_err(|e| anyhow!("mant: {e:?}"))?;
         if sign.len() != len || mant.len() != len * limbs {
             return Err(anyhow!(
                 "artifact output shape mismatch: sign {} mant {} (expect {len} x {limbs})",
@@ -218,7 +220,10 @@ impl XlaBackend {
         let result = exe
             .execute::<xla::Literal>(inputs)
             .map_err(|e| anyhow!("executing {}: {e:?}", meta.name))?;
-        let lit = result[0][0]
+        let lit = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("empty result from {}", meta.name))?
             .to_literal_sync()
             .map_err(|e| anyhow!("fetching result of {}: {e:?}", meta.name))?;
         lit.to_tuple().map_err(|e| anyhow!("untupling {}: {e:?}", meta.name))

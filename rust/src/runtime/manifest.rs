@@ -27,6 +27,8 @@ pub enum ManifestError {
     InvalidBits(u32),
     #[error("degenerate tile geometry {n}x{m}x{k}: {reason}")]
     InvalidTile { n: usize, m: usize, k: usize, reason: &'static str },
+    #[error("malformed environment override {key}={value:?}: expected a positive integer")]
+    MalformedEnv { key: &'static str, value: String },
 }
 
 /// Hard cap on any single builtin tile dimension.  A tile is a *compute
@@ -92,30 +94,68 @@ impl TileShape {
         }
     }
 
+    /// One dimension from the env: the short spelling wins, then the long
+    /// one; `Ok(None)` when neither is set, a typed [`ManifestError`] when
+    /// a set value does not parse as a tile size.
+    fn env_dim<F>(lookup: &F, short: &'static str, long: &'static str)
+        -> Result<Option<usize>, ManifestError>
+    where
+        F: Fn(&str) -> Option<String>,
+    {
+        for key in [short, long] {
+            if let Some(v) = lookup(key) {
+                return match v.trim().parse::<usize>() {
+                    Ok(n) => Ok(Some(n)),
+                    Err(_) => Err(ManifestError::MalformedEnv { key, value: v }),
+                };
+            }
+        }
+        Ok(None)
+    }
+
+    /// Strict [`TileShape::from_env`] with an injectable environment:
+    /// a malformed `APFP_TILE_*` value is a typed [`ManifestError`]
+    /// naming the offending key, not a silent fallback.  `lookup` stands
+    /// in for `std::env::var` so tests can drive it without mutating
+    /// process state (env writes race under the parallel test harness).
+    pub fn try_from_env_with<F>(lookup: F) -> Result<Self, ManifestError>
+    where
+        F: Fn(&str) -> Option<String>,
+    {
+        let d = TileShape::default();
+        Ok(TileShape {
+            n: Self::env_dim(&lookup, "APFP_TILE_N", "APFP_TILE_SIZE_N")?.unwrap_or(d.n),
+            m: Self::env_dim(&lookup, "APFP_TILE_M", "APFP_TILE_SIZE_M")?.unwrap_or(d.m),
+            k: Self::env_dim(&lookup, "APFP_TILE_K", "APFP_TILE_SIZE_K")?.unwrap_or(d.k),
+        })
+    }
+
+    /// [`TileShape::try_from_env_with`] against the process environment.
+    pub fn try_from_env() -> Result<Self, ManifestError> {
+        Self::try_from_env_with(|key| std::env::var(key).ok())
+    }
+
     /// Tile geometry from `APFP_TILE_N` / `APFP_TILE_M` / `APFP_TILE_K`
     /// (long forms `APFP_TILE_SIZE_*` also accepted), defaulting each
     /// missing dimension.  Unparsable values warn on stderr and fall back
     /// to the default rather than failing a whole run — the same contract
-    /// as `APFP_BACKEND`; validation still happens at device construction.
+    /// as `APFP_BACKEND`; strict callers use [`TileShape::try_from_env`],
+    /// and validation still happens at device construction.
     pub fn from_env() -> Self {
-        let dim = |short: &str, long: &str, default: usize| {
-            for key in [short, long] {
-                if let Ok(v) = std::env::var(key) {
-                    match v.parse::<usize>() {
-                        Ok(n) => return n,
-                        Err(_) => {
-                            eprintln!("{key}={v:?} is not a tile size; using {default}")
-                        }
-                    }
-                }
-            }
-            default
-        };
+        let lookup = |key: &str| std::env::var(key).ok();
         let d = TileShape::default();
+        let lenient = |short, long, default| match Self::env_dim(&lookup, short, long) {
+            Ok(Some(n)) => n,
+            Ok(None) => default,
+            Err(e) => {
+                eprintln!("{e}; using {default}");
+                default
+            }
+        };
         TileShape {
-            n: dim("APFP_TILE_N", "APFP_TILE_SIZE_N", d.n),
-            m: dim("APFP_TILE_M", "APFP_TILE_SIZE_M", d.m),
-            k: dim("APFP_TILE_K", "APFP_TILE_SIZE_K", d.k),
+            n: lenient("APFP_TILE_N", "APFP_TILE_SIZE_N", d.n),
+            m: lenient("APFP_TILE_M", "APFP_TILE_SIZE_M", d.m),
+            k: lenient("APFP_TILE_K", "APFP_TILE_SIZE_K", d.k),
         }
     }
 }
@@ -228,19 +268,19 @@ pub fn load(dir: &Path) -> Result<Vec<ArtifactMeta>, ManifestError> {
         }
         let mal = || ManifestError::Malformed { line: i + 1, text: raw.to_string() };
         let f: Vec<&str> = line.split_whitespace().collect();
-        if f.len() != 9 {
+        let &[name, kind, bits, batch, t_n, t_m, k_tile, limbs, file] = f.as_slice() else {
             return Err(mal());
-        }
+        };
         out.push(ArtifactMeta {
-            name: f[0].to_string(),
-            kind: ArtifactKind::parse(f[1]).ok_or_else(mal)?,
-            bits: f[2].parse().map_err(|_| mal())?,
-            batch: f[3].parse().map_err(|_| mal())?,
-            t_n: f[4].parse().map_err(|_| mal())?,
-            t_m: f[5].parse().map_err(|_| mal())?,
-            k_tile: f[6].parse().map_err(|_| mal())?,
-            limbs: f[7].parse().map_err(|_| mal())?,
-            file: f[8].to_string(),
+            name: name.to_string(),
+            kind: ArtifactKind::parse(kind).ok_or_else(mal)?,
+            bits: bits.parse().map_err(|_| mal())?,
+            batch: batch.parse().map_err(|_| mal())?,
+            t_n: t_n.parse().map_err(|_| mal())?,
+            t_m: t_m.parse().map_err(|_| mal())?,
+            k_tile: k_tile.parse().map_err(|_| mal())?,
+            limbs: limbs.parse().map_err(|_| mal())?,
+            file: file.to_string(),
         });
     }
     Ok(out)
@@ -341,6 +381,49 @@ mod tests {
         let huge = TileShape { n: MAX_TILE_DIM, m: 1, k: 1 };
         huge.validate().unwrap();
         assert!(builtin(512, huge).is_ok());
+    }
+
+    #[test]
+    fn env_tile_shape_parses_both_spellings() {
+        let env = |key: &str| match key {
+            "APFP_TILE_N" => Some("16".to_string()),
+            "APFP_TILE_SIZE_M" => Some(" 8 ".to_string()), // whitespace tolerated
+            _ => None,
+        };
+        let t = TileShape::try_from_env_with(env).unwrap();
+        assert_eq!(t, TileShape { n: 16, m: 8, k: 32 }, "unset dims keep the default");
+    }
+
+    #[test]
+    fn env_tile_shape_short_form_wins() {
+        let env = |key: &str| match key {
+            "APFP_TILE_K" => Some("4".to_string()),
+            "APFP_TILE_SIZE_K" => Some("64".to_string()),
+            _ => None,
+        };
+        assert_eq!(TileShape::try_from_env_with(env).unwrap().k, 4);
+    }
+
+    #[test]
+    fn env_tile_shape_reports_malformed_values() {
+        for bad in ["abc", "-3", "3.5", "", "32x32"] {
+            let env = |key: &str| (key == "APFP_TILE_SIZE_N").then(|| bad.to_string());
+            match TileShape::try_from_env_with(env) {
+                Err(ManifestError::MalformedEnv { key: "APFP_TILE_SIZE_N", value }) => {
+                    assert_eq!(value, bad);
+                }
+                other => panic!("{bad:?} must be a MalformedEnv error, got {other:?}"),
+            }
+        }
+        // the error message names the key and the offending value
+        let env = |key: &str| (key == "APFP_TILE_M").then(|| "huge".to_string());
+        let msg = TileShape::try_from_env_with(env).unwrap_err().to_string();
+        assert!(msg.contains("APFP_TILE_M") && msg.contains("huge"), "{msg}");
+    }
+
+    #[test]
+    fn env_tile_shape_empty_env_is_default() {
+        assert_eq!(TileShape::try_from_env_with(|_| None).unwrap(), TileShape::default());
     }
 
     #[test]

@@ -74,6 +74,7 @@ impl Default for NativeBackend {
 
 /// Ensure `v` holds exactly `n` slots (reallocates only on shape change;
 /// widths are corrected per slot by the decode).
+// apfp-lint: allow(alloc, scope=fn, reason="cold shaping path: slots are (re)built only when the tile shape changes; steady-state calls hit the len check and return")
 fn resize_slots(v: &mut Vec<ApFloat>, n: usize) {
     if v.len() != n {
         v.resize(n, ApFloat::zero(128));
@@ -140,6 +141,7 @@ impl Backend for NativeBackend {
         Ok(out)
     }
 
+    // apfp-lint: no_alloc
     fn exec_gemm_tile(
         &self,
         meta: &ArtifactMeta,

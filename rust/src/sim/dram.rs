@@ -18,7 +18,7 @@ pub const STRIDED_EFF: f64 = 0.78;
 pub fn per_cu_bandwidth(compute_units: usize) -> f64 {
     let counts = floorplan::cus_per_bank(compute_units);
     // the most-loaded bank limits the aggregate (synchronized K loops)
-    let worst = *counts.iter().max().unwrap() as usize;
+    let worst = counts.iter().max().copied().unwrap_or(0);
     if worst == 0 {
         return u250::DDR_BANK_BW;
     }

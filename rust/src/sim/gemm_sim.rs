@@ -98,16 +98,16 @@ pub fn simulate(d: &DesignPoint, n: usize, tile_n: usize, tile_m: usize) -> Gemm
 
 /// Peak (max over the paper's Fig. 5 n-range) performance of a design.
 pub fn peak(d: &DesignPoint, tile: usize) -> GemmPoint {
-    let mut best: Option<GemmPoint> = None;
-    let mut n = 256;
+    let mut best = simulate(d, 256, tile, tile);
+    let mut n = 512;
     while n <= 16384 {
         let pt = simulate(d, n, tile, tile);
-        if best.as_ref().map(|b| pt.mmacs > b.mmacs).unwrap_or(true) {
-            best = Some(pt);
+        if pt.mmacs > best.mmacs {
+            best = pt;
         }
         n *= 2;
     }
-    best.unwrap()
+    best
 }
 
 /// The Fig. 5/6 series: MMAC/s over matrix sizes for one design point.

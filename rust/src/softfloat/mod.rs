@@ -56,6 +56,7 @@ pub fn prec_for_bits(total_bits: u32) -> u32 {
 /// *explicit* arena pair the `*_with` operators with [`recycle_into`] —
 /// this function only refills the thread-local arena that the plain
 /// operators draw from.
+// apfp-lint: no_alloc
 pub fn recycle(f: ApFloat) {
     crate::bigint::with_scratch(|s| s.put_limbs(f.mant));
 }
@@ -64,6 +65,7 @@ pub fn recycle(f: ApFloat) {
 /// partner of [`ApFloat::mul_with`], whose results are drawn from
 /// `scratch`'s pool, so the explicit-arena path is also allocation-free
 /// in steady state.
+// apfp-lint: no_alloc
 pub fn recycle_into(f: ApFloat, scratch: &mut crate::bigint::Scratch) {
     scratch.put_limbs(f.mant);
 }
@@ -148,12 +150,14 @@ impl ApFloat {
     /// Copy `src`'s value into `self`, reusing `self`'s mantissa buffer —
     /// the allocation-free counterpart of `*self = src.clone()` whenever
     /// the widths already match (tile packing, accumulator resets).
+    // apfp-lint: no_alloc
     pub fn assign(&mut self, src: &ApFloat) {
         self.sign = src.sign;
         self.exp = src.exp;
         self.prec = src.prec;
         if self.mant.len() != src.mant.len() {
             self.mant.clear();
+            // apfp-lint: allow(alloc, reason="capacity reuse: clear+resize refills the existing buffer; reallocates only when the width grows")
             self.mant.resize(src.mant.len(), 0);
         }
         self.mant.copy_from_slice(&src.mant);

@@ -26,6 +26,7 @@ impl ApFloat {
 
     /// [`ApFloat::mul`] against an explicit scratch arena (the result
     /// buffer is drawn from the arena's recycle pool).
+    // apfp-lint: no_alloc
     pub fn mul_with(&self, other: &Self, scratch: &mut Scratch) -> Self {
         assert_eq!(self.prec, other.prec);
         let mant = scratch.take_limbs(self.mant.len());
@@ -37,12 +38,14 @@ impl ApFloat {
     /// Write `self * other` (RNDZ) into `out`, reusing `out`'s mantissa
     /// buffer and the scratch arena: zero heap allocations once both are
     /// warm.  `out` may have any prior value/precision; it is overwritten.
+    // apfp-lint: no_alloc
     pub fn mul_into(&self, other: &Self, out: &mut ApFloat, scratch: &mut Scratch) {
         assert_eq!(self.prec, other.prec);
         let n = self.mant.len();
         out.prec = self.prec;
         if out.mant.len() != n {
             out.mant.clear();
+            // apfp-lint: allow(alloc, reason="capacity reuse: clear+resize refills the existing buffer; reallocates only when the width grows")
             out.mant.resize(n, 0);
         }
         if self.is_zero() || other.is_zero() {
@@ -78,6 +81,7 @@ impl ApFloat {
 
     /// [`ApFloat::add`] against an explicit scratch arena (the result
     /// buffer is drawn from the arena's recycle pool).
+    // apfp-lint: no_alloc
     pub fn add_with(&self, other: &Self, scratch: &mut Scratch) -> Self {
         assert_eq!(self.prec, other.prec);
         let mant = scratch.take_limbs(self.mant.len());
@@ -89,6 +93,7 @@ impl ApFloat {
     /// Write `self + other` (RNDZ) into `out`, reusing `out`'s mantissa
     /// buffer and the scratch arena: zero heap allocations once both are
     /// warm.  `out` may have any prior value/precision; it is overwritten.
+    // apfp-lint: no_alloc
     pub fn add_into(&self, other: &Self, out: &mut ApFloat, scratch: &mut Scratch) {
         add_core(self, other, false, out, scratch);
     }
@@ -98,6 +103,7 @@ impl ApFloat {
     }
 
     /// [`ApFloat::sub`] against an explicit scratch arena.
+    // apfp-lint: no_alloc
     pub fn sub_with(&self, other: &Self, scratch: &mut Scratch) -> Self {
         assert_eq!(self.prec, other.prec);
         let mant = scratch.take_limbs(self.mant.len());
@@ -108,6 +114,7 @@ impl ApFloat {
 
     /// Write `self - other` (RNDZ) into `out` — [`ApFloat::add_into`] with
     /// the subtrahend's sign flipped in the pipeline (no operand clone).
+    // apfp-lint: no_alloc
     pub fn sub_into(&self, other: &Self, out: &mut ApFloat, scratch: &mut Scratch) {
         add_core(self, other, true, out, scratch);
     }
@@ -169,6 +176,7 @@ impl ApFloat {
     /// inner-loop primitive: the product and the sum cycle through the
     /// arena's recycle pool, so a steady-state accumulation chain performs
     /// zero heap allocations (proven by `tests/alloc_free.rs`).
+    // apfp-lint: no_alloc
     pub fn mac_into(&mut self, a: &Self, b: &Self, scratch: &mut Scratch) {
         assert_eq!(self.prec, a.prec);
         let n = self.mant.len();
@@ -194,6 +202,7 @@ fn add_core(x: &ApFloat, y: &ApFloat, flip_y: bool, out: &mut ApFloat, scratch: 
     out.prec = x.prec;
     if out.mant.len() != n {
         out.mant.clear();
+        // apfp-lint: allow(alloc, reason="capacity reuse: clear+resize refills the existing buffer; reallocates only when the width grows")
         out.mant.resize(n, 0);
     }
     let y_sign = y.sign != flip_y;
@@ -229,8 +238,7 @@ fn add_core(x: &ApFloat, y: &ApFloat, flip_y: bool, out: &mut ApFloat, scratch: 
     let bufs: &mut [u64] = if ws <= STACK_LIMBS + 2 {
         &mut stack[..3 * ws]
     } else {
-        pooled = Some(scratch.take_addws(3 * ws));
-        pooled.as_mut().expect("just set")
+        pooled.insert(scratch.take_addws(3 * ws))
     };
     let (ws_big, rest) = bufs.split_at_mut(ws);
     let (placed_small, ws_small) = rest.split_at_mut(ws);

@@ -116,6 +116,16 @@ fn mac_pipeline_is_allocation_free() {
         assert_eq!(delta, 0, "add_into/sub_into allocated at prec {prec}");
         assert_eq!(out, a.sub(&b), "arena adder must stay correct");
 
+        // --- add_with / sub_with on the warm recycle pool ------------------
+        softfloat::recycle_into(a.add_with(&b, &mut scratch), &mut scratch);
+        let delta = min_alloc_delta(3, || {
+            for _ in 0..1000 {
+                softfloat::recycle_into(a.add_with(&b, &mut scratch), &mut scratch);
+                softfloat::recycle_into(a.sub_with(&b, &mut scratch), &mut scratch);
+            }
+        });
+        assert_eq!(delta, 0, "add_with/sub_with allocated at prec {prec}");
+
         // --- plain `add` with recycling (thread-local arena) ---------------
         for _ in 0..4 {
             softfloat::recycle(a.add(&b));
@@ -216,8 +226,11 @@ fn mac_pipeline_is_allocation_free() {
     // buffers shaped) a full round of TWO independent enqueues — which the
     // hazard tracker keeps in flight simultaneously — plus the drain
     // touches the allocator exactly zero times: leader-side submission,
-    // per-launch bookkeeping AND the worker thread's tile execution, since
-    // the counting allocator is global.
+    // per-launch bookkeeping AND the worker thread's tile execution
+    // (run_tile: PlanePanel::extract_tile_into / PlaneBatch::reset staging
+    // the A and C tiles, exec_gemm_tile per K step, and the retirement
+    // writeback through PlanePanel::write_tile), since the counting
+    // allocator is global.
     if BackendKind::from_env() == BackendKind::Native {
         let cfg = ApfpConfig {
             compute_units: 1,

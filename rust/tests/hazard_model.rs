@@ -1,0 +1,705 @@
+//! Exhaustive-interleaving model of the stream's launch-hazard protocol.
+//!
+//! `src/coordinator/stream.rs` pipelines independent launches and defers
+//! every writeback to FIFO retirement; the safety argument (see the
+//! module docs there and ARCHITECTURE.md §"Launch hazards") is:
+//!
+//! 1. an enqueue drains every in-flight launch that *writes* one of its
+//!    three buffers (RAW/WAW), so after the enqueue no in-flight writer
+//!    of its read set exists;
+//! 2. writebacks land only at retirement and retirement is strictly in
+//!    enqueue order, so a later writer can never overtake an earlier
+//!    reader (WAR needs no wait at all);
+//! 3. staging buffers ride the reply on **every** arm — success, failed
+//!    tile, caught panic — so the pool is conserved unless a worker dies
+//!    reply-less, in which case the stream is poisoned rather than left
+//!    with unprovable buffer ownership.
+//!
+//! Those claims are about *interleavings*, which the integration tests
+//! sample but cannot enumerate.  This file re-states the protocol as a
+//! small explicit-state model (same structure, same names as stream.rs:
+//! `enqueue`, `retire_one`, the hazard scan, the grid-rebuild conflict)
+//! and drives it through **every** schedule of worker events with a
+//! depth-first search — a zero-dependency stand-in for a `loom`-style
+//! checker, which is unavailable offline.  The model is falsifiable: the
+//! `eager_writeback` variant (writeback at last reply instead of at
+//! retirement — exactly the bug rule 2 exists to prevent) is shown to
+//! violate read stability in at least one schedule, so a protocol
+//! regression re-introduced in the model would be caught, not vacuously
+//! passed.
+//!
+//! The static side of the same contract is `cargo xtask lint`'s `hazard`
+//! rule (docs/INVARIANTS.md): every `TileResult` carries `c_buf`, reply
+//! receives are `recv_timeout`, reply channels are bounded.
+
+// A model test asserts by panicking; the crate's panic discipline
+// applies to the device stack, not to tests (see clippy.toml).
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
+use std::collections::VecDeque;
+
+// ---------------------------------------------------------------------------
+// Scenario vocabulary
+// ---------------------------------------------------------------------------
+
+/// What the (modeled) worker does with one tile job.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Outcome {
+    /// Computes the tile and replies with the staging buffer.
+    Ok,
+    /// Hits a backend error; replies with `err` set — and the buffer.
+    Fail,
+    /// Panics; the catch wrapper still replies with `err` — and the buffer.
+    Panic,
+    /// Dies reply-less: the buffer is lost and the reply never arrives.
+    Dead,
+}
+
+/// Leader-side API calls, in program order.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Op {
+    /// `enqueue_gemm(a, b, c)`: read set `{a, b, c}`, write set `{c}`.
+    Enqueue(usize, usize, usize),
+    /// `wait()`: retire everything in flight.
+    Wait,
+    /// `download(x)`: retire through the last in-flight writer of `x`.
+    Download(usize),
+}
+
+struct Scenario {
+    /// Number of device buffers; ids are indices.
+    bufs: usize,
+    /// Tiles per launch (every launch gets the same count).
+    tiles_per_launch: usize,
+    ops: Vec<Op>,
+    /// `outcomes[launch_id][tile]`; entries missing here default to `Ok`.
+    outcomes: Vec<Vec<Outcome>>,
+    /// Protocol mutation: write C back when the *last reply* arrives
+    /// instead of at FIFO retirement.  Used to prove the model can fail.
+    eager_writeback: bool,
+}
+
+impl Scenario {
+    fn outcome(&self, launch: usize, tile: usize) -> Outcome {
+        self.outcomes.get(launch).and_then(|l| l.get(tile)).copied().unwrap_or(Outcome::Ok)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model state (mirrors DeviceStream's leader state)
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum TileSt {
+    /// Submitted to a worker queue, not yet picked up.
+    Queued,
+    /// Executed; the reply (with the staging buffer) sits in the channel.
+    Replied,
+    /// Executed by a dying worker; no reply will ever arrive.
+    Lost,
+}
+
+#[derive(Clone, Debug)]
+struct Tile {
+    st: TileSt,
+    outcome: Outcome,
+    /// Buffer contents the worker saw at execution time (`None` = queued).
+    observed: Option<[u32; 3]>,
+}
+
+#[derive(Clone, Debug)]
+struct Launch {
+    id: usize,
+    a: usize,
+    b: usize,
+    c: usize,
+    /// Read-set contents at enqueue: what every tile of this launch must
+    /// observe, per the stability argument in the module docs.
+    snapshot: [u32; 3],
+    tiles: Vec<Tile>,
+}
+
+impl Launch {
+    fn references(&self, buf: usize) -> bool {
+        self.a == buf || self.b == buf || self.c == buf
+    }
+}
+
+/// One explored copy of the world.  `Clone` at every branch point is the
+/// whole trick: the DFS owns its states, no real threads are involved.
+#[derive(Clone)]
+struct Model {
+    /// Committed contents of each device buffer, as a write counter.
+    buf_val: Vec<u32>,
+    /// B-tile grid cache: the `buf_val` the grid was cut from, per buffer.
+    grid: Vec<Option<u32>>,
+    inflight: VecDeque<Launch>,
+    next_launch: usize,
+    /// Program counter into `Scenario::ops`.
+    pc: usize,
+    /// Staging buffers currently held by jobs or un-drained replies.
+    staging_out: usize,
+    /// Staging buffers that died with their worker (Dead outcomes run).
+    staging_lost: usize,
+    poisoned: bool,
+    /// The op index `check_live` last ran for — the real stream checks
+    /// poison once per API call, not once per internal drain step.
+    live_checked_pc: Option<usize>,
+    /// Typed-error stand-ins the leader observed, in order.
+    errors: Vec<String>,
+    inflight_max: usize,
+    /// Hazard drains forced by an `Enqueue` (not by `Wait`/`Download`).
+    hazard_drains: usize,
+}
+
+#[derive(Default)]
+struct Stats {
+    /// Distinct complete schedules explored.
+    schedules: usize,
+    /// Protocol violations found (empty = the invariants hold everywhere).
+    violations: Vec<String>,
+    inflight_max: usize,
+    hazard_drains_min: usize,
+    hazard_drains_max: usize,
+    /// Staging buffers unaccounted for at quiescence, worst schedule.
+    leaked_max: usize,
+    errors_seen: Vec<String>,
+}
+
+enum Step {
+    Ran,
+    /// The next retirement needs replies only workers can produce.
+    Blocked,
+    Done,
+}
+
+impl Model {
+    fn new(sc: &Scenario) -> Self {
+        Model {
+            buf_val: vec![0; sc.bufs],
+            grid: vec![None; sc.bufs],
+            inflight: VecDeque::new(),
+            next_launch: 0,
+            pc: 0,
+            staging_out: 0,
+            staging_lost: 0,
+            poisoned: false,
+            live_checked_pc: None,
+            errors: Vec::new(),
+            inflight_max: 0,
+            hazard_drains: 0,
+        }
+    }
+
+    /// Can the oldest in-flight launch retire without further worker
+    /// progress?  Mirrors `retire_one`'s drain loop: it completes once
+    /// every reply arrived or the lost ones were declared dead.
+    fn front_drainable(&self) -> bool {
+        self.inflight.front().map_or(false, |l| l.tiles.iter().all(|t| t.st != TileSt::Queued))
+    }
+
+    /// `retire_one`: drain the oldest launch's replies, recover staging
+    /// buffers per arm, write back only on the all-healthy arm.
+    /// Caller must have checked `front_drainable`.
+    fn retire_one(&mut self, sc: &Scenario, out: &mut Stats) -> Result<(), String> {
+        let l = self.inflight.pop_front().expect("retire_one on an empty pipeline");
+        let lost = l.tiles.iter().filter(|t| t.st == TileSt::Lost).count();
+        let replied = l.tiles.len() - lost;
+        // Every reply that did arrive returns its staging buffer, on every
+        // arm — the `c_buf`-on-every-arm invariant the lint checks.
+        self.staging_out -= replied;
+        if lost > 0 {
+            // ReplyLost: recover what arrived, write nothing, poison.
+            self.poisoned = true;
+            return Err(format!("ReplyLost(launch {}, missing {lost})", l.id));
+        }
+        let failed =
+            l.tiles.iter().filter(|t| matches!(t.outcome, Outcome::Fail | Outcome::Panic)).count();
+        if failed > 0 {
+            // LaunchFailed: fully drained, C untouched, stream stays usable.
+            return Err(format!("LaunchFailed(launch {}, {failed} tiles)", l.id));
+        }
+        // Healthy arm: read stability is the theorem under test — every
+        // tile must have observed exactly the pre-launch contents.
+        for (i, t) in l.tiles.iter().enumerate() {
+            let obs = t.observed.expect("drainable launch has an unexecuted tile");
+            if obs != l.snapshot {
+                out.violations.push(format!(
+                    "launch {} tile {i} read {:?}, enqueue snapshot was {:?}",
+                    l.id, obs, l.snapshot
+                ));
+            }
+        }
+        if !sc.eager_writeback {
+            // Writeback at retirement bumps the version, which is what
+            // invalidates B grids cut from the old contents.
+            self.buf_val[l.c] += 1;
+        }
+        Ok(())
+    }
+
+    /// `check_live`, once per API call: a poisoned stream reports instead
+    /// of hanging.  Returns true when the current op must be skipped.
+    fn op_rejected_by_poison(&mut self) -> bool {
+        if self.live_checked_pc == Some(self.pc) {
+            return false; // mid-op re-entry: drains continue even poisoned
+        }
+        self.live_checked_pc = Some(self.pc);
+        if self.poisoned {
+            self.errors.push("Poisoned".to_string());
+            return true;
+        }
+        false
+    }
+
+    /// Run one leader op (or one internal drain step of it) if it can
+    /// make progress without worker help.
+    fn leader_step(&mut self, sc: &Scenario, out: &mut Stats) -> Step {
+        let Some(op) = sc.ops.get(self.pc).copied() else {
+            return Step::Done;
+        };
+        if self.op_rejected_by_poison() {
+            self.pc += 1;
+            return Step::Ran;
+        }
+        match op {
+            Op::Enqueue(a, b, c) => {
+                // Hazard scan, verbatim from stream.rs: conflict = an
+                // in-flight launch writing one of {a, b, c}, or — when
+                // b's grid must be (re)built — any launch referencing b.
+                let grid_fresh = self.grid[b] == Some(self.buf_val[b]);
+                let mut conflict = false;
+                for l in &self.inflight {
+                    let writes_our_set = l.c == a || l.c == b || l.c == c;
+                    let blocks_grid_build = !grid_fresh && l.references(b);
+                    if writes_our_set || blocks_grid_build {
+                        conflict = true;
+                    }
+                }
+                if conflict {
+                    // Drain the front launch, then re-run the scan; the
+                    // real code's retire_n(i + 1) is this loop unrolled.
+                    if !self.front_drainable() {
+                        return Step::Blocked;
+                    }
+                    self.hazard_drains += 1;
+                    if let Err(e) = self.retire_one(sc, out) {
+                        // A drain error surfaces here and the launch is
+                        // NOT submitted.
+                        self.errors.push(e);
+                        self.pc += 1;
+                    }
+                    return Step::Ran;
+                }
+                // Cut (or reuse) b's tile grid, then submit every tile.
+                self.grid[b] = Some(self.buf_val[b]);
+                let id = self.next_launch;
+                self.next_launch += 1;
+                let tiles = (0..sc.tiles_per_launch)
+                    .map(|t| Tile { st: TileSt::Queued, outcome: sc.outcome(id, t), observed: None })
+                    .collect();
+                self.staging_out += sc.tiles_per_launch;
+                self.inflight.push_back(Launch {
+                    id,
+                    a,
+                    b,
+                    c,
+                    snapshot: [self.buf_val[a], self.buf_val[b], self.buf_val[c]],
+                    tiles,
+                });
+                self.inflight_max = self.inflight_max.max(self.inflight.len());
+                self.pc += 1;
+                Step::Ran
+            }
+            Op::Wait => {
+                if self.inflight.is_empty() {
+                    self.pc += 1;
+                    return Step::Ran;
+                }
+                if !self.front_drainable() {
+                    return Step::Blocked;
+                }
+                // Later launches drain even when earlier ones error —
+                // retire_n aggregates; the model records each error.
+                if let Err(e) = self.retire_one(sc, out) {
+                    self.errors.push(e);
+                }
+                Step::Ran // pc advances once the pipeline is empty
+            }
+            Op::Download(x) => {
+                if self.inflight.iter().rposition(|l| l.c == x).is_none() {
+                    self.pc += 1;
+                    return Step::Ran;
+                }
+                if !self.front_drainable() {
+                    return Step::Blocked;
+                }
+                if let Err(e) = self.retire_one(sc, out) {
+                    self.errors.push(e);
+                }
+                Step::Ran // keep retiring until the last writer landed
+            }
+        }
+    }
+
+    /// Every worker event the scheduler could fire next: any queued tile
+    /// of any in-flight launch (cross-CU and cross-launch reordering).
+    fn enabled_worker_steps(&self) -> Vec<(usize, usize)> {
+        let mut v = Vec::new();
+        for (li, l) in self.inflight.iter().enumerate() {
+            for (ti, t) in l.tiles.iter().enumerate() {
+                if t.st == TileSt::Queued {
+                    v.push((li, ti));
+                }
+            }
+        }
+        v
+    }
+
+    /// A worker picks up tile `ti` of in-flight launch `li`.
+    fn worker_step(&mut self, li: usize, ti: usize, sc: &Scenario, out: &mut Stats) {
+        let l = &self.inflight[li];
+        let observed = [self.buf_val[l.a], self.buf_val[l.b], self.buf_val[l.c]];
+        // Grid exclusivity: the grid a worker reads must be the one cut
+        // for this launch — a rebuild mid-flight would be a lost update.
+        if self.grid[l.b] != Some(l.snapshot[1]) {
+            out.violations.push(format!("launch {} executed against a rebuilt B grid", l.id));
+        }
+        let c = l.c;
+        let l = &mut self.inflight[li];
+        let outcome = l.tiles[ti].outcome;
+        l.tiles[ti].observed = Some(observed);
+        if outcome == Outcome::Dead {
+            // The buffer rides into the grave with the worker; quiescence
+            // accounting expects exactly this many unreturned buffers.
+            l.tiles[ti].st = TileSt::Lost;
+            self.staging_lost += 1;
+            return;
+        }
+        l.tiles[ti].st = TileSt::Replied;
+        if sc.eager_writeback
+            && outcome == Outcome::Ok
+            && self.inflight[li].tiles.iter().all(|t| t.st == TileSt::Replied)
+        {
+            // The deliberate protocol bug: land the writeback as soon as
+            // the last reply arrives, ignoring FIFO retirement order.
+            self.buf_val[c] += 1;
+        }
+    }
+
+    /// Terminal-state accounting, after the script ran to completion.
+    fn check_quiescent(&self, out: &mut Stats) {
+        // Every scenario ends with `Wait`, so a live stream ends empty; a
+        // poisoned one may strand launches (the real stream refuses to
+        // touch them — buffer ownership can no longer be proven).
+        if !self.inflight.is_empty() && !self.poisoned {
+            out.violations
+                .push(format!("live stream ended with {} launches in flight", self.inflight.len()));
+        }
+        // Conservation: every staging buffer came home except the ones a
+        // dying worker took with it (and those stranded by poison).
+        let stranded: usize = self.inflight.iter().map(|l| l.tiles.len()).sum();
+        let lost_in_flight = self
+            .inflight
+            .iter()
+            .flat_map(|l| l.tiles.iter())
+            .filter(|t| t.st == TileSt::Lost)
+            .count();
+        let expected = self.staging_lost + stranded - lost_in_flight;
+        if self.staging_out != expected {
+            out.violations.push(format!(
+                "quiescent with {} staging buffers out ({expected} expected)",
+                self.staging_out
+            ));
+        }
+        out.leaked_max = out.leaked_max.max(self.staging_out);
+        out.inflight_max = out.inflight_max.max(self.inflight_max);
+        out.hazard_drains_min = out.hazard_drains_min.min(self.hazard_drains);
+        out.hazard_drains_max = out.hazard_drains_max.max(self.hazard_drains);
+        for e in &self.errors {
+            if !out.errors_seen.contains(e) {
+                out.errors_seen.push(e.clone());
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The exhaustive scheduler
+// ---------------------------------------------------------------------------
+
+fn dfs(mut m: Model, sc: &Scenario, out: &mut Stats) {
+    // The leader runs deterministically until it blocks on worker
+    // replies; worker events only *read* leader-visible state, so
+    // exploring their orders at block points covers every distinguishable
+    // schedule (a partial-order reduction, not an approximation).
+    loop {
+        match m.leader_step(sc, out) {
+            Step::Ran => continue,
+            Step::Blocked => break,
+            Step::Done => {
+                out.schedules += 1;
+                m.check_quiescent(out);
+                return;
+            }
+        }
+    }
+    let choices = m.enabled_worker_steps();
+    // Liveness: a blocked leader always has a runnable worker event —
+    // the model analog of "recv_timeout + dead-worker probe never hangs".
+    assert!(
+        !choices.is_empty(),
+        "deadlock: leader blocked at pc {} with no runnable worker event",
+        m.pc
+    );
+    for (li, ti) in choices {
+        let mut next = m.clone();
+        next.worker_step(li, ti, sc, out);
+        dfs(next, sc, out);
+    }
+}
+
+fn explore(sc: &Scenario) -> Stats {
+    let mut out = Stats { hazard_drains_min: usize::MAX, ..Stats::default() };
+    dfs(Model::new(sc), sc, &mut out);
+    assert!(out.schedules > 0, "the scenario never reached a terminal state");
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Scenarios
+// ---------------------------------------------------------------------------
+
+/// Disjoint buffer sets pipeline: no hazard drain, two launches in
+/// flight at once, pool conserved — under every schedule.
+#[test]
+fn disjoint_launches_pipeline_and_conserve_buffers() {
+    let sc = Scenario {
+        bufs: 6,
+        tiles_per_launch: 2,
+        ops: vec![Op::Enqueue(0, 1, 2), Op::Enqueue(3, 4, 5), Op::Wait],
+        outcomes: vec![],
+        eager_writeback: false,
+    };
+    let st = explore(&sc);
+    assert!(st.violations.is_empty(), "violations: {:?}", st.violations);
+    assert!(st.schedules > 1, "the DFS must branch over schedules, got {}", st.schedules);
+    assert_eq!(st.inflight_max, 2, "disjoint launches must overlap in flight");
+    assert_eq!(st.hazard_drains_max, 0, "disjoint launches must not force a drain");
+    assert_eq!(st.leaked_max, 0);
+    assert!(st.errors_seen.is_empty(), "errors: {:?}", st.errors_seen);
+}
+
+/// `enqueue(c, b, c)` after `enqueue(a, b, c)`: RAW/WAW on C forces a
+/// drain at the second enqueue, and the chained launch reads the
+/// writer's retired value in every schedule.
+#[test]
+fn dependent_chain_reads_the_writers_retired_value() {
+    let sc = Scenario {
+        bufs: 3,
+        tiles_per_launch: 2,
+        ops: vec![Op::Enqueue(0, 1, 2), Op::Enqueue(2, 1, 2), Op::Wait],
+        outcomes: vec![],
+        eager_writeback: false,
+    };
+    let st = explore(&sc);
+    assert!(st.violations.is_empty(), "violations: {:?}", st.violations);
+    assert!(st.hazard_drains_min >= 1, "the chain must drain its writer first");
+    assert_eq!(st.inflight_max, 1, "a dependent chain cannot overlap");
+    assert!(st.errors_seen.is_empty(), "errors: {:?}", st.errors_seen);
+}
+
+/// Write-after-read needs no wait: a later launch may write a buffer an
+/// in-flight launch is reading, because its writeback is deferred to
+/// FIFO retirement.  The reader's tiles must still observe pre-launch
+/// contents in every schedule.
+#[test]
+fn write_after_read_defers_to_retirement() {
+    // L0 reads buffer 2 (as A); L1 writes it.  A *reader* is not a
+    // conflict for the scan, so both stay in flight.
+    let sc = Scenario {
+        bufs: 4,
+        tiles_per_launch: 2,
+        ops: vec![Op::Enqueue(2, 1, 3), Op::Enqueue(0, 1, 2), Op::Wait],
+        outcomes: vec![],
+        eager_writeback: false,
+    };
+    let st = explore(&sc);
+    assert!(st.violations.is_empty(), "violations: {:?}", st.violations);
+    assert_eq!(st.inflight_max, 2, "WAR must not force a drain");
+    assert_eq!(st.hazard_drains_max, 0);
+}
+
+/// The model is falsifiable: land L1's writeback eagerly (at last reply,
+/// not at retirement) and some schedule must catch L0 reading torn
+/// contents.  This is the exact bug the deferred-writeback rule
+/// prevents; a model that could not detect it would prove nothing.
+#[test]
+fn eager_writeback_is_caught_as_a_stability_violation() {
+    let sc = Scenario {
+        bufs: 4,
+        tiles_per_launch: 2,
+        ops: vec![Op::Enqueue(2, 1, 3), Op::Enqueue(0, 1, 2), Op::Wait],
+        outcomes: vec![],
+        eager_writeback: true,
+    };
+    let st = explore(&sc);
+    assert!(
+        !st.violations.is_empty(),
+        "the eager-writeback mutation must violate read stability in some schedule"
+    );
+    assert!(
+        st.violations.iter().any(|v| v.contains("snapshot")),
+        "the violation must be a snapshot mismatch, got {:?}",
+        st.violations
+    );
+}
+
+/// Rebuilding B's tile grid needs exclusivity: an in-flight launch still
+/// referencing the buffer (here: as its A operand) blocks the build, so
+/// the enqueue drains it first.  No schedule may execute a tile against
+/// a grid rebuilt after its enqueue.
+#[test]
+fn grid_rebuild_waits_for_inflight_referencers() {
+    // L0 = (1, 0, 3) references buffer 1 as A; L1 = (2, 1, 4) uses it as
+    // B with no grid yet cut -> blocks_grid_build forces a drain.
+    let sc = Scenario {
+        bufs: 5,
+        tiles_per_launch: 2,
+        ops: vec![Op::Enqueue(1, 0, 3), Op::Enqueue(2, 1, 4), Op::Wait],
+        outcomes: vec![],
+        eager_writeback: false,
+    };
+    let st = explore(&sc);
+    assert!(st.violations.is_empty(), "violations: {:?}", st.violations);
+    assert!(st.hazard_drains_min >= 1, "the grid build must drain the referencing launch");
+}
+
+/// A failed tile: the launch drains completely, C keeps its pre-launch
+/// contents, every staging buffer returns, and the stream stays usable
+/// (the follow-up launch succeeds) — in every schedule.
+#[test]
+fn failed_tiles_write_nothing_and_return_every_buffer() {
+    let sc = Scenario {
+        bufs: 6,
+        tiles_per_launch: 2,
+        ops: vec![Op::Enqueue(0, 1, 2), Op::Wait, Op::Enqueue(3, 4, 5), Op::Wait],
+        outcomes: vec![vec![Outcome::Ok, Outcome::Fail]],
+        eager_writeback: false,
+    };
+    let st = explore(&sc);
+    assert!(st.violations.is_empty(), "violations: {:?}", st.violations);
+    assert_eq!(st.leaked_max, 0, "failure arms must still return staging buffers");
+    assert!(
+        st.errors_seen.iter().any(|e| e.starts_with("LaunchFailed")),
+        "errors: {:?}",
+        st.errors_seen
+    );
+    assert!(
+        !st.errors_seen.iter().any(|e| e == "Poisoned"),
+        "a failed launch must not poison the stream: {:?}",
+        st.errors_seen
+    );
+}
+
+/// A caught worker panic rides the same failure arm as a backend error:
+/// reply with `err` set, staging buffer recovered, stream usable.
+#[test]
+fn caught_panics_ride_the_failure_arm() {
+    let sc = Scenario {
+        bufs: 6,
+        tiles_per_launch: 2,
+        ops: vec![Op::Enqueue(0, 1, 2), Op::Wait, Op::Enqueue(3, 4, 5), Op::Wait],
+        outcomes: vec![vec![Outcome::Panic, Outcome::Ok]],
+        eager_writeback: false,
+    };
+    let st = explore(&sc);
+    assert!(st.violations.is_empty(), "violations: {:?}", st.violations);
+    assert_eq!(st.leaked_max, 0);
+    assert!(st.errors_seen.iter().any(|e| e.starts_with("LaunchFailed")));
+    assert!(!st.errors_seen.iter().any(|e| e == "Poisoned"));
+}
+
+/// A worker that dies reply-less: the retirement reports ReplyLost and
+/// poisons the stream — every later call errors instead of hanging —
+/// and exactly the dead worker's buffer is unaccounted for.
+#[test]
+fn lost_replies_poison_the_stream() {
+    let sc = Scenario {
+        bufs: 6,
+        tiles_per_launch: 2,
+        ops: vec![Op::Enqueue(0, 1, 2), Op::Wait, Op::Enqueue(3, 4, 5), Op::Wait],
+        outcomes: vec![vec![Outcome::Ok, Outcome::Dead]],
+        eager_writeback: false,
+    };
+    let st = explore(&sc);
+    assert!(st.violations.is_empty(), "violations: {:?}", st.violations);
+    assert_eq!(st.leaked_max, 1, "exactly the dead worker's staging buffer is lost");
+    assert!(st.errors_seen.iter().any(|e| e.starts_with("ReplyLost")), "{:?}", st.errors_seen);
+    assert!(
+        st.errors_seen.iter().any(|e| e == "Poisoned"),
+        "the call after a lost reply must observe poison: {:?}",
+        st.errors_seen
+    );
+}
+
+/// `download(x)` retires exactly through the last writer of `x`;
+/// launches writing other buffers keep flowing (they are retired by the
+/// final `Wait`, not the download).
+#[test]
+fn download_drains_only_its_writers_prefix() {
+    let sc = Scenario {
+        bufs: 6,
+        tiles_per_launch: 2,
+        // L0 writes 2, L1 writes 5; downloading 2 must not retire L1.
+        ops: vec![Op::Enqueue(0, 1, 2), Op::Enqueue(3, 4, 5), Op::Download(2), Op::Wait],
+        outcomes: vec![],
+        eager_writeback: false,
+    };
+    let st = explore(&sc);
+    assert!(st.violations.is_empty(), "violations: {:?}", st.violations);
+    assert_eq!(st.inflight_max, 2);
+    assert!(st.errors_seen.is_empty(), "errors: {:?}", st.errors_seen);
+}
+
+/// A three-launch mixed pipeline: overlap where buffer sets are
+/// disjoint, drain where they are not, all invariants under every
+/// schedule.  This is the largest state space in the file; keep tile
+/// counts small — DFS cost is factorial in the number of worker events.
+#[test]
+fn mixed_pipeline_holds_every_invariant() {
+    let sc = Scenario {
+        bufs: 7,
+        tiles_per_launch: 2,
+        ops: vec![
+            Op::Enqueue(0, 1, 2), // L0 writes 2
+            Op::Enqueue(3, 4, 5), // L1 disjoint: overlaps L0
+            Op::Enqueue(2, 4, 6), // L2 reads 2: drains L0, L1 keeps flying
+            Op::Wait,
+        ],
+        outcomes: vec![],
+        eager_writeback: false,
+    };
+    let st = explore(&sc);
+    assert!(st.violations.is_empty(), "violations: {:?}", st.violations);
+    assert!(st.inflight_max >= 2, "L0/L1 must overlap");
+    assert!(st.hazard_drains_min >= 1, "L2 must drain its producer");
+    assert_eq!(st.leaked_max, 0);
+    assert!(st.errors_seen.is_empty(), "errors: {:?}", st.errors_seen);
+}
+
+/// Pin the scenario table's defaulting: outcomes absent from the table
+/// are `Ok` (so most scenarios only spell out their faults).
+#[test]
+fn scenario_outcomes_default_to_ok() {
+    let sc = Scenario {
+        bufs: 1,
+        tiles_per_launch: 1,
+        ops: vec![],
+        outcomes: vec![vec![Outcome::Fail]],
+        eager_writeback: false,
+    };
+    assert_eq!(sc.outcome(0, 0), Outcome::Fail);
+    assert_eq!(sc.outcome(0, 9), Outcome::Ok);
+    assert_eq!(sc.outcome(7, 0), Outcome::Ok);
+}

@@ -1,0 +1,1271 @@
+//! The apfp-lint rule engine.
+//!
+//! This is a deliberate line-mirror of the executable specification in
+//! `python/tests/apfp_lint.py` — both implementations are regex-free
+//! scanners over masked source text, pinned against each other by the
+//! shared fixtures in `tests/fixtures/` (the same dual-implementation
+//! strategy PRs 1–5 used for the numeric kernels).  When changing a rule,
+//! change both engines and extend a fixture that proves the behavior.
+//!
+//! Three rule families (docs/INVARIANTS.md is the catalogue):
+//!
+//! * `alloc` / `alloc-coverage` — functions annotated `// apfp-lint:
+//!   no_alloc` are transitively checked against an allocation denylist,
+//!   and every annotated function must be exercised (by name) by
+//!   `tests/alloc_free.rs` or be reachable from one that is.
+//! * `panic` / `index` — no `unwrap`/`expect`/`panic!`-family macros and
+//!   no unguarded slice subscripts in `runtime/`, `coordinator/` and
+//!   `config.rs` outside `#[cfg(test)]`.
+//! * `hazard` — mechanical protocol shape of `coordinator/stream.rs` /
+//!   `worker.rs`: every `TileResult` literal carries `c_buf`, reply
+//!   receives are `recv_timeout`, and no unbounded/shared
+//!   `Inflight`-style channel reappears.
+//!
+//! Escape hatch, shared grammar with the Python port:
+//!
+//! ```text
+//! // apfp-lint: allow(<rule>, reason="why this site is fine")
+//! // apfp-lint: allow(<rule>, scope=fn, reason="why this whole fn is fine")
+//! // apfp-lint: no_alloc
+//! ```
+//!
+//! A trailing same-line `allow` applies to that line; a standalone comment
+//! line applies to the next line of code; `scope=fn` (and `no_alloc`)
+//! attach to the next `fn` item.  A `scope=fn` alloc allow also stops the
+//! transitive walk at that function (it is a declared cold path).
+
+use std::collections::{BTreeMap, BTreeSet, HashSet};
+use std::fmt::Write as _;
+use std::path::Path;
+
+pub const RULE_ALLOC: &str = "alloc";
+pub const RULE_COVERAGE: &str = "alloc-coverage";
+pub const RULE_PANIC: &str = "panic";
+pub const RULE_INDEX: &str = "index";
+pub const RULE_HAZARD: &str = "hazard";
+pub const RULE_ANNOTATION: &str = "annotation";
+
+pub const KNOWN_RULES: [&str; 5] =
+    [RULE_ALLOC, RULE_COVERAGE, RULE_PANIC, RULE_INDEX, RULE_HAZARD];
+
+/// Files subject to the panic / index discipline (relative-path prefixes).
+const PANIC_SCOPE: [&str; 3] = ["runtime/", "coordinator/", "config.rs"];
+/// Files subject to the hazard-protocol structure rule.
+const HAZARD_SCOPE: [&str; 2] = ["coordinator/stream.rs", "coordinator/worker.rs"];
+
+/// Allocation denylist: (needle, label).  Needles starting with an
+/// identifier character additionally require a non-identifier character
+/// before the match.
+const DENY_ALLOC: [(&str, &str); 20] = [
+    ("vec!", "vec! macro"),
+    ("format!", "format! macro"),
+    ("Vec::new", "Vec::new"),
+    ("Vec::with_capacity", "Vec::with_capacity"),
+    ("Vec::from", "Vec::from"),
+    ("Box::new", "Box::new"),
+    ("String::new", "String::new"),
+    ("String::from", "String::from"),
+    ("String::with_capacity", "String::with_capacity"),
+    ("sync_channel(", "sync_channel"),
+    (".to_vec(", "to_vec"),
+    (".to_string(", "to_string"),
+    (".to_owned(", "to_owned"),
+    (".clone(", "clone"),
+    (".collect(", "collect"),
+    (".collect::<", "collect"),
+    (".with_capacity(", "with_capacity"),
+    (".resize(", "resize"),
+    (".resize_with(", "resize_with"),
+    (".reserve(", "reserve"),
+];
+
+/// Panic-family denylist for the panic rule.
+const DENY_PANIC: [(&str, &str); 6] = [
+    (".unwrap(", "unwrap"),
+    (".expect(", "expect"),
+    ("panic!", "panic! macro"),
+    ("unreachable!", "unreachable! macro"),
+    ("todo!", "todo! macro"),
+    ("unimplemented!", "unimplemented! macro"),
+];
+
+/// A subscript identifier counts as guarded when some earlier line of the
+/// same fn mentions it together with one of these markers (loop bounds,
+/// asserts, modulo arithmetic, clamping).
+const GUARD_MARKS: [&str; 13] = [
+    "for ", "while ", "if ", "assert", "ensure!", "%", ".min(", ".max(",
+    "match ", "clamp(", " < ", " <= ", "..",
+];
+
+/// Identifiers never treated as unguarded subscript variables.
+const INDEX_IDENT_SKIP: [&str; 14] = [
+    "self", "as", "usize", "u8", "u16", "u32", "u64", "i8", "i16", "i32",
+    "i64", "f32", "f64", "len",
+];
+
+fn is_ident(ch: u8) -> bool {
+    ch.is_ascii_alphanumeric() || ch == b'_'
+}
+
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+    pub allowed: bool,
+    pub reason: Option<String>,
+}
+
+impl Finding {
+    fn deny(rule: &'static str, file: &str, line: usize, message: String) -> Self {
+        Finding { rule, file: file.to_string(), line, message, allowed: false, reason: None }
+    }
+
+    fn key(&self) -> (String, usize, &'static str, String) {
+        (self.file.clone(), self.line, self.rule, self.message.clone())
+    }
+}
+
+#[derive(Clone, Debug)]
+struct Ann {
+    kind: AnnKind,
+    line: usize, // 1-based line the comment sits on
+    rule: &'static str,
+    reason: String,
+    scope_fn: bool,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum AnnKind {
+    NoAlloc,
+    Allow,
+}
+
+#[derive(Clone, Debug)]
+struct FnRec {
+    name: String,
+    file: String,
+    sig_line: usize,
+    body_start_line: usize,
+    end_line: usize,
+    body: Vec<u8>, // masked body text including braces
+    no_alloc: bool,
+    no_alloc_line: usize,
+    cold: bool, // carries a scope=fn alloc allow: walk stops here
+    fn_allows: Vec<(&'static str, String)>,
+    callees: BTreeSet<String>,
+}
+
+struct FileLint {
+    rel: String,
+    masked: Vec<u8>,
+    line_starts: Vec<usize>,
+    lines: Vec<String>,
+    masked_lines: Vec<String>,
+    site_allows: BTreeMap<usize, Vec<(&'static str, String)>>,
+    fns: Vec<FnRec>,
+    test_ranges: Vec<(usize, usize)>,
+}
+
+impl FileLint {
+    fn line_of(&self, off: usize) -> usize {
+        self.line_starts.partition_point(|&s| s <= off)
+    }
+
+    fn in_test(&self, line: usize) -> bool {
+        self.test_ranges.iter().any(|&(a, b)| a <= line && line <= b)
+    }
+
+    fn enclosing_fns(&self, line: usize) -> Vec<usize> {
+        (0..self.fns.len())
+            .filter(|&i| self.fns[i].sig_line <= line && line <= self.fns[i].end_line)
+            .collect()
+    }
+}
+
+/// Blank out comments, string/char literals (newlines preserved).
+fn mask_source(src: &[u8]) -> Vec<u8> {
+    let mut out = src.to_vec();
+    let n = src.len();
+    let blank = |out: &mut Vec<u8>, a: usize, b: usize| {
+        for slot in out.iter_mut().take(b.min(n)).skip(a) {
+            if *slot != b'\n' {
+                *slot = b' ';
+            }
+        }
+    };
+    let starts_with = |at: usize, pat: &[u8]| src[at..].starts_with(pat);
+
+    let mut i = 0;
+    while i < n {
+        let c = src[i];
+        if c == b'/' && starts_with(i, b"//") {
+            let j = memfind(src, b"\n", i).unwrap_or(n);
+            blank(&mut out, i, j);
+            i = j;
+        } else if c == b'/' && starts_with(i, b"/*") {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if starts_with(j, b"/*") {
+                    depth += 1;
+                    j += 2;
+                } else if starts_with(j, b"*/") {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, i, j);
+            i = j;
+        } else if c == b'r' && (i == 0 || !is_ident(src[i - 1])) {
+            // raw string r"..." / r#"..."#
+            let mut j = i + 1;
+            let mut hashes = 0usize;
+            while j < n && src[j] == b'#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && src[j] == b'"' {
+                let mut close = vec![b'"'];
+                close.extend(std::iter::repeat(b'#').take(hashes));
+                let k = match memfind(src, &close, j + 1) {
+                    Some(k) => k + close.len(),
+                    None => n,
+                };
+                blank(&mut out, i, k);
+                i = k;
+            } else {
+                i += 1;
+            }
+        } else if c == b'"' {
+            let mut j = i + 1;
+            while j < n {
+                if src[j] == b'\\' {
+                    j += 2;
+                } else if src[j] == b'"' {
+                    j += 1;
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, i, j);
+            i = j;
+        } else if c == b'\'' {
+            if i + 1 < n && src[i + 1] == b'\\' {
+                let mut j = i + 2;
+                while j < n && src[j] != b'\'' {
+                    j += 1;
+                }
+                blank(&mut out, i, j + 1);
+                i = j + 1;
+            } else if i + 2 < n && src[i + 2] == b'\'' {
+                blank(&mut out, i, i + 3);
+                i += 3;
+            } else {
+                i += 1; // lifetime
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn memfind(hay: &[u8], needle: &[u8], from: usize) -> Option<usize> {
+    if needle.is_empty() || from > hay.len() {
+        return None;
+    }
+    hay[from..]
+        .windows(needle.len())
+        .position(|w| w == needle)
+        .map(|p| p + from)
+}
+
+/// Offsets of `needle` in `line`; identifier-leading needles require a
+/// non-identifier character immediately before the match.
+fn find_with_boundary(line: &str, needle: &str) -> Vec<usize> {
+    let bytes = line.as_bytes();
+    let nb = needle.as_bytes();
+    let mut hits = Vec::new();
+    let mut start = 0;
+    while let Some(k) = memfind(bytes, nb, start) {
+        let ok = !(is_ident(nb[0]) && k > 0 && is_ident(bytes[k - 1]));
+        if ok {
+            hits.push(k);
+        }
+        start = k + 1;
+    }
+    hits
+}
+
+/// True when `ident` appears in `line` as a whole identifier.
+fn ident_mentioned(line: &str, ident: &str) -> bool {
+    let bytes = line.as_bytes();
+    let ib = ident.as_bytes();
+    let mut start = 0;
+    while let Some(k) = memfind(bytes, ib, start) {
+        let before_ok = k == 0 || !is_ident(bytes[k - 1]);
+        let after = k + ib.len();
+        let after_ok = after >= bytes.len() || !is_ident(bytes[after]);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = k + 1;
+    }
+    false
+}
+
+/// Extract `// apfp-lint:` directives from original source lines.
+fn parse_annotations(lines: &[String], findings: &mut Vec<Finding>, rel: &str) -> Vec<Ann> {
+    let mut anns = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let lineno = idx + 1;
+        let Some(slash) = line.find("//") else { continue };
+        let mut mark = line[slash..].find("apfp-lint:").map(|m| m + slash);
+        while let Some(m) = mark {
+            let nxt = line[m + 1..].find("apfp-lint:").map(|x| x + m + 1);
+            let end = nxt.unwrap_or(line.len());
+            parse_directive(line[m + "apfp-lint:".len()..end].trim(), lineno, &mut anns, findings, rel);
+            mark = nxt;
+        }
+    }
+    anns
+}
+
+fn parse_directive(
+    body: &str,
+    lineno: usize,
+    anns: &mut Vec<Ann>,
+    findings: &mut Vec<Finding>,
+    rel: &str,
+) {
+    if body.starts_with("no_alloc") {
+        anns.push(Ann {
+            kind: AnnKind::NoAlloc,
+            line: lineno,
+            rule: RULE_ALLOC,
+            reason: String::new(),
+            scope_fn: false,
+        });
+        return;
+    }
+    if !body.starts_with("allow(") {
+        let head: String = body.chars().take(40).collect();
+        findings.push(Finding::deny(
+            RULE_ANNOTATION, rel, lineno,
+            format!("unrecognized apfp-lint directive `{head}`"),
+        ));
+        return;
+    }
+    let Some(close) = body.rfind(')') else {
+        findings.push(Finding::deny(
+            RULE_ANNOTATION, rel, lineno,
+            "malformed apfp-lint allow: missing `)`".to_string(),
+        ));
+        return;
+    };
+    let inner = &body["allow(".len()..close];
+    let mut reason: Option<&str> = None;
+    let mut head = inner;
+    if let Some(rq) = inner.find("reason=\"") {
+        let after = rq + "reason=\"".len();
+        let Some(rend) = inner[after..].find('"').map(|x| x + after) else {
+            findings.push(Finding::deny(
+                RULE_ANNOTATION, rel, lineno,
+                "malformed apfp-lint reason: unterminated string".to_string(),
+            ));
+            return;
+        };
+        reason = Some(&inner[after..rend]);
+        head = &inner[..rq];
+    }
+    let rule_name = head.split(',').next().unwrap_or("").trim();
+    let scope_fn = head.contains("scope=fn");
+    let Some(rule) = KNOWN_RULES.iter().find(|r| **r == rule_name).copied() else {
+        findings.push(Finding::deny(
+            RULE_ANNOTATION, rel, lineno,
+            format!("unknown apfp-lint rule `{rule_name}`"),
+        ));
+        return;
+    };
+    let Some(reason) = reason.filter(|r| !r.trim().is_empty()) else {
+        findings.push(Finding::deny(
+            RULE_ANNOTATION, rel, lineno,
+            format!("apfp-lint allow({rule}) needs a reason=\"...\""),
+        ));
+        return;
+    };
+    anns.push(Ann {
+        kind: AnnKind::Allow,
+        line: lineno,
+        rule,
+        reason: reason.to_string(),
+        scope_fn,
+    });
+}
+
+fn parse_fns(fl: &mut FileLint) {
+    let masked = fl.masked.clone();
+    let n = masked.len();
+    let mut i = 0;
+    while let Some(at) = memfind(&masked, b"fn", i) {
+        i = at;
+        let before = if i > 0 { masked[i - 1] } else { b' ' };
+        let after = if i + 2 < n { masked[i + 2] } else { b' ' };
+        if is_ident(before) || !after.is_ascii_whitespace() {
+            i += 2;
+            continue;
+        }
+        let mut j = i + 2;
+        while j < n && masked[j].is_ascii_whitespace() {
+            j += 1;
+        }
+        let name_start = j;
+        while j < n && is_ident(masked[j]) {
+            j += 1;
+        }
+        let name = String::from_utf8_lossy(&masked[name_start..j]).into_owned();
+        if name.is_empty() {
+            i += 2;
+            continue;
+        }
+        // find the body-opening brace (skip the parameter list; `;` at
+        // paren-depth 0 means a bodyless trait signature)
+        let mut par = 0i32;
+        let mut k = j;
+        let mut body_start = None;
+        while k < n {
+            match masked[k] {
+                b'(' => par += 1,
+                b')' => par -= 1,
+                b'{' if par == 0 => {
+                    body_start = Some(k);
+                    break;
+                }
+                b';' if par == 0 => break,
+                _ => {}
+            }
+            k += 1;
+        }
+        let Some(body_start) = body_start else {
+            i = if k > i { k } else { i + 2 };
+            continue;
+        };
+        let mut depth = 0i32;
+        let mut e = body_start;
+        while e < n {
+            if masked[e] == b'{' {
+                depth += 1;
+            } else if masked[e] == b'}' {
+                depth -= 1;
+                if depth == 0 {
+                    e += 1;
+                    break;
+                }
+            }
+            e += 1;
+        }
+        fl.fns.push(FnRec {
+            name,
+            file: fl.rel.clone(),
+            sig_line: fl.line_of(i),
+            body_start_line: fl.line_of(body_start),
+            end_line: fl.line_of(e.saturating_sub(1)),
+            body: masked[body_start..e].to_vec(),
+            no_alloc: false,
+            no_alloc_line: 0,
+            cold: false,
+            fn_allows: Vec::new(),
+            callees: BTreeSet::new(),
+        });
+        i = j;
+    }
+}
+
+fn parse_test_ranges(fl: &mut FileLint) {
+    let masked = fl.masked.clone();
+    let n = masked.len();
+    let mut i = 0;
+    while let Some(at) = memfind(&masked, b"#[cfg(test)]", i) {
+        let start_line = fl.line_of(at);
+        let Some(k) = memfind(&masked, b"{", at) else {
+            fl.test_ranges.push((start_line, fl.line_of(n.saturating_sub(1))));
+            return;
+        };
+        let mut depth = 0i32;
+        let mut e = k;
+        while e < n {
+            if masked[e] == b'{' {
+                depth += 1;
+            } else if masked[e] == b'}' {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            e += 1;
+        }
+        fl.test_ranges.push((start_line, fl.line_of(e.min(n.saturating_sub(1)))));
+        i = e;
+    }
+}
+
+/// Bind parsed directives to lines / fns; dangling ones are findings.
+fn attach_annotations(fl: &mut FileLint, anns: &[Ann], findings: &mut Vec<Finding>) {
+    for ann in anns {
+        if ann.kind == AnnKind::Allow && !ann.scope_fn {
+            let mut target = ann.line;
+            let code = fl
+                .masked_lines
+                .get(ann.line - 1)
+                .map(|l| l.trim().to_string())
+                .unwrap_or_default();
+            if code.is_empty() {
+                // standalone comment: applies to the next line holding code
+                target = 0;
+                for idx in ann.line..fl.masked_lines.len() {
+                    if !fl.masked_lines[idx].trim().is_empty() {
+                        target = idx + 1;
+                        break;
+                    }
+                }
+                if target == 0 {
+                    findings.push(Finding::deny(
+                        RULE_ANNOTATION, &fl.rel, ann.line,
+                        "dangling apfp-lint allow: no code follows".to_string(),
+                    ));
+                    continue;
+                }
+            }
+            fl.site_allows.entry(target).or_default().push((ann.rule, ann.reason.clone()));
+            continue;
+        }
+        // fn-scoped: nearest fn declared at or after the annotation line
+        let mut target_fn: Option<usize> = None;
+        for (idx, f) in fl.fns.iter().enumerate() {
+            if f.sig_line >= ann.line
+                && target_fn.map_or(true, |t| f.sig_line < fl.fns[t].sig_line)
+            {
+                target_fn = Some(idx);
+            }
+        }
+        let Some(idx) = target_fn else {
+            let kind = if ann.kind == AnnKind::NoAlloc { "no_alloc" } else { "allow" };
+            findings.push(Finding::deny(
+                RULE_ANNOTATION, &fl.rel, ann.line,
+                format!("dangling apfp-lint {kind}: no fn follows"),
+            ));
+            continue;
+        };
+        if ann.kind == AnnKind::NoAlloc {
+            fl.fns[idx].no_alloc = true;
+            fl.fns[idx].no_alloc_line = ann.line;
+        } else {
+            fl.fns[idx].fn_allows.push((ann.rule, ann.reason.clone()));
+            if ann.rule == RULE_ALLOC {
+                fl.fns[idx].cold = true;
+            }
+        }
+    }
+}
+
+fn parse_callees(f: &mut FnRec) {
+    let body = &f.body;
+    let n = body.len();
+    let mut i = 0;
+    while i < n {
+        if is_ident(body[i])
+            && !body[i].is_ascii_digit()
+            && (i == 0 || !is_ident(body[i - 1]))
+        {
+            let mut j = i;
+            while j < n && is_ident(body[j]) {
+                j += 1;
+            }
+            let name = String::from_utf8_lossy(&body[i..j]).into_owned();
+            let mut k = j;
+            while k < n && body[k].is_ascii_whitespace() {
+                k += 1;
+            }
+            let keyword = matches!(name.as_str(), "if" | "while" | "for" | "match" | "return" | "fn");
+            if k < n && body[k] == b'(' && !keyword {
+                f.callees.insert(name);
+            }
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// (allowed, reason) for a finding at `line` of rule `rule`.
+fn allow_for(fl: &FileLint, line: usize, rule: &'static str) -> (bool, Option<String>) {
+    if let Some(allows) = fl.site_allows.get(&line) {
+        for (r, reason) in allows {
+            if *r == rule {
+                return (true, Some(reason.clone()));
+            }
+        }
+    }
+    for idx in fl.enclosing_fns(line) {
+        for (r, reason) in &fl.fns[idx].fn_allows {
+            if *r == rule {
+                return (true, Some(reason.clone()));
+            }
+        }
+    }
+    (false, None)
+}
+
+/// Flag denylist needles on lines [first, last] outside tests.
+fn scan_denylist(
+    fl: &FileLint,
+    first: usize,
+    last: usize,
+    deny: &[(&str, &str)],
+    rule: &'static str,
+    findings: &mut Vec<Finding>,
+    context: &str,
+) {
+    let mut seen: HashSet<(usize, String)> = HashSet::new();
+    for lineno in first..=last {
+        if lineno - 1 >= fl.masked_lines.len() || fl.in_test(lineno) {
+            continue;
+        }
+        let line = &fl.masked_lines[lineno - 1];
+        for (needle, label) in deny {
+            if find_with_boundary(line, needle).is_empty() {
+                continue;
+            }
+            if !seen.insert((lineno, label.to_string())) {
+                continue;
+            }
+            let (allowed, reason) = allow_for(fl, lineno, rule);
+            findings.push(Finding {
+                rule,
+                file: fl.rel.clone(),
+                line: lineno,
+                message: format!("`{label}`{context}"),
+                allowed,
+                reason,
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: alloc (+ coverage)
+// ---------------------------------------------------------------------------
+
+/// A function's identity in the cross-file call graph.
+type FnKey = (String, usize, String);
+
+fn fn_key(f: &FnRec) -> FnKey {
+    (f.file.clone(), f.sig_line, f.name.clone())
+}
+
+/// Resolve `f`'s callee names to function keys.
+///
+/// Name-based resolution is deliberately conservative: a name is followed
+/// only when it resolves unambiguously — definitions in the caller's own
+/// file win; otherwise the name must have exactly one non-test definition
+/// in the whole tree.  Ambiguous names (trait methods with several
+/// implementations, ubiquitous names like `new`) are NOT traversed; each
+/// trait-dispatched kernel carries its own `no_alloc` annotation instead,
+/// so it is still checked as a root of its own.
+fn resolve_callees(f: &FnRec, fn_map: &BTreeMap<String, Vec<FnKey>>) -> Vec<FnKey> {
+    let mut out = Vec::new();
+    for name in &f.callees {
+        let Some(cands) = fn_map.get(name) else { continue };
+        let same_file: Vec<&FnKey> = cands.iter().filter(|c| c.0 == f.file).collect();
+        if !same_file.is_empty() {
+            out.extend(same_file.into_iter().cloned());
+        } else if cands.len() == 1 {
+            out.push(cands[0].clone());
+        }
+    }
+    out
+}
+
+fn run_alloc_rule(
+    files: &BTreeMap<String, FileLint>,
+    coverage_text: Option<&str>,
+    findings: &mut Vec<Finding>,
+) {
+    // callee parsing needs &mut; collect fn records into an owned table
+    let mut fn_table: BTreeMap<FnKey, FnRec> = BTreeMap::new();
+    let mut fn_map: BTreeMap<String, Vec<FnKey>> = BTreeMap::new();
+    for fl in files.values() {
+        for f in &fl.fns {
+            if !fl.in_test(f.sig_line) {
+                fn_map.entry(f.name.clone()).or_default().push(fn_key(f));
+            }
+            let mut rec = f.clone();
+            parse_callees(&mut rec);
+            fn_table.insert(fn_key(f), rec);
+        }
+    }
+
+    let roots: Vec<FnKey> = fn_table
+        .values()
+        .filter(|f| f.no_alloc)
+        .map(fn_key)
+        .collect();
+
+    // transitive denylist walk from every annotated root
+    let mut visited: HashSet<FnKey> = HashSet::new();
+    let mut queue: Vec<(FnKey, String)> = fn_table
+        .values()
+        .filter(|f| f.no_alloc && !f.cold)
+        .map(|f| (fn_key(f), f.name.clone()))
+        .collect();
+    while let Some((key, root)) = queue.pop() {
+        if !visited.insert(key.clone()) {
+            continue;
+        }
+        let Some(f) = fn_table.get(&key) else { continue };
+        let Some(fl) = files.get(&f.file) else { continue };
+        let ctx = format!(" in `{}` (no_alloc root: `{root}`)", f.name);
+        scan_denylist(fl, f.body_start_line, f.end_line, &DENY_ALLOC, RULE_ALLOC, findings, &ctx);
+        for cand in resolve_callees(f, &fn_map) {
+            if fn_table.get(&cand).map_or(false, |c| !c.cold) {
+                queue.push((cand, root.clone()));
+            }
+        }
+    }
+
+    // coverage: every annotated fn must be named by tests/alloc_free.rs or
+    // be reachable from an annotated fn that is
+    if roots.is_empty() {
+        return;
+    }
+    let Some(coverage_text) = coverage_text else {
+        for key in &roots {
+            let f = &fn_table[key];
+            let line = if f.no_alloc_line > 0 { f.no_alloc_line } else { f.sig_line };
+            findings.push(Finding::deny(
+                RULE_COVERAGE, &f.file, line,
+                format!("`{}` is marked no_alloc but tests/alloc_free.rs was not found", f.name),
+            ));
+        }
+        return;
+    };
+    let mut covered: HashSet<FnKey> = HashSet::new();
+    let mut queue: Vec<FnKey> = Vec::new();
+    for key in &roots {
+        if ident_mentioned(coverage_text, &key.2) {
+            covered.insert(key.clone());
+            queue.push(key.clone());
+        }
+    }
+    let mut seen = covered.clone();
+    while let Some(key) = queue.pop() {
+        let Some(f) = fn_table.get(&key) else { continue };
+        for cand in resolve_callees(f, &fn_map) {
+            if !seen.insert(cand.clone()) {
+                continue;
+            }
+            if fn_table.get(&cand).map_or(false, |c| c.no_alloc) {
+                covered.insert(cand.clone());
+            }
+            queue.push(cand);
+        }
+    }
+    for key in &roots {
+        if covered.contains(key) {
+            continue;
+        }
+        let f = &fn_table[key];
+        let line = if f.no_alloc_line > 0 { f.no_alloc_line } else { f.sig_line };
+        let (allowed, reason) = allow_for(&files[&f.file], line, RULE_COVERAGE);
+        findings.push(Finding {
+            rule: RULE_COVERAGE,
+            file: f.file.clone(),
+            line,
+            message: format!(
+                "`{}` is marked no_alloc but is not exercised by tests/alloc_free.rs",
+                f.name
+            ),
+            allowed,
+            reason,
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: panic
+// ---------------------------------------------------------------------------
+
+fn in_panic_scope(rel: &str) -> bool {
+    PANIC_SCOPE.iter().any(|p| rel == *p || rel.starts_with(p))
+}
+
+fn run_panic_rule(fl: &FileLint, findings: &mut Vec<Finding>) {
+    scan_denylist(fl, 1, fl.lines.len(), &DENY_PANIC, RULE_PANIC, findings, " in non-test code");
+}
+
+// ---------------------------------------------------------------------------
+// Rule: index
+// ---------------------------------------------------------------------------
+
+/// (line, content) for subscript expressions `expr[...]`.
+fn subscript_sites(fl: &FileLint) -> Vec<(usize, String)> {
+    let masked = &fl.masked;
+    let n = masked.len();
+    let mut sites = Vec::new();
+    let mut i = 0;
+    while i < n {
+        if masked[i] != b'[' {
+            i += 1;
+            continue;
+        }
+        let mut k = i as isize - 1;
+        while k >= 0 && (masked[k as usize] == b' ' || masked[k as usize] == b'\t') {
+            k -= 1;
+        }
+        let prev = if k >= 0 { masked[k as usize] } else { b' ' };
+        if !(is_ident(prev) || prev == b')' || prev == b']') {
+            i += 1;
+            continue;
+        }
+        if is_ident(prev) {
+            // a keyword before `[` means a pattern or literal, not a subscript
+            let mut w = k;
+            while w >= 0 && is_ident(masked[w as usize]) {
+                w -= 1;
+            }
+            let word = &masked[(w + 1) as usize..=k as usize];
+            if matches!(word, b"let" | b"else" | b"in" | b"return" | b"mut" | b"ref" | b"match") {
+                i += 1;
+                continue;
+            }
+        }
+        let mut depth = 0i32;
+        let mut e = i;
+        while e < n {
+            if masked[e] == b'[' {
+                depth += 1;
+            } else if masked[e] == b']' {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            e += 1;
+        }
+        let content = String::from_utf8_lossy(&masked[i + 1..e.min(n)]).into_owned();
+        sites.push((fl.line_of(i), content));
+        i = e + 1;
+    }
+    sites
+}
+
+/// (guardable idents, any_ident): field accesses, constants and numeric
+/// types are opaque to the guard heuristic and excluded from the first
+/// list; `any_ident` distinguishes them from pure-literal subscripts.
+fn subscript_idents(content: &str) -> (Vec<String>, bool) {
+    let bytes = content.as_bytes();
+    let n = bytes.len();
+    let mut idents: Vec<String> = Vec::new();
+    let mut any_ident = false;
+    let mut i = 0;
+    while i < n {
+        if is_ident(bytes[i]) && !bytes[i].is_ascii_digit() && (i == 0 || !is_ident(bytes[i - 1])) {
+            let mut j = i;
+            while j < n && is_ident(bytes[j]) {
+                j += 1;
+            }
+            let name = String::from_utf8_lossy(&bytes[i..j]).into_owned();
+            let mut k = i as isize - 1;
+            while k >= 0 && (bytes[k as usize] == b' ' || bytes[k as usize] == b'\t') {
+                k -= 1;
+            }
+            let is_field = k >= 0 && bytes[k as usize] == b'.';
+            // `x.field` as an index is opaque to the guard heuristic: skip
+            // both the base and the field (covered by the dynamic tests)
+            let mut nk = j;
+            while nk < n && (bytes[nk] == b' ' || bytes[nk] == b'\t') {
+                nk += 1;
+            }
+            let is_base = nk < n && bytes[nk] == b'.';
+            if name != "as" {
+                any_ident = true;
+            }
+            let skip = is_field
+                || is_base
+                || INDEX_IDENT_SKIP.contains(&name.as_str())
+                || name.as_bytes()[0].is_ascii_uppercase();
+            if !skip && !idents.contains(&name) {
+                idents.push(name);
+            }
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    (idents, any_ident)
+}
+
+fn run_index_rule(fl: &FileLint, findings: &mut Vec<Finding>) {
+    let mut seen: HashSet<(usize, Vec<String>)> = HashSet::new();
+    for (lineno, content) in subscript_sites(fl) {
+        if fl.in_test(lineno) {
+            continue;
+        }
+        if content.contains("..") {
+            continue; // range slices pair with copy_from_slice length asserts
+        }
+        let (idents, any_ident) = subscript_idents(&content);
+        let encl = fl.enclosing_fns(lineno);
+        let Some(&fn_idx) = encl.iter().min_by_key(|&&i| fl.fns[i].sig_line) else {
+            continue;
+        };
+        let fnr = &fl.fns[fn_idx];
+        let mut unguarded: Vec<String> = Vec::new();
+        if idents.is_empty() && !any_ident {
+            unguarded.push("<literal>".to_string());
+        }
+        for ident in &idents {
+            let mut ok = false;
+            for ln in fnr.sig_line..=lineno {
+                let Some(line) = fl.masked_lines.get(ln - 1) else { break };
+                if ident_mentioned(line, ident) && GUARD_MARKS.iter().any(|m| line.contains(m)) {
+                    ok = true;
+                    break;
+                }
+            }
+            if !ok {
+                unguarded.push(ident.clone());
+            }
+        }
+        if unguarded.is_empty() {
+            continue;
+        }
+        if !seen.insert((lineno, unguarded.clone())) {
+            continue;
+        }
+        let (allowed, reason) = allow_for(fl, lineno, RULE_INDEX);
+        let what = unguarded
+            .iter()
+            .map(|u| format!("`{u}`"))
+            .collect::<Vec<_>>()
+            .join(", ");
+        findings.push(Finding {
+            rule: RULE_INDEX,
+            file: fl.rel.clone(),
+            line: lineno,
+            message: format!("subscript without visible guard for {what}"),
+            allowed,
+            reason,
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: hazard
+// ---------------------------------------------------------------------------
+
+fn in_hazard_scope(rel: &str) -> bool {
+    HAZARD_SCOPE.iter().any(|p| rel == *p || rel.ends_with(p))
+}
+
+fn run_hazard_rule(fl: &FileLint, findings: &mut Vec<Finding>) {
+    let masked = &fl.masked;
+    let n = masked.len();
+
+    // every TileResult struct literal must carry c_buf (both Ok and Err
+    // arms return the C staging buffer to the leader)
+    let mut i = 0;
+    while let Some(at) = memfind(masked, b"TileResult", i) {
+        i = at;
+        let before = if i > 0 { masked[i - 1] } else { b' ' };
+        if is_ident(before) {
+            i += "TileResult".len();
+            continue;
+        }
+        let head = String::from_utf8_lossy(&masked[i.saturating_sub(16)..i]).into_owned();
+        let mut j = i + "TileResult".len();
+        while j < n && masked[j].is_ascii_whitespace() {
+            j += 1;
+        }
+        if j >= n
+            || masked[j] != b'{'
+            || ["struct", "impl", "enum", "->"].iter().any(|k| head.contains(k))
+        {
+            i += "TileResult".len();
+            continue;
+        }
+        let mut depth = 0i32;
+        let mut e = j;
+        while e < n {
+            if masked[e] == b'{' {
+                depth += 1;
+            } else if masked[e] == b'}' {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            e += 1;
+        }
+        let lineno = fl.line_of(i);
+        if !fl.in_test(lineno) && memfind(&masked[j..e.min(n)], b"c_buf", 0).is_none() {
+            let (allowed, reason) = allow_for(fl, lineno, RULE_HAZARD);
+            findings.push(Finding {
+                rule: RULE_HAZARD,
+                file: fl.rel.clone(),
+                line: lineno,
+                message: "TileResult literal without `c_buf`: the staging buffer must \
+                          return to the leader on every arm"
+                    .to_string(),
+                allowed,
+                reason,
+            });
+        }
+        i = e;
+    }
+    if !fl.rel.ends_with("stream.rs") {
+        return;
+    }
+
+    // leader-side receives must be recv_timeout (hang-proof drains)
+    for (idx, line) in fl.masked_lines.iter().enumerate() {
+        let lineno = idx + 1;
+        if fl.in_test(lineno) {
+            continue;
+        }
+        if !find_with_boundary(line, ".recv()").is_empty() {
+            let (allowed, reason) = allow_for(fl, lineno, RULE_HAZARD);
+            findings.push(Finding {
+                rule: RULE_HAZARD,
+                file: fl.rel.clone(),
+                line: lineno,
+                message: "bare `.recv()` on a reply channel: use `recv_timeout` so a \
+                          dead worker cannot hang the leader"
+                    .to_string(),
+                allowed,
+                reason,
+            });
+        }
+        for k in find_with_boundary(line, "channel(") {
+            if line[..k].ends_with("sync_") {
+                continue;
+            }
+            let (allowed, reason) = allow_for(fl, lineno, RULE_HAZARD);
+            findings.push(Finding {
+                rule: RULE_HAZARD,
+                file: fl.rel.clone(),
+                line: lineno,
+                message: "unbounded `channel()`: reply channels must be bounded \
+                          `sync_channel` sized to the launch"
+                    .to_string(),
+                allowed,
+                reason,
+            });
+        }
+        if ident_mentioned(line, "Inflight") {
+            let (allowed, reason) = allow_for(fl, lineno, RULE_HAZARD);
+            findings.push(Finding {
+                rule: RULE_HAZARD,
+                file: fl.rel.clone(),
+                line: lineno,
+                message: "shared `Inflight` channel type: per-launch reply channels \
+                          replaced it (PR 5)"
+                    .to_string(),
+                allowed,
+                reason,
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Driver
+// ---------------------------------------------------------------------------
+
+pub struct Summary {
+    pub files: usize,
+    pub findings: usize,
+    pub denied: usize,
+    pub allowed: usize,
+}
+
+pub struct Report {
+    pub summary: Summary,
+    pub findings: Vec<Finding>,
+}
+
+fn load_file(root: &Path, path: &Path, findings: &mut Vec<Finding>) -> std::io::Result<FileLint> {
+    let rel = path
+        .strip_prefix(root)
+        .unwrap_or(path)
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect::<Vec<_>>()
+        .join("/");
+    let src = std::fs::read(path)?;
+    let masked = mask_source(&src);
+    let mut line_starts = vec![0usize];
+    for (idx, &ch) in src.iter().enumerate() {
+        if ch == b'\n' {
+            line_starts.push(idx + 1);
+        }
+    }
+    let text = String::from_utf8_lossy(&src).into_owned();
+    let masked_text = String::from_utf8_lossy(&masked).into_owned();
+    let mut fl = FileLint {
+        rel: rel.clone(),
+        masked,
+        line_starts,
+        lines: text.split('\n').map(str::to_string).collect(),
+        masked_lines: masked_text.split('\n').map(str::to_string).collect(),
+        site_allows: BTreeMap::new(),
+        fns: Vec::new(),
+        test_ranges: Vec::new(),
+    };
+    let anns = parse_annotations(&fl.lines, findings, &rel);
+    parse_fns(&mut fl);
+    parse_test_ranges(&mut fl);
+    attach_annotations(&mut fl, &anns, findings);
+    Ok(fl)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().map_or(false, |e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+pub fn lint_root(src_root: &Path, coverage_path: Option<&Path>) -> std::io::Result<Report> {
+    let default_cov = src_root
+        .parent()
+        .map(|p| p.join("tests").join("alloc_free.rs"))
+        .filter(|p| p.exists());
+    let coverage_text = match coverage_path {
+        Some(p) => Some(std::fs::read_to_string(p)?),
+        None => match default_cov {
+            Some(p) => Some(std::fs::read_to_string(p)?),
+            None => None,
+        },
+    };
+
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut paths = Vec::new();
+    collect_rs_files(src_root, &mut paths)?;
+    paths.sort();
+    let mut files: BTreeMap<String, FileLint> = BTreeMap::new();
+    for path in &paths {
+        let fl = load_file(src_root, path, &mut findings)?;
+        files.insert(fl.rel.clone(), fl);
+    }
+
+    run_alloc_rule(&files, coverage_text.as_deref(), &mut findings);
+    for fl in files.values() {
+        if in_panic_scope(&fl.rel) {
+            run_panic_rule(fl, &mut findings);
+            run_index_rule(fl, &mut findings);
+        }
+        if in_hazard_scope(&fl.rel) {
+            run_hazard_rule(fl, &mut findings);
+        }
+    }
+
+    let mut uniq: BTreeMap<(String, usize, &'static str, String), Finding> = BTreeMap::new();
+    for f in findings {
+        uniq.entry(f.key()).or_insert(f);
+    }
+    let ordered: Vec<Finding> = uniq.into_values().collect();
+    let denied = ordered.iter().filter(|f| !f.allowed).count();
+    Ok(Report {
+        summary: Summary {
+            files: files.len(),
+            findings: ordered.len(),
+            denied,
+            allowed: ordered.len() - denied,
+        },
+        findings: ordered,
+    })
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+pub fn render_json(report: &Report) -> String {
+    let mut out = String::new();
+    let s = &report.summary;
+    let _ = write!(
+        out,
+        "{{\n  \"summary\": {{\n    \"files\": {},\n    \"findings\": {},\n    \
+         \"denied\": {},\n    \"allowed\": {}\n  }},\n  \"findings\": [",
+        s.files, s.findings, s.denied, s.allowed
+    );
+    for (i, f) in report.findings.iter().enumerate() {
+        let reason = match &f.reason {
+            Some(r) => format!("\"{}\"", json_escape(r)),
+            None => "null".to_string(),
+        };
+        let _ = write!(
+            out,
+            "{}\n    {{\n      \"rule\": \"{}\",\n      \"file\": \"{}\",\n      \
+             \"line\": {},\n      \"message\": \"{}\",\n      \"allowed\": {},\n      \
+             \"reason\": {}\n    }}",
+            if i == 0 { "" } else { "," },
+            json_escape(f.rule),
+            json_escape(&f.file),
+            f.line,
+            json_escape(&f.message),
+            f.allowed,
+            reason
+        );
+    }
+    if report.findings.is_empty() {
+        out.push_str("]\n}");
+    } else {
+        out.push_str("\n  ]\n}");
+    }
+    out
+}
+
+pub fn render_human(report: &Report) -> String {
+    let mut out: Vec<String> = Vec::new();
+    for f in &report.findings {
+        let mark = if f.allowed { "allow" } else { "DENY " };
+        out.push(format!("{mark} {}:{}: [{}] {}", f.file, f.line, f.rule, f.message));
+        if f.allowed {
+            if let Some(reason) = f.reason.as_deref().filter(|r| !r.is_empty()) {
+                out.push(format!("      = reason: {reason}"));
+            }
+        }
+    }
+    let s = &report.summary;
+    out.push(format!(
+        "{} findings across {} files: {} denied, {} allowed",
+        s.findings, s.files, s.denied, s.allowed
+    ));
+    out.join("\n")
+}

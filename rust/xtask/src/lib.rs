@@ -1,0 +1,5 @@
+//! Repo automation for the apfp crate.  The only task today is the
+//! apfp-lint static-analysis pass; the engine lives in a library so the
+//! integration tests in `tests/fixtures.rs` can drive it directly.
+
+pub mod engine;

@@ -1,0 +1,73 @@
+//! `cargo xtask lint` — run the apfp-lint static-analysis pass.
+//!
+//! Usage (via the alias in `.cargo/config.toml`):
+//!
+//! ```text
+//! cargo xtask lint                       # lint rust/src, human output
+//! cargo xtask lint --format json         # machine-readable report
+//! cargo xtask lint --src path/to/src     # lint another tree (fixtures)
+//! cargo xtask lint --coverage path.rs    # explicit alloc_free.rs
+//! ```
+//!
+//! Exit status is 1 when any finding is denied (no matching
+//! `// apfp-lint: allow(...)`), so CI can gate on it directly.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use xtask::engine;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: cargo xtask lint [--src PATH] [--coverage PATH] [--format human|json]"
+    );
+    std::process::exit(2);
+}
+
+fn main() -> ExitCode {
+    let mut argv = std::env::args().skip(1);
+    match argv.next().as_deref() {
+        Some("lint") => {}
+        _ => usage(),
+    }
+
+    let mut src: Option<PathBuf> = None;
+    let mut coverage: Option<PathBuf> = None;
+    let mut format = String::from("human");
+    while let Some(arg) = argv.next() {
+        match arg.as_str() {
+            "--src" => src = Some(PathBuf::from(argv.next().unwrap_or_else(|| usage()))),
+            "--coverage" => {
+                coverage = Some(PathBuf::from(argv.next().unwrap_or_else(|| usage())))
+            }
+            "--format" => format = argv.next().unwrap_or_else(|| usage()),
+            _ => usage(),
+        }
+    }
+    if format != "human" && format != "json" {
+        usage();
+    }
+
+    // xtask lives at rust/xtask; the crate under lint is rust/src.
+    let src = src.unwrap_or_else(|| {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("src")
+    });
+
+    let report = match engine::lint_root(&src, coverage.as_deref()) {
+        Ok(report) => report,
+        Err(err) => {
+            eprintln!("apfp-lint: cannot lint {}: {err}", src.display());
+            return ExitCode::from(2);
+        }
+    };
+    if format == "json" {
+        println!("{}", engine::render_json(&report));
+    } else {
+        println!("{}", engine::render_human(&report));
+    }
+    if report.summary.denied > 0 {
+        ExitCode::from(1)
+    } else {
+        ExitCode::SUCCESS
+    }
+}

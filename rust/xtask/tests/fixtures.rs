@@ -1,0 +1,153 @@
+//! Fixture-driven tests for the apfp-lint engine.
+//!
+//! Each directory under `tests/fixtures/` is a miniature crate (`src/`
+//! tree plus an optional `tests/alloc_free.rs`) with an `expected.txt`
+//! listing the findings the engine must produce, one per line:
+//!
+//! ```text
+//! rule<TAB>file<TAB>line<TAB>denied|allowed
+//! ```
+//!
+//! The same fixtures pin the Python port (python/tests/test_apfp_lint.py),
+//! so the two engines cannot drift apart silently.  Messages are not part
+//! of the contract — only (rule, file, line, status) rows are compared.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use xtask::engine;
+
+fn fixtures_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("fixtures")
+}
+
+fn findings_as_rows(report: &engine::Report) -> Vec<String> {
+    let mut rows: Vec<String> = report
+        .findings
+        .iter()
+        .map(|f| {
+            let status = if f.allowed { "allowed" } else { "denied" };
+            format!("{}\t{}\t{}\t{}", f.rule, f.file, f.line, status)
+        })
+        .collect();
+    rows.sort();
+    rows
+}
+
+fn expected_rows(path: &Path) -> Vec<String> {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+    let mut rows: Vec<String> = text
+        .lines()
+        .map(str::trim_end)
+        .filter(|l| !l.is_empty())
+        .map(str::to_string)
+        .collect();
+    rows.sort();
+    rows
+}
+
+fn run_fixture(name: &str) {
+    let dir = fixtures_dir().join(name);
+    let report = engine::lint_root(&dir.join("src"), None)
+        .unwrap_or_else(|e| panic!("lint fixture {name}: {e}"));
+    let got = findings_as_rows(&report);
+    let want = expected_rows(&dir.join("expected.txt"));
+    assert_eq!(got, want, "fixture `{name}` rows diverge from expected.txt");
+}
+
+#[test]
+fn fixture_clean() {
+    run_fixture("clean");
+}
+
+#[test]
+fn fixture_alloc_bad() {
+    run_fixture("alloc_bad");
+}
+
+#[test]
+fn fixture_alloc_allow() {
+    run_fixture("alloc_allow");
+}
+
+#[test]
+fn fixture_coverage_bad() {
+    run_fixture("coverage_bad");
+}
+
+#[test]
+fn fixture_panic_bad() {
+    run_fixture("panic_bad");
+}
+
+#[test]
+fn fixture_index_bad() {
+    run_fixture("index_bad");
+}
+
+#[test]
+fn fixture_hazard_bad() {
+    run_fixture("hazard_bad");
+}
+
+#[test]
+fn fixture_annotation_bad() {
+    run_fixture("annotation_bad");
+}
+
+/// The bad fixtures must collectively prove every rule can fire.
+#[test]
+fn fixture_set_exercises_every_rule() {
+    let mut denied: BTreeSet<String> = BTreeSet::new();
+    for entry in std::fs::read_dir(fixtures_dir()).expect("fixtures dir") {
+        let dir = entry.expect("fixture entry").path();
+        if !dir.is_dir() {
+            continue;
+        }
+        let report = engine::lint_root(&dir.join("src"), None)
+            .unwrap_or_else(|e| panic!("lint {}: {e}", dir.display()));
+        for f in report.findings.iter().filter(|f| !f.allowed) {
+            denied.insert(f.rule.to_string());
+        }
+    }
+    let mut want: BTreeSet<String> =
+        engine::KNOWN_RULES.iter().map(|r| r.to_string()).collect();
+    want.insert("annotation".to_string());
+    assert_eq!(denied, want, "every rule needs a bad fixture that trips it");
+}
+
+/// The crate's own source must be clean: zero denied findings, and every
+/// allowed finding must carry a non-empty reason.
+#[test]
+fn live_tree_is_clean() {
+    let src = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("src");
+    let report = engine::lint_root(&src, None).expect("lint rust/src");
+    let denied: Vec<&engine::Finding> =
+        report.findings.iter().filter(|f| !f.allowed).collect();
+    assert!(
+        denied.is_empty(),
+        "rust/src has denied lint findings:\n{}",
+        engine::render_human(&report)
+    );
+    for f in &report.findings {
+        assert!(
+            f.reason.as_deref().map_or(false, |r| !r.trim().is_empty()),
+            "allowed finding without a reason at {}:{}",
+            f.file,
+            f.line
+        );
+    }
+}
+
+/// JSON output must round-trip the deny count (spot check against the
+/// panic_bad fixture, which has exactly three denied findings).
+#[test]
+fn json_rendering_reports_denials() {
+    let dir = fixtures_dir().join("panic_bad");
+    let report = engine::lint_root(&dir.join("src"), None).expect("lint panic_bad");
+    assert_eq!(report.summary.denied, 3);
+    let json = engine::render_json(&report);
+    assert!(json.contains("\"denied\": 3"), "summary missing from JSON:\n{json}");
+    assert!(json.contains("\"rule\": \"panic\""), "findings missing from JSON:\n{json}");
+}

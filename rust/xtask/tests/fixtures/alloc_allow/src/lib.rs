@@ -1,0 +1,12 @@
+// apfp-lint: allow(alloc, scope=fn, reason="cold constructor: runs once at startup")
+fn build_pool() -> Vec<u64> {
+    Vec::with_capacity(64)
+}
+
+// apfp-lint: no_alloc
+pub fn kernel_into(out: &mut Vec<u64>) {
+    out.clear();
+    // apfp-lint: allow(alloc, reason="capacity reuse: resize refills the cleared buffer")
+    out.resize(8, 0);
+    let _ = build_pool().len(); // cold callee: traversal stops at the fn-scope allow
+}

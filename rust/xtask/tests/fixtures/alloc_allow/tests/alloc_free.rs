@@ -1,0 +1,1 @@
+// kernel_into runs under the counting allocator

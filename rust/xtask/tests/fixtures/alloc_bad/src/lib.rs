@@ -1,0 +1,11 @@
+fn helper(n: usize) -> Vec<u64> {
+    let v = vec![0u64; n];
+    v
+}
+
+// apfp-lint: no_alloc
+pub fn kernel_into(out: &mut Vec<u64>) {
+    out.extend_from_slice(&helper(4));
+    let s = String::from("scratch");
+    let _ = s;
+}

@@ -1,0 +1,1 @@
+// kernel_into is exercised here

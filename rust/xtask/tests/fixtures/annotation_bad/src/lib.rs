@@ -1,0 +1,14 @@
+// apfp-lint: allow(alloc
+pub fn a() {}
+
+// apfp-lint: allow(frobnicate, reason="no such rule")
+pub fn b() {}
+
+// apfp-lint: allow(alloc)
+pub fn c() {}
+
+// apfp-lint: nonsense directive
+pub fn d() {}
+
+pub fn e() {}
+// apfp-lint: no_alloc

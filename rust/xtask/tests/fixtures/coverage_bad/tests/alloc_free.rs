@@ -1,0 +1,1 @@
+// only proven_into appears here

@@ -1,0 +1,18 @@
+use std::sync::mpsc::channel;
+
+pub struct TileResult {
+    pub c_buf: u64,
+    pub err: Option<String>,
+}
+
+pub struct Inflight {
+    pub id: u64,
+}
+
+pub fn drain(rx: &std::sync::mpsc::Receiver<TileResult>) -> Option<TileResult> {
+    let r = rx.recv().ok();
+    let (_tx, _rx2) = channel();
+    let _ = _tx.send(0u64);
+    drop(_rx2);
+    r
+}

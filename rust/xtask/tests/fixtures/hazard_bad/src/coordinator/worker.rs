@@ -1,0 +1,9 @@
+use super::stream::TileResult;
+
+pub fn reply_ok(c_buf: u64) -> TileResult {
+    TileResult { c_buf, err: None }
+}
+
+pub fn reply_bad() -> TileResult {
+    TileResult { err: None }
+}

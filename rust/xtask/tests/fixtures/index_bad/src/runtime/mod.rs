@@ -1,0 +1,17 @@
+const LANES: usize = 4;
+
+pub fn pick(v: &[u64], i: usize) -> u64 {
+    v[i]
+}
+
+pub fn sum(v: &[u64]) -> u64 {
+    let mut acc = 0;
+    for i in 0..v.len() {
+        acc += v[i];
+    }
+    acc
+}
+
+pub fn lane(v: &[u64; 8]) -> u64 {
+    v[LANES]
+}

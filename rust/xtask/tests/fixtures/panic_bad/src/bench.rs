@@ -1,0 +1,3 @@
+pub fn bench_only(v: &[u64]) -> u64 {
+    *v.first().unwrap()
+}

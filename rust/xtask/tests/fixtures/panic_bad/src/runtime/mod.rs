@@ -1,0 +1,17 @@
+pub fn risky(v: &[u64]) -> u64 {
+    let first = v.first().unwrap();
+    let second: u64 = "2".parse().expect("parses");
+    if *first > second {
+        panic!("bad ordering");
+    }
+    *first
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fine_here() {
+        let v = vec![1u64];
+        let _ = v.first().unwrap();
+    }
+}
