@@ -16,9 +16,11 @@ Three rule families (see docs/INVARIANTS.md for the catalogue):
   and no unguarded slice subscripts in ``runtime/``, ``coordinator/`` and
   ``config.rs`` outside ``#[cfg(test)]``.
 * ``hazard`` — mechanical protocol shape of ``coordinator/stream.rs`` /
-  ``worker.rs``: every ``TileResult`` literal carries ``c_buf``, reply
-  receives are ``recv_timeout``, and no unbounded/shared ``Inflight``-style
-  channel reappears.
+  ``worker.rs``: every ``TileResult`` / ``Job::GemmTile`` literal carries
+  ``c_buf`` and the retry arm's ``attempt`` counter, reply receives are
+  ``recv_timeout``, no unbounded/shared ``Inflight``-style channel
+  reappears, and the probe interval stays ``ApfpConfig::reply_timeout``
+  (no hardcoded ``REPLY_LIVENESS_INTERVAL``).
 
 Escape hatch, shared grammar with the Rust port::
 
@@ -744,26 +746,28 @@ def in_hazard_scope(rel: str) -> bool:
     return any(rel == p or rel.endswith(p) for p in HAZARD_SCOPE)
 
 
-def run_hazard_rule(fl: FileLint, findings: list) -> None:
+def scan_reply_literals(fl: FileLint, token: str, findings: list) -> None:
+    """Braced ``token { ... }`` literals must carry ``c_buf`` (the staging
+    buffer rides every job and reply arm) and ``attempt`` (the delivery
+    counter the retry budget keys on).  Declarations are skipped and
+    destructuring patterns eliding fields with ``..`` are exempt from the
+    ``attempt`` requirement."""
     masked, n = fl.masked, len(fl.masked)
-
-    # every TileResult struct literal must carry c_buf (both Ok and Err arms
-    # return the C staging buffer to the leader)
     i = 0
     while True:
-        i = masked.find("TileResult", i)
+        i = masked.find(token, i)
         if i < 0:
             break
         before = masked[i - 1] if i > 0 else " "
         if is_ident(before):
-            i += len("TileResult")
+            i += len(token)
             continue
         head = masked[max(0, i - 16):i]
-        j = i + len("TileResult")
+        j = i + len(token)
         while j < n and masked[j].isspace():
             j += 1
         if j >= n or masked[j] != "{" or any(k in head for k in ("struct", "impl", "enum", "->")):
-            i += len("TileResult")
+            i += len(token)
             continue
         depth = 0
         e = j
@@ -776,13 +780,29 @@ def run_hazard_rule(fl: FileLint, findings: list) -> None:
                     break
             e += 1
         lineno = fl.line_of(i)
-        if not fl.in_test(lineno) and "c_buf" not in masked[j:e]:
-            allowed, reason = allow_for(fl, lineno, RULE_HAZARD)
-            findings.append(Finding(
-                RULE_HAZARD, fl.rel, lineno,
-                "TileResult literal without `c_buf`: the staging buffer must "
-                "return to the leader on every arm", allowed, reason))
+        body = masked[j:e]
+        if not fl.in_test(lineno):
+            if "c_buf" not in body:
+                allowed, reason = allow_for(fl, lineno, RULE_HAZARD)
+                findings.append(Finding(
+                    RULE_HAZARD, fl.rel, lineno,
+                    f"`{token}` literal without `c_buf`: the staging buffer must "
+                    "ride every job and reply arm", allowed, reason))
+            elif ".." not in body and "attempt" not in body:
+                allowed, reason = allow_for(fl, lineno, RULE_HAZARD)
+                findings.append(Finding(
+                    RULE_HAZARD, fl.rel, lineno,
+                    f"`{token}` literal without `attempt`: the delivery counter "
+                    "the retry budget keys on must ride every job and reply",
+                    allowed, reason))
         i = e
+
+
+def run_hazard_rule(fl: FileLint, findings: list) -> None:
+    # every TileResult reply and Job::GemmTile job must carry the staging
+    # buffer and the delivery-attempt counter (ISSUE 7's retry arm)
+    scan_reply_literals(fl, "TileResult", findings)
+    scan_reply_literals(fl, "GemmTile", findings)
     if not fl.rel.endswith("stream.rs"):
         return
 
@@ -811,6 +831,12 @@ def run_hazard_rule(fl: FileLint, findings: list) -> None:
                 RULE_HAZARD, fl.rel, lineno,
                 "shared `Inflight` channel type: per-launch reply channels "
                 "replaced it (PR 5)", allowed, reason))
+        if ident_mentioned(line, "REPLY_LIVENESS_INTERVAL"):
+            allowed, reason = allow_for(fl, lineno, RULE_HAZARD)
+            findings.append(Finding(
+                RULE_HAZARD, fl.rel, lineno,
+                "hardcoded `REPLY_LIVENESS_INTERVAL`: the probe interval is "
+                "`ApfpConfig::reply_timeout` now (ISSUE 7)", allowed, reason))
 
 
 # ---------------------------------------------------------------------------

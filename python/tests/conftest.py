@@ -14,22 +14,33 @@ try:
 except ModuleNotFoundError:  # minimal container: property tests skip below
     st = None
 
-from compile import config
-from compile.kernels import ref
+try:
+    from compile import config
+    from compile.kernels import ref
+except ModuleNotFoundError:  # no jax: only the pure-python suite runs
+    config = None
+    ref = None
 
 # Without hypothesis the property-based modules cannot even import; keep
-# the rest of the suite (vector replay, lint engine, pack layout) runnable.
-collect_ignore = (
-    []
-    if st is not None
-    else [
+# the rest of the suite (vector replay, lint engine, pack layout)
+# runnable.  Without jax the whole compile layer is out of reach and
+# only the self-contained modules (the lint engine, the stream-protocol
+# model) remain — that pair is exactly what the CI `analysis` job runs.
+collect_ignore = []
+if st is None or config is None:
+    collect_ignore += [
         "test_addsub_prims.py",
         "test_carry.py",
         "test_karatsuba.py",
         "test_model.py",
         "test_ref_oracle.py",
     ]
-)
+if config is None:
+    collect_ignore += [
+        "test_aot.py",
+        "test_gemm.py",
+        "test_pack.py",
+    ]
 
 
 def mantissa_strategy(prec: int):

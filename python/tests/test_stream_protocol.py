@@ -1,0 +1,504 @@
+"""Python port of the device stream's self-healing protocol (ISSUE 7).
+
+``rust/src/coordinator/stream.rs`` pipelines GEMM launches over per-CU
+worker threads and heals failures through an escalation ladder:
+
+1. a tile whose reply carries an error is **redispatched** up to
+   ``retry_limit`` times, reusing the staging buffer the errored reply
+   returned;
+2. a worker that dies reply-less is detected through its **incarnation
+   stamp** (every dispatch records the worker incarnation it went to; a
+   stamp that is no longer live means the dispatch died with the thread)
+   and respawned, and the lost dispatches are replayed at ``attempt + 1``;
+3. a CU past its respawn budget is **quarantined**: its band re-routes to
+   the survivors and later launches schedule around it (degraded mode);
+4. with zero survivors the stream reports ``NoSurvivors`` and poisons.
+
+This module re-states that protocol as an executable model — same
+structure, same names where it matters (``enqueue`` / ``retire`` /
+``probe`` / ``submit_tile``) — and drives it through randomized worker
+schedules.  The theorems checked on every schedule:
+
+* **bit identity** — any run whose faults stay inside the budgets
+  produces exactly the fault-free serial result, launch for launch;
+* **conservation** — every staging buffer token is either returned by a
+  reply or provably lost with a dead incarnation, never duplicated and
+  never leaked;
+* **FIFO retirement** — launches retire in enqueue order regardless of
+  retries and replays (a retry never escapes its launch's retirement);
+* **bounded redispatch** — error-driven retries per tile never exceed
+  ``retry_limit``;
+* **typed bottom** — exhausting every budget ends in ``NoSurvivors``
+  then ``Poisoned``, never a hang (a probe that finds nothing lost while
+  nothing can run is an assertion failure, the model's hang detector).
+
+The Rust integration tests (``rust/tests/stream_faults.rs``) sample real
+thread interleavings; this model explores seeded random ones and is the
+checkout's executable spec when no Rust toolchain is present.
+"""
+
+from __future__ import annotations
+
+import random
+
+import pytest
+
+TILES = 6  # output tiles per launch (origins 0..TILES-1)
+MASK = (1 << 32) - 1
+
+
+def tile_value(launch_id: int, origin: int, snap: tuple) -> int:
+    """The 'arithmetic': a deterministic mix of the launch, the tile and
+    the operand contents observed at execution time.  Faults must never
+    change it — that is the bit-identity theorem."""
+    a, b, c = snap
+    return (launch_id * 1000003 + origin * 10007 + a * 31 + b * 37 + c * 41) & MASK
+
+
+def writeback_value(prev: int, values: tuple) -> int:
+    out = prev * 69069 + 1
+    for v in values:
+        out = (out ^ v) * 2654435761 + 97
+    return out & MASK
+
+
+def serial_reference(n_bufs: int, gemms: list) -> list:
+    """The fault-free, serial semantics: every launch reads its enqueue
+    snapshot and writes back in order."""
+    bufs = [0] * n_bufs
+    for lid, (a, b, c) in enumerate(gemms):
+        snap = (bufs[a], bufs[b], bufs[c])
+        vals = tuple(tile_value(lid, o, snap) for o in range(TILES))
+        bufs[c] = writeback_value(bufs[c], vals)
+    return bufs
+
+
+class NoSurvivors(Exception):
+    pass
+
+
+class Poisoned(Exception):
+    pass
+
+
+class Worker:
+    """One compute unit under supervision (worker.rs: ``Supervisor``)."""
+
+    def __init__(self, cu: int):
+        self.cu = cu
+        self.alive = True
+        self.incarnation = 0  # == respawns, the dispatch stamp
+        self.respawns = 0
+        self.quarantined = False
+        self.last_incident = None
+        self.queue = []  # FIFO of jobs
+
+    def submit(self, job) -> bool:
+        if not self.alive or self.quarantined:
+            return False
+        self.queue.append(job)
+        return True
+
+    def die(self, stream):
+        """Reply-less death: the thread exits, its queue drains nowhere."""
+        self.alive = False
+        for job in self.queue:
+            stream.lost_tokens.add(job["buf"])
+        self.queue.clear()
+
+    def respawn(self, incident: str, limit: int, metrics: dict) -> str:
+        """worker.rs ``Supervisor::respawn``: fresh incarnation inside the
+        budget, quarantine past it.  Idempotent once quarantined."""
+        self.last_incident = incident
+        if self.quarantined:
+            return "quarantined"
+        if self.respawns >= limit:
+            self.quarantined = True
+            metrics["quarantined_cus"] += 1
+            return "quarantined"
+        self.respawns += 1
+        self.incarnation += 1
+        self.alive = True
+        self.queue = []
+        metrics["respawns"] += 1
+        return "respawned"
+
+
+class Launch:
+    def __init__(self, lid: int, a: int, b: int, c: int, snap: tuple, slots: list):
+        self.id = lid
+        self.a, self.b, self.c = a, b, c
+        self.snapshot = snap
+        self.slots = slots  # slot index -> physical CU (stamped at enqueue)
+        self.slot_of = {o: o % len(slots) for o in range(TILES)}
+        self.dispatches = {}  # origin -> (phys, incarnation, attempt)
+        self.replies = []  # the per-launch bounded reply channel
+        self.settled = {}  # origin -> reply (success or retry-exhausted)
+        self.error_retries = {}  # origin -> error-driven redispatch count
+
+
+class StreamModel:
+    """Leader-side state of ``DeviceStream``, with the healing ladder."""
+
+    def __init__(self, cus: int, n_bufs: int, faults: dict, retry_limit=2, respawn_limit=1,
+                 rng: random.Random | None = None):
+        self.workers = [Worker(i) for i in range(cus)]
+        self.bufs = [0] * n_bufs
+        # faults[(launch, origin)] = ("fail" | "die", attempts): the first
+        # `attempts` deliveries fail/kill, later ones succeed (None = all).
+        self.faults = faults
+        self.retry_limit = retry_limit
+        self.respawn_limit = respawn_limit
+        self.rng = rng or random.Random(0)
+        self.inflight = []
+        self.next_launch = 0
+        self.poisoned = False
+        self.rr = 0
+        self.metrics = {"retries": 0, "respawns": 0, "quarantined_cus": 0, "inflight_max": 0}
+        self.retired_order = []
+        self.errors = []
+        # staging-buffer conservation ledger
+        self.next_token = 0
+        self.outstanding = set()
+        self.lost_tokens = set()
+
+    # -- staging pool -----------------------------------------------------
+    def mint(self) -> int:
+        self.next_token += 1
+        self.outstanding.add(self.next_token)
+        return self.next_token
+
+    def give_back(self, token: int):
+        assert token in self.outstanding, f"token {token} returned twice"
+        self.outstanding.remove(token)
+
+    # -- scheduling -------------------------------------------------------
+    def live(self) -> list:
+        return [w.cu for w in self.workers if not w.quarantined]
+
+    def live_target(self):
+        live = self.live()
+        if not live:
+            return None
+        self.rr += 1
+        return live[self.rr % len(live)]
+
+    def worker_step(self) -> bool:
+        """Run one random runnable worker job — the schedule randomness."""
+        runnable = [w for w in self.workers if w.alive and not w.quarantined and w.queue]
+        if not runnable:
+            return False
+        w = self.rng.choice(runnable)
+        job = w.queue.pop(0)
+        kind, k = self.faults.get((job["launch"], job["origin"]), (None, None))
+        if kind == "die" and (k is None or job["attempt"] < k):
+            self.lost_tokens.add(job["buf"])
+            w.die(self)
+            return True
+        lid = job["launch"]
+        l = next((x for x in self.inflight if x.id == lid), None)
+        assert l is not None, "a worker job outlived its launch"
+        observed = (self.bufs[l.a], self.bufs[l.b], self.bufs[l.c])
+        err = kind == "fail" and (k is None or job["attempt"] < k)
+        l.replies.append({
+            "launch": lid,
+            "origin": job["origin"],
+            "attempt": job["attempt"],
+            "buf": job["buf"],
+            "err": err,
+            "observed": observed,
+            "value": None if err else tile_value(lid, job["origin"], observed),
+        })
+        return True
+
+    # -- the ladder -------------------------------------------------------
+    def submit_tile(self, l: Launch, origin: int, attempt: int, buf: int):
+        """stream.rs ``submit_tile``: home slot, re-route around
+        quarantine, respawn on dead send, poison only at zero survivors."""
+        while True:
+            home = l.slots[l.slot_of[origin]]
+            w = self.workers[home]
+            if w.quarantined:
+                target = self.live_target()
+                if target is None:
+                    self.give_back(buf)
+                    self.poisoned = True
+                    raise NoSurvivors(l.id)
+                w = self.workers[target]
+            job = {"launch": l.id, "origin": origin, "attempt": attempt, "buf": buf}
+            if w.submit(job):
+                l.dispatches[origin] = (w.cu, w.incarnation, attempt)
+                return
+            incident = f"launch {l.id} tile {origin} attempt {attempt}: submit failed"
+            if (w.respawn(incident, self.respawn_limit, self.metrics) == "quarantined"
+                    and not self.live()):
+                self.give_back(buf)
+                self.poisoned = True
+                raise NoSurvivors(l.id)
+
+    def absorb(self, l: Launch) -> bool:
+        """Drain the reply channel: dedup, retry-or-settle.  Returns
+        whether anything progressed."""
+        progressed = False
+        while l.replies:
+            r = l.replies.pop(0)
+            progressed = True
+            if r["launch"] != l.id or r["origin"] in l.settled:
+                self.give_back(r["buf"])  # duplicate: recycle, drop
+                continue
+            if r["err"] and r["attempt"] < self.retry_limit:
+                self.metrics["retries"] += 1
+                n = l.error_retries.get(r["origin"], 0) + 1
+                l.error_retries[r["origin"]] = n
+                assert n <= self.retry_limit, "error retries must respect the budget"
+                # the retry reuses the buffer the errored reply returned
+                self.submit_tile(l, r["origin"], r["attempt"] + 1, r["buf"])
+                continue
+            l.settled[r["origin"]] = r
+        return progressed
+
+    def probe(self, l: Launch):
+        """stream.rs ``probe_and_replay``: an unsettled origin whose latest
+        dispatch stamp is no longer live died with its worker — respawn
+        the worker if it is dead on the current stamp, then replay."""
+        progressed = False
+        for origin in range(TILES):
+            if origin in l.settled:
+                continue
+            phys, inc, attempt = l.dispatches[origin]
+            w = self.workers[phys]
+            if w.quarantined or w.incarnation != inc:
+                lost = True
+            elif not w.alive:
+                incident = f"launch {l.id} tile {origin} attempt {attempt}: no reply from dead worker"
+                w.respawn(incident, self.respawn_limit, self.metrics)
+                lost = True
+            else:
+                lost = False  # alive on the stamped incarnation: still queued
+            if lost:
+                self.metrics["retries"] += 1
+                self.submit_tile(l, origin, attempt + 1, self.mint())
+                progressed = True
+        # The model's hang detector: a blocked leader must always find
+        # either a runnable job or a provably-lost dispatch.
+        assert progressed, f"launch {l.id}: probe found nothing lost while nothing can run"
+
+    # -- leader API -------------------------------------------------------
+    def check_live(self):
+        if self.poisoned:
+            raise Poisoned()
+
+    def enqueue(self, a: int, b: int, c: int):
+        self.check_live()
+        # hazard scan: drain through the last in-flight writer of {a,b,c}
+        last = None
+        for i, l in enumerate(self.inflight):
+            if l.c in (a, b, c):
+                last = i
+        if last is not None:
+            for _ in range(last + 1):
+                self.retire_one()
+        live = self.live()
+        if not live:
+            self.poisoned = True
+            raise NoSurvivors(self.next_launch)
+        lid = self.next_launch
+        self.next_launch += 1
+        snap = (self.bufs[a], self.bufs[b], self.bufs[c])
+        slots = list(live)  # degraded mode: one band slot per live CU
+        l = Launch(lid, a, b, c, snap, slots)
+        for origin in range(TILES):
+            self.submit_tile(l, origin, 0, self.mint())
+        self.inflight.append(l)
+        self.metrics["inflight_max"] = max(self.metrics["inflight_max"], len(self.inflight))
+        # random progress between enqueues: launches overlap in flight
+        for _ in range(self.rng.randrange(0, TILES * 2)):
+            if not self.worker_step():
+                break
+
+    def retire_one(self):
+        l = self.inflight[0]
+        while len(l.settled) < TILES:
+            if self.absorb(l):
+                continue
+            if self.worker_step():
+                continue
+            self.probe(l)
+        self.inflight.pop(0)
+        for r in l.settled.values():
+            self.give_back(r["buf"])
+        self.retired_order.append(l.id)
+        failed = [o for o, r in sorted(l.settled.items()) if r["err"]]
+        if failed:
+            self.errors.append(("LaunchFailed", l.id, len(failed)))
+            return
+        # read stability: every settled success observed the snapshot
+        for o, r in l.settled.items():
+            assert r["observed"] == l.snapshot, (
+                f"launch {l.id} tile {o} read {r['observed']}, snapshot {l.snapshot}")
+        vals = tuple(l.settled[o]["value"] for o in range(TILES))
+        self.bufs[l.c] = writeback_value(self.bufs[l.c], vals)
+
+    def wait(self):
+        self.check_live()
+        while self.inflight:
+            self.retire_one()
+
+    def check_conservation(self):
+        assert self.outstanding == self.lost_tokens, (
+            f"staging tokens leaked: out={self.outstanding - self.lost_tokens} "
+            f"ghost={self.lost_tokens - self.outstanding}")
+
+
+# ---------------------------------------------------------------------------
+# Directed scenarios: one per rung of the ladder
+# ---------------------------------------------------------------------------
+
+def test_transient_fail_retries_to_bit_identical_success():
+    gemms = [(0, 1, 2), (0, 1, 2)]  # a dependent chain through buffer 2
+    faults = {(0, 3): ("fail", 2)}  # two failed deliveries, third succeeds
+    s = StreamModel(cus=2, n_bufs=3, faults=faults, retry_limit=2)
+    for g in gemms:
+        s.enqueue(*g)
+    s.wait()
+    assert s.errors == []
+    assert s.bufs == serial_reference(3, gemms)
+    assert s.metrics["retries"] == 2
+    assert s.metrics["respawns"] == 0
+    s.check_conservation()
+
+
+def test_exhausted_retry_budget_is_launch_failed_not_poison():
+    faults = {(0, 0): ("fail", None)}  # every delivery fails
+    s = StreamModel(cus=2, n_bufs=6, faults=faults, retry_limit=2)
+    s.enqueue(0, 1, 2)
+    s.wait()
+    assert s.errors == [("LaunchFailed", 0, 1)]
+    assert s.bufs[2] == 0, "a failed launch writes nothing"
+    assert s.metrics["retries"] == 2, "redispatches stop at the budget"
+    # the stream stays usable
+    s.enqueue(3, 4, 5)
+    s.wait()
+    assert len(s.errors) == 1
+    s.check_conservation()
+
+
+def test_cu_death_respawns_and_completes_bit_identical():
+    gemms = [(0, 1, 2), (3, 4, 5)]  # disjoint: both pipeline in flight
+    faults = {(0, 1): ("die", 1)}  # first delivery of L0 tile 1 kills its CU
+    s = StreamModel(cus=2, n_bufs=6, faults=faults, retry_limit=2, respawn_limit=1,
+                    rng=random.Random(7))
+    for g in gemms:
+        s.enqueue(*g)
+    assert s.metrics["inflight_max"] >= 2
+    s.wait()
+    assert s.errors == []
+    assert s.bufs == serial_reference(6, gemms)
+    assert s.metrics["respawns"] == 1
+    assert s.metrics["quarantined_cus"] == 0
+    assert any(w.respawns == 1 for w in s.workers), "the ledger records the respawn"
+    s.check_conservation()
+
+
+def test_exhausted_respawn_budget_quarantines_and_degrades():
+    gemms = [(0, 1, 2), (2, 1, 3)]
+    faults = {(0, 2): ("die", 1)}
+    s = StreamModel(cus=2, n_bufs=4, faults=faults, respawn_limit=0, rng=random.Random(3))
+    for g in gemms:
+        s.enqueue(*g)
+    s.wait()
+    assert s.errors == []
+    assert s.bufs == serial_reference(4, gemms)
+    assert s.metrics["quarantined_cus"] == 1
+    assert s.metrics["respawns"] == 0
+    dead = [w for w in s.workers if w.quarantined]
+    assert len(dead) == 1 and dead[0].last_incident is not None
+    # degraded mode: exactly one survivor remains schedulable
+    assert len(s.live()) == 1
+    assert s.retired_order == [0, 1]
+    s.check_conservation()
+
+
+def test_zero_survivors_is_typed_then_poisoned():
+    faults = {(0, o): ("die", None) for o in range(TILES)}  # every tile kills
+    s = StreamModel(cus=2, n_bufs=3, faults=faults, respawn_limit=1, rng=random.Random(11))
+    s.enqueue(0, 1, 2)
+    with pytest.raises(NoSurvivors):
+        s.wait()
+    assert s.poisoned
+    with pytest.raises(Poisoned):
+        s.enqueue(0, 1, 2)
+    with pytest.raises(Poisoned):
+        s.wait()
+    assert all(w.quarantined for w in s.workers)
+    s.check_conservation()
+
+
+# ---------------------------------------------------------------------------
+# Randomized schedules: the protocol under fuzzed interleavings
+# ---------------------------------------------------------------------------
+
+def random_scenario(rng: random.Random):
+    """A random op list plus faults guaranteed to stay inside budgets:
+    transient fails within retry_limit, each die-fault kills exactly once
+    (first delivery), respawn budget sized to the death count."""
+    n_bufs = rng.randrange(4, 8)
+    n_launches = rng.randrange(2, 6)
+    gemms = []
+    for _ in range(n_launches):
+        a, b = rng.randrange(n_bufs), rng.randrange(n_bufs)
+        c = rng.randrange(n_bufs)
+        gemms.append((a, b, c))
+    retry_limit = rng.randrange(1, 4)
+    faults = {}
+    deaths = 0
+    for lid in range(n_launches):
+        for origin in range(TILES):
+            roll = rng.random()
+            if roll < 0.08:
+                faults[(lid, origin)] = ("fail", rng.randrange(1, retry_limit + 1))
+            elif roll < 0.12:
+                faults[(lid, origin)] = ("die", 1)
+                deaths += 1
+    return n_bufs, gemms, retry_limit, faults, deaths
+
+
+@pytest.mark.parametrize("seed", range(40))
+def test_randomized_schedules_heal_to_bit_identical(seed):
+    rng = random.Random(seed * 7919 + 13)
+    n_bufs, gemms, retry_limit, faults, deaths = random_scenario(rng)
+    s = StreamModel(cus=rng.randrange(1, 4), n_bufs=n_bufs, faults=faults,
+                    retry_limit=retry_limit, respawn_limit=deaths, rng=rng)
+    for g in gemms:
+        s.enqueue(*g)
+    s.wait()
+    assert s.errors == [], f"budgeted faults must heal silently: {s.errors}"
+    assert s.bufs == serial_reference(n_bufs, gemms), (
+        f"seed {seed}: healed run diverged from the serial reference")
+    assert s.retired_order == sorted(s.retired_order), "retirement must stay FIFO"
+    assert s.metrics["respawns"] + s.metrics["quarantined_cus"] <= deaths
+    s.check_conservation()
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_randomized_quarantine_degrades_but_stays_bit_identical(seed):
+    """Zero respawn budget: every death quarantines, yet as long as one CU
+    survives, every launch must still complete bit-identically."""
+    rng = random.Random(seed * 104729 + 7)
+    cus = rng.randrange(2, 5)
+    n_bufs, gemms, retry_limit, faults, _ = random_scenario(rng)
+    # keep at least one survivor: strictly fewer die-faults than CUs
+    dies = [key for key, (kind, _) in faults.items() if kind == "die"]
+    for key in dies[max(0, cus - 1):]:
+        del faults[key]
+    s = StreamModel(cus=cus, n_bufs=n_bufs, faults=faults,
+                    retry_limit=retry_limit, respawn_limit=0, rng=rng)
+    for g in gemms:
+        s.enqueue(*g)
+    s.wait()
+    assert s.errors == []
+    assert s.bufs == serial_reference(n_bufs, gemms)
+    assert s.metrics["quarantined_cus"] <= max(0, cus - 1)
+    assert s.live(), "at least one CU must survive by construction"
+    assert s.retired_order == sorted(s.retired_order)
+    s.check_conservation()

@@ -98,4 +98,12 @@ fn main() {
         rounds * (chain as u64 - 1),
         "stream must reuse the cached grid for every later enqueue"
     );
+    // And the healing ladder stays untouched on a fault-free device: both
+    // paths ran every launch first-try on the original worker incarnations.
+    let end = dev.metrics();
+    assert_eq!(
+        (end.retries, end.respawns, end.quarantined_cus),
+        (0, 0, 0),
+        "a fault-free bench must never retry, respawn, or quarantine"
+    );
 }

@@ -62,6 +62,11 @@ fn main() {
         dep_metrics.inflight_max, 1,
         "a dependent chain must drain between launches (RAW hazard)"
     );
+    assert_eq!(
+        (dep_metrics.retries, dep_metrics.respawns, dep_metrics.quarantined_cus),
+        (0, 0, 0),
+        "a fault-free run must never touch the healing ladder"
+    );
 
     // -- independent launches: disjoint C buffers stay in flight ----------
     let dev_ind = Device::new(cfg.clone(), &dir).expect("native device");
@@ -81,6 +86,11 @@ fn main() {
         ind_metrics.inflight_max >= 2,
         "independent launches must overlap (got inflight_max {})",
         ind_metrics.inflight_max
+    );
+    assert_eq!(
+        (ind_metrics.retries, ind_metrics.respawns, ind_metrics.quarantined_cus),
+        (0, 0, 0),
+        "pipelined fault-free launches must never touch the healing ladder"
     );
 
     println!("{}", dependent.report());

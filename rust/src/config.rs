@@ -13,6 +13,10 @@
 //! | `APFP_MULT_BASE_BITS`   | `mult_base_bits` | —                      |
 //! | `APFP_ADD_BASE_BITS`    | `add_base_bits`  | —                      |
 //! | —                       | `backend`        | `APFP_BACKEND`         |
+//! | —                       | `reply_timeout`  | `APFP_REPLY_TIMEOUT_MS`|
+//! | —                       | `retry.retry_limit`   | `APFP_RETRY_LIMIT` |
+//! | —                       | `retry.backoff_ms`    | `APFP_RETRY_BACKOFF_MS` |
+//! | —                       | `retry.respawn_limit` | `APFP_RESPAWN_LIMIT` |
 //!
 //! The tile fields shape the **builtin GEMM artifact** end to end: they
 //! flow through [`crate::runtime::manifest::builtin`] into the scheduler's
@@ -35,6 +39,7 @@
 //! ```
 
 use std::path::Path;
+use std::time::Duration;
 
 use crate::runtime::manifest::TileShape;
 use crate::runtime::BackendKind;
@@ -73,14 +78,25 @@ pub struct FaultSpec {
     /// Inject a failure on the output tile with this `(row, column)`
     /// origin, on whichever CU owns it.
     pub fail_tile: Option<(usize, usize)>,
+    /// Make the injected tile fault *transient*: only the first `K`
+    /// delivery attempts of [`Self::fail_tile`] fail, later attempts
+    /// succeed (`fail_tile=RxC*K`).  `None` means every attempt fails —
+    /// the pre-retry behavior.
+    pub fail_attempts: Option<u32>,
     /// Make the injected tile fault a panic (exercising the worker's
     /// catch-and-reply containment) instead of a returned error.
     pub panic_tile: bool,
     /// Kill the worker thread (it exits without replying or draining its
     /// queue) when it receives the tile with this `(row, column)` origin —
     /// models a crashed CU, exercising the stream's reply-liveness
-    /// detection and poisoning instead of a hang.
+    /// detection and the supervisor's respawn path.
     pub die_on_tile: Option<(usize, usize)>,
+    /// Respawn-compatible variant of [`Self::die_on_tile`]: only the first
+    /// `K` delivery attempts kill the worker (`die_on_tile=RxC*K`), so a
+    /// respawned CU replaying the tile at a higher attempt survives.
+    /// `None` means every delivery kills — respawns die again until the
+    /// budget quarantines the CU.
+    pub die_attempts: Option<u32>,
 }
 
 /// `"ROWxCOL"` → `(row, col)`, e.g. `"2x3"`; `None` when malformed.
@@ -89,15 +105,33 @@ fn parse_tile_origin(v: &str) -> Option<(usize, usize)> {
     Some((r.trim().parse().ok()?, c.trim().parse().ok()?))
 }
 
+/// `"ROWxCOL"` or `"ROWxCOL*K"` → `((row, col), attempts)`: the origin of
+/// an injected tile fault plus the optional transient-attempt count (fail
+/// the first `K` deliveries, then succeed).  `None` when malformed; a
+/// literal `*0` is malformed too — "fail zero attempts" spells no fault.
+fn parse_tile_fault(v: &str) -> Option<((usize, usize), Option<u32>)> {
+    match v.split_once('*') {
+        None => Some((parse_tile_origin(v)?, None)),
+        Some((origin, k)) => {
+            let k: u32 = k.trim().parse().ok()?;
+            (k > 0).then_some(())?;
+            Some((parse_tile_origin(origin)?, Some(k)))
+        }
+    }
+}
+
 impl FaultSpec {
     /// Parse the comma-separated fault-spec string the failure-injection
     /// harnesses use, e.g. `"init_fail_cu=1,fail_tile=2x3,panic_tile"`:
     ///
     /// * `init_fail_cu=<cu>` — fail `Runtime` construction on that CU
-    /// * `fail_tile=<row>x<col>` — error the tile at that origin
+    /// * `fail_tile=<row>x<col>[*<k>]` — error the tile at that origin;
+    ///   with `*<k>`, only its first `<k>` delivery attempts (transient)
     /// * `panic_tile` (or `panic_tile=true|false`) — make the injected
     ///   fault a panic instead of a returned error
-    /// * `die_on_tile=<row>x<col>` — kill the owning worker reply-less
+    /// * `die_on_tile=<row>x<col>[*<k>]` — kill the owning worker
+    ///   reply-less; with `*<k>`, only on its first `<k>` deliveries (so
+    ///   a respawned CU survives the replay)
     ///
     /// Unknown keys and malformed counts are typed [`ConfigError`]s.  This
     /// is deliberately *not* wired to any `APFP_*` variable read by
@@ -123,10 +157,14 @@ impl FaultSpec {
                     f.init_fail_cu = Some(v.parse().map_err(|_| invalid())?)
                 }
                 ("fail_tile", Some(v)) => {
-                    f.fail_tile = Some(parse_tile_origin(v).ok_or_else(invalid)?)
+                    let (origin, attempts) = parse_tile_fault(v).ok_or_else(invalid)?;
+                    f.fail_tile = Some(origin);
+                    f.fail_attempts = attempts;
                 }
                 ("die_on_tile", Some(v)) => {
-                    f.die_on_tile = Some(parse_tile_origin(v).ok_or_else(invalid)?)
+                    let (origin, attempts) = parse_tile_fault(v).ok_or_else(invalid)?;
+                    f.die_on_tile = Some(origin);
+                    f.die_attempts = attempts;
                 }
                 ("panic_tile", None) => f.panic_tile = true,
                 ("panic_tile", Some(v)) => {
@@ -141,6 +179,71 @@ impl FaultSpec {
             }
         }
         Ok(f)
+    }
+
+    /// True when the injected tile *error* fires for the 0-based delivery
+    /// `attempt` of the tile at `origin`.  Attempt counting is carried in
+    /// the job itself, so the predicate is deterministic across retries,
+    /// replays, and respawned workers.
+    pub fn tile_fails(&self, origin: (usize, usize), attempt: u32) -> bool {
+        self.fail_tile == Some(origin)
+            && match self.fail_attempts {
+                Some(k) => attempt < k,
+                None => true,
+            }
+    }
+
+    /// True when the injected worker *death* fires for the 0-based
+    /// delivery `attempt` of the tile at `origin`.
+    pub fn tile_kills(&self, origin: (usize, usize), attempt: u32) -> bool {
+        self.die_on_tile == Some(origin)
+            && match self.die_attempts {
+                Some(k) => attempt < k,
+                None => true,
+            }
+    }
+}
+
+/// Bounded-retry and respawn budgets for the self-healing stream: how many
+/// times a failed tile job is redispatched, how long to back off between
+/// redispatches, and how many times a dead compute unit is respawned
+/// before it is quarantined (see `docs/ARCHITECTURE.md` § Failure
+/// recovery).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Redispatches allowed per tile beyond its first attempt: a tile is
+    /// delivered at most `retry_limit + 1` times before its error
+    /// surfaces in [`LaunchFailed`](crate::coordinator::StreamError).
+    /// `0` restores fail-fast.
+    pub retry_limit: u32,
+    /// Base backoff before redispatch `n` (1-based): `backoff_ms << (n-1)`
+    /// milliseconds, capped at [`RetryPolicy::BACKOFF_CAP_MS`].  `0`
+    /// disables the sleep entirely (what the fault tests use).
+    pub backoff_ms: u64,
+    /// Respawns allowed per compute unit before the supervisor quarantines
+    /// it and the stream rebalances onto the survivors.  `0` quarantines
+    /// on the first death.
+    pub respawn_limit: u32,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        // one transient hiccup per tile absorbed twice over, a millisecond
+        // of first backoff, and one free respawn per CU — conservative
+        // enough that a hard fault still surfaces in well under a second
+        RetryPolicy { retry_limit: 2, backoff_ms: 1, respawn_limit: 1 }
+    }
+}
+
+impl RetryPolicy {
+    /// Ceiling on a single exponential-backoff sleep.
+    pub const BACKOFF_CAP_MS: u64 = 1_000;
+
+    /// Sleep before 1-based redispatch `n`: bounded exponential backoff,
+    /// `Duration::ZERO` when [`Self::backoff_ms`] is zero.
+    pub fn backoff(&self, n: u32) -> Duration {
+        let shift = n.saturating_sub(1).min(20);
+        Duration::from_millis((self.backoff_ms << shift).min(Self::BACKOFF_CAP_MS))
     }
 }
 
@@ -166,6 +269,14 @@ pub struct ApfpConfig {
     /// in-process executor (default; works on a clean checkout) or the
     /// XLA/PJRT artifact path.
     pub backend: BackendKind,
+    /// How long a stream drain waits between reply-liveness probes of the
+    /// owing worker threads (`APFP_REPLY_TIMEOUT_MS`): a dead CU is
+    /// detected within one interval.  Widen it on slow CI machines;
+    /// narrow it in fault tests that drive the respawn ladder.
+    pub reply_timeout: Duration,
+    /// Tile-retry and CU-respawn budgets for the self-healing stream
+    /// (`APFP_RETRY_LIMIT`, `APFP_RETRY_BACKOFF_MS`, `APFP_RESPAWN_LIMIT`).
+    pub retry: RetryPolicy,
     /// Test-only failure injection (see [`FaultSpec`]); no faults by
     /// default and not settable from files or the environment.
     pub faults: FaultSpec,
@@ -188,6 +299,8 @@ impl Default for ApfpConfig {
             add_base_bits: 64,
             worker_threads: 0, // 0 = one per compute unit
             backend: BackendKind::from_env(),
+            reply_timeout: Duration::from_millis(250),
+            retry: RetryPolicy::default(),
             faults: FaultSpec::default(),
         }
     }
@@ -224,6 +337,11 @@ impl ApfpConfig {
         if self.add_base_bits == 0 {
             return err("add_base_bits must be >= 1".into());
         }
+        // a zero probe interval would spin the drain loop hot and flag
+        // every in-flight worker as overdue on the first poll
+        if self.reply_timeout.is_zero() {
+            return err("reply_timeout must be > 0".into());
+        }
         Ok(())
     }
 
@@ -254,6 +372,19 @@ impl ApfpConfig {
             "backend" | "APFP_BACKEND" => {
                 self.backend = BackendKind::parse(value).ok_or_else(invalid)?
             }
+            "reply_timeout_ms" | "APFP_REPLY_TIMEOUT_MS" => {
+                self.reply_timeout =
+                    Duration::from_millis(value.parse().map_err(|_| invalid())?)
+            }
+            "retry_limit" | "APFP_RETRY_LIMIT" => {
+                self.retry.retry_limit = value.parse().map_err(|_| invalid())?
+            }
+            "retry_backoff_ms" | "APFP_RETRY_BACKOFF_MS" => {
+                self.retry.backoff_ms = value.parse().map_err(|_| invalid())?
+            }
+            "respawn_limit" | "APFP_RESPAWN_LIMIT" => {
+                self.retry.respawn_limit = value.parse().map_err(|_| invalid())?
+            }
             _ => return Err(ConfigError::UnknownKey(key.into())),
         }
         Ok(())
@@ -281,6 +412,27 @@ impl ApfpConfig {
         if let Some(v) = lookup("APFP_BACKEND") {
             cfg.backend =
                 BackendKind::parse(&v).ok_or_else(|| malformed("APFP_BACKEND", v.clone()))?;
+        }
+        if let Some(v) = lookup("APFP_REPLY_TIMEOUT_MS") {
+            let ms: u64 = v
+                .trim()
+                .parse()
+                .map_err(|_| malformed("APFP_REPLY_TIMEOUT_MS", v.clone()))?;
+            cfg.reply_timeout = Duration::from_millis(ms);
+        }
+        if let Some(v) = lookup("APFP_RETRY_LIMIT") {
+            cfg.retry.retry_limit =
+                v.trim().parse().map_err(|_| malformed("APFP_RETRY_LIMIT", v.clone()))?;
+        }
+        if let Some(v) = lookup("APFP_RETRY_BACKOFF_MS") {
+            cfg.retry.backoff_ms = v
+                .trim()
+                .parse()
+                .map_err(|_| malformed("APFP_RETRY_BACKOFF_MS", v.clone()))?;
+        }
+        if let Some(v) = lookup("APFP_RESPAWN_LIMIT") {
+            cfg.retry.respawn_limit =
+                v.trim().parse().map_err(|_| malformed("APFP_RESPAWN_LIMIT", v.clone()))?;
         }
         // the threshold lives in a process-wide OnceLock, not in the
         // config; strict mode still rejects a malformed override so it
@@ -505,6 +657,101 @@ mod tests {
                 "{bad:?} must be rejected"
             );
         }
+    }
+
+    #[test]
+    fn fault_spec_parses_transient_forms() {
+        // fail_tile=RxC*K: fail the first K attempts, then succeed
+        let f = FaultSpec::parse("fail_tile=2x3*2").unwrap();
+        assert_eq!(f.fail_tile, Some((2, 3)));
+        assert_eq!(f.fail_attempts, Some(2));
+        assert!(f.tile_fails((2, 3), 0) && f.tile_fails((2, 3), 1));
+        assert!(!f.tile_fails((2, 3), 2), "attempt K succeeds");
+        assert!(!f.tile_fails((0, 0), 0), "other origins never fault");
+        // die_on_tile=RxC*K: the respawn-compatible death
+        let f = FaultSpec::parse("die_on_tile=0x4*1").unwrap();
+        assert_eq!(f.die_on_tile, Some((0, 4)));
+        assert_eq!(f.die_attempts, Some(1));
+        assert!(f.tile_kills((0, 4), 0));
+        assert!(!f.tile_kills((0, 4), 1), "the respawned CU survives the replay");
+        // without *K every attempt faults — the pre-retry behavior
+        let f = FaultSpec::parse("fail_tile=1x1,die_on_tile=1x2").unwrap();
+        assert_eq!((f.fail_attempts, f.die_attempts), (None, None));
+        for attempt in [0, 1, 7] {
+            assert!(f.tile_fails((1, 1), attempt));
+            assert!(f.tile_kills((1, 2), attempt));
+        }
+    }
+
+    #[test]
+    fn fault_spec_rejects_malformed_transient_counts() {
+        for bad in [
+            "fail_tile=2x3*",    // empty count
+            "fail_tile=2x3*abc", // non-numeric count
+            "fail_tile=2x3*0",   // "fail zero attempts" spells no fault
+            "fail_tile=*2",      // count without an origin
+            "die_on_tile=2*2",   // origin missing its column
+            "die_on_tile=2x3*-1",
+        ] {
+            assert!(
+                matches!(FaultSpec::parse(bad), Err(ConfigError::InvalidValue { .. })),
+                "{bad:?} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn retry_policy_backoff_is_bounded_exponential() {
+        let p = RetryPolicy { retry_limit: 3, backoff_ms: 2, respawn_limit: 1 };
+        assert_eq!(p.backoff(1), Duration::from_millis(2));
+        assert_eq!(p.backoff(2), Duration::from_millis(4));
+        assert_eq!(p.backoff(3), Duration::from_millis(8));
+        // the cap holds even past the shift guard
+        assert_eq!(p.backoff(40), Duration::from_millis(RetryPolicy::BACKOFF_CAP_MS));
+        // zero base disables the sleep entirely (fault-test mode)
+        let p = RetryPolicy { backoff_ms: 0, ..p };
+        assert_eq!(p.backoff(1), Duration::ZERO);
+        assert_eq!(p.backoff(40), Duration::ZERO);
+    }
+
+    #[test]
+    fn retry_and_timeout_env_overrides_parse_strictly() {
+        let c = ApfpConfig::try_from_env_with(env_of(&[
+            ("APFP_REPLY_TIMEOUT_MS", "25"),
+            ("APFP_RETRY_LIMIT", "5"),
+            ("APFP_RETRY_BACKOFF_MS", "0"),
+            ("APFP_RESPAWN_LIMIT", "3"),
+        ]))
+        .unwrap();
+        assert_eq!(c.reply_timeout, Duration::from_millis(25));
+        assert_eq!(c.retry.retry_limit, 5);
+        assert_eq!(c.retry.backoff_ms, 0);
+        assert_eq!(c.retry.respawn_limit, 3);
+        for key in
+            ["APFP_REPLY_TIMEOUT_MS", "APFP_RETRY_LIMIT", "APFP_RETRY_BACKOFF_MS", "APFP_RESPAWN_LIMIT"]
+        {
+            let err = ApfpConfig::try_from_env_with(env_of(&[(key, "soon")]))
+                .expect_err("malformed override must fail strictly");
+            assert!(
+                matches!(&err, ConfigError::MalformedEnv { key: k, value } if k == key && value == "soon"),
+                "{key}: {err:?}"
+            );
+        }
+        // a zero probe interval parses but fails validation
+        let err = ApfpConfig::try_from_env_with(env_of(&[("APFP_REPLY_TIMEOUT_MS", "0")]))
+            .expect_err("zero reply timeout must fail validation");
+        assert!(matches!(err, ConfigError::Invalid(_)), "{err:?}");
+        // set() accepts both naming schemes for the new knobs
+        let mut c = ApfpConfig::default();
+        c.set("reply_timeout_ms", "40").unwrap();
+        c.set("APFP_RETRY_LIMIT", "1").unwrap();
+        c.set("retry_backoff_ms", "7").unwrap();
+        c.set("APFP_RESPAWN_LIMIT", "0").unwrap();
+        assert_eq!(c.reply_timeout, Duration::from_millis(40));
+        assert_eq!(
+            c.retry,
+            RetryPolicy { retry_limit: 1, backoff_ms: 7, respawn_limit: 0 }
+        );
     }
 
     #[test]

@@ -19,7 +19,7 @@ use anyhow::{anyhow, Context, Result};
 use super::matrix::Matrix;
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::stream::DeviceStream;
-use super::worker::{Job, StreamKind, WorkerHandle};
+use super::worker::{CuHealth, Job, StreamKind, Supervisor};
 use crate::config::ApfpConfig;
 use crate::hwmodel::floorplan::{self, Placement};
 use crate::pack::PlaneBatch;
@@ -27,7 +27,11 @@ use crate::runtime::{self, manifest, ArtifactKind};
 
 pub struct Device {
     pub(super) config: ApfpConfig,
-    pub(super) workers: Vec<WorkerHandle>,
+    /// One supervised worker per compute unit.  Supervision keeps the
+    /// handle replaceable: a stream that detects a dead CU asks its
+    /// supervisor to respawn (or quarantine) it without tearing the
+    /// device down.
+    pub(super) workers: Vec<Supervisor>,
     pub(super) placements: Vec<Placement>,
     pub(super) metrics: Arc<Metrics>,
     pub(super) artifacts: Vec<manifest::ArtifactMeta>,
@@ -57,13 +61,14 @@ impl Device {
         let cus = config.compute_units;
         let workers = (0..cus)
             .map(|cu| {
-                WorkerHandle::spawn(
+                Supervisor::spawn(
                     cu,
                     artifact_dir.to_path_buf(),
                     config.backend,
                     config.tile_shape(),
                     config.faults,
                     metrics.clone(),
+                    config.retry.respawn_limit,
                 )
             })
             .collect::<std::io::Result<Vec<_>>>()
@@ -88,6 +93,12 @@ impl Device {
 
     pub fn metrics(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
+    }
+
+    /// The per-CU health ledger: respawn counts, quarantine flags, and
+    /// the most recent incident per compute unit.
+    pub fn health(&self) -> Vec<CuHealth> {
+        self.workers.iter().map(Supervisor::health).collect()
     }
 
     /// Allocate a zeroed host-side matrix at the device precision.
@@ -168,9 +179,13 @@ impl Device {
             anyhow::ensure!(o.len() == len, "stream operand lengths differ");
         }
         let prec = self.config.prec();
-        // partition the stream across CUs (the paper "partitions the input
-        // problem across the replications")
-        let chunk = len.div_ceil(self.workers.len()).max(1);
+        // partition the stream across the *live* CUs (the paper
+        // "partitions the input problem across the replications");
+        // quarantined units take no further work
+        let live: Vec<usize> =
+            (0..self.workers.len()).filter(|&i| !self.workers[i].is_quarantined()).collect();
+        anyhow::ensure!(!live.is_empty(), "every compute unit is quarantined");
+        let chunk = len.div_ceil(live.len()).max(1);
         let (reply_tx, reply_rx) = channel();
         let mut pending = 0;
         for (w, start) in (0..len).step_by(chunk).enumerate() {
@@ -179,7 +194,7 @@ impl Device {
                 .iter()
                 .map(|o| PlaneBatch::from_slice(&o[start..end], prec))
                 .collect();
-            let cu = w % self.workers.len();
+            let cu = live[w % live.len()];
             let job = Job::Stream {
                 artifact: artifact.clone(),
                 kind: stream_kind,

@@ -33,6 +33,13 @@ pub struct Metrics {
     pub drain_ns: AtomicU64,
     /// Launches retired (drained and written back, or failed cleanly).
     pub launches: AtomicU64,
+    /// Tile jobs redispatched after a failed/panicked attempt or a lost
+    /// dispatch (self-healing retry arms; 0 on every healthy path).
+    pub retries: AtomicU64,
+    /// Dead compute units brought back with a fresh worker + runtime.
+    pub respawns: AtomicU64,
+    /// Compute units quarantined after exhausting their respawn budget.
+    pub quarantined_cus: AtomicU64,
 }
 
 impl Metrics {
@@ -85,6 +92,18 @@ impl Metrics {
         self.launches.fetch_add(n, Ordering::Relaxed);
     }
 
+    pub fn add_retries(&self, n: u64) {
+        self.retries.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_respawns(&self, n: u64) {
+        self.respawns.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_quarantined(&self, n: u64) {
+        self.quarantined_cus.fetch_add(n, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             tiles: self.tiles.load(Ordering::Relaxed),
@@ -98,6 +117,9 @@ impl Metrics {
             inflight_max: self.inflight_max.load(Ordering::Relaxed),
             drain_ns: self.drain_ns.load(Ordering::Relaxed),
             launches: self.launches.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            respawns: self.respawns.load(Ordering::Relaxed),
+            quarantined_cus: self.quarantined_cus.load(Ordering::Relaxed),
         }
     }
 }
@@ -115,6 +137,9 @@ pub struct MetricsSnapshot {
     pub inflight_max: u64,
     pub drain_ns: u64,
     pub launches: u64,
+    pub retries: u64,
+    pub respawns: u64,
+    pub quarantined_cus: u64,
 }
 
 impl MetricsSnapshot {
@@ -155,12 +180,16 @@ mod tests {
         m.add_panel_reuses(4);
         m.add_drain_ns(500);
         m.add_launches(2);
+        m.add_retries(3);
+        m.add_respawns(1);
+        m.add_quarantined(1);
         let s = m.snapshot();
         assert_eq!(s.tiles, 5);
         assert_eq!(s.artifact_calls, 7);
         assert_eq!(s.macs, 1000);
         assert_eq!((s.enqueues, s.panel_builds, s.panel_reuses), (2, 1, 4));
         assert_eq!((s.drain_ns, s.launches), (500, 2));
+        assert_eq!((s.retries, s.respawns, s.quarantined_cus), (3, 1, 1));
         assert!((s.drain_ns_per_launch() - 250.0).abs() < 1e-12);
         assert_eq!(Metrics::new().snapshot().drain_ns_per_launch(), 0.0);
     }

@@ -18,7 +18,12 @@
 //! * [`worker`] — one OS thread per compute unit, each owning its own
 //!   [`crate::runtime::Runtime`] on the configured backend and tile
 //!   geometry (its own "circuit replica") and executing tile jobs from a
-//!   bounded queue (backpressure);
+//!   bounded queue (backpressure).  Each worker is held through a
+//!   [`worker::Supervisor`]: a dead thread is respawned with a fresh
+//!   runtime (up to its respawn budget, then quarantined), every incident
+//!   lands in the per-CU health ledger ([`worker::CuHealth`], surfaced by
+//!   [`device::Device::health`]), and the stream schedules around
+//!   quarantined units instead of failing;
 //! * [`scheduler`] — the §III work partition: output rows are split into
 //!   N/P bands (one per CU), each band is tiled T_N x T_M with edge tiles
 //!   clipped in every dimension, and every tile accumulates over K in
@@ -42,3 +47,4 @@ pub mod worker;
 pub use device::{Device, GemmStats};
 pub use matrix::Matrix;
 pub use stream::{BufId, DeviceStream, StreamError};
+pub use worker::{CuHealth, RespawnOutcome};

@@ -103,6 +103,18 @@ impl Partition {
         (0..self.compute_units).flat_map(|cu| self.tiles_for(cu)).collect()
     }
 
+    /// The degraded-mode partition after quarantining one compute unit:
+    /// the same problem re-banded across one fewer CU, so the survivors
+    /// absorb the quarantined unit's rows.  Band slots are positional —
+    /// the stream maps slot -> live physical CU separately — so `cu`
+    /// names *which* unit left for the record, without changing the
+    /// resulting geometry.  Excluding the last CU saturates at one band:
+    /// reachability of the zero-survivor state is the stream's decision
+    /// (`Poisoned`), not the scheduler's.
+    pub fn excluding(&self, _cu: usize) -> Partition {
+        Partition { compute_units: (self.compute_units - 1).max(1), ..*self }
+    }
+
     /// Total artifact invocations for the whole GEMM.
     pub fn total_calls(&self) -> usize {
         self.all_tiles().len() * self.k_steps()
@@ -227,6 +239,30 @@ mod tests {
         assert_eq!(p1.tiles_for(0).len(), 64);
         assert_eq!(p4.tiles_for(0).len(), 16);
         assert_eq!(p1.total_calls(), p4.total_calls());
+    }
+
+    #[test]
+    fn excluding_rebalances_onto_survivors() {
+        for (n, m, p) in [(20usize, 20usize, 3usize), (65, 16, 4), (9, 8, 2)] {
+            let pt = part(n, m, 16, p);
+            let degraded = pt.excluding(p - 1);
+            assert_eq!(degraded.compute_units, p - 1);
+            // the survivors' bands still cover every output row exactly once
+            let mut covered = vec![0u32; n];
+            for cu in 0..degraded.compute_units {
+                let (s, e) = degraded.band(cu);
+                for r in s..e {
+                    covered[r] += 1;
+                }
+            }
+            assert!(covered.iter().all(|&c| c == 1), "degraded bands must re-cover (n={n} p={p})");
+            // and the tile count matches its own enumeration (reply sizing)
+            assert_eq!(degraded.total_tiles(), degraded.all_tiles().len());
+        }
+        // excluding the last CU saturates: the scheduler never produces a
+        // zero-band partition (zero survivors is the stream's poison case)
+        let pt = part(8, 8, 8, 1);
+        assert_eq!(pt.excluding(0).compute_units, 1);
     }
 
     #[test]

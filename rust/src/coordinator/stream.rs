@@ -32,22 +32,38 @@
 //! reads pre-launch buffer contents and stays bit-identical to
 //! [`crate::baseline::gemm_serial`] (`tests/tile_property.rs`).
 //!
-//! # Failure semantics
+//! # Failure semantics: the self-healing ladder
 //!
-//! No stream failure path panics; everything surfaces as a typed
-//! [`StreamError`]:
+//! No stream failure path panics; failures climb a recovery ladder
+//! (retry → respawn → quarantine → poison, see `docs/ARCHITECTURE.md`
+//! § Failure recovery) and only the last rung surfaces as an error:
 //!
-//! * a launch with failed tiles (a backend error, a caught worker panic, a
-//!   CU whose runtime never came up) drains **completely** — every pooled
-//!   staging buffer is recovered — writes **nothing** (C keeps its
-//!   pre-launch contents), and reports every failed tile in one
-//!   [`StreamError::LaunchFailed`];
+//! * a **failed/panicked tile** is redispatched up to
+//!   [`RetryPolicy::retry_limit`](crate::config::RetryPolicy) times with
+//!   bounded exponential backoff — a transient fault is invisible to the
+//!   caller; only a tile that exhausts its retries settles as a failure,
+//!   and then the launch drains **completely** — every pooled staging
+//!   buffer is recovered — writes **nothing** (C keeps its pre-launch
+//!   contents), and reports every exhausted tile in one
+//!   [`StreamError::LaunchFailed`] (the stream stays usable);
+//! * a **dead worker thread** (detected by the reply-liveness probe, or
+//!   by a failed submit) is respawned with a fresh runtime through its
+//!   CU's [`Supervisor`](super::worker::Supervisor), the incident is
+//!   recorded in the per-CU health ledger, and the dead worker's un-acked
+//!   dispatches are replayed — every dispatch is stamped with the worker
+//!   *incarnation* it was submitted to, so any launch can tell its lost
+//!   jobs from its slow ones;
+//! * a CU that **exhausts its respawn budget is quarantined**: new
+//!   launches re-band across the survivors
+//!   ([`Partition::excluding`](super::scheduler::Partition::excluding)),
+//!   in-flight tiles re-route to live CUs, and the device keeps serving
+//!   at reduced throughput;
 //! * a handle minted by another stream is rejected up front
 //!   ([`StreamError::ForeignHandle`]) — [`BufId`]s are stamped with their
 //!   stream's token, so a foreign handle can never index the wrong buffer;
-//! * the unrecoverable cases — a worker thread that vanished, a reply
-//!   channel that died mid-drain — poison the stream: the failing call
-//!   returns the root error and every later call returns
+//! * only the bottom of the ladder poisons: **zero surviving CUs**
+//!   ([`StreamError::NoSurvivors`]) or a broken internal invariant.  The
+//!   failing call returns the root error and every later call returns
 //!   [`StreamError::Poisoned`] instead of hanging or panicking.
 //!
 //! # What makes a warm stream cheap
@@ -97,14 +113,14 @@ use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use super::device::Device;
 use super::matrix::Matrix;
 use super::scheduler::{Partition, Tile};
-use super::worker::{Job, TileResult};
+use super::worker::{Job, RespawnOutcome, TileResult};
 use crate::pack::{PlaneBatch, PlanePanel};
 use crate::runtime::ArtifactMeta;
 
@@ -126,21 +142,25 @@ pub enum StreamError {
     /// the stream token check makes this unreachable through the API).
     #[error("unknown device buffer id {index}")]
     UnknownBuffer { index: usize },
-    /// One or more tiles of a launch failed.  The launch drained fully,
-    /// recovered its pooled staging buffers, and wrote **nothing** — the
-    /// C buffer keeps its pre-launch contents — and `tiles` lists every
-    /// failed tile.  The stream stays usable.
+    /// One or more tiles of a launch exhausted their retry budget.  The
+    /// launch drained fully, recovered its pooled staging buffers, and
+    /// wrote **nothing** — the C buffer keeps its pre-launch contents —
+    /// and `tiles` lists every exhausted tile.  The stream stays usable.
     #[error("launch {launch}: {failed} of {total} tiles failed; C left unchanged: {tiles}")]
     LaunchFailed { launch: u64, failed: usize, total: usize, tiles: String },
-    /// The reply channel disconnected with tile results still outstanding
-    /// (a worker thread died mid-launch).  The launch cannot complete, so
-    /// the stream is poisoned.
+    /// The reply channel disconnected with tile results still outstanding.
+    /// Defensive: the leader holds a sender, so this means the channel
+    /// state itself broke.  The stream is poisoned.
     #[error("launch {launch}: reply channel closed with {missing} of {total} tiles outstanding")]
     ReplyLost { launch: u64, missing: usize, total: usize },
-    /// A compute unit's job queue is gone (its worker thread exited), so
-    /// the launch could not be fully submitted.  The stream is poisoned.
-    #[error("compute unit {cu} is gone (worker thread exited); launch {launch} not submitted")]
-    WorkerGone { cu: usize, launch: u64 },
+    /// Every compute unit is quarantined (all respawn budgets exhausted),
+    /// so no survivor can take the launch's tiles.  The bottom of the
+    /// recovery ladder: the stream is poisoned.
+    #[error(
+        "launch {launch}: zero of {total} compute units survive (all quarantined); \
+         the stream is poisoned"
+    )]
+    NoSurvivors { launch: u64, total: usize },
     /// An internal invariant broke (a drained launch left a live buffer
     /// reference).  The stream is poisoned.
     #[error("stream invariant broken: {what}; the stream is poisoned")]
@@ -178,15 +198,6 @@ fn join_failures(mut errs: Vec<StreamError>) -> Option<StreamError> {
 
 /// Source of unique per-stream tokens stamped into [`BufId`]s.
 static NEXT_STREAM_TOKEN: AtomicU64 = AtomicU64::new(1);
-
-/// How long a reply may be overdue before the drain loop probes worker
-/// liveness.  A live worker always replies eventually (replies are sent
-/// for errors and caught panics too), so the probe only matters when a
-/// worker thread died reply-less — the timeout bounds how long that takes
-/// to surface as [`StreamError::ReplyLost`] instead of a hang.  Slow but
-/// live workers are unaffected: every timeout with all threads alive just
-/// keeps waiting.
-const REPLY_LIVENESS_INTERVAL: Duration = Duration::from_millis(250);
 
 /// Handle to one device-resident buffer of a [`DeviceStream`].  Stamped
 /// with the owning stream's token: using it on another stream is a typed
@@ -249,20 +260,49 @@ impl DeviceBuf {
     }
 }
 
-/// A pooled bounded reply channel (capacity `cap` tile results).  Workers
-/// must never block sending a reply — that would deadlock against the
-/// bounded job queues — so a launch only takes a channel whose capacity
-/// covers its whole tile count.
+/// A pooled bounded reply channel, rated for `cap` tile results (the
+/// underlying channel holds `2 * cap` — headroom for duplicate replies
+/// from raced replays).  Workers must never block sending a reply — that
+/// would deadlock against the bounded job queues — so a launch only takes
+/// a channel whose rating covers its whole tile count.
 struct ReplyChannel {
     tx: SyncSender<TileResult>,
     rx: Receiver<TileResult>,
     cap: usize,
 }
 
+/// Where (and to *which incarnation* of the worker) a launch slot's tiles
+/// were dispatched.  A dispatch is **lost** exactly when its stamped
+/// incarnation is no longer live — the CU respawned or was quarantined
+/// since, taking its queue (and any un-replied jobs) with it.  The
+/// overdue-reply probe replays those dispatches, and only those: a slow
+/// worker keeps its current incarnation and is simply waited on.
+#[derive(Clone, Copy, Debug)]
+struct SlotDispatch {
+    /// Physical CU the slot's band was submitted to.
+    phys: usize,
+    /// [`Supervisor`](super::worker::Supervisor)`::incarnation()` at
+    /// submit time.
+    incarnation: u32,
+}
+
+/// One redispatch record — a retried, replayed, or re-routed tile —
+/// stamped like the original slot dispatch so a second loss is detectable
+/// too.  The newest entry for an origin is its authoritative in-flight
+/// dispatch.
+#[derive(Clone, Copy, Debug)]
+struct RetrySlot {
+    origin: (usize, usize),
+    attempt: u32,
+    phys: usize,
+    incarnation: u32,
+}
+
 /// One launch currently in flight: its buffer read/write sets (by index),
-/// the partition it runs under, how many tile replies are outstanding, and
-/// its private reply channel.  Writeback into the C panel is deferred to
-/// retirement, which happens strictly in enqueue order.
+/// the partition it runs under, how many tiles must settle, its private
+/// reply channel, and the dispatch bookkeeping the self-healing drain
+/// runs on.  Writeback into the C panel is deferred to retirement, which
+/// happens strictly in enqueue order.
 struct Launch {
     id: u64,
     /// Read set: A, B, and the C input (accumulated onto).
@@ -271,10 +311,19 @@ struct Launch {
     /// Write set: the C buffer, written at retirement.
     c: usize,
     part: Partition,
-    /// Tile replies this launch owes — every submitted tile replies
-    /// exactly once, so this is also the launch's total tile count.
+    /// Total tiles — the launch retires once this many have *settled*
+    /// (replied successfully, or failed with retries exhausted).
     pending: usize,
     reply: ReplyChannel,
+    /// Initial dispatch stamp per partition slot (pooled storage).
+    slots: Vec<SlotDispatch>,
+    /// Settled replies (pooled storage).  `results.len()` is the settled
+    /// count; an origin present here is final and any further reply for
+    /// it is a duplicate from a raced replay, dropped on arrival.
+    results: Vec<TileResult>,
+    /// Redispatch log, newest last — empty (and allocation-free) on every
+    /// healthy launch.
+    retries: Vec<RetrySlot>,
 }
 
 /// A batched GEMM stream over a [`Device`] — see the module docs.
@@ -296,11 +345,18 @@ pub struct DeviceStream<'d> {
     /// Recycled C-staging tile buffers (leader -> worker -> leader, on
     /// success and on failure alike).
     c_pool: Vec<PlaneBatch>,
-    /// Reply staging for one retirement (capacity reused).
-    results: Vec<TileResult>,
+    /// Recycled per-launch settled-reply staging (capacity reused).
+    results_pool: Vec<Vec<TileResult>>,
+    /// Recycled per-launch slot-dispatch tables.
+    slot_pool: Vec<Vec<SlotDispatch>>,
     /// Recycled per-launch reply channels (each bounded at the tile count
     /// of the launch it was created for).
     reply_pool: Vec<ReplyChannel>,
+    /// Live (non-quarantined) physical CU indices, rebuilt in place each
+    /// enqueue; partition slot `i` initially dispatches to `live[i]`.
+    live: Vec<usize>,
+    /// Round-robin cursor for re-routing tiles off quarantined CUs.
+    rr: usize,
     /// Launches in flight, oldest first; retirement pops from the front.
     inflight: VecDeque<Launch>,
     /// Set by an unrecoverable failure; every later call reports it.
@@ -321,8 +377,11 @@ impl<'d> DeviceStream<'d> {
             cu_tiles: (0..cus).map(|_| Vec::new()).collect(),
             cursors: vec![0; cus],
             c_pool: Vec::new(),
-            results: Vec::new(),
+            results_pool: Vec::new(),
+            slot_pool: Vec::new(),
             reply_pool: Vec::new(),
+            live: Vec::with_capacity(cus),
+            rr: 0,
             inflight: VecDeque::new(),
             poisoned: None,
         }
@@ -437,7 +496,19 @@ impl<'d> DeviceStream<'d> {
             );
             (pa.rows(), pa.cols(), pb.cols())
         };
-        let part = Partition {
+        // Degraded-mode scheduling: band only across the live
+        // (non-quarantined) CUs.  Partition slot `i` maps to physical CU
+        // `live[i]`; `excluding` folds each quarantined unit out of the
+        // base partition so the survivors absorb its rows.  Zero
+        // survivors is the bottom of the recovery ladder: poison.
+        let dev = self.dev;
+        self.live.clear();
+        self.live.extend((0..dev.workers.len()).filter(|&i| !dev.workers[i].is_quarantined()));
+        if self.live.is_empty() {
+            let (launch, total) = (self.next_launch, self.dev.workers.len());
+            return Err(self.poison(StreamError::NoSurvivors { launch, total }).into());
+        }
+        let mut part = Partition {
             n,
             m,
             k,
@@ -446,6 +517,12 @@ impl<'d> DeviceStream<'d> {
             k_tile: self.meta.k_tile,
             compute_units: self.dev.workers.len(),
         };
+        for w in &self.dev.workers {
+            if w.is_quarantined() {
+                part = part.excluding(w.cu());
+            }
+        }
+        debug_assert_eq!(part.compute_units, self.live.len(), "one band slot per live CU");
 
         // Hazard scan: wait only for in-flight launches we conflict with.
         // A conflict is a launch *writing* one of our buffers (RAW on A/B/
@@ -471,66 +548,198 @@ impl<'d> DeviceStream<'d> {
         }
         self.build_b_cache(bi, &part)?;
 
-        // Plan each CU's band; the reply channel must absorb every tile of
-        // this launch without a worker ever blocking on it.
+        // Plan each slot's band; the reply channel must absorb every tile
+        // of this launch without a worker ever blocking on it.  Slots at
+        // or past `part.compute_units` plan empty (their bands clamp to
+        // the matrix edge), which also clears any stale lists from a
+        // less-degraded earlier enqueue.
         let total = part.total_tiles();
         let mut planned = 0;
-        for (cu, tiles) in self.cu_tiles.iter_mut().enumerate() {
-            part.tiles_into(cu, tiles);
+        for (slot, tiles) in self.cu_tiles.iter_mut().enumerate() {
+            part.tiles_into(slot, tiles);
             planned += tiles.len();
-            self.cursors[cu] = 0;
+            self.cursors[slot] = 0;
         }
         debug_assert_eq!(planned, total, "Partition::total_tiles must match enumeration");
         let reply = self.take_reply_channel(total);
         let launch = self.next_launch;
         self.next_launch += 1;
 
-        // Submit round-robin, one tile per CU per pass, so the bounded
-        // queues fill evenly and a stalled CU backpressures only its band.
+        // Stamp each slot's dispatch target *before* submitting: a worker
+        // that dies mid-submission (or later) is detectable because its
+        // stamped incarnation stops being live.
+        let mut slots = self.slot_pool.pop().unwrap_or_default();
+        slots.clear();
+        slots.extend(self.live.iter().map(|&phys| SlotDispatch {
+            phys,
+            // apfp-lint: allow(index, reason="phys comes from self.live, which was just rebuilt from 0..workers.len()")
+            incarnation: self.dev.workers[phys].incarnation(),
+        }));
+        let mut results = self.results_pool.pop().unwrap_or_default();
+        results.clear();
+        let mut l = Launch {
+            id: launch,
+            a: ai,
+            b: bi,
+            c: ci,
+            part,
+            pending: total,
+            reply,
+            slots,
+            results,
+            // apfp-lint: allow(alloc, reason="Vec::new is allocation-free; the redispatch log grows only on the healing path")
+            retries: Vec::new(),
+        };
+
+        // Submit round-robin, one tile per slot per pass, so the bounded
+        // queues fill evenly and a stalled CU backpressures only its
+        // band.  The fast path sends straight to the slot's stamped
+        // worker; if that worker died since the stamp, the tile heals
+        // through `submit_tile` (respawn or re-route) instead.
         // apfp-lint: allow(index, reason="ai/bi/ci come from index(), which validated the handle against this stream's buffer table")
         // apfp-lint: allow(alloc, reason="Arc clones: refcount bumps on the shared device buffers, no heap allocation")
         let (ab, bb, cb) = (self.bufs[ai].clone(), self.bufs[bi].clone(), self.bufs[ci].clone());
-        let mut pending = 0usize;
+        let mut submitted = 0usize;
         let mut active = true;
         while active {
             active = false;
-            for cu in 0..self.dev.workers.len() {
-                let Some(tile) = self.cu_tiles[cu].get(self.cursors[cu]) else { continue };
-                self.cursors[cu] += 1;
-                let c_buf = self.c_pool.pop().unwrap_or_default();
-                let job = Job::GemmTile {
-                    launch,
-                    artifact: self.artifact.clone(), // apfp-lint: allow(alloc, reason="Arc<str> refcount bump")
-                    a: ab.clone(), // apfp-lint: allow(alloc, reason="Arc refcount bump")
-                    b: bb.clone(), // apfp-lint: allow(alloc, reason="Arc refcount bump")
-                    c: cb.clone(), // apfp-lint: allow(alloc, reason="Arc refcount bump")
-                    c_buf,
-                    tile: *tile,
-                    part,
-                    reply: reply.tx.clone(), // apfp-lint: allow(alloc, reason="SyncSender clone: channel refcount bump")
-                };
-                if let Err(job) = self.dev.workers[cu].submit(job) {
-                    // The worker thread is gone mid-submission.  Reclaim
-                    // this job's staging buffer, drop the partial launch
-                    // (the poisoned stream will never retire it — already
-                    // submitted tiles' replies are discarded with its
-                    // channel), and poison: reply accounting for this
-                    // stream is unreliable from here on.
-                    if let Job::GemmTile { c_buf, .. } = job {
-                        self.c_pool.push(c_buf);
-                    }
-                    drop(reply);
-                    return Err(self.poison(StreamError::WorkerGone { cu, launch }).into());
-                }
-                pending += 1;
+            for slot in 0..part.compute_units {
+                let Some(&tile) = self.cu_tiles[slot].get(self.cursors[slot]) else { continue };
+                self.cursors[slot] += 1;
+                submitted += 1;
                 active = true;
+                let sd = l.slots[slot];
+                if self.dev.workers[sd.phys].is_live_at(sd.incarnation) {
+                    let job = Job::GemmTile {
+                        launch,
+                        artifact: self.artifact.clone(), // apfp-lint: allow(alloc, reason="Arc<str> refcount bump")
+                        a: ab.clone(), // apfp-lint: allow(alloc, reason="Arc refcount bump")
+                        b: bb.clone(), // apfp-lint: allow(alloc, reason="Arc refcount bump")
+                        c: cb.clone(), // apfp-lint: allow(alloc, reason="Arc refcount bump")
+                        c_buf: self.c_pool.pop().unwrap_or_default(),
+                        tile,
+                        part,
+                        attempt: 0,
+                        reply: l.reply.tx.clone(), // apfp-lint: allow(alloc, reason="SyncSender clone: channel refcount bump")
+                    };
+                    match self.dev.workers[sd.phys].submit(job) {
+                        Ok(()) => continue,
+                        Err(job) => {
+                            // died between the stamp check and the send:
+                            // reclaim the staging buffer and fall through
+                            // to the healing slow path
+                            if let Job::GemmTile { c_buf, .. } = job {
+                                self.c_pool.push(c_buf);
+                            }
+                        }
+                    }
+                }
+                let c_buf = self.c_pool.pop().unwrap_or_default();
+                self.submit_tile(&mut l, tile, 0, c_buf)?;
             }
         }
-        debug_assert_eq!(pending, total, "every planned tile must have been submitted");
+        debug_assert_eq!(submitted, total, "every planned tile must have been submitted");
         self.dev.metrics.add_enqueues(1);
-        self.inflight.push_back(Launch { id: launch, a: ai, b: bi, c: ci, part, pending, reply });
+        self.inflight.push_back(l);
         self.dev.metrics.record_inflight(self.inflight.len() as u64);
         Ok(())
+    }
+
+    /// Dispatch one tile — a first attempt, an error retry, or a
+    /// lost-dispatch replay — healing as it goes: a dead target is
+    /// respawned through its supervisor (recorded in the health ledger);
+    /// a quarantined one re-routes the tile to the next live CU
+    /// round-robin.  Every dispatch made here is logged in the launch's
+    /// redispatch table with the incarnation it went to, so a second loss
+    /// is detectable too.  Fails — and poisons — only at the bottom of
+    /// the ladder: zero surviving CUs.
+    fn submit_tile(
+        &mut self,
+        l: &mut Launch,
+        tile: Tile,
+        attempt: u32,
+        mut c_buf: PlaneBatch,
+    ) -> Result<(), StreamError> {
+        loop {
+            let home = l.slots[tile.cu].phys;
+            let phys = if self.dev.workers[home].is_quarantined() {
+                match self.live_target() {
+                    Some(p) => p,
+                    None => {
+                        self.c_pool.push(c_buf);
+                        let (launch, total) = (l.id, self.dev.workers.len());
+                        return Err(self.poison(StreamError::NoSurvivors { launch, total }));
+                    }
+                }
+            } else {
+                home
+            };
+            let incarnation = self.dev.workers[phys].incarnation();
+            let job = Job::GemmTile {
+                launch: l.id,
+                artifact: self.artifact.clone(), // apfp-lint: allow(alloc, reason="Arc<str> refcount bump")
+                // apfp-lint: allow(index, reason="launch buffer indices were validated by index() at enqueue")
+                // apfp-lint: allow(alloc, reason="Arc clones: refcount bumps on the shared device buffers")
+                a: self.bufs[l.a].clone(),
+                b: self.bufs[l.b].clone(), // apfp-lint: allow(alloc, reason="Arc refcount bump")
+                c: self.bufs[l.c].clone(), // apfp-lint: allow(alloc, reason="Arc refcount bump")
+                c_buf,
+                tile,
+                part: l.part,
+                attempt,
+                reply: l.reply.tx.clone(), // apfp-lint: allow(alloc, reason="SyncSender clone: channel refcount bump")
+            };
+            match self.dev.workers[phys].submit(job) {
+                Ok(()) => {
+                    // apfp-lint: allow(alloc, reason="cold healing path: the redispatch log grows only when a tile needed re-dispatch")
+                    l.retries.push(RetrySlot {
+                        origin: (tile.r0, tile.c0),
+                        attempt,
+                        phys,
+                        incarnation,
+                    });
+                    return Ok(());
+                }
+                Err(job) => {
+                    c_buf = match job {
+                        Job::GemmTile { c_buf, .. } => c_buf,
+                        // unreachable: submit hands back the job it was
+                        // given, and this one is a GemmTile
+                        _ => PlaneBatch::default(),
+                    };
+                }
+            }
+            // The send failed: the worker thread died under us.  Climb
+            // the ladder — respawn it (or quarantine it past its budget)
+            // and go around: a respawned worker takes the tile on its
+            // next incarnation; a quarantined one re-routes it.
+            // apfp-lint: allow(alloc, reason="cold healing path: the incident string is built once per detected worker death")
+            let incident = format!(
+                "launch {} tile ({},{}) attempt {attempt}: submit failed (worker gone)",
+                l.id, tile.r0, tile.c0
+            );
+            if self.dev.workers[phys].respawn(&incident) == RespawnOutcome::Quarantined
+                && self.dev.workers.iter().all(|w| w.is_quarantined())
+            {
+                self.c_pool.push(c_buf);
+                let (launch, total) = (l.id, self.dev.workers.len());
+                return Err(self.poison(StreamError::NoSurvivors { launch, total }));
+            }
+        }
+    }
+
+    /// The next live CU in round-robin order, for re-routing tiles whose
+    /// band owner is quarantined; `None` when no CU survives.
+    fn live_target(&mut self) -> Option<usize> {
+        let n = self.dev.workers.len();
+        for _ in 0..n {
+            let cu = self.rr % n;
+            self.rr = (self.rr + 1) % n;
+            if !self.dev.workers[cu].is_quarantined() {
+                return Some(cu);
+            }
+        }
+        None
     }
 
     /// Is `b`'s cached tile grid valid for `part` — cut from the current
@@ -592,26 +801,23 @@ impl<'d> DeviceStream<'d> {
         Ok(())
     }
 
-    /// Does compute unit `cu` still owe `l` tile replies?  Planned tiles
-    /// follow from the partition (closed form, no allocation — this runs
-    /// on the overdue-reply cold path); received ones are counted out of
-    /// the drain staging.
-    fn owes_replies(cu: usize, l: &Launch, results: &[TileResult]) -> bool {
-        let (start, end) = l.part.band(cu);
-        let planned = (end - start).div_ceil(l.part.tile_n) * l.part.m_tiles();
-        let received = results.iter().filter(|r| r.tile.cu == cu).count();
-        received < planned
-    }
-
     /// Take a pooled reply channel with room for `total` tile results, or
-    /// create one.
+    /// create one.  Channels are minted at twice their rated capacity so
+    /// duplicate replies from raced replays can never block a worker's
+    /// send, and a pooled channel is drained of any late duplicates from
+    /// its previous launch before reuse — a stale reply would otherwise
+    /// corrupt the new launch's accounting.
     fn take_reply_channel(&mut self, total: usize) -> ReplyChannel {
         let need = total.max(1);
         if let Some(pos) = self.reply_pool.iter().position(|r| r.cap >= need) {
-            return self.reply_pool.swap_remove(pos);
+            let ch = self.reply_pool.swap_remove(pos);
+            while let Ok(stale) = ch.rx.try_recv() {
+                self.c_pool.push(stale.c_buf);
+            }
+            return ch;
         }
         // apfp-lint: allow(alloc, reason="pool miss: a reply channel is minted only when no pooled one has the capacity")
-        let (tx, rx) = sync_channel(need);
+        let (tx, rx) = sync_channel(2 * need);
         ReplyChannel { tx, rx, cap: need }
     }
 
@@ -644,50 +850,39 @@ impl<'d> DeviceStream<'d> {
         }
     }
 
-    /// Retire the oldest in-flight launch: drain all of its tile replies,
-    /// recover every pooled staging buffer (errored tiles included), and
-    /// either write the results back into the C panel (bumping its
-    /// version, which is what invalidates cached B grids cut from it) or
-    /// — if any tile failed — write nothing and report every failure.
+    /// Retire the oldest in-flight launch: drain until every tile has
+    /// settled — retrying errored tiles and replaying lost dispatches on
+    /// the way — recover every pooled staging buffer, and either write
+    /// the results back into the C panel (bumping its version, which is
+    /// what invalidates cached B grids cut from it) or — if any tile
+    /// exhausted its retries — write nothing and report every failure.
     fn retire_one(&mut self) -> Result<(), StreamError> {
-        let Some(l) = self.inflight.pop_front() else { return Ok(()) };
+        let Some(mut l) = self.inflight.pop_front() else { return Ok(()) };
         let t_drain = Instant::now();
-        self.results.clear();
-        // Drain with liveness detection: the leader holds a sender for the
-        // pooled channel, so a plain `recv` could never disconnect — a
-        // worker that died reply-less would hang us forever.  Instead,
-        // when a reply is overdue we probe the worker threads; replies are
-        // declared lost only after a dead thread is seen AND a further
-        // full interval passes with no progress (a dead CU doesn't stop
-        // the live ones from finishing their tiles).
-        let mut lost = 0usize;
-        let mut dead_seen = false;
-        while self.results.len() < l.pending {
-            match l.reply.rx.recv_timeout(REPLY_LIVENESS_INTERVAL) {
-                Ok(res) => {
-                    debug_assert_eq!(res.launch, l.id, "reply routed to the wrong launch");
-                    self.results.push(res);
-                    dead_seen = false; // progress: keep draining
-                }
-                Err(RecvTimeoutError::Timeout) => {
-                    if dead_seen {
-                        lost = l.pending - self.results.len();
-                        break;
-                    }
-                    // Probe only workers that still owe THIS launch a
-                    // reply: a CU that crashed serving some other stream
-                    // must not poison a launch it holds no tiles of.
-                    dead_seen = (0..self.dev.workers.len()).any(|cu| {
-                        self.dev.workers[cu].is_finished()
-                            && Self::owes_replies(cu, &l, &self.results)
-                    });
-                    // all owing workers alive: the launch is just slow —
-                    // keep waiting
-                }
+        // The leader holds a sender for the pooled channel, so a plain
+        // `recv` could never disconnect — a worker that died reply-less
+        // would hang us forever.  Instead an overdue reply triggers the
+        // liveness probe: dispatches whose stamped worker incarnation is
+        // no longer live are lost, and the probe heals the worker and
+        // replays exactly those.  A slow-but-live worker just keeps the
+        // loop waiting.
+        while l.results.len() < l.pending {
+            let step = match l.reply.rx.recv_timeout(self.dev.config.reply_timeout) {
+                Ok(res) => self.absorb(&mut l, res),
+                Err(RecvTimeoutError::Timeout) => self.probe_and_replay(&mut l),
                 Err(RecvTimeoutError::Disconnected) => {
-                    lost = l.pending - self.results.len();
-                    break;
+                    // defensive: with the leader holding a sender this
+                    // means the channel state itself broke
+                    let (launch, missing, total) =
+                        (l.id, l.pending - l.results.len(), l.pending);
+                    Err(self.poison(StreamError::ReplyLost { launch, missing, total }))
                 }
+            };
+            if let Err(e) = step {
+                self.dev.metrics.add_drain_ns(t_drain.elapsed().as_nanos() as u64);
+                self.dev.metrics.add_launches(1);
+                self.salvage(l);
+                return Err(e);
             }
         }
         self.dev.metrics.add_drain_ns(t_drain.elapsed().as_nanos() as u64);
@@ -696,66 +891,174 @@ impl<'d> DeviceStream<'d> {
         let mut failed = 0usize;
         // apfp-lint: allow(alloc, reason="String::new is allocation-free; it grows only when tiles failed")
         let mut tiles = String::new();
-        for res in &self.results {
+        for res in &l.results {
             if let Some(err) = &res.err {
                 failed += 1;
                 if !tiles.is_empty() {
                     tiles.push_str("; ");
                 }
                 let t = res.tile;
-                let _ = write!(tiles, "CU{} tile({},{}): {:#}", t.cu, t.r0, t.c0, err);
+                let _ = write!(tiles, "slot{} tile({},{}): {:#}", t.cu, t.r0, t.c0, err);
             }
-        }
-
-        if lost > 0 {
-            // The channel died with replies outstanding: recover what did
-            // arrive, write nothing (the launch is incomplete), and poison
-            // the stream — jobs that never replied may still hold buffer
-            // references, so panel ownership can no longer be proven.
-            for res in self.results.drain(..) {
-                self.c_pool.push(res.c_buf);
-            }
-            return Err(self.poison(StreamError::ReplyLost {
-                launch: l.id,
-                missing: lost,
-                total: l.pending,
-            }));
         }
 
         if failed > 0 {
-            // Fully drained, but some tiles failed: recover every staging
-            // buffer into the pool, leave C untouched (its pre-launch
-            // contents — and its version — stand), and report every failed
-            // tile in one error.  The stream stays usable.
-            for res in self.results.drain(..) {
+            // Fully settled, but some tiles exhausted their retries:
+            // recover every staging buffer into the pool, leave C
+            // untouched (its pre-launch contents — and its version —
+            // stand), and report every failed tile in one error.  The
+            // stream stays usable.
+            for res in l.results.drain(..) {
                 self.c_pool.push(res.c_buf);
             }
             self.reply_pool.push(l.reply);
+            self.results_pool.push(l.results);
+            self.slot_pool.push(l.slots);
             let (launch, total) = (l.id, l.pending);
             return Err(StreamError::LaunchFailed { launch, failed, total, tiles });
         }
 
-        // Healthy path: every job replied, and workers drop their buffer
-        // references before replying — the stream owns the panel again.
+        // Healthy path: every tile settled successfully, and workers drop
+        // their buffer references before replying — the stream owns the
+        // panel again.
         let Some(buf) = Arc::get_mut(&mut self.bufs[l.c]) else {
-            for res in self.results.drain(..) {
-                self.c_pool.push(res.c_buf);
-            }
-            return Err(self.poison(StreamError::Invariant {
+            let e = self.poison(StreamError::Invariant {
                 what: "a fully drained launch left a live reference to its C buffer",
-            }));
+            });
+            self.salvage(l);
+            return Err(e);
         };
         // The panel is about to change: bump its version so B grids cut
         // from the old contents read as stale from here on.
         buf.version += 1;
         let t0 = Instant::now();
-        for res in self.results.drain(..) {
+        for res in l.results.drain(..) {
             let t = res.tile;
             buf.panel.write_tile(t.r0, t.c0, t.rows, t.cols, l.part.tile_m, &res.c_buf);
             self.c_pool.push(res.c_buf);
         }
         self.dev.metrics.add_marshal_ns(t0.elapsed().as_nanos() as u64);
         self.reply_pool.push(l.reply);
+        self.results_pool.push(l.results);
+        self.slot_pool.push(l.slots);
+        Ok(())
+    }
+
+    /// Recover a launch's arrived staging buffers and recycle its pooled
+    /// tables after a fatal (poisoning) drain error.  Its reply channel
+    /// is dropped, not pooled: late replies may still be in flight toward
+    /// it, and the poisoned stream will never launch again anyway.
+    fn salvage(&mut self, mut l: Launch) {
+        for res in l.results.drain(..) {
+            self.c_pool.push(res.c_buf);
+        }
+        self.results_pool.push(l.results);
+        self.slot_pool.push(l.slots);
+    }
+
+    /// Fold one reply into the launch: settle it, retry it, or — for a
+    /// duplicate — recycle its staging buffer and drop it.  A reply is a
+    /// duplicate when it names another launch or an origin that already
+    /// settled; duplicates arise only when a replay raced the original
+    /// reply (the dispatch was declared lost after its worker died, but
+    /// the reply was already in the channel).
+    fn absorb(&mut self, l: &mut Launch, res: TileResult) -> Result<(), StreamError> {
+        let dup = res.launch != l.id
+            || l.results.iter().any(|r| (r.tile.r0, r.tile.c0) == (res.tile.r0, res.tile.c0));
+        if dup {
+            self.c_pool.push(res.c_buf);
+            return Ok(());
+        }
+        if res.err.is_some() && res.attempt < self.dev.config.retry.retry_limit {
+            // The transient rung of the ladder: back off and redispatch,
+            // reusing the errored reply's staging buffer — the retry arm
+            // neither leaks nor mints pooled buffers.
+            let backoff = self.dev.config.retry.backoff(res.attempt + 1);
+            if !backoff.is_zero() {
+                std::thread::sleep(backoff);
+            }
+            self.dev.metrics.add_retries(1);
+            let TileResult { tile, attempt, c_buf, .. } = res;
+            return self.submit_tile(l, tile, attempt + 1, c_buf);
+        }
+        // settled: a success, or a failure with its retry budget spent
+        l.results.push(res);
+        Ok(())
+    }
+
+    /// The overdue-reply probe.  First drain whatever has already
+    /// arrived; then, for every unsettled tile, decide whether its latest
+    /// dispatch is still live.  A dispatch stamped with an incarnation
+    /// that is no longer live can never reply — its worker respawned or
+    /// was quarantined, taking the queued job with it — so it is
+    /// replayed.  A dispatch whose stamped worker is *dead but not yet
+    /// healed* is healed here first (respawn, or quarantine past the
+    /// budget), which retires the stamp and makes the dispatch lost.
+    /// Live-and-current dispatches are just slow: keep waiting.
+    fn probe_and_replay(&mut self, l: &mut Launch) -> Result<(), StreamError> {
+        // A reply that raced the timeout may settle a tile we would
+        // otherwise replay (and double-dispatch): drain first.
+        while let Ok(res) = l.reply.rx.try_recv() {
+            self.absorb(l, res)?;
+            if l.results.len() >= l.pending {
+                return Ok(());
+            }
+        }
+        // Walk every tile origin of the launch in closed form — the
+        // shared `cu_tiles` planning buffers may have been overwritten by
+        // later enqueues, so the partition itself is the source of truth.
+        for slot in 0..l.part.compute_units {
+            let (start, end) = l.part.band(slot);
+            let mut r0 = start;
+            while r0 < end {
+                let rows = l.part.tile_n.min(end - r0);
+                let mut c0 = 0;
+                while c0 < l.part.m {
+                    let cols = l.part.tile_m.min(l.part.m - c0);
+                    let settled =
+                        l.results.iter().any(|r| (r.tile.r0, r.tile.c0) == (r0, c0));
+                    if !settled {
+                        let (phys, incarnation, attempt) = l
+                            .retries
+                            .iter()
+                            .rev()
+                            .find(|rs| rs.origin == (r0, c0))
+                            .map(|rs| (rs.phys, rs.incarnation, rs.attempt))
+                            .unwrap_or((l.slots[slot].phys, l.slots[slot].incarnation, 0));
+                        let lost = if self.dev.workers[phys].is_live_at(incarnation) {
+                            if self.dev.workers[phys].is_finished() {
+                                // current incarnation, dead thread: heal
+                                // it, which retires the stamp.  Whether it
+                                // respawned or was quarantined, the job
+                                // died with the old thread — replay it
+                                // (submit_tile poisons if the quarantine
+                                // left zero survivors).
+                                // apfp-lint: allow(alloc, reason="cold healing path: the incident string is built once per detected worker death")
+                                let incident = format!(
+                                    "launch {} tile ({r0},{c0}) attempt {attempt}: \
+                                     no reply from dead worker",
+                                    l.id
+                                );
+                                let _ = self.dev.workers[phys].respawn(&incident);
+                                true
+                            } else {
+                                false // alive and current: just slow
+                            }
+                        } else {
+                            true // the stamped incarnation took the job down with it
+                        };
+                        if lost {
+                            self.dev.metrics.add_retries(1);
+                            let tile = Tile { cu: slot, r0, c0, rows, cols };
+                            let c_buf = self.c_pool.pop().unwrap_or_default();
+                            self.submit_tile(l, tile, attempt + 1, c_buf)?;
+                        }
+                    }
+                    c0 += l.part.tile_m;
+                }
+                r0 += l.part.tile_n;
+            }
+        }
         Ok(())
     }
 }
@@ -792,7 +1095,7 @@ mod tests {
                 tiles: "(0,4): injected".to_string(),
             },
             StreamError::ReplyLost { launch: 5, missing: 2, total: 4 },
-            StreamError::WorkerGone { cu: 1, launch: 6 },
+            StreamError::NoSurvivors { launch: 6, total: 2 },
             StreamError::Invariant { what: "drained launch left a live reference" },
             StreamError::Poisoned { reason: "compute unit 1 is gone".to_string() },
             StreamError::Multi { count: 2, summary: "a | b".to_string() },
@@ -808,7 +1111,7 @@ mod tests {
             vec!["buffer id 12"],
             vec!["launch 4", "1 of 4", "(0,4): injected", "C left unchanged"],
             vec!["launch 5", "2 of 4", "outstanding"],
-            vec!["compute unit 1", "launch 6"],
+            vec!["launch 6", "zero of 2", "quarantined"],
             vec!["drained launch left a live reference", "poisoned"],
             vec!["poisoned by an earlier failure", "compute unit 1 is gone"],
             vec!["2 launches failed", "a | b"],
@@ -839,7 +1142,7 @@ mod tests {
                 total: 4,
                 tiles: "(0,0): first".to_string(),
             },
-            StreamError::WorkerGone { cu: 0, launch: 12 },
+            StreamError::NoSurvivors { launch: 12, total: 4 },
             StreamError::LaunchFailed {
                 launch: 13,
                 failed: 2,
@@ -851,7 +1154,7 @@ mod tests {
             Some(StreamError::Multi { count, summary }) => {
                 assert_eq!(count, 3);
                 let first = summary.find("launch 11").expect("first report present");
-                let second = summary.find("compute unit 0").expect("second report present");
+                let second = summary.find("launch 12").expect("second report present");
                 let third = summary.find("launch 13").expect("third report present");
                 assert!(first < second && second < third, "launch order lost: {summary}");
                 assert_eq!(summary.matches(" | ").count(), 2, "{summary}");
@@ -872,8 +1175,12 @@ mod tests {
     #[test]
     fn failed_launch_recovers_every_staging_buffer_into_the_pool() {
         // 8x8 matrices on 4x4 tiles, 1 CU: 4 tiles per launch, one of which
-        // (origin (0,4)) is injected to fail.
+        // (origin (0,4)) is injected to fail on *every* attempt — so the
+        // retry rung runs dry (retry_limit redispatches) and the launch
+        // still reports exactly one failed tile.
         let dev = dev_with(FaultSpec { fail_tile: Some((0, 4)), ..Default::default() });
+        let retry_limit = u64::from(dev.config().retry.retry_limit);
+        assert!(retry_limit > 0, "default policy must actually retry");
         let a = Matrix::random(8, 8, 448, 1, 20);
         let b = Matrix::random(8, 8, 448, 2, 20);
         let c = Matrix::random(8, 8, 448, 3, 20);
@@ -894,6 +1201,13 @@ mod tests {
             assert_eq!(s.c_pool.len(), 4, "round {round}: pool must recover all buffers");
             assert_eq!(s.reply_pool.len(), 1, "round {round}: reply channel recycled");
             assert!(s.poisoned.is_none(), "tile failures must not poison the stream");
+            // the failing tile burned its full retry budget before settling
+            assert_eq!(
+                dev.metrics().retries,
+                retry_limit * (round + 1),
+                "round {round}: every redispatch is counted"
+            );
+            assert_eq!(dev.metrics().respawns, 0, "tile errors never respawn workers");
         }
         // the failed launches wrote nothing: C still decodes to its upload
         assert_eq!(s.download(hc).unwrap(), c);

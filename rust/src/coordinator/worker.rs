@@ -24,11 +24,18 @@
 //!   tile must not shrink the leader's pool).
 //!
 //! [`crate::config::FaultSpec`] injects failures at exactly these seams
-//! (runtime init, a chosen tile, panic vs error) so the failure paths stay
-//! under test (`tests/stream_faults.rs`).
+//! (runtime init, a chosen tile, panic vs error, worker death) so the
+//! failure paths stay under test (`tests/stream_faults.rs`).
+//!
+//! Workers are wrapped in a [`Supervisor`]: when a thread dies (today only
+//! via an injected fault; tomorrow a real backend crash) the stream asks
+//! the supervisor to respawn the CU with a fresh runtime and replays its
+//! un-acked jobs, or — once the respawn budget is spent — quarantines it
+//! and rebalances onto the survivors.  Each supervisor keeps the per-CU
+//! health ledger ([`CuHealth`]) those decisions are recorded in.
 
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -64,6 +71,12 @@ pub enum Job {
         c_buf: PlaneBatch,
         tile: Tile,
         part: Partition,
+        /// 0-based delivery attempt of this tile (0 = first dispatch,
+        /// bumped by the stream on every retry or replay).  Carried in
+        /// the job so transient-fault predicates stay deterministic
+        /// across respawned workers, and echoed in the reply so the
+        /// stream can match a result to the dispatch that produced it.
+        attempt: u32,
         reply: SyncSender<TileResult>,
     },
     /// A chunk of a stream operator (Tab. I/II microbenchmark path).
@@ -87,6 +100,9 @@ pub struct TileResult {
     /// Launch id echoed from the job.
     pub launch: u64,
     pub tile: Tile,
+    /// Delivery attempt echoed from the job, so the stream can tell a
+    /// retried dispatch's reply from the original's.
+    pub attempt: u32,
     /// The pooled C staging buffer, always returned to the leader.  On
     /// success it holds the accumulated C tile; when `err` is set its
     /// contents are unspecified (the leader recycles it without reading).
@@ -141,7 +157,10 @@ impl WorkerHandle {
     /// thread — the stream's drain loop probes this (only when a reply is
     /// overdue) to turn a would-be hang into a typed error.
     pub fn is_finished(&self) -> bool {
-        self.thread.as_ref().is_none_or(|t| t.is_finished())
+        match &self.thread {
+            Some(t) => t.is_finished(),
+            None => true,
+        }
     }
 }
 
@@ -150,6 +169,204 @@ impl Drop for WorkerHandle {
         let _ = self.sender.send(Job::Shutdown);
         if let Some(t) = self.thread.take() {
             let _ = t.join();
+        }
+    }
+}
+
+/// What [`Supervisor::respawn`] did about a dead worker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RespawnOutcome {
+    /// A fresh worker thread (with a fresh runtime) is live; the caller
+    /// replays the dead CU's un-acked jobs against it.
+    Respawned,
+    /// The respawn budget is exhausted (or the respawn itself failed):
+    /// the CU is quarantined and must be excluded from scheduling.
+    Quarantined,
+}
+
+/// One row of the device's per-CU health ledger (see
+/// `docs/ARCHITECTURE.md` § Failure recovery).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CuHealth {
+    pub cu: usize,
+    /// Times this CU has been respawned after a detected death.
+    pub respawns: u32,
+    /// Quarantined CUs take no further work; the stream schedules around
+    /// them.
+    pub quarantined: bool,
+    /// Human-readable description of the most recent incident.
+    pub last_incident: Option<String>,
+}
+
+struct SupervisorState {
+    /// `None` only after quarantine (the dead handle is dropped/joined).
+    handle: Option<WorkerHandle>,
+    respawns: u32,
+    quarantined: bool,
+    last_incident: Option<String>,
+}
+
+/// Supervised compute unit: a [`WorkerHandle`] plus the spawn recipe
+/// needed to replace it and the health ledger recording every incident.
+///
+/// The supervisor itself never polls — death detection stays in the
+/// stream's reply-liveness probe — it only answers "respawn or
+/// quarantine?" when the stream reports a dead worker, keeping the policy
+/// (the [`RetryPolicy`](crate::config::RetryPolicy) respawn budget) in
+/// one place.
+pub struct Supervisor {
+    cu: usize,
+    artifact_dir: std::path::PathBuf,
+    backend: BackendKind,
+    tile: TileShape,
+    faults: FaultSpec,
+    metrics: Arc<Metrics>,
+    respawn_limit: u32,
+    inner: Mutex<SupervisorState>,
+}
+
+impl Supervisor {
+    /// Spawn the CU under supervision, keeping the spawn recipe for later
+    /// respawns.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spawn(
+        cu: usize,
+        artifact_dir: std::path::PathBuf,
+        backend: BackendKind,
+        tile: TileShape,
+        faults: FaultSpec,
+        metrics: Arc<Metrics>,
+        respawn_limit: u32,
+    ) -> std::io::Result<Self> {
+        let handle = WorkerHandle::spawn(
+            cu,
+            artifact_dir.clone(),
+            backend,
+            tile,
+            faults,
+            Arc::clone(&metrics),
+        )?;
+        Ok(Supervisor {
+            cu,
+            artifact_dir,
+            backend,
+            tile,
+            faults,
+            metrics,
+            respawn_limit,
+            inner: Mutex::new(SupervisorState {
+                handle: Some(handle),
+                respawns: 0,
+                quarantined: false,
+                last_incident: None,
+            }),
+        })
+    }
+
+    pub fn cu(&self) -> usize {
+        self.cu
+    }
+
+    /// Lock the ledger, recovering from a poisoned mutex: the state is
+    /// plain bookkeeping scalars, valid at every await-free point, so a
+    /// panicking peer cannot leave it torn.
+    fn state(&self) -> std::sync::MutexGuard<'_, SupervisorState> {
+        self.inner.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    /// Enqueue a job on the current worker (blocking backpressure, same
+    /// contract as [`WorkerHandle::submit`]).  Returns the job when the
+    /// worker is gone or the CU is quarantined, so the caller can reclaim
+    /// pooled buffers and escalate.
+    pub fn submit(&self, job: Job) -> std::result::Result<(), Job> {
+        match self.state().handle.as_ref() {
+            Some(h) => h.submit(job),
+            None => Err(job),
+        }
+    }
+
+    /// Has the current worker thread exited?  Quarantined CUs report
+    /// `true` (there is nothing live to reply).
+    pub fn is_finished(&self) -> bool {
+        match &self.state().handle {
+            Some(h) => h.is_finished(),
+            None => true,
+        }
+    }
+
+    pub fn is_quarantined(&self) -> bool {
+        self.state().quarantined
+    }
+
+    /// The worker's incarnation: bumped on every respawn.  A dispatch
+    /// stamped with an older incarnation was submitted to a worker that
+    /// has since died — its job is lost and must be replayed.
+    pub fn incarnation(&self) -> u32 {
+        self.state().respawns
+    }
+
+    /// Is the CU still the same live worker a dispatch stamped with
+    /// `incarnation` was submitted to?  False once the CU respawned (the
+    /// dispatch died with the old thread) or was quarantined.  One lock,
+    /// cheap enough for per-dispatch checks.
+    pub fn is_live_at(&self, incarnation: u32) -> bool {
+        let st = self.state();
+        !st.quarantined && st.respawns == incarnation
+    }
+
+    /// React to a detected worker death: respawn the CU with a fresh
+    /// runtime while budget remains, quarantine it otherwise.  The
+    /// incident is recorded in the health ledger either way.  Idempotent
+    /// once quarantined.
+    // apfp-lint: allow(alloc, scope=fn, reason="cold healing path: a respawn rebuilds the worker thread and its runtime, bounded by the respawn budget; the warm path never reaches it")
+    pub fn respawn(&self, incident: &str) -> RespawnOutcome {
+        let mut st = self.state();
+        st.last_incident = Some(incident.to_string());
+        if st.quarantined {
+            return RespawnOutcome::Quarantined;
+        }
+        if st.respawns >= self.respawn_limit {
+            // budget spent: drop (and join) the dead handle so the CU
+            // holds no thread while quarantined
+            st.handle = None;
+            st.quarantined = true;
+            self.metrics.add_quarantined(1);
+            return RespawnOutcome::Quarantined;
+        }
+        match WorkerHandle::spawn(
+            self.cu,
+            self.artifact_dir.clone(),
+            self.backend,
+            self.tile,
+            self.faults,
+            Arc::clone(&self.metrics),
+        ) {
+            Ok(fresh) => {
+                st.respawns += 1;
+                st.handle = Some(fresh);
+                self.metrics.add_respawns(1);
+                RespawnOutcome::Respawned
+            }
+            Err(e) => {
+                // the replacement itself failed to come up — that is a
+                // terminal incident regardless of remaining budget
+                st.last_incident = Some(format!("respawn failed: {e}"));
+                st.handle = None;
+                st.quarantined = true;
+                self.metrics.add_quarantined(1);
+                RespawnOutcome::Quarantined
+            }
+        }
+    }
+
+    /// Snapshot this CU's row of the health ledger.
+    pub fn health(&self) -> CuHealth {
+        let st = self.state();
+        CuHealth {
+            cu: self.cu,
+            respawns: st.respawns,
+            quarantined: st.quarantined,
+            last_incident: st.last_incident.clone(),
         }
     }
 }
@@ -192,10 +409,11 @@ fn worker_main(
             // still rides home so the leader's pool survives a dead CU.
             for job in rx {
                 match job {
-                    Job::GemmTile { launch, tile, c_buf, reply, .. } => {
+                    Job::GemmTile { launch, tile, c_buf, attempt, reply, .. } => {
                         let _ = reply.send(TileResult {
                             launch,
                             tile,
+                            attempt,
                             c_buf,
                             err: Some(anyhow::anyhow!("{reason}")),
                         });
@@ -217,11 +435,12 @@ fn worker_main(
     for job in rx {
         match job {
             Job::Shutdown => break,
-            Job::GemmTile { launch, artifact, a, b, c, mut c_buf, tile, part, reply } => {
-                if faults.die_on_tile == Some((tile.r0, tile.c0)) {
+            Job::GemmTile { launch, artifact, a, b, c, mut c_buf, tile, part, attempt, reply } => {
+                if faults.tile_kills((tile.r0, tile.c0), attempt) {
                     // Injected CU crash: the thread exits without replying
                     // or draining its queue.  The stream's liveness probe
-                    // must turn this into a typed ReplyLost, never a hang.
+                    // must turn this into a supervised respawn (or, past
+                    // the budget, a quarantine), never a hang.
                     return;
                 }
                 // A panic inside the tile (an assert anywhere in the
@@ -230,12 +449,16 @@ fn worker_main(
                 // silently would hang its retirement forever.
                 // catch_unwind costs nothing on the non-panicking path.
                 let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    if faults.fail_tile == Some((tile.r0, tile.c0)) {
+                    if faults.tile_fails((tile.r0, tile.c0), attempt) {
                         if faults.panic_tile {
                             // apfp-lint: allow(panic, reason="FaultSpec failpoint: this injected panic is the fault under test, contained by the catch_unwind above")
                             panic!("injected panic on tile ({}, {})", tile.r0, tile.c0);
                         }
-                        anyhow::bail!("injected failure on tile ({}, {})", tile.r0, tile.c0);
+                        anyhow::bail!(
+                            "injected failure on tile ({}, {}) attempt {attempt}",
+                            tile.r0,
+                            tile.c0
+                        );
                     }
                     run_tile(
                         &rt, &artifact, &a, &b, &c, tile, &part, &metrics, &mut bufs, &mut c_buf,
@@ -252,7 +475,7 @@ fn worker_main(
                         panic_message(&panic)
                     )),
                 };
-                let _ = reply.send(TileResult { launch, tile, c_buf, err });
+                let _ = reply.send(TileResult { launch, tile, attempt, c_buf, err });
             }
             Job::Stream { artifact, kind, operands, offset, reply } => {
                 let t0 = Instant::now();

@@ -20,8 +20,10 @@
 //! * [`coordinator`] — the virtual device: compute-unit workers, the §III
 //!   band/tile scheduler, the CUDA-like [`coordinator::Device`], and the
 //!   batched [`coordinator::DeviceStream`] launch API with hazard-tracked
-//!   pipelining of independent launches and typed
-//!   [`coordinator::StreamError`] failure paths;
+//!   pipelining of independent launches, self-healing failure recovery
+//!   (tile retry, supervised CU respawn, degraded-mode scheduling around
+//!   quarantined units), and typed [`coordinator::StreamError`] failure
+//!   paths;
 //! * [`hwmodel`] / [`sim`] — the analytic U250 model that regenerates the
 //!   paper's tables and figures;
 //! * [`config`] / [`bench_util`] / [`testkit`] — configuration, the
@@ -39,6 +41,10 @@
 //! | `APFP_TILE_M` | Builtin GEMM tile columns (long form `APFP_TILE_SIZE_M`) | `32` |
 //! | `APFP_TILE_K` | Builtin GEMM K-step depth (long form `APFP_TILE_SIZE_K`) | `32` |
 //! | `APFP_KARATSUBA_THRESHOLD` | Karatsuba bottom-out in limbs ([`bigint`]) | `40` |
+//! | `APFP_REPLY_TIMEOUT_MS` | Overdue-reply probe interval of the stream drain ([`config::ApfpConfig::reply_timeout`]) | `250` |
+//! | `APFP_RETRY_LIMIT` | Tile redispatches after a failed attempt ([`config::RetryPolicy`]) | `2` |
+//! | `APFP_RETRY_BACKOFF_MS` | Base retry backoff, doubled per attempt and capped ([`config::RetryPolicy`]) | `1` |
+//! | `APFP_RESPAWN_LIMIT` | CU respawns before quarantine ([`config::RetryPolicy`]) | `1` |
 //!
 //! The tile variables reshape builtin-manifest execution end to end — the
 //! synthesized artifact, the scheduler partition, every worker's staging

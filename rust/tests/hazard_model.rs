@@ -13,7 +13,13 @@
 //! 3. staging buffers ride the reply on **every** arm — success, failed
 //!    tile, caught panic — so the pool is conserved unless a worker dies
 //!    reply-less, in which case the stream is poisoned rather than left
-//!    with unprovable buffer ownership.
+//!    with unprovable buffer ownership;
+//! 4. (ISSUE 7) a failed reply inside the retry budget is *redispatched*
+//!    with the buffer it came home in — the retry arm neither leaks nor
+//!    mints staging buffers, retries happen at the owning launch's own
+//!    retirement (FIFO order is untouched), and a reply-less death that
+//!    bottoms out the supervision ladder (respawn budget spent, every CU
+//!    quarantined) surfaces as `NoSurvivors` before poisoning.
 //!
 //! Those claims are about *interleavings*, which the integration tests
 //! sample but cannot enumerate.  This file re-states the protocol as a
@@ -51,8 +57,22 @@ enum Outcome {
     Fail,
     /// Panics; the catch wrapper still replies with `err` — and the buffer.
     Panic,
-    /// Dies reply-less: the buffer is lost and the reply never arrives.
+    /// Transient: errors on the first `K` delivery attempts, then
+    /// computes — the `fail_tile=RxC*K` failpoint under retry.
+    Flaky(u32),
+    /// Dies reply-less with the supervision ladder bottomed out (respawn
+    /// budget spent, zero CUs survive): the buffer is lost and the reply
+    /// never arrives.
     Dead,
+}
+
+/// Does this outcome reply with `err` set at delivery `attempt`?
+fn failed_at(o: Outcome, attempt: u32) -> bool {
+    match o {
+        Outcome::Fail | Outcome::Panic => true,
+        Outcome::Flaky(k) => attempt < k,
+        Outcome::Ok | Outcome::Dead => false,
+    }
 }
 
 /// Leader-side API calls, in program order.
@@ -74,6 +94,9 @@ struct Scenario {
     ops: Vec<Op>,
     /// `outcomes[launch_id][tile]`; entries missing here default to `Ok`.
     outcomes: Vec<Vec<Outcome>>,
+    /// `RetryPolicy::retry_limit`: redispatches granted to a failed tile
+    /// (so each tile is delivered at most `retry_limit + 1` times).
+    retry_limit: u32,
     /// Protocol mutation: write C back when the *last reply* arrives
     /// instead of at FIFO retirement.  Used to prove the model can fail.
     eager_writeback: bool,
@@ -103,6 +126,9 @@ enum TileSt {
 struct Tile {
     st: TileSt,
     outcome: Outcome,
+    /// 0-based delivery count, echoed through the reply — the retry arm's
+    /// bookkeeping (stream.rs stamps the same counter on `Job::GemmTile`).
+    attempt: u32,
     /// Buffer contents the worker saw at execution time (`None` = queued).
     observed: Option<[u32; 3]>,
 }
@@ -150,6 +176,8 @@ struct Model {
     inflight_max: usize,
     /// Hazard drains forced by an `Enqueue` (not by `Wait`/`Download`).
     hazard_drains: usize,
+    /// Failed replies redispatched within the retry budget.
+    retries: usize,
 }
 
 #[derive(Default)]
@@ -161,6 +189,10 @@ struct Stats {
     inflight_max: usize,
     hazard_drains_min: usize,
     hazard_drains_max: usize,
+    /// Retry redispatches, min/max across schedules: equal bounds prove
+    /// the retry count is schedule-independent (leader-deterministic).
+    retries_min: usize,
+    retries_max: usize,
     /// Staging buffers unaccounted for at quiescence, worst schedule.
     leaked_max: usize,
     errors_seen: Vec<String>,
@@ -188,6 +220,28 @@ impl Model {
             errors: Vec::new(),
             inflight_max: 0,
             hazard_drains: 0,
+            retries: 0,
+        }
+    }
+
+    /// The retry arm, applied where the real drain loop applies it: while
+    /// retiring the *front* launch (FIFO — a retry never escapes its own
+    /// launch's retirement).  A failed reply with budget left goes back
+    /// to `Queued` at `attempt + 1`, reusing the staging buffer it came
+    /// home in — `staging_out` is untouched, which is exactly the
+    /// conservation claim of invariant 4.
+    fn maybe_retry_front(&mut self, sc: &Scenario) {
+        let Some(l) = self.inflight.front_mut() else { return };
+        for t in &mut l.tiles {
+            if t.st == TileSt::Replied
+                && failed_at(t.outcome, t.attempt)
+                && t.attempt < sc.retry_limit
+            {
+                t.st = TileSt::Queued;
+                t.attempt += 1;
+                t.observed = None;
+                self.retries += 1;
+            }
         }
     }
 
@@ -209,12 +263,14 @@ impl Model {
         // arm — the `c_buf`-on-every-arm invariant the lint checks.
         self.staging_out -= replied;
         if lost > 0 {
-            // ReplyLost: recover what arrived, write nothing, poison.
+            // The ladder's bottom: a reply-less death with no survivor to
+            // replay onto.  Recover what arrived, write nothing, poison.
             self.poisoned = true;
-            return Err(format!("ReplyLost(launch {}, missing {lost})", l.id));
+            return Err(format!("NoSurvivors(launch {}, missing {lost})", l.id));
         }
-        let failed =
-            l.tiles.iter().filter(|t| matches!(t.outcome, Outcome::Fail | Outcome::Panic)).count();
+        // A tile still failing at its settled attempt exhausted its retry
+        // budget (maybe_retry_front requeued everything under budget).
+        let failed = l.tiles.iter().filter(|t| failed_at(t.outcome, t.attempt)).count();
         if failed > 0 {
             // LaunchFailed: fully drained, C untouched, stream stays usable.
             return Err(format!("LaunchFailed(launch {}, {failed} tiles)", l.id));
@@ -279,6 +335,7 @@ impl Model {
                 if conflict {
                     // Drain the front launch, then re-run the scan; the
                     // real code's retire_n(i + 1) is this loop unrolled.
+                    self.maybe_retry_front(sc);
                     if !self.front_drainable() {
                         return Step::Blocked;
                     }
@@ -296,7 +353,12 @@ impl Model {
                 let id = self.next_launch;
                 self.next_launch += 1;
                 let tiles = (0..sc.tiles_per_launch)
-                    .map(|t| Tile { st: TileSt::Queued, outcome: sc.outcome(id, t), observed: None })
+                    .map(|t| Tile {
+                        st: TileSt::Queued,
+                        outcome: sc.outcome(id, t),
+                        attempt: 0,
+                        observed: None,
+                    })
                     .collect();
                 self.staging_out += sc.tiles_per_launch;
                 self.inflight.push_back(Launch {
@@ -316,6 +378,7 @@ impl Model {
                     self.pc += 1;
                     return Step::Ran;
                 }
+                self.maybe_retry_front(sc);
                 if !self.front_drainable() {
                     return Step::Blocked;
                 }
@@ -331,6 +394,7 @@ impl Model {
                     self.pc += 1;
                     return Step::Ran;
                 }
+                self.maybe_retry_front(sc);
                 if !self.front_drainable() {
                     return Step::Blocked;
                 }
@@ -416,6 +480,8 @@ impl Model {
         out.inflight_max = out.inflight_max.max(self.inflight_max);
         out.hazard_drains_min = out.hazard_drains_min.min(self.hazard_drains);
         out.hazard_drains_max = out.hazard_drains_max.max(self.hazard_drains);
+        out.retries_min = out.retries_min.min(self.retries);
+        out.retries_max = out.retries_max.max(self.retries);
         for e in &self.errors {
             if !out.errors_seen.contains(e) {
                 out.errors_seen.push(e.clone());
@@ -460,7 +526,8 @@ fn dfs(mut m: Model, sc: &Scenario, out: &mut Stats) {
 }
 
 fn explore(sc: &Scenario) -> Stats {
-    let mut out = Stats { hazard_drains_min: usize::MAX, ..Stats::default() };
+    let mut out =
+        Stats { hazard_drains_min: usize::MAX, retries_min: usize::MAX, ..Stats::default() };
     dfs(Model::new(sc), sc, &mut out);
     assert!(out.schedules > 0, "the scenario never reached a terminal state");
     out
@@ -479,6 +546,7 @@ fn disjoint_launches_pipeline_and_conserve_buffers() {
         tiles_per_launch: 2,
         ops: vec![Op::Enqueue(0, 1, 2), Op::Enqueue(3, 4, 5), Op::Wait],
         outcomes: vec![],
+        retry_limit: 0,
         eager_writeback: false,
     };
     let st = explore(&sc);
@@ -500,6 +568,7 @@ fn dependent_chain_reads_the_writers_retired_value() {
         tiles_per_launch: 2,
         ops: vec![Op::Enqueue(0, 1, 2), Op::Enqueue(2, 1, 2), Op::Wait],
         outcomes: vec![],
+        retry_limit: 0,
         eager_writeback: false,
     };
     let st = explore(&sc);
@@ -522,6 +591,7 @@ fn write_after_read_defers_to_retirement() {
         tiles_per_launch: 2,
         ops: vec![Op::Enqueue(2, 1, 3), Op::Enqueue(0, 1, 2), Op::Wait],
         outcomes: vec![],
+        retry_limit: 0,
         eager_writeback: false,
     };
     let st = explore(&sc);
@@ -541,6 +611,7 @@ fn eager_writeback_is_caught_as_a_stability_violation() {
         tiles_per_launch: 2,
         ops: vec![Op::Enqueue(2, 1, 3), Op::Enqueue(0, 1, 2), Op::Wait],
         outcomes: vec![],
+        retry_limit: 0,
         eager_writeback: true,
     };
     let st = explore(&sc);
@@ -568,6 +639,7 @@ fn grid_rebuild_waits_for_inflight_referencers() {
         tiles_per_launch: 2,
         ops: vec![Op::Enqueue(1, 0, 3), Op::Enqueue(2, 1, 4), Op::Wait],
         outcomes: vec![],
+        retry_limit: 0,
         eager_writeback: false,
     };
     let st = explore(&sc);
@@ -585,6 +657,7 @@ fn failed_tiles_write_nothing_and_return_every_buffer() {
         tiles_per_launch: 2,
         ops: vec![Op::Enqueue(0, 1, 2), Op::Wait, Op::Enqueue(3, 4, 5), Op::Wait],
         outcomes: vec![vec![Outcome::Ok, Outcome::Fail]],
+        retry_limit: 0,
         eager_writeback: false,
     };
     let st = explore(&sc);
@@ -611,6 +684,7 @@ fn caught_panics_ride_the_failure_arm() {
         tiles_per_launch: 2,
         ops: vec![Op::Enqueue(0, 1, 2), Op::Wait, Op::Enqueue(3, 4, 5), Op::Wait],
         outcomes: vec![vec![Outcome::Panic, Outcome::Ok]],
+        retry_limit: 0,
         eager_writeback: false,
     };
     let st = explore(&sc);
@@ -620,27 +694,108 @@ fn caught_panics_ride_the_failure_arm() {
     assert!(!st.errors_seen.iter().any(|e| e == "Poisoned"));
 }
 
-/// A worker that dies reply-less: the retirement reports ReplyLost and
-/// poisons the stream — every later call errors instead of hanging —
-/// and exactly the dead worker's buffer is unaccounted for.
+/// A worker death that bottoms out the supervision ladder (no survivor
+/// to replay onto): the retirement reports NoSurvivors and poisons the
+/// stream — every later call errors instead of hanging — and exactly the
+/// dead worker's buffer is unaccounted for.
 #[test]
-fn lost_replies_poison_the_stream() {
+fn zero_survivor_death_poisons_the_stream() {
     let sc = Scenario {
         bufs: 6,
         tiles_per_launch: 2,
         ops: vec![Op::Enqueue(0, 1, 2), Op::Wait, Op::Enqueue(3, 4, 5), Op::Wait],
         outcomes: vec![vec![Outcome::Ok, Outcome::Dead]],
+        retry_limit: 0,
         eager_writeback: false,
     };
     let st = explore(&sc);
     assert!(st.violations.is_empty(), "violations: {:?}", st.violations);
     assert_eq!(st.leaked_max, 1, "exactly the dead worker's staging buffer is lost");
-    assert!(st.errors_seen.iter().any(|e| e.starts_with("ReplyLost")), "{:?}", st.errors_seen);
+    assert!(st.errors_seen.iter().any(|e| e.starts_with("NoSurvivors")), "{:?}", st.errors_seen);
     assert!(
         st.errors_seen.iter().any(|e| e == "Poisoned"),
-        "the call after a lost reply must observe poison: {:?}",
+        "the call after a zero-survivor death must observe poison: {:?}",
         st.errors_seen
     );
+}
+
+/// The retry arm, invariant 4: a transient tile (fails twice, then
+/// computes) inside the budget heals with **no** surfaced error, every
+/// staging buffer conserved, FIFO retirement untouched — and the chained
+/// follow-up launch reads the healed writeback (read stability would
+/// flag a stale or torn value).  The retry count is the same in every
+/// schedule: retries are leader-deterministic, not racy.
+#[test]
+fn flaky_tiles_retry_to_success_and_conserve_buffers() {
+    let sc = Scenario {
+        bufs: 4,
+        tiles_per_launch: 2,
+        // L1 chains on L0's output: its enqueue hazard-drains L0, so the
+        // retries run inside that drain — the earliest the real stream
+        // can run them too.
+        ops: vec![Op::Enqueue(0, 1, 2), Op::Enqueue(2, 1, 3), Op::Wait],
+        outcomes: vec![vec![Outcome::Flaky(2), Outcome::Ok]],
+        retry_limit: 2,
+        eager_writeback: false,
+    };
+    let st = explore(&sc);
+    assert!(st.violations.is_empty(), "violations: {:?}", st.violations);
+    assert!(st.errors_seen.is_empty(), "a healed launch surfaces nothing: {:?}", st.errors_seen);
+    assert_eq!(st.leaked_max, 0, "the retry arm must reuse the returned buffer");
+    assert_eq!(
+        (st.retries_min, st.retries_max),
+        (2, 2),
+        "exactly the two failed deliveries retry, in every schedule"
+    );
+    assert!(st.hazard_drains_min >= 1, "the chain still drains its writer first");
+}
+
+/// An exhausted retry budget settles as LaunchFailed — after exactly
+/// `retry_limit` redispatches, never more (no retry storm), never a
+/// poison — and the stream stays usable for the follow-up launch.
+#[test]
+fn exhausted_retry_budget_fails_without_retrying_forever() {
+    let sc = Scenario {
+        bufs: 6,
+        tiles_per_launch: 2,
+        ops: vec![Op::Enqueue(0, 1, 2), Op::Wait, Op::Enqueue(3, 4, 5), Op::Wait],
+        outcomes: vec![vec![Outcome::Fail, Outcome::Ok]],
+        retry_limit: 1,
+        eager_writeback: false,
+    };
+    let st = explore(&sc);
+    assert!(st.violations.is_empty(), "violations: {:?}", st.violations);
+    assert_eq!(st.leaked_max, 0, "every delivery's buffer comes home, retried or not");
+    assert_eq!((st.retries_min, st.retries_max), (1, 1), "the budget bounds the redispatches");
+    assert!(st.errors_seen.iter().any(|e| e.starts_with("LaunchFailed")), "{:?}", st.errors_seen);
+    assert!(
+        !st.errors_seen.iter().any(|e| e == "Poisoned"),
+        "budget exhaustion is a launch failure, not poison: {:?}",
+        st.errors_seen
+    );
+}
+
+/// A flaky tile that heals while an independent launch pipelines behind
+/// it: retries stay confined to the front launch's retirement, the
+/// disjoint launch overlaps it un-drained, and both complete cleanly in
+/// every schedule.
+#[test]
+fn retries_do_not_stall_the_pipeline() {
+    let sc = Scenario {
+        bufs: 6,
+        tiles_per_launch: 2,
+        ops: vec![Op::Enqueue(0, 1, 2), Op::Enqueue(3, 4, 5), Op::Wait],
+        outcomes: vec![vec![Outcome::Flaky(1), Outcome::Ok]],
+        retry_limit: 2,
+        eager_writeback: false,
+    };
+    let st = explore(&sc);
+    assert!(st.violations.is_empty(), "violations: {:?}", st.violations);
+    assert!(st.errors_seen.is_empty(), "errors: {:?}", st.errors_seen);
+    assert_eq!(st.inflight_max, 2, "a retrying front launch must not block pipelining");
+    assert_eq!(st.hazard_drains_max, 0, "disjoint sets never force a drain");
+    assert_eq!((st.retries_min, st.retries_max), (1, 1));
+    assert_eq!(st.leaked_max, 0);
 }
 
 /// `download(x)` retires exactly through the last writer of `x`;
@@ -654,6 +809,7 @@ fn download_drains_only_its_writers_prefix() {
         // L0 writes 2, L1 writes 5; downloading 2 must not retire L1.
         ops: vec![Op::Enqueue(0, 1, 2), Op::Enqueue(3, 4, 5), Op::Download(2), Op::Wait],
         outcomes: vec![],
+        retry_limit: 0,
         eager_writeback: false,
     };
     let st = explore(&sc);
@@ -678,6 +834,7 @@ fn mixed_pipeline_holds_every_invariant() {
             Op::Wait,
         ],
         outcomes: vec![],
+        retry_limit: 0,
         eager_writeback: false,
     };
     let st = explore(&sc);
@@ -697,6 +854,7 @@ fn scenario_outcomes_default_to_ok() {
         tiles_per_launch: 1,
         ops: vec![],
         outcomes: vec![vec![Outcome::Fail]],
+        retry_limit: 0,
         eager_writeback: false,
     };
     assert_eq!(sc.outcome(0, 0), Outcome::Fail);

@@ -1,10 +1,18 @@
-//! Failure-path injection tests for the device stream (ISSUE 5).
+//! Failure-path injection tests for the device stream (ISSUE 5 + the
+//! ISSUE 7 self-healing ladder).
 //!
 //! Every fault — a backend error on a chosen tile, a worker panic, a CU
 //! whose runtime never comes up, a handle used on the wrong stream, a wait
 //! after an error — must surface as a **typed** [`StreamError`], never a
 //! panic and never a hang, and the stream must stay usable afterwards
 //! (a failed launch writes nothing, so C keeps its pre-launch contents).
+//!
+//! The healing ladder (ISSUE 7) is driven end to end here too: transient
+//! tile faults retried to bit-identical success, a dead CU respawned and
+//! its lost dispatches replayed, an exhausted respawn budget quarantining
+//! the CU while the stream degrades onto the survivors, and the
+//! zero-survivor bottom of the ladder poisoning with
+//! [`StreamError::NoSurvivors`].
 //!
 //! Faults are injected through [`FaultSpec`] in the device config (the
 //! crate's failpoints), so these tests drive the *real* worker/stream
@@ -13,24 +21,35 @@
 //! config so the CI tile-shape matrix (`APFP_TILE_N/M/K`) exercises the
 //! fault paths under clipped and non-divisible tiles too.
 
+use std::time::Duration;
+
 use apfp::baseline;
-use apfp::config::{ApfpConfig, FaultSpec};
+use apfp::config::{ApfpConfig, FaultSpec, RetryPolicy};
 use apfp::coordinator::scheduler::Partition;
 use apfp::coordinator::{Device, Matrix, StreamError};
 use apfp::runtime::BackendKind;
 
-/// A native-backend device with the given fault injection.  Forced native:
-/// fault handling is backend-agnostic and must be testable on any
-/// checkout, artifacts or not.
-fn faulty_device(cus: usize, faults: FaultSpec) -> Device {
+/// A native-backend device with the given fault injection and retry
+/// policy.  Forced native: fault handling is backend-agnostic and must be
+/// testable on any checkout, artifacts or not.  The reply-probe interval
+/// is dropped to 25ms so death detection is fast — these tests measure
+/// semantics, not wall time.
+fn healing_device(cus: usize, faults: FaultSpec, retry: RetryPolicy) -> Device {
     let cfg = ApfpConfig {
         backend: BackendKind::Native,
         compute_units: cus,
         faults,
+        retry,
+        reply_timeout: Duration::from_millis(25),
         ..Default::default()
     };
     let dir = std::env::temp_dir().join("apfp_stream_faults_no_artifacts/none");
     Device::new(cfg, &dir).expect("native device must open on a clean checkout")
+}
+
+/// [`healing_device`] with the default retry budget and no backoff sleep.
+fn faulty_device(cus: usize, faults: FaultSpec) -> Device {
+    healing_device(cus, faults, RetryPolicy { backoff_ms: 0, ..Default::default() })
 }
 
 /// The (row, column) origin of a tile that exists in a `wide_m()`-column
@@ -155,7 +174,7 @@ fn cu_runtime_init_failure_errors_every_tile_of_its_band() {
             // first
             assert_eq!(*failed, expected_failed, "{tiles}");
             assert_eq!(*total, expected_total);
-            assert_eq!(tiles.matches("CU1 tile(").count(), expected_failed, "{tiles}");
+            assert_eq!(tiles.matches("slot1 tile(").count(), expected_failed, "{tiles}");
             assert!(tiles.contains("runtime unavailable"), "{tiles}");
         }
         _ => unreachable!(),
@@ -231,12 +250,15 @@ fn wait_after_error_sequences_stay_clean() {
 }
 
 #[test]
-fn worker_death_poisons_the_stream_instead_of_hanging() {
-    // A worker thread that exits reply-less (a crashed CU — nothing the
-    // catch_unwind containment can see) is the one failure the reply
-    // counting cannot absorb.  The drain loop's liveness probe must turn
-    // it into a typed ReplyLost within a bounded time, poison the stream,
-    // and every later call must report Poisoned — no hang, no panic.
+fn zero_survivors_poison_the_stream_instead_of_hanging() {
+    // The bottom of the healing ladder.  One CU that dies on *every*
+    // delivery of one tile: the liveness probe detects the reply-less
+    // death, the supervisor respawns it (default budget: once), the
+    // replayed tile kills the fresh incarnation too, the second respawn
+    // request quarantines the CU — and with zero survivors left the drain
+    // must turn the loss into a typed NoSurvivors within a bounded time,
+    // poison the stream, and every later call must report Poisoned — no
+    // hang, no panic.
     let tm = ApfpConfig::default().tile_m;
     let tn = ApfpConfig::default().tile_n;
     // die on the launch's last tile so every job is already submitted and
@@ -259,9 +281,19 @@ fn worker_death_poisons_the_stream_instead_of_hanging() {
         t0.elapsed()
     );
     assert!(
-        matches!(err.downcast_ref::<StreamError>(), Some(StreamError::ReplyLost { .. })),
+        matches!(err.downcast_ref::<StreamError>(), Some(StreamError::NoSurvivors { .. })),
         "{err:#}"
     );
+    // the whole ladder ran: one respawn spent, then quarantine
+    let m = dev.metrics();
+    assert_eq!(m.respawns, 1, "the respawn budget was spent before quarantining");
+    assert_eq!(m.quarantined_cus, 1, "the re-dead CU must be quarantined");
+    assert!(m.retries >= 1, "the lost dispatch was replayed at least once");
+    let health = dev.health();
+    assert_eq!(health.len(), 1);
+    assert_eq!(health[0].respawns, 1);
+    assert!(health[0].quarantined, "health ledger must record the quarantine");
+    assert!(health[0].last_incident.is_some(), "health ledger must record the incident");
     // the stream is cleanly poisoned: every later call reports it
     for attempt in 0..2 {
         let err = s.wait().expect_err("poisoned stream must keep erroring");
@@ -278,6 +310,15 @@ fn worker_death_poisons_the_stream_instead_of_hanging() {
     let err = s.download(hc).expect_err("download on a poisoned stream");
     assert!(
         matches!(err.downcast_ref::<StreamError>(), Some(StreamError::Poisoned { .. })),
+        "{err:#}"
+    );
+    // a fresh stream on the same device hits the zero-survivor gate at
+    // enqueue: the quarantine ledger is device-wide, not per stream
+    let mut s2 = dev.stream().unwrap();
+    let (ha2, hb2, hc2) = (s2.upload(&a), s2.upload(&b), s2.upload(&c));
+    let err = s2.enqueue_gemm(ha2, hb2, hc2).expect_err("no CU survives to enqueue onto");
+    assert!(
+        matches!(err.downcast_ref::<StreamError>(), Some(StreamError::NoSurvivors { .. })),
         "{err:#}"
     );
 }
@@ -313,4 +354,139 @@ fn dependent_enqueue_surfaces_the_failed_launch_it_waits_on() {
     s.enqueue_gemm(ha, hb2, hc2).unwrap();
     let c2_next = baseline::gemm_serial(&a, &b2, &c2);
     assert_eq!(s.download(hc2).unwrap(), c2_next);
+}
+
+#[test]
+fn transient_tile_fault_is_retried_to_bit_identical_success() {
+    // First rung of the ladder: `fail_tile=RxC*2` fails the faulted
+    // tile's first two deliveries, the third succeeds — inside the
+    // default retry budget (retry_limit = 2 redispatches), so the launch
+    // completes with no surfaced error and the result is bit-identical to
+    // the serial reference.
+    let (r0, c0) = fault_origin();
+    let faults = FaultSpec {
+        fail_tile: Some((r0, c0)),
+        fail_attempts: Some(2),
+        ..Default::default()
+    };
+    let dev = faulty_device(2, faults);
+    let (n, k, m) = (10, 6, wide_m());
+    let a = Matrix::random(n, k, 448, 80, 30);
+    let b = Matrix::random(k, m, 448, 81, 30);
+    let c = Matrix::random(n, m, 448, 82, 30);
+
+    let mut s = dev.stream().unwrap();
+    let (ha, hb, hc) = (s.upload(&a), s.upload(&b), s.upload(&c));
+    s.enqueue_gemm(ha, hb, hc).unwrap();
+    s.wait().expect("a transient fault inside the retry budget must heal");
+    let once = baseline::gemm_serial(&a, &b, &c);
+    assert_eq!(s.download(hc).unwrap(), once, "retried launch must stay bit-identical");
+    let metrics = dev.metrics();
+    assert_eq!(metrics.retries, 2, "exactly the two failed deliveries were retried");
+    assert_eq!(metrics.respawns, 0, "an errored tile never costs a respawn");
+    assert_eq!(metrics.quarantined_cus, 0);
+
+    // a second, dependent launch trips the same transient fault (attempt
+    // counts are per delivery, not global) and heals the same way: the
+    // chain stays bit-exact across launches
+    s.enqueue_gemm(ha, hb, hc).unwrap();
+    s.wait().expect("the second launch must heal too");
+    assert_eq!(s.download(hc).unwrap(), baseline::gemm_serial(&a, &b, &once));
+    assert_eq!(dev.metrics().retries, 4);
+}
+
+#[test]
+fn cu_death_is_respawned_and_inflight_launches_complete_bit_identical() {
+    // Second rung: `die_on_tile=RxC*1` kills CU0's thread on the faulted
+    // tile's first delivery only.  The liveness probe detects the
+    // reply-less death, the supervisor respawns the CU with a fresh
+    // runtime, and every lost dispatch — including the second, pipelined
+    // launch's jobs that died in the old incarnation's queue — is
+    // replayed.  Both launches must complete bit-identical to the serial
+    // reference.
+    let tn = ApfpConfig::default().tile_n;
+    let die_at = fault_origin(); // row 0: CU0's band; absent from narrow shapes
+    let faults = FaultSpec {
+        die_on_tile: Some(die_at),
+        die_attempts: Some(1),
+        ..Default::default()
+    };
+    let dev = faulty_device(2, faults);
+    let (n, k) = (2 * tn, 5); // two non-empty bands
+    let a = Matrix::random(n, k, 448, 90, 30);
+    let b = Matrix::random(k, wide_m(), 448, 91, 30);
+    let c = Matrix::random(n, wide_m(), 448, 92, 30);
+    // an independent launch with a die-origin-free shape, pipelined behind
+    // the dying one over disjoint buffers
+    let m2 = ApfpConfig::default().tile_m.min(7);
+    let a2 = Matrix::random(n, k, 448, 93, 30);
+    let b2 = Matrix::random(k, m2, 448, 94, 30);
+    let c2 = Matrix::random(n, m2, 448, 95, 30);
+
+    let mut s = dev.stream().unwrap();
+    let (ha, hb, hc) = (s.upload(&a), s.upload(&b), s.upload(&c));
+    let (ha2, hb2, hc2) = (s.upload(&a2), s.upload(&b2), s.upload(&c2));
+    s.enqueue_gemm(ha, hb, hc).unwrap();
+    s.enqueue_gemm(ha2, hb2, hc2).unwrap();
+    s.wait().expect("a single CU death must heal through respawn");
+
+    assert_eq!(s.download(hc).unwrap(), baseline::gemm_serial(&a, &b, &c));
+    assert_eq!(s.download(hc2).unwrap(), baseline::gemm_serial(&a2, &b2, &c2));
+    let metrics = dev.metrics();
+    assert!(metrics.inflight_max >= 2, "disjoint launches must pipeline: {metrics:?}");
+    assert_eq!(metrics.respawns, 1, "one death, one respawn");
+    assert_eq!(metrics.quarantined_cus, 0, "the respawn budget absorbed the death");
+    assert!(metrics.retries >= 1, "the lost dispatch was replayed: {metrics:?}");
+    let health = dev.health();
+    assert_eq!(health[0].respawns, 1, "health ledger must record CU0's respawn");
+    assert!(!health[0].quarantined);
+    assert!(health[0].last_incident.is_some(), "the incident must be on the ledger");
+    assert_eq!(health[1].respawns, 0, "CU1 never died");
+}
+
+#[test]
+fn exhausted_respawn_budget_quarantines_and_the_stream_degrades() {
+    // Third rung: with `respawn_limit = 0` the first death quarantines
+    // CU0 outright.  Its lost dispatch re-routes to the survivor and the
+    // in-flight launch still completes bit-identical; a later launch on
+    // the same stream schedules degraded (banded across the survivors
+    // only) from the start — quarantine is scheduling state, not poison.
+    let tn = ApfpConfig::default().tile_n;
+    let die_at = fault_origin();
+    let faults = FaultSpec {
+        die_on_tile: Some(die_at),
+        die_attempts: Some(1),
+        ..Default::default()
+    };
+    let retry = RetryPolicy { respawn_limit: 0, backoff_ms: 0, ..Default::default() };
+    let dev = healing_device(2, faults, retry);
+    let (n, k) = (2 * tn, 5);
+    let a = Matrix::random(n, k, 448, 100, 30);
+    let b = Matrix::random(k, wide_m(), 448, 101, 30);
+    let c = Matrix::random(n, wide_m(), 448, 102, 30);
+
+    let mut s = dev.stream().unwrap();
+    let (ha, hb, hc) = (s.upload(&a), s.upload(&b), s.upload(&c));
+    s.enqueue_gemm(ha, hb, hc).unwrap();
+    s.wait().expect("the lost dispatch must re-route to the survivor");
+    assert_eq!(s.download(hc).unwrap(), baseline::gemm_serial(&a, &b, &c));
+    let metrics = dev.metrics();
+    assert_eq!(metrics.respawns, 0, "a zero respawn budget quarantines without respawning");
+    assert_eq!(metrics.quarantined_cus, 1, "{metrics:?}");
+    let health = dev.health();
+    assert!(health[0].quarantined, "CU0 must be quarantined on the ledger");
+    assert_eq!(health[0].respawns, 0);
+    assert!(!health[1].quarantined, "the survivor stays in service");
+
+    // degraded-mode scheduling: a fresh launch with a die-origin-free
+    // shape runs entirely on the survivor, bit-identical, with no new
+    // incidents
+    let m2 = ApfpConfig::default().tile_m.min(7);
+    let b2 = Matrix::random(k, m2, 448, 103, 30);
+    let c2 = Matrix::random(n, m2, 448, 104, 30);
+    let (hb2, hc2) = (s.upload(&b2), s.upload(&c2));
+    s.enqueue_gemm(ha, hb2, hc2).unwrap();
+    s.wait().expect("a degraded stream must stay usable");
+    assert_eq!(s.download(hc2).unwrap(), baseline::gemm_serial(&a, &b2, &c2));
+    assert_eq!(dev.metrics().quarantined_cus, 1, "no new quarantines in degraded mode");
 }

@@ -973,22 +973,25 @@ fn in_hazard_scope(rel: &str) -> bool {
     HAZARD_SCOPE.iter().any(|p| rel == *p || rel.ends_with(p))
 }
 
-fn run_hazard_rule(fl: &FileLint, findings: &mut Vec<Finding>) {
+/// Scan braced `token { ... }` literals for the fields the reply protocol
+/// rides on: `c_buf` (the staging buffer returns on every arm) and
+/// `attempt` (the delivery counter the retry arm keys on).  Declarations
+/// (`struct`/`enum`/`impl` heads, return types) are skipped; destructuring
+/// patterns that elide fields with `..` are exempt from the `attempt`
+/// requirement (the rest pattern already carries it).
+fn scan_reply_literals(fl: &FileLint, token: &str, findings: &mut Vec<Finding>) {
     let masked = &fl.masked;
     let n = masked.len();
-
-    // every TileResult struct literal must carry c_buf (both Ok and Err
-    // arms return the C staging buffer to the leader)
     let mut i = 0;
-    while let Some(at) = memfind(masked, b"TileResult", i) {
+    while let Some(at) = memfind(masked, token.as_bytes(), i) {
         i = at;
         let before = if i > 0 { masked[i - 1] } else { b' ' };
         if is_ident(before) {
-            i += "TileResult".len();
+            i += token.len();
             continue;
         }
         let head = String::from_utf8_lossy(&masked[i.saturating_sub(16)..i]).into_owned();
-        let mut j = i + "TileResult".len();
+        let mut j = i + token.len();
         while j < n && masked[j].is_ascii_whitespace() {
             j += 1;
         }
@@ -996,7 +999,7 @@ fn run_hazard_rule(fl: &FileLint, findings: &mut Vec<Finding>) {
             || masked[j] != b'{'
             || ["struct", "impl", "enum", "->"].iter().any(|k| head.contains(k))
         {
-            i += "TileResult".len();
+            i += token.len();
             continue;
         }
         let mut depth = 0i32;
@@ -1013,21 +1016,47 @@ fn run_hazard_rule(fl: &FileLint, findings: &mut Vec<Finding>) {
             e += 1;
         }
         let lineno = fl.line_of(i);
-        if !fl.in_test(lineno) && memfind(&masked[j..e.min(n)], b"c_buf", 0).is_none() {
-            let (allowed, reason) = allow_for(fl, lineno, RULE_HAZARD);
-            findings.push(Finding {
-                rule: RULE_HAZARD,
-                file: fl.rel.clone(),
-                line: lineno,
-                message: "TileResult literal without `c_buf`: the staging buffer must \
-                          return to the leader on every arm"
-                    .to_string(),
-                allowed,
-                reason,
-            });
+        let body = &masked[j..e.min(n)];
+        if !fl.in_test(lineno) {
+            if memfind(body, b"c_buf", 0).is_none() {
+                let (allowed, reason) = allow_for(fl, lineno, RULE_HAZARD);
+                findings.push(Finding {
+                    rule: RULE_HAZARD,
+                    file: fl.rel.clone(),
+                    line: lineno,
+                    message: format!(
+                        "`{token}` literal without `c_buf`: the staging buffer must \
+                         ride every job and reply arm"
+                    ),
+                    allowed,
+                    reason,
+                });
+            } else if memfind(body, b"..", 0).is_none()
+                && memfind(body, b"attempt", 0).is_none()
+            {
+                let (allowed, reason) = allow_for(fl, lineno, RULE_HAZARD);
+                findings.push(Finding {
+                    rule: RULE_HAZARD,
+                    file: fl.rel.clone(),
+                    line: lineno,
+                    message: format!(
+                        "`{token}` literal without `attempt`: the delivery counter \
+                         the retry budget keys on must ride every job and reply"
+                    ),
+                    allowed,
+                    reason,
+                });
+            }
         }
         i = e;
     }
+}
+
+fn run_hazard_rule(fl: &FileLint, findings: &mut Vec<Finding>) {
+    // every TileResult reply and Job::GemmTile job must carry the staging
+    // buffer and the delivery-attempt counter (ISSUE 7's retry arm)
+    scan_reply_literals(fl, "TileResult", findings);
+    scan_reply_literals(fl, "GemmTile", findings);
     if !fl.rel.ends_with("stream.rs") {
         return;
     }
@@ -1075,6 +1104,19 @@ fn run_hazard_rule(fl: &FileLint, findings: &mut Vec<Finding>) {
                 line: lineno,
                 message: "shared `Inflight` channel type: per-launch reply channels \
                           replaced it (PR 5)"
+                    .to_string(),
+                allowed,
+                reason,
+            });
+        }
+        if ident_mentioned(line, "REPLY_LIVENESS_INTERVAL") {
+            let (allowed, reason) = allow_for(fl, lineno, RULE_HAZARD);
+            findings.push(Finding {
+                rule: RULE_HAZARD,
+                file: fl.rel.clone(),
+                line: lineno,
+                message: "hardcoded `REPLY_LIVENESS_INTERVAL`: the probe interval is \
+                          `ApfpConfig::reply_timeout` now (ISSUE 7)"
                     .to_string(),
                 allowed,
                 reason,

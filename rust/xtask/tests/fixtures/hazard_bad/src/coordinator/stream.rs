@@ -9,6 +9,8 @@ pub struct Inflight {
     pub id: u64,
 }
 
+const REPLY_LIVENESS_INTERVAL: u64 = 250;
+
 pub fn drain(rx: &std::sync::mpsc::Receiver<TileResult>) -> Option<TileResult> {
     let r = rx.recv().ok();
     let (_tx, _rx2) = channel();

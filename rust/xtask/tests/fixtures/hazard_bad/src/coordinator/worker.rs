@@ -7,3 +7,17 @@ pub fn reply_ok(c_buf: u64) -> TileResult {
 pub fn reply_bad() -> TileResult {
     TileResult { err: None }
 }
+
+pub enum Job {
+    GemmTile { c_buf: u64, attempt: u32 },
+}
+
+pub fn job_bad() -> Job {
+    Job::GemmTile { c_buf: 7 }
+}
+
+pub fn job_elided(j: Job) -> u64 {
+    match j {
+        Job::GemmTile { c_buf, .. } => c_buf,
+    }
+}
