@@ -51,6 +51,13 @@ RULE_ANNOTATION = "annotation"
 
 KNOWN_RULES = (RULE_ALLOC, RULE_COVERAGE, RULE_PANIC, RULE_INDEX, RULE_HAZARD)
 
+# Kernel roots that must carry `// apfp-lint: no_alloc` at every non-test
+# definition: the fixed-width GEMM fast path is only sound while its entry
+# points stay on the allocation-free discipline, so silently dropping an
+# annotation (and with it the transitive denylist walk) is itself an
+# `alloc-coverage` finding.
+REQUIRED_NO_ALLOC = ("mul_fixed", "gemm_fixed", "exec_gemm_tile_fixed")
+
 # Files subject to the panic / index discipline (relative-path prefixes).
 PANIC_SCOPE = ("runtime/", "coordinator/", "config.rs")
 # Files subject to the hazard-protocol structure rule.
@@ -553,6 +560,19 @@ def run_alloc_rule(files: dict, coverage_text: str | None, findings: list) -> No
         for f in fl.fns:
             if not fl.in_test(f.sig_line):
                 fn_map.setdefault(f.name, []).append(f)
+
+    # required roots: every non-test definition of a fixed-path kernel
+    # entry point must be annotated, independent of whether any other
+    # root exists — this runs before the `if roots:` coverage gate below
+    for name in REQUIRED_NO_ALLOC:
+        for f in fn_map.get(name, []):
+            if f.no_alloc:
+                continue
+            allowed, reason = allow_for(files[f.file], f.sig_line, RULE_COVERAGE)
+            findings.append(Finding(
+                RULE_COVERAGE, f.file, f.sig_line,
+                f"`{name}` is a fixed-path kernel root and must carry "
+                "`// apfp-lint: no_alloc`", allowed, reason))
 
     roots = [f for fl in files.values() for f in fl.fns if f.no_alloc]
 

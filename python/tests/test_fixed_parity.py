@@ -1,0 +1,405 @@
+"""Fixed-width fast-path parity, mirrored from ``rust/tests/fixed_parity.rs``.
+
+Self-contained (stdlib only, always collected): a line-mirror of the Rust
+const-generic kernels — the Comba ``(lo, hi)`` split product, the
+``mul_into`` renormalization, and the ``Guarded`` ``[1 guard | L | 1
+overflow]`` adder pipeline with its ``64 * (L + 2)`` clamp and
+sticky-before-shift discipline — replayed over the *same* xorshift64*
+operand streams as the Rust suite (same seeds, same draw order) and
+checked against an exact-integer RNDZ reference.  The Rust suite pins
+fixed == dynamic; this one independently pins fixed == exact math, so the
+two cannot drift together.
+
+Covers zeros, deeply negative exponents, and carry-chain boundary
+mantissas (all-ones, MSB-only) at the paper's 448-bit (7-limb) and
+960-bit (15-limb) widths.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+MASK64 = (1 << 64) - 1
+MASK128 = (1 << 128) - 1
+ZERO_EXP = -(1 << 61)
+
+# Compiled crossover mirrored from rust/src/bigint/mod.rs
+# KARATSUBA_THRESHOLD; the fixed path splits only for even widths at or
+# above it, so both paper widths (7, 15) bottom out in Comba.
+KARATSUBA_THRESHOLD = 40
+
+
+def fixed_uses_karatsuba(limbs: int) -> bool:
+    return limbs >= KARATSUBA_THRESHOLD and limbs % 2 == 0
+
+
+# --------------------------------------------------------------------------
+# xorshift64* — exact port of rust/src/testkit/mod.rs
+# --------------------------------------------------------------------------
+
+
+class Rng:
+    def __init__(self, seed: int):
+        self.state = max((seed * 2685821657736338717) & MASK64, 1)
+
+    def next_u64(self) -> int:
+        x = self.state
+        x ^= x >> 12
+        x = (x ^ (x << 25)) & MASK64
+        x ^= x >> 27
+        self.state = x
+        return (x * 0x2545F4914F6CDD1D) & MASK64
+
+    def below(self, n: int) -> int:
+        return (self.next_u64() * n) >> 64
+
+    def range_i64(self, lo: int, hi: int) -> int:
+        return lo + self.below(hi - lo + 1)
+
+    def bool(self) -> bool:
+        return self.next_u64() & 1 == 1
+
+    def limbs(self, n: int) -> list[int]:
+        return [self.next_u64() for _ in range(n)]
+
+
+def rand_ap(rng: Rng, prec: int, exp_range: int):
+    """Mirror of testkit::rand_ap — returns (sign, exp, mant_limbs)."""
+    n = prec // 64
+    mant = rng.limbs(n)
+    mant[n - 1] |= 1 << 63
+    sign = rng.bool()
+    exp = rng.range_i64(-exp_range, exp_range)
+    return sign, exp, mant
+
+
+# --------------------------------------------------------------------------
+# The fixed-width value and kernel mirrors
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Ap:
+    """Mirror of ApFloatN<L>: value = (-1)^sign * M * 2^(exp - 64*L)."""
+
+    sign: bool
+    exp: int
+    mant: list[int]  # L little-endian 64-bit limbs
+
+    def is_zero(self) -> bool:
+        return all(m == 0 for m in self.mant)
+
+    def key(self):
+        return self.sign, self.exp, tuple(self.mant)
+
+
+def zero(L: int) -> Ap:
+    return Ap(False, ZERO_EXP, [0] * L)
+
+
+def limbs_to_int(limbs) -> int:
+    v = 0
+    for i, m in enumerate(limbs):
+        v |= m << (64 * i)
+    return v
+
+
+def int_to_limbs(v: int, n: int) -> list[int]:
+    return [(v >> (64 * i)) & MASK64 for i in range(n)]
+
+
+def cmp_mag(x: Ap, y: Ap) -> int:
+    if x.exp != y.exp:
+        return -1 if x.exp < y.exp else 1
+    a, b = limbs_to_int(x.mant), limbs_to_int(y.mant)
+    return (a > b) - (a < b)
+
+
+def widening_mul(a: int, b: int):
+    t = a * b
+    return t & MASK64, t >> 64
+
+
+def mul_comba_fixed(a: list[int], b: list[int], L: int):
+    """Line-mirror of bigint::fixed::mul_comba_fixed: 128-bit accumulator,
+    per-column overflow counter, columns 0..L in lo, L..2L-1 in hi, final
+    carry in hi[L-1]."""
+    lo, hi = [0] * L, [0] * L
+    if L == 0:
+        return lo, hi
+    acc = 0  # low 128 bits of the running column sum
+    over = 0  # count of 2^128 overflows within one column
+    for k in range(L):
+        for i in range(k + 1):
+            plo, phi = widening_mul(a[i], b[k - i])
+            t = acc + ((phi << 64) | plo)
+            over += t >> 128
+            acc = t & MASK128
+        lo[k] = acc & MASK64
+        acc = (acc >> 64) | (over << 64)
+        over = 0
+    for k in range(L, 2 * L - 1):
+        for i in range(k - (L - 1), L):
+            plo, phi = widening_mul(a[i], b[k - i])
+            t = acc + ((phi << 64) | plo)
+            over += t >> 128
+            acc = t & MASK128
+        hi[k - L] = acc & MASK64
+        acc = (acc >> 64) | (over << 64)
+        over = 0
+    hi[L - 1] = acc & MASK64
+    assert acc >> 64 == 0, "comba column carry must be consumed"
+    return lo, hi
+
+
+def mul_fixed_ap(x: Ap, y: Ap, L: int) -> Ap:
+    """Mirror of ApFloatN::mul_into (RNDZ): nbits is 2p or 2p-1, so the
+    renormalizing shift is the high half or the high half pulled up one."""
+    if x.is_zero() or y.is_zero():
+        return zero(L)
+    assert not fixed_uses_karatsuba(L), "paper widths bottom out in Comba"
+    lo, hi = mul_comba_fixed(x.mant, y.mant, L)
+    out = zero(L)
+    if hi[L - 1] >> 63:
+        out.mant = list(hi)
+        out.exp = x.exp + y.exp
+    else:
+        carry = lo[L - 1] >> 63
+        for i in range(L):
+            nxt = hi[i] >> 63
+            out.mant[i] = ((hi[i] << 1) & MASK64) | carry
+            carry = nxt
+        out.exp = x.exp + y.exp - 1
+    assert out.mant[L - 1] >> 63 == 1, "product renormalizes"
+    out.sign = x.sign != y.sign
+    return out
+
+
+def add_core_fixed(x: Ap, y: Ap, flip_y: bool, L: int) -> Ap:
+    """Mirror of softfloat::fixed::add_core_fixed on the Guarded
+    [1 guard | L | 1 overflow] workspace, expressed on the joined integer
+    (bit i of the integer == bit i of the virtual (L+2)-limb vector)."""
+    y_sign = y.sign != flip_y
+    if y.is_zero():
+        return Ap(x.sign, x.exp, list(x.mant))
+    if x.is_zero():
+        return Ap(y_sign, y.exp, list(y.mant))
+
+    # stage 1: order by magnitude
+    swap = cmp_mag(x, y) < 0
+    big_sign, big_exp = (y_sign, y.exp) if swap else (x.sign, x.exp)
+    small_exp = x.exp if swap else y.exp
+    same_sign = x.sign == y_sign
+
+    # stage 2: alignment — big's MSB at bit 64 + p - 1, sticky read before
+    # the shift consumes the pre-shift bits, distance clamped to the
+    # workspace width 64 * (L + 2)
+    p = 64 * L
+    big_mant, small_mant = (y.mant, x.mant) if swap else (x.mant, y.mant)
+    v = limbs_to_int(big_mant) << 64
+    small = limbs_to_int(small_mant) << 64
+    d = min(big_exp - small_exp, 64 * (L + 2))
+    sticky = small & ((1 << d) - 1) != 0
+    small >>= d
+
+    # stage 3: wide add / subtract with the RNDZ sticky correction
+    if same_sign:
+        v += small
+        assert v < 1 << (64 * (L + 2)), "overflow limb absorbs the carry"
+    else:
+        v -= small
+        assert v >= 0, "|big| >= |small| by stage 1"
+        if sticky:
+            v -= 1
+            assert v >= 0
+
+    # stages 4+5: renormalize + truncate
+    nbits = v.bit_length()
+    if nbits == 0:
+        return zero(L)
+    if nbits >= p:
+        m = (v >> (nbits - p)) & ((1 << p) - 1)
+    else:
+        m = (v << (p - nbits)) & ((1 << p) - 1)
+    return Ap(big_sign, big_exp + (nbits - (64 + p)), int_to_limbs(m, L))
+
+
+def mac_fixed_ap(acc: Ap, a: Ap, b: Ap, L: int) -> Ap:
+    """Mirror of mac_into: product rounded to width, then accumulated."""
+    return add_core_fixed(acc, mul_fixed_ap(a, b, L), False, L)
+
+
+# --------------------------------------------------------------------------
+# Exact-integer RNDZ reference (independent of the limb kernels)
+# --------------------------------------------------------------------------
+
+
+def ref_round(num: int, scale: int, p: int) -> Ap:
+    """RNDZ-normalize the exact value num * 2^scale to p bits."""
+    L = p // 64
+    if num == 0:
+        return zero(L)
+    n = abs(num)
+    nbits = n.bit_length()
+    m = n >> (nbits - p) if nbits >= p else n << (p - nbits)
+    return Ap(num < 0, scale + nbits, int_to_limbs(m, L))
+
+
+def ref_signed(x: Ap, p: int):
+    """Exact (num, scale) with value = num * 2^scale."""
+    m = limbs_to_int(x.mant)
+    return (-m if x.sign else m), x.exp - p
+
+
+def ref_mul(x: Ap, y: Ap, p: int) -> Ap:
+    nx, sx = ref_signed(x, p)
+    ny, sy = ref_signed(y, p)
+    return ref_round(nx * ny, sx + sy, p)
+
+
+def ref_add(x: Ap, y: Ap, p: int, flip_y: bool = False) -> Ap:
+    # mirror the adder's zero short-circuits so zero signs stay canonical
+    if y.is_zero():
+        return Ap(x.sign, x.exp, list(x.mant))
+    if x.is_zero():
+        return Ap(y.sign != flip_y, y.exp, list(y.mant))
+    nx, sx = ref_signed(x, p)
+    ny, sy = ref_signed(y, p)
+    if flip_y:
+        ny = -ny
+    s = min(sx, sy)
+    return ref_round((nx << (sx - s)) + (ny << (sy - s)), s, p)
+
+
+def ref_mac(acc: Ap, a: Ap, b: Ap, p: int) -> Ap:
+    return ref_add(acc, ref_mul(a, b, p), p)
+
+
+# --------------------------------------------------------------------------
+# Operand stream — mirror of operand() in rust/tests/fixed_parity.rs
+# --------------------------------------------------------------------------
+
+
+def from_ap(v, L: int) -> Ap:
+    sign, exp, mant = v
+    assert len(mant) == L, "width mismatch: ApFloat prec vs LIMBS"
+    return Ap(sign, exp, list(mant))
+
+
+def operand(rng: Rng, L: int, prec: int) -> Ap:
+    sel = rng.below(16)
+    if sel == 0:
+        return zero(L)
+    if sel in (1, 2):
+        if rng.bool():
+            mant = [MASK64] * L
+        else:
+            mant = [0] * L
+            mant[L - 1] = 1 << 63
+        return Ap(rng.bool(), rng.range_i64(-300, 300), mant)
+    if sel in (3, 4):
+        f = from_ap(rand_ap(rng, prec, 4), L)
+        if f.is_zero():
+            return f
+        return Ap(f.sign, rng.range_i64(-2000, -500), f.mant)
+    return from_ap(rand_ap(rng, prec, 300), L)
+
+
+# --------------------------------------------------------------------------
+# The parity properties (same seeds and case counts as the Rust suite)
+# --------------------------------------------------------------------------
+
+WIDTHS = [(7, 448), (15, 960)]
+SCALAR_SEEDS = {448: 0xF1A8_0448, 960: 0xF1A8_0960}
+CHAIN_SEEDS = {448: 0xC4A1_0448, 960: 0xC4A1_0960}
+
+
+def test_comba_split_product_matches_integer_multiply():
+    rng = Rng(0xC0B1A)
+    for L, _ in WIDTHS:
+        for _ in range(200):
+            a, b = rng.limbs(L), rng.limbs(L)
+            lo, hi = mul_comba_fixed(a, b, L)
+            got = limbs_to_int(lo) | (limbs_to_int(hi) << (64 * L))
+            assert got == limbs_to_int(a) * limbs_to_int(b), f"comba at L={L}"
+
+
+def test_scalar_ops_match_exact_reference():
+    for L, prec in WIDTHS:
+        rng = Rng(SCALAR_SEEDS[prec])
+        for case in range(2000):
+            a = operand(rng, L, prec)
+            b = operand(rng, L, prec)
+            acc = operand(rng, L, prec)
+            ctx = f"case {case} at prec {prec}"
+            assert mul_fixed_ap(a, b, L).key() == ref_mul(a, b, prec).key(), f"mul {ctx}"
+            assert (
+                add_core_fixed(a, b, False, L).key() == ref_add(a, b, prec).key()
+            ), f"add {ctx}"
+            assert (
+                add_core_fixed(a, b, True, L).key()
+                == ref_add(a, b, prec, flip_y=True).key()
+            ), f"sub {ctx}"
+            assert (
+                mac_fixed_ap(acc, a, b, L).key() == ref_mac(acc, a, b, prec).key()
+            ), f"mac {ctx}"
+
+
+def test_mac_chain_matches_exact_reference():
+    for L, prec in WIDTHS:
+        rng = Rng(CHAIN_SEEDS[prec])
+        accf = zero(L)
+        accr = zero(L)
+        for step in range(512):
+            a = operand(rng, L, prec)
+            b = operand(rng, L, prec)
+            accf = mac_fixed_ap(accf, a, b, L)
+            accr = ref_mac(accr, a, b, prec)
+            assert accf.key() == accr.key(), f"mac chain step {step} at prec {prec}"
+
+
+def test_gemm_inner_loop_order_matches_reference():
+    """The gemm_fixed accumulation order (ascending k per output element)
+    replayed on the mirror must equal the reference mac chain in the same
+    order — rounding is order-sensitive, so this pins the loop shape too."""
+    n, k, m = 3, 4, 3
+    for L, prec in WIDTHS:
+        rng = Rng(0x6E11 ^ prec)
+        a = [[operand(rng, L, prec) for _ in range(k)] for _ in range(n)]
+        b = [[operand(rng, L, prec) for _ in range(m)] for _ in range(k)]
+        c = [[operand(rng, L, prec) for _ in range(m)] for _ in range(n)]
+        for i in range(n):
+            for j in range(m):
+                got = Ap(c[i][j].sign, c[i][j].exp, list(c[i][j].mant))
+                want = Ap(c[i][j].sign, c[i][j].exp, list(c[i][j].mant))
+                for kk in range(k):
+                    got = mac_fixed_ap(got, a[i][kk], b[kk][j], L)
+                    want = ref_mac(want, a[i][kk], b[kk][j], prec)
+                assert got.key() == want.key(), f"gemm ({i},{j}) at prec {prec}"
+
+
+def test_carry_chain_boundaries_explicitly():
+    """Directed corners: all-ones x all-ones (full carry ripple), MSB-only
+    squares, cancellation to exact zero, and the d-clamp path where the
+    small operand is entirely sticky."""
+    for L, prec in WIDTHS:
+        ones = Ap(False, 0, [MASK64] * L)
+        msb = Ap(False, 0, [0] * (L - 1) + [1 << 63])
+        assert mul_fixed_ap(ones, ones, L).key() == ref_mul(ones, ones, prec).key()
+        assert mul_fixed_ap(msb, msb, L).key() == ref_mul(msb, msb, prec).key()
+        assert mul_fixed_ap(ones, msb, L).key() == ref_mul(ones, msb, prec).key()
+        # exact cancellation -> canonical +0
+        neg = Ap(True, ones.exp, list(ones.mant))
+        assert add_core_fixed(ones, neg, False, L).key() == zero(L).key()
+        assert add_core_fixed(ones, ones, True, L).key() == zero(L).key()
+        # far operand: beyond the 64*(L+2) clamp everything is sticky
+        far = Ap(True, -(64 * (L + 3)), list(ones.mant))
+        assert (
+            add_core_fixed(ones, far, False, L).key()
+            == ref_add(ones, far, prec).key()
+        )
+        # zero operands keep canonical zero through every op
+        z = zero(L)
+        assert mul_fixed_ap(ones, z, L).key() == z.key()
+        assert add_core_fixed(z, ones, False, L).key() == ones.key()
+        assert mac_fixed_ap(ones, z, msb, L).key() == ones.key()

@@ -1,0 +1,148 @@
+//! Fixed-width fast path vs the dynamic arena reference (ISSUE 8).
+//!
+//! Two kinds of evidence, deliberately separated:
+//!
+//! * **Structural counters (hard asserts, always on):** the dynamic
+//!   `mac_into` takes arena slices per call (`Scratch::arena_ops`
+//!   counts every `take_*`), while the fixed path owns its operands as
+//!   `[u64; LIMBS]` stack values and performs **zero** arena ops — at
+//!   least one fewer pointer chase per MAC, independent of machine noise.
+//! * **Wall clock (gated):** `gate_speedup` warns when the fixed path
+//!   falls below the floor and only fails under `APFP_BENCH_STRICT=1`,
+//!   so CI boxes with noisy clocks don't flake.
+
+use apfp::baseline::{gemm_fixed, gemm_into, pack_b_fixed, GemmScratch};
+use apfp::bench_util::{bench, fmt_duration, fmt_rate, Table};
+use apfp::bigint::Scratch;
+use apfp::coordinator::Matrix;
+use apfp::softfloat::ApFloatN;
+use apfp::testkit::{rand_ap, Rng};
+
+fn mac_section<const L: usize>(prec: u32, rng: &mut Rng, t: &mut Table) {
+    let a = rand_ap(rng, prec, 40);
+    let b = rand_ap(rng, prec, 40);
+    let mut acc = rand_ap(rng, prec, 40);
+    let af = ApFloatN::<L>::from_ap(&a);
+    let bf = ApFloatN::<L>::from_ap(&b);
+    let mut accf = ApFloatN::<L>::from_ap(&acc);
+
+    // --- structural: arena ops per MAC, counted not timed ---------------
+    let mut scratch = Scratch::new();
+    acc.mac_into(&a, &b, &mut scratch); // warm the arena
+    scratch.reset_arena_ops();
+    let n = 1000u64;
+    for _ in 0..n {
+        acc.mac_into(&a, &b, &mut scratch);
+        if acc.exp() > 1 << 30 {
+            acc.assign(&a);
+        }
+    }
+    let dyn_ops_per_mac = scratch.arena_ops() / n;
+    scratch.reset_arena_ops();
+    for _ in 0..n {
+        accf.mac_into(&af, &bf);
+        if accf.exp() > 1 << 30 {
+            accf = af;
+        }
+    }
+    std::hint::black_box(&accf);
+    let fixed_ops_per_mac = scratch.arena_ops() / n; // fixed path never sees the arena
+    assert_eq!(
+        fixed_ops_per_mac, 0,
+        "fixed mac must perform zero arena ops at {prec} bits"
+    );
+    assert!(
+        dyn_ops_per_mac >= fixed_ops_per_mac + 1,
+        "dynamic mac must cost at least one more arena op per MAC than fixed \
+         at {prec} bits (dynamic {dyn_ops_per_mac}, fixed {fixed_ops_per_mac})"
+    );
+    t.row(&[
+        format!("arena ops/MAC ({prec}b)"),
+        format!("dynamic {dyn_ops_per_mac}"),
+        format!("fixed {fixed_ops_per_mac}"),
+    ]);
+
+    // --- wall clock: warm dynamic mac_into vs fixed mac_into ------------
+    let r_dyn = bench(&format!("dynamic mac_into {prec}"), 1000, 20000, || {
+        acc.mac_into(&a, &b, &mut scratch);
+        if acc.exp() > 1 << 30 {
+            acc.assign(&a);
+        }
+    });
+    let r_fixed = bench(&format!("fixed mac_into {prec}"), 1000, 20000, || {
+        accf.mac_into(&af, &bf);
+        if accf.exp() > 1 << 30 {
+            accf = af;
+        }
+    });
+    std::hint::black_box((&acc, &accf));
+    t.row(&[
+        format!("mac_into dynamic ({prec}b)"),
+        fmt_duration(r_dyn.median_s()),
+        fmt_rate(r_dyn.throughput()),
+    ]);
+    t.row(&[
+        format!("mac_into fixed ({prec}b)"),
+        fmt_duration(r_fixed.median_s()),
+        fmt_rate(r_fixed.throughput()),
+    ]);
+    r_fixed.gate_speedup(&r_dyn, 1.0, &format!("fixed vs dynamic mac at {prec} bits"));
+}
+
+fn gemm_section<const L: usize>(prec: u32, rng: &mut Rng, t: &mut Table) {
+    let (n, k, m) = (12usize, 12, 12);
+    let seed = rng.next_u64();
+    let a = Matrix::random(n, k, prec, seed, 20);
+    let b = Matrix::random(k, m, prec, seed ^ 1, 20);
+    let c = Matrix::random(n, m, prec, seed ^ 2, 20);
+
+    let mut ws = GemmScratch::new();
+    let mut out = c.clone();
+    gemm_into(&a, &b, &mut out, &mut ws); // warm panel + arena
+    let r_dyn = bench(&format!("gemm_into {prec}"), 3, 40, || {
+        gemm_into(&a, &b, &mut out, &mut ws);
+    });
+    std::hint::black_box(&out);
+
+    let mut af: Vec<ApFloatN<L>> = Vec::new();
+    for i in 0..n {
+        for kk in 0..k {
+            af.push(ApFloatN::from_ap(a.get(i, kk)));
+        }
+    }
+    let mut bt = Vec::new();
+    pack_b_fixed::<L>(&b, &mut bt);
+    let mut cf: Vec<ApFloatN<L>> = Vec::new();
+    for i in 0..n {
+        for j in 0..m {
+            cf.push(ApFloatN::from_ap(c.get(i, j)));
+        }
+    }
+    let r_fixed = bench(&format!("gemm_fixed {prec}"), 3, 40, || {
+        gemm_fixed(&af, &bt, &mut cf, n, k, m);
+    });
+    std::hint::black_box(&cf);
+
+    let macs = (n * k * m) as f64;
+    t.row(&[
+        format!("gemm dynamic {n}x{k}x{m} ({prec}b)"),
+        fmt_duration(r_dyn.median_s()),
+        fmt_rate(r_dyn.throughput() * macs),
+    ]);
+    t.row(&[
+        format!("gemm fixed {n}x{k}x{m} ({prec}b)"),
+        fmt_duration(r_fixed.median_s()),
+        fmt_rate(r_fixed.throughput() * macs),
+    ]);
+    r_fixed.gate_speedup(&r_dyn, 1.0, &format!("fixed vs dynamic gemm tile at {prec} bits"));
+}
+
+fn main() {
+    let mut rng = Rng::from_seed(0xF1BD);
+    let mut t = Table::new(&["kernel", "median", "rate"]);
+    mac_section::<7>(448, &mut rng, &mut t);
+    mac_section::<15>(960, &mut rng, &mut t);
+    gemm_section::<7>(448, &mut rng, &mut t);
+    gemm_section::<15>(960, &mut rng, &mut t);
+    println!("== fixed-width fast path vs dynamic arena ==\n\n{}", t.render());
+}

@@ -12,7 +12,7 @@
 
 use crate::bigint::Scratch;
 use crate::coordinator::Matrix;
-use crate::softfloat::ApFloat;
+use crate::softfloat::{ApFloat, ApFloatN};
 
 /// Output columns advanced together in the register-blocked inner loop:
 /// each A element is loaded once and fed to `JB` accumulators, so the
@@ -138,6 +138,62 @@ pub fn gemm_threaded(a: &Matrix, b: &Matrix, c: &Matrix, threads: usize) -> Matr
         }
     });
     out
+}
+
+/// Register-blocked fixed-width GEMM micro-kernel: `c += a * b` over
+/// stack-allocated [`ApFloatN`] scalars, with `b` pre-packed column-major
+/// (`bt[j*k .. (j+1)*k]` holds column `j`, see [`pack_b_fixed`]).
+///
+/// The inner loop accumulates into a flat `[ApFloatN<L>; JB]` stack tile:
+/// each A element is loaded once and fed to `JB` accumulators whose limb
+/// arrays sit contiguously in registers/stack — the columnwise shape
+/// `core::simd`/AVX2 autovectorizes, with no arena, no `Vec`, and no
+/// pointer chase per MAC.  Per output element the K accumulation is
+/// sequential ascending, exactly the dynamic [`gemm_into`] order, so the
+/// result is bit-identical to [`gemm_serial`] on converted operands
+/// (pinned in tests/fixed_parity.rs at both paper widths).
+// apfp-lint: no_alloc
+pub fn gemm_fixed<const L: usize>(
+    a: &[ApFloatN<L>],
+    bt: &[ApFloatN<L>],
+    c: &mut [ApFloatN<L>],
+    n: usize,
+    k: usize,
+    m: usize,
+) {
+    assert_eq!(a.len(), n * k, "A shape");
+    assert_eq!(bt.len(), m * k, "packed B shape");
+    assert_eq!(c.len(), n * m, "C shape");
+    for r in 0..n {
+        let arow = &a[r * k..(r + 1) * k];
+        let crow = &mut c[r * m..(r + 1) * m];
+        for j0 in (0..m).step_by(JB) {
+            let jw = JB.min(m - j0);
+            let mut tile = [ApFloatN::<L>::ZERO; JB];
+            tile[..jw].copy_from_slice(&crow[j0..j0 + jw]);
+            for (kk, x) in arow.iter().enumerate() {
+                for (jj, acc) in tile[..jw].iter_mut().enumerate() {
+                    acc.mac_into(x, &bt[(j0 + jj) * k + kk]);
+                }
+            }
+            crow[j0..j0 + jw].copy_from_slice(&tile[..jw]);
+        }
+    }
+}
+
+/// Pack a dynamic matrix into the column-major fixed-width B panel
+/// [`gemm_fixed`] consumes (column `j` at `out[j*k .. (j+1)*k]`) — the
+/// fixed-lane analog of the dynamic `GemmScratch` packing.  Cold
+/// conversion path: reuses `out`'s capacity but is not allocation-free.
+pub fn pack_b_fixed<const L: usize>(b: &Matrix, out: &mut Vec<ApFloatN<L>>) {
+    let (k, m) = (b.rows(), b.cols());
+    out.clear();
+    out.resize(k * m, ApFloatN::ZERO);
+    for j in 0..m {
+        for kk in 0..k {
+            out[j * k + kk] = ApFloatN::from_ap(b.get(kk, j));
+        }
+    }
 }
 
 /// Measured multiplication throughput (ops/s) of one core on this host,
@@ -312,6 +368,62 @@ mod tests {
         let b = Matrix::random(3, 2, prec, 8, 10);
         let c = Matrix::zeros(2, 2, prec);
         assert_eq!(gemm_threaded(&a, &b, &c, 16), gemm_serial(&a, &b, &c));
+    }
+
+    #[test]
+    fn gemm_fixed_matches_serial_bitwise_at_paper_widths() {
+        fn run<const L: usize>(prec: u32, seed: u64) {
+            let (n, k, m) = (5usize, 6usize, 7usize); // m not a multiple of JB
+            let mut a = Matrix::random(n, k, prec, seed, 20);
+            let b = Matrix::random(k, m, prec, seed + 1, 20);
+            let c = Matrix::random(n, m, prec, seed + 2, 20);
+            // a zero operand rides along to exercise the absorbing path
+            a.values_mut()[3] = ApFloat::zero(prec);
+            let want = gemm_serial(&a, &b, &c);
+
+            let mut af = Vec::new();
+            for i in 0..n {
+                for kk in 0..k {
+                    af.push(ApFloatN::<L>::from_ap(a.get(i, kk)));
+                }
+            }
+            let mut bt = Vec::new();
+            pack_b_fixed::<L>(&b, &mut bt);
+            let mut cf = Vec::new();
+            for i in 0..n {
+                for j in 0..m {
+                    cf.push(ApFloatN::<L>::from_ap(c.get(i, j)));
+                }
+            }
+            gemm_fixed(&af, &bt, &mut cf, n, k, m);
+            for i in 0..n {
+                for j in 0..m {
+                    assert_eq!(cf[i * m + j].to_ap(), *want.get(i, j), "({i},{j}) prec {prec}");
+                }
+            }
+            // second accumulation on the warm tile stays bit-exact too
+            gemm_fixed(&af, &bt, &mut cf, n, k, m);
+            let want2 = gemm_serial(&a, &b, &want);
+            for i in 0..n {
+                for j in 0..m {
+                    assert_eq!(cf[i * m + j].to_ap(), *want2.get(i, j), "2nd ({i},{j})");
+                }
+            }
+        }
+        run::<7>(448, 31);
+        run::<15>(960, 37);
+    }
+
+    #[test]
+    fn gemm_fixed_degenerate_shapes() {
+        // k = 0: C passes through untouched
+        let mut c = [ApFloatN::<7>::from_ap(&ApFloat::from_i64(-3, 448))];
+        let before = c[0];
+        gemm_fixed::<7>(&[], &[], &mut c, 1, 0, 1);
+        assert_eq!(c[0], before);
+        // m = 0 and n = 0: no-ops on empty outputs
+        gemm_fixed::<7>(&[before], &[], &mut [], 1, 1, 0);
+        gemm_fixed::<7>(&[], &[before], &mut [], 0, 1, 1);
     }
 
     #[test]

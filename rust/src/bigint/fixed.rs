@@ -1,0 +1,559 @@
+//! Compile-time fixed-width limb kernels on `[u64; L]` arrays — the
+//! software analog of the paper's generated-per-width FPGA pipeline.
+//!
+//! The dynamic kernels in [`super`] take slice widths at run time and draw
+//! workspaces from a [`super::Scratch`] arena; everything here is
+//! monomorphized per `LIMBS`, lives entirely on the stack, and is written
+//! so every loop bound is a compile-time constant the optimizer can fully
+//! unroll (no arena, no bounds checks after const-folding, no pointer
+//! chases).  Each kernel is a *stage-for-stage mirror* of its dynamic
+//! counterpart — same column order, same carry discipline, same clamps —
+//! so results are bit-identical at every width (pinned by
+//! `tests/fixed_parity.rs` and the Python port).
+//!
+//! A product of two `L`-limb operands needs `2 * L` limbs, which stable
+//! Rust cannot spell as `[u64; 2 * L]`; the kernels therefore return the
+//! double-width product as a `(lo, hi)` pair of `[u64; L]` halves, and the
+//! softfloat adder workspace (`[1 guard | L | 1 overflow]` limbs) is the
+//! [`Guarded`] struct rather than a `[u64; L + 2]`.
+
+use std::cmp::Ordering;
+
+use super::KARATSUBA_THRESHOLD;
+
+/// Minimal limb abstraction (the SNIPPETS.md `bloat` idiom): one primitive
+/// per limb type providing the double-width multiply every kernel is built
+/// from.  Stable-Rust spelling of the unstable `u64::widening_mul`.
+pub trait Limb: Copy {
+    /// `(low, high)` halves of the full double-width product.
+    fn widening_mul(self, rhs: Self) -> (Self, Self);
+}
+
+impl Limb for u64 {
+    #[inline(always)]
+    fn widening_mul(self, rhs: Self) -> (u64, u64) {
+        let t = self as u128 * rhs as u128;
+        (t as u64, (t >> 64) as u64)
+    }
+}
+
+/// Whether the fixed kernels use the single-level Karatsuba split at this
+/// width.  Decided at **compile time** from `LIMBS` against the *compiled*
+/// [`KARATSUBA_THRESHOLD`] — deliberately not [`super::karatsuba_threshold`]:
+/// the env-var override tunes the dynamic path's crossover per host, but a
+/// monomorphized kernel cannot change shape at run time, and reading the
+/// `OnceLock` per call would put an atomic load on the hot path.  Both
+/// selections bottom out in the same Comba column order, so an override can
+/// only move *where* the dynamic path splits, never *what bits* either path
+/// produces (pinned by `threshold_override_cannot_desync_fixed_path`).
+/// Odd widths stay Comba, exactly like `kara_rec`'s odd-`n` bottom-out.
+pub const fn fixed_uses_karatsuba(limbs: usize) -> bool {
+    limbs >= KARATSUBA_THRESHOLD && limbs % 2 == 0
+}
+
+/// Fixed-width product: `(lo, hi)` halves of `a * b`, selecting Comba or
+/// the single-level Karatsuba split at compile time (the branch below
+/// const-folds away per `L`; see [`fixed_uses_karatsuba`]).
+// apfp-lint: no_alloc
+#[inline]
+pub fn mul_fixed<const L: usize>(a: &[u64; L], b: &[u64; L]) -> ([u64; L], [u64; L]) {
+    if fixed_uses_karatsuba(L) {
+        mul_karatsuba1_fixed(a, b)
+    } else {
+        mul_comba_fixed(a, b)
+    }
+}
+
+/// Comba columnwise multiply on fixed arrays — the column order, 128-bit
+/// accumulator and overflow counter of [`super::mul_comba`] verbatim, with
+/// the single output buffer split into `(lo, hi)` halves: columns
+/// `0..L` land in `lo`, columns `L..2L-1` in `hi`, and the final carry in
+/// `hi[L - 1]`.  With `L` a constant the compiler fully unrolls both
+/// column loops.
+// apfp-lint: no_alloc
+#[inline]
+pub fn mul_comba_fixed<const L: usize>(a: &[u64; L], b: &[u64; L]) -> ([u64; L], [u64; L]) {
+    let mut lo = [0u64; L];
+    let mut hi = [0u64; L];
+    if L == 0 {
+        return (lo, hi);
+    }
+    let mut acc: u128 = 0; // low 128 bits of the running column sum
+    let mut over: u64 = 0; // count of 2^128 overflows within one column
+    for k in 0..L {
+        for i in 0..=k {
+            let (plo, phi) = a[i].widening_mul(b[k - i]);
+            let (s, c) = acc.overflowing_add(((phi as u128) << 64) | plo as u128);
+            acc = s;
+            over += c as u64;
+        }
+        lo[k] = acc as u64;
+        acc = (acc >> 64) | ((over as u128) << 64);
+        over = 0;
+    }
+    for k in L..(2 * L - 1) {
+        for i in (k - (L - 1))..L {
+            let (plo, phi) = a[i].widening_mul(b[k - i]);
+            let (s, c) = acc.overflowing_add(((phi as u128) << 64) | plo as u128);
+            acc = s;
+            over += c as u64;
+        }
+        hi[k - L] = acc as u64;
+        acc = (acc >> 64) | ((over as u128) << 64);
+        over = 0;
+    }
+    hi[L - 1] = acc as u64;
+    debug_assert_eq!(acc >> 64, 0, "comba column carry must be consumed");
+    (lo, hi)
+}
+
+/// Single-level Karatsuba on fixed arrays (`L` even): three half-width
+/// Comba products plus the `|a1 - a0| * |b1 - b0|` recombination — one
+/// level only, because a monomorphized recursion would instantiate kernels
+/// for every half-width.  Reached only when `L >=` the compiled crossover
+/// ([`fixed_uses_karatsuba`]); the paper's 7/15-limb widths never take it.
+// apfp-lint: no_alloc
+fn mul_karatsuba1_fixed<const L: usize>(a: &[u64; L], b: &[u64; L]) -> ([u64; L], [u64; L]) {
+    debug_assert!(L >= 2 && L % 2 == 0, "single-level split needs an even width");
+    let h = L / 2;
+    // c0 = a0*b0 fills lo (2h = L limbs); c2 = a1*b1 fills hi.
+    let mut lo = [0u64; L];
+    let mut hi = [0u64; L];
+    super::mul_comba(&a[..h], &b[..h], &mut lo);
+    super::mul_comba(&a[h..], &b[h..], &mut hi);
+    // t = |a1 - a0| * |b1 - b0|, sign tracked like kara_rec's abs_diff.
+    let mut da = [0u64; L];
+    let mut db = [0u64; L];
+    let sa = abs_diff_halves(&a[h..], &a[..h], &mut da[..h]);
+    let sb = abs_diff_halves(&b[h..], &b[..h], &mut db[..h]);
+    let mut t = [0u64; L];
+    super::mul_comba(&da[..h], &db[..h], &mut t);
+    // middle = c0 + c2 -+ t, held in L limbs plus a top carry limb.
+    let mut c1 = lo;
+    let mut c1_top: u64 = 0;
+    if super::add_assign(&mut c1, &hi) {
+        c1_top += 1;
+    }
+    if sa != sb {
+        // (a1 - a0)(b1 - b0) < 0: the cross term gains t
+        if super::add_assign(&mut c1, &t) {
+            c1_top += 1;
+        }
+    } else if super::sub_assign(&mut c1, &t) {
+        debug_assert!(c1_top > 0, "karatsuba middle term must be nonnegative");
+        c1_top -= 1;
+    }
+    add_middle_at(&mut lo, &mut hi, h, &c1, c1_top);
+    (lo, hi)
+}
+
+/// `|x - y|` into `out` for equal-length halves; returns true when the
+/// difference is negative (`x < y`).
+// apfp-lint: no_alloc
+fn abs_diff_halves(x: &[u64], y: &[u64], out: &mut [u64]) -> bool {
+    if super::cmp(x, y) == Ordering::Less {
+        out.copy_from_slice(y);
+        let borrow = super::sub_assign(out, x);
+        debug_assert!(!borrow);
+        true
+    } else {
+        out.copy_from_slice(x);
+        let borrow = super::sub_assign(out, y);
+        debug_assert!(!borrow);
+        false
+    }
+}
+
+/// Add the `(v, v_top)` middle term into the split product at limb
+/// position `pos` of the conceptual `2L`-limb number `(lo, hi)`,
+/// propagating the carry to the top.
+// apfp-lint: no_alloc
+fn add_middle_at<const L: usize>(
+    lo: &mut [u64; L],
+    hi: &mut [u64; L],
+    pos: usize,
+    v: &[u64; L],
+    v_top: u64,
+) {
+    let mut carry = 0u64;
+    for i in 0..=L {
+        let limb = if i < L { v[i] } else { v_top };
+        let j = pos + i;
+        let dst = if j < L { &mut lo[j] } else { &mut hi[j - L] };
+        let (s1, c1) = dst.overflowing_add(limb);
+        let (s2, c2) = s1.overflowing_add(carry);
+        *dst = s2;
+        carry = (c1 | c2) as u64;
+    }
+    let mut j = pos + L + 1;
+    while carry != 0 && j < 2 * L {
+        let dst = if j < L { &mut lo[j] } else { &mut hi[j - L] };
+        let (s, c) = dst.overflowing_add(carry);
+        *dst = s;
+        carry = c as u64;
+        j += 1;
+    }
+    debug_assert_eq!(carry, 0, "karatsuba recombination cannot overflow 2L limbs");
+}
+
+/// The fixed-width adder workspace: `[1 guard limb | L mantissa limbs |
+/// 1 overflow limb]`, the exact layout `softfloat`'s dynamic `add_core`
+/// builds in its `ws = n + 2` stack/arena buffer, as a struct because
+/// stable Rust cannot spell `[u64; L + 2]`.  Limb index 0 is the guard,
+/// `1..=L` the mantissa window, `L + 1` the overflow limb; every operation
+/// mirrors the corresponding [`super`] slice helper on that virtual
+/// `(L + 2)`-limb little-endian vector.
+#[derive(Clone, Copy, Debug)]
+pub struct Guarded<const L: usize> {
+    guard: u64,
+    mid: [u64; L],
+    over: u64,
+}
+
+impl<const L: usize> Guarded<L> {
+    /// Number of limbs of the virtual vector (the dynamic path's `ws`).
+    pub const WS: usize = L + 2;
+
+    /// A mantissa placed in the window: MSB at bit `64 + 64*L - 1`, guard
+    /// and overflow limbs clear — exactly `ws_big[1..1 + n]` in `add_core`.
+    #[inline]
+    pub fn place(mant: &[u64; L]) -> Self {
+        Guarded { guard: 0, mid: *mant, over: 0 }
+    }
+
+    #[inline(always)]
+    fn limb(&self, i: usize) -> u64 {
+        if i == 0 {
+            self.guard
+        } else if i <= L {
+            self.mid[i - 1]
+        } else if i == L + 1 {
+            self.over
+        } else {
+            0 // reads past the top zero-extend, like the dynamic slices
+        }
+    }
+
+    #[inline(always)]
+    fn set_limb(&mut self, i: usize, v: u64) {
+        if i == 0 {
+            self.guard = v;
+        } else if i <= L {
+            self.mid[i - 1] = v;
+        } else {
+            debug_assert_eq!(i, L + 1);
+            self.over = v;
+        }
+    }
+
+    /// `self >>= s`, mirroring [`super::shr`] on the `(L + 2)`-limb vector.
+    /// In place is safe: limb `i` is written after only limbs `>= i` are
+    /// read, and the walk ascends.
+    #[inline]
+    pub fn shr_assign(&mut self, s: usize) {
+        let (q, r) = (s / 64, s % 64);
+        for i in 0..L + 2 {
+            let lo = self.limb(i + q);
+            let hi = self.limb(i + q + 1);
+            self.set_limb(i, if r == 0 { lo } else { (lo >> r) | (hi << (64 - r)) });
+        }
+    }
+
+    /// True iff any bit strictly below position `s` is set — the sticky
+    /// signal, mirroring [`super::sticky_below`].
+    #[inline]
+    pub fn sticky_below(&self, s: usize) -> bool {
+        let (q, r) = (s / 64, s % 64);
+        for i in 0..q.min(L + 2) {
+            if self.limb(i) != 0 {
+                return true;
+            }
+        }
+        r > 0 && q < L + 2 && self.limb(q) & ((1u64 << r) - 1) != 0
+    }
+
+    /// `self += other`; returns the carry out of the overflow limb.
+    #[inline]
+    pub fn add_assign(&mut self, other: &Self) -> bool {
+        let mut carry = false;
+        for i in 0..L + 2 {
+            let (s1, c1) = self.limb(i).overflowing_add(other.limb(i));
+            let (s2, c2) = s1.overflowing_add(carry as u64);
+            self.set_limb(i, s2);
+            carry = c1 | c2;
+        }
+        carry
+    }
+
+    /// `self -= other`; returns the borrow out of the overflow limb.
+    #[inline]
+    pub fn sub_assign(&mut self, other: &Self) -> bool {
+        let mut borrow = false;
+        for i in 0..L + 2 {
+            let (d1, b1) = self.limb(i).overflowing_sub(other.limb(i));
+            let (d2, b2) = d1.overflowing_sub(borrow as u64);
+            self.set_limb(i, d2);
+            borrow = b1 | b2;
+        }
+        borrow
+    }
+
+    /// `self -= v` (single limb); returns the borrow out of the top.
+    #[inline]
+    pub fn sub_limb(&mut self, v: u64) -> bool {
+        let mut borrow = v;
+        for i in 0..L + 2 {
+            if borrow == 0 {
+                return false;
+            }
+            let (d, b) = self.limb(i).overflowing_sub(borrow);
+            self.set_limb(i, d);
+            borrow = b as u64;
+        }
+        borrow != 0
+    }
+
+    /// Number of significant bits, mirroring [`super::bit_length`].
+    #[inline]
+    pub fn bit_length(&self) -> usize {
+        if self.over != 0 {
+            return 64 * (L + 1) + (64 - self.over.leading_zeros() as usize);
+        }
+        for i in (0..L).rev() {
+            if self.mid[i] != 0 {
+                return 64 * (i + 1) + (64 - self.mid[i].leading_zeros() as usize);
+            }
+        }
+        if self.guard != 0 { 64 - self.guard.leading_zeros() as usize } else { 0 }
+    }
+
+    /// `out = self >> s`, truncated to `L` limbs ([`super::shr`] with a
+    /// narrower output) — the renormalize-right step of the adder.
+    #[inline]
+    pub fn shr_into(&self, s: usize, out: &mut [u64; L]) {
+        let (q, r) = (s / 64, s % 64);
+        for i in 0..L {
+            let lo = self.limb(i + q);
+            let hi = self.limb(i + q + 1);
+            out[i] = if r == 0 { lo } else { (lo >> r) | (hi << (64 - r)) };
+        }
+    }
+
+    /// `out = self << s`, truncated to `L` limbs ([`super::shl`] with a
+    /// narrower output) — the renormalize-left step of the adder.
+    #[inline]
+    pub fn shl_into(&self, s: usize, out: &mut [u64; L]) {
+        let (q, r) = (s / 64, s % 64);
+        for i in (0..L).rev() {
+            let lo = if i >= q { self.limb(i - q) } else { 0 };
+            let lo2 = if i >= q + 1 { self.limb(i - q - 1) } else { 0 };
+            out[i] = if r == 0 { lo } else { (lo << r) | (lo2 >> (64 - r)) };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{
+        bit_length, mul_comba, mul_karatsuba_with, shl, shr, sticky_below, Scratch,
+    };
+    use super::*;
+    use crate::testkit;
+
+    fn arr<const L: usize>(rng: &mut testkit::Rng) -> [u64; L] {
+        let mut a = [0u64; L];
+        for x in a.iter_mut() {
+            *x = rng.next_u64();
+        }
+        a
+    }
+
+    fn joined<const L: usize>(lo: &[u64; L], hi: &[u64; L]) -> Vec<u64> {
+        let mut v = lo.to_vec();
+        v.extend_from_slice(hi);
+        v
+    }
+
+    #[test]
+    fn comba_fixed_matches_dynamic_comba_at_paper_widths() {
+        testkit::check(300, |rng| {
+            {
+                let (a, b) = (arr::<7>(rng), arr::<7>(rng));
+                let mut want = vec![0u64; 14];
+                mul_comba(&a, &b, &mut want);
+                let (lo, hi) = mul_comba_fixed(&a, &b);
+                assert_eq!(joined(&lo, &hi), want, "L=7");
+            }
+            {
+                let (a, b) = (arr::<15>(rng), arr::<15>(rng));
+                let mut want = vec![0u64; 30];
+                mul_comba(&a, &b, &mut want);
+                let (lo, hi) = mul_comba_fixed(&a, &b);
+                assert_eq!(joined(&lo, &hi), want, "L=15");
+            }
+        });
+    }
+
+    #[test]
+    fn comba_fixed_column_overflow_stress() {
+        // all-ones operands wrap the 128-bit accumulator maximally, so the
+        // `over` counter must carry every wrap — same stress as the
+        // dynamic kernel's test, on the fixed split-output form
+        let a = [u64::MAX; 15];
+        let mut want = vec![0u64; 30];
+        mul_comba(&a, &a, &mut want);
+        let (lo, hi) = mul_comba_fixed(&a, &a);
+        assert_eq!(joined(&lo, &hi), want);
+    }
+
+    #[test]
+    fn comba_fixed_single_limb() {
+        let (lo, hi) = mul_comba_fixed(&[u64::MAX], &[u64::MAX]);
+        let t = u64::MAX as u128 * u64::MAX as u128;
+        assert_eq!((lo[0], hi[0]), (t as u64, (t >> 64) as u64));
+    }
+
+    #[test]
+    fn karatsuba1_fixed_matches_comba_at_even_widths() {
+        // the single-level split is below the live crossover for 7/15, so
+        // exercise it directly at even widths (including the crossover
+        // width itself)
+        testkit::check(200, |rng| {
+            {
+                let (a, b) = (arr::<8>(rng), arr::<8>(rng));
+                let (wl, wh) = mul_comba_fixed(&a, &b);
+                let (gl, gh) = mul_karatsuba1_fixed(&a, &b);
+                assert_eq!((gl, gh), (wl, wh), "L=8");
+            }
+            {
+                let (a, b) = (arr::<40>(rng), arr::<40>(rng));
+                let (wl, wh) = mul_comba_fixed(&a, &b);
+                let (gl, gh) = mul_karatsuba1_fixed(&a, &b);
+                assert_eq!((gl, gh), (wl, wh), "L=40 (crossover width)");
+            }
+        });
+    }
+
+    #[test]
+    fn karatsuba1_fixed_recombination_edges() {
+        // operand halves crafted to flip the abs_diff signs and saturate
+        // the middle-term carry: equal halves (t = 0), max low / zero high
+        // and vice versa
+        let mut a = [0u64; 8];
+        let mut b = [0u64; 8];
+        for i in 0..4 {
+            a[i] = u64::MAX; // a0 = max, a1 = 0  -> sa flips
+            b[i + 4] = u64::MAX; // b0 = 0, b1 = max  -> sb flips
+        }
+        let (wl, wh) = mul_comba_fixed(&a, &b);
+        assert_eq!(mul_karatsuba1_fixed(&a, &b), (wl, wh));
+        let c = [u64::MAX; 8]; // equal halves: t = 0
+        let (wl, wh) = mul_comba_fixed(&c, &c);
+        assert_eq!(mul_karatsuba1_fixed(&c, &c), (wl, wh));
+    }
+
+    #[test]
+    fn compile_time_selection_matches_spec() {
+        // paper widths stay Comba; the crossover and only even widths
+        // at/above it take the single-level split (odd -> Comba, exactly
+        // like kara_rec's odd-n bottom-out)
+        assert!(!fixed_uses_karatsuba(7));
+        assert!(!fixed_uses_karatsuba(15));
+        assert!(!fixed_uses_karatsuba(39));
+        assert!(fixed_uses_karatsuba(KARATSUBA_THRESHOLD));
+        assert!(!fixed_uses_karatsuba(KARATSUBA_THRESHOLD + 1)); // odd
+        assert!(fixed_uses_karatsuba(KARATSUBA_THRESHOLD + 2));
+    }
+
+    #[test]
+    fn threshold_override_cannot_desync_fixed_path() {
+        // Satellite: APFP_KARATSUBA_THRESHOLD only moves where the dynamic
+        // path splits.  Emulate every override class by calling the dynamic
+        // kernel with explicit thresholds and require bit-equality with the
+        // fixed kernel, whose selection is compiled in.
+        let mut scratch = Scratch::new();
+        testkit::check(100, |rng| {
+            let (a, b) = (arr::<8>(rng), arr::<8>(rng));
+            let (lo, hi) = mul_fixed(&a, &b);
+            let got = joined(&lo, &hi);
+            for threshold in [2usize, 4, 8, KARATSUBA_THRESHOLD, 1000] {
+                let mut want = vec![0u64; 16];
+                mul_karatsuba_with(&a, &b, &mut want, threshold, &mut scratch);
+                assert_eq!(got, want, "threshold={threshold}");
+            }
+            // and at a live paper width
+            let (a, b) = (arr::<7>(rng), arr::<7>(rng));
+            let (lo, hi) = mul_fixed(&a, &b);
+            let got = joined(&lo, &hi);
+            for threshold in [2usize, 7, 1000] {
+                let mut want = vec![0u64; 14];
+                mul_karatsuba_with(&a, &b, &mut want, threshold, &mut scratch);
+                assert_eq!(got, want, "threshold={threshold} L=7");
+            }
+        });
+    }
+
+    #[test]
+    fn guarded_mirrors_dynamic_slice_helpers() {
+        testkit::check(300, |rng| {
+            const L: usize = 7;
+            let m = arr::<L>(rng);
+            // the dynamic workspace: [guard | L | overflow]
+            let mut ws = vec![0u64; L + 2];
+            ws[1..1 + L].copy_from_slice(&m);
+            let g = Guarded::<L>::place(&m);
+            assert_eq!(g.bit_length(), bit_length(&ws));
+
+            let s = rng.below((64 * (L + 2) + 5) as u64) as usize;
+            assert_eq!(g.sticky_below(s), sticky_below(&ws, s), "sticky s={s}");
+
+            let mut shifted = g;
+            shifted.shr_assign(s);
+            let mut want = vec![0u64; L + 2];
+            shr(&ws, s, &mut want);
+            let got: Vec<u64> = (0..L + 2).map(|i| shifted.limb(i)).collect();
+            assert_eq!(got, want, "shr_assign s={s}");
+
+            // narrowing extracts
+            let mut out = [0u64; L];
+            g.shr_into(s, &mut out);
+            let mut want_n = vec![0u64; L];
+            shr(&ws, s, &mut want_n);
+            assert_eq!(out.to_vec(), want_n, "shr_into s={s}");
+            let sl = rng.below(64 * L as u64) as usize;
+            g.shl_into(sl, &mut out);
+            shl(&ws, sl, &mut want_n);
+            assert_eq!(out.to_vec(), want_n, "shl_into s={sl}");
+        });
+    }
+
+    #[test]
+    fn guarded_add_sub_roundtrip_with_flags() {
+        testkit::check(200, |rng| {
+            const L: usize = 7;
+            let a = Guarded::<L>::place(&arr::<L>(rng));
+            let b = Guarded::<L>::place(&arr::<L>(rng));
+            let mut c = a;
+            let carry = c.add_assign(&b);
+            assert!(!carry, "overflow limb absorbs mantissa-window carries");
+            let borrow = c.sub_assign(&b);
+            assert!(!borrow);
+            let got: Vec<u64> = (0..L + 2).map(|i| c.limb(i)).collect();
+            let want: Vec<u64> = (0..L + 2).map(|i| a.limb(i)).collect();
+            assert_eq!(got, want);
+            // sub_limb borrows through zero limbs
+            let mut z = Guarded::<L>::place(&[0; L]);
+            z.over = 1;
+            assert!(!z.sub_limb(1));
+            assert_eq!(z.bit_length(), 64 * (L + 1));
+        });
+    }
+
+    #[test]
+    fn widening_mul_limb_trait() {
+        let (lo, hi) = 0xFFFF_FFFF_FFFF_FFFFu64.widening_mul(2);
+        assert_eq!((lo, hi), (0xFFFF_FFFF_FFFF_FFFE, 1));
+        let (lo, hi) = 3u64.widening_mul(4);
+        assert_eq!((lo, hi), (12, 0));
+    }
+}

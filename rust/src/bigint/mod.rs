@@ -12,12 +12,14 @@
 //! [`karatsuba`]).  All kernels run against a reusable [`Scratch`]
 //! arena, so the hot path is allocation-free in steady state.
 
+pub mod fixed;
 pub mod karatsuba;
 pub mod toom3;
 
 use std::cell::RefCell;
 use std::cmp::Ordering;
 
+pub use fixed::{fixed_uses_karatsuba, mul_comba_fixed, mul_fixed, Guarded, Limb};
 pub use karatsuba::{karatsuba_threshold, mul_karatsuba, mul_karatsuba_with, KARATSUBA_THRESHOLD};
 pub use toom3::{mul_toom3, mul_toom3_with};
 
@@ -43,6 +45,11 @@ pub struct Scratch {
     addws: Vec<u64>,
     /// Recycled result buffers (see `softfloat::recycle`).
     pool: Vec<Vec<u64>>,
+    /// Count of arena operations (workspace takes) since the last
+    /// [`Scratch::reset_arena_ops`] — the structural counter
+    /// `benches/fixed_vs_dynamic.rs` asserts on: every take is at least
+    /// one pointer chase the fixed-width stack kernels do not pay.
+    ops: u64,
 }
 
 /// Former name of [`Scratch`], kept while it was multiply-only; the arena
@@ -54,12 +61,26 @@ const POOL_CAP: usize = 32;
 
 impl Scratch {
     pub const fn new() -> Self {
-        Scratch { kara: Vec::new(), prod: Vec::new(), addws: Vec::new(), pool: Vec::new() }
+        Scratch { kara: Vec::new(), prod: Vec::new(), addws: Vec::new(), pool: Vec::new(), ops: 0 }
+    }
+
+    /// Arena operations (workspace takes) performed since the last
+    /// [`Scratch::reset_arena_ops`].  Each counted op is a buffer handoff
+    /// through the arena — at minimum one pointer chase on the dynamic hot
+    /// path; the `ApFloatN` fixed path performs none by construction.
+    pub fn arena_ops(&self) -> u64 {
+        self.ops
+    }
+
+    /// Reset the [`Scratch::arena_ops`] counter (bench bookkeeping).
+    pub fn reset_arena_ops(&mut self) {
+        self.ops = 0;
     }
 
     /// Karatsuba workspace of at least `len` limbs.  Contents are
     /// arbitrary: the recursion fully writes every region before reading it.
     fn kara_ws(&mut self, len: usize) -> &mut [u64] {
+        self.ops += 1;
         if self.kara.len() < len {
             // apfp-lint: allow(alloc, reason="arena growth: reallocates only when a wider operand arrives; warm widths hit the len check")
             self.kara.resize(len, 0);
@@ -72,6 +93,7 @@ impl Scratch {
     /// reuses the capacity (the buffer moves out to sidestep the borrow of
     /// `self` that the multiply kernels need concurrently).
     pub fn take_prod(&mut self, len: usize) -> Vec<u64> {
+        self.ops += 1;
         let mut v = std::mem::take(&mut self.prod);
         v.clear();
             // apfp-lint: allow(alloc, reason="pool reuse: clear+resize fills recycled capacity; reallocates only when the width grows")
@@ -90,6 +112,7 @@ impl Scratch {
     /// (the `ApFloat` adder needs it only for widths past its stack fast
     /// path).  Same move-out contract as [`Scratch::take_prod`].
     pub fn take_addws(&mut self, len: usize) -> Vec<u64> {
+        self.ops += 1;
         let mut v = std::mem::take(&mut self.addws);
         v.clear();
             // apfp-lint: allow(alloc, reason="pool reuse: clear+resize fills recycled capacity; reallocates only when the width grows")
@@ -107,6 +130,7 @@ impl Scratch {
     /// Take a recycled result buffer of exactly `len` zeroed limbs
     /// (allocates only when the pool is empty or the capacity is short).
     pub fn take_limbs(&mut self, len: usize) -> Vec<u64> {
+        self.ops += 1;
         let mut v = self.pool.pop().unwrap_or_default();
         v.clear();
             // apfp-lint: allow(alloc, reason="pool reuse: clear+resize fills recycled capacity; reallocates only when the width grows")
@@ -784,6 +808,24 @@ mod tests {
         let v2 = s.take_limbs(7);
         assert_eq!(v2.len(), 7);
         assert!(is_zero(&v2));
+    }
+
+    #[test]
+    fn arena_ops_counter_counts_takes() {
+        let mut s = Scratch::new();
+        assert_eq!(s.arena_ops(), 0);
+        let p = s.take_prod(4);
+        s.put_prod(p);
+        let w = s.take_addws(4);
+        s.put_addws(w);
+        let v = s.take_limbs(4);
+        s.put_limbs(v);
+        assert_eq!(s.arena_ops(), 3, "every take counts; puts are free");
+        s.reset_arena_ops();
+        assert_eq!(s.arena_ops(), 0);
+        let mut out = vec![0u64; 4];
+        mul_auto_with(&[1, 2], &[3, 4], &mut out, &mut s);
+        assert_eq!(s.arena_ops(), 0, "below-threshold comba touches no workspace");
     }
 
     #[test]

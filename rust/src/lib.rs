@@ -41,6 +41,7 @@
 //! | `APFP_TILE_M` | Builtin GEMM tile columns (long form `APFP_TILE_SIZE_M`) | `32` |
 //! | `APFP_TILE_K` | Builtin GEMM K-step depth (long form `APFP_TILE_SIZE_K`) | `32` |
 //! | `APFP_KARATSUBA_THRESHOLD` | Karatsuba bottom-out in limbs ([`bigint`]) | `40` |
+//! | `APFP_FIXED_PATH` | Escape hatch: `0`/`false`/`off` makes [`runtime::NativeBackend`] skip the const-generic fixed-width lane and run every width through the dynamic arena kernels | enabled |
 //! | `APFP_REPLY_TIMEOUT_MS` | Overdue-reply probe interval of the stream drain ([`config::ApfpConfig::reply_timeout`]) | `250` |
 //! | `APFP_RETRY_LIMIT` | Tile redispatches after a failed attempt ([`config::RetryPolicy`]) | `2` |
 //! | `APFP_RETRY_BACKOFF_MS` | Base retry backoff, doubled per attempt and capped ([`config::RetryPolicy`]) | `1` |

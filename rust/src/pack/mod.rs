@@ -28,7 +28,7 @@
 //! assert_eq!(planes.to_vec(), vals); // lossless struct-of-arrays roundtrip
 //! ```
 
-use crate::softfloat::{ApFloat, ZERO_EXP};
+use crate::softfloat::{ApFloat, ApFloatN, ZERO_EXP};
 
 /// Total packed bits for a given precision (Fig. 1: next multiple of 512
 /// covering prec + 64 head bits).
@@ -177,6 +177,54 @@ impl PlaneBatch {
         );
         out.sign = self.sign[i] != 0;
         out.exp = self.exp[i];
+    }
+
+    /// Decode slot `i` directly into a stack-allocated fixed-width float —
+    /// the plane-batch decode the native backend's fixed lane runs per
+    /// element.  Unlike [`PlaneBatch::get_into`] there is no buffer
+    /// management at all: the mantissa is a `[u64; L]` on the caller's
+    /// stack, so the decode is alloc-free by construction, not by capacity
+    /// reuse.  Byte-plane semantics (zero canonicalization, normalization
+    /// hard check) are identical to the dynamic decode.
+    // apfp-lint: no_alloc
+    pub fn get_fixed_into<const L: usize>(&self, i: usize, out: &mut ApFloatN<L>) {
+        assert_eq!((self.prec / 64) as usize, L, "width mismatch: plane prec vs LIMBS");
+        if self.exp[i] == ZERO_EXP {
+            *out = ApFloatN::ZERO;
+            return;
+        }
+        out.mant = [0u64; L];
+        let row = &self.mant[i * self.limbs8..(i + 1) * self.limbs8];
+        for (k, &limb) in row.iter().enumerate() {
+            debug_assert!((0..256).contains(&limb), "non-canonical limb from artifact");
+            out.mant[k / 8] |= ((limb as u64) & 0xFF) << (8 * (k % 8));
+        }
+        if crate::bigint::is_zero(&out.mant) {
+            // canonicalize a zero mantissa exactly like ApFloat::from_parts
+            *out = ApFloatN::ZERO;
+            return;
+        }
+        assert!(
+            crate::bigint::bit_length(&out.mant) == self.prec as usize,
+            "non-normalized mantissa from artifact"
+        );
+        out.sign = self.sign[i] != 0;
+        out.exp = self.exp[i];
+    }
+
+    /// Write one fixed-width value into slot `i` — the encode mirror of
+    /// [`PlaneBatch::get_fixed_into`], byte-plane identical to
+    /// [`PlaneBatch::set`] for the same value.
+    // apfp-lint: no_alloc
+    pub fn set_fixed<const L: usize>(&mut self, i: usize, v: &ApFloatN<L>) {
+        assert_eq!((self.prec / 64) as usize, L, "width mismatch: plane prec vs LIMBS");
+        self.sign[i] = v.sign() as i32;
+        self.exp[i] = v.exp();
+        let row = &mut self.mant[i * self.limbs8..(i + 1) * self.limbs8];
+        for (k, slot) in row.iter_mut().enumerate() {
+            let word = v.mant[k / 8];
+            *slot = ((word >> (8 * (k % 8))) & 0xFF) as i32;
+        }
     }
 
     pub fn from_slice(vals: &[ApFloat], prec: u32) -> Self {
@@ -512,6 +560,51 @@ mod tests {
         panel.write_tile(0, 0, tn, tm, tm, &tile2);
         assert_eq!(panel.get(1, 2), v);
         assert_eq!(panel.get(4, 4), vals[4 * cols + 4], "outside the write is untouched");
+    }
+
+    #[test]
+    fn fixed_plane_decode_matches_dynamic_decode() {
+        use crate::softfloat::{ApFloat448, ApFloat960};
+        testkit::check(100, |rng| {
+            let vals = [rand_ap(rng, 448), ApFloat::zero(448), rand_ap(rng, 448)];
+            let planes = PlaneBatch::from_slice(&vals, 448);
+            for (i, v) in vals.iter().enumerate() {
+                let mut fx = ApFloat448::ZERO;
+                planes.get_fixed_into(i, &mut fx);
+                assert_eq!(fx.to_ap(), *v, "448 lane {i}");
+            }
+            let vals = [ApFloat::zero(960), rand_ap(rng, 960)];
+            let planes = PlaneBatch::from_slice(&vals, 960);
+            for (i, v) in vals.iter().enumerate() {
+                let mut fx = ApFloat960::ZERO;
+                planes.get_fixed_into(i, &mut fx);
+                assert_eq!(fx.to_ap(), *v, "960 lane {i}");
+            }
+        });
+    }
+
+    #[test]
+    fn fixed_plane_encode_matches_dynamic_encode() {
+        use crate::softfloat::ApFloat448;
+        testkit::check(100, |rng| {
+            let v = rand_ap(rng, 448);
+            let fx = ApFloat448::from_ap(&v);
+            let mut dynamic = PlaneBatch::zeros(2, 448);
+            let mut fixed = PlaneBatch::zeros(2, 448);
+            dynamic.set(0, &v);
+            fixed.set_fixed(0, &fx);
+            dynamic.set(1, &ApFloat::zero(448));
+            fixed.set_fixed(1, &ApFloat448::ZERO);
+            assert_eq!(dynamic, fixed, "byte planes must be identical");
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "width mismatch")]
+    fn fixed_plane_decode_rejects_width_mismatch() {
+        let planes = PlaneBatch::zeros(1, 448);
+        let mut fx = crate::softfloat::ApFloat960::ZERO;
+        planes.get_fixed_into(0, &mut fx);
     }
 
     #[test]

@@ -15,6 +15,15 @@
 //! stack above it (scheduler partition, bounded worker queues, tile
 //! K-accumulation, metrics) executes end to end on a clean checkout, and
 //! its results are bit-identical to `baseline::gemm_serial`.
+//!
+//! GEMM tiles additionally have a **fixed-width fast lane**: when the
+//! artifact's precision matches a compiled [`ApFloatN`] width (448 or 960
+//! bits — the paper's two evaluated configs), [`Backend::exec_gemm_tile`]
+//! decodes straight into `[u64; LIMBS]` stack mantissas and runs the
+//! unrolled fixed kernels instead of the arena pipeline.  Any other width
+//! falls back to the dynamic lane, and `APFP_FIXED_PATH=0` disables the
+//! lane entirely (read per backend construction).  Both lanes are
+//! bit-identical by construction and by test (tests/fixed_parity.rs).
 
 use std::cell::RefCell;
 
@@ -24,13 +33,17 @@ use super::backend::Backend;
 use super::manifest::{ArtifactKind, ArtifactMeta};
 use crate::bigint::Scratch;
 use crate::pack::PlaneBatch;
-use crate::softfloat::ApFloat;
+use crate::softfloat::{ApFloat, ApFloatN};
 
 /// In-process executor.  Like its PJRT counterpart it is thread-local by
 /// construction (interior mutability via `RefCell`, no `Sync`): the
 /// coordinator gives each compute-unit worker its own instance, which is
 /// also what keeps each worker's arena private.
 pub struct NativeBackend {
+    /// Whether GEMM tiles at a compiled width take the fixed-width lane.
+    /// Snapshotted from `APFP_FIXED_PATH` at construction (not once per
+    /// process), so one test binary can drive both lanes side by side.
+    fixed_enabled: bool,
     state: RefCell<State>,
 }
 
@@ -46,14 +59,39 @@ struct State {
     a_vals: Vec<ApFloat>,
     /// Decoded B tile (`k_tile * t_m` values), reused across calls.
     b_vals: Vec<ApFloat>,
+    /// Fixed-lane operand slots for the 448-bit (7-limb) config.
+    fixed7: FixedSlots<7>,
+    /// Fixed-lane operand slots for the 960-bit (15-limb) config.
+    fixed15: FixedSlots<15>,
+}
+
+/// Decoded fixed-width tile operands: plain `Vec`s of `Copy` values, so
+/// reshaping is one `resize` with no per-slot buffer management.
+struct FixedSlots<const L: usize> {
+    a: Vec<ApFloatN<L>>,
+    b: Vec<ApFloatN<L>>,
+}
+
+impl<const L: usize> FixedSlots<L> {
+    fn new() -> Self {
+        FixedSlots { a: Vec::new(), b: Vec::new() }
+    }
 }
 
 impl NativeBackend {
     pub fn new() -> Self {
+        Self::with_fixed_path(fixed_path_env_enabled())
+    }
+
+    /// Build a backend with the fixed-width lane explicitly on or off,
+    /// ignoring `APFP_FIXED_PATH` — parity and allocation tests construct
+    /// one of each to compare the lanes inside a single process.
+    pub fn with_fixed_path(enabled: bool) -> Self {
         // Placeholder width: every decode fixes the width of the slot it
         // writes, so the smallest legal ApFloat is fine here.
         let slot = || ApFloat::zero(128);
         NativeBackend {
+            fixed_enabled: enabled,
             state: RefCell::new(State {
                 scratch: Scratch::new(),
                 x: slot(),
@@ -61,9 +99,25 @@ impl NativeBackend {
                 acc: slot(),
                 a_vals: Vec::new(),
                 b_vals: Vec::new(),
+                fixed7: FixedSlots::new(),
+                fixed15: FixedSlots::new(),
             }),
         }
     }
+}
+
+/// `APFP_FIXED_PATH=0|false|off` (case-insensitive) disables the
+/// fixed-width GEMM lane — the escape hatch if a width regression is ever
+/// suspected in the field; anything else, including unset, leaves it on.
+fn fixed_path_env_enabled() -> bool {
+    match std::env::var("APFP_FIXED_PATH") {
+        Ok(v) => !fixed_path_disabled_value(&v),
+        Err(_) => true,
+    }
+}
+
+fn fixed_path_disabled_value(v: &str) -> bool {
+    matches!(v.trim().to_ascii_lowercase().as_str(), "0" | "false" | "off")
 }
 
 impl Default for NativeBackend {
@@ -160,6 +214,16 @@ impl Backend for NativeBackend {
             "operand precision vs artifact"
         );
         let st = &mut *self.state.borrow_mut();
+        // Fixed-width fast lane: precisions with a compiled ApFloatN width
+        // skip the arena pipeline entirely.  Unmatched widths (and
+        // APFP_FIXED_PATH=0) fall through to the dynamic lane below.
+        if self.fixed_enabled {
+            match prec {
+                448 => return exec_gemm_tile_fixed::<7>(meta, a, b, c, &mut st.fixed7),
+                960 => return exec_gemm_tile_fixed::<15>(meta, a, b, c, &mut st.fixed15),
+                _ => {}
+            }
+        }
         resize_slots(&mut st.a_vals, tn * kt);
         resize_slots(&mut st.b_vals, kt * tm);
         for (i, slot) in st.a_vals.iter_mut().enumerate() {
@@ -190,6 +254,56 @@ impl Backend for NativeBackend {
         }
         Ok(())
     }
+}
+
+/// Ensure a fixed-slot vector holds exactly `n` values (reallocates only
+/// on shape change; `ApFloatN` is `Copy`, so no per-slot buffers exist).
+// apfp-lint: allow(alloc, scope=fn, reason="cold shaping path: slots are (re)built only when the tile shape changes; steady-state calls hit the len check and return")
+fn resize_fixed_slots<const L: usize>(v: &mut Vec<ApFloatN<L>>, n: usize) {
+    if v.len() != n {
+        v.resize(n, ApFloatN::ZERO);
+    }
+}
+
+/// The fixed-width lane of [`Backend::exec_gemm_tile`]: decode the tile
+/// straight into `[u64; L]` stack mantissas, run the unrolled `ApFloatN`
+/// MAC pipeline, re-encode.  Shape/precision validation already happened
+/// in the dispatching caller.  Same zero-skip and sequential-K order as
+/// the dynamic lane, so the two lanes are bit-identical (pinned in
+/// tests/fixed_parity.rs); with warm slots the loop is allocation-free
+/// (proven in tests/alloc_free.rs).
+// apfp-lint: no_alloc
+fn exec_gemm_tile_fixed<const L: usize>(
+    meta: &ArtifactMeta,
+    a: &PlaneBatch,
+    b: &PlaneBatch,
+    c: &mut PlaneBatch,
+    slots: &mut FixedSlots<L>,
+) -> Result<()> {
+    let (tn, tm, kt) = (meta.t_n, meta.t_m, meta.k_tile);
+    resize_fixed_slots(&mut slots.a, tn * kt);
+    resize_fixed_slots(&mut slots.b, kt * tm);
+    for (i, slot) in slots.a.iter_mut().enumerate() {
+        a.get_fixed_into(i, slot);
+    }
+    for (i, slot) in slots.b.iter_mut().enumerate() {
+        b.get_fixed_into(i, slot);
+    }
+    for i in 0..tn {
+        for j in 0..tm {
+            let mut acc = ApFloatN::<L>::ZERO;
+            c.get_fixed_into(i * tm + j, &mut acc);
+            for k in 0..kt {
+                let (ax, bx) = (&slots.a[i * kt + k], &slots.b[k * tm + j]);
+                if ax.is_zero() || bx.is_zero() {
+                    continue;
+                }
+                acc.mac_into(ax, bx);
+            }
+            c.set_fixed(i * tm + j, &acc);
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -280,6 +394,69 @@ mod tests {
                     assert_eq!(c.get(i * tm + j), acc, "element ({i},{j}) at {bits} bits");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn fixed_lane_matches_dynamic_lane_bitwise() {
+        for bits in [512u32, 1024] {
+            let prec = bits - 64;
+            let fixed = NativeBackend::with_fixed_path(true);
+            let dynamic = NativeBackend::with_fixed_path(false);
+            let meta = meta_of(bits, ArtifactKind::Gemm);
+            let (tn, tm, kt) = (meta.t_n, meta.t_m, meta.k_tile);
+            let mut rng = Rng::from_seed(11);
+            let (mut av, _) = batch_of(&mut rng, tn * kt, prec);
+            let (_, bp) = batch_of(&mut rng, kt * tm, prec);
+            let (_, cp) = batch_of(&mut rng, tn * tm, prec);
+            av[1] = ApFloat::zero(prec); // exercise the zero-skip on both lanes
+            let ap = PlaneBatch::from_slice(&av, prec);
+            let mut c_fixed = cp.clone();
+            let mut c_dyn = cp;
+            fixed.exec_gemm_tile(&meta, &ap, &bp, &mut c_fixed).unwrap();
+            dynamic.exec_gemm_tile(&meta, &ap, &bp, &mut c_dyn).unwrap();
+            assert_eq!(c_fixed, c_dyn, "lanes disagree at {bits} bits");
+            // structural proof the lanes actually diverged: the fixed lane
+            // never touches the arena, the dynamic lane lives on it
+            assert_eq!(fixed.state.borrow().scratch.arena_ops(), 0, "fixed lane used the arena");
+            assert!(dynamic.state.borrow().scratch.arena_ops() > 0, "dynamic lane skipped the arena");
+        }
+    }
+
+    #[test]
+    fn unmatched_width_falls_back_to_dynamic_lane() {
+        // 1536-bit artifacts (prec 1472, 23 limbs) have no compiled fixed
+        // width: the fixed-enabled backend must fall through to the arena
+        // pipeline and still produce the exact mac-chain result.
+        let prec = 1472u32;
+        let be = NativeBackend::with_fixed_path(true);
+        let meta = meta_of(1536, ArtifactKind::Gemm);
+        let (tn, tm, kt) = (meta.t_n, meta.t_m, meta.k_tile);
+        let mut rng = Rng::from_seed(12);
+        let (av, ap) = batch_of(&mut rng, tn * kt, prec);
+        let (bv, bp) = batch_of(&mut rng, kt * tm, prec);
+        let (cv, cp) = batch_of(&mut rng, tn * tm, prec);
+        let mut c = cp;
+        be.exec_gemm_tile(&meta, &ap, &bp, &mut c).unwrap();
+        assert!(be.state.borrow().scratch.arena_ops() > 0, "fallback must use the dynamic lane");
+        for i in 0..tn {
+            for j in 0..tm {
+                let mut acc = cv[i * tm + j].clone();
+                for k in 0..kt {
+                    acc = acc.mac(&av[i * kt + k], &bv[k * tm + j]);
+                }
+                assert_eq!(c.get(i * tm + j), acc, "element ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_path_env_values_parse() {
+        for v in ["0", "false", "off", " 0 ", "FALSE", "Off"] {
+            assert!(fixed_path_disabled_value(v), "{v:?} must disable the lane");
+        }
+        for v in ["1", "true", "on", "", "yes"] {
+            assert!(!fixed_path_disabled_value(v), "{v:?} must leave the lane on");
         }
     }
 

@@ -1,8 +1,11 @@
-//! Conversions: f64 <-> ApFloat, decimal strings -> ApFloat, display.
+//! Conversions: f64 <-> ApFloat, decimal strings -> ApFloat, the
+//! `ApFloat ⇄ ApFloatN` fixed-width shims, display.
 //!
-//! These are host-side conveniences (loading matrices, printing results);
-//! none of this is on the accelerator hot path.
+//! Apart from [`ApFloatN::write_to`] (used when a fixed-lane kernel hands
+//! results back to dynamic consumers), these are host-side conveniences
+//! (loading matrices, printing results) off the accelerator hot path.
 
+use super::fixed::ApFloatN;
 use super::ApFloat;
 use crate::bigint;
 
@@ -206,6 +209,41 @@ impl ApFloat {
     }
 }
 
+impl<const L: usize> ApFloatN<L> {
+    /// Exact conversion from a dynamic value of the matching width.  Both
+    /// representations store the same `(sign, exp, mantissa)` triple, so
+    /// this is a limb copy — no rounding, round-trips bit-for-bit.
+    pub fn from_ap(v: &ApFloat) -> Self {
+        assert_eq!(v.prec() as usize, 64 * L, "width mismatch: ApFloat prec vs LIMBS");
+        let mut mant = [0u64; L];
+        mant.copy_from_slice(&v.mant);
+        ApFloatN { sign: v.sign, exp: v.exp, mant }
+    }
+
+    /// Exact conversion to the dynamic representation (allocates the
+    /// mantissa vector; hot loops should reuse a slot via
+    /// [`ApFloatN::write_to`] instead).
+    pub fn to_ap(&self) -> ApFloat {
+        ApFloat { sign: self.sign, exp: self.exp, mant: self.mant.to_vec(), prec: 64 * L as u32 }
+    }
+
+    /// Write this value into a dynamic slot, reusing the slot's mantissa
+    /// buffer — the allocation-free half of the round-trip, mirroring
+    /// `ApFloat::assign`.
+    // apfp-lint: no_alloc
+    pub fn write_to(&self, out: &mut ApFloat) {
+        out.sign = self.sign;
+        out.exp = self.exp;
+        out.prec = 64 * L as u32;
+        if out.mant.len() != L {
+            out.mant.clear();
+            // apfp-lint: allow(alloc, reason="capacity reuse: clear+resize refills the existing buffer; reallocates only when the width changes")
+            out.mant.resize(L, 0);
+        }
+        out.mant.copy_from_slice(&self.mant);
+    }
+}
+
 /// a *= m (small multiplier), growing the vector if it overflows.
 fn mul_small_grow(a: &mut Vec<u64>, m: u64) {
     let mut carry: u64 = 0;
@@ -313,5 +351,47 @@ mod tests {
         let pi = ApFloat::from_f64(std::f64::consts::PI, P);
         let s = pi.to_decimal_string(16);
         assert!(s.starts_with("3.14159265358979"), "{s}");
+    }
+
+    #[test]
+    fn fixed_roundtrip_exact_property() {
+        use crate::softfloat::{ApFloat448, ApFloat960};
+        testkit::check(300, |rng| {
+            let a = testkit::rand_ap(rng, 448, 500);
+            let f = ApFloat448::from_ap(&a);
+            assert_eq!(f.to_ap(), a, "448 round-trip");
+            assert_eq!((f.sign(), f.exp()), (a.sign(), a.exp()));
+            let w = testkit::rand_ap(rng, 960, 500);
+            let g = ApFloat960::from_ap(&w);
+            assert_eq!(g.to_ap(), w, "960 round-trip");
+        });
+        // zero round-trips canonically at both widths
+        let z = ApFloat448::from_ap(&ApFloat::zero(448));
+        assert!(z.is_zero());
+        assert_eq!(z.to_ap(), ApFloat::zero(448));
+    }
+
+    #[test]
+    fn fixed_write_to_reuses_buffer_and_corrects_width() {
+        use crate::softfloat::ApFloat448;
+        let mut rng = testkit::Rng::from_seed(31);
+        let v = ApFloat448::from_ap(&testkit::rand_ap(&mut rng, 448, 100));
+        // same-width slot: pointer stable
+        let mut slot = ApFloat::zero(448);
+        let ptr = slot.limbs().as_ptr();
+        v.write_to(&mut slot);
+        assert_eq!(slot, v.to_ap());
+        assert_eq!(slot.limbs().as_ptr(), ptr, "same-width write_to must not reallocate");
+        // wrong-width slot: reshaped once, then value matches
+        let mut wide = ApFloat::zero(960);
+        v.write_to(&mut wide);
+        assert_eq!(wide, v.to_ap());
+    }
+
+    #[test]
+    #[should_panic(expected = "width mismatch")]
+    fn fixed_from_ap_rejects_width_mismatch() {
+        use crate::softfloat::ApFloat448;
+        let _ = ApFloat448::from_ap(&ApFloat::zero(960));
     }
 }

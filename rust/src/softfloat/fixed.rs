@@ -1,0 +1,402 @@
+//! `ApFloatN<const LIMBS: usize>` — the compile-time fixed-width softfloat
+//! fast path (the paper's operands *are* compile-time fixed precision: the
+//! FPGA pipeline is generated for one mantissa width).
+//!
+//! Same value semantics as [`ApFloat`](super::ApFloat):
+//!
+//! ```text
+//!     value = (-1)^sign * M * 2^(exp - 64 * LIMBS)
+//! ```
+//!
+//! with `M` normalized into `[2^(p-1), 2^p)` for `p = 64 * LIMBS`, zero as
+//! `(sign = +, exp = ZERO_EXP, M = 0)`, and RNDZ everywhere — but the
+//! mantissa is a `[u64; LIMBS]` array, the value is `Copy`, and no
+//! operator touches an arena or the heap.  Every operator mirrors its
+//! dynamic counterpart in `softfloat::ops` stage for stage (same swap
+//! rule, same `d` clamp, same sticky correction, same truncation), so the
+//! two paths are bit-identical at every width — the acceptance criterion
+//! `tests/fixed_parity.rs` and the Python port pin with randomized suites.
+//!
+//! The crate instantiates the paper's hot configs, 448-bit ([`ApFloat448`],
+//! 7 limbs) and 960-bit ([`ApFloat960`], 15 limbs); any other multiple of
+//! 64 works the same way.  Conversions to/from [`ApFloat`](super::ApFloat)
+//! live in `softfloat::convert`.
+
+use crate::bigint::{self, fixed::Guarded};
+
+use super::ZERO_EXP;
+
+/// The paper's 512-bit packed word: 448 mantissa bits in 7 limbs.
+pub type ApFloat448 = ApFloatN<7>;
+/// The paper's 1024-bit packed word: 960 mantissa bits in 15 limbs.
+pub type ApFloat960 = ApFloatN<15>;
+
+/// Stack-allocated fixed-width APFP value.  `Copy`, arena-free, and
+/// bit-identical to the dynamic [`ApFloat`](super::ApFloat) pipeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ApFloatN<const LIMBS: usize> {
+    pub(crate) sign: bool,
+    pub(crate) exp: i64,
+    /// little-endian; normalized (top bit set) unless zero
+    pub(crate) mant: [u64; LIMBS],
+}
+
+impl<const LIMBS: usize> ApFloatN<LIMBS> {
+    /// Canonical zero (sign = +, exp = `ZERO_EXP`, mantissa clear).
+    pub const ZERO: Self = ApFloatN { sign: false, exp: ZERO_EXP, mant: [0; LIMBS] };
+
+    /// Mantissa bits of this width.
+    pub const PREC: u32 = 64 * LIMBS as u32;
+
+    pub const fn zero() -> Self {
+        Self::ZERO
+    }
+
+    /// Construct from parts; mantissa must be normalized or all-zero
+    /// (mirrors `ApFloat::from_parts`).
+    pub fn from_parts(sign: bool, exp: i64, mant: [u64; LIMBS]) -> Self {
+        if bigint::is_zero(&mant) {
+            return Self::ZERO;
+        }
+        assert!(
+            bigint::bit_length(&mant) == 64 * LIMBS,
+            "mantissa must be normalized (MSB set)"
+        );
+        ApFloatN { sign, exp, mant }
+    }
+
+    // ---- accessors --------------------------------------------------------
+
+    pub fn prec(&self) -> u32 {
+        Self::PREC
+    }
+
+    pub fn limbs(&self) -> &[u64; LIMBS] {
+        &self.mant
+    }
+
+    pub fn sign(&self) -> bool {
+        self.sign
+    }
+
+    pub fn exp(&self) -> i64 {
+        self.exp
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.exp == ZERO_EXP
+    }
+
+    pub fn neg(&self) -> Self {
+        if self.is_zero() {
+            *self
+        } else {
+            ApFloatN { sign: !self.sign, ..*self }
+        }
+    }
+
+    /// Magnitude comparison |self| vs |other| (mirrors `ApFloat::cmp_mag`).
+    pub fn cmp_mag(&self, other: &Self) -> std::cmp::Ordering {
+        use std::cmp::Ordering;
+        match (self.is_zero(), other.is_zero()) {
+            (true, true) => Ordering::Equal,
+            (true, false) => Ordering::Less,
+            (false, true) => Ordering::Greater,
+            (false, false) => self
+                .exp
+                .cmp(&other.exp)
+                .then_with(|| bigint::cmp(&self.mant, &other.mant)),
+        }
+    }
+
+    // ---- operators --------------------------------------------------------
+
+    /// `out = self * other` (RNDZ), stage-for-stage mirror of the dynamic
+    /// `mul_into`: exact double-width product, truncate the low bits.  The
+    /// product's bit length is `2p` or `2p - 1` for normalized operands, so
+    /// the renormalizing shift is either "take the high half" or "take the
+    /// high half shifted up one" — no general shifter needed.
+    // apfp-lint: no_alloc
+    pub fn mul_into(&self, other: &Self, out: &mut Self) {
+        if self.is_zero() || other.is_zero() {
+            *out = Self::ZERO;
+            return;
+        }
+        let (lo, hi) = bigint::fixed::mul_fixed(&self.mant, &other.mant);
+        if hi[LIMBS - 1] >> 63 != 0 {
+            // nbits == 2p: shr by p is exactly the high half
+            out.mant = hi;
+            out.exp = self.exp + other.exp;
+        } else {
+            // nbits == 2p - 1: shr by p - 1 pulls one bit up from lo
+            let mut carry = lo[LIMBS - 1] >> 63;
+            for i in 0..LIMBS {
+                let next = hi[i] >> 63;
+                out.mant[i] = (hi[i] << 1) | carry;
+                carry = next;
+            }
+            out.exp = self.exp + other.exp - 1;
+        }
+        debug_assert!(out.mant[LIMBS - 1] >> 63 == 1, "product renormalizes");
+        out.sign = self.sign != other.sign;
+    }
+
+    /// `out = self + other` (RNDZ), mirror of the dynamic `add_into`.
+    // apfp-lint: no_alloc
+    pub fn add_into(&self, other: &Self, out: &mut Self) {
+        add_core_fixed(self, other, false, out);
+    }
+
+    /// `out = self - other` (RNDZ), mirror of the dynamic `sub_into`.
+    // apfp-lint: no_alloc
+    pub fn sub_into(&self, other: &Self, out: &mut Self) {
+        add_core_fixed(self, other, true, out);
+    }
+
+    /// In-place MAC: `*self += a * b` with the product rounded to width
+    /// before accumulation — the same fused-pipeline semantics as the
+    /// dynamic `mac_into`, with both intermediates on the stack.
+    // apfp-lint: no_alloc
+    pub fn mac_into(&mut self, a: &Self, b: &Self) {
+        let mut prod = Self::ZERO;
+        a.mul_into(b, &mut prod);
+        let mut sum = Self::ZERO;
+        add_core_fixed(self, &prod, false, &mut sum);
+        *self = sum;
+    }
+
+    // value-returning conveniences (tests, conversions)
+
+    pub fn mul(&self, other: &Self) -> Self {
+        let mut out = Self::ZERO;
+        self.mul_into(other, &mut out);
+        out
+    }
+
+    pub fn add(&self, other: &Self) -> Self {
+        let mut out = Self::ZERO;
+        self.add_into(other, &mut out);
+        out
+    }
+
+    pub fn sub(&self, other: &Self) -> Self {
+        let mut out = Self::ZERO;
+        self.sub_into(other, &mut out);
+        out
+    }
+
+    pub fn mac(&self, a: &Self, b: &Self) -> Self {
+        let mut out = *self;
+        out.mac_into(a, b);
+        out
+    }
+}
+
+/// The shared fixed-width adder pipeline: `out = x + (-1)^flip_y * y`
+/// (RNDZ) — the dynamic `add_core` stage for stage on [`Guarded`]
+/// workspaces instead of arena slices: order by magnitude, barrel shift
+/// with the `64 * (L + 2)` clamp + sticky, wide add/sub with the RNDZ
+/// sticky correction, LZC renormalize, truncate.
+// apfp-lint: no_alloc
+fn add_core_fixed<const L: usize>(
+    x: &ApFloatN<L>,
+    y: &ApFloatN<L>,
+    flip_y: bool,
+    out: &mut ApFloatN<L>,
+) {
+    let y_sign = y.sign != flip_y;
+    if y.is_zero() {
+        // covers x == y == 0 too: x's canonical zero is copied through
+        *out = *x;
+        return;
+    }
+    if x.is_zero() {
+        out.sign = y_sign;
+        out.exp = y.exp;
+        out.mant = y.mant;
+        return;
+    }
+
+    // -- stage 1: order by magnitude ------------------------------------
+    let swap = x.cmp_mag(y) == std::cmp::Ordering::Less;
+    let (big_sign, big_exp) = if swap { (y_sign, y.exp) } else { (x.sign, x.exp) };
+    let small_exp = if swap { x.exp } else { y.exp };
+    let same_sign = x.sign == y_sign;
+
+    // -- stage 2: alignment ----------------------------------------------
+    // Workspace layout [1 guard | L | 1 overflow]; big's MSB at bit
+    // 64 + p - 1.  Sticky is read before the in-place shift consumes the
+    // pre-shift bits (the dynamic path shifts out of place and reads the
+    // preserved original — same result).
+    let p = 64 * L;
+    let (big_mant, small_mant) = if swap { (&y.mant, &x.mant) } else { (&x.mant, &y.mant) };
+    let mut v = Guarded::<L>::place(big_mant);
+    let mut small = Guarded::<L>::place(small_mant);
+    let d_wide = (big_exp as i128) - (small_exp as i128); // >= 0
+    let d = d_wide.min((64 * (L + 2)) as i128) as usize; // beyond this all bits are sticky
+    let sticky = small.sticky_below(d);
+    small.shr_assign(d);
+
+    // -- stage 3: wide add / subtract -------------------------------------
+    if same_sign {
+        let carry = v.add_assign(&small);
+        debug_assert!(!carry, "overflow limb absorbs the carry");
+    } else {
+        let borrow = v.sub_assign(&small);
+        debug_assert!(!borrow, "|big| >= |small| by stage 1");
+        if sticky {
+            // RNDZ correction: the truncated small operand under-shoots,
+            // so the raw difference over-shoots by <1 ws-ulp.
+            let borrow = v.sub_limb(1);
+            debug_assert!(!borrow);
+        }
+    }
+
+    // -- stages 4+5: renormalize + truncate --------------------------------
+    let nbits = v.bit_length();
+    if nbits == 0 {
+        // exact cancellation -> +0
+        *out = ApFloatN::ZERO;
+    } else {
+        if nbits >= p {
+            v.shr_into(nbits - p, &mut out.mant);
+        } else {
+            v.shl_into(p - nbits, &mut out.mant);
+        }
+        out.sign = big_sign;
+        out.exp = big_exp + (nbits as i64 - (64 + p) as i64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ApFloat;
+    use super::*;
+    use crate::testkit::{self, rand_ap};
+
+    fn rand_fixed<const L: usize>(rng: &mut testkit::Rng, exp_range: i64) -> ApFloatN<L> {
+        ApFloatN::from_ap(&rand_ap(rng, 64 * L as u32, exp_range))
+    }
+
+    #[test]
+    fn zero_is_canonical_and_copy() {
+        let z = ApFloat448::ZERO;
+        assert!(z.is_zero());
+        assert!(!z.sign());
+        assert_eq!(z.exp(), ZERO_EXP);
+        assert_eq!(z.neg(), z);
+        let w = z; // Copy
+        assert_eq!(w, z);
+        assert_eq!(ApFloat448::PREC, 448);
+        assert_eq!(ApFloat960::PREC, 960);
+    }
+
+    #[test]
+    fn from_parts_normalization_contract() {
+        let mut m = [0u64; 7];
+        assert!(ApFloat448::from_parts(true, 3, m).is_zero(), "all-zero -> canonical zero");
+        m[6] = 1 << 63;
+        let x = ApFloat448::from_parts(true, 3, m);
+        assert!(x.sign() && x.exp() == 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "normalized")]
+    fn from_parts_rejects_denormal() {
+        let mut m = [0u64; 7];
+        m[0] = 1;
+        let _ = ApFloat448::from_parts(false, 0, m);
+    }
+
+    #[test]
+    fn mul_matches_dynamic_property() {
+        let mut scratch = crate::bigint::Scratch::new();
+        let mut out = ApFloat::zero(448);
+        testkit::check(400, |rng| {
+            let a = rand_ap(rng, 448, 300);
+            let b = rand_ap(rng, 448, 300);
+            a.mul_into(&b, &mut out, &mut scratch);
+            let got = ApFloat448::from_ap(&a).mul(&ApFloat448::from_ap(&b));
+            assert_eq!(got.to_ap(), out);
+        });
+    }
+
+    #[test]
+    fn add_sub_match_dynamic_property() {
+        let mut scratch = crate::bigint::Scratch::new();
+        let mut out = ApFloat::zero(960);
+        testkit::check(400, |rng| {
+            // tight exponent range maximizes overlap (carry/cancel cases)
+            let a = rand_ap(rng, 960, 12);
+            let b = rand_ap(rng, 960, 12);
+            a.add_into(&b, &mut out, &mut scratch);
+            let (fa, fb) = (ApFloat960::from_ap(&a), ApFloat960::from_ap(&b));
+            assert_eq!(fa.add(&fb).to_ap(), out, "add");
+            a.sub_into(&b, &mut out, &mut scratch);
+            assert_eq!(fa.sub(&fb).to_ap(), out, "sub");
+        });
+    }
+
+    #[test]
+    fn mac_matches_dynamic_including_zero_operands() {
+        let mut scratch = crate::bigint::Scratch::new();
+        testkit::check(300, |rng| {
+            let mut acc = rand_ap(rng, 448, 40);
+            let mut facc = ApFloat448::from_ap(&acc);
+            for _ in 0..4 {
+                let a = if rng.below(8) == 0 { ApFloat::zero(448) } else { rand_ap(rng, 448, 40) };
+                let b = if rng.below(8) == 0 { ApFloat::zero(448) } else { rand_ap(rng, 448, 40) };
+                acc.mac_into(&a, &b, &mut scratch);
+                facc.mac_into(&ApFloat448::from_ap(&a), &ApFloat448::from_ap(&b));
+                assert_eq!(facc.to_ap(), acc);
+            }
+        });
+    }
+
+    #[test]
+    fn exact_cancellation_gives_plus_zero() {
+        let mut rng = testkit::Rng::from_seed(5);
+        let a = rand_fixed::<7>(&mut rng, 20);
+        let d = a.sub(&a);
+        assert!(d.is_zero());
+        assert!(!d.sign());
+        assert_eq!(d, ApFloat448::ZERO);
+    }
+
+    #[test]
+    fn sticky_correction_one_ulp_mirror() {
+        // the dynamic suite's sticky test, fixed edition: big - tiny must
+        // dip below big by exactly one ulp when the tiny operand is all
+        // sticky (shifted past the guard limb)
+        let one = ApFloat448::from_ap(&ApFloat::from_u64(1, 448));
+        let mut tiny = one;
+        tiny.exp -= 64 * 9; // far beyond the workspace: pure sticky
+        let d = one.sub(&tiny);
+        assert!(!d.is_zero());
+        // result is just below 1: exponent drops by 1, mantissa all ones
+        assert_eq!(d.exp(), one.exp() - 1);
+        assert!(d.limbs().iter().all(|&w| w == u64::MAX));
+    }
+
+    #[test]
+    fn carry_chain_boundary_diffs_match_dynamic() {
+        // the dynamic guard_limb_boundary_diffs sweep: exponent gaps that
+        // land exactly on limb boundaries of the guard workspace
+        let mut scratch = crate::bigint::Scratch::new();
+        let mut out = ApFloat::zero(448);
+        let mut rng = testkit::Rng::from_seed(77);
+        for d in [0i64, 1, 2, 63, 64, 65, 447, 448, 449, 511, 512, 513, 600] {
+            for flip in [false, true] {
+                let a = rand_ap(&mut rng, 448, 5);
+                let mut b = rand_ap(&mut rng, 448, 5);
+                b.assign(&ApFloat::from_parts(flip, a.exp() - d, b.limbs().to_vec(), 448));
+                a.add_into(&b, &mut out, &mut scratch);
+                let got = ApFloat448::from_ap(&a).add(&ApFloat448::from_ap(&b));
+                assert_eq!(got.to_ap(), out, "d={d} flip={flip}");
+                a.sub_into(&b, &mut out, &mut scratch);
+                let got = ApFloat448::from_ap(&a).sub(&ApFloat448::from_ap(&b));
+                assert_eq!(got.to_ap(), out, "sub d={d} flip={flip}");
+            }
+        }
+    }
+}

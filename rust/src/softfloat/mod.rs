@@ -19,9 +19,11 @@
 //!      (the paper compares its FPGA output against MPFR the same way).
 
 mod convert;
+pub mod fixed;
 mod ops;
 
 pub use convert::ParseApFloatError;
+pub use fixed::{ApFloat448, ApFloat960, ApFloatN};
 
 use crate::bigint;
 

@@ -10,14 +10,14 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use apfp::baseline::{gemm_into, GemmScratch};
+use apfp::baseline::{gemm_fixed, gemm_into, pack_b_fixed, GemmScratch};
 use apfp::bigint::Scratch;
 use apfp::config::ApfpConfig;
 use apfp::coordinator::{Device, Matrix};
 use apfp::pack::PlaneBatch;
 use apfp::runtime::{manifest, ArtifactKind, Backend, BackendKind, NativeBackend, TileShape};
 use apfp::softfloat;
-use apfp::softfloat::ApFloat;
+use apfp::softfloat::{ApFloat, ApFloatN};
 use apfp::testkit::{rand_ap, Rng};
 
 struct CountingAlloc;
@@ -176,11 +176,69 @@ fn mac_pipeline_is_allocation_free() {
         assert_eq!(out, want, "warm tile accumulation must stay correct");
     }
 
+    // --- steady-state fixed-width GEMM tile: gemm_fixed on stack scalars --
+    // The const-generic fast path: a warm gemm_fixed tile — operands and
+    // output held as `[u64; LIMBS]` stack values in plain Vecs — must be
+    // zero-alloc.  There is no arena and no per-value buffer to warm; the
+    // only allocations are the operand Vecs built up front.
+    {
+        fn fixed_tile<const L: usize>(prec: u32) {
+            let (n, k, m) = (6usize, 8usize, 5usize);
+            let a = Matrix::random(n, k, prec, 11, 20);
+            let b = Matrix::random(k, m, prec, 12, 20);
+            let c = Matrix::random(n, m, prec, 13, 20);
+            let mut af: Vec<ApFloatN<L>> = Vec::new();
+            for i in 0..n {
+                for kk in 0..k {
+                    af.push(ApFloatN::from_ap(a.get(i, kk)));
+                }
+            }
+            let mut bt = Vec::new();
+            pack_b_fixed::<L>(&b, &mut bt);
+            let mut cf: Vec<ApFloatN<L>> = Vec::new();
+            for i in 0..n {
+                for j in 0..m {
+                    cf.push(ApFloatN::from_ap(c.get(i, j)));
+                }
+            }
+            gemm_fixed(&af, &bt, &mut cf, n, k, m); // matches the warmup round below
+            let delta = min_alloc_delta(3, || {
+                gemm_fixed(&af, &bt, &mut cf, n, k, m);
+            });
+            assert_eq!(delta, 0, "warm gemm_fixed tile allocated at prec {prec}");
+            // bit-exact vs the dynamic reference over the same replay count,
+            // decoded through the write_to shim (itself allocation-free once
+            // the output width matches)
+            let rounds = 1 + 3;
+            let mut want = c.clone();
+            for _ in 0..rounds {
+                want = apfp::baseline::gemm_serial(&a, &b, &want);
+            }
+            let mut out = ApFloat::zero(prec);
+            let before = allocs();
+            for i in 0..n {
+                for j in 0..m {
+                    cf[i * m + j].write_to(&mut out);
+                    assert_eq!(&out, want.get(i, j), "warm fixed tile ({i},{j}) prec {prec}");
+                }
+            }
+            assert!(
+                allocs() - before <= 1,
+                "write_to decode loop allocated more than the one width fixup at prec {prec}"
+            );
+        }
+        fixed_tile::<7>(448);
+        fixed_tile::<15>(960);
+    }
+
     // --- steady-state NativeBackend GEMM tile: the device datapath --------
-    // The native backend decodes planes into reused slots and accumulates
-    // through the arena, so a warm exec_gemm_tile loop — the compute-unit
-    // worker's K-step — must not touch the allocator (the same standard
-    // the host GEMM meets above).
+    // Both lanes must meet the zero-alloc bar.  The fixed lane
+    // (exec_gemm_tile_fixed behind `with_fixed_path(true)`) decodes planes
+    // into reused `[u64; LIMBS]` slot Vecs and accumulates on the stack;
+    // the dynamic lane (`with_fixed_path(false)`) decodes into reused
+    // ApFloat slots and accumulates through the arena.  A warm
+    // exec_gemm_tile loop — the compute-unit worker's K-step — must not
+    // touch the allocator on either lane.
     for bits in [512u32, 1024] {
         let meta = manifest::builtin(bits, TileShape { n: 8, m: 8, k: 8 })
             .unwrap()
@@ -197,25 +255,35 @@ fn mac_pipeline_is_allocation_free() {
         };
         let (av, a) = batch(tn * kt, &mut rng);
         let (bv, b) = batch(kt * tm, &mut rng);
-        let (cv, mut c) = batch(tn * tm, &mut rng);
-        let backend = NativeBackend::new();
-        backend.exec_gemm_tile(&meta, &a, &b, &mut c).unwrap(); // warm slots + arena
-        let delta = min_alloc_delta(3, || {
-            backend.exec_gemm_tile(&meta, &a, &b, &mut c).unwrap();
-        });
-        assert_eq!(delta, 0, "native exec_gemm_tile allocated in steady state at {bits} bits");
-        // the warm path stays bit-exact: replay warmup + measured rounds
-        // through the softfloat mac chain
-        let rounds = 1 + 3;
-        for i in 0..tn {
-            for j in 0..tm {
-                let mut acc = cv[i * tm + j].clone();
-                for _ in 0..rounds {
-                    for k in 0..kt {
-                        acc = acc.mac(&av[i * kt + k], &bv[k * tm + j]);
+        let (cv, cp) = batch(tn * tm, &mut rng);
+        for (lane, fixed) in [("fixed", true), ("dynamic", false)] {
+            let mut c = cp.clone();
+            let backend = NativeBackend::with_fixed_path(fixed);
+            backend.exec_gemm_tile(&meta, &a, &b, &mut c).unwrap(); // warm slots + arena
+            let delta = min_alloc_delta(3, || {
+                backend.exec_gemm_tile(&meta, &a, &b, &mut c).unwrap();
+            });
+            assert_eq!(
+                delta, 0,
+                "native {lane}-lane exec_gemm_tile allocated in steady state at {bits} bits"
+            );
+            // the warm path stays bit-exact: replay warmup + measured rounds
+            // through the softfloat mac chain
+            let rounds = 1 + 3;
+            for i in 0..tn {
+                for j in 0..tm {
+                    let mut acc = cv[i * tm + j].clone();
+                    for _ in 0..rounds {
+                        for k in 0..kt {
+                            acc = acc.mac(&av[i * kt + k], &bv[k * tm + j]);
+                        }
                     }
+                    assert_eq!(
+                        c.get(i * tm + j),
+                        acc,
+                        "warm native {lane}-lane tile ({i},{j}) at {bits} bits"
+                    );
                 }
-                assert_eq!(c.get(i * tm + j), acc, "warm native tile ({i},{j}) at {bits} bits");
             }
         }
     }

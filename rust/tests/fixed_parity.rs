@@ -1,0 +1,191 @@
+//! Randomized parity: the const-generic fixed-width fast path must be
+//! bit-identical to the dynamic `Scratch`-arena reference at the paper's
+//! hot widths (448 bits = 7 limbs, 960 bits = 15 limbs) — including the
+//! awkward operands: zeros, deeply negative exponents, and carry-chain
+//! boundary mantissas (all-ones ripples the full adder; MSB-only sits one
+//! ulp above the normalization floor).
+//!
+//! The Python port (python/tests/test_fixed_parity.py) replays the same
+//! xorshift64* operand streams against an exact-integer RNDZ reference,
+//! so the two suites pin the same behaviour from independent directions.
+
+use apfp::baseline::{gemm_fixed, gemm_serial, pack_b_fixed};
+use apfp::coordinator::Matrix;
+use apfp::pack::PlaneBatch;
+use apfp::runtime::{manifest, ArtifactKind, Backend, NativeBackend, TileShape};
+use apfp::softfloat::{ApFloat, ApFloatN};
+use apfp::testkit::{rand_ap, Rng};
+
+/// Operand mix: mostly random normalized values, salted with zeros,
+/// carry-chain boundary mantissas, and deeply negative exponents.
+fn operand<const L: usize>(rng: &mut Rng, prec: u32) -> ApFloatN<L> {
+    match rng.below(16) {
+        0 => ApFloatN::ZERO,
+        1 | 2 => {
+            let mant = if rng.bool() {
+                [u64::MAX; L]
+            } else {
+                let mut m = [0u64; L];
+                m[L - 1] = 1 << 63;
+                m
+            };
+            ApFloatN::from_parts(rng.bool(), rng.range_i64(-300, 300), mant)
+        }
+        3 | 4 => {
+            let v = rand_ap(rng, prec, 4);
+            let f = ApFloatN::<L>::from_ap(&v);
+            if f.is_zero() {
+                f
+            } else {
+                ApFloatN::from_parts(f.sign(), rng.range_i64(-2000, -500), *f.limbs())
+            }
+        }
+        _ => ApFloatN::from_ap(&rand_ap(rng, prec, 300)),
+    }
+}
+
+/// mul/add/sub/mac on independent operands, fixed vs dynamic, bitwise.
+fn scalar_parity<const L: usize>(prec: u32, seed: u64, cases: u64) {
+    let mut rng = Rng::from_seed(seed);
+    for case in 0..cases {
+        let af = operand::<L>(&mut rng, prec);
+        let bf = operand::<L>(&mut rng, prec);
+        let accf = operand::<L>(&mut rng, prec);
+        let ad = af.to_ap();
+        let bd = bf.to_ap();
+        let accd = accf.to_ap();
+        assert_eq!(af.mul(&bf).to_ap(), ad.mul(&bd), "mul case {case} at prec {prec}");
+        assert_eq!(af.add(&bf).to_ap(), ad.add(&bd), "add case {case} at prec {prec}");
+        assert_eq!(af.sub(&bf).to_ap(), ad.sub(&bd), "sub case {case} at prec {prec}");
+        assert_eq!(
+            accf.mac(&af, &bf).to_ap(),
+            accd.mac(&ad, &bd),
+            "mac case {case} at prec {prec}"
+        );
+    }
+}
+
+#[test]
+fn scalar_ops_bit_identical_448() {
+    scalar_parity::<7>(448, 0xF1A8_0448, 2000);
+}
+
+#[test]
+fn scalar_ops_bit_identical_960() {
+    scalar_parity::<15>(960, 0xF1A8_0960, 2000);
+}
+
+/// A long in-place MAC chain — the GEMM inner loop's exact usage — must
+/// track the dynamic accumulator bit for bit at every step, so rounding
+/// differences cannot hide behind later accumulation.
+fn mac_chain_parity<const L: usize>(prec: u32, seed: u64) {
+    let mut rng = Rng::from_seed(seed);
+    let mut accf = ApFloatN::<L>::ZERO;
+    let mut accd = ApFloat::zero(prec);
+    for step in 0..512 {
+        let af = operand::<L>(&mut rng, prec);
+        let bf = operand::<L>(&mut rng, prec);
+        accf.mac_into(&af, &bf);
+        accd = accd.mac(&af.to_ap(), &bf.to_ap());
+        assert_eq!(accf.to_ap(), accd, "mac chain step {step} at prec {prec}");
+    }
+}
+
+#[test]
+fn mac_chain_bit_identical_448() {
+    mac_chain_parity::<7>(448, 0xC4A1_0448);
+}
+
+#[test]
+fn mac_chain_bit_identical_960() {
+    mac_chain_parity::<15>(960, 0xC4A1_0960);
+}
+
+/// Whole-tile parity: `gemm_fixed` vs `gemm_serial` on random matrices
+/// with a zero element salted in, accumulated twice so C enters the
+/// second round non-trivial.
+fn gemm_parity<const L: usize>(prec: u32, seed: u64) {
+    let (n, k, m) = (5usize, 7, 6);
+    let mut a = Matrix::random(n, k, prec, seed, 60);
+    a.set(0, 3, ApFloat::zero(prec));
+    let b = Matrix::random(k, m, prec, seed + 1, 60);
+    let c = Matrix::random(n, m, prec, seed + 2, 60);
+
+    let mut af: Vec<ApFloatN<L>> = Vec::new();
+    for i in 0..n {
+        for kk in 0..k {
+            af.push(ApFloatN::from_ap(a.get(i, kk)));
+        }
+    }
+    let mut bt = Vec::new();
+    pack_b_fixed::<L>(&b, &mut bt);
+    let mut cf: Vec<ApFloatN<L>> = Vec::new();
+    for i in 0..n {
+        for j in 0..m {
+            cf.push(ApFloatN::from_ap(c.get(i, j)));
+        }
+    }
+
+    let mut want = c.clone();
+    for round in 0..2 {
+        gemm_fixed(&af, &bt, &mut cf, n, k, m);
+        want = gemm_serial(&a, &b, &want);
+        for i in 0..n {
+            for j in 0..m {
+                assert_eq!(
+                    &cf[i * m + j].to_ap(),
+                    want.get(i, j),
+                    "gemm round {round} element ({i},{j}) at prec {prec}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn gemm_fixed_bit_identical_448() {
+    gemm_parity::<7>(448, 0x6E11_0448);
+}
+
+#[test]
+fn gemm_fixed_bit_identical_960() {
+    gemm_parity::<15>(960, 0x6E11_0960);
+}
+
+/// End-to-end lane parity: the native backend with the fixed lane enabled
+/// must produce byte-identical output planes to the dynamic lane on the
+/// same tile, at both hot device widths.
+#[test]
+fn native_lanes_bit_identical() {
+    for bits in [512u32, 1024] {
+        let meta = manifest::builtin(bits, TileShape { n: 6, m: 5, k: 4 })
+            .unwrap()
+            .into_iter()
+            .find(|m| m.kind == ArtifactKind::Gemm)
+            .expect("builtin gemm artifact");
+        let prec = meta.prec();
+        let (tn, tm, kt) = (meta.t_n, meta.t_m, meta.k_tile);
+        let mut rng = Rng::from_seed(0x1A6E ^ u64::from(bits));
+        let batch = |count: usize, rng: &mut Rng| -> PlaneBatch {
+            let mut vals: Vec<ApFloat> = (0..count).map(|_| rand_ap(rng, prec, 30)).collect();
+            vals[count / 2] = ApFloat::zero(prec); // a zero lane must round-trip
+            PlaneBatch::from_slice(&vals, prec)
+        };
+        let a = batch(tn * kt, &mut rng);
+        let b = batch(kt * tm, &mut rng);
+        let c0 = batch(tn * tm, &mut rng);
+
+        let fixed = NativeBackend::with_fixed_path(true);
+        let dynamic = NativeBackend::with_fixed_path(false);
+        let mut c_fixed = c0.clone();
+        let mut c_dyn = c0.clone();
+        for round in 0..3 {
+            fixed.exec_gemm_tile(&meta, &a, &b, &mut c_fixed).unwrap();
+            dynamic.exec_gemm_tile(&meta, &a, &b, &mut c_dyn).unwrap();
+            assert_eq!(
+                c_fixed, c_dyn,
+                "fixed and dynamic lanes diverged on round {round} at {bits} bits"
+            );
+        }
+    }
+}

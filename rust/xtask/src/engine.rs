@@ -48,6 +48,13 @@ pub const RULE_ANNOTATION: &str = "annotation";
 pub const KNOWN_RULES: [&str; 5] =
     [RULE_ALLOC, RULE_COVERAGE, RULE_PANIC, RULE_INDEX, RULE_HAZARD];
 
+/// Kernel roots that must carry `// apfp-lint: no_alloc` at every non-test
+/// definition: the fixed-width GEMM fast path is only sound while its
+/// entry points stay on the allocation-free discipline, so silently
+/// dropping an annotation (and with it the transitive denylist walk) is
+/// itself an `alloc-coverage` finding.
+pub const REQUIRED_NO_ALLOC: [&str; 3] = ["mul_fixed", "gemm_fixed", "exec_gemm_tile_fixed"];
+
 /// Files subject to the panic / index discipline (relative-path prefixes).
 const PANIC_SCOPE: [&str; 3] = ["runtime/", "coordinator/", "config.rs"];
 /// Files subject to the hazard-protocol structure rule.
@@ -707,6 +714,31 @@ fn run_alloc_rule(
             let mut rec = f.clone();
             parse_callees(&mut rec);
             fn_table.insert(fn_key(f), rec);
+        }
+    }
+
+    // required roots: every non-test definition of a fixed-path kernel
+    // entry point must be annotated, independent of whether any other
+    // root exists — this runs before the `roots.is_empty()` early return
+    for name in REQUIRED_NO_ALLOC {
+        let Some(keys) = fn_map.get(name) else { continue };
+        for key in keys {
+            let f = &fn_table[key];
+            if f.no_alloc {
+                continue;
+            }
+            let (allowed, reason) = allow_for(&files[&f.file], f.sig_line, RULE_COVERAGE);
+            findings.push(Finding {
+                rule: RULE_COVERAGE,
+                file: f.file.clone(),
+                line: f.sig_line,
+                message: format!(
+                    "`{name}` is a fixed-path kernel root and must carry \
+                     `// apfp-lint: no_alloc`"
+                ),
+                allowed,
+                reason,
+            });
         }
     }
 

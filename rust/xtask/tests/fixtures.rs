@@ -77,6 +77,11 @@ fn fixture_coverage_bad() {
 }
 
 #[test]
+fn fixture_coverage_required_bad() {
+    run_fixture("coverage_required_bad");
+}
+
+#[test]
 fn fixture_panic_bad() {
     run_fixture("panic_bad");
 }

@@ -1,0 +1,13 @@
+//! A fixed-path kernel root that lost its `no_alloc` annotation: the
+//! required-roots check must flag it even though no other annotated
+//! function exists in the tree.
+
+pub fn gemm_fixed(a: &[u64], c: &mut [u64]) {
+    for (x, y) in a.iter().zip(c.iter_mut()) {
+        *y = y.wrapping_add(*x);
+    }
+}
+
+pub fn unrelated_helper(x: u64) -> u64 {
+    x ^ 1
+}
