@@ -13,8 +13,11 @@ Three rule families (see docs/INVARIANTS.md for the catalogue):
   every annotated function must be exercised (by name) by
   ``tests/alloc_free.rs`` or be reachable from one that is.
 * ``panic`` / ``index`` — no ``unwrap``/``expect``/``panic!``-family macros
-  and no unguarded slice subscripts in ``runtime/``, ``coordinator/`` and
-  ``config.rs`` outside ``#[cfg(test)]``.
+  and no unguarded slice subscripts in ``runtime/`` (the simulated
+  backend's model accounting in ``runtime/sim_backend.rs`` included — the
+  ``panic_bad`` fixture pins that path), ``coordinator/`` (where the sim
+  ledger ``coordinator/model_metrics.rs`` lives) and ``config.rs``
+  outside ``#[cfg(test)]``.
 * ``hazard`` — mechanical protocol shape of ``coordinator/stream.rs`` /
   ``worker.rs``: every ``TileResult`` / ``Job::GemmTile`` literal carries
   ``c_buf`` and the retry arm's ``attempt`` counter, reply receives are

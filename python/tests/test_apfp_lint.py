@@ -74,7 +74,7 @@ def test_rust_src_is_clean():
 def test_json_rendering_round_trips():
     report = apfp_lint.lint_root(FIXTURES / "panic_bad" / "src")
     parsed = json.loads(apfp_lint.render_json(report))
-    assert parsed["summary"]["denied"] == 3
+    assert parsed["summary"]["denied"] == 5  # runtime/mod.rs x3 + runtime/sim_backend.rs x2
     assert len(parsed["findings"]) == parsed["summary"]["findings"]
 
 

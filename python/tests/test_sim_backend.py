@@ -1,0 +1,553 @@
+"""SimBackend cycle accounting, mirrored from ``rust/src/runtime/sim_backend.rs``.
+
+Self-contained (stdlib only, always collected, no jax): a line-mirror of
+the hardware-model chain the simulated backend charges per GEMM K-step —
+``hwmodel::dsp`` (Karatsuba DSP counting), ``hwmodel::resources`` (CLB
+estimation), ``hwmodel::frequency`` (achievable clock),
+``hwmodel::floorplan`` (Fig. 4 bank sharing), ``sim::dram`` (bank
+bandwidth derates), ``sim::gemm_sim::simulate/peak`` (the Fig. 5 / Tab.
+III dataflow model) and finally ``sim_backend::tile_cost`` itself — then
+three layers of checks on top:
+
+1. the same paper calibration pins the Rust unit tests assert (Tab. I-III
+   frequencies and peaks, Fig. 3 shape), so the mirror cannot drift from
+   the model without failing the same way the Rust suite would;
+2. seeded random launch schedules (xorshift64*, same generator as
+   ``rust/src/testkit``) replaying the coordinator's retirement
+   accounting: per-tile cost = K-steps x ``tile_cost``, ledger totals =
+   sum over settled tiles + one fixed launch charge per retired launch,
+   with retried/failed attempts contributing nothing;
+3. a value-exact cross-check of every pin in ``rust/model_golden.json``
+   (the file CI's ``repro modelgold --check`` gate diffs against the Rust
+   implementation), which is what ties the two languages together: Rust
+   checks that file against its model at 1e-6 relative, this file checks
+   it against the mirror at the same tolerance, so Rust and Python agree
+   transitively to 2e-6.
+
+Rounding caveat mirrored deliberately: Rust ``f64::round`` is
+half-away-from-zero, Python ``round`` is banker's — the mirror uses
+``floor(x + 0.5)`` for non-negative model quantities.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+
+import pytest
+
+# --------------------------------------------------------------------------
+# u250 constants — rust/src/hwmodel/mod.rs::u250
+# --------------------------------------------------------------------------
+
+DSP_TOTAL = 12_288
+CLB_TOTAL = 216_000
+SLRS = 4
+DDR_BANK_BW = 19.2e9
+
+# rust/src/sim/gemm_sim.rs
+CONVERT_S_PER_ELEM = 120e-9
+PCIE_BW = 11.0e9
+LAUNCH_S = 250e-6
+PIPELINE_DEPTH = 400.0
+
+# rust/src/sim/dram.rs
+CONTIGUOUS_EFF = 0.93
+STRIDED_EFF = 0.78
+
+# rust/src/runtime/sim_backend.rs
+DSP_PJ_PER_CYCLE = 22.0
+CLB_PJ_PER_CYCLE = 0.55
+
+
+def rust_round(x: float) -> int:
+    """f64::round for non-negative x: half away from zero."""
+    assert x >= 0.0
+    return math.floor(x + 0.5)
+
+
+def div_ceil(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+# --------------------------------------------------------------------------
+# hwmodel::dsp — Karatsuba DSP counting
+# --------------------------------------------------------------------------
+
+DSP_PORT_BITS = 17
+
+
+def naive_dsps(w: int) -> int:
+    tiles = div_ceil(w, DSP_PORT_BITS)
+    return tiles * tiles
+
+
+def karatsuba_leaves(prec: int, mult_base_bits: int) -> tuple[int, int]:
+    width, leaves = prec, 1
+    while width > mult_base_bits:
+        width = div_ceil(width, 2)
+        leaves *= 3
+    return leaves, width
+
+
+def multiplier_dsps(prec: int, mult_base_bits: int) -> int:
+    leaves, width = karatsuba_leaves(prec, mult_base_bits)
+    return leaves * naive_dsps(width)
+
+
+# --------------------------------------------------------------------------
+# hwmodel::resources — CLB estimation
+# --------------------------------------------------------------------------
+
+SHELL_CLBS = 21_600
+MULTI_CU_CLBS = 12_960
+FIXED_CU_CLBS = 1_080
+
+
+def luts_to_clbs(luts: int) -> int:
+    return rust_round((luts / 8.0 + 2.0 * luts / 16.0) / 0.55)
+
+
+def recombination_luts(prec: int, mult_base_bits: int) -> int:
+    total, width, nodes = 0, prec, 1
+    while width > mult_base_bits:
+        total += nodes * 6 * width
+        width = div_ceil(width, 2)
+        nodes *= 3
+    return total
+
+
+def leaf_luts(prec: int, mult_base_bits: int) -> int:
+    leaves, w = karatsuba_leaves(prec, mult_base_bits)
+    tiles = div_ceil(w, DSP_PORT_BITS)
+    return leaves * tiles * (w // 2)
+
+
+def multiplier_luts(prec: int, mult_base_bits: int) -> int:
+    return recombination_luts(prec, mult_base_bits) + leaf_luts(prec, mult_base_bits)
+
+
+# --------------------------------------------------------------------------
+# DesignPoint — rust/src/hwmodel/mod.rs (only what tile_cost/simulate need)
+# --------------------------------------------------------------------------
+
+
+class DesignPoint:
+    def __init__(self, bits, compute_units, mult_base_bits, add_base_bits, gemm):
+        self.bits = bits
+        self.compute_units = compute_units
+        self.mult_base_bits = mult_base_bits
+        self.add_base_bits = add_base_bits
+        self.gemm = gemm
+
+    @property
+    def prec(self) -> int:
+        return self.bits - 64
+
+
+def gemm_512(cus: int) -> DesignPoint:
+    return DesignPoint(512, cus, 72, 64, True)
+
+
+def gemm_1024(cus: int) -> DesignPoint:
+    return DesignPoint(1024, cus, 72, 64, True)
+
+
+def mult_512(cus: int) -> DesignPoint:
+    return DesignPoint(512, cus, 72, 64, False)
+
+
+def cu_clbs(d: DesignPoint) -> int:
+    clbs = FIXED_CU_CLBS + luts_to_clbs(multiplier_luts(d.prec, d.mult_base_bits))
+    if d.gemm:
+        clbs += 12 * d.prec
+    return clbs
+
+
+# --------------------------------------------------------------------------
+# hwmodel::frequency
+# --------------------------------------------------------------------------
+
+F_CEILING_MHZ = 500.0
+F_FLOOR_MHZ = 293.0
+T_CARRY_PER_BIT = 0.004
+T_LEAF_PER_BIT = 0.012
+T_WIDTH_PER_BIT = 0.001
+T_GEMM_PER_BIT = 0.00195
+T_BASE = 0.62
+CONGESTION = 1.5
+
+
+def pipeline_mhz(d: DesignPoint) -> float:
+    prec = float(d.prec)
+    t = (
+        T_BASE
+        + T_WIDTH_PER_BIT * prec
+        + T_CARRY_PER_BIT * d.add_base_bits
+        + T_LEAF_PER_BIT * d.mult_base_bits
+    )
+    if d.gemm:
+        t += T_GEMM_PER_BIT * prec
+    return min(1000.0 / t, F_CEILING_MHZ)
+
+
+def achievable_mhz(d: DesignPoint) -> float:
+    f_base = pipeline_mhz(d)
+    cu_frac = cu_clbs(d) / CLB_TOTAL
+    congestion = 1.0 + CONGESTION * (d.compute_units - 1.0) * cu_frac
+    f_cong = f_base / congestion
+    return max(f_cong, min(F_FLOOR_MHZ, f_base))
+
+
+# --------------------------------------------------------------------------
+# hwmodel::floorplan + sim::dram — bank sharing and stream times
+# --------------------------------------------------------------------------
+
+BANK_ORDER = [1, 0, 2, 3]
+
+
+def cus_per_bank(compute_units: int) -> list[int]:
+    counts = [0, 0, 0, 0]
+    for cu in range(compute_units):
+        counts[BANK_ORDER[cu % 4]] += 1
+    return counts
+
+
+def per_cu_bandwidth(compute_units: int) -> float:
+    worst = max(cus_per_bank(compute_units))
+    if worst == 0:
+        return DDR_BANK_BW
+    return DDR_BANK_BW / worst
+
+
+def stream_time(bytes_, compute_units: int, efficiency: float) -> float:
+    return bytes_ / (per_cu_bandwidth(compute_units) * efficiency)
+
+
+# --------------------------------------------------------------------------
+# sim::gemm_sim — the Fig. 5 / Tab. III dataflow model
+# --------------------------------------------------------------------------
+
+
+def simulate(d: DesignPoint, n: int, tile_n: int, tile_m: int) -> dict:
+    f = achievable_mhz(d) * 1e6
+    p = d.compute_units
+    bytes_per_elem = float(d.bits // 8)
+
+    rows_cu = div_ceil(n, p)
+    tiles_n = div_ceil(rows_cu, tile_n)
+    tiles_m = div_ceil(n, tile_m)
+    tiles = float(tiles_n * tiles_m)
+
+    cu_frac = cu_clbs(d) / (CLB_TOTAL / SLRS)
+    ii = 1.0 + max(cu_frac - 0.5, 0.0)
+    cycles_per_tile = float(n * tile_n * tile_m) * ii + PIPELINE_DEPTH
+    compute_s = tiles * cycles_per_tile / f
+
+    tile_read_a = float(tile_n * n) * bytes_per_elem
+    tile_read_b = float(tile_m * n) * bytes_per_elem
+    tile_write_c = float(tile_n * tile_m) * bytes_per_elem
+    mem_s = tiles * (
+        stream_time(tile_read_a, p, STRIDED_EFF)
+        + stream_time(tile_read_b, p, CONTIGUOUS_EFF)
+        + stream_time(tile_write_c, p, CONTIGUOUS_EFF)
+    )
+
+    elems = float(n * n)
+    convert_s = 3.0 * elems * CONVERT_S_PER_ELEM
+    transfer_bytes = (2.0 + min(4.0, float(p))) * elems * bytes_per_elem
+    fixed_s = convert_s + transfer_bytes / PCIE_BW + LAUNCH_S * p
+
+    kernel_s = max(compute_s, mem_s)
+    total_s = kernel_s + fixed_s
+    macs = float(n) ** 3
+    mmacs = macs / total_s
+    return {
+        "n": n,
+        "mmacs": mmacs,
+        "efficiency": mmacs / (f * p),
+        "compute_s": compute_s,
+        "mem_s": mem_s,
+        "fixed_s": fixed_s,
+    }
+
+
+def peak(d: DesignPoint, tile: int) -> dict:
+    best = simulate(d, 256, tile, tile)
+    n = 512
+    while n <= 16384:
+        pt = simulate(d, n, tile, tile)
+        if pt["mmacs"] > best["mmacs"]:
+            best = pt
+        n *= 2
+    return best
+
+
+# --------------------------------------------------------------------------
+# runtime::sim_backend::tile_cost — the formula the goldens pin
+# --------------------------------------------------------------------------
+
+
+def tile_cost(bits: int, t_n: int, t_m: int, k_tile: int,
+              pipeline_depth: float = PIPELINE_DEPTH) -> dict:
+    """Mirror of ``sim_backend::tile_cost`` on ``ArtifactMeta::design_point``
+    (1 CU, 72/64 bases, gemm).  ``pipeline_depth`` is a parameter only so
+    the falsifiability test can perturb it the way the Rust calibration
+    suite does."""
+    d = DesignPoint(bits, 1, 72, 64, True)
+    f_hz = achievable_mhz(d) * 1e6
+    macs = t_n * t_m * k_tile
+
+    cu_frac = cu_clbs(d) / (CLB_TOTAL / SLRS)
+    ii = 1.0 + max(cu_frac - 0.5, 0.0)
+    cycles_f = float(macs) * ii + pipeline_depth
+
+    bytes_per_elem = float(bits // 8)
+    read_a = float(t_n * k_tile) * bytes_per_elem
+    read_b = float(k_tile * t_m) * bytes_per_elem
+    write_c = float(t_n * t_m) * bytes_per_elem
+    mem_s = (
+        stream_time(read_a, 1, STRIDED_EFF)
+        + stream_time(read_b, 1, CONTIGUOUS_EFF)
+        + stream_time(write_c, 1, CONTIGUOUS_EFF)
+    )
+
+    dsps = float(multiplier_dsps(d.prec, d.mult_base_bits))
+    clbs = float(cu_clbs(d))
+    energy_pj = cycles_f * (dsps * DSP_PJ_PER_CYCLE + clbs * CLB_PJ_PER_CYCLE)
+
+    return {
+        "cycles": math.ceil(cycles_f),
+        "macs": macs,
+        "dram_bytes": int(read_a + read_b + write_c),
+        "compute_ps": rust_round(cycles_f / f_hz * 1e12),
+        "mem_ps": rust_round(mem_s * 1e12),
+        "energy_pj": rust_round(energy_pj),
+    }
+
+
+# --------------------------------------------------------------------------
+# xorshift64* — exact port of rust/src/testkit/mod.rs (same as the other
+# mirrors), used to derive the launch schedules deterministically
+# --------------------------------------------------------------------------
+
+MASK64 = (1 << 64) - 1
+
+
+class Rng:
+    def __init__(self, seed: int):
+        # avoid the all-zero fixed point (testkit::Rng::from_seed)
+        self.state = max((seed * 2685821657736338717) & MASK64, 1)
+
+    def next_u64(self) -> int:
+        x = self.state
+        x ^= (x >> 12)
+        x ^= (x << 25) & MASK64
+        x ^= (x >> 27)
+        self.state = x
+        return (x * 0x2545F4914F6CDD1D) & MASK64
+
+    def below(self, n: int) -> int:
+        # multiply-shift, exactly as testkit::Rng::below
+        return (self.next_u64() * n) >> 64
+
+
+# --------------------------------------------------------------------------
+# 1. calibration pins — the same paper values the Rust suite asserts
+# --------------------------------------------------------------------------
+
+
+def test_dsp_counts_match_paper_scale():
+    assert naive_dsps(56) == 16
+    assert karatsuba_leaves(448, 72) == (27, 56)
+    assert multiplier_dsps(448, 72) == 432  # Tab. I: "4%" of 12288
+    assert multiplier_dsps(960, 72) == 81 * naive_dsps(60)
+
+
+def test_tab1_tab3_frequency_calibration():
+    assert abs(achievable_mhz(mult_512(1)) - 456.0) < 20.0
+    assert abs(achievable_mhz(gemm_512(1)) - 327.0) < 15.0
+    for cus in (2, 4, 8):
+        assert abs(achievable_mhz(gemm_512(cus)) - 285.0) < 25.0
+    assert abs(achievable_mhz(gemm_1024(1)) - 212.0) < 20.0
+
+
+def test_tab3_gemm_peaks():
+    for cus, paper in [(1, 322.0), (2, 540.0), (4, 1049.0), (8, 2002.0)]:
+        got = peak(gemm_512(cus), 32)["mmacs"] / 1e6
+        assert abs(got - paper) / paper < 0.18, f"CUs={cus}: {got:.0f} vs {paper}"
+    got = peak(gemm_1024(1), 32)["mmacs"] / 1e6
+    assert abs(got - 158.0) / 158.0 < 0.35
+
+
+def test_compute_bound_at_paper_tile():
+    pt = simulate(gemm_512(8), 8192, 32, 32)
+    assert pt["compute_s"] > pt["mem_s"]
+    pt4 = simulate(gemm_512(8), 8192, 4, 4)
+    assert pt4["mem_s"] > pt4["compute_s"]
+
+
+# --------------------------------------------------------------------------
+# 2. tile_cost semantics — mirrors rust sim_backend unit tests
+# --------------------------------------------------------------------------
+
+
+def test_tile_cost_512_paper_tile():
+    c = tile_cost(512, 32, 32, 32)
+    assert c["macs"] == 32 * 32 * 32
+    # below the half-SLR II knee: cycles = macs + pipeline fill
+    assert c["cycles"] == 32 * 32 * 32 + int(PIPELINE_DEPTH)
+    assert c["dram_bytes"] == 3 * 32 * 32 * 64
+    assert c["compute_ps"] > c["mem_ps"] > 0
+    assert c["energy_pj"] > 0
+
+
+def test_tile_cost_1024_pays_ii_and_traffic():
+    c512 = tile_cost(512, 32, 32, 32)
+    c1024 = tile_cost(1024, 32, 32, 32)
+    assert c1024["cycles"] > c512["cycles"], "1024-bit CU crosses the II knee"
+    assert c1024["dram_bytes"] == 2 * c512["dram_bytes"]
+    assert c1024["compute_ps"] > c512["compute_ps"]
+    assert c1024["energy_pj"] > c512["energy_pj"]
+
+
+def test_pipeline_depth_perturbation_is_visible():
+    """Falsifiability: the ±20% PIPELINE_DEPTH perturbation the Rust
+    calibration gate injects must move every derived time, or the gate
+    could never trip."""
+    base = tile_cost(512, 32, 32, 32)
+    for scale in (0.8, 1.2):
+        bent = tile_cost(512, 32, 32, 32, pipeline_depth=PIPELINE_DEPTH * scale)
+        assert bent["cycles"] != base["cycles"]
+        assert bent["compute_ps"] != base["compute_ps"]
+        assert bent["energy_pj"] != base["energy_pj"]
+        rel = abs(bent["compute_ps"] - base["compute_ps"]) / base["compute_ps"]
+        assert rel > 1e-3, "a 20% depth bend must exceed the 1e-6 gate tolerance"
+
+
+# --------------------------------------------------------------------------
+# 3. ledger accounting over seeded launch schedules
+# --------------------------------------------------------------------------
+
+
+def ledger_for_schedule(rng: Rng, launches: int) -> dict:
+    """Replay the coordinator's retirement accounting: for each launch an
+    (n, m, k) problem on a random tile geometry, every output tile settles
+    once with k_steps x tile_cost, the device ledger sums settled tiles
+    and charges LAUNCH_S once per retired launch."""
+    totals = {"cycles": 0, "macs": 0, "dram_bytes": 0, "compute_ps": 0,
+              "mem_ps": 0, "energy_pj": 0, "tiles": 0, "launches": 0,
+              "fixed_ps": 0}
+    for _ in range(launches):
+        bits = 512 if rng.below(2) == 0 else 1024
+        t = (2, 4, 8, 16)[rng.below(4)]
+        n = (t * (1 + rng.below(4)))
+        m = (t * (1 + rng.below(4)))
+        k = (t * (1 + rng.below(4)))
+        per_call = tile_cost(bits, t, t, t)
+        k_steps = div_ceil(k, t)
+        tiles = div_ceil(n, t) * div_ceil(m, t)
+        for _tile in range(tiles):
+            # a worker drains k_steps accrued calls into one reply
+            for key in ("cycles", "macs", "dram_bytes", "compute_ps",
+                        "mem_ps", "energy_pj"):
+                totals[key] += k_steps * per_call[key]
+            totals["tiles"] += 1
+        totals["launches"] += 1
+        totals["fixed_ps"] += int(LAUNCH_S * 1e12)
+    return totals
+
+
+def test_schedule_ledger_is_conservation_exact():
+    rng = Rng(0x51ABAC)
+    totals = ledger_for_schedule(rng, launches=17)
+    assert totals["tiles"] > 0 and totals["launches"] == 17
+    assert totals["fixed_ps"] == 17 * int(LAUNCH_S * 1e12)
+    # MAC conservation: every modeled lane belongs to exactly one settled
+    # tile, so totals factor exactly into per-call costs — replaying the
+    # same schedule reproduces the ledger bit-for-bit (no double-counting
+    # term can hide in a deterministic replay)
+    again = ledger_for_schedule(Rng(0x51ABAC), launches=17)
+    assert totals == again
+    # and retries add nothing: a failed attempt's cost is discarded before
+    # the reply, so a schedule with retries has the *same* ledger — model
+    # that by charging only settled tiles (what the replay above does) and
+    # checking macs factors into whole k_steps x tile lanes
+    assert totals["macs"] % 8 == 0  # every tile contributes t^3 >= 8 lanes
+
+
+def test_ledger_efficiency_bounds():
+    rng = Rng(0xFEED5)
+    totals = ledger_for_schedule(rng, launches=9)
+    eff = totals["macs"] / totals["cycles"]
+    assert 0.0 < eff < 1.0, "pipeline fill + II keep efficiency below 1"
+
+
+# --------------------------------------------------------------------------
+# 4. cross-check rust/model_golden.json — the file `repro modelgold
+#    --check` diffs against the Rust model
+# --------------------------------------------------------------------------
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "..", "..", "rust",
+                      "model_golden.json")
+
+
+def mirror_golden_values() -> dict:
+    out = {}
+    for bits in (512, 1024):
+        c = tile_cost(bits, 32, 32, 32)
+        for key in ("cycles", "macs", "dram_bytes", "compute_ps", "mem_ps",
+                    "energy_pj"):
+            out[f"tile{bits}_{key}"] = float(c[key])
+    for bits, cus in [(512, 1), (512, 2), (512, 4), (512, 8), (1024, 1)]:
+        d = gemm_512(cus) if bits == 512 else gemm_1024(cus)
+        out[f"gemm{bits}_cu{cus}_freq_mhz"] = achievable_mhz(d)
+        out[f"gemm{bits}_cu{cus}_peak_mmacs"] = peak(d, 32)["mmacs"] / 1e6
+        pt = simulate(d, 4096, 32, 32)
+        out[f"gemm{bits}_cu{cus}_n4096_mmacs"] = pt["mmacs"] / 1e6
+        out[f"gemm{bits}_cu{cus}_n4096_efficiency"] = pt["efficiency"]
+    return out
+
+
+def test_model_golden_file_matches_mirror():
+    with open(GOLDEN) as f:
+        pinned = json.load(f)
+    mirror = mirror_golden_values()
+    assert set(pinned) == set(mirror), (
+        "golden keys diverged; regenerate with `repro modelgold --write`"
+    )
+    for key, want in pinned.items():
+        got = mirror[key]
+        scale = max(abs(want), abs(got), 1e-30)
+        assert abs(got - want) / scale < 1e-6, (
+            f"{key}: golden {want!r} vs mirror {got!r}"
+        )
+
+
+def test_golden_spot_values():
+    """A few hand-derived anchors so the golden file and the mirror cannot
+    be wrong together (see sim_backend.rs tile_cost docs for the 512-bit
+    walk-through: 13634 CLBs -> II=1, 33168 cycles, 432 DSPs)."""
+    assert cu_clbs(gemm_512(1)) == 13_634
+    c = tile_cost(512, 32, 32, 32)
+    assert c["cycles"] == 33_168
+    assert c["dram_bytes"] == 196_608
+    per_cycle_pj = 432 * DSP_PJ_PER_CYCLE + 13_634 * CLB_PJ_PER_CYCLE
+    assert c["energy_pj"] == rust_round(33_168.0 * per_cycle_pj)
+
+
+if __name__ == "__main__":
+    # regeneration helper: `python test_sim_backend.py --write-golden`
+    # emits rust/model_golden.json in the exact format `repro modelgold
+    # --write` uses (sorted keys, 9 decimal places)
+    import sys
+
+    if "--write-golden" in sys.argv:
+        vals = mirror_golden_values()
+        lines = [f'  "{k}": {vals[k]:.9f}' for k in sorted(vals)]
+        with open(GOLDEN, "w") as f:
+            f.write("{\n" + ",\n".join(lines) + "\n}\n")
+        print(f"wrote {len(vals)} goldens to {GOLDEN}")
+    else:
+        sys.exit(pytest.main([__file__, "-q"]))

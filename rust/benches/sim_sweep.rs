@@ -1,0 +1,160 @@
+//! SimBackend sweep: the device stack run end-to-end on the simulated
+//! backend (`APFP_BACKEND=sim`), with the hardware-model ledger it feeds
+//! checked against the standalone Fig. 5 / Tab. III dataflow model.
+//!
+//! Three layers, each asserted:
+//!
+//! 1. the *analytic* sweep — per-width peak throughput and the N=4096
+//!    design points straight out of `sim::gemm_sim` (what `repro
+//!    modelgold` pins in `model_golden.json`);
+//! 2. the *executed* ledger — a real multi-launch GEMM on a sim-backend
+//!    `Device`, whose `ModelMetrics` totals must factor exactly into
+//!    `tiles x k_steps x tile_cost` (the conservation invariant) and whose
+//!    output must be bit-identical to the native backend;
+//! 3. the *overhead* of modeling — sim vs native wall time on the same
+//!    workload, which must stay within a small constant factor since the
+//!    sim backend runs the identical arena kernels plus O(1) accounting.
+
+use apfp::bench_util::{bench, fmt_duration, Table};
+use apfp::config::ApfpConfig;
+use apfp::coordinator::{Device, Matrix};
+use apfp::hwmodel::DesignPoint;
+use apfp::runtime::sim_backend::tile_cost;
+use apfp::runtime::BackendKind;
+use apfp::sim::gemm_sim;
+
+fn device(backend: BackendKind, cus: usize, bits: u32) -> Device {
+    let cfg = ApfpConfig {
+        backend,
+        bits,
+        compute_units: cus,
+        tile_n: 8,
+        tile_m: 8,
+        tile_k: 8,
+        ..Default::default()
+    };
+    let dir = apfp::runtime::default_artifact_dir();
+    Device::new(cfg, &dir).expect("builtin-manifest device")
+}
+
+fn main() {
+    // -- 1. analytic sweep: the design points the golden file pins --------
+    println!("== modeled design points (sim::gemm_sim, U250) ==\n");
+    let designs: Vec<(&str, DesignPoint)> = vec![
+        ("512b x1", DesignPoint::gemm_512(1)),
+        ("512b x2", DesignPoint::gemm_512(2)),
+        ("512b x4", DesignPoint::gemm_512(4)),
+        ("512b x8", DesignPoint::gemm_512(8)),
+        ("1024b x1", DesignPoint::gemm_1024(1)),
+    ];
+    let mut t = Table::new(&["design", "freq [MHz]", "peak [MMAC/s]", "n4096 [MMAC/s]", "n4096 eff"]);
+    for (name, d) in &designs {
+        let s = d.synthesize();
+        assert!(s.failure.is_none(), "{name}: paper design must synthesize");
+        let pk = gemm_sim::peak(d, 32);
+        let p4 = gemm_sim::simulate(d, 4096, 32, 32);
+        t.row(&[
+            name.to_string(),
+            format!("{:.0}", s.frequency_mhz),
+            format!("{:.0}", pk.mmacs / 1e6),
+            format!("{:.0}", p4.mmacs / 1e6),
+            format!("{:.3}", p4.efficiency),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // Tab. III anchors (same tolerances as the unit tests)
+    for (cus, paper) in [(1usize, 322.0f64), (2, 540.0), (4, 1049.0), (8, 2002.0)] {
+        let got = gemm_sim::peak(&DesignPoint::gemm_512(cus), 32).mmacs / 1e6;
+        assert!((got - paper).abs() / paper < 0.18, "Tab III {cus} CU: {got:.0} vs {paper}");
+    }
+
+    // -- 2. executed ledger on the sim backend ----------------------------
+    println!("\n== executed: sim-backend device, 3 launches of 16x16 GEMM ==\n");
+    let n = 16usize;
+    let launches = 3usize;
+    for bits in [512u32, 1024] {
+        let prec = bits - 64;
+        let a = Matrix::random(n, n, prec, 11, 25);
+        let b = Matrix::random(n, n, prec, 12, 25);
+        let c0 = Matrix::zeros(n, n, prec);
+
+        let run = |dev: &Device| -> Matrix {
+            let mut s = dev.stream().expect("stream");
+            let ha = s.upload(&a);
+            let hb = s.upload(&b);
+            let hc = s.upload(&c0);
+            for _ in 0..launches {
+                s.enqueue_gemm(ha, hb, hc).expect("enqueue");
+            }
+            s.wait().expect("wait");
+            s.download(hc).expect("download")
+        };
+
+        let sim_dev = device(BackendKind::Sim, 2, bits);
+        let native_dev = device(BackendKind::Native, 2, bits);
+        let sim_out = run(&sim_dev);
+        let native_out = run(&native_dev);
+        assert_eq!(sim_out, native_out, "{bits}-bit: sim must be bit-identical to native");
+
+        let m = sim_dev.model_metrics();
+        assert!(m.is_live(), "sim ledger must be live");
+        assert!(!native_dev.model_metrics().is_live(), "native ledger must stay dead");
+
+        // conservation: totals factor exactly into tiles x k_steps x cost
+        let metas = apfp::runtime::manifest::builtin(bits, sim_dev.config().tile_shape())
+            .expect("builtin manifest");
+        let meta = metas
+            .iter()
+            .find(|m| m.kind == apfp::runtime::ArtifactKind::Gemm)
+            .expect("builtin gemm meta");
+        let per_call = tile_cost(meta);
+        let tiles_per_launch = n.div_ceil(8) * n.div_ceil(8);
+        let k_steps = n.div_ceil(8) as u64;
+        let want_tiles = (tiles_per_launch * launches) as u64;
+        assert_eq!(m.tiles, want_tiles, "{bits}-bit: settled tile replies");
+        assert_eq!(m.launches, launches as u64, "one launch record per retired launch");
+        assert_eq!(m.macs, want_tiles * k_steps * per_call.macs, "MAC conservation");
+        assert_eq!(m.cycles, want_tiles * k_steps * per_call.cycles, "cycle conservation");
+        assert_eq!(
+            m.dram_bytes,
+            want_tiles * k_steps * per_call.dram_bytes,
+            "DRAM-traffic conservation"
+        );
+
+        println!(
+            "{bits:>5}b: tiles {:>3}  cycles {:>8}  dram {:>8} B  energy {:>6.1} uJ  \
+             modeled {:>8}  eff {:.3}  power {:.1} W",
+            m.tiles,
+            m.cycles,
+            m.dram_bytes,
+            m.energy_pj as f64 * 1e-6,
+            fmt_duration(m.total_s()),
+            m.efficiency(),
+            m.power_w(),
+        );
+    }
+
+    // -- 3. modeling overhead: sim vs native wall time --------------------
+    println!("\n== modeling overhead: same workload, sim vs native ==\n");
+    let prec = 448;
+    let a = Matrix::random(24, 24, prec, 21, 25);
+    let b = Matrix::random(24, 24, prec, 22, 25);
+    let c0 = Matrix::zeros(24, 24, prec);
+    let mut t = Table::new(&["backend", "time/gemm", "ratio"]);
+    let mut times = Vec::new();
+    for backend in [BackendKind::Native, BackendKind::Sim] {
+        let dev = device(backend, 2, 512);
+        let r = bench(&format!("{backend} gemm"), 2, 8, || {
+            let (out, _) = dev.gemm(&a, &b, &c0).expect("gemm");
+            std::hint::black_box(&out);
+        });
+        times.push(r.median_s());
+        let ratio = times[0] / r.median_s().max(1e-12);
+        t.row(&[backend.to_string(), fmt_duration(r.median_s()), format!("{:.2}x", 1.0 / ratio)]);
+    }
+    println!("{}", t.render());
+    let overhead = times[1] / times[0];
+    println!("sim/native wall-time ratio: {overhead:.2}x (accounting is O(1) per tile)");
+    assert!(overhead < 3.0, "modeling must not dominate the kernels: {overhead:.2}x");
+}

@@ -266,8 +266,9 @@ pub struct ApfpConfig {
     /// Worker threads backing the virtual device (host-side knob).
     pub worker_threads: usize,
     /// Execution backend for the device stack (`APFP_BACKEND`): the native
-    /// in-process executor (default; works on a clean checkout) or the
-    /// XLA/PJRT artifact path.
+    /// in-process executor (default; works on a clean checkout), the
+    /// hardware-model-accounting simulator (`sim` — bit-identical results
+    /// plus modeled cycles/traffic/energy), or the XLA/PJRT artifact path.
     pub backend: BackendKind,
     /// How long a stream drain waits between reply-liveness probes of the
     /// owing worker threads (`APFP_REPLY_TIMEOUT_MS`): a dead CU is
@@ -507,6 +508,10 @@ mod tests {
         assert_eq!(c.compute_units, 8);
         c.set("APFP_BACKEND", "xla").unwrap();
         assert_eq!(c.backend, BackendKind::Xla);
+        c.set("backend", "sim").unwrap();
+        assert_eq!(c.backend, BackendKind::Sim);
+        c.set("APFP_BACKEND", "simulator").unwrap();
+        assert_eq!(c.backend, BackendKind::Sim);
         c.set("backend", "native").unwrap();
         assert_eq!(c.backend, BackendKind::Native);
         assert!(matches!(
@@ -582,6 +587,8 @@ mod tests {
         .unwrap();
         assert_eq!((c.tile_n, c.tile_m, c.tile_k), (16, 8, 32));
         assert_eq!(c.backend, BackendKind::Xla);
+        let c = ApfpConfig::try_from_env_with(env_of(&[("APFP_BACKEND", "sim")])).unwrap();
+        assert_eq!(c.backend, BackendKind::Sim);
     }
 
     #[test]

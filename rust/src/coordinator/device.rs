@@ -18,6 +18,7 @@ use anyhow::{anyhow, Context, Result};
 
 use super::matrix::Matrix;
 use super::metrics::{Metrics, MetricsSnapshot};
+use super::model_metrics::{ModelMetrics, ModelMetricsSnapshot};
 use super::stream::DeviceStream;
 use super::worker::{CuHealth, Job, StreamKind, Supervisor};
 use crate::config::ApfpConfig;
@@ -34,6 +35,9 @@ pub struct Device {
     pub(super) workers: Vec<Supervisor>,
     pub(super) placements: Vec<Placement>,
     pub(super) metrics: Arc<Metrics>,
+    /// The hardware-model ledger, fed by the stream's retirement drain
+    /// when the backend is `sim`; all-zero on native/xla.
+    pub(super) model_metrics: Arc<ModelMetrics>,
     pub(super) artifacts: Vec<manifest::ArtifactMeta>,
 }
 
@@ -78,6 +82,7 @@ impl Device {
             config,
             workers,
             metrics,
+            model_metrics: ModelMetrics::new(),
             artifacts,
         })
     }
@@ -93,6 +98,14 @@ impl Device {
 
     pub fn metrics(&self) -> MetricsSnapshot {
         self.metrics.snapshot()
+    }
+
+    /// The hardware-model ledger: modeled cycles, DRAM traffic, energy and
+    /// per-phase seconds accumulated by retired launches on the simulated
+    /// backend (`APFP_BACKEND=sim`).  All-zero (`!is_live()`) on native
+    /// and xla.
+    pub fn model_metrics(&self) -> ModelMetricsSnapshot {
+        self.model_metrics.snapshot()
     }
 
     /// The per-CU health ledger: respawn counts, quarantine flags, and

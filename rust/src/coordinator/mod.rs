@@ -29,22 +29,29 @@
 //!   clipped in every dimension, and every tile accumulates over K in
 //!   sequential k_tile steps;
 //! * [`metrics`] — counters for tiles, artifact calls, stage wall times
-//!   and the stream's panel-packing reuse.
+//!   and the stream's panel-packing reuse;
+//! * [`model_metrics`] — the hardware-model ledger: modeled cycles, DRAM
+//!   traffic, energy and per-phase seconds accumulated when the device
+//!   runs on the simulated backend (`APFP_BACKEND=sim`), surfaced by
+//!   [`device::Device::model_metrics`].
 //!
 //! Performance of the *physical* accelerator is modeled by [`crate::sim`];
 //! this module provides the *functional* datapath (every result flows
 //! through the runtime's pluggable backend — native in-process execution
-//! by default, AOT artifacts under `APFP_BACKEND=xla`) plus the
+//! by default, the hardware-model-accounting simulator under
+//! `APFP_BACKEND=sim`, AOT artifacts under `APFP_BACKEND=xla`) plus the
 //! coordination logic itself.
 
 pub mod device;
 pub mod matrix;
 pub mod metrics;
+pub mod model_metrics;
 pub mod scheduler;
 pub mod stream;
 pub mod worker;
 
 pub use device::{Device, GemmStats};
 pub use matrix::Matrix;
+pub use model_metrics::{ModelMetrics, ModelMetricsSnapshot};
 pub use stream::{BufId, DeviceStream, StreamError};
 pub use worker::{CuHealth, RespawnOutcome};

@@ -1,0 +1,221 @@
+//! The hardware-model ledger: what the simulated backend says the device
+//! *would have* cost.
+//!
+//! When the device runs on [`crate::runtime::SimBackend`]
+//! (`APFP_BACKEND=sim`), every settled tile reply carries the modeled
+//! [`TileModelCost`] of the K-steps it executed; the stream accumulates
+//! those costs here at **retirement** — not on dispatch, not on receipt —
+//! which is what makes the ledger conservation-exact under the
+//! self-healing ladder:
+//!
+//! * a retried tile's failed attempts never accrue ([`crate::runtime::
+//!   SimBackend`] accounts only successful kernel calls, and the retry arm
+//!   redispatches with a `..` functional update that drops any stale
+//!   payload);
+//! * a failed launch drains its replies to the buffer pool and writes
+//!   nothing — modeled cost included;
+//! * the per-launch fixed cost ([`crate::sim::gemm_sim::LAUNCH_S`]) is
+//!   added exactly once per retired launch that carried model data.
+//!
+//! On the native and xla backends every counter stays 0.  Like
+//! [`super::metrics::Metrics`], counters are relaxed atomics so the
+//! accumulation rides the zero-alloc retire path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::runtime::TileModelCost;
+use crate::sim::gemm_sim;
+
+#[derive(Debug, Default)]
+pub struct ModelMetrics {
+    /// Modeled datapath cycles (II-adjusted MAC issues + pipeline drains).
+    pub cycles: AtomicU64,
+    /// Modeled MAC lanes (full padded tiles; the functional `macs` counter
+    /// in [`super::metrics::Metrics`] counts useful lanes only).
+    pub macs: AtomicU64,
+    /// Modeled DRAM-bank traffic, bytes.
+    pub dram_bytes: AtomicU64,
+    /// Modeled compute time, picoseconds (summed over CUs).
+    pub compute_ps: AtomicU64,
+    /// Modeled DRAM streaming time, picoseconds (summed over CUs).
+    pub mem_ps: AtomicU64,
+    /// Modeled per-launch fixed cost (kernel launch / orchestration),
+    /// picoseconds.
+    pub fixed_ps: AtomicU64,
+    /// Modeled dynamic energy, picojoules.
+    pub energy_pj: AtomicU64,
+    /// Tile replies whose modeled cost was accumulated.
+    pub tiles: AtomicU64,
+    /// Launches that retired with model data.
+    pub launches: AtomicU64,
+}
+
+impl ModelMetrics {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// Accumulate one settled tile reply's modeled cost.  Called from the
+    /// stream's retirement drain, which is `no_alloc`: relaxed `fetch_add`
+    /// only.
+    pub fn add_tile(&self, c: &TileModelCost) {
+        self.cycles.fetch_add(c.cycles, Ordering::Relaxed);
+        self.macs.fetch_add(c.macs, Ordering::Relaxed);
+        self.dram_bytes.fetch_add(c.dram_bytes, Ordering::Relaxed);
+        self.compute_ps.fetch_add(c.compute_ps, Ordering::Relaxed);
+        self.mem_ps.fetch_add(c.mem_ps, Ordering::Relaxed);
+        self.energy_pj.fetch_add(c.energy_pj, Ordering::Relaxed);
+        self.tiles.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one retired launch that carried model data: counts it and
+    /// charges the modeled kernel-launch fixed cost.
+    pub fn add_launch(&self) {
+        self.launches.fetch_add(1, Ordering::Relaxed);
+        self.fixed_ps.fetch_add((gemm_sim::LAUNCH_S * 1e12) as u64, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> ModelMetricsSnapshot {
+        ModelMetricsSnapshot {
+            cycles: self.cycles.load(Ordering::Relaxed),
+            macs: self.macs.load(Ordering::Relaxed),
+            dram_bytes: self.dram_bytes.load(Ordering::Relaxed),
+            compute_ps: self.compute_ps.load(Ordering::Relaxed),
+            mem_ps: self.mem_ps.load(Ordering::Relaxed),
+            fixed_ps: self.fixed_ps.load(Ordering::Relaxed),
+            energy_pj: self.energy_pj.load(Ordering::Relaxed),
+            tiles: self.tiles.load(Ordering::Relaxed),
+            launches: self.launches.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time copy of [`ModelMetrics`] with the derived quantities
+/// the paper reports (Fig. 5 / Tab. III): modeled seconds per phase,
+/// roofline efficiency, modeled MMAC/s.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelMetricsSnapshot {
+    pub cycles: u64,
+    pub macs: u64,
+    pub dram_bytes: u64,
+    pub compute_ps: u64,
+    pub mem_ps: u64,
+    pub fixed_ps: u64,
+    pub energy_pj: u64,
+    pub tiles: u64,
+    pub launches: u64,
+}
+
+impl ModelMetricsSnapshot {
+    /// True when any modeled work was recorded (always false off-sim).
+    pub fn is_live(&self) -> bool {
+        self.tiles > 0
+    }
+
+    pub fn compute_s(&self) -> f64 {
+        self.compute_ps as f64 * 1e-12
+    }
+
+    pub fn mem_s(&self) -> f64 {
+        self.mem_ps as f64 * 1e-12
+    }
+
+    pub fn fixed_s(&self) -> f64 {
+        self.fixed_ps as f64 * 1e-12
+    }
+
+    /// Modeled wall time: compute and memory overlap (double-buffered
+    /// streams, as in `sim::gemm_sim`), fixed costs do not.
+    pub fn total_s(&self) -> f64 {
+        self.compute_s().max(self.mem_s()) + self.fixed_s()
+    }
+
+    /// Roofline efficiency: MAC issues per modeled datapath cycle.  1.0
+    /// means II=1 with no pipeline-fill overhead; the monolithic-CU
+    /// penalty and per-tile fills push it below 1.
+    pub fn efficiency(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.macs as f64 / self.cycles as f64
+        }
+    }
+
+    /// Modeled throughput over the modeled wall time, MMAC/s.
+    pub fn mmacs(&self) -> f64 {
+        let t = self.total_s();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.macs as f64 / t / 1e6
+        }
+    }
+
+    /// Modeled average dynamic power over the compute interval, watts.
+    pub fn power_w(&self) -> f64 {
+        let t = self.compute_s();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.energy_pj as f64 * 1e-12 / t
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cost(scale: u64) -> TileModelCost {
+        TileModelCost {
+            cycles: 100 * scale,
+            macs: 80 * scale,
+            dram_bytes: 640 * scale,
+            compute_ps: 1_000 * scale,
+            mem_ps: 500 * scale,
+            energy_pj: 2_000 * scale,
+        }
+    }
+
+    #[test]
+    fn tiles_and_launches_accumulate() {
+        let m = ModelMetrics::new();
+        assert!(!m.snapshot().is_live());
+        m.add_tile(&cost(1));
+        m.add_tile(&cost(2));
+        m.add_launch();
+        let s = m.snapshot();
+        assert!(s.is_live());
+        assert_eq!(s.tiles, 2);
+        assert_eq!(s.launches, 1);
+        assert_eq!(s.cycles, 300);
+        assert_eq!(s.macs, 240);
+        assert_eq!(s.dram_bytes, 1920);
+        assert_eq!(s.compute_ps, 3_000);
+        assert_eq!(s.mem_ps, 1_500);
+        assert_eq!(s.energy_pj, 6_000);
+        assert_eq!(s.fixed_ps, (gemm_sim::LAUNCH_S * 1e12) as u64);
+    }
+
+    #[test]
+    fn derived_quantities() {
+        let m = ModelMetrics::new();
+        m.add_tile(&cost(1));
+        m.add_launch();
+        let s = m.snapshot();
+        assert!((s.efficiency() - 0.8).abs() < 1e-12);
+        assert!((s.compute_s() - 1e-9).abs() < 1e-21);
+        assert!((s.mem_s() - 5e-10).abs() < 1e-21);
+        // compute > mem, so total = compute + fixed
+        let want_total = 1e-9 + gemm_sim::LAUNCH_S;
+        assert!((s.total_s() - want_total).abs() < 1e-15);
+        assert!(s.mmacs() > 0.0);
+        assert!((s.power_w() - 2.0).abs() < 1e-9, "2000 pJ over 1 ns = 2 W");
+        // the empty snapshot divides nothing by zero
+        let empty = ModelMetrics::new().snapshot();
+        assert_eq!(empty.efficiency(), 0.0);
+        assert_eq!(empty.mmacs(), 0.0);
+        assert_eq!(empty.power_w(), 0.0);
+    }
+}

@@ -932,10 +932,25 @@ impl<'d> DeviceStream<'d> {
         // from the old contents read as stale from here on.
         buf.version += 1;
         let t0 = Instant::now();
+        // The model-ledger accumulation point: only *settled successful*
+        // replies reach this drain, so a retried tile's failed attempts and
+        // a failed launch's partial results can never be counted (the
+        // `docs/INVARIANTS.md` model-counter conservation row).  Relaxed
+        // atomic adds only — the retire path stays zero-alloc.
+        let mut modeled = false;
         for res in l.results.drain(..) {
             let t = res.tile;
             buf.panel.write_tile(t.r0, t.c0, t.rows, t.cols, l.part.tile_m, &res.c_buf);
+            if let Some(cost) = &res.model {
+                self.dev.model_metrics.add_tile(cost);
+                modeled = true;
+            }
             self.c_pool.push(res.c_buf);
+        }
+        if modeled {
+            // one fixed launch cost per retired launch that carried model
+            // data, exactly once — dispatch retries never re-charge it
+            self.dev.model_metrics.add_launch();
         }
         self.dev.metrics.add_marshal_ns(t0.elapsed().as_nanos() as u64);
         self.reply_pool.push(l.reply);
@@ -1069,9 +1084,9 @@ mod tests {
     use crate::config::{ApfpConfig, FaultSpec};
     use crate::runtime::BackendKind;
 
-    fn dev_with(faults: FaultSpec) -> Device {
+    fn dev_on(backend: BackendKind, faults: FaultSpec) -> Device {
         let cfg = ApfpConfig {
-            backend: BackendKind::Native,
+            backend,
             compute_units: 1,
             tile_n: 4,
             tile_m: 4,
@@ -1080,7 +1095,11 @@ mod tests {
             ..Default::default()
         };
         let dir = std::env::temp_dir().join("apfp_stream_unit_no_artifacts/none");
-        Device::new(cfg, &dir).expect("native device on a clean checkout")
+        Device::new(cfg, &dir).expect("builtin-manifest device on a clean checkout")
+    }
+
+    fn dev_with(faults: FaultSpec) -> Device {
+        dev_on(BackendKind::Native, faults)
     }
 
     /// One exemplar of every [`StreamError`] variant, for taxonomy tests.
@@ -1211,6 +1230,33 @@ mod tests {
         }
         // the failed launches wrote nothing: C still decodes to its upload
         assert_eq!(s.download(hc).unwrap(), c);
+    }
+
+    #[test]
+    fn sim_backend_feeds_the_model_ledger_at_retirement() {
+        // 8x8x8 on 4x4x4 tiles, 1 CU: 4 output tiles, 2 K-steps each.
+        let dev = dev_on(BackendKind::Sim, FaultSpec::default());
+        let a = Matrix::random(8, 8, 448, 8, 20);
+        let b = Matrix::random(8, 8, 448, 9, 20);
+        let mut s = dev.stream().unwrap();
+        let (ha, hb) = (s.upload(&a), s.upload(&b));
+        let hc = s.alloc(8, 8);
+        s.enqueue_gemm(ha, hb, hc).unwrap();
+        // accumulation happens at retirement, not dispatch or receipt
+        s.wait().unwrap();
+        let m = dev.model_metrics();
+        assert!(m.is_live());
+        assert_eq!((m.tiles, m.launches), (4, 1));
+        // every padded MAC lane modeled exactly once:
+        // 4 tiles x 2 K-steps x (4*4*4) lanes per kernel call
+        assert_eq!(m.macs, 512);
+        assert!(m.cycles > 0 && m.dram_bytes > 0 && m.energy_pj > 0);
+        assert!(m.total_s() > 0.0 && m.efficiency() > 0.0 && m.efficiency() <= 1.0);
+        // the functional result is bit-identical to the native backend
+        let native = dev_with(FaultSpec::default());
+        let (want, _) = native.gemm(&a, &b, &native.alloc(8, 8)).unwrap();
+        assert_eq!(s.download(hc).unwrap(), want);
+        assert!(!native.model_metrics().is_live(), "native accrues nothing");
     }
 
     #[test]

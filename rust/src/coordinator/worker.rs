@@ -46,7 +46,7 @@ use super::scheduler::{Partition, Tile};
 use super::stream::DeviceBuf;
 use crate::config::FaultSpec;
 use crate::pack::PlaneBatch;
-use crate::runtime::{BackendKind, Runtime, TileShape};
+use crate::runtime::{BackendKind, Runtime, TileModelCost, TileShape};
 
 /// Depth of each worker's job queue: small, so a slow CU exerts
 /// backpressure on the leader instead of buffering unbounded work.
@@ -107,6 +107,13 @@ pub struct TileResult {
     /// success it holds the accumulated C tile; when `err` is set its
     /// contents are unspecified (the leader recycles it without reading).
     pub c_buf: PlaneBatch,
+    /// Modeled hardware cost of the K-steps this reply settles — `Some`
+    /// only on the simulated backend, and only on success (a failed
+    /// attempt's partial cost is discarded at the worker, so a retried
+    /// tile is modeled exactly once by the attempt that lands).  The
+    /// stream accumulates it into the device's `ModelMetrics` when the
+    /// launch retires.
+    pub model: Option<TileModelCost>,
     /// `None` on success; the tile's failure otherwise.
     pub err: Option<anyhow::Error>,
 }
@@ -415,6 +422,7 @@ fn worker_main(
                             tile,
                             attempt,
                             c_buf,
+                            model: None,
                             err: Some(anyhow::anyhow!("{reason}")),
                         });
                     }
@@ -475,7 +483,16 @@ fn worker_main(
                         panic_message(&panic)
                     )),
                 };
-                let _ = reply.send(TileResult { launch, tile, attempt, c_buf, err });
+                // Drain the simulator's model ledger on every arm so a
+                // failed or panicked tile's partial cost cannot leak into
+                // the next job's reply; attach it only when the tile
+                // succeeded (a retried tile is re-modeled from scratch by
+                // the attempt that lands — no double counting).
+                let model = match rt.take_model_cost() {
+                    Some(cost) if err.is_none() => Some(cost),
+                    _ => None,
+                };
+                let _ = reply.send(TileResult { launch, tile, attempt, c_buf, model, err });
             }
             Job::Stream { artifact, kind, operands, offset, reply } => {
                 let t0 = Instant::now();

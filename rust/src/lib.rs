@@ -16,7 +16,10 @@
 //!   §IV-B BLAS-style interfaces built on them;
 //! * [`runtime`] — artifact manifests and the pluggable execution
 //!   [`runtime::Backend`] (in-process [`runtime::NativeBackend`] by
-//!   default, the XLA/PJRT artifact path behind `APFP_BACKEND=xla`);
+//!   default, the XLA/PJRT artifact path behind `APFP_BACKEND=xla`, and
+//!   the bit-identical hardware-model backend [`runtime::SimBackend`]
+//!   behind `APFP_BACKEND=sim`, which feeds the
+//!   [`coordinator::ModelMetrics`] cycle/traffic/energy ledger);
 //! * [`coordinator`] — the virtual device: compute-unit workers, the §III
 //!   band/tile scheduler, the CUDA-like [`coordinator::Device`], and the
 //!   batched [`coordinator::DeviceStream`] launch API with hazard-tracked
@@ -35,7 +38,7 @@
 //!
 //! | variable | effect | default |
 //! |----------|--------|---------|
-//! | `APFP_BACKEND` | Execution backend: `native` or `xla`/`pjrt` ([`runtime::BackendKind::from_env`]) | `native` |
+//! | `APFP_BACKEND` | Execution backend: `native`, `sim`/`simulator` (bit-identical to native plus the hardware-model ledger), or `xla`/`pjrt` ([`runtime::BackendKind::from_env`]) | `native` |
 //! | `APFP_ARTIFACTS` | Artifact directory ([`runtime::default_artifact_dir`]) | `artifacts` |
 //! | `APFP_TILE_N` | Builtin GEMM tile rows (long form `APFP_TILE_SIZE_N`; [`runtime::TileShape::from_env`]) | `32` |
 //! | `APFP_TILE_M` | Builtin GEMM tile columns (long form `APFP_TILE_SIZE_M`) | `32` |

@@ -10,7 +10,11 @@
 //! repro gemm --n 64 [--check]     run an n x n GEMM on the device, report stats
 //! repro multbench [--bits 512]    measured softfloat throughput vs modeled FPGA
 //! repro placement [--cus 8]       Fig. 4 SLR/DDR-bank assignment
+//! repro modelgold [--check|--write] [--file F]   perf-model regression gate
 //! ```
+//!
+//! `gemm --json` emits a machine-readable report that includes the
+//! device's hardware-model ledger (nonzero under `APFP_BACKEND=sim`).
 //!
 //! Config: `--config file.cfg` (key = value) and repeated `--set key=value`
 //! overrides, exposing the paper's CMake options (§IV-A) at runtime.
@@ -110,6 +114,7 @@ fn run() -> Result<()> {
         "gemm" => gemm_cmd(&args),
         "multbench" => multbench(&args),
         "placement" => placement(&args),
+        "modelgold" => modelgold(&args),
         "help" | "--help" | "-h" => {
             println!("{}", HELP);
             Ok(())
@@ -125,9 +130,12 @@ commands:
   selftest                      e2e: device GEMM vs softfloat, bit-exact
   tables  [--tab 1|2|3] [--measured]   regenerate Tab. I / II / III
   figures [--fig 3|5|6]         regenerate figure data series
-  gemm --n N [--check] [--cus P] [--bits 512|1024]
+  gemm --n N [--check] [--json] [--cus P] [--bits 512|1024]
   multbench [--bits B] [--iters N] [--threads T]
   placement [--cus P]           Fig. 4 CU -> SLR/DDR-bank assignment
+  modelgold [--check|--write] [--file model_golden.json]
+                                diff (or regenerate) the pinned perf-model
+                                goldens; --check fails on any drift
 common options:
   --config FILE   key = value config (APFP_* names accepted)
   --set key=value repeated config overrides
@@ -295,10 +303,13 @@ fn gemm_cmd(args: &Args) -> Result<()> {
     let cfg = args.config()?;
     let n: usize = args.get_parse("n", 64)?;
     let check = args.flag("check");
+    let json = args.flag("json");
     let dir = default_artifact_dir();
     let dev = Device::new(cfg.clone(), &dir)?;
     let prec = cfg.prec();
-    println!("n={n}, {} CUs, {} bits", cfg.compute_units, cfg.bits);
+    if !json {
+        println!("n={n}, {} CUs, {} bits", cfg.compute_units, cfg.bits);
+    }
     let a = Matrix::random(n, n, prec, 201, 60);
     let b = Matrix::random(n, n, prec, 202, 60);
     let c = Matrix::zeros(n, n, prec);
@@ -306,6 +317,64 @@ fn gemm_cmd(args: &Args) -> Result<()> {
     let (got, stats) = dev.gemm(&a, &b, &c)?;
     let wall = t0.elapsed().as_secs_f64();
     let macs = (n * n * n) as f64;
+    if check {
+        let want = baseline::gemm_serial(&a, &b, &c);
+        anyhow::ensure!(got == want, "MISMATCH vs softfloat");
+    }
+    if json {
+        let d = if cfg.bits == 512 {
+            DesignPoint::gemm_512(cfg.compute_units)
+        } else {
+            DesignPoint::gemm_1024(cfg.compute_units)
+        };
+        let pt = gemm_sim::simulate(&d, n, cfg.tile_n, cfg.tile_m);
+        let m = dev.model_metrics();
+        let mut fields: Vec<(&str, String)> = vec![
+            ("n", n.to_string()),
+            ("cus", cfg.compute_units.to_string()),
+            ("bits", cfg.bits.to_string()),
+            ("backend", format!("\"{}\"", cfg.backend)),
+            ("wall_s", format!("{wall:.6}")),
+            ("tiles", stats.tiles.to_string()),
+            ("artifact_calls", stats.artifact_calls.to_string()),
+            ("marshal_fraction", format!("{:.6}", stats.marshal_fraction)),
+            ("checked", check.to_string()),
+        ];
+        for (k, v) in [
+            ("model_tiles", m.tiles as f64),
+            ("model_launches", m.launches as f64),
+            ("model_cycles", m.cycles as f64),
+            ("model_macs", m.macs as f64),
+            ("model_dram_bytes", m.dram_bytes as f64),
+            ("model_energy_pj", m.energy_pj as f64),
+        ] {
+            fields.push((k, format!("{v:.0}")));
+        }
+        for (k, v) in [
+            ("model_compute_s", m.compute_s()),
+            ("model_mem_s", m.mem_s()),
+            ("model_fixed_s", m.fixed_s()),
+            ("model_total_s", m.total_s()),
+            ("model_efficiency", m.efficiency()),
+            ("model_mmacs", m.mmacs()),
+            ("model_power_w", m.power_w()),
+            ("sim_mmacs", pt.mmacs / 1e6),
+            ("sim_efficiency", pt.efficiency),
+            ("sim_freq_mhz", d.synthesize().frequency_mhz),
+        ] {
+            fields.push((k, format!("{v:.9}")));
+        }
+        let mut out = String::from("{\n");
+        for (i, (k, v)) in fields.iter().enumerate() {
+            out.push_str(&format!(
+                "  \"{k}\": {v}{}\n",
+                if i + 1 == fields.len() { "" } else { "," }
+            ));
+        }
+        out.push('}');
+        println!("{out}");
+        return Ok(());
+    }
     println!(
         "device GEMM: {:.2}s wall, {} tiles, {} artifact calls, {} MAC/s through \
          the functional {} backend on this CPU host",
@@ -330,11 +399,134 @@ fn gemm_cmd(args: &Args) -> Result<()> {
         d.synthesize().frequency_mhz,
         pt.efficiency * 100.0
     );
+    let m = dev.model_metrics();
+    if m.is_live() {
+        println!(
+            "model ledger ({} tiles, {} launch{}): {:.0} cycles, {} DRAM bytes, \
+             {:.3} ms modeled ({:.0} MMAC/s, efficiency {:.0}%, {:.1} W)",
+            m.tiles,
+            m.launches,
+            if m.launches == 1 { "" } else { "es" },
+            m.cycles as f64,
+            m.dram_bytes,
+            m.total_s() * 1e3,
+            m.mmacs(),
+            m.efficiency() * 100.0,
+            m.power_w(),
+        );
+    }
     if check {
-        let want = baseline::gemm_serial(&a, &b, &c);
-        anyhow::ensure!(got == want, "MISMATCH vs softfloat");
         println!("check: bit-exact vs softfloat reference");
     }
+    Ok(())
+}
+
+/// The perf-model regression gate: every pinned constant of the hardware
+/// model — per-tile modeled costs on the builtin GEMM geometry, and the
+/// `sim::gemm_sim` throughput/efficiency the paper's figures regenerate
+/// from — as one flat `key -> value` table.  `--write` regenerates
+/// `model_golden.json`; `--check` (the default, run by CI's analysis job)
+/// recomputes every value and fails on any drift beyond 1e-6 relative,
+/// so an accidental change to a model constant cannot land silently.
+fn model_golden_values() -> Result<Vec<(String, f64)>> {
+    use apfp::runtime::manifest::{self, ArtifactKind, TileShape};
+    use apfp::runtime::sim_backend::tile_cost;
+    let mut out: Vec<(String, f64)> = Vec::new();
+    for bits in [512u32, 1024] {
+        let metas = manifest::builtin(bits, TileShape::default())
+            .map_err(|e| anyhow!("builtin manifest for {bits} bits: {e}"))?;
+        let gemm = metas
+            .iter()
+            .find(|m| m.kind == ArtifactKind::Gemm)
+            .ok_or_else(|| anyhow!("builtin manifest lacks a {bits}-bit GEMM artifact"))?;
+        let c = tile_cost(gemm);
+        out.push((format!("tile{bits}_cycles"), c.cycles as f64));
+        out.push((format!("tile{bits}_macs"), c.macs as f64));
+        out.push((format!("tile{bits}_dram_bytes"), c.dram_bytes as f64));
+        out.push((format!("tile{bits}_compute_ps"), c.compute_ps as f64));
+        out.push((format!("tile{bits}_mem_ps"), c.mem_ps as f64));
+        out.push((format!("tile{bits}_energy_pj"), c.energy_pj as f64));
+    }
+    for (bits, cus) in [(512u32, 1usize), (512, 2), (512, 4), (512, 8), (1024, 1)] {
+        let d = if bits == 512 { DesignPoint::gemm_512(cus) } else { DesignPoint::gemm_1024(cus) };
+        out.push((format!("gemm{bits}_cu{cus}_freq_mhz"), d.synthesize().frequency_mhz));
+        out.push((format!("gemm{bits}_cu{cus}_peak_mmacs"), gemm_sim::peak(&d, 32).mmacs / 1e6));
+        let pt = gemm_sim::simulate(&d, 4096, 32, 32);
+        out.push((format!("gemm{bits}_cu{cus}_n4096_mmacs"), pt.mmacs / 1e6));
+        out.push((format!("gemm{bits}_cu{cus}_n4096_efficiency"), pt.efficiency));
+    }
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(out)
+}
+
+/// Parse the flat `{"key": value, ...}` golden file written by
+/// `modelgold --write` (one pair per line; no nested objects).
+fn parse_golden(text: &str) -> Result<Vec<(String, f64)>> {
+    let mut out = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim().trim_end_matches(',');
+        let Some(rest) = line.strip_prefix('"') else { continue };
+        let (key, val) = rest
+            .split_once("\":")
+            .ok_or_else(|| anyhow!("malformed golden line {}: {raw:?}", i + 1))?;
+        let v: f64 = val
+            .trim()
+            .parse()
+            .map_err(|_| anyhow!("malformed golden value on line {}: {raw:?}", i + 1))?;
+        out.push((key.to_string(), v));
+    }
+    Ok(out)
+}
+
+fn modelgold(args: &Args) -> Result<()> {
+    const REL_TOL: f64 = 1e-6;
+    let path = args.get("file").unwrap_or("model_golden.json").to_string();
+    let fresh = model_golden_values()?;
+    if args.flag("write") {
+        let mut s = String::from("{\n");
+        for (i, (k, v)) in fresh.iter().enumerate() {
+            s.push_str(&format!(
+                "  \"{k}\": {v:.9}{}\n",
+                if i + 1 == fresh.len() { "" } else { "," }
+            ));
+        }
+        s.push_str("}\n");
+        std::fs::write(&path, s)?;
+        println!("wrote {} model goldens to {path}", fresh.len());
+        return Ok(());
+    }
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow!("reading {path}: {e} (regenerate with `repro modelgold --write`)"))?;
+    let pinned: HashMap<String, f64> = parse_golden(&text)?.into_iter().collect();
+    anyhow::ensure!(!pinned.is_empty(), "{path} pins no goldens");
+    let mut drifted = 0usize;
+    for (key, now) in &fresh {
+        match pinned.get(key) {
+            None => {
+                drifted += 1;
+                println!("MISSING {key}: model computes {now:.9} but {path} does not pin it");
+            }
+            Some(&want) => {
+                let scale = want.abs().max(now.abs()).max(1e-30);
+                if (now - want).abs() / scale > REL_TOL {
+                    drifted += 1;
+                    println!("DRIFT {key}: pinned {want:.9}, model now computes {now:.9}");
+                }
+            }
+        }
+    }
+    for key in pinned.keys() {
+        if !fresh.iter().any(|(k, _)| k == key) {
+            drifted += 1;
+            println!("STALE {key}: pinned in {path} but no longer computed by the model");
+        }
+    }
+    anyhow::ensure!(
+        drifted == 0,
+        "{drifted} perf-model golden(s) drifted; if intentional, regenerate with \
+         `repro modelgold --write --file {path}` and commit the diff"
+    );
+    println!("OK: {} perf-model goldens match within {REL_TOL:e} relative", fresh.len());
     Ok(())
 }
 

@@ -3,17 +3,23 @@
 //! The paper's §IV-B interface is "plug-and-play": the host runtime does not
 //! care what executes a kernel as long as the results are bit-exact.  The
 //! reproduction mirrors that with a [`Backend`] trait over limb-plane
-//! batches and two implementations:
+//! batches and three implementations:
 //!
 //! * [`XlaBackend`] (here) — the AOT-artifact path through the PJRT CPU
 //!   client; offline builds compile against the stub in `runtime/xla.rs`
 //!   and fail cleanly at construction, exactly as before the refactor;
 //! * [`super::NativeBackend`] — in-process execution of the same artifact
 //!   semantics on the arena-backed softfloat pipeline, the bit-exact
-//!   software twin the device stack is validated against.
+//!   software twin the device stack is validated against;
+//! * [`super::SimBackend`] — the native backend wrapped in the hardware
+//!   model: every tile also accrues a modeled [`TileModelCost`]
+//!   (cycles / DRAM traffic / compute+mem time from
+//!   [`crate::hwmodel`] + [`crate::sim`]), drained by the coordinator
+//!   into the device's `ModelMetrics` ledger.
 //!
-//! Selection: `$APFP_BACKEND` (`native` | `xla`, default `native`), or
-//! explicitly through [`crate::config::ApfpConfig::backend`] /
+//! Selection: `$APFP_BACKEND` (`native` | `sim` | `xla`, default
+//! `native`), or explicitly through
+//! [`crate::config::ApfpConfig::backend`] /
 //! [`super::Runtime::with_backend`].
 
 use std::cell::RefCell;
@@ -36,6 +42,7 @@ use crate::softfloat::ZERO_EXP;
 ///
 /// assert_eq!(BackendKind::parse("native"), Some(BackendKind::Native));
 /// assert_eq!(BackendKind::parse("PJRT"), Some(BackendKind::Xla));
+/// assert_eq!(BackendKind::parse("sim"), Some(BackendKind::Sim));
 /// assert_eq!(BackendKind::parse("fpga"), None);
 /// assert_eq!(BackendKind::Xla.to_string(), "xla");
 /// ```
@@ -43,6 +50,8 @@ use crate::softfloat::ZERO_EXP;
 pub enum BackendKind {
     /// In-process softfloat execution of the artifact semantics.
     Native,
+    /// Native execution plus hardware-model cost accounting per tile.
+    Sim,
     /// AOT HLO artifacts through the PJRT CPU client (`xla` crate).
     Xla,
 }
@@ -51,6 +60,7 @@ impl BackendKind {
     pub fn parse(s: &str) -> Option<Self> {
         match s.to_ascii_lowercase().as_str() {
             "native" => Some(Self::Native),
+            "sim" | "simulator" => Some(Self::Sim),
             "xla" | "pjrt" => Some(Self::Xla),
             _ => None,
         }
@@ -62,7 +72,7 @@ impl BackendKind {
     pub fn from_env() -> Self {
         match std::env::var("APFP_BACKEND") {
             Ok(v) => Self::parse(&v).unwrap_or_else(|| {
-                eprintln!("APFP_BACKEND={v:?} not recognized (native|xla); using native");
+                eprintln!("APFP_BACKEND={v:?} not recognized (native|sim|xla); using native");
                 Self::Native
             }),
             Err(_) => Self::Native,
@@ -74,8 +84,56 @@ impl std::fmt::Display for BackendKind {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.write_str(match self {
             Self::Native => "native",
+            Self::Sim => "sim",
             Self::Xla => "xla",
         })
+    }
+}
+
+/// Modeled hardware cost of executed tile work, accumulated by
+/// [`super::SimBackend`] and drained by the coordinator's worker loop once
+/// per settled tile reply.
+///
+/// Times are in integer **picoseconds** so the struct stays `Copy` and the
+/// coordinator can sum it with relaxed atomics on the zero-alloc drain
+/// path; the `ModelMetrics` snapshot converts back to seconds.  All fields
+/// follow the per-compute-unit convention: costs are what *one* CU spends
+/// on the tiles it executed (the device-level ledger sums over CUs, which
+/// for the compute/cycle terms models the per-CU share of the paper's
+/// `sim::gemm_sim` aggregate).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TileModelCost {
+    /// Modeled datapath cycles (II-adjusted MAC issue + pipeline drain).
+    pub cycles: u64,
+    /// Useful MAC lanes in the modeled tiles (rows x cols x k).
+    pub macs: u64,
+    /// Modeled DRAM-bank traffic in bytes (A strided + B + C contiguous).
+    pub dram_bytes: u64,
+    /// Modeled compute time in picoseconds (`cycles / f_achievable`).
+    pub compute_ps: u64,
+    /// Modeled DRAM streaming time in picoseconds (bank-shared bandwidth
+    /// with the contiguous/strided efficiency split).
+    pub mem_ps: u64,
+    /// Modeled dynamic energy in picojoules (DSP + CLB activity over the
+    /// compute interval).
+    pub energy_pj: u64,
+}
+
+impl TileModelCost {
+    /// Saturating field-wise sum — model accounting must never panic on
+    /// the device stack's hot path.
+    pub fn add(&mut self, other: &TileModelCost) {
+        self.cycles = self.cycles.saturating_add(other.cycles);
+        self.macs = self.macs.saturating_add(other.macs);
+        self.dram_bytes = self.dram_bytes.saturating_add(other.dram_bytes);
+        self.compute_ps = self.compute_ps.saturating_add(other.compute_ps);
+        self.mem_ps = self.mem_ps.saturating_add(other.mem_ps);
+        self.energy_pj = self.energy_pj.saturating_add(other.energy_pj);
+    }
+
+    /// True when no modeled work has been recorded.
+    pub fn is_zero(&self) -> bool {
+        *self == TileModelCost::default()
     }
 }
 
@@ -125,6 +183,16 @@ pub trait Backend {
         b: &PlaneBatch,
         c: &mut PlaneBatch,
     ) -> Result<()>;
+
+    /// Drain the modeled cost accumulated since the previous drain.
+    ///
+    /// Backends without a hardware model (native, xla) return `None`; the
+    /// simulator returns the per-tile ledger and resets it.  The worker
+    /// loop drains after every tile job so a retried tile's cost cannot
+    /// leak into a later reply.
+    fn take_model_cost(&self) -> Option<TileModelCost> {
+        None
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -349,11 +417,41 @@ mod tests {
     fn kind_parses_both_names_and_env_synonyms() {
         assert_eq!(BackendKind::parse("native"), Some(BackendKind::Native));
         assert_eq!(BackendKind::parse("NATIVE"), Some(BackendKind::Native));
+        assert_eq!(BackendKind::parse("sim"), Some(BackendKind::Sim));
+        assert_eq!(BackendKind::parse("SIM"), Some(BackendKind::Sim));
+        assert_eq!(BackendKind::parse("simulator"), Some(BackendKind::Sim));
         assert_eq!(BackendKind::parse("xla"), Some(BackendKind::Xla));
         assert_eq!(BackendKind::parse("pjrt"), Some(BackendKind::Xla));
         assert_eq!(BackendKind::parse("tpu"), None);
         assert_eq!(BackendKind::Native.to_string(), "native");
+        assert_eq!(BackendKind::Sim.to_string(), "sim");
         assert_eq!(BackendKind::Xla.to_string(), "xla");
+    }
+
+    #[test]
+    fn tile_model_cost_sums_saturating_and_reports_zero() {
+        let mut acc = TileModelCost::default();
+        assert!(acc.is_zero());
+        let one = TileModelCost {
+            cycles: 3,
+            macs: 2,
+            dram_bytes: 5,
+            compute_ps: 7,
+            mem_ps: 11,
+            energy_pj: 13,
+        };
+        acc.add(&one);
+        acc.add(&one);
+        assert_eq!(acc.cycles, 6);
+        assert_eq!(acc.macs, 4);
+        assert_eq!(acc.dram_bytes, 10);
+        assert_eq!(acc.compute_ps, 14);
+        assert_eq!(acc.mem_ps, 22);
+        assert_eq!(acc.energy_pj, 26);
+        assert!(!acc.is_zero());
+        let big = TileModelCost { cycles: u64::MAX, ..TileModelCost::default() };
+        acc.add(&big);
+        assert_eq!(acc.cycles, u64::MAX, "saturates instead of panicking");
     }
 
     #[test]

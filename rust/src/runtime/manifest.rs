@@ -201,6 +201,25 @@ impl ArtifactMeta {
     pub fn prec(&self) -> u32 {
         (self.limbs * 8) as u32
     }
+
+    /// Synthesize the hardware-model design point this artifact stands in
+    /// for: the paper's evaluated configuration at this packed width
+    /// (72-bit multiplier bottom-out, 64-bit adder base — Tab. I/II), with
+    /// the GEMM datapath flag set from the artifact kind.
+    ///
+    /// The point is a **single compute unit**: the simulator backend runs
+    /// inside one worker thread per CU, so each worker models its own CU
+    /// and the device-level ledger sums over them.  `sim::gemm_sim` keeps
+    /// modeling the aggregate device for the sweep benches.
+    pub fn design_point(&self) -> crate::hwmodel::DesignPoint {
+        crate::hwmodel::DesignPoint {
+            bits: self.bits,
+            compute_units: 1,
+            mult_base_bits: 72,
+            add_base_bits: 64,
+            gemm: self.kind == ArtifactKind::Gemm,
+        }
+    }
 }
 
 /// The in-memory manifest the native backend synthesizes when no artifact
@@ -424,6 +443,21 @@ mod tests {
     #[test]
     fn env_tile_shape_empty_env_is_default() {
         assert_eq!(TileShape::try_from_env_with(|_| None).unwrap(), TileShape::default());
+    }
+
+    #[test]
+    fn design_point_mirrors_the_paper_configuration() {
+        let m = builtin_all(TileShape::default()).unwrap();
+        for a in &m {
+            let d = a.design_point();
+            assert_eq!(d.bits, a.bits);
+            assert_eq!(d.compute_units, 1, "one worker models one CU");
+            assert_eq!((d.mult_base_bits, d.add_base_bits), (72, 64), "Tab. I/II bases");
+            assert_eq!(d.gemm, a.kind == ArtifactKind::Gemm);
+            let s = d.synthesize();
+            assert!(s.failure.is_none(), "paper points must synthesize: {:?}", s.failure);
+            assert!(s.frequency_mhz > 0.0);
+        }
     }
 
     #[test]

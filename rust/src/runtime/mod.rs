@@ -1,7 +1,7 @@
 //! Execution runtime: resolve artifacts from a manifest and run them on a
 //! pluggable [`Backend`] over limb-plane batches.
 //!
-//! Two backends implement the same artifact semantics (§IV-B's
+//! Three backends implement the same artifact semantics (§IV-B's
 //! "plug-and-play" promise):
 //!
 //! * [`NativeBackend`] (`APFP_BACKEND=native`, the default) executes in
@@ -9,6 +9,11 @@
 //!   builtin manifest when no artifact directory exists — so the whole
 //!   device stack runs end to end on a clean checkout, bit-identically to
 //!   the software baseline;
+//! * [`SimBackend`] (`APFP_BACKEND=sim`) wraps the native backend in the
+//!   analytic hardware model: results stay bit-identical while every GEMM
+//!   tile accrues modeled cycles / DRAM traffic / energy
+//!   ([`backend::TileModelCost`]), drained into the coordinator's
+//!   `ModelMetrics` ledger — the design-space-exploration backend;
 //! * [`backend::XlaBackend`] (`APFP_BACKEND=xla`) loads AOT artifacts (HLO
 //!   text), compiles them on the PJRT CPU client and executes them.  In
 //!   offline builds it compiles against the `xla` stub module and fails
@@ -26,15 +31,17 @@
 pub mod backend;
 pub mod manifest;
 mod native;
+pub mod sim_backend;
 mod xla;
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context, Result};
 
-pub use backend::{Backend, BackendKind};
+pub use backend::{Backend, BackendKind, TileModelCost};
 pub use manifest::{ArtifactKind, ArtifactMeta, TileShape};
 pub use native::NativeBackend;
+pub use sim_backend::SimBackend;
 
 use crate::pack::PlaneBatch;
 
@@ -44,11 +51,11 @@ pub struct Runtime {
 }
 
 /// Load artifact metadata for a backend: the on-disk manifest when present,
-/// else (native only, and only when the manifest is genuinely *absent*) the
-/// builtin in-memory manifest shaped to `tile`.  A manifest that exists but
-/// cannot be read (permissions, it's a directory, ...) stays a hard error
-/// on every backend — silently substituting builtin tile geometry for a
-/// configured one would be worse than failing.  The XLA path cannot run
+/// else (native/sim only, and only when the manifest is genuinely *absent*)
+/// the builtin in-memory manifest shaped to `tile`.  A manifest that exists
+/// but cannot be read (permissions, it's a directory, ...) stays a hard
+/// error on every backend — silently substituting builtin tile geometry for
+/// a configured one would be worse than failing.  The XLA path cannot run
 /// without HLO files, so a missing manifest stays a hard error there too.
 pub fn load_metas(
     artifact_dir: &Path,
@@ -58,7 +65,8 @@ pub fn load_metas(
     match manifest::load(artifact_dir) {
         Ok(m) => Ok(m),
         Err(manifest::ManifestError::Io { ref source, .. })
-            if kind == BackendKind::Native && source.kind() == std::io::ErrorKind::NotFound =>
+            if matches!(kind, BackendKind::Native | BackendKind::Sim)
+                && source.kind() == std::io::ErrorKind::NotFound =>
         {
             manifest::builtin_all(tile).context("synthesizing builtin manifest")
         }
@@ -91,9 +99,16 @@ impl Runtime {
         let metas = load_metas(artifact_dir, kind, tile)?;
         let backend: Box<dyn Backend> = match kind {
             BackendKind::Native => Box::new(NativeBackend::new()),
+            BackendKind::Sim => Box::new(SimBackend::new()),
             BackendKind::Xla => Box::new(backend::XlaBackend::new(artifact_dir)?),
         };
         Ok(Runtime { backend, metas })
+    }
+
+    /// Drain the backend's modeled-cost ledger ([`Backend::take_model_cost`]):
+    /// `Some` only on the simulated backend after GEMM tile work.
+    pub fn take_model_cost(&self) -> Option<TileModelCost> {
+        self.backend.take_model_cost()
     }
 
     pub fn backend_name(&self) -> &'static str {
@@ -206,6 +221,18 @@ mod tests {
         let gemm_name = rt.find(ArtifactKind::Gemm, 1024).unwrap().name.clone();
         rt.warm(&["mul_512", &gemm_name]).unwrap();
         assert!(rt.warm(&["nope"]).is_err());
+    }
+
+    #[test]
+    fn sim_runtime_works_without_any_artifact_dir() {
+        let dir = std::env::temp_dir().join("apfp_rt_sim_no_artifacts/definitely/absent");
+        let rt = Runtime::with_backend(&dir, BackendKind::Sim).unwrap();
+        assert_eq!(rt.backend_name(), "sim");
+        assert_eq!(rt.artifacts().len(), 8, "builtin manifest covers both widths");
+        assert!(rt.take_model_cost().is_none(), "no work modeled yet");
+        // a native runtime never reports model cost
+        let native = Runtime::with_backend(&dir, BackendKind::Native).unwrap();
+        assert!(native.take_model_cost().is_none());
     }
 
     #[test]

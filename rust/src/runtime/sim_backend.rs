@@ -1,0 +1,297 @@
+//! The simulated backend: bit-exact native execution plus hardware-model
+//! cost accounting (`APFP_BACKEND=sim`).
+//!
+//! [`SimBackend`] wraps a [`NativeBackend`] and delegates every operator
+//! to it unchanged, so results are bit-identical to the native path by
+//! construction — the same arena/fixed softfloat kernels execute.  On top
+//! of that, every successful GEMM tile K-step accrues a modeled
+//! [`TileModelCost`] derived from the paper's analytic hardware model
+//! ([`crate::hwmodel`]) and dataflow simulator ([`crate::sim`]):
+//!
+//! * **cycles** — `T_N*T_M*K_TILE` MAC issues at the II the design point
+//!   sustains (monolithic-CU penalty past half an SLR, §V-D), plus one
+//!   [`gemm_sim::PIPELINE_DEPTH`] fill/drain per kernel call;
+//! * **DRAM traffic** — the A column-piece (strided), B row-piece and C
+//!   writeback (contiguous) at the bank efficiencies of [`sim::dram`];
+//! * **compute / memory time** — cycles over the synthesized achievable
+//!   frequency, and bytes over the CU's bank share;
+//! * **energy** — DSP + CLB dynamic activity over the compute interval
+//!   ([`DSP_PJ_PER_CYCLE`] / [`CLB_PJ_PER_CYCLE`]).
+//!
+//! The convention is **per compute unit**: each worker thread owns one
+//! `SimBackend` and models the CU it stands in for
+//! ([`ArtifactMeta::design_point`] synthesizes at `compute_units = 1`),
+//! and the coordinator sums workers into the device-wide `ModelMetrics`
+//! ledger.  Costs ride [`TileResult`](crate::coordinator) replies and are
+//! accumulated only when a launch's results retire, so retried tiles are
+//! never double-counted (see `docs/INVARIANTS.md`).
+//!
+//! Stream operators (`mul`/`add`/`mac`) are deliberately *not* modeled:
+//! the paper's sweep results (Fig. 5, Tab. III) are GEMM dataflow, and the
+//! stream paths are host-marshaling-dominated.  They delegate and accrue
+//! nothing.
+
+use std::cell::{Cell, RefCell};
+
+use anyhow::Result;
+
+use super::backend::{Backend, TileModelCost};
+use super::manifest::ArtifactMeta;
+use super::native::NativeBackend;
+use crate::hwmodel::{dsp, resources, u250};
+use crate::pack::PlaneBatch;
+use crate::sim::{dram, gemm_sim};
+
+/// Modeled dynamic energy of one active DSP48E2 per cycle, picojoules.
+/// Calibrated to put a 512-bit GEMM CU at a few watts of DSP activity at
+/// its achievable clock (DS962-order numbers, not a lookup).
+pub const DSP_PJ_PER_CYCLE: f64 = 22.0;
+/// Modeled dynamic energy of one active CLB per cycle, picojoules
+/// (recombination adders + stream logic toggling alongside the DSPs).
+pub const CLB_PJ_PER_CYCLE: f64 = 0.55;
+
+/// Modeled cost of one `exec_gemm_tile` call (one K-step of one output
+/// tile) on the artifact's design point, per compute unit.
+///
+/// This is the single formula the calibration goldens, the Python mirror
+/// (`python/tests/test_sim_backend.py`) and `repro modelgold` all pin:
+/// change it and the perf-model regression gate trips.
+pub fn tile_cost(meta: &ArtifactMeta) -> TileModelCost {
+    let d = meta.design_point();
+    let s = d.synthesize();
+    let f_hz = s.frequency_mhz * 1e6;
+    let (tn, tm, kt) = (meta.t_n, meta.t_m, meta.k_tile);
+    let macs = (tn * tm * kt) as u64;
+
+    // initiation-interval penalty, exactly as sim::gemm_sim models it
+    let cu_frac =
+        resources::cu_clbs(&d) as f64 / (u250::CLB_TOTAL as f64 / u250::SLRS as f64);
+    let ii = 1.0 + (cu_frac - 0.5).max(0.0);
+    let cycles_f = macs as f64 * ii + gemm_sim::PIPELINE_DEPTH;
+
+    // DRAM traffic of this K-step: A strided, B + C writeback contiguous
+    let bytes_per_elem = (meta.bits / 8) as f64;
+    let read_a = (tn * kt) as f64 * bytes_per_elem;
+    let read_b = (kt * tm) as f64 * bytes_per_elem;
+    let write_c = (tn * tm) as f64 * bytes_per_elem;
+    let mem_s = dram::stream_time(read_a, 1, dram::STRIDED_EFF)
+        + dram::stream_time(read_b, 1, dram::CONTIGUOUS_EFF)
+        + dram::stream_time(write_c, 1, dram::CONTIGUOUS_EFF);
+
+    let dsps = dsp::multiplier_dsps(d.prec(), d.mult_base_bits) as f64;
+    let clbs = resources::cu_clbs(&d) as f64;
+    let energy_pj = cycles_f * (dsps * DSP_PJ_PER_CYCLE + clbs * CLB_PJ_PER_CYCLE);
+
+    TileModelCost {
+        cycles: cycles_f.ceil() as u64,
+        macs,
+        dram_bytes: (read_a + read_b + write_c) as u64,
+        compute_ps: (cycles_f / f_hz * 1e12).round() as u64,
+        mem_ps: (mem_s * 1e12).round() as u64,
+        energy_pj: energy_pj.round() as u64,
+    }
+}
+
+/// The third backend: native execution with hardware-model accounting.
+///
+/// Like [`NativeBackend`] it is **not `Sync`** (interior mutability via
+/// `Cell`/`RefCell`); the coordinator gives each worker thread its own
+/// instance, which is exactly the per-CU modeling convention.
+pub struct SimBackend {
+    native: NativeBackend,
+    /// Per-artifact memo of the constant per-call cost (model synthesis is
+    /// float-heavy; the warm path is a linear scan over a handful of
+    /// artifacts).
+    costs: RefCell<Vec<(String, TileModelCost)>>,
+    /// Cost accrued since the last [`Backend::take_model_cost`] drain.
+    pending: Cell<TileModelCost>,
+}
+
+impl SimBackend {
+    pub fn new() -> Self {
+        SimBackend {
+            native: NativeBackend::new(),
+            costs: RefCell::new(Vec::new()),
+            pending: Cell::new(TileModelCost::default()),
+        }
+    }
+
+    /// Like [`NativeBackend::with_fixed_path`]: pin the fixed-width lane
+    /// on or off instead of reading `APFP_FIXED_PATH`.
+    pub fn with_fixed_path(enabled: bool) -> Self {
+        SimBackend {
+            native: NativeBackend::with_fixed_path(enabled),
+            costs: RefCell::new(Vec::new()),
+            pending: Cell::new(TileModelCost::default()),
+        }
+    }
+
+    /// Memoized [`tile_cost`]: synthesize once per artifact, then the hot
+    /// path is an alloc-free scan.
+    // apfp-lint: allow(alloc, scope=fn, reason="cold per-artifact memoization: model synthesis runs once per artifact name, every later call is a read-only scan")
+    fn cached_cost(&self, meta: &ArtifactMeta) -> TileModelCost {
+        if let Some((_, c)) = self.costs.borrow().iter().find(|(n, _)| *n == meta.name) {
+            return *c;
+        }
+        let c = tile_cost(meta);
+        self.costs.borrow_mut().push((meta.name.clone(), c));
+        c
+    }
+}
+
+impl Default for SimBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn warm(&self, meta: &ArtifactMeta) -> Result<()> {
+        self.native.warm(meta)
+    }
+
+    fn exec_stream_binop(
+        &self,
+        meta: &ArtifactMeta,
+        a: &PlaneBatch,
+        b: &PlaneBatch,
+    ) -> Result<PlaneBatch> {
+        self.native.exec_stream_binop(meta, a, b)
+    }
+
+    fn exec_stream_mac(
+        &self,
+        meta: &ArtifactMeta,
+        c: &PlaneBatch,
+        a: &PlaneBatch,
+        b: &PlaneBatch,
+    ) -> Result<PlaneBatch> {
+        self.native.exec_stream_mac(meta, c, a, b)
+    }
+
+    /// Bit-identical delegation to the native kernels, then (only on
+    /// success) accrue the modeled cost of the K-step just executed.
+    // apfp-lint: no_alloc
+    fn exec_gemm_tile(
+        &self,
+        meta: &ArtifactMeta,
+        a: &PlaneBatch,
+        b: &PlaneBatch,
+        c: &mut PlaneBatch,
+    ) -> Result<()> {
+        self.native.exec_gemm_tile(meta, a, b, c)?;
+        let mut acc = self.pending.get();
+        acc.add(&self.cached_cost(meta));
+        self.pending.set(acc);
+        Ok(())
+    }
+
+    fn take_model_cost(&self) -> Option<TileModelCost> {
+        let cost = self.pending.replace(TileModelCost::default());
+        if cost.is_zero() {
+            None
+        } else {
+            Some(cost)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{builtin, TileShape};
+    use crate::runtime::ArtifactKind;
+
+    fn gemm_meta(bits: u32, tile: TileShape) -> ArtifactMeta {
+        builtin(bits, tile)
+            .unwrap()
+            .into_iter()
+            .find(|a| a.kind == ArtifactKind::Gemm)
+            .unwrap()
+    }
+
+    #[test]
+    fn tile_cost_matches_the_dataflow_model() {
+        let meta = gemm_meta(512, TileShape::default());
+        let c = tile_cost(&meta);
+        assert_eq!(c.macs, 32 * 32 * 32);
+        // 512-bit CU is below the half-SLR II knee: cycles = macs + fill
+        assert_eq!(c.cycles, 32 * 32 * 32 + gemm_sim::PIPELINE_DEPTH as u64);
+        // A + B + C at 64 bytes/elem
+        assert_eq!(c.dram_bytes, (3 * 32 * 32 * 64) as u64);
+        assert!(c.compute_ps > 0 && c.mem_ps > 0 && c.energy_pj > 0);
+        // compute-bound at the paper tile (arithmetic intensity 16)
+        assert!(c.compute_ps > c.mem_ps, "compute {} vs mem {}", c.compute_ps, c.mem_ps);
+    }
+
+    #[test]
+    fn wider_precision_costs_more_everywhere() {
+        let tile = TileShape::default();
+        let c512 = tile_cost(&gemm_meta(512, tile));
+        let c1024 = tile_cost(&gemm_meta(1024, tile));
+        assert!(c1024.cycles >= c512.cycles, "II penalty can only grow");
+        assert_eq!(c1024.dram_bytes, 2 * c512.dram_bytes);
+        assert!(c1024.compute_ps > c512.compute_ps, "slower clock + II");
+        assert!(c1024.energy_pj > c512.energy_pj, "more DSPs/CLBs active");
+    }
+
+    #[test]
+    fn accrues_only_on_success_and_drains_exactly_once() {
+        let be = SimBackend::new();
+        assert!(be.take_model_cost().is_none(), "nothing accrued yet");
+
+        let meta = gemm_meta(512, TileShape { n: 4, m: 4, k: 4 });
+        let zeros = |n: usize| PlaneBatch::zeros(n, meta.prec());
+        let a = zeros(meta.t_n * meta.k_tile);
+        let b = zeros(meta.k_tile * meta.t_m);
+        let mut cm = zeros(meta.t_n * meta.t_m);
+
+        // a rejected call (wrong artifact kind) accrues nothing
+        let bad = ArtifactMeta { kind: ArtifactKind::Mul, ..meta.clone() };
+        assert!(be.exec_gemm_tile(&bad, &a, &b, &mut cm).is_err());
+        assert!(be.take_model_cost().is_none());
+
+        be.exec_gemm_tile(&meta, &a, &b, &mut cm).unwrap();
+        be.exec_gemm_tile(&meta, &a, &b, &mut cm).unwrap();
+        let per_call = tile_cost(&meta);
+        let drained = be.take_model_cost().expect("two calls accrued");
+        assert_eq!(drained.cycles, 2 * per_call.cycles);
+        assert_eq!(drained.macs, 2 * per_call.macs);
+        assert_eq!(drained.dram_bytes, 2 * per_call.dram_bytes);
+        assert!(be.take_model_cost().is_none(), "drain resets the ledger");
+    }
+
+    #[test]
+    fn sim_results_are_bit_identical_to_native() {
+        use crate::testkit::{rand_ap, Rng};
+
+        let meta = gemm_meta(512, TileShape { n: 4, m: 4, k: 4 });
+        let prec = meta.prec();
+        let mut rng = Rng::from_seed(0x51ABAC);
+        let fill = |rng: &mut Rng, n: usize| {
+            let mut pb = PlaneBatch::zeros(n, prec);
+            for i in 0..n {
+                pb.set(i, &rand_ap(rng, prec, 8));
+            }
+            pb
+        };
+        let a = fill(&mut rng, meta.t_n * meta.k_tile);
+        let b = fill(&mut rng, meta.k_tile * meta.t_m);
+        let c0 = fill(&mut rng, meta.t_n * meta.t_m);
+
+        let native = NativeBackend::new();
+        let sim = SimBackend::new();
+        let mut c_native = c0.clone();
+        let mut c_sim = c0.clone();
+        native.exec_gemm_tile(&meta, &a, &b, &mut c_native).unwrap();
+        sim.exec_gemm_tile(&meta, &a, &b, &mut c_sim).unwrap();
+        assert_eq!(c_native.sign, c_sim.sign);
+        assert_eq!(c_native.exp, c_sim.exp);
+        assert_eq!(c_native.mant, c_sim.mant);
+        assert!(sim.take_model_cost().is_some(), "and the model ledger is live");
+    }
+}

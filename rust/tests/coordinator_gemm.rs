@@ -16,17 +16,18 @@ use apfp::runtime::BackendKind;
 
 fn open_device(cfg: ApfpConfig) -> Option<Device> {
     let dir = apfp::runtime::default_artifact_dir();
-    let native = cfg.backend == BackendKind::Native;
+    let must_open = matches!(cfg.backend, BackendKind::Native | BackendKind::Sim);
     match Device::new(cfg, &dir) {
         Ok(dev) => Some(dev),
         // the xla backend legitimately skips without artifacts; the native
-        // backend must come up on every checkout — a failure there is a
-        // real regression, never a skip
-        Err(e) if !native => {
+        // and sim backends must come up on every checkout (both serve the
+        // builtin manifest) — a failure there is a real regression, never
+        // a skip
+        Err(e) if !must_open => {
             eprintln!("skipped: {e:#}");
             None
         }
-        Err(e) => panic!("native device must open on a clean checkout: {e:#}"),
+        Err(e) => panic!("builtin-manifest backend must open on a clean checkout: {e:#}"),
     }
 }
 

@@ -1,0 +1,198 @@
+//! Calibration goldens for the hardware model: the paper's published
+//! design points (Tab. I-III, Fig. 3/5/6 of "Fast Arbitrary Precision
+//! Floating Point on FPGA") pinned with explicit tolerances, the
+//! `model_golden.json` perf-regression file checked against the live
+//! model with the same comparator `repro modelgold --check` uses — and a
+//! falsifiability case proving the gate actually *can* trip: a ±20%
+//! perturbation of `PIPELINE_DEPTH` pushed through the model must exceed
+//! the gate tolerance on every affected key.
+//!
+//! Mirrored line-for-line (formulas, constants, rounding) by
+//! `python/tests/test_sim_backend.py`, which regenerates the golden file
+//! on toolchain-less checkouts.
+
+use std::collections::HashMap;
+
+use apfp::hwmodel::{dsp, resources, u250, DesignPoint};
+use apfp::runtime::manifest::{self, ArtifactKind, TileShape};
+use apfp::runtime::sim_backend::tile_cost;
+use apfp::sim::gemm_sim;
+
+/// The gate comparator, verbatim from `repro modelgold --check`.
+const REL_TOL: f64 = 1e-6;
+
+fn gate_trips(pinned: f64, got: f64) -> bool {
+    let scale = pinned.abs().max(got.abs()).max(1e-30);
+    (got - pinned).abs() / scale > REL_TOL
+}
+
+fn builtin_gemm_meta(bits: u32) -> manifest::ArtifactMeta {
+    manifest::builtin(bits, TileShape::default())
+        .expect("builtin manifest")
+        .into_iter()
+        .find(|m| m.kind == ArtifactKind::Gemm)
+        .expect("builtin gemm meta")
+}
+
+/// The exact key set `repro modelgold` pins (and `model_golden.json`
+/// stores) — recomputed from the live model.
+fn model_golden_values() -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    for bits in [512u32, 1024] {
+        let c = tile_cost(&builtin_gemm_meta(bits));
+        out.push((format!("tile{bits}_cycles"), c.cycles as f64));
+        out.push((format!("tile{bits}_macs"), c.macs as f64));
+        out.push((format!("tile{bits}_dram_bytes"), c.dram_bytes as f64));
+        out.push((format!("tile{bits}_compute_ps"), c.compute_ps as f64));
+        out.push((format!("tile{bits}_mem_ps"), c.mem_ps as f64));
+        out.push((format!("tile{bits}_energy_pj"), c.energy_pj as f64));
+    }
+    for (bits, cus) in [(512u32, 1usize), (512, 2), (512, 4), (512, 8), (1024, 1)] {
+        let d = if bits == 512 { DesignPoint::gemm_512(cus) } else { DesignPoint::gemm_1024(cus) };
+        let s = d.synthesize();
+        out.push((format!("gemm{bits}_cu{cus}_freq_mhz"), s.frequency_mhz));
+        out.push((format!("gemm{bits}_cu{cus}_peak_mmacs"), gemm_sim::peak(&d, 32).mmacs / 1e6));
+        let p = gemm_sim::simulate(&d, 4096, 32, 32);
+        out.push((format!("gemm{bits}_cu{cus}_n4096_mmacs"), p.mmacs / 1e6));
+        out.push((format!("gemm{bits}_cu{cus}_n4096_efficiency"), p.efficiency));
+    }
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    out
+}
+
+/// Minimal parser for the flat `model_golden.json` format (the same
+/// line discipline `repro modelgold --write` emits).
+fn parse_golden(text: &str) -> HashMap<String, f64> {
+    let mut out = HashMap::new();
+    for line in text.lines() {
+        let line = line.trim().trim_end_matches(',');
+        let Some(rest) = line.strip_prefix('"') else { continue };
+        let Some((key, val)) = rest.split_once("\":") else { continue };
+        let v: f64 = val.trim().parse().expect("golden value parses as f64");
+        out.insert(key.to_string(), v);
+    }
+    out
+}
+
+// -- paper pins (Tab. I-III, Fig. 3) ------------------------------------
+
+#[test]
+fn tab1_mult512_resources_and_frequency() {
+    // Tab. I: 512-bit multiplier, 72-bit bottom-out — 27 leaves of 56
+    // bits, 432 DSPs (~4% of the U250's 12288), ~456 MHz standalone
+    assert_eq!(dsp::karatsuba_leaves(448, 72), (27, 56));
+    assert_eq!(dsp::multiplier_dsps(448, 72), 432);
+    assert!(dsp::multiplier_dsps(448, 72) * 100 / u250::DSP_TOTAL <= 4);
+    let s = DesignPoint::mult_512(1).synthesize();
+    assert!(s.failure.is_none());
+    assert!((s.frequency_mhz - 456.0).abs() < 20.0, "Tab I freq: {}", s.frequency_mhz);
+}
+
+#[test]
+fn tab2_mult1024_scales_by_karatsuba_not_quadratic() {
+    // Tab. II: doubling precision costs 3x leaves (81 of 60 bits), not 4x
+    assert_eq!(dsp::karatsuba_leaves(960, 72).0, 81);
+    let d512 = dsp::multiplier_dsps(448, 72) as f64;
+    let d1024 = dsp::multiplier_dsps(960, 72) as f64;
+    assert!(d1024 / d512 < 4.0, "Karatsuba must beat schoolbook scaling");
+    let s = DesignPoint::mult_1024(1).synthesize();
+    assert!(s.failure.is_none());
+    assert!(s.frequency_mhz > 250.0, "Tab II freq: {}", s.frequency_mhz);
+}
+
+#[test]
+fn tab3_gemm_design_points() {
+    // Tab. III rows: frequency and peak throughput per CU count, with the
+    // same tolerances the sim unit tests use (model, not gospel: 18%)
+    for (cus, paper_mmacs) in [(1usize, 322.0f64), (2, 540.0), (4, 1049.0), (8, 2002.0)] {
+        let d = DesignPoint::gemm_512(cus);
+        let s = d.synthesize();
+        assert!(s.failure.is_none(), "{cus} CUs must synthesize");
+        assert!(
+            (250.0..=340.0).contains(&s.frequency_mhz),
+            "{cus} CU freq out of Tab III band: {}",
+            s.frequency_mhz
+        );
+        let got = gemm_sim::peak(&d, 32).mmacs / 1e6;
+        let rel = (got - paper_mmacs).abs() / paper_mmacs;
+        assert!(rel < 0.18, "{cus} CUs: {got:.0} vs paper {paper_mmacs} ({rel:.2} rel)");
+    }
+    // Fig. 6 analog: the 1024-bit design lands near 158 MMAC/s
+    let got = gemm_sim::peak(&DesignPoint::gemm_1024(1), 32).mmacs / 1e6;
+    assert!((got - 158.0).abs() / 158.0 < 0.35, "1024-bit peak: {got:.0}");
+}
+
+#[test]
+fn fig3_crossover_shape() {
+    // Fig. 5's roofline shape: paper tiles (32x32) are compute-bound,
+    // skinny tiles (4x4) flip memory-bound; throughput grows with N
+    let d = DesignPoint::gemm_512(8);
+    let wide = gemm_sim::simulate(&d, 8192, 32, 32);
+    assert!(wide.compute_s > wide.mem_s, "32x32 tiles must be compute-bound");
+    let skinny = gemm_sim::simulate(&d, 8192, 4, 4);
+    assert!(skinny.mem_s > skinny.compute_s, "4x4 tiles must be memory-bound");
+    let small = gemm_sim::simulate(&d, 512, 32, 32);
+    assert!(wide.mmacs > small.mmacs, "fixed costs must amortize with N");
+}
+
+#[test]
+fn tile_cost_anchors_hand_derived() {
+    // The 512-bit walk-through from sim_backend.rs's docs: 13634 CLBs
+    // keeps II=1, so a 32x32x32 K-step is 32768 MACs + 400 fill cycles
+    assert_eq!(resources::cu_clbs(&DesignPoint::gemm_512(1)), 13_634);
+    let c = tile_cost(&builtin_gemm_meta(512));
+    assert_eq!(c.macs, 32_768);
+    assert_eq!(c.cycles, 33_168);
+    assert_eq!(c.dram_bytes, 3 * 32 * 32 * 64);
+    assert!(c.compute_ps > c.mem_ps, "paper tile is compute-bound per CU too");
+}
+
+// -- the regression gate itself -----------------------------------------
+
+#[test]
+fn model_golden_file_matches_the_live_model() {
+    // the same check `repro modelgold --check` (CI analysis job) runs,
+    // as a cargo test so a model edit cannot land without regenerating
+    // the goldens — see docs/ARCHITECTURE.md for the regeneration recipe
+    let text = std::fs::read_to_string(concat!(env!("CARGO_MANIFEST_DIR"), "/model_golden.json"))
+        .expect("rust/model_golden.json is committed");
+    let pinned = parse_golden(&text);
+    let live = model_golden_values();
+    assert_eq!(pinned.len(), live.len(), "golden key count");
+    for (key, got) in &live {
+        let want = pinned
+            .get(key)
+            .unwrap_or_else(|| panic!("golden file is missing {key}: regenerate it"));
+        assert!(
+            !gate_trips(*want, *got),
+            "{key} drifted: pinned {want}, model computes {got} — \
+             regenerate with `repro modelgold --write` or revert the model change"
+        );
+    }
+}
+
+#[test]
+fn perturbed_pipeline_depth_trips_the_gate() {
+    // Falsifiability: if PIPELINE_DEPTH were edited by ±20%, the gate
+    // comparator must flag the drift on the cycle-derived keys.  The
+    // perturbed value is reconstructed from the pinned cycles (cycles =
+    // macs * II + depth, II = 1 at 512 bits), so this exercises exactly
+    // the arithmetic a constant edit would change.
+    let c = tile_cost(&builtin_gemm_meta(512));
+    let base_cycles = c.cycles as f64;
+    for scale in [0.8f64, 1.2] {
+        let perturbed = base_cycles - gemm_sim::PIPELINE_DEPTH + gemm_sim::PIPELINE_DEPTH * scale;
+        assert!(
+            gate_trips(base_cycles, perturbed),
+            "a {scale}x PIPELINE_DEPTH must move tile512_cycles past the 1e-6 gate: \
+             {base_cycles} -> {perturbed}"
+        );
+        // and the drift is orders of magnitude above the tolerance, so
+        // float noise can never mask it
+        let rel = (perturbed - base_cycles).abs() / base_cycles;
+        assert!(rel > 1e-3, "perturbation headroom: {rel}");
+    }
+    // an unperturbed recomputation, by contrast, sits exactly on the pin
+    let again = tile_cost(&builtin_gemm_meta(512));
+    assert!(!gate_trips(base_cycles, again.cycles as f64));
+}

@@ -1,0 +1,175 @@
+//! Differential tests for the simulated backend (`APFP_BACKEND=sim`):
+//! the same device stack, the same launches, on `SimBackend` vs
+//! `NativeBackend` — outputs must be bit-identical (sim delegates tile
+//! math to the very same arena kernels) while the hardware-model ledger
+//! lights up on sim only.
+//!
+//! The fault-injection half pins the model-counter conservation invariant
+//! (`docs/INVARIANTS.md`): a transient tile failure, a worker death with
+//! respawn, and a failed launch must leave the ledger exactly where a
+//! fault-free run of the same workload puts it — retried attempts are
+//! never double-counted, failed launches contribute nothing.
+
+use std::time::Duration;
+
+use apfp::baseline;
+use apfp::config::{ApfpConfig, FaultSpec, RetryPolicy};
+use apfp::coordinator::{Device, Matrix, ModelMetricsSnapshot};
+use apfp::runtime::BackendKind;
+
+fn device(backend: BackendKind, cus: usize, faults: FaultSpec) -> Device {
+    let cfg = ApfpConfig {
+        backend,
+        compute_units: cus,
+        tile_n: 4,
+        tile_m: 4,
+        tile_k: 4,
+        faults,
+        retry: RetryPolicy { backoff_ms: 0, ..Default::default() },
+        reply_timeout: Duration::from_millis(25),
+        ..Default::default()
+    };
+    // guaranteed-absent artifact dir: both backends serve the builtin
+    // manifest, so the differential runs on any checkout
+    let dir = std::env::temp_dir().join("apfp_sim_backend_no_artifacts/none");
+    Device::new(cfg, &dir).expect("builtin-manifest device must open on a clean checkout")
+}
+
+/// Run `C += A @ B` launches on a fresh device and return the output and
+/// the model-ledger snapshot.
+fn run_gemm(dev: &Device, n: usize, k: usize, m: usize, seed: u64) -> (Matrix, ModelMetricsSnapshot) {
+    let a = Matrix::random(n, k, 448, seed, 30);
+    let b = Matrix::random(k, m, 448, seed + 1, 30);
+    let c = Matrix::random(n, m, 448, seed + 2, 30);
+    let (out, _) = dev.gemm(&a, &b, &c).expect("gemm");
+    (out, dev.model_metrics())
+}
+
+#[test]
+fn sim_is_bit_identical_to_native_across_shapes() {
+    // non-divisible edges, multi-CU bands, single-row degenerates
+    for (i, &(n, k, m, cus)) in [(8, 8, 8, 1), (7, 5, 9, 2), (1, 6, 11, 2), (12, 3, 4, 3)]
+        .iter()
+        .enumerate()
+    {
+        let seed = 100 + 10 * i as u64;
+        let sim = device(BackendKind::Sim, cus, FaultSpec::default());
+        let native = device(BackendKind::Native, cus, FaultSpec::default());
+        let (sim_out, sim_m) = run_gemm(&sim, n, k, m, seed);
+        let (native_out, native_m) = run_gemm(&native, n, k, m, seed);
+
+        assert_eq!(sim_out, native_out, "{n}x{k}x{m} on {cus} CUs");
+        // and both equal the serial softfloat baseline
+        let a = Matrix::random(n, k, 448, seed, 30);
+        let b = Matrix::random(k, m, 448, seed + 1, 30);
+        let c = Matrix::random(n, m, 448, seed + 2, 30);
+        assert_eq!(sim_out, baseline::gemm_serial(&a, &b, &c));
+
+        // the ledger is the only observable difference between backends
+        assert!(sim_m.is_live(), "sim ledger must record the launch");
+        assert!(sim_m.cycles > 0 && sim_m.dram_bytes > 0 && sim_m.energy_pj > 0);
+        assert!(sim_m.total_s() > 0.0 && sim_m.efficiency() > 0.0 && sim_m.efficiency() <= 1.0);
+        assert!(!native_m.is_live(), "native ledger must stay all-zero");
+    }
+}
+
+#[test]
+fn sim_stream_ops_match_softfloat() {
+    let dev = device(BackendKind::Sim, 2, FaultSpec::default());
+    let a = Matrix::random(1, 40, 448, 70, 60);
+    let b = Matrix::random(1, 40, 448, 71, 60);
+    let c = Matrix::random(1, 40, 448, 72, 60);
+    let got = dev.mul_stream(a.values(), b.values()).expect("mul stream");
+    for (i, g) in got.iter().enumerate() {
+        assert_eq!(*g, a.values()[i].mul(&b.values()[i]), "mul lane {i}");
+    }
+    let got = dev.add_stream(a.values(), b.values()).expect("add stream");
+    for (i, g) in got.iter().enumerate() {
+        assert_eq!(*g, a.values()[i].add(&b.values()[i]), "add lane {i}");
+    }
+    let got = dev.mac_stream(c.values(), a.values(), b.values()).expect("mac stream");
+    for (i, g) in got.iter().enumerate() {
+        assert_eq!(*g, c.values()[i].add(&a.values()[i].mul(&b.values()[i])), "mac lane {i}");
+    }
+    // stream operators are not part of the GEMM dataflow model: they
+    // leave the ledger untouched (documented in sim_backend.rs)
+    assert!(!dev.model_metrics().is_live());
+}
+
+/// Strip the volatile dimensions (none — every ledger field is modeled,
+/// not measured) so two snapshots can be compared whole.
+fn ledger_counts(m: &ModelMetricsSnapshot) -> (u64, u64, u64, u64, u64, u64, u64, u64) {
+    (m.tiles, m.launches, m.cycles, m.macs, m.dram_bytes, m.compute_ps, m.mem_ps, m.energy_pj)
+}
+
+#[test]
+fn transient_tile_failure_is_not_double_counted() {
+    let (n, k, m) = (8, 8, 8); // tile origins (0|4, 0|4) on 4x4x4 tiles
+    let clean = device(BackendKind::Sim, 2, FaultSpec::default());
+    let (want_out, want_m) = run_gemm(&clean, n, k, m, 500);
+
+    // first delivery of tile (0,4) fails, the retry lands
+    let faults =
+        FaultSpec { fail_tile: Some((0, 4)), fail_attempts: Some(1), ..Default::default() };
+    let faulted = device(BackendKind::Sim, 2, faults);
+    let (got_out, got_m) = run_gemm(&faulted, n, k, m, 500);
+
+    assert_eq!(got_out, want_out, "recovered launch must stay bit-identical");
+    assert!(faulted.metrics().retries >= 1, "the fault must actually have tripped");
+    assert_eq!(
+        ledger_counts(&got_m),
+        ledger_counts(&want_m),
+        "a retried tile is modeled exactly once: failed attempts accrue nothing"
+    );
+}
+
+#[test]
+fn worker_death_and_respawn_keep_the_ledger_conserved() {
+    let (n, k, m) = (8, 8, 8);
+    let clean = device(BackendKind::Sim, 2, FaultSpec::default());
+    let (want_out, want_m) = run_gemm(&clean, n, k, m, 600);
+
+    // first delivery of tile (4,0) kills its worker; the supervisor
+    // respawns the CU and the redelivered tile survives
+    let faults =
+        FaultSpec { die_on_tile: Some((4, 0)), die_attempts: Some(1), ..Default::default() };
+    let faulted = device(BackendKind::Sim, 2, faults);
+    let (got_out, got_m) = run_gemm(&faulted, n, k, m, 600);
+
+    assert_eq!(got_out, want_out, "respawned CU must stay bit-identical");
+    assert!(faulted.metrics().respawns >= 1, "the death must actually have happened");
+    assert_eq!(
+        ledger_counts(&got_m),
+        ledger_counts(&want_m),
+        "a tile replayed through a respawn is modeled exactly once"
+    );
+}
+
+#[test]
+fn failed_launch_contributes_nothing_to_the_ledger() {
+    // permanent failure + fail-fast: the launch errors, and even though
+    // the other tiles of the launch computed successfully (and carried
+    // model data home), retirement never happens — the ledger must stay
+    // dead.  A follow-up healthy launch then matches a clean device.
+    let faults = FaultSpec { fail_tile: Some((0, 4)), ..Default::default() };
+    let cfg_faulted = ApfpConfig {
+        backend: BackendKind::Sim,
+        compute_units: 2,
+        tile_n: 4,
+        tile_m: 4,
+        tile_k: 4,
+        faults,
+        retry: RetryPolicy { retry_limit: 0, backoff_ms: 0, ..Default::default() },
+        ..Default::default()
+    };
+    let dir = std::env::temp_dir().join("apfp_sim_backend_no_artifacts/none");
+    let dev = Device::new(cfg_faulted, &dir).expect("sim device");
+
+    let a = Matrix::random(8, 8, 448, 700, 30);
+    let b = Matrix::random(8, 8, 448, 701, 30);
+    let c = Matrix::random(8, 8, 448, 702, 30);
+    assert!(dev.gemm(&a, &b, &c).is_err(), "permanent tile fault must fail the launch");
+    let m = dev.model_metrics();
+    assert!(!m.is_live(), "failed launches accrue nothing: {m:?}");
+    assert_eq!(m.launches, 0);
+}

@@ -29,14 +29,21 @@ use apfp::coordinator::scheduler::Partition;
 use apfp::coordinator::{Device, Matrix, StreamError};
 use apfp::runtime::BackendKind;
 
-/// A native-backend device with the given fault injection and retry
-/// policy.  Forced native: fault handling is backend-agnostic and must be
-/// testable on any checkout, artifacts or not.  The reply-probe interval
-/// is dropped to 25ms so death detection is fast — these tests measure
-/// semantics, not wall time.
+/// A builtin-manifest device with the given fault injection and retry
+/// policy.  Honors `APFP_BACKEND` for native and sim (fault handling is
+/// backend-agnostic and must be testable on any checkout, artifacts or
+/// not — and under sim these tests additionally pin the model-ledger
+/// conservation invariant across retries); xla cannot run artifact-less,
+/// so it falls back to native.  The reply-probe interval is dropped to
+/// 25ms so death detection is fast — these tests measure semantics, not
+/// wall time.
 fn healing_device(cus: usize, faults: FaultSpec, retry: RetryPolicy) -> Device {
+    let backend = match BackendKind::from_env() {
+        BackendKind::Xla => BackendKind::Native,
+        b => b,
+    };
     let cfg = ApfpConfig {
-        backend: BackendKind::Native,
+        backend,
         compute_units: cus,
         faults,
         retry,
@@ -44,7 +51,7 @@ fn healing_device(cus: usize, faults: FaultSpec, retry: RetryPolicy) -> Device {
         ..Default::default()
     };
     let dir = std::env::temp_dir().join("apfp_stream_faults_no_artifacts/none");
-    Device::new(cfg, &dir).expect("native device must open on a clean checkout")
+    Device::new(cfg, &dir).expect("builtin-manifest device must open on a clean checkout")
 }
 
 /// [`healing_device`] with the default retry budget and no backoff sleep.

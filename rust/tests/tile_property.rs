@@ -1,12 +1,14 @@
 //! Property test for the config-driven tile geometry: randomized
 //! `tile_n`/`tile_m`/`tile_k` (including non-divisible edge shapes, tiles
 //! larger than the matrix, and single-row/column degenerates) driven
-//! through the scheduler and the native backend must stay bit-identical to
-//! `baseline::gemm_serial` — the same acceptance criterion the paper
-//! applies to its FPGA against MPFR, here applied to every legal tiling.
+//! through the scheduler and the native (or sim — the geometry is
+//! backend-agnostic and `APFP_BACKEND=sim` runs the same suite) backend
+//! must stay bit-identical to `baseline::gemm_serial` — the same
+//! acceptance criterion the paper applies to its FPGA against MPFR, here
+//! applied to every legal tiling.
 //!
 //! On `APFP_BACKEND=xla` without artifacts these tests skip (the builtin
-//! manifest whose geometry is under test is a native-backend feature).
+//! manifest whose geometry is under test needs no artifact files).
 
 use apfp::baseline;
 use apfp::config::ApfpConfig;
@@ -14,16 +16,16 @@ use apfp::coordinator::{Device, Matrix};
 use apfp::runtime::BackendKind;
 use apfp::testkit::Rng;
 
-fn native_device(cfg: ApfpConfig) -> Option<Device> {
+fn builtin_device(cfg: ApfpConfig) -> Option<Device> {
     // A guaranteed-absent artifact dir: the property is about the *builtin*
     // manifest's geometry, so an on-disk artifacts/manifest.txt (whose
     // compiled geometry deliberately wins over the config) must not leak in.
     let dir = std::env::temp_dir().join("apfp_tile_property_no_artifacts/none");
-    if cfg.backend != BackendKind::Native {
+    if !matches!(cfg.backend, BackendKind::Native | BackendKind::Sim) {
         eprintln!("skipped: tile-geometry property is a builtin-manifest feature");
         return None;
     }
-    Some(Device::new(cfg, &dir).expect("native device must open on a clean checkout"))
+    Some(Device::new(cfg, &dir).expect("builtin-manifest device must open on a clean checkout"))
 }
 
 #[test]
@@ -38,7 +40,7 @@ fn randomized_tile_shapes_stay_bit_exact() {
         let k = rng.range_i64(1, 14) as usize;
         let m = rng.range_i64(1, 19) as usize;
         let cfg = ApfpConfig { compute_units: cus, tile_n, tile_m, tile_k, ..Default::default() };
-        let Some(dev) = native_device(cfg) else { return };
+        let Some(dev) = builtin_device(cfg) else { return };
 
         let a = Matrix::random(n, k, 448, 1000 + case, 40);
         let b = Matrix::random(k, m, 448, 2000 + case, 40);
@@ -73,7 +75,7 @@ fn randomized_tiles_through_a_chained_stream() {
         let m = rng.range_i64(1, 13) as usize;
         let p = rng.range_i64(1, 10) as usize;
         let cfg = ApfpConfig { compute_units: cus, tile_n, tile_m, tile_k, ..Default::default() };
-        let Some(dev) = native_device(cfg) else { return };
+        let Some(dev) = builtin_device(cfg) else { return };
 
         let a = Matrix::random(n, k, 448, 4000 + case, 30);
         let b = Matrix::random(k, m, 448, 5000 + case, 30);

@@ -14,8 +14,11 @@
 //!   and every annotated function must be exercised (by name) by
 //!   `tests/alloc_free.rs` or be reachable from one that is.
 //! * `panic` / `index` — no `unwrap`/`expect`/`panic!`-family macros and
-//!   no unguarded slice subscripts in `runtime/`, `coordinator/` and
-//!   `config.rs` outside `#[cfg(test)]`.
+//!   no unguarded slice subscripts in `runtime/` (the simulated backend's
+//!   model accounting in `runtime/sim_backend.rs` included — the
+//!   `panic_bad` fixture pins that path), `coordinator/` (where the sim
+//!   ledger `coordinator/model_metrics.rs` lives) and `config.rs`
+//!   outside `#[cfg(test)]`.
 //! * `hazard` — mechanical protocol shape of `coordinator/stream.rs` /
 //!   `worker.rs`: every `TileResult` literal carries `c_buf`, reply
 //!   receives are `recv_timeout`, and no unbounded/shared

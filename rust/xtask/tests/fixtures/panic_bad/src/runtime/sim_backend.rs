@@ -1,0 +1,7 @@
+pub fn modeled(costs: &[u64]) -> u64 {
+    let last = costs.last().unwrap();
+    if *last == 0 {
+        panic!("empty model ledger");
+    }
+    *last
+}
