@@ -821,6 +821,43 @@ def scan_reply_literals(fl: FileLint, token: str, findings: list) -> None:
         i = e
 
 
+def scan_width_agreement(fl: FileLint, findings: list) -> None:
+    """The mixed-width launch path must validate widths before touching
+    any hazard or dispatch state: inside ``fn enqueue_gemm_at``, the typed
+    ``WidthMismatch`` rejection has to appear before the first
+    hazard-state token (``writes_our_set``, ``retire_n``,
+    ``build_b_cache``).  A launch rejected only after the hazard drain
+    would have retired other launches — mutated stream state — for a
+    launch that never runs."""
+    fn_token = "fn enqueue_gemm_at"
+    fn_ends = ("\nfn ", "\npub fn ", "\n    fn ", "\n    pub fn ")
+    hazard_tokens = ("writes_our_set", "retire_n", "build_b_cache")
+    masked = fl.masked
+    i = 0
+    while True:
+        at = masked.find(fn_token, i)
+        if at < 0:
+            break
+        i = at + len(fn_token)
+        lineno = fl.line_of(at)
+        if fl.in_test(lineno):
+            continue
+        ends = [e for e in (masked.find(t, i) for t in fn_ends) if e >= 0]
+        end = min(ends) if ends else len(masked)
+        body = masked[i:end]
+        check = body.find("WidthMismatch")
+        hazards = [h for h in (body.find(t) for t in hazard_tokens) if h >= 0]
+        bad = check < 0 or bool(hazards and min(hazards) < check)
+        if bad:
+            allowed, reason = allow_for(fl, lineno, RULE_HAZARD)
+            findings.append(Finding(
+                RULE_HAZARD, fl.rel, lineno,
+                "`enqueue_gemm_at` must reject mismatched operand widths "
+                "(`WidthMismatch`) before the hazard scan touches stream state",
+                allowed, reason))
+        i = end
+
+
 def run_hazard_rule(fl: FileLint, findings: list) -> None:
     # every TileResult reply and Job::GemmTile job must carry the staging
     # buffer and the delivery-attempt counter (ISSUE 7's retry arm)
@@ -828,6 +865,9 @@ def run_hazard_rule(fl: FileLint, findings: list) -> None:
     scan_reply_literals(fl, "GemmTile", findings)
     if not fl.rel.endswith("stream.rs"):
         return
+    # mixed-width launches: the width-agreement check precedes the hazard
+    # scan (ISSUE 10)
+    scan_width_agreement(fl, findings)
 
     # leader-side receives must be recv_timeout (hang-proof drains)
     for idx, line in enumerate(fl.masked_lines):

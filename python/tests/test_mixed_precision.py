@@ -1,0 +1,328 @@
+"""Python port of the mixed-precision stream semantics (ISSUE 10).
+
+``rust/src/coordinator/stream.rs`` hosts kernels at several mantissa
+widths on one device and lets every launch pick one
+(``enqueue_gemm_at``); ``rust/tests/mixed_precision.rs`` drives
+randomized schedules of interleaved dependent and independent launches
+across those widths.  This module re-states the width layer as an
+executable model on top of the stream-protocol model
+(``test_stream_protocol.StreamModel``) — same structure, same names
+where it matters (``enqueue_at`` / ``convert`` / ``alloc_at``) — and
+checks the same theorems on seeded random schedules:
+
+* **per-width bit identity** — a mixed-width schedule, however the
+  faults and worker interleavings land, produces exactly the serial
+  reference at every width;
+* **typed width errors, before state** — a launch whose operand widths
+  disagree raises ``WidthMismatch`` and an unloaded width raises
+  ``NoArtifact`` (naming the loaded set), in both cases before the
+  hazard scan or any dispatch state is touched, and the stream stays
+  fully usable;
+* **conversion semantics** — ``convert`` drains the writers of its
+  source buffer, then re-encodes; narrow -> wide -> narrow is the
+  identity on the narrow value;
+* **overlap** — independent launches at *different* widths pipeline on
+  the one device (``inflight_max >= 2``);
+* **per-width ledger conservation** — every retired launch's tiles and
+  launches land in exactly one width's ledger row, rows sum to the
+  device totals, and failed launches contribute nothing.
+
+The width encoding mirrors the mantissa truncation of
+``softfloat::ApFloat::to_prec``: a 128-bit buffer keeps 16 value bits
+(both 512- and 1024-bit buffers hold the model's full 32-bit values), so
+widening is exact and narrowing is lossy-but-idempotent, exactly the
+RNDZ behaviour the Rust unit tests pin.
+"""
+
+from __future__ import annotations
+
+import random
+
+import pytest
+
+from test_sim_backend import tile_cost
+from test_stream_protocol import (
+    TILES,
+    NoSurvivors,  # noqa: F401  (re-exported for symmetry with the base model)
+    Poisoned,
+    StreamModel,
+    tile_value,
+    writeback_value,
+)
+
+DEFAULT_WIDTHS = [128, 512, 1024]  # runtime::manifest::DEFAULT_WIDTHS
+
+
+def encode(value: int, bits: int) -> int:
+    """Re-encode a model value at a packed width: the 128-bit format keeps
+    16 of the model's 32 value bits (RNDZ truncation), the wider formats
+    keep all of them.  ``encode(encode(v, 128), 128) == encode(v, 128)``
+    — narrowing is idempotent, like ``to_prec``."""
+    return value & ((1 << (bits // 8)) - 1)
+
+
+class WidthMismatch(Exception):
+    """stream.rs ``StreamError::WidthMismatch``: operand widths vs launch width."""
+
+    def __init__(self, launch: int, bits: int, a: int, b: int, c: int):
+        super().__init__(f"launch {launch}: operand widths {a}/{b}/{c} bits "
+                         f"do not all match the {bits}-bit launch width")
+        self.launch, self.bits = launch, bits
+        self.a, self.b, self.c = a, b, c
+
+
+class NoArtifact(Exception):
+    """manifest.rs ``ManifestError::NoArtifact``: an unloaded launch width."""
+
+    def __init__(self, bits: int, loaded: list):
+        super().__init__(f"no gemm artifact at {bits} bits; loaded: {loaded}")
+        self.bits, self.loaded = bits, loaded
+
+
+class MixedStreamModel(StreamModel):
+    """Width-aware leader state: a width table cut from the loaded set at
+    construction (stream.rs ``WidthSlot``), per-buffer widths, typed
+    width checks ahead of the hazard scan, and a per-width ledger fed at
+    retirement (``ModelMetrics::add_tile_at`` / ``add_launch_at``)."""
+
+    def __init__(self, cus: int, widths=None, faults=None, **kw):
+        super().__init__(cus=cus, n_bufs=0, faults=faults or {}, **kw)
+        self.widths = list(widths or DEFAULT_WIDTHS)
+        self.default_bits = 512 if 512 in self.widths else self.widths[0]
+        self.buf_bits = []
+        self.launch_info = {}  # launch id -> (bits, c)
+        self.ledger = {}  # bits -> {"tiles": n, "launches": n}
+        self.total_tiles = 0
+        self.total_launches = 0
+
+    # -- buffers ----------------------------------------------------------
+    def alloc_at(self, bits: int, value: int = 0) -> int:
+        self.bufs.append(encode(value, bits))
+        self.buf_bits.append(bits)
+        return len(self.bufs) - 1
+
+    def convert(self, src: int, bits: int) -> int:
+        """stream.rs ``DeviceStream::convert``: drain through the last
+        in-flight writer of the source, then re-encode into a fresh
+        buffer at the new width."""
+        self.check_live()
+        last = None
+        for i, l in enumerate(self.inflight):
+            if l.c == src:
+                last = i
+        if last is not None:
+            for _ in range(last + 1):
+                self.retire_one()
+        return self.alloc_at(bits, self.bufs[src])
+
+    # -- launches ---------------------------------------------------------
+    def enqueue_at(self, bits: int, a: int, b: int, c: int):
+        """stream.rs ``enqueue_gemm_at``: width-table lookup, then the
+        width-agreement check, both BEFORE the hazard scan — a rejected
+        launch must touch no dispatch state (the apfp-lint width-agreement
+        shape rule pins that ordering in the Rust source)."""
+        self.check_live()
+        if bits not in self.widths:
+            raise NoArtifact(bits, list(self.widths))
+        wa, wb, wc = (self.buf_bits[i] for i in (a, b, c))
+        if not (wa == wb == wc == bits):
+            raise WidthMismatch(self.next_launch, bits, wa, wb, wc)
+        lid = self.next_launch
+        super().enqueue(a, b, c)  # hazard scan + dispatch, unchanged
+        self.launch_info[lid] = (bits, c)
+
+    def enqueue(self, a: int, b: int, c: int):
+        # the width-oblivious API launches at the device default
+        self.enqueue_at(self.default_bits, a, b, c)
+
+    def retire_one(self):
+        super().retire_one()
+        lid = self.retired_order[-1]
+        bits, c = self.launch_info[lid]
+        if self.errors and self.errors[-1][:2] == ("LaunchFailed", lid):
+            return  # failed launches contribute nothing to any ledger
+        # the writeback lands at C's width (the lossy step for 128-bit C)
+        self.bufs[c] = encode(self.bufs[c], self.buf_bits[c])
+        row = self.ledger.setdefault(bits, {"tiles": 0, "launches": 0})
+        row["tiles"] += TILES
+        row["launches"] += 1
+        self.total_tiles += TILES
+        self.total_launches += 1
+
+
+def serial_mixed_reference(ops: list) -> list:
+    """The fault-free serial semantics of a mixed-width op list:
+    ``("alloc", bits, value)``, ``("gemm", bits, a, b, c)`` and
+    ``("convert", src, bits)`` replayed in order."""
+    bufs, bits_of, lid = [], [], 0
+    for op in ops:
+        if op[0] == "alloc":
+            bufs.append(encode(op[2], op[1]))
+            bits_of.append(op[1])
+        elif op[0] == "convert":
+            bufs.append(encode(bufs[op[1]], op[2]))
+            bits_of.append(op[2])
+        else:
+            _, _bits, a, b, c = op
+            snap = (bufs[a], bufs[b], bufs[c])
+            vals = tuple(tile_value(lid, o, snap) for o in range(TILES))
+            bufs[c] = encode(writeback_value(bufs[c], vals), bits_of[c])
+            lid += 1
+    return bufs
+
+
+def replay(s: MixedStreamModel, ops: list):
+    """Apply an op list to the model (allocs included, so buffer ids line
+    up with the serial reference)."""
+    for op in ops:
+        if op[0] == "alloc":
+            s.alloc_at(op[1], op[2])
+        elif op[0] == "convert":
+            s.convert(op[1], op[2])
+        else:
+            s.enqueue_at(op[1], op[2], op[3], op[4])
+
+
+def mixed_schedule(rng: random.Random, widths: list, rounds: int) -> list:
+    """The rust/tests/mixed_precision.rs schedule shape: per width a lane
+    of A, B and two C buffers; each round two independent launches per
+    width (disjoint C — free to pipeline, across widths too) and, half
+    the time, a dependent chain step on a random width."""
+    ops, lanes = [], []
+    for bits in widths:
+        ids = []
+        for _ in range(4):  # A, B, C1, C2
+            ops.append(("alloc", bits, rng.randrange(1 << 32)))
+            ids.append(len(ops) - 1)
+        lanes.append((bits, ids))
+    for _ in range(rounds):
+        for bits, (a, b, c1, c2) in lanes:
+            ops.append(("gemm", bits, a, b, c1))
+            ops.append(("gemm", bits, a, b, c2))
+        if rng.random() < 0.5:
+            bits, (a, b, c1, _c2) = lanes[rng.randrange(len(lanes))]
+            ops.append(("gemm", bits, c1, b, c1))
+    return ops
+
+
+# ---------------------------------------------------------------------------
+# the rust/tests/mixed_precision.rs mirrors
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [11, 23, 47])
+def test_randomized_mixed_width_schedules_are_bit_identical_per_width(seed):
+    rng = random.Random(seed)
+    ops = mixed_schedule(rng, DEFAULT_WIDTHS, rounds=4)
+    s = MixedStreamModel(cus=2, rng=rng)
+    replay(s, ops)
+    s.wait()
+    assert s.errors == []
+    assert s.bufs == serial_mixed_reference(ops), (
+        f"seed {seed}: mixed-width run diverged from the serial reference")
+    # independent launches at different widths must actually overlap
+    assert s.metrics["inflight_max"] >= 2
+    assert (s.metrics["retries"], s.metrics["respawns"],
+            s.metrics["quarantined_cus"]) == (0, 0, 0)
+    s.check_conservation()
+
+
+def test_transient_faults_heal_inside_mixed_width_schedules():
+    rng = random.Random(61)
+    ops = mixed_schedule(rng, DEFAULT_WIDTHS, rounds=3)
+    # tile 0 exists in every launch, whatever the width: fail its first
+    # delivery every time, so the retry rung runs while widths interleave
+    n_gemms = sum(1 for op in ops if op[0] == "gemm")
+    faults = {(lid, 0): ("fail", 1) for lid in range(n_gemms)}
+    s = MixedStreamModel(cus=2, faults=faults, rng=rng)
+    replay(s, ops)
+    s.wait()
+    assert s.errors == [], "budgeted faults must heal silently"
+    assert s.bufs == serial_mixed_reference(ops)
+    assert s.metrics["retries"] == n_gemms, "every launch retried tile 0 once"
+    assert s.metrics["respawns"] == 0, "tile errors never respawn workers"
+    s.check_conservation()
+
+
+def test_width_mismatch_and_unloaded_width_stay_typed_under_load():
+    s = MixedStreamModel(cus=1, rng=random.Random(5))
+    ha = s.alloc_at(512, 7)
+    hb = s.alloc_at(512, 9)
+    hc = s.alloc_at(128, 0)
+    with pytest.raises(WidthMismatch) as e:
+        s.enqueue_at(512, ha, hb, hc)
+    assert (e.value.bits, e.value.a, e.value.b, e.value.c) == (512, 512, 512, 128)
+    with pytest.raises(NoArtifact) as e:
+        s.enqueue_at(2048, ha, hb, hc)
+    assert (e.value.bits, e.value.loaded) == (2048, [128, 512, 1024])
+    # neither error touched dispatch state or poisoned the stream
+    assert not s.poisoned and not s.inflight and s.next_launch == 0
+    # the stream stays fully usable: convert the stray C and launch at
+    # both the default and the narrow width
+    hc_ok = s.convert(hc, 512)
+    s.enqueue_at(512, ha, hb, hc_ok)
+    la, lb = s.convert(ha, 128), s.convert(hb, 128)
+    s.enqueue_at(128, la, lb, hc)
+    s.wait()
+    assert s.errors == []
+    assert sorted(s.ledger) == [128, 512]
+
+
+def test_convert_round_trips_and_feeds_the_other_width():
+    # narrow -> wide -> narrow is the identity on the narrow value, and a
+    # converted buffer launches at its new width bit-identically to the
+    # serial reference at that width (stream.rs unit-test mirror)
+    rng = random.Random(12)
+    ops = [("alloc", 512, rng.randrange(1 << 32)),
+           ("alloc", 512, rng.randrange(1 << 32)),
+           ("convert", 0, 128), ("convert", 1, 128),  # ids 2, 3
+           ("convert", 2, 512),                       # id 4: wide again
+           ("convert", 4, 128),                       # id 5: narrow again
+           ("alloc", 128, 0),                         # id 6: the 128-bit C
+           ("gemm", 128, 2, 3, 6)]
+    s = MixedStreamModel(cus=2, rng=rng)
+    replay(s, ops)
+    s.wait()
+    want = serial_mixed_reference(ops)
+    assert s.bufs == want
+    assert s.bufs[5] == s.bufs[2], "narrow -> wide -> narrow is the identity"
+    assert s.buf_bits[6] == 128 and s.bufs[6] == want[6]
+
+
+def test_per_width_ledger_conserves_the_device_totals():
+    # tests/sim_backend.rs mirror: every retired launch lands in exactly
+    # one width's row, rows sum to the totals, failed launches nothing
+    rng = random.Random(800)
+    ops = mixed_schedule(rng, DEFAULT_WIDTHS, rounds=2)
+    n_gemms = sum(1 for op in ops if op[0] == "gemm")
+    faults = {(n_gemms - 1, 0): ("fail", None)}  # the last launch fails
+    s = MixedStreamModel(cus=2, faults=faults, retry_limit=1, rng=rng)
+    replay(s, ops)
+    s.wait()
+    assert len(s.errors) == 1 and s.errors[0][0] == "LaunchFailed"
+    assert sorted(s.ledger) == DEFAULT_WIDTHS, "every width owns a ledger row"
+    assert sum(r["tiles"] for r in s.ledger.values()) == s.total_tiles
+    assert sum(r["launches"] for r in s.ledger.values()) == s.total_launches
+    assert s.total_launches == n_gemms - 1, "the failed launch accrued nothing"
+    # the hardware model behind the rows: same tile geometry, wider words
+    # -> more modeled energy and traffic per tile (why the refinement
+    # loop mixes widths at all); cycles alone can tie below the II knee
+    c128, c512, c1024 = (tile_cost(b, 32, 32, 32) for b in DEFAULT_WIDTHS)
+    assert c1024["energy_pj"] > c512["energy_pj"] > c128["energy_pj"]
+    assert c1024["dram_bytes"] > c512["dram_bytes"] > c128["dram_bytes"]
+    assert c512["cycles"] == c128["cycles"], "below the II knee cycles tie"
+
+
+def test_poisoned_streams_reject_width_calls_too():
+    faults = {(0, o): ("die", None) for o in range(TILES)}
+    s = MixedStreamModel(cus=1, faults=faults, respawn_limit=0,
+                         rng=random.Random(9))
+    ha = s.alloc_at(512, 3)
+    with pytest.raises(NoSurvivors):
+        s.enqueue_at(512, ha, ha, ha)
+        s.wait()
+    assert s.poisoned
+    with pytest.raises(Poisoned):
+        s.enqueue_at(128, ha, ha, ha)
+    with pytest.raises(Poisoned):
+        s.convert(ha, 128)

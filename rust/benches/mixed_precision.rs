@@ -1,0 +1,165 @@
+//! Mixed-precision streams (see BENCH.md): one device hosting kernels at
+//! two mantissa widths, with interleaved independent launches at 128 and
+//! 512 bits flowing through the same worker queues.
+//!
+//! The structural claims are asserted, not just timed:
+//!
+//! * interleaved launches at *different* widths pipeline — the mixed
+//!   round must reach `inflight_max >= 2` on a fresh device;
+//! * the model ledger attributes every tile and launch to the width that
+//!   executed it, and the per-width sums equal the device totals (the
+//!   conservation invariant, checked here on a sim-backend replay of the
+//!   exact same schedule).
+//!
+//! The timed comparison puts a number on the knob: the same launch count
+//! at 128 bits, at 512 bits, and interleaved — the low width's cheaper
+//! MACs are the whole reason a refinement loop wants to mix widths in
+//! one stream (`examples/hilbert_refinement.rs`).
+
+use apfp::bench_util::{bench, fmt_duration, Table};
+use apfp::config::ApfpConfig;
+use apfp::coordinator::{Device, Matrix};
+use apfp::runtime::BackendKind;
+
+fn main() {
+    let cus = std::thread::available_parallelism().map(|v| v.get().min(4)).unwrap_or(2);
+    let cfg = ApfpConfig {
+        compute_units: cus,
+        tile_n: 8,
+        tile_m: 8,
+        tile_k: 8,
+        widths: vec![128, 512],
+        ..Default::default()
+    };
+    if cfg.backend != BackendKind::Native {
+        eprintln!("mixed_precision: needs the native backend (APFP_BACKEND=native)");
+        return;
+    }
+    let dir = apfp::runtime::default_artifact_dir();
+
+    let n = 24usize; // matrix side
+    let chain = 8usize; // launches per round (half per width when mixed)
+    let a = Matrix::random(n, n, 448, 1, 25);
+    let b = Matrix::random(n, n, 448, 2, 25);
+    let c0 = Matrix::zeros(n, n, 448);
+    let (a_lo, b_lo, c0_lo) = (a.to_prec(64), b.to_prec(64), c0.to_prec(64));
+
+    println!(
+        "== mixed_precision: {chain} {n}x{n} GEMM launches, {} CUs, widths 128+512 ==\n",
+        cfg.compute_units
+    );
+
+    // -- all launches at the default 512-bit width ------------------------
+    let dev_hi = Device::new(cfg.clone(), &dir).expect("native device");
+    let high = bench("512-bit x N", 1, 5, || {
+        let mut s = dev_hi.stream().expect("stream");
+        let ha = s.upload(&a);
+        let hb = s.upload(&b);
+        let hcs: Vec<_> = (0..chain).map(|_| s.upload(&c0)).collect();
+        for &hc in &hcs {
+            s.enqueue_gemm(ha, hb, hc).expect("enqueue");
+        }
+        s.wait().expect("wait");
+        std::hint::black_box(&s.download(hcs[chain - 1]).expect("download"));
+    });
+
+    // -- all launches at 128 bits -----------------------------------------
+    let dev_lo = Device::new(cfg.clone(), &dir).expect("native device");
+    let low = bench("128-bit x N", 1, 5, || {
+        let mut s = dev_lo.stream().expect("stream");
+        let ha = s.upload(&a_lo);
+        let hb = s.upload(&b_lo);
+        let hcs: Vec<_> = (0..chain).map(|_| s.upload(&c0_lo)).collect();
+        for &hc in &hcs {
+            s.enqueue_gemm_at(128, ha, hb, hc).expect("enqueue");
+        }
+        s.wait().expect("wait");
+        std::hint::black_box(&s.download(hcs[chain - 1]).expect("download"));
+    });
+
+    // -- interleaved: alternate widths, disjoint buffer sets --------------
+    let dev_mix = Device::new(cfg.clone(), &dir).expect("native device");
+    let mixed = bench("interleaved 128/512 x N", 1, 5, || {
+        let mut s = dev_mix.stream().expect("stream");
+        let ha = s.upload(&a);
+        let hb = s.upload(&b);
+        let la = s.upload(&a_lo);
+        let lb = s.upload(&b_lo);
+        let his: Vec<_> = (0..chain / 2).map(|_| s.upload(&c0)).collect();
+        let los: Vec<_> = (0..chain / 2).map(|_| s.upload(&c0_lo)).collect();
+        for i in 0..chain / 2 {
+            s.enqueue_gemm_at(512, ha, hb, his[i]).expect("enqueue hi");
+            s.enqueue_gemm_at(128, la, lb, los[i]).expect("enqueue lo");
+        }
+        s.wait().expect("wait");
+        std::hint::black_box(&s.download(los[chain / 2 - 1]).expect("download"));
+    });
+    let mix_metrics = dev_mix.metrics();
+    assert!(
+        mix_metrics.inflight_max >= 2,
+        "interleaved mixed-width launches must overlap (got inflight_max {})",
+        mix_metrics.inflight_max
+    );
+    assert_eq!(
+        (mix_metrics.retries, mix_metrics.respawns, mix_metrics.quarantined_cus),
+        (0, 0, 0),
+        "a fault-free mixed round must never touch the healing ladder"
+    );
+
+    // -- structural: replay the mixed schedule on sim, read the ledger ----
+    let dev_sim = Device::new(
+        ApfpConfig { backend: BackendKind::Sim, ..cfg.clone() },
+        &dir,
+    )
+    .expect("sim device");
+    {
+        let mut s = dev_sim.stream().expect("stream");
+        let ha = s.upload(&a);
+        let hb = s.upload(&b);
+        let la = s.upload(&a_lo);
+        let lb = s.upload(&b_lo);
+        let hi = s.upload(&c0);
+        let lo = s.upload(&c0_lo);
+        for _ in 0..2 {
+            s.enqueue_gemm_at(512, ha, hb, hi).expect("enqueue hi");
+            s.enqueue_gemm_at(128, la, lb, lo).expect("enqueue lo");
+            s.wait().expect("wait");
+        }
+    }
+    let m = dev_sim.model_metrics();
+    let w512 = m.width_breakdown().find(|w| w.bits == 512).expect("512 slot");
+    let w128 = m.width_breakdown().find(|w| w.bits == 128).expect("128 slot");
+    assert_eq!((w512.launches, w128.launches), (2, 2), "per-width launch split");
+    assert_eq!(w512.tiles, w128.tiles, "same geometry: same tile count per width");
+    assert_eq!(w512.tiles + w128.tiles, m.tiles, "tile conservation");
+    assert_eq!(w512.macs + w128.macs, m.macs, "MAC conservation");
+    assert!(
+        w512.energy_pj > w128.energy_pj && w512.dram_bytes > w128.dram_bytes,
+        "a 512-bit tile must model more energy and traffic than a 128-bit one"
+    );
+
+    println!("{}", high.report());
+    println!("{}", low.report());
+    println!("{}", mixed.report());
+    println!("\n128-bit vs 512-bit: {:.2}x on wall time", low.speedup_vs(&high));
+
+    let mut t = Table::new(&["round", "launches", "inflight_max", "median"]);
+    for (name, dev, res) in [
+        ("512-bit", &dev_hi, &high),
+        ("128-bit", &dev_lo, &low),
+        ("interleaved", &dev_mix, &mixed),
+    ] {
+        let dm = dev.metrics();
+        t.row(&[
+            name.into(),
+            dm.launches.to_string(),
+            dm.inflight_max.to_string(),
+            fmt_duration(res.median_s()),
+        ]);
+    }
+    println!("\n{}", t.render());
+    println!(
+        "sim ledger: 512-bit {} pJ vs 128-bit {} pJ over equal tile counts",
+        w512.energy_pj, w128.energy_pj
+    );
+}

@@ -112,9 +112,36 @@ pub fn gemm_serial(a: &Matrix, b: &Matrix, c: &Matrix) -> Matrix {
 /// panel is packed once and shared read-only; each worker accumulates its
 /// band of the output in place with a private arena, so the inner loops
 /// allocate nothing.
+///
+/// At the compiled fixed widths (448 / 960 bits of mantissa) the bands
+/// run the register-blocked [`gemm_fixed`] lane instead of the arena
+/// pipeline — bit-identical by construction, and the same
+/// `APFP_FIXED_PATH=0` escape hatch that governs the device backend
+/// disables it here too.  This is the lane every host-side caller
+/// (`linalg`'s `MatmulBackend::Host`, and through it `blas`) inherits.
 pub fn gemm_threaded(a: &Matrix, b: &Matrix, c: &Matrix, threads: usize) -> Matrix {
+    gemm_threaded_with(a, b, c, threads, crate::runtime::native::fixed_path_env_enabled())
+}
+
+/// [`gemm_threaded`] with the fixed-width lane pinned on or off instead
+/// of reading `APFP_FIXED_PATH` — parity tests drive both lanes inside a
+/// single process.
+pub fn gemm_threaded_with(
+    a: &Matrix,
+    b: &Matrix,
+    c: &Matrix,
+    threads: usize,
+    fixed: bool,
+) -> Matrix {
     assert_eq!(a.cols(), b.rows(), "inner dimensions");
     assert!(a.rows() == c.rows() && b.cols() == c.cols(), "output shape");
+    if fixed && a.rows() > 0 && b.cols() > 0 && a.prec() == b.prec() && a.prec() == c.prec() {
+        match a.prec() {
+            448 => return gemm_threaded_fixed::<7>(a, b, c, threads),
+            960 => return gemm_threaded_fixed::<15>(a, b, c, threads),
+            _ => {}
+        }
+    }
     let n = a.rows();
     let threads = threads.clamp(1, n.max(1));
     let band = n.div_ceil(threads);
@@ -137,6 +164,49 @@ pub fn gemm_threaded(a: &Matrix, b: &Matrix, c: &Matrix, threads: usize) -> Matr
             });
         }
     });
+    out
+}
+
+/// The threaded fixed-width lane: convert the operands into stack-limb
+/// [`ApFloatN`] storage once, band the output rows across `threads`
+/// cores running [`gemm_fixed`], and convert back.  Per output element
+/// the K accumulation is sequential ascending — the dynamic order — so
+/// the result is bit-identical to the arena path on the same inputs
+/// (pinned in `threaded_fixed_lane_matches_the_dynamic_lane_bitwise`).
+// apfp-lint: allow(alloc, scope=fn, reason="one-shot host entry point: the fixed-lane conversion buffers are built once per call, not per MAC")
+fn gemm_threaded_fixed<const L: usize>(
+    a: &Matrix,
+    b: &Matrix,
+    c: &Matrix,
+    threads: usize,
+) -> Matrix {
+    let (n, k, m) = (a.rows(), a.cols(), b.cols());
+    let mut af: Vec<ApFloatN<L>> = Vec::with_capacity(n * k);
+    for i in 0..n {
+        af.extend(a.row(i).iter().map(ApFloatN::<L>::from_ap));
+    }
+    let mut bt = Vec::new();
+    pack_b_fixed::<L>(b, &mut bt);
+    let mut cf: Vec<ApFloatN<L>> = Vec::with_capacity(n * m);
+    for i in 0..n {
+        cf.extend(c.row(i).iter().map(ApFloatN::<L>::from_ap));
+    }
+    let threads = threads.clamp(1, n.max(1));
+    let band = n.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (t, band_vals) in cf.chunks_mut(band * m).enumerate() {
+            let (af, bt) = (&af, &bt);
+            scope.spawn(move || {
+                let rows = band_vals.len() / m;
+                let i0 = t * band;
+                gemm_fixed(&af[i0 * k..(i0 + rows) * k], bt, band_vals, rows, k, m);
+            });
+        }
+    });
+    let mut out = c.clone();
+    for (slot, v) in out.values_mut().iter_mut().zip(cf.iter()) {
+        *slot = v.to_ap();
+    }
     out
 }
 
@@ -412,6 +482,29 @@ mod tests {
         }
         run::<7>(448, 31);
         run::<15>(960, 37);
+    }
+
+    #[test]
+    fn threaded_fixed_lane_matches_the_dynamic_lane_bitwise() {
+        // the host fixed lane (what linalg/blas callers get at the paper
+        // widths unless APFP_FIXED_PATH=0) must be bit-identical to the
+        // arena pipeline, across band splits and at both compiled widths
+        for (prec, seed) in [(448u32, 41u64), (960, 43)] {
+            let a = Matrix::random(13, 9, prec, seed, 20);
+            let b = Matrix::random(9, 11, prec, seed + 1, 20);
+            let c = Matrix::random(13, 11, prec, seed + 2, 20);
+            let dynamic = gemm_threaded_with(&a, &b, &c, 3, false);
+            assert_eq!(dynamic, gemm_serial(&a, &b, &c), "dynamic lane vs serial");
+            for threads in [1, 2, 4, 7] {
+                let fixed = gemm_threaded_with(&a, &b, &c, threads, true);
+                assert_eq!(fixed, dynamic, "prec {prec}, threads {threads}");
+            }
+        }
+        // a width with no compiled lane falls through to the dynamic path
+        let a = Matrix::random(5, 4, 64, 51, 20);
+        let b = Matrix::random(4, 6, 64, 52, 20);
+        let c = Matrix::zeros(5, 6, 64);
+        assert_eq!(gemm_threaded_with(&a, &b, &c, 2, true), gemm_serial(&a, &b, &c));
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! | paper option            | field            | env default            |
 //! |-------------------------|------------------|------------------------|
 //! | `APFP_BITS`             | `bits`           | —                      |
+//! | —                       | `widths`         | `APFP_WIDTHS`          |
 //! | `APFP_COMPUTE_UNITS`    | `compute_units`  | —                      |
 //! | `APFP_TILE_SIZE_N`      | `tile_n`         | `APFP_TILE_N`          |
 //! | `APFP_TILE_SIZE_M`      | `tile_m`         | `APFP_TILE_M`          |
@@ -41,7 +42,7 @@
 use std::path::Path;
 use std::time::Duration;
 
-use crate::runtime::manifest::TileShape;
+use crate::runtime::manifest::{TileShape, DEFAULT_WIDTHS};
 use crate::runtime::BackendKind;
 
 #[derive(Debug, thiserror::Error)]
@@ -250,7 +251,15 @@ impl RetryPolicy {
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ApfpConfig {
     /// Total packed bits per number (Fig. 1), incl. the 64-bit head word.
+    /// This is the *default launch width* of a device; the full set of
+    /// widths the device hosts side by side is [`Self::widths`].
     pub bits: u32,
+    /// Every packed width the device loads kernels for (`APFP_WIDTHS`,
+    /// comma-separated).  One `Device` hosts all of them simultaneously
+    /// and each launch picks one (`enqueue_gemm_at`); [`Self::bits`] is
+    /// appended automatically when absent, so the default launch width is
+    /// always servable.
+    pub widths: Vec<u32>,
     /// Replication factor of the compute pipeline (§IV-A).
     pub compute_units: usize,
     /// Output tile rows per compute unit (§III).
@@ -283,15 +292,45 @@ pub struct ApfpConfig {
     pub faults: FaultSpec,
 }
 
+/// Lenient `APFP_WIDTHS` read for [`ApfpConfig::default`], mirroring
+/// [`TileShape::from_env`]: a well-formed comma list of widths (each a
+/// multiple of 64, `>= 128`, no duplicates) wins; anything malformed or
+/// empty falls back to [`DEFAULT_WIDTHS`].  The strict, erroring parse
+/// lives in [`ApfpConfig::try_from_env_with`].
+fn widths_from_env() -> Vec<u32> {
+    parse_widths_lenient(std::env::var("APFP_WIDTHS").ok().as_deref())
+}
+
+/// The fallible half of [`widths_from_env`], split out so tests can
+/// exercise the fallback rules without mutating process state.
+fn parse_widths_lenient(raw: Option<&str>) -> Vec<u32> {
+    let Some(raw) = raw else {
+        return DEFAULT_WIDTHS.to_vec();
+    };
+    let mut out = Vec::new();
+    for part in raw.split(',') {
+        match part.trim().parse::<u32>() {
+            Ok(w) if w >= 128 && w % 64 == 0 && !out.contains(&w) => out.push(w),
+            _ => return DEFAULT_WIDTHS.to_vec(),
+        }
+    }
+    if out.is_empty() {
+        return DEFAULT_WIDTHS.to_vec();
+    }
+    out
+}
+
 impl Default for ApfpConfig {
     fn default() -> Self {
         // The paper's evaluated configuration: 512-bit numbers, 32x32 tiles,
         // the Fig. 3 Pareto point (72-bit mult bottom-out, 64-bit adder
-        // stages), one compute unit.  Tile geometry and backend honor their
-        // environment overrides (`APFP_TILE_N/M/K`, `APFP_BACKEND`).
+        // stages), one compute unit.  Tile geometry, backend, and the loaded
+        // width set honor their environment overrides (`APFP_TILE_N/M/K`,
+        // `APFP_BACKEND`, `APFP_WIDTHS`).
         let tile = TileShape::from_env();
         ApfpConfig {
             bits: 512,
+            widths: widths_from_env(),
             compute_units: 1,
             tile_n: tile.n,
             tile_m: tile.m,
@@ -313,6 +352,19 @@ impl ApfpConfig {
         crate::softfloat::prec_for_bits(self.bits)
     }
 
+    /// The widths the device actually loads: [`Self::widths`] with
+    /// [`Self::bits`] appended when absent, preserving declaration order.
+    /// This is what `Device::new` hands to the builtin-manifest
+    /// synthesizer, so the default launch width is always servable even
+    /// under a narrowed `APFP_WIDTHS`.
+    pub fn effective_widths(&self) -> Vec<u32> {
+        let mut w = self.widths.clone();
+        if !w.contains(&self.bits) {
+            w.push(self.bits);
+        }
+        w
+    }
+
     /// The GEMM tile geometry as one value — what `Device::new` threads
     /// into the builtin manifest and each worker's runtime.
     pub fn tile_shape(&self) -> TileShape {
@@ -321,8 +373,21 @@ impl ApfpConfig {
 
     pub fn validate(&self) -> Result<(), ConfigError> {
         let err = |m: String| Err(ConfigError::Invalid(m));
-        if self.bits % 512 != 0 || self.bits == 0 {
-            return err(format!("bits must be a positive multiple of 512, got {}", self.bits));
+        if self.bits % 64 != 0 || self.bits < 128 {
+            return err(format!(
+                "bits must be a multiple of 64 with at least one mantissa limb (>= 128), got {}",
+                self.bits
+            ));
+        }
+        for (i, &w) in self.widths.iter().enumerate() {
+            if w % 64 != 0 || w < 128 {
+                return err(format!(
+                    "widths entries must be multiples of 64 and >= 128, got {w}"
+                ));
+            }
+            if self.widths[..i].contains(&w) {
+                return err(format!("duplicate width {w} in widths"));
+            }
         }
         if self.compute_units == 0 {
             return err("compute_units must be >= 1".into());
@@ -351,6 +416,12 @@ impl ApfpConfig {
         let invalid = || ConfigError::InvalidValue { key: key.into(), value: value.into() };
         match key {
             "bits" | "APFP_BITS" => self.bits = value.parse().map_err(|_| invalid())?,
+            "widths" | "APFP_WIDTHS" => {
+                self.widths = value
+                    .split(',')
+                    .map(|w| w.trim().parse::<u32>().map_err(|_| invalid()))
+                    .collect::<Result<_, _>>()?
+            }
             "compute_units" | "APFP_COMPUTE_UNITS" => {
                 self.compute_units = value.parse().map_err(|_| invalid())?
             }
@@ -413,6 +484,16 @@ impl ApfpConfig {
         if let Some(v) = lookup("APFP_BACKEND") {
             cfg.backend =
                 BackendKind::parse(&v).ok_or_else(|| malformed("APFP_BACKEND", v.clone()))?;
+        }
+        if let Some(v) = lookup("APFP_WIDTHS") {
+            cfg.widths = v
+                .split(',')
+                .map(|w| {
+                    w.trim()
+                        .parse::<u32>()
+                        .map_err(|_| malformed("APFP_WIDTHS", v.clone()))
+                })
+                .collect::<Result<_, _>>()?;
         }
         if let Some(v) = lookup("APFP_REPLY_TIMEOUT_MS") {
             let ms: u64 = v
@@ -534,10 +615,61 @@ mod tests {
     fn validation_catches_bad_geometry() {
         let c = ApfpConfig { bits: 500, ..Default::default() };
         assert!(c.validate().is_err());
+        let c = ApfpConfig { bits: 64, ..Default::default() };
+        assert!(c.validate().is_err(), "no mantissa limb under the head");
         let c = ApfpConfig { compute_units: 0, ..Default::default() };
         assert!(c.validate().is_err());
         let c = ApfpConfig { mult_base_bits: 8, ..Default::default() };
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn widths_parse_validate_and_cover_the_default_launch_width() {
+        let c = ApfpConfig::default();
+        assert_eq!(c.widths, widths_from_env(), "defaults honor the env");
+        c.validate().unwrap();
+
+        // the lenient read behind Default: well-formed lists win, anything
+        // else (malformed entry, sub-128 width, duplicate, empty) falls
+        // back to the full builtin set rather than erroring
+        assert_eq!(parse_widths_lenient(None), DEFAULT_WIDTHS.to_vec());
+        assert_eq!(parse_widths_lenient(Some("512")), vec![512]);
+        assert_eq!(parse_widths_lenient(Some(" 128, 512 ")), vec![128, 512]);
+        for bad in ["512;1024", "96", "512,512", "", "512,big"] {
+            assert_eq!(
+                parse_widths_lenient(Some(bad)),
+                DEFAULT_WIDTHS.to_vec(),
+                "lenient parse of {bad:?} must fall back"
+            );
+        }
+
+        // both spellings of the knob parse a comma list
+        let mut c = ApfpConfig::default();
+        c.set("APFP_WIDTHS", "512, 1024").unwrap();
+        assert_eq!(c.widths, vec![512, 1024]);
+        c.set("widths", "128").unwrap();
+        assert_eq!(c.widths, vec![128]);
+        // bits is appended when the list omits it
+        assert_eq!(c.effective_widths(), vec![128, 512]);
+        c.validate().unwrap();
+        assert!(matches!(c.set("widths", "512,big"), Err(ConfigError::InvalidValue { .. })));
+
+        // degenerate entries and duplicates are validation errors
+        let c = ApfpConfig { widths: vec![512, 96], ..Default::default() };
+        assert!(c.validate().is_err());
+        let c = ApfpConfig { widths: vec![512, 512], ..Default::default() };
+        assert!(c.validate().is_err());
+
+        // the env path reads APFP_WIDTHS strictly
+        let c =
+            ApfpConfig::try_from_env_with(env_of(&[("APFP_WIDTHS", "128,512")])).unwrap();
+        assert_eq!(c.widths, vec![128, 512]);
+        let err = ApfpConfig::try_from_env_with(env_of(&[("APFP_WIDTHS", "128;512")]))
+            .expect_err("malformed width list must fail strictly");
+        assert!(
+            matches!(&err, ConfigError::MalformedEnv { key, .. } if key == "APFP_WIDTHS"),
+            "{err:?}"
+        );
     }
 
     #[test]

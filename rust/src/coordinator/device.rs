@@ -59,8 +59,14 @@ impl Device {
     /// lights up the full device stack on a clean checkout.
     pub fn new(config: ApfpConfig, artifact_dir: &std::path::Path) -> Result<Self> {
         config.validate()?;
-        let artifacts = runtime::load_metas(artifact_dir, config.backend, config.tile_shape())
-            .context("opening device")?;
+        let widths = config.effective_widths();
+        let artifacts = runtime::load_metas_widths(
+            artifact_dir,
+            config.backend,
+            config.tile_shape(),
+            &widths,
+        )
+        .context("opening device")?;
         let metrics = Metrics::new();
         let cus = config.compute_units;
         let workers = (0..cus)
@@ -70,6 +76,7 @@ impl Device {
                     artifact_dir.to_path_buf(),
                     config.backend,
                     config.tile_shape(),
+                    widths.clone(),
                     config.faults,
                     metrics.clone(),
                     config.retry.respawn_limit,
@@ -77,12 +84,20 @@ impl Device {
             })
             .collect::<std::io::Result<Vec<_>>>()
             .context("spawning CU workers")?;
+        // per-width ledger slots follow the widths actually loaded (an
+        // on-disk manifest may differ from the configured set)
+        let mut loaded: Vec<u32> = Vec::new();
+        for m in &artifacts {
+            if !loaded.contains(&m.bits) {
+                loaded.push(m.bits);
+            }
+        }
         Ok(Device {
             placements: floorplan::assign(cus),
             config,
             workers,
             metrics,
-            model_metrics: ModelMetrics::new(),
+            model_metrics: ModelMetrics::with_widths(&loaded),
             artifacts,
         })
     }
@@ -114,19 +129,47 @@ impl Device {
         self.workers.iter().map(Supervisor::health).collect()
     }
 
-    /// Allocate a zeroed host-side matrix at the device precision.
+    /// Allocate a zeroed host-side matrix at the device's default
+    /// precision ([`ApfpConfig::bits`]).
     pub fn alloc(&self, rows: usize, cols: usize) -> Matrix {
         Matrix::zeros(rows, cols, self.config.prec())
     }
 
-    fn artifact_for(&self, kind: ArtifactKind) -> Result<&manifest::ArtifactMeta> {
+    /// Allocate a zeroed host-side matrix at an explicit packed width.
+    pub fn alloc_at(&self, bits: u32, rows: usize, cols: usize) -> Matrix {
+        Matrix::zeros(rows, cols, crate::softfloat::prec_for_bits(bits))
+    }
+
+    /// Every packed width this device loaded kernels for, in manifest
+    /// order.  Each is a valid `bits` argument to the `*_at` launch APIs.
+    pub fn widths(&self) -> Vec<u32> {
+        let mut w: Vec<u32> = Vec::new();
+        for m in &self.artifacts {
+            if !w.contains(&m.bits) {
+                w.push(m.bits);
+            }
+        }
+        w
+    }
+
+    pub(super) fn artifact_for_at(
+        &self,
+        kind: ArtifactKind,
+        bits: u32,
+    ) -> Result<&manifest::ArtifactMeta, manifest::ManifestError> {
         self.artifacts
             .iter()
-            .filter(|m| m.kind == kind && m.bits == self.config.bits)
+            .filter(|m| m.kind == kind && m.bits == bits)
             .max_by_key(|m| m.t_n * m.t_m)
-            .ok_or_else(|| {
-                anyhow!("no {kind:?} artifact for {} bits — run `make artifacts`", self.config.bits)
+            .ok_or_else(|| manifest::ManifestError::NoArtifact {
+                kind: kind.clone(),
+                bits,
+                loaded: self.widths(),
             })
+    }
+
+    fn artifact_for(&self, kind: ArtifactKind) -> Result<&manifest::ArtifactMeta> {
+        Ok(self.artifact_for_at(kind, self.config.bits)?)
     }
 
     // ---- GEMM (§III) ------------------------------------------------------
@@ -134,10 +177,13 @@ impl Device {
     /// Open a batched GEMM stream: device-resident buffers, packed once,
     /// with chained launches that keep C on the device and hazard-tracked
     /// pipelining of launches with disjoint buffer sets (see
-    /// [`crate::coordinator::stream`]).
+    /// [`crate::coordinator::stream`]).  The stream serves **every** width
+    /// the device loaded: `enqueue_gemm` launches at the default width,
+    /// `enqueue_gemm_at` picks one per launch.
     pub fn stream(&self) -> Result<DeviceStream<'_>> {
-        let meta = self.artifact_for(ArtifactKind::Gemm)?.clone();
-        Ok(DeviceStream::new(self, meta))
+        // the default launch width must be servable up front
+        self.artifact_for(ArtifactKind::Gemm)?;
+        Ok(DeviceStream::new(self))
     }
 
     /// C += A @ B across all compute units; returns the updated C and
@@ -146,8 +192,23 @@ impl Device {
     /// over shared operands should hold a stream instead and amortize the
     /// packing (alpha = beta = 1 exactly as the paper fixes, §III).
     pub fn gemm(&self, a: &Matrix, b: &Matrix, c: &Matrix) -> Result<(Matrix, GemmStats)> {
+        self.gemm_at(self.config.bits, a, b, c)
+    }
+
+    /// [`Device::gemm`] at an explicit packed width: the one-shot
+    /// mixed-precision entry point (operands must already be at
+    /// `prec_for_bits(bits)`; see `Matrix::to_prec` for conversion).
+    pub fn gemm_at(
+        &self,
+        bits: u32,
+        a: &Matrix,
+        b: &Matrix,
+        c: &Matrix,
+    ) -> Result<(Matrix, GemmStats)> {
         anyhow::ensure!(a.cols() == b.rows(), "inner dimensions: {} vs {}", a.cols(), b.rows());
         anyhow::ensure!(a.rows() == c.rows() && b.cols() == c.cols(), "output shape");
+        // unknown widths surface the typed manifest error before any upload
+        self.artifact_for_at(ArtifactKind::Gemm, bits)?;
         let before = self.metrics.snapshot();
         let t0 = Instant::now();
 
@@ -155,7 +216,7 @@ impl Device {
         let ha = stream.upload(a);
         let hb = stream.upload(b);
         let hc = stream.upload(c);
-        stream.enqueue_gemm(ha, hb, hc)?;
+        stream.enqueue_gemm_at(bits, ha, hb, hc)?;
         stream.wait()?;
         let out = stream.download(hc)?;
 

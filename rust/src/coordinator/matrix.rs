@@ -169,6 +169,13 @@ impl Matrix {
         }
     }
 
+    /// Re-round every element to `new_prec` bits of mantissa — the host
+    /// side of a device width conversion ([`ApFloat::to_prec`] per
+    /// element: RNDZ truncation on narrowing, zero-fill on widening).
+    pub fn to_prec(&self, new_prec: u32) -> Self {
+        Matrix::from_fn(self.rows, self.cols, new_prec, |i, j| self.get(i, j).to_prec(new_prec))
+    }
+
     /// Max |relative error| vs another matrix through f64 (diagnostics).
     pub fn max_rel_err_f64(&self, other: &Matrix) -> f64 {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
@@ -231,6 +238,22 @@ mod tests {
             m.extract_tile_into(r0, c0, 4, 4, &mut from_matrix);
             assert_eq!(from_panel, from_matrix, "tile at ({r0},{c0})");
             assert_eq!(from_matrix, m.extract_tile(r0, c0, 4, 4));
+        }
+    }
+
+    #[test]
+    fn to_prec_casts_every_element_and_round_trips() {
+        let m = Matrix::random(5, 4, 448, 9, 20);
+        let wide = m.to_prec(960);
+        assert_eq!((wide.rows(), wide.cols(), wide.prec()), (5, 4, 960));
+        // widening is exact: narrowing back is the identity
+        assert_eq!(wide.to_prec(448), m);
+        let narrow = m.to_prec(64);
+        assert_eq!(narrow.prec(), 64);
+        for i in 0..5 {
+            for j in 0..4 {
+                assert_eq!(narrow.get(i, j), &m.get(i, j).to_prec(64));
+            }
         }
     }
 

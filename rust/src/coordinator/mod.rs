@@ -52,6 +52,6 @@ pub mod worker;
 
 pub use device::{Device, GemmStats};
 pub use matrix::Matrix;
-pub use model_metrics::{ModelMetrics, ModelMetricsSnapshot};
+pub use model_metrics::{ModelMetrics, ModelMetricsSnapshot, WidthModelSnapshot};
 pub use stream::{BufId, DeviceStream, StreamError};
 pub use worker::{CuHealth, RespawnOutcome};

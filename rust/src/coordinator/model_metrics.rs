@@ -27,6 +27,46 @@ use std::sync::Arc;
 use crate::runtime::TileModelCost;
 use crate::sim::gemm_sim;
 
+/// Per-width ledger slots a device preallocates (the snapshot stays `Copy`,
+/// so the breakdown is a fixed-size array).  Widths beyond this many accrue
+/// into the device totals only.
+pub const MAX_WIDTHS: usize = 8;
+
+/// One width's slice of the ledger: the same counters as the device
+/// totals, keyed by packed bits.  Slots are preallocated at device
+/// construction so the retire-path accumulation stays lock- and
+/// allocation-free (a linear scan over at most [`MAX_WIDTHS`] entries).
+#[derive(Debug)]
+struct WidthLedger {
+    bits: u32,
+    cycles: AtomicU64,
+    macs: AtomicU64,
+    dram_bytes: AtomicU64,
+    compute_ps: AtomicU64,
+    mem_ps: AtomicU64,
+    fixed_ps: AtomicU64,
+    energy_pj: AtomicU64,
+    tiles: AtomicU64,
+    launches: AtomicU64,
+}
+
+impl WidthLedger {
+    fn new(bits: u32) -> Self {
+        WidthLedger {
+            bits,
+            cycles: AtomicU64::new(0),
+            macs: AtomicU64::new(0),
+            dram_bytes: AtomicU64::new(0),
+            compute_ps: AtomicU64::new(0),
+            mem_ps: AtomicU64::new(0),
+            fixed_ps: AtomicU64::new(0),
+            energy_pj: AtomicU64::new(0),
+            tiles: AtomicU64::new(0),
+            launches: AtomicU64::new(0),
+        }
+    }
+}
+
 #[derive(Debug, Default)]
 pub struct ModelMetrics {
     /// Modeled datapath cycles (II-adjusted MAC issues + pipeline drains).
@@ -49,11 +89,31 @@ pub struct ModelMetrics {
     pub tiles: AtomicU64,
     /// Launches that retired with model data.
     pub launches: AtomicU64,
+    /// Per-width slices of every counter above, preallocated by
+    /// [`ModelMetrics::with_widths`].  Empty when the device was built
+    /// without a width set (totals-only accounting).
+    widths: Vec<WidthLedger>,
 }
 
 impl ModelMetrics {
     pub fn new() -> Arc<Self> {
         Arc::new(Self::default())
+    }
+
+    /// A ledger with one preallocated per-width slot per entry of
+    /// `widths` (first [`MAX_WIDTHS`] entries; the rest accrue into the
+    /// device totals only).  What `Device::new` builds, so interleaved
+    /// launches of different widths attribute their modeled cost without
+    /// touching the allocator on the retire path.
+    pub fn with_widths(widths: &[u32]) -> Arc<Self> {
+        Arc::new(ModelMetrics {
+            widths: widths.iter().take(MAX_WIDTHS).map(|&b| WidthLedger::new(b)).collect(),
+            ..Default::default()
+        })
+    }
+
+    fn slot(&self, bits: u32) -> Option<&WidthLedger> {
+        self.widths.iter().find(|w| w.bits == bits)
     }
 
     /// Accumulate one settled tile reply's modeled cost.  Called from the
@@ -69,6 +129,22 @@ impl ModelMetrics {
         self.tiles.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// [`Self::add_tile`] plus attribution to the launch width's slot —
+    /// the device totals and the width slice move together, which is the
+    /// conservation invariant `tests/sim_backend.rs` pins.
+    pub fn add_tile_at(&self, bits: u32, c: &TileModelCost) {
+        self.add_tile(c);
+        if let Some(w) = self.slot(bits) {
+            w.cycles.fetch_add(c.cycles, Ordering::Relaxed);
+            w.macs.fetch_add(c.macs, Ordering::Relaxed);
+            w.dram_bytes.fetch_add(c.dram_bytes, Ordering::Relaxed);
+            w.compute_ps.fetch_add(c.compute_ps, Ordering::Relaxed);
+            w.mem_ps.fetch_add(c.mem_ps, Ordering::Relaxed);
+            w.energy_pj.fetch_add(c.energy_pj, Ordering::Relaxed);
+            w.tiles.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
     /// Record one retired launch that carried model data: counts it and
     /// charges the modeled kernel-launch fixed cost.
     pub fn add_launch(&self) {
@@ -76,7 +152,31 @@ impl ModelMetrics {
         self.fixed_ps.fetch_add((gemm_sim::LAUNCH_S * 1e12) as u64, Ordering::Relaxed);
     }
 
+    /// [`Self::add_launch`] plus attribution to the launch width's slot.
+    pub fn add_launch_at(&self, bits: u32) {
+        self.add_launch();
+        if let Some(w) = self.slot(bits) {
+            w.launches.fetch_add(1, Ordering::Relaxed);
+            w.fixed_ps.fetch_add((gemm_sim::LAUNCH_S * 1e12) as u64, Ordering::Relaxed);
+        }
+    }
+
     pub fn snapshot(&self) -> ModelMetricsSnapshot {
+        let mut widths = [WidthModelSnapshot::default(); MAX_WIDTHS];
+        for (slot, w) in widths.iter_mut().zip(&self.widths) {
+            *slot = WidthModelSnapshot {
+                bits: w.bits,
+                cycles: w.cycles.load(Ordering::Relaxed),
+                macs: w.macs.load(Ordering::Relaxed),
+                dram_bytes: w.dram_bytes.load(Ordering::Relaxed),
+                compute_ps: w.compute_ps.load(Ordering::Relaxed),
+                mem_ps: w.mem_ps.load(Ordering::Relaxed),
+                fixed_ps: w.fixed_ps.load(Ordering::Relaxed),
+                energy_pj: w.energy_pj.load(Ordering::Relaxed),
+                tiles: w.tiles.load(Ordering::Relaxed),
+                launches: w.launches.load(Ordering::Relaxed),
+            };
+        }
         ModelMetricsSnapshot {
             cycles: self.cycles.load(Ordering::Relaxed),
             macs: self.macs.load(Ordering::Relaxed),
@@ -87,6 +187,7 @@ impl ModelMetrics {
             energy_pj: self.energy_pj.load(Ordering::Relaxed),
             tiles: self.tiles.load(Ordering::Relaxed),
             launches: self.launches.load(Ordering::Relaxed),
+            widths,
         }
     }
 }
@@ -105,12 +206,38 @@ pub struct ModelMetricsSnapshot {
     pub energy_pj: u64,
     pub tiles: u64,
     pub launches: u64,
+    /// Per-width slices, in device width order; unused slots have
+    /// `bits == 0`.  Use [`Self::width_breakdown`] to iterate the live
+    /// ones.
+    pub widths: [WidthModelSnapshot; MAX_WIDTHS],
+}
+
+/// One width's slice of a [`ModelMetricsSnapshot`] (`bits == 0` marks an
+/// unused slot).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WidthModelSnapshot {
+    pub bits: u32,
+    pub cycles: u64,
+    pub macs: u64,
+    pub dram_bytes: u64,
+    pub compute_ps: u64,
+    pub mem_ps: u64,
+    pub fixed_ps: u64,
+    pub energy_pj: u64,
+    pub tiles: u64,
+    pub launches: u64,
 }
 
 impl ModelMetricsSnapshot {
     /// True when any modeled work was recorded (always false off-sim).
     pub fn is_live(&self) -> bool {
         self.tiles > 0
+    }
+
+    /// The per-width slices that belong to a real width (slots the device
+    /// preallocated), in device width order.
+    pub fn width_breakdown(&self) -> impl Iterator<Item = &WidthModelSnapshot> {
+        self.widths.iter().filter(|w| w.bits != 0)
     }
 
     pub fn compute_s(&self) -> f64 {
@@ -217,5 +344,49 @@ mod tests {
         assert_eq!(empty.efficiency(), 0.0);
         assert_eq!(empty.mmacs(), 0.0);
         assert_eq!(empty.power_w(), 0.0);
+    }
+
+    #[test]
+    fn width_slots_attribute_and_conserve() {
+        let m = ModelMetrics::with_widths(&[128, 512]);
+        m.add_tile_at(128, &cost(1));
+        m.add_tile_at(512, &cost(2));
+        m.add_tile_at(512, &cost(3));
+        m.add_launch_at(128);
+        m.add_launch_at(512);
+        let s = m.snapshot();
+        // device totals behave exactly as the width-less path
+        assert_eq!(s.tiles, 3);
+        assert_eq!(s.launches, 2);
+        assert_eq!(s.cycles, 600);
+        // per-width slices carry their own launches' share
+        let w128 = s.width_breakdown().find(|w| w.bits == 128).unwrap();
+        let w512 = s.width_breakdown().find(|w| w.bits == 512).unwrap();
+        assert_eq!((w128.tiles, w128.cycles, w128.launches), (1, 100, 1));
+        assert_eq!((w512.tiles, w512.cycles, w512.launches), (2, 500, 1));
+        // conservation: per-width sums equal the device totals, counter by
+        // counter (the invariant tests/sim_backend.rs re-asserts end to end)
+        let sums = s.width_breakdown().fold([0u64; 9], |mut acc, w| {
+            for (a, v) in acc.iter_mut().zip([
+                w.cycles, w.macs, w.dram_bytes, w.compute_ps, w.mem_ps, w.fixed_ps,
+                w.energy_pj, w.tiles, w.launches,
+            ]) {
+                *a += v;
+            }
+            acc
+        });
+        assert_eq!(
+            sums,
+            [
+                s.cycles, s.macs, s.dram_bytes, s.compute_ps, s.mem_ps, s.fixed_ps,
+                s.energy_pj, s.tiles, s.launches
+            ]
+        );
+        // a width the device never preallocated folds into totals only
+        let m = ModelMetrics::with_widths(&[512]);
+        m.add_tile_at(4096, &cost(1));
+        let s = m.snapshot();
+        assert_eq!(s.tiles, 1);
+        assert_eq!(s.width_breakdown().map(|w| w.tiles).sum::<u64>(), 0);
     }
 }

@@ -32,6 +32,25 @@
 //! reads pre-launch buffer contents and stays bit-identical to
 //! [`crate::baseline::gemm_serial`] (`tests/tile_property.rs`).
 //!
+//! # Precision as a launch parameter
+//!
+//! The device loads kernel artifacts at several mantissa widths side by
+//! side (`APFP_WIDTHS`), and each launch picks one:
+//! [`DeviceStream::enqueue_gemm_at`] names the width in bits, while
+//! [`DeviceStream::enqueue_gemm`] launches at the device default
+//! (`config.bits`).  Every [`DeviceBuf`] records the width it was packed
+//! at ([`DeviceStream::upload`] infers it from the host matrix,
+//! [`DeviceStream::alloc_at`] names it explicitly), and an enqueue whose
+//! operand widths disagree with the launch width is a typed
+//! [`StreamError::WidthMismatch`] **before any hazard or dispatch state
+//! is touched** — never a silent mixed-width MAC.
+//! [`DeviceStream::convert`] re-encodes a buffer at another width (RNDZ
+//! truncation on narrowing, zero-fill on widening).  Hazard tracking,
+//! retry/replay, and the model ledger all key off the *launch*, not a
+//! stream-global width, so independent launches at different widths
+//! pipeline through the same worker queues concurrently
+//! (`benches/mixed_precision.rs` pins the overlap structurally).
+//!
 //! # Failure semantics: the self-healing ladder
 //!
 //! No stream failure path panics; failures climb a recovery ladder
@@ -99,9 +118,13 @@
 //! let b = s.upload(&Matrix::random(64, 64, prec, 2, 30));
 //! let c = s.alloc(64, 64);
 //! let d = s.alloc(64, 64);
-//! s.enqueue_gemm(a, b, c)?; // C += A @ B
+//! s.enqueue_gemm(a, b, c)?; // C += A @ B at the device default width
 //! s.enqueue_gemm(b, a, d)?; // disjoint write set: overlaps with the first
 //! s.enqueue_gemm(c, b, c)?; // dependent chain: waits for launch 1 only
+//! // mixed precision: the same stream launches at another loaded width
+//! let (al, bl) = (s.convert(a, 128)?, s.convert(b, 128)?);
+//! let cl = s.alloc_at(128, 64, 64);
+//! s.enqueue_gemm_at(128, al, bl, cl)?;
 //! let out = s.download(c)?;
 //! # let _ = out;
 //! # Ok(())
@@ -142,6 +165,18 @@ pub enum StreamError {
     /// the stream token check makes this unreachable through the API).
     #[error("unknown device buffer id {index}")]
     UnknownBuffer { index: usize },
+    /// A launch whose operand buffers disagree with the launch width.
+    /// Every device buffer carries the mantissa width it was packed at
+    /// (bits, 64-bit head included); `a`/`b`/`c` report the operand
+    /// widths against the requested launch width `bits`.  Caught before
+    /// any hazard or dispatch state is touched, so a width mismatch can
+    /// never corrupt a panel — [`DeviceStream::convert`] re-encodes a
+    /// buffer at the launch width when mixing is intended.
+    #[error(
+        "launch {launch}: operand widths {a}/{b}/{c} bits do not all match the \
+         {bits}-bit launch width; convert() re-encodes a buffer across widths"
+    )]
+    WidthMismatch { launch: u64, bits: u32, a: u32, b: u32, c: u32 },
     /// One or more tiles of a launch exhausted their retry budget.  The
     /// launch drained fully, recovered its pooled staging buffers, and
     /// wrote **nothing** — the C buffer keeps its pre-launch contents —
@@ -215,6 +250,11 @@ pub struct BufId {
 /// every tile of the launch has replied.
 pub struct DeviceBuf {
     pub(crate) panel: PlanePanel,
+    /// Mantissa width this buffer is packed at (bits, 64-bit head
+    /// included): `panel.prec() + 64`.  Stamped at upload/alloc and
+    /// checked against the launch width at every enqueue — the static
+    /// half of the [`StreamError::WidthMismatch`] guarantee.
+    pub(crate) bits: u32,
     /// Writeback generation of `panel`: bumped by the leader each time a
     /// launch writing this buffer retires.  The B tile grid records the
     /// version it was cut from, so the cache invalidation point is exactly
@@ -305,6 +345,14 @@ struct RetrySlot {
 /// happens strictly in enqueue order.
 struct Launch {
     id: u64,
+    /// Mantissa width this launch runs at (bits, 64-bit head included):
+    /// selects the kernel artifact and attributes the launch's tiles in
+    /// the per-width model ledger at retirement.
+    width: u32,
+    /// Interned name of the artifact serving `width`, cloned (a refcount
+    /// bump) into every job this launch dispatches — retries and replays
+    /// included, so a healed tile always lands on the same kernel.
+    artifact: Arc<str>,
     /// Read set: A, B, and the C input (accumulated onto).
     a: usize,
     b: usize,
@@ -326,14 +374,28 @@ struct Launch {
     retries: Vec<RetrySlot>,
 }
 
+/// One mantissa width this stream can launch at: the GEMM artifact
+/// serving it (the widest-tile artifact at that width wins, mirroring
+/// [`Device::artifact_for_at`]) and the artifact's interned name, cloned
+/// into every job dispatched at this width.
+struct WidthSlot {
+    bits: u32,
+    meta: ArtifactMeta,
+    artifact: Arc<str>,
+}
+
 /// A batched GEMM stream over a [`Device`] — see the module docs.
 ///
 /// Dropping a stream with work still in flight abandons those results:
 /// workers finish their queued tiles and their replies are discarded.
 pub struct DeviceStream<'d> {
     dev: &'d Device,
-    meta: ArtifactMeta,
-    artifact: Arc<str>,
+    /// One slot per mantissa width the device manifest serves with a GEMM
+    /// artifact, in manifest order; every launch resolves its width here.
+    width_slots: Vec<WidthSlot>,
+    /// Launch width used by [`DeviceStream::enqueue_gemm`] and
+    /// [`DeviceStream::alloc`]: the device's `config.bits`.
+    default_bits: u32,
     /// This stream's identity, stamped into every [`BufId`] it mints.
     token: u64,
     next_launch: u64,
@@ -365,11 +427,20 @@ pub struct DeviceStream<'d> {
 
 impl<'d> DeviceStream<'d> {
     // apfp-lint: allow(alloc, scope=fn, reason="cold constructor: the stream's pools and tables are allocated once at open, before any launch")
-    pub(crate) fn new(dev: &'d Device, meta: ArtifactMeta) -> Self {
+    pub(crate) fn new(dev: &'d Device) -> Self {
         let cus = dev.workers.len();
+        let width_slots = dev
+            .widths()
+            .into_iter()
+            .filter_map(|bits| {
+                let meta =
+                    dev.artifact_for_at(crate::runtime::ArtifactKind::Gemm, bits).ok()?.clone();
+                Some(WidthSlot { bits, artifact: Arc::from(meta.name.as_str()), meta })
+            })
+            .collect();
         DeviceStream {
-            artifact: Arc::from(meta.name.as_str()),
-            meta,
+            width_slots,
+            default_bits: dev.config.bits,
             dev,
             token: NEXT_STREAM_TOKEN.fetch_add(1, Ordering::Relaxed),
             next_launch: 0,
@@ -389,23 +460,47 @@ impl<'d> DeviceStream<'d> {
 
     /// Pack a host matrix into a device-resident panel (the one-time
     /// "copy to DDR"); everything after this moves plane rows, not values.
+    /// The buffer's width is inferred from the matrix precision
+    /// (`prec + 64` bits) — it need not match the device default, only
+    /// the width of the launches it later feeds.
     pub fn upload(&mut self, m: &Matrix) -> BufId {
         let t0 = Instant::now();
         let panel = m.to_panel();
         self.dev.metrics.add_marshal_ns(t0.elapsed().as_nanos() as u64);
-        self.push_buf(panel)
+        let bits = m.prec() + 64;
+        self.push_buf(panel, bits)
     }
 
     /// Allocate a zeroed device-resident `rows x cols` buffer at the
-    /// device's precision (the `cudaMalloc` analog).
+    /// device's default width (the `cudaMalloc` analog).
     pub fn alloc(&mut self, rows: usize, cols: usize) -> BufId {
-        let prec = self.dev.config.prec();
-        self.push_buf(PlanePanel::zeros(rows, cols, prec))
+        self.alloc_at(self.default_bits, rows, cols)
     }
 
-    fn push_buf(&mut self, panel: PlanePanel) -> BufId {
+    /// Allocate a zeroed device-resident buffer at an explicit mantissa
+    /// width (bits, 64-bit head included) — the mixed-precision analog
+    /// of [`DeviceStream::alloc`].
+    pub fn alloc_at(&mut self, bits: u32, rows: usize, cols: usize) -> BufId {
+        let prec = crate::softfloat::prec_for_bits(bits);
+        self.push_buf(PlanePanel::zeros(rows, cols, prec), bits)
+    }
+
+    /// The mantissa width (bits, 64-bit head included) buffer `id` is
+    /// packed at.
+    pub fn width(&self, id: BufId) -> Result<u32> {
+        // apfp-lint: allow(index, reason="the subscript comes from index(), which validated the handle against this stream's buffer table")
+        Ok(self.bufs[self.index(id)?].bits)
+    }
+
+    /// The widths this stream can launch at, in manifest order.
+    pub fn launch_widths(&self) -> impl Iterator<Item = u32> + '_ {
+        self.width_slots.iter().map(|s| s.bits)
+    }
+
+    fn push_buf(&mut self, panel: PlanePanel, bits: u32) -> BufId {
         self.bufs.push(Arc::new(DeviceBuf {
             panel,
+            bits,
             version: 0,
             b_cache: BTileCache::default(),
         }));
@@ -457,21 +552,85 @@ impl<'d> DeviceStream<'d> {
         Ok(Matrix::from_panel(&self.bufs[idx].panel))
     }
 
-    /// Launch `C += A @ B` (alpha = beta = 1, §III) across the device's
-    /// compute units.  Inputs are pre-launch buffer contents: any
-    /// in-flight launch *writing* one of the three operands is drained
-    /// first (RAW/WAW), so chains like `enqueue_gemm(c, b, c)` are well
-    /// defined — while launches with disjoint buffer sets stay in flight
-    /// and pipeline through the worker queues.  Returns once every tile is
-    /// submitted (the bounded worker queues backpressure the caller);
-    /// [`DeviceStream::wait`] collects results.  A hazard drain that
-    /// surfaces an earlier launch's failure returns that error here, and
-    /// this launch is not submitted.
+    /// Re-encode buffer `id` at mantissa width `bits` and mint a **new**
+    /// handle at that width; the source buffer is untouched.  Narrowing
+    /// truncates the mantissa toward zero (RNDZ, the §II rounding mode);
+    /// widening zero-fills the new low limbs — so a narrow → wide → MAC
+    /// chain sees exactly the narrow value, and a wide → narrow → wide
+    /// round trip is the identity on the truncated value.  Drains the
+    /// launches a read of `id` depends on first, exactly like
+    /// [`DeviceStream::download`].
+    // apfp-lint: allow(alloc, scope=fn, reason="cold conversion path: a width cast decodes, re-rounds, and re-packs one panel; the hot enqueue/wait loop never converts")
+    pub fn convert(&mut self, id: BufId, bits: u32) -> Result<BufId> {
+        self.check_live()?;
+        let idx = self.index(id)?;
+        if let Some(i) = self.inflight.iter().rposition(|l| l.c == idx) {
+            self.retire_n(i + 1).context("draining launches this conversion depends on")?;
+        }
+        let t0 = Instant::now();
+        let prec = crate::softfloat::prec_for_bits(bits);
+        let panel = Matrix::from_panel(&self.bufs[idx].panel).to_prec(prec).to_panel();
+        self.dev.metrics.add_marshal_ns(t0.elapsed().as_nanos() as u64);
+        Ok(self.push_buf(panel, bits))
+    }
+
+    /// Launch `C += A @ B` at the device's **default** width
+    /// (`config.bits`) — the width-explicit form is
+    /// [`DeviceStream::enqueue_gemm_at`], which this delegates to.
     // apfp-lint: no_alloc
     pub fn enqueue_gemm(&mut self, a: BufId, b: BufId, c: BufId) -> Result<()> {
+        self.enqueue_gemm_at(self.default_bits, a, b, c)
+    }
+
+    /// Launch `C += A @ B` (alpha = beta = 1, §III) at `bits` of mantissa
+    /// width across the device's compute units.  All three operand
+    /// buffers must be packed at `bits` — a disagreement is a typed
+    /// [`StreamError::WidthMismatch`], raised **before** any hazard or
+    /// dispatch state is touched.  Inputs are pre-launch buffer contents:
+    /// any in-flight launch *writing* one of the three operands is
+    /// drained first (RAW/WAW), so chains like `enqueue_gemm(c, b, c)`
+    /// are well defined — while launches with disjoint buffer sets stay
+    /// in flight and pipeline through the worker queues, whatever their
+    /// widths.  Returns once every tile is submitted (the bounded worker
+    /// queues backpressure the caller); [`DeviceStream::wait`] collects
+    /// results.  A hazard drain that surfaces an earlier launch's failure
+    /// returns that error here, and this launch is not submitted.
+    // apfp-lint: no_alloc
+    pub fn enqueue_gemm_at(&mut self, bits: u32, a: BufId, b: BufId, c: BufId) -> Result<()> {
         self.check_live()?;
         let (ai, bi, ci) = (self.index(a)?, self.index(b)?, self.index(c)?);
-        let prec = self.meta.prec();
+        // Resolve the launch width to its kernel artifact; an unloaded
+        // width is the same typed manifest error the device-level lookup
+        // reports, naming the widths that *are* loaded.  Built from the
+        // stream's own width table so the hot path never re-enters the
+        // device's (allocating) manifest lookup.
+        let Some(si) = self.width_slots.iter().position(|s| s.bits == bits) else {
+            return Err(crate::runtime::manifest::ManifestError::NoArtifact {
+                kind: crate::runtime::ArtifactKind::Gemm,
+                bits,
+                // apfp-lint: allow(alloc, reason="failure path: the loaded-width list is collected only to report an unloaded launch width")
+                loaded: self.width_slots.iter().map(|s| s.bits).collect(),
+            }
+            .into());
+        };
+        // Width agreement first — before the hazard scan, the partition,
+        // or any dispatch bookkeeping — so a mismatched launch is a pure
+        // no-op on stream state: WidthMismatch, never a corrupted panel.
+        {
+            // apfp-lint: allow(index, reason="ai/bi/ci come from index(), which validated the handle against this stream's buffer table")
+            let (wa, wb, wc) = (self.bufs[ai].bits, self.bufs[bi].bits, self.bufs[ci].bits);
+            if wa != bits || wb != bits || wc != bits {
+                let launch = self.next_launch;
+                return Err(
+                    StreamError::WidthMismatch { launch, bits, a: wa, b: wb, c: wc }.into()
+                );
+            }
+        }
+        let (t_n, t_m, k_tile) = {
+            // apfp-lint: allow(index, reason="si comes from position() over width_slots itself")
+            let meta = &self.width_slots[si].meta;
+            (meta.t_n, meta.t_m, meta.k_tile)
+        };
         let (n, k, m) = {
             let (pa, pb, pc) =
                 // apfp-lint: allow(index, reason="ai/bi/ci come from index(), which validated the handle against this stream's buffer table")
@@ -489,10 +648,6 @@ impl<'d> DeviceStream<'d> {
                 pb.cols(),
                 pc.rows(),
                 pc.cols()
-            );
-            anyhow::ensure!(
-                pa.prec() == prec && pb.prec() == prec && pc.prec() == prec,
-                "operand precision vs device artifact ({prec} bits of mantissa)"
             );
             (pa.rows(), pa.cols(), pb.cols())
         };
@@ -512,9 +667,9 @@ impl<'d> DeviceStream<'d> {
             n,
             m,
             k,
-            tile_n: self.meta.t_n,
-            tile_m: self.meta.t_m,
-            k_tile: self.meta.k_tile,
+            tile_n: t_n,
+            tile_m: t_m,
+            k_tile,
             compute_units: self.dev.workers.len(),
         };
         for w in &self.dev.workers {
@@ -579,6 +734,9 @@ impl<'d> DeviceStream<'d> {
         results.clear();
         let mut l = Launch {
             id: launch,
+            width: bits,
+            // apfp-lint: allow(index, reason="si comes from position() over width_slots itself")
+            artifact: self.width_slots[si].artifact.clone(), // apfp-lint: allow(alloc, reason="Arc<str> refcount bump")
             a: ai,
             b: bi,
             c: ci,
@@ -612,7 +770,7 @@ impl<'d> DeviceStream<'d> {
                 if self.dev.workers[sd.phys].is_live_at(sd.incarnation) {
                     let job = Job::GemmTile {
                         launch,
-                        artifact: self.artifact.clone(), // apfp-lint: allow(alloc, reason="Arc<str> refcount bump")
+                        artifact: l.artifact.clone(), // apfp-lint: allow(alloc, reason="Arc<str> refcount bump")
                         a: ab.clone(), // apfp-lint: allow(alloc, reason="Arc refcount bump")
                         b: bb.clone(), // apfp-lint: allow(alloc, reason="Arc refcount bump")
                         c: cb.clone(), // apfp-lint: allow(alloc, reason="Arc refcount bump")
@@ -677,7 +835,7 @@ impl<'d> DeviceStream<'d> {
             let incarnation = self.dev.workers[phys].incarnation();
             let job = Job::GemmTile {
                 launch: l.id,
-                artifact: self.artifact.clone(), // apfp-lint: allow(alloc, reason="Arc<str> refcount bump")
+                artifact: l.artifact.clone(), // apfp-lint: allow(alloc, reason="Arc<str> refcount bump")
                 // apfp-lint: allow(index, reason="launch buffer indices were validated by index() at enqueue")
                 // apfp-lint: allow(alloc, reason="Arc clones: refcount bumps on the shared device buffers")
                 a: self.bufs[l.a].clone(),
@@ -935,14 +1093,17 @@ impl<'d> DeviceStream<'d> {
         // The model-ledger accumulation point: only *settled successful*
         // replies reach this drain, so a retried tile's failed attempts and
         // a failed launch's partial results can never be counted (the
-        // `docs/INVARIANTS.md` model-counter conservation row).  Relaxed
-        // atomic adds only — the retire path stays zero-alloc.
+        // `docs/INVARIANTS.md` model-counter conservation row).  Each tile
+        // is attributed to the launch's width slot as well as the device
+        // totals, so interleaved mixed-width launches stay conservation-
+        // exact per width.  Relaxed atomic adds only — the retire path
+        // stays zero-alloc.
         let mut modeled = false;
         for res in l.results.drain(..) {
             let t = res.tile;
             buf.panel.write_tile(t.r0, t.c0, t.rows, t.cols, l.part.tile_m, &res.c_buf);
             if let Some(cost) = &res.model {
-                self.dev.model_metrics.add_tile(cost);
+                self.dev.model_metrics.add_tile_at(l.width, cost);
                 modeled = true;
             }
             self.c_pool.push(res.c_buf);
@@ -950,7 +1111,7 @@ impl<'d> DeviceStream<'d> {
         if modeled {
             // one fixed launch cost per retired launch that carried model
             // data, exactly once — dispatch retries never re-charge it
-            self.dev.model_metrics.add_launch();
+            self.dev.model_metrics.add_launch_at(l.width);
         }
         self.dev.metrics.add_marshal_ns(t0.elapsed().as_nanos() as u64);
         self.reply_pool.push(l.reply);
@@ -1091,6 +1252,9 @@ mod tests {
             tile_n: 4,
             tile_m: 4,
             tile_k: 4,
+            // pinned (not env-derived) so the width-taxonomy tests below
+            // stay deterministic under an APFP_WIDTHS override
+            widths: vec![128, 512, 1024],
             faults,
             ..Default::default()
         };
@@ -1107,6 +1271,7 @@ mod tests {
         vec![
             StreamError::ForeignHandle { index: 3, handle_stream: 7, this_stream: 9 },
             StreamError::UnknownBuffer { index: 12 },
+            StreamError::WidthMismatch { launch: 8, bits: 512, a: 512, b: 128, c: 512 },
             StreamError::LaunchFailed {
                 launch: 4,
                 failed: 1,
@@ -1128,6 +1293,7 @@ mod tests {
         for (e, needles) in every_variant().iter().zip([
             vec!["#3", "stream 7", "stream 9"],
             vec!["buffer id 12"],
+            vec!["launch 8", "512/128/512", "512-bit launch width", "convert()"],
             vec!["launch 4", "1 of 4", "(0,4): injected", "C left unchanged"],
             vec!["launch 5", "2 of 4", "outstanding"],
             vec!["launch 6", "zero of 2", "quarantined"],
@@ -1250,6 +1416,10 @@ mod tests {
         // every padded MAC lane modeled exactly once:
         // 4 tiles x 2 K-steps x (4*4*4) lanes per kernel call
         assert_eq!(m.macs, 512);
+        // ... and attributed to the launch width's slot, not just totals
+        let w512 = m.width_breakdown().find(|w| w.bits == 512).expect("512-bit slot");
+        assert_eq!((w512.tiles, w512.launches, w512.macs), (4, 1, 512));
+        assert!(m.width_breakdown().filter(|w| w.bits != 512).all(|w| w.tiles == 0));
         assert!(m.cycles > 0 && m.dram_bytes > 0 && m.energy_pj > 0);
         assert!(m.total_s() > 0.0 && m.efficiency() > 0.0 && m.efficiency() <= 1.0);
         // the functional result is bit-identical to the native backend
@@ -1311,5 +1481,65 @@ mod tests {
         s1.wait().unwrap();
         s2.enqueue_gemm(h2, h2, h2).unwrap();
         s2.wait().unwrap();
+    }
+
+    #[test]
+    fn width_mismatch_is_typed_and_leaves_the_stream_usable() {
+        let dev = dev_with(FaultSpec::default());
+        let mut s = dev.stream().unwrap();
+        assert_eq!(s.launch_widths().collect::<Vec<_>>(), vec![128, 512, 1024]);
+        let a = s.upload(&Matrix::random(8, 8, 448, 10, 20));
+        let b = s.upload(&Matrix::random(8, 8, 448, 11, 20));
+        let c128 = s.alloc_at(128, 8, 8);
+        assert_eq!((s.width(a).unwrap(), s.width(c128).unwrap()), (512, 128));
+        let err = s.enqueue_gemm(a, b, c128).expect_err("mixed operands at one launch width");
+        match err.downcast_ref::<StreamError>() {
+            Some(StreamError::WidthMismatch { bits: 512, a: 512, b: 512, c: 128, .. }) => {}
+            other => panic!("expected a typed WidthMismatch, got {other:?}"),
+        }
+        assert!(s.poisoned.is_none(), "a width mismatch must not poison the stream");
+        assert!(s.inflight.is_empty(), "a mismatched launch must touch no dispatch state");
+        // a width the manifest does not serve is the typed manifest error
+        let err = s.enqueue_gemm_at(2048, a, b, c128).expect_err("unloaded width");
+        let me = err
+            .downcast_ref::<crate::runtime::manifest::ManifestError>()
+            .expect("typed ManifestError");
+        match me {
+            crate::runtime::manifest::ManifestError::NoArtifact { bits, loaded, .. } => {
+                assert_eq!(*bits, 2048);
+                assert_eq!(loaded, &vec![128, 512, 1024]);
+            }
+            other => panic!("expected NoArtifact, got {other:?}"),
+        }
+        // the stream stays fully usable, at the default and at 128 bits
+        let c = s.alloc(8, 8);
+        s.enqueue_gemm(a, b, c).unwrap();
+        let (a1, b1) = (s.convert(a, 128).unwrap(), s.convert(b, 128).unwrap());
+        s.enqueue_gemm_at(128, a1, b1, c128).unwrap();
+        s.wait().unwrap();
+        assert_eq!(s.download(c128).unwrap().prec(), 64);
+    }
+
+    #[test]
+    fn convert_round_trips_and_feeds_the_other_width() {
+        // narrow -> wide -> narrow is the identity on the narrow value,
+        // and a converted buffer launches at its new width bit-identically
+        // to a serial reference at that width
+        let dev = dev_with(FaultSpec::default());
+        let a = Matrix::random(8, 8, 448, 12, 20);
+        let b = Matrix::random(8, 8, 448, 13, 20);
+        let mut s = dev.stream().unwrap();
+        let (ha, hb) = (s.upload(&a), s.upload(&b));
+        let (la, lb) = (s.convert(ha, 128).unwrap(), s.convert(hb, 128).unwrap());
+        let wide_again = s.convert(la, 512).unwrap();
+        let narrow_again = s.convert(wide_again, 128).unwrap();
+        assert_eq!(s.download(narrow_again).unwrap(), s.download(la).unwrap());
+        let lc = s.alloc_at(128, 8, 8);
+        s.enqueue_gemm_at(128, la, lb, lc).unwrap();
+        s.wait().unwrap();
+        let a64 = a.to_prec(64);
+        let b64 = b.to_prec(64);
+        let want = crate::baseline::gemm_serial(&a64, &b64, &Matrix::zeros(8, 8, 64));
+        assert_eq!(s.download(lc).unwrap(), want);
     }
 }

@@ -136,18 +136,20 @@ impl WorkerHandle {
     /// artifact names and geometry match the leader's partition exactly;
     /// `faults` is the test-only failure injection (no faults in
     /// production configs).
+    #[allow(clippy::too_many_arguments)]
     pub fn spawn(
         cu: usize,
         artifact_dir: std::path::PathBuf,
         backend: BackendKind,
         tile: TileShape,
+        widths: Vec<u32>,
         faults: FaultSpec,
         metrics: Arc<Metrics>,
     ) -> std::io::Result<Self> {
         let (tx, rx) = sync_channel::<Job>(QUEUE_DEPTH);
-        let thread = std::thread::Builder::new()
-            .name(format!("apfp-cu{cu}"))
-            .spawn(move || worker_main(cu, &artifact_dir, backend, tile, faults, rx, metrics))?;
+        let thread = std::thread::Builder::new().name(format!("apfp-cu{cu}")).spawn(move || {
+            worker_main(cu, &artifact_dir, backend, tile, &widths, faults, rx, metrics)
+        })?;
         Ok(WorkerHandle { cu, sender: tx, thread: Some(thread) })
     }
 
@@ -226,6 +228,9 @@ pub struct Supervisor {
     artifact_dir: std::path::PathBuf,
     backend: BackendKind,
     tile: TileShape,
+    /// Builtin packed widths the worker's runtime hosts (part of the
+    /// spawn recipe: a respawned CU must serve the same width set).
+    widths: Vec<u32>,
     faults: FaultSpec,
     metrics: Arc<Metrics>,
     respawn_limit: u32,
@@ -241,6 +246,7 @@ impl Supervisor {
         artifact_dir: std::path::PathBuf,
         backend: BackendKind,
         tile: TileShape,
+        widths: Vec<u32>,
         faults: FaultSpec,
         metrics: Arc<Metrics>,
         respawn_limit: u32,
@@ -250,6 +256,7 @@ impl Supervisor {
             artifact_dir.clone(),
             backend,
             tile,
+            widths.clone(),
             faults,
             Arc::clone(&metrics),
         )?;
@@ -258,6 +265,7 @@ impl Supervisor {
             artifact_dir,
             backend,
             tile,
+            widths,
             faults,
             metrics,
             respawn_limit,
@@ -345,6 +353,7 @@ impl Supervisor {
             self.artifact_dir.clone(),
             self.backend,
             self.tile,
+            self.widths.clone(),
             self.faults,
             Arc::clone(&self.metrics),
         ) {
@@ -391,11 +400,13 @@ fn panic_message(p: &(dyn std::any::Any + Send)) -> &str {
         .unwrap_or("non-string panic payload")
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_main(
     cu: usize,
     dir: &std::path::Path,
     backend: BackendKind,
     tile: TileShape,
+    widths: &[u32],
     faults: FaultSpec,
     rx: Receiver<Job>,
     metrics: Arc<Metrics>,
@@ -403,7 +414,7 @@ fn worker_main(
     let rt = if faults.init_fail_cu == Some(cu) {
         Err(anyhow::anyhow!("injected runtime init failure on CU{cu}"))
     } else {
-        Runtime::with_backend_tiled(dir, backend, tile)
+        Runtime::with_backend_tiled_widths(dir, backend, tile, widths)
     };
     let rt = match rt {
         Ok(rt) => rt,

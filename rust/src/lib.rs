@@ -43,6 +43,7 @@
 //! | `APFP_TILE_N` | Builtin GEMM tile rows (long form `APFP_TILE_SIZE_N`; [`runtime::TileShape::from_env`]) | `32` |
 //! | `APFP_TILE_M` | Builtin GEMM tile columns (long form `APFP_TILE_SIZE_M`) | `32` |
 //! | `APFP_TILE_K` | Builtin GEMM K-step depth (long form `APFP_TILE_SIZE_K`) | `32` |
+//! | `APFP_WIDTHS` | Comma list of packed widths (bits, ×64, ≥128) the device loads GEMM kernels for ([`config::ApfpConfig::widths`]); the launch-default `bits` is appended when absent, and a malformed list falls back to the full default set | `128,512,1024` |
 //! | `APFP_KARATSUBA_THRESHOLD` | Karatsuba bottom-out in limbs ([`bigint`]) | `40` |
 //! | `APFP_FIXED_PATH` | Escape hatch: `0`/`false`/`off` makes [`runtime::NativeBackend`] skip the const-generic fixed-width lane and run every width through the dynamic arena kernels | enabled |
 //! | `APFP_REPLY_TIMEOUT_MS` | Overdue-reply probe interval of the stream drain ([`config::ApfpConfig::reply_timeout`]) | `250` |

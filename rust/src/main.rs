@@ -329,16 +329,16 @@ fn gemm_cmd(args: &Args) -> Result<()> {
         };
         let pt = gemm_sim::simulate(&d, n, cfg.tile_n, cfg.tile_m);
         let m = dev.model_metrics();
-        let mut fields: Vec<(&str, String)> = vec![
-            ("n", n.to_string()),
-            ("cus", cfg.compute_units.to_string()),
-            ("bits", cfg.bits.to_string()),
-            ("backend", format!("\"{}\"", cfg.backend)),
-            ("wall_s", format!("{wall:.6}")),
-            ("tiles", stats.tiles.to_string()),
-            ("artifact_calls", stats.artifact_calls.to_string()),
-            ("marshal_fraction", format!("{:.6}", stats.marshal_fraction)),
-            ("checked", check.to_string()),
+        let mut fields: Vec<(String, String)> = vec![
+            ("n".into(), n.to_string()),
+            ("cus".into(), cfg.compute_units.to_string()),
+            ("bits".into(), cfg.bits.to_string()),
+            ("backend".into(), format!("\"{}\"", cfg.backend)),
+            ("wall_s".into(), format!("{wall:.6}")),
+            ("tiles".into(), stats.tiles.to_string()),
+            ("artifact_calls".into(), stats.artifact_calls.to_string()),
+            ("marshal_fraction".into(), format!("{:.6}", stats.marshal_fraction)),
+            ("checked".into(), check.to_string()),
         ];
         for (k, v) in [
             ("model_tiles", m.tiles as f64),
@@ -348,7 +348,22 @@ fn gemm_cmd(args: &Args) -> Result<()> {
             ("model_dram_bytes", m.dram_bytes as f64),
             ("model_energy_pj", m.energy_pj as f64),
         ] {
-            fields.push((k, format!("{v:.0}")));
+            fields.push((k.into(), format!("{v:.0}")));
+        }
+        // per-width model breakdown: one row set per loaded width that
+        // retired launches (sums across widths equal the device totals —
+        // the conservation invariant `tests/sim_backend.rs` pins)
+        for w in m.width_breakdown() {
+            for (k, v) in [
+                ("tiles", w.tiles),
+                ("launches", w.launches),
+                ("cycles", w.cycles),
+                ("macs", w.macs),
+                ("dram_bytes", w.dram_bytes),
+                ("energy_pj", w.energy_pj),
+            ] {
+                fields.push((format!("model_w{}_{k}", w.bits), v.to_string()));
+            }
         }
         for (k, v) in [
             ("model_compute_s", m.compute_s()),
@@ -362,7 +377,7 @@ fn gemm_cmd(args: &Args) -> Result<()> {
             ("sim_efficiency", pt.efficiency),
             ("sim_freq_mhz", d.synthesize().frequency_mhz),
         ] {
-            fields.push((k, format!("{v:.9}")));
+            fields.push((k.into(), format!("{v:.9}")));
         }
         let mut out = String::from("{\n");
         for (i, (k, v)) in fields.iter().enumerate() {

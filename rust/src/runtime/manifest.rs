@@ -23,8 +23,14 @@ pub enum ManifestError {
     Io { path: PathBuf, source: std::io::Error },
     #[error("malformed manifest line {line}: {text:?}")]
     Malformed { line: usize, text: String },
-    #[error("builtin manifest needs bits to be a positive multiple of 512, got {0}")]
+    #[error("builtin manifest needs bits to be a multiple of 64 with at least one \
+             mantissa limb under the 64-bit head (>= 128), got {0}")]
     InvalidBits(u32),
+    #[error(
+        "no {kind:?} artifact at {bits} bits — loaded widths: {loaded:?}; \
+         run `make artifacts` or extend APFP_WIDTHS"
+    )]
+    NoArtifact { kind: ArtifactKind, bits: u32, loaded: Vec<u32> },
     #[error("degenerate tile geometry {n}x{m}x{k}: {reason}")]
     InvalidTile { n: usize, m: usize, k: usize, reason: &'static str },
     #[error("malformed environment override {key}={value:?}: expected a positive integer")]
@@ -184,7 +190,7 @@ impl ArtifactKind {
 pub struct ArtifactMeta {
     pub name: String,
     pub kind: ArtifactKind,
-    /// total packed bits (512 / 1024)
+    /// total packed bits (e.g. 128 / 512 / 1024)
     pub bits: u32,
     /// stream batch (0 for gemm)
     pub batch: usize,
@@ -232,7 +238,7 @@ impl ArtifactMeta {
 /// typed [`ManifestError`], never a panic — `Device::new` surfaces it
 /// before any worker spawns.
 pub fn builtin(bits: u32, tile: TileShape) -> Result<Vec<ArtifactMeta>, ManifestError> {
-    if bits % 512 != 0 || bits == 0 {
+    if bits % 64 != 0 || bits < 128 {
         return Err(ManifestError::InvalidBits(bits));
     }
     tile.validate()?;
@@ -266,12 +272,31 @@ pub fn builtin(bits: u32, tile: TileShape) -> Result<Vec<ArtifactMeta>, Manifest
     ])
 }
 
-/// Builtin manifests for both packed widths the paper evaluates, tiled to
-/// one configured shape.
-pub fn builtin_all(tile: TileShape) -> Result<Vec<ArtifactMeta>, ManifestError> {
-    let mut all = builtin(512, tile)?;
-    all.extend(builtin(1024, tile)?);
+/// The packed widths a builtin device hosts by default: the paper's two
+/// evaluated widths plus the 128-bit short width (one mantissa limb —
+/// the bulk lane of mixed-precision refinement, cf. arXiv 2306.04087).
+pub const DEFAULT_WIDTHS: [u32; 3] = [128, 512, 1024];
+
+/// Builtin manifests for an explicit set of packed widths, tiled to one
+/// configured shape.  Duplicate widths are rejected as [`InvalidBits`]
+/// (a device keys kernel state by width, so each may appear once).
+///
+/// [`InvalidBits`]: ManifestError::InvalidBits
+pub fn builtin_widths(widths: &[u32], tile: TileShape) -> Result<Vec<ArtifactMeta>, ManifestError> {
+    let mut all = Vec::with_capacity(4 * widths.len());
+    for (i, &bits) in widths.iter().enumerate() {
+        if widths[..i].contains(&bits) {
+            return Err(ManifestError::InvalidBits(bits));
+        }
+        all.extend(builtin(bits, tile)?);
+    }
     Ok(all)
+}
+
+/// Builtin manifests for every default width ([`DEFAULT_WIDTHS`]), tiled
+/// to one configured shape.
+pub fn builtin_all(tile: TileShape) -> Result<Vec<ArtifactMeta>, ManifestError> {
+    builtin_widths(&DEFAULT_WIDTHS, tile)
 }
 
 /// Parse `<dir>/manifest.txt`.
@@ -351,7 +376,7 @@ mod tests {
     #[test]
     fn builtin_manifests_are_well_formed() {
         let tile = TileShape { n: 8, m: 8, k: 8 };
-        for bits in [512u32, 1024] {
+        for bits in [128u32, 512, 1024] {
             let m = builtin(bits, tile).unwrap();
             assert_eq!(m.len(), 4);
             for kind in [ArtifactKind::Mul, ArtifactKind::Add, ArtifactKind::Mac] {
@@ -364,7 +389,15 @@ mod tests {
             assert_eq!((g.t_n, g.t_m, g.k_tile), (8, 8, 8));
             assert_eq!(g.name, format!("gemm_{bits}_t8"), "historical uniform-tile name");
         }
-        assert_eq!(builtin_all(tile).unwrap().len(), 8);
+        assert_eq!(builtin_all(tile).unwrap().len(), 12, "4 artifacts per default width");
+        // explicit width sets compose the same entries
+        assert_eq!(builtin_widths(&[512], tile).unwrap().len(), 4);
+        assert_eq!(builtin_widths(&[128, 512], tile).unwrap().len(), 8);
+        // duplicates are configuration mistakes, not a bigger device
+        assert!(matches!(
+            builtin_widths(&[512, 512], tile),
+            Err(ManifestError::InvalidBits(512))
+        ));
     }
 
     #[test]
@@ -383,6 +416,8 @@ mod tests {
         let ok = TileShape::default();
         assert!(matches!(builtin(500, ok), Err(ManifestError::InvalidBits(500))));
         assert!(matches!(builtin(0, ok), Err(ManifestError::InvalidBits(0))));
+        // whole limbs but no mantissa limb under the 64-bit head
+        assert!(matches!(builtin(64, ok), Err(ManifestError::InvalidBits(64))));
         for bad in [
             TileShape { n: 0, m: 8, k: 8 },
             TileShape { n: 8, m: 0, k: 8 },

@@ -52,15 +52,18 @@ pub struct Runtime {
 
 /// Load artifact metadata for a backend: the on-disk manifest when present,
 /// else (native/sim only, and only when the manifest is genuinely *absent*)
-/// the builtin in-memory manifest shaped to `tile`.  A manifest that exists
-/// but cannot be read (permissions, it's a directory, ...) stays a hard
-/// error on every backend — silently substituting builtin tile geometry for
-/// a configured one would be worse than failing.  The XLA path cannot run
-/// without HLO files, so a missing manifest stays a hard error there too.
-pub fn load_metas(
+/// the builtin in-memory manifest shaped to `tile`, synthesized at every
+/// width in `widths` so one device hosts all of them side by side.  A
+/// manifest that exists but cannot be read (permissions, it's a directory,
+/// ...) stays a hard error on every backend — silently substituting builtin
+/// tile geometry for a configured one would be worse than failing.  The XLA
+/// path cannot run without HLO files, so a missing manifest stays a hard
+/// error there too.
+pub fn load_metas_widths(
     artifact_dir: &Path,
     kind: BackendKind,
     tile: TileShape,
+    widths: &[u32],
 ) -> Result<Vec<ArtifactMeta>> {
     match manifest::load(artifact_dir) {
         Ok(m) => Ok(m),
@@ -68,10 +71,20 @@ pub fn load_metas(
             if matches!(kind, BackendKind::Native | BackendKind::Sim)
                 && source.kind() == std::io::ErrorKind::NotFound =>
         {
-            manifest::builtin_all(tile).context("synthesizing builtin manifest")
+            manifest::builtin_widths(widths, tile).context("synthesizing builtin manifest")
         }
         Err(e) => Err(e).context("loading artifact manifest"),
     }
+}
+
+/// [`load_metas_widths`] at every default width
+/// ([`manifest::DEFAULT_WIDTHS`]).
+pub fn load_metas(
+    artifact_dir: &Path,
+    kind: BackendKind,
+    tile: TileShape,
+) -> Result<Vec<ArtifactMeta>> {
+    load_metas_widths(artifact_dir, kind, tile, &manifest::DEFAULT_WIDTHS)
 }
 
 impl Runtime {
@@ -96,7 +109,19 @@ impl Runtime {
         kind: BackendKind,
         tile: TileShape,
     ) -> Result<Self> {
-        let metas = load_metas(artifact_dir, kind, tile)?;
+        Self::with_backend_tiled_widths(artifact_dir, kind, tile, &manifest::DEFAULT_WIDTHS)
+    }
+
+    /// [`Runtime::with_backend_tiled`] with an explicit builtin width set
+    /// — what each worker uses so its synthesized manifest carries exactly
+    /// the widths the device was configured to host (`APFP_WIDTHS`).
+    pub fn with_backend_tiled_widths(
+        artifact_dir: &Path,
+        kind: BackendKind,
+        tile: TileShape,
+        widths: &[u32],
+    ) -> Result<Self> {
+        let metas = load_metas_widths(artifact_dir, kind, tile, widths)?;
         let backend: Box<dyn Backend> = match kind {
             BackendKind::Native => Box::new(NativeBackend::new()),
             BackendKind::Sim => Box::new(SimBackend::new()),
@@ -210,8 +235,8 @@ mod tests {
         let dir = std::env::temp_dir().join("apfp_rt_no_artifacts/definitely/absent");
         let rt = Runtime::with_backend(&dir, BackendKind::Native).unwrap();
         assert_eq!(rt.backend_name(), "native");
-        assert_eq!(rt.artifacts().len(), 8, "builtin manifest covers both widths");
-        for bits in [512u32, 1024] {
+        assert_eq!(rt.artifacts().len(), 12, "builtin manifest covers every default width");
+        for bits in [128u32, 512, 1024] {
             for kind in [ArtifactKind::Mul, ArtifactKind::Add, ArtifactKind::Mac, ArtifactKind::Gemm]
             {
                 assert!(rt.find(kind.clone(), bits).is_ok(), "{kind:?} at {bits}");
@@ -228,7 +253,7 @@ mod tests {
         let dir = std::env::temp_dir().join("apfp_rt_sim_no_artifacts/definitely/absent");
         let rt = Runtime::with_backend(&dir, BackendKind::Sim).unwrap();
         assert_eq!(rt.backend_name(), "sim");
-        assert_eq!(rt.artifacts().len(), 8, "builtin manifest covers both widths");
+        assert_eq!(rt.artifacts().len(), 12, "builtin manifest covers every default width");
         assert!(rt.take_model_cost().is_none(), "no work modeled yet");
         // a native runtime never reports model cost
         let native = Runtime::with_backend(&dir, BackendKind::Native).unwrap();
@@ -246,6 +271,22 @@ mod tests {
         // degenerate geometry is a clean error, not a panic
         let bad = TileShape { n: 0, m: 8, k: 8 };
         assert!(Runtime::with_backend_tiled(&dir, BackendKind::Native, bad).is_err());
+    }
+
+    #[test]
+    fn explicit_width_set_narrows_the_builtin_manifest() {
+        let dir = std::env::temp_dir().join("apfp_rt_widths/definitely/absent");
+        let tile = TileShape { n: 8, m: 8, k: 8 };
+        let rt =
+            Runtime::with_backend_tiled_widths(&dir, BackendKind::Native, tile, &[512]).unwrap();
+        assert_eq!(rt.artifacts().len(), 4, "one width, four artifacts");
+        assert!(rt.find(ArtifactKind::Gemm, 512).is_ok());
+        assert!(rt.find(ArtifactKind::Gemm, 1024).is_err(), "1024 not loaded");
+        // a mixed pair loads both and nothing else
+        let rt = Runtime::with_backend_tiled_widths(&dir, BackendKind::Native, tile, &[128, 512])
+            .unwrap();
+        assert_eq!(rt.artifacts().len(), 8);
+        assert_eq!(rt.find(ArtifactKind::Gemm, 128).unwrap().prec(), 64);
     }
 
     #[test]

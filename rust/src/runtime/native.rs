@@ -109,7 +109,10 @@ impl NativeBackend {
 /// `APFP_FIXED_PATH=0|false|off` (case-insensitive) disables the
 /// fixed-width GEMM lane — the escape hatch if a width regression is ever
 /// suspected in the field; anything else, including unset, leaves it on.
-fn fixed_path_env_enabled() -> bool {
+/// Shared with the host baseline: [`crate::baseline::gemm_threaded`]
+/// consults the same knob, so one env var governs both the device and
+/// CPU fixed lanes.
+pub(crate) fn fixed_path_env_enabled() -> bool {
     match std::env::var("APFP_FIXED_PATH") {
         Ok(v) => !fixed_path_disabled_value(&v),
         Err(_) => true,

@@ -34,10 +34,15 @@ pub const ZERO_EXP: i64 = -(1 << 61);
 /// bits, 64 of which hold sign+exponent).
 pub const BITS_512_PREC: u32 = 448;
 pub const BITS_1024_PREC: u32 = 960;
+/// The 128-bit short width (arXiv 2306.04087 territory): one limb of
+/// mantissa under the same 64-bit sign+exponent head.
+pub const BITS_128_PREC: u32 = 64;
 
-/// Precision (mantissa bits) for a total packed width (Fig. 1 layout).
+/// Precision (mantissa bits) for a total packed width (Fig. 1 layout:
+/// 64-bit sign+exponent head, whole little-endian limbs of mantissa).
+/// Any width with whole limbs and at least one mantissa limb packs.
 pub fn prec_for_bits(total_bits: u32) -> u32 {
-    assert!(total_bits % 512 == 0 && total_bits >= 512, "Fig. 1 packing");
+    assert!(total_bits % 64 == 0 && total_bits >= 128, "Fig. 1 packing");
     total_bits - 64
 }
 
@@ -85,7 +90,7 @@ impl ApFloat {
     // ---- constructors -----------------------------------------------------
 
     pub fn zero(prec: u32) -> Self {
-        assert!(prec % 64 == 0 && prec >= 128, "prec must be a multiple of 64");
+        assert!(prec % 64 == 0 && prec >= 64, "prec must be a multiple of 64");
         ApFloat { sign: false, exp: ZERO_EXP, mant: vec![0; (prec / 64) as usize], prec }
     }
 
@@ -125,6 +130,34 @@ impl ApFloat {
 
     pub fn from_i64(v: i64, prec: u32) -> Self {
         ApFloat::from_int_scaled(v < 0, &[v.unsigned_abs()], 0, prec)
+    }
+
+    /// Re-express the value at another mantissa precision.  Widening
+    /// zero-extends the low limbs (exact); narrowing keeps the top
+    /// `new_prec` bits and drops the rest — truncation toward zero, the
+    /// same RNDZ rule every operator applies (§II-B).  The exponent (and
+    /// therefore the represented magnitude's leading bit) is unchanged,
+    /// and zero stays the canonical zero at the new width.
+    pub fn to_prec(&self, new_prec: u32) -> Self {
+        assert!(new_prec % 64 == 0 && new_prec >= 64, "prec must be a multiple of 64");
+        if self.is_zero() {
+            return ApFloat::zero(new_prec);
+        }
+        if new_prec == self.prec {
+            return self.clone();
+        }
+        let old_n = self.mant.len();
+        let new_n = (new_prec / 64) as usize;
+        let mut mant = vec![0u64; new_n];
+        if new_n >= old_n {
+            // widen: value bits move to the top limbs, zeros below
+            mant[new_n - old_n..].copy_from_slice(&self.mant);
+        } else {
+            // narrow: keep the most-significant limbs (RNDZ truncate);
+            // the top bit stays set, so normalization is preserved
+            mant.copy_from_slice(&self.mant[old_n - new_n..]);
+        }
+        ApFloat { sign: self.sign, exp: self.exp, mant, prec: new_prec }
     }
 
     // ---- accessors ----------------------------------------------------------
@@ -346,5 +379,28 @@ mod tests {
         assert_eq!(prec_for_bits(512), 448);
         assert_eq!(prec_for_bits(1024), 960);
         assert_eq!(prec_for_bits(1536), 1472);
+        assert_eq!(prec_for_bits(128), 64);
+    }
+
+    #[test]
+    fn to_prec_round_trips_and_truncates_rndz() {
+        // widen is exact: the round trip through a larger width is identity
+        let x = ApFloat::from_f64(std::f64::consts::PI, 448);
+        let wide = x.to_prec(960);
+        assert_eq!(wide.prec(), 960);
+        assert_eq!(wide.exp(), x.exp());
+        assert_eq!(wide.to_prec(448), x);
+        // narrow keeps the top bits: equal to rebuilding from the kept limbs
+        let narrowed = wide.to_prec(64);
+        assert_eq!(narrowed.exp(), x.exp());
+        assert_eq!(narrowed.limbs(), &x.limbs()[x.limbs().len() - 1..]);
+        // narrowing is the same RNDZ truncation from_int_scaled applies
+        let direct = ApFloat::from_f64(std::f64::consts::PI, 64);
+        assert_eq!(narrowed, direct);
+        // zero stays canonical at every width
+        assert!(ApFloat::zero(448).to_prec(64).is_zero());
+        assert_eq!(ApFloat::zero(64).to_prec(960), ApFloat::zero(960));
+        // same width is a plain clone
+        assert_eq!(x.to_prec(448), x);
     }
 }

@@ -1,0 +1,204 @@
+//! Mixed-precision device streams (ISSUE 10): randomized schedules of
+//! interleaved dependent and independent launches at every loaded width,
+//! pinned **bit-identical per width** to the serial softfloat reference,
+//! with transient fault injection riding the same schedules.
+//!
+//! Width selection honors `APFP_WIDTHS` through the default config, so
+//! the CI widths matrix (single-width 512, single-width 1024, mixed
+//! 128+512) drives these exact schedules over differently-provisioned
+//! devices.  Line-mirrored by `python/tests/test_mixed_precision.py`,
+//! which runs the same schedules against the Python port without a Rust
+//! toolchain.
+
+use apfp::baseline;
+use apfp::config::{ApfpConfig, FaultSpec, RetryPolicy};
+use apfp::coordinator::{Device, Matrix, StreamError};
+use apfp::runtime::BackendKind;
+use apfp::softfloat::prec_for_bits;
+use apfp::testkit::Rng;
+
+/// A builtin-manifest device over every width the config loads.  Honors
+/// `APFP_BACKEND` for native and sim (xla cannot run artifact-less).
+fn multi_width_device(cus: usize, faults: FaultSpec) -> Device {
+    let backend = match BackendKind::from_env() {
+        BackendKind::Xla => BackendKind::Native,
+        b => b,
+    };
+    let cfg = ApfpConfig {
+        backend,
+        compute_units: cus,
+        faults,
+        retry: RetryPolicy { backoff_ms: 0, ..Default::default() },
+        ..Default::default()
+    };
+    let dir = std::env::temp_dir().join("apfp_mixed_precision_no_artifacts/none");
+    Device::new(cfg, &dir).expect("builtin-manifest device must open on a clean checkout")
+}
+
+/// One width's worth of schedule state: the device handles and the host
+/// shadow matrices the serial reference updates in lockstep.
+struct Lane {
+    bits: u32,
+    ha: apfp::coordinator::BufId,
+    hb: apfp::coordinator::BufId,
+    hc1: apfp::coordinator::BufId,
+    hc2: apfp::coordinator::BufId,
+    a: Matrix,
+    b: Matrix,
+    c1: Matrix,
+    c2: Matrix,
+}
+
+/// Drive `rounds` randomized rounds of launches over every loaded width:
+/// each round enqueues, per width, two independent launches (disjoint C
+/// buffers — these may pipeline freely, across widths too) and, half the
+/// time, a dependent chain step reading the C it writes.  The host
+/// shadow runs the identical schedule through `gemm_serial`, so the
+/// final download must be bit-identical per width.
+fn run_schedule(dev: &Device, seed: u64, rounds: usize) {
+    let widths = ApfpConfig::default().effective_widths();
+    let mut rng = Rng::from_seed(seed);
+    let (n, k, m) = (10usize, 8usize, 9usize);
+    let mut s = dev.stream().expect("stream");
+    let mut lanes: Vec<Lane> = widths
+        .iter()
+        .map(|&bits| {
+            let prec = prec_for_bits(bits);
+            let a = Matrix::random(n, k, prec, seed ^ u64::from(bits), 25);
+            let b = Matrix::random(k, m, prec, seed ^ u64::from(bits) ^ 1, 25);
+            let c1 = Matrix::random(n, m, prec, seed ^ u64::from(bits) ^ 2, 25);
+            let c2 = Matrix::random(n, m, prec, seed ^ u64::from(bits) ^ 3, 25);
+            Lane {
+                bits,
+                ha: s.upload(&a),
+                hb: s.upload(&b),
+                hc1: s.upload(&c1),
+                hc2: s.upload(&c2),
+                a,
+                b,
+                c1,
+                c2,
+            }
+        })
+        .collect();
+    for _ in 0..rounds {
+        // independent pair per width, interleaved across widths: these
+        // have disjoint write sets and must be free to stay in flight
+        for lane in &mut lanes {
+            s.enqueue_gemm_at(lane.bits, lane.ha, lane.hb, lane.hc1).expect("independent 1");
+            s.enqueue_gemm_at(lane.bits, lane.ha, lane.hb, lane.hc2).expect("independent 2");
+            lane.c1 = baseline::gemm_serial(&lane.a, &lane.b, &lane.c1);
+            lane.c2 = baseline::gemm_serial(&lane.a, &lane.b, &lane.c2);
+        }
+        // dependent chain step on a random width: reads the C it writes,
+        // so the hazard tracker must drain that width's prior launches
+        // (and only the conflicting prefix) before this one runs
+        if rng.bool() {
+            let pick = rng.below(lanes.len() as u64) as usize;
+            let lane = &mut lanes[pick];
+            s.enqueue_gemm_at(lane.bits, lane.hc1, lane.hb, lane.hc1).expect("dependent");
+            lane.c1 = baseline::gemm_serial(&lane.c1, &lane.b, &lane.c1);
+        }
+    }
+    s.wait().expect("drain");
+    for lane in &lanes {
+        assert_eq!(
+            s.download(lane.hc1).expect("download c1"),
+            lane.c1,
+            "width {}: C1 must be bit-identical to the serial reference",
+            lane.bits
+        );
+        assert_eq!(
+            s.download(lane.hc2).expect("download c2"),
+            lane.c2,
+            "width {}: C2 must be bit-identical to the serial reference",
+            lane.bits
+        );
+    }
+}
+
+#[test]
+fn randomized_mixed_width_schedules_are_bit_identical_per_width() {
+    let dev = multi_width_device(2, FaultSpec::default());
+    for seed in [11u64, 23, 47] {
+        run_schedule(&dev, seed, 4);
+    }
+    // the independent launches must actually have pipelined — with two
+    // or more loaded widths that overlap spans launches of *different*
+    // widths in flight on one device simultaneously
+    let metrics = dev.metrics();
+    assert!(
+        metrics.inflight_max >= 2,
+        "independent mixed-width launches must overlap (inflight_max {})",
+        metrics.inflight_max
+    );
+    assert_eq!(
+        (metrics.retries, metrics.respawns, metrics.quarantined_cus),
+        (0, 0, 0),
+        "a fault-free schedule must never touch the healing ladder"
+    );
+}
+
+#[test]
+fn transient_faults_heal_inside_mixed_width_schedules() {
+    // tile (0,0) exists in every launch of the schedule, whatever the
+    // width: fail its first attempt every time, so the retry rung runs
+    // constantly while widths interleave — results must stay
+    // bit-identical per width and the stream must never poison
+    let dev = multi_width_device(
+        2,
+        FaultSpec { fail_tile: Some((0, 0)), fail_attempts: Some(1), ..Default::default() },
+    );
+    run_schedule(&dev, 61, 3);
+    let metrics = dev.metrics();
+    assert!(metrics.retries > 0, "the injected fault must have forced redispatches");
+    assert_eq!(metrics.respawns, 0, "tile errors never respawn workers");
+}
+
+#[test]
+fn width_mismatch_and_unloaded_width_stay_typed_under_load() {
+    let dev = multi_width_device(1, FaultSpec::default());
+    let widths = ApfpConfig::default().effective_widths();
+    let prec = prec_for_bits(widths[0]);
+    let mut s = dev.stream().expect("stream");
+    let ha = s.upload(&Matrix::random(4, 4, prec, 5, 20));
+    let hb = s.upload(&Matrix::random(4, 4, prec, 6, 20));
+    // a buffer at some other loaded width (or a fresh conversion if the
+    // device is single-width) must be rejected as C with a typed error
+    let other = widths.get(1).copied().unwrap_or(widths[0] + 64);
+    let hc = s.alloc_at(other, 4, 4);
+    let err = s.enqueue_gemm_at(widths[0], ha, hb, hc).expect_err("mismatched C width");
+    match err.downcast_ref::<StreamError>() {
+        Some(StreamError::WidthMismatch { bits, c, .. }) => {
+            assert_eq!((*bits, *c), (widths[0], other));
+        }
+        other => panic!("expected WidthMismatch, got {other:?}"),
+    }
+    // an unloaded width is the typed manifest error naming what is loaded
+    let unloaded = (1..)
+        .map(|i| 128 + 64 * i)
+        .find(|w| !widths.contains(w))
+        .expect("some width is unloaded");
+    let err = s.enqueue_gemm_at(unloaded, ha, hb, hc).expect_err("unloaded width");
+    let me = err
+        .downcast_ref::<apfp::runtime::manifest::ManifestError>()
+        .expect("typed ManifestError");
+    match me {
+        apfp::runtime::manifest::ManifestError::NoArtifact { bits, loaded, .. } => {
+            assert_eq!(*bits, unloaded);
+            assert_eq!(loaded, &dev.widths());
+        }
+        other => panic!("expected NoArtifact, got {other:?}"),
+    }
+    // neither error poisoned anything: the stream still launches and
+    // converts across widths
+    let hc_ok = s.convert(hc, widths[0]).expect("convert");
+    s.enqueue_gemm_at(widths[0], ha, hb, hc_ok).expect("enqueue after typed errors");
+    s.wait().expect("wait");
+    let want = baseline::gemm_serial(
+        &s.download(ha).expect("a"),
+        &s.download(hb).expect("b"),
+        &Matrix::zeros(4, 4, prec),
+    );
+    assert_eq!(s.download(hc_ok).expect("c"), want);
+}

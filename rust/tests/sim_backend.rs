@@ -146,6 +146,69 @@ fn worker_death_and_respawn_keep_the_ledger_conserved() {
 }
 
 #[test]
+fn per_width_ledger_conserves_the_device_totals() {
+    // one sim device hosting three widths; launches land on all of them.
+    // Widths are pinned (not env-derived) so the schedule below is legal
+    // under any APFP_WIDTHS override in the CI matrix.
+    let cfg = ApfpConfig {
+        backend: BackendKind::Sim,
+        compute_units: 2,
+        tile_n: 4,
+        tile_m: 4,
+        tile_k: 4,
+        widths: vec![128, 512, 1024],
+        ..Default::default()
+    };
+    let dir = std::env::temp_dir().join("apfp_sim_backend_no_artifacts/none");
+    let dev = Device::new(cfg, &dir).expect("sim device");
+
+    let (n, k, m) = (8usize, 8usize, 8usize);
+    for (bits, launches) in [(128u32, 3usize), (512, 2), (1024, 1)] {
+        let prec = bits - 64;
+        let a = Matrix::random(n, k, prec, 800 + u64::from(bits), 30);
+        let b = Matrix::random(k, m, prec, 801 + u64::from(bits), 30);
+        let mut c = Matrix::zeros(n, m, prec);
+        for _ in 0..launches {
+            c = dev.gemm_at(bits, &a, &b, &c).expect("gemm_at").0;
+        }
+    }
+
+    let snap = dev.model_metrics();
+    assert!(snap.is_live());
+    let by_width: Vec<_> = snap.width_breakdown().collect();
+    assert_eq!(
+        by_width.iter().map(|w| w.bits).collect::<Vec<_>>(),
+        vec![128, 512, 1024],
+        "every width that launched owns a ledger slot, in width order"
+    );
+    for (w, want_launches) in by_width.iter().zip([3u64, 2, 1]) {
+        assert_eq!(w.launches, want_launches, "{} bits", w.bits);
+        assert!(w.tiles > 0 && w.cycles > 0 && w.macs > 0 && w.energy_pj > 0);
+    }
+    // the conservation invariant (docs/INVARIANTS.md): per-width rows sum
+    // exactly to the device totals on every modeled counter
+    let sum = |f: fn(&apfp::coordinator::WidthModelSnapshot) -> u64| {
+        by_width.iter().map(f).sum::<u64>()
+    };
+    assert_eq!(sum(|w| w.tiles), snap.tiles);
+    assert_eq!(sum(|w| w.launches), snap.launches);
+    assert_eq!(sum(|w| w.cycles), snap.cycles);
+    assert_eq!(sum(|w| w.macs), snap.macs);
+    assert_eq!(sum(|w| w.dram_bytes), snap.dram_bytes);
+    assert_eq!(sum(|w| w.compute_ps), snap.compute_ps);
+    assert_eq!(sum(|w| w.mem_ps), snap.mem_ps);
+    assert_eq!(sum(|w| w.energy_pj), snap.energy_pj);
+    // same geometry, wider words: more modeled energy and traffic per
+    // tile (the whole reason the refinement loop mixes widths); raw
+    // cycles can tie below the II knee, so pin the width-sensitive axes
+    let per_tile = |w: &apfp::coordinator::WidthModelSnapshot| {
+        (w.energy_pj / w.tiles, w.dram_bytes / w.tiles)
+    };
+    assert!(per_tile(&by_width[2]) > per_tile(&by_width[1]));
+    assert!(per_tile(&by_width[1]) > per_tile(&by_width[0]));
+}
+
+#[test]
 fn failed_launch_contributes_nothing_to_the_ledger() {
     // permanent failure + fail-fast: the launch errors, and even though
     // the other tiles of the launch computed successfully (and carried

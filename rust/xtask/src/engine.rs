@@ -1087,6 +1087,54 @@ fn scan_reply_literals(fl: &FileLint, token: &str, findings: &mut Vec<Finding>) 
     }
 }
 
+/// The mixed-width launch path must validate widths before touching any
+/// hazard or dispatch state: inside `fn enqueue_gemm_at`, the typed
+/// `WidthMismatch` rejection has to appear before the first hazard-state
+/// token (`writes_our_set`, `retire_n`, `build_b_cache`).  A launch
+/// rejected only after the hazard drain would have retired other
+/// launches — mutated stream state — for a launch that never runs.
+fn scan_width_agreement(fl: &FileLint, findings: &mut Vec<Finding>) {
+    const FN_TOKEN: &[u8] = b"fn enqueue_gemm_at";
+    const FN_ENDS: [&[u8]; 4] = [b"\nfn ", b"\npub fn ", b"\n    fn ", b"\n    pub fn "];
+    const HAZARD_TOKENS: [&[u8]; 3] = [b"writes_our_set", b"retire_n", b"build_b_cache"];
+    let masked = &fl.masked;
+    let mut i = 0;
+    while let Some(at) = memfind(masked, FN_TOKEN, i) {
+        i = at + FN_TOKEN.len();
+        let lineno = fl.line_of(at);
+        if fl.in_test(lineno) {
+            continue;
+        }
+        let end = FN_ENDS
+            .iter()
+            .filter_map(|t| memfind(masked, t, i))
+            .min()
+            .unwrap_or(masked.len());
+        let body = &masked[i..end];
+        let check = memfind(body, b"WidthMismatch", 0);
+        let hazard = HAZARD_TOKENS.iter().filter_map(|t| memfind(body, t, 0)).min();
+        let bad = match (check, hazard) {
+            (None, _) => true,
+            (Some(c), Some(h)) => h < c,
+            (Some(_), None) => false,
+        };
+        if bad {
+            let (allowed, reason) = allow_for(fl, lineno, RULE_HAZARD);
+            findings.push(Finding {
+                rule: RULE_HAZARD,
+                file: fl.rel.clone(),
+                line: lineno,
+                message: "`enqueue_gemm_at` must reject mismatched operand widths \
+                          (`WidthMismatch`) before the hazard scan touches stream state"
+                    .to_string(),
+                allowed,
+                reason,
+            });
+        }
+        i = end;
+    }
+}
+
 fn run_hazard_rule(fl: &FileLint, findings: &mut Vec<Finding>) {
     // every TileResult reply and Job::GemmTile job must carry the staging
     // buffer and the delivery-attempt counter (ISSUE 7's retry arm)
@@ -1095,6 +1143,9 @@ fn run_hazard_rule(fl: &FileLint, findings: &mut Vec<Finding>) {
     if !fl.rel.ends_with("stream.rs") {
         return;
     }
+    // mixed-width launches: the width-agreement check precedes the hazard
+    // scan (ISSUE 10)
+    scan_width_agreement(fl, findings);
 
     // leader-side receives must be recv_timeout (hang-proof drains)
     for (idx, line) in fl.masked_lines.iter().enumerate() {

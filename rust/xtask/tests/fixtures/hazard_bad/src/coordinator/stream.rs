@@ -18,3 +18,21 @@ pub fn drain(rx: &std::sync::mpsc::Receiver<TileResult>) -> Option<TileResult> {
     drop(_rx2);
     r
 }
+
+pub struct WidthMismatch;
+
+pub fn enqueue_gemm_at(bits: u32, widths: &[u32]) -> bool {
+    // hazard state is touched before the widths are validated: the drain
+    // below retires launches on behalf of a launch that may never run
+    let writes_our_set = bits != 0;
+    if writes_our_set {
+        retire_n(1);
+    }
+    if !widths.contains(&bits) {
+        let _rejected = WidthMismatch;
+        return false;
+    }
+    true
+}
+
+fn retire_n(_n: usize) {}
